@@ -1,0 +1,92 @@
+//! OLTP on the light-CPU multicore — the paper's §5.2 configuration as a
+//! library consumer would run it: generate a synthetic OLTP workload,
+//! execute it on the functional model, replay through the cycle-accurate
+//! performance model (cores + L1/L2 + coherent L3 + NoC), serially and
+//! in parallel.
+//!
+//! ```sh
+//! cargo run --release --example oltp_light -- [cores] [workers]
+//! ```
+
+use scalesim::engine::{RunOpts, Stop};
+use scalesim::sync::{run_ladder, ParallelOpts, SyncMethod};
+use scalesim::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
+use scalesim::workload::{generate_oltp_traces, OltpCfg};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cores: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    println!("generating OLTP workload for {cores} cores...");
+    let oltp = OltpCfg {
+        cores,
+        rows: 1024,
+        theta: 0.7,
+        txns_per_core: 32,
+        write_frac: 0.5,
+        index_depth: 3,
+        row_words: 4,
+        max_instrs_per_core: 150_000,
+        seed: 0x01f9,
+    };
+    let traces = generate_oltp_traces(&oltp);
+    let instrs: u64 = traces.iter().map(|t| t.len() as u64).sum();
+    println!("functional model produced {instrs} instructions");
+
+    let cfg = CpuSystemCfg {
+        kind: CoreKind::Light,
+        ..Default::default()
+    };
+    let (mut model, h) = build_cpu_system(traces.clone(), &cfg);
+    println!(
+        "system: {} units, {} ports",
+        model.num_units(),
+        model.num_ports()
+    );
+    let stop = Stop::CounterAtLeast {
+        counter: h.cores_done,
+        target: cores as u64,
+        max_cycles: 10_000_000,
+    };
+    let s = model.run_serial(RunOpts::with_stop(stop).timed());
+    println!("serial: {}", s.summary());
+    for key in [
+        "core.retired",
+        "l1.hits",
+        "l1.misses",
+        "l2.hits",
+        "l2.misses",
+        "dir.gets",
+        "dir.getm",
+        "dir.invs_sent",
+        "dir.fwds_sent",
+        "dram.reads",
+        "noc.flits_forwarded",
+    ] {
+        println!("  {key:<24} {}", s.counters.get(key));
+    }
+    let ipc = s.counters.get("core.retired") as f64 / s.cycles.max(1) as f64 / cores as f64;
+    println!("  per-core IPC            {ipc:.3}");
+
+    // Parallel run with the paper's clustering (cores spread evenly).
+    let (mut pmodel, h2) = build_cpu_system(traces, &cfg);
+    let stop2 = Stop::CounterAtLeast {
+        counter: h2.cores_done,
+        target: cores as u64,
+        max_cycles: 10_000_000,
+    };
+    let part = h2.partition(workers);
+    let p = run_ladder(
+        &mut pmodel,
+        &part,
+        &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::with_stop(stop2).timed()),
+    );
+    println!("parallel ({workers}w): {}", p.summary());
+    assert_eq!(
+        p.counters.get("core.retired"),
+        s.counters.get("core.retired"),
+        "parallel and serial must retire identically"
+    );
+    println!("OK: parallel run matches serial instruction-for-instruction.");
+}

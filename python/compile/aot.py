@@ -1,0 +1,46 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text — not ``lowered.compile()`` or proto ``.serialize()`` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+``make artifacts`` wraps this and skips the run when inputs are unchanged.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, fn, example_args in model.entry_specs():
+        text = to_hlo_text(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

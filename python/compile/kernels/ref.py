@@ -1,0 +1,147 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness reference.
+
+The Pallas kernels in this package must match these functions exactly
+(integer kernels bit-for-bit, float kernels to f32 tolerance); pytest
+sweeps shapes and dtypes in ``python/tests/``.
+
+The traffic mixing function additionally matches the rust implementation
+in ``rust/src/dc/traffic.rs`` (same SplitMix64 finalizer), which is what
+lets the AOT artifact and the native fallback generate bit-identical
+workloads.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Traffic generation (counter-based SplitMix64) — matches dc/traffic.rs.
+# ---------------------------------------------------------------------------
+# numpy scalars (not jnp arrays!) so Pallas kernels can close over them —
+# jax treats them as literals rather than captured constants.
+
+GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+MIX2 = np.uint64(0x94D049BB133111EB)
+FNV = np.uint64(0x100000001B3)
+
+
+def mix(z):
+    """SplitMix64 finalizer over uint64 arrays."""
+    z = (z + GOLDEN).astype(jnp.uint64)
+    z = ((z ^ (z >> np.uint64(30))) * MIX1).astype(jnp.uint64)
+    z = ((z ^ (z >> np.uint64(27))) * MIX2).astype(jnp.uint64)
+    return z ^ (z >> np.uint64(31))
+
+
+def traffic_ref(seed, idx, hosts, window):
+    """Packets for indices ``idx`` (uint64 array).
+
+    Returns (src, dst, inject_cycle) uint32 arrays. Must match
+    ``dc::traffic::packet`` in rust.
+    """
+    seed = np.uint64(seed)
+    hosts64 = np.uint64(hosts)
+    window64 = np.uint64(max(int(window), 1))
+    r1 = mix(seed ^ (idx * FNV).astype(jnp.uint64))
+    r2 = mix(r1)
+    r3 = mix(r2)
+    src = r1 % hosts64
+    dst = (src + np.uint64(1) + r2 % (hosts64 - np.uint64(1))) % hosts64
+    cyc = r3 % window64
+    return src.astype(jnp.uint32), dst.astype(jnp.uint32), cyc.astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Fat-tree analytic latency model (differentiable).
+# ---------------------------------------------------------------------------
+#
+# Inputs per config (f32): [k, lam, buffer, link_delay, pipeline]
+#   k          — switch radix (treated as a continuous parameter)
+#   lam        — per-host injection rate (packets/cycle)
+#   buffer     — per-port buffer depth
+#   link_delay — cycles per link hop
+#   pipeline   — switch pipeline latency
+#
+# With uniform random traffic over H = k^3/4 hosts:
+#   p_edge = (k/2 - 1)/(H - 1)                   same-edge probability
+#   p_pod  = (k^2/4 - k/2)/(H - 1)               same-pod (different edge)
+#   p_core = 1 - p_edge - p_pod                  inter-pod
+# Expected hops: edge-local 2, intra-pod 4, inter-pod 6.
+# Per-stage utilisation rho = offered load on the bottleneck link class;
+# queueing delay per traversed switch uses an M/M/1-with-cap smoothing
+#   w(rho) = rho / (1 - clip(rho, 0, rho_max))   (differentiable)
+# bounded by the buffer depth (a full buffer can hold at most B flits):
+#   w_b = min(w, buffer)  via softmin for smoothness.
+
+
+def _softmin(a, b, sharpness=8.0):
+    """Smooth, differentiable min(a, b)."""
+    return -jnp.logaddexp(-sharpness * a, -sharpness * b) / sharpness
+
+
+def fabric_latency_ref(params):
+    """Mean packet latency for a batch of configs, shape [B, 5] → [B]."""
+    k = params[:, 0]
+    lam = params[:, 1]
+    buf = params[:, 2]
+    link = params[:, 3]
+    pipe = params[:, 4]
+
+    half = k / 2.0
+    hosts = k * k * k / 4.0
+    p_edge = (half - 1.0) / (hosts - 1.0)
+    p_pod = (half * half - half) / (hosts - 1.0)
+    p_core = 1.0 - p_edge - p_pod
+
+    # Link-class utilisation: each host injects lam; per uplink class the
+    # load concentrates by the fraction of traffic crossing that class.
+    rho_host = lam  # host→edge link
+    rho_up = lam * (p_pod + p_core)  # edge→agg uplinks (per-link, ECMP-even)
+    rho_core = lam * p_core  # agg→core uplinks
+
+    rho_max = 0.95
+
+    def w(rho):
+        r = jnp.clip(rho, 0.0, rho_max)
+        q = r / (1.0 - r)
+        return _softmin(q, buf)
+
+    # Hop composition by path class.
+    lat_edge = 2.0 * link + 1.0 * pipe + w(rho_host) + w(rho_host)
+    lat_pod = 4.0 * link + 3.0 * pipe + 2.0 * w(rho_host) + 2.0 * w(rho_up)
+    lat_core = (
+        6.0 * link
+        + 5.0 * pipe
+        + 2.0 * w(rho_host)
+        + 2.0 * w(rho_up)
+        + 2.0 * w(rho_core)
+    )
+    return p_edge * lat_edge + p_pod * lat_pod + p_core * lat_core
+
+
+# ---------------------------------------------------------------------------
+# Stack-distance cache model.
+# ---------------------------------------------------------------------------
+
+
+def cache_hitrate_ref(hist, sizes_lines):
+    """Hit-rate estimates from a reuse-distance histogram.
+
+    ``hist``: f32[D] — count of accesses with stack distance in bucket d
+    (bucket d covers distances [2^d, 2^(d+1)); bucket 0 is distance < 2).
+    ``sizes_lines``: f32[S] — candidate cache sizes in *lines*.
+
+    A fully-associative LRU cache of C lines hits every access with stack
+    distance < C. Returns f32[S] hit rates. Smooth (sigmoid) bucket
+    membership keeps it differentiable for gradient-based exploration.
+    """
+    d = hist.shape[0]
+    bucket_dist = jnp.exp2(jnp.arange(d, dtype=jnp.float32))  # distance of bucket
+    total = jnp.sum(hist) + 1e-9
+    # membership[s, d] ≈ 1 if bucket_dist[d] < sizes[s]
+    sharp = 4.0
+    logratio = jnp.log(sizes_lines[:, None] + 1e-9) - jnp.log(bucket_dist[None, :])
+    member = jax.nn.sigmoid(sharp * logratio)
+    hits = member @ hist
+    return hits / total

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: counter-based traffic generation.
+
+The data-center workload (paper §5.4: "a simple pseudo-random function to
+generate the source and the destination of 3,000,000 packets") is a pure
+function of the packet index, so it vectorizes perfectly: the kernel maps
+a block of packet indices to (src, dst, inject_cycle) with the SplitMix64
+finalizer as the mixing function.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the index
+space into VMEM-sized blocks (BLOCK × 3 outputs × 4 B ≈ 48 KiB at 4096);
+all arithmetic is element-wise integer — VPU work with no cross-lane
+traffic, so the kernel is memory-bound and the BlockSpec pipeline overlaps
+HBM streaming with compute. ``interpret=True`` everywhere on CPU (the
+Mosaic path needs a real TPU).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 4096
+
+
+def _traffic_kernel(seed_ref, hosts_ref, window_ref, src_ref, dst_ref, cyc_ref):
+    """One block of packet indices → (src, dst, inject_cycle)."""
+    import numpy as np
+
+    blk = pl.program_id(0)
+    base = (blk * BLOCK).astype(jnp.uint64)
+    idx = base + jax.lax.iota(jnp.uint64, BLOCK)
+    seed = seed_ref[0]
+    hosts = hosts_ref[0]
+    window = window_ref[0]
+    r1 = ref.mix(seed ^ (idx * ref.FNV).astype(jnp.uint64))
+    r2 = ref.mix(r1)
+    r3 = ref.mix(r2)
+    src = r1 % hosts
+    dst = (src + np.uint64(1) + r2 % (hosts - np.uint64(1))) % hosts
+    src_ref[...] = src.astype(jnp.uint32)
+    dst_ref[...] = dst.astype(jnp.uint32)
+    cyc_ref[...] = (r3 % window).astype(jnp.uint32)
+
+
+def traffic_pallas(seed, hosts, window, n):
+    """Generate packets [0, n) (n must be a multiple of BLOCK).
+
+    ``seed``/``hosts``/``window`` are uint64 scalars passed as shape-(1,)
+    arrays so the lowered HLO takes them as runtime inputs.
+    """
+    assert n % BLOCK == 0, f"n={n} must be a multiple of {BLOCK}"
+    grid = n // BLOCK
+    out_shape = [
+        jax.ShapeDtypeStruct((n,), jnp.uint32),
+        jax.ShapeDtypeStruct((n,), jnp.uint32),
+        jax.ShapeDtypeStruct((n,), jnp.uint32),
+    ]
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    block = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _traffic_kernel,
+        grid=(grid,),
+        in_specs=[scalar, scalar, scalar],
+        out_specs=[block, block, block],
+        out_shape=out_shape,
+        interpret=True,
+    )(seed, hosts, window)

@@ -1,0 +1,89 @@
+"""L2: the exported compute graphs, composed from the L1 Pallas kernels.
+
+Three entry points are AOT-lowered by ``aot.py``:
+
+- ``traffic_entry`` — workload generation for the data-center model
+  (paper §5.4), batch of TRAFFIC_N packets per call.
+- ``fabric_entry`` — analytic mean-latency estimates for a batch of
+  fat-tree configurations (the fast surrogate the explorer sweeps).
+- ``fabric_grad_entry`` — value + gradient of a scalar exploration
+  objective over the config batch, via ``jax.grad`` through the Pallas
+  kernel. This is the "architectural exploration" loop: rust does
+  gradient steps on the surrogate, then cross-validates the chosen design
+  point against the cycle-accurate simulator.
+- ``cache_entry`` — stack-distance cache hit-rate model over a
+  reuse-distance histogram (exploring cache sizing for the CPU models).
+
+Python never runs at simulation time: these lower once to
+``artifacts/*.hlo.txt`` and rust executes them via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import fabric, ref, traffic  # noqa: E402
+
+TRAFFIC_N = 65_536
+FABRIC_B = 32
+CACHE_D = 24
+CACHE_S = 16
+
+# The objective used for gradient-based exploration: minimize latency at
+# the highest sustainable load; `lam` enters the objective with a reward
+# so the optimum is a real trade-off, not lam→0.
+LOAD_REWARD = 8.0
+
+
+def traffic_entry(seed, hosts, window):
+    """uint64[1] × 3 → (u32[N], u32[N], u32[N]) — packets 0..TRAFFIC_N."""
+    return traffic.traffic_pallas(seed, hosts, window, TRAFFIC_N)
+
+
+def fabric_entry(params):
+    """f32[B,5] → f32[B] mean latency per config."""
+    return (fabric.fabric_latency_pallas(params),)
+
+
+def exploration_objective(params):
+    """Scalar: mean(latency) − LOAD_REWARD · mean(lam)."""
+    lat = fabric.fabric_latency(params)  # custom-VJP Pallas call
+    return jnp.mean(lat) - LOAD_REWARD * jnp.mean(params[:, 1])
+
+
+def fabric_grad_entry(params):
+    """f32[B,5] → (f32[] objective, f32[B,5] gradient)."""
+    obj, grad = jax.value_and_grad(exploration_objective)(params)
+    return obj, grad
+
+
+def cache_entry(hist, sizes_lines):
+    """f32[D], f32[S] → f32[S] hit-rate per candidate size."""
+    return (ref.cache_hitrate_ref(hist, sizes_lines),)
+
+
+def entry_specs():
+    """(name, fn, example_args) for every exported computation."""
+    u64_1 = jax.ShapeDtypeStruct((1,), jnp.uint64)
+    return [
+        ("traffic", traffic_entry, (u64_1, u64_1, u64_1)),
+        (
+            "fabric",
+            fabric_entry,
+            (jax.ShapeDtypeStruct((FABRIC_B, 5), jnp.float32),),
+        ),
+        (
+            "fabric_grad",
+            fabric_grad_entry,
+            (jax.ShapeDtypeStruct((FABRIC_B, 5), jnp.float32),),
+        ),
+        (
+            "cache",
+            cache_entry,
+            (
+                jax.ShapeDtypeStruct((CACHE_D,), jnp.float32),
+                jax.ShapeDtypeStruct((CACHE_S,), jnp.float32),
+            ),
+        ),
+    ]

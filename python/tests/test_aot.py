@@ -1,0 +1,47 @@
+"""AOT pipeline checks: every entry point lowers to parseable HLO text
+with the expected parameter/result shapes — the contract the rust loader
+(`rust/src/runtime/artifacts.rs`) relies on."""
+
+import re
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model  # noqa: E402
+
+
+def test_every_entry_lowers_to_hlo_text():
+    for name, fn, example in model.entry_specs():
+        text = aot.to_hlo_text(fn, example)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # return_tuple=True: the root is a tuple.
+        assert re.search(r"ROOT\s+\S+\s*=\s*\(", text), f"{name}: tuple root"
+
+
+def test_traffic_hlo_shapes_match_rust_contract():
+    name, fn, example = model.entry_specs()[0]
+    assert name == "traffic"
+    text = aot.to_hlo_text(fn, example)
+    # Three u32[TRAFFIC_N] outputs.
+    n = model.TRAFFIC_N
+    assert text.count(f"u32[{n}]") >= 3, "src/dst/cycle outputs"
+    assert "u64[1]" in text, "scalar u64 inputs"
+
+
+def test_fabric_grad_hlo_has_gradient_output():
+    specs = {n: (f, e) for n, f, e in model.entry_specs()}
+    fn, example = specs["fabric_grad"]
+    text = aot.to_hlo_text(fn, example)
+    b = model.FABRIC_B
+    assert f"f32[{b},5]" in text, "gradient has params shape"
+    assert "f32[]" in text, "scalar objective"
+
+
+def test_lowering_is_deterministic():
+    name, fn, example = model.entry_specs()[3]
+    t1 = aot.to_hlo_text(fn, example)
+    t2 = aot.to_hlo_text(fn, example)
+    assert t1 == t2, f"{name}: HLO text must be stable for make caching"

@@ -1,0 +1,47 @@
+//! Bench: paper Fig 9 — barrier speed (phases/sec) for the four sync-point
+//! methods vs worker count.
+//!
+//! Paper shape to reproduce (20-core Xeon): common-atomic on top and
+//! nearly flat (≈2× degradation 2→37 workers); mutex, spinlock and
+//! per-worker atomic degrade severely with worker count.
+//!
+//! Testbed note: 1 vCPU here — threads are oversubscribed and spin-waits
+//! yield, so absolute phases/sec are far below the paper's 20-core
+//! numbers; the *ordering* of methods and the per-method degradation trend
+//! are the reproducible signal. `SCALESIM_BENCH_SCALE=small` shrinks the
+//! sweep for smoke runs.
+
+use scalesim::harness::fig09;
+use scalesim::sync::SpinMode;
+
+fn main() {
+    let small = std::env::var("SCALESIM_BENCH_SCALE").as_deref() == Ok("small");
+    let (workers, cycles): (Vec<usize>, u64) = if small {
+        (vec![1, 2, 4], 2_000)
+    } else {
+        (vec![1, 2, 3, 4, 6, 8, 12, 16], 20_000)
+    };
+    println!("# fig09: {} cycles/point, workers {:?}", cycles, workers);
+    let rows = fig09::run(&workers, cycles, SpinMode::Yield);
+    fig09::print(&rows);
+
+    // The paper's headline comparison: common-atomic vs the rest at the
+    // largest worker count.
+    let last = workers.len() - 1;
+    let common = rows
+        .iter()
+        .find(|r| r.method.name() == "common-atomic")
+        .unwrap()
+        .results[last]
+        .phases_per_sec();
+    for r in &rows {
+        let v = r.results[last].phases_per_sec();
+        println!(
+            "# at {} workers: {:<14} {:>12.0} phases/s ({:.2}x vs common-atomic)",
+            workers[last],
+            r.method.name(),
+            v,
+            v / common
+        );
+    }
+}

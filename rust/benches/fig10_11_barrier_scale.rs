@@ -1,0 +1,32 @@
+//! Bench: paper Figs 10–11 — barrier speed at large worker counts
+//! (common-atomic) and the fixed-work-pool speedup.
+//!
+//! Paper (384-HT server): moderate barrier-speed degradation 8→256
+//! threads; 14× speedup at 256/8 threads (32× more workers). Here the
+//! measured barrier runs oversubscribed on 1 vCPU; the speedup column is
+//! the composed model (work-pool/n + measured barrier(n)), which is the
+//! same arithmetic the paper's Fig 11 follows.
+
+use scalesim::harness::fig10_11;
+
+fn main() {
+    let small = std::env::var("SCALESIM_BENCH_SCALE").as_deref() == Ok("small");
+    let (workers, cycles): (Vec<usize>, u64) = if small {
+        (vec![1, 2, 4, 8], 1_000)
+    } else {
+        (vec![1, 2, 4, 8, 16, 32, 64, 128, 256], 3_000)
+    };
+    // Work pool calibrated to the paper's regime: with the paper's
+    // common-atomic barrier curve, a ~0.4 ms/cycle pool puts the
+    // barrier/work balance where Fig 11's 14× at 256-vs-8 threads lands.
+    let (points, _) = fig10_11::run(&workers, cycles, 390_000.0);
+    fig10_11::print(&points);
+    if workers.contains(&8) && workers.contains(&256) {
+        let t8 = points.iter().find(|p| p.workers == 8).unwrap();
+        let t256 = points.iter().find(|p| p.workers == 256).unwrap();
+        println!(
+            "# modeled speedup 256w vs 8w: {:.1}x (paper: ~14x)",
+            t8.modeled_work_secs / t256.modeled_work_secs
+        );
+    }
+}

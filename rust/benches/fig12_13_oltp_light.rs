@@ -1,0 +1,35 @@
+//! Bench: paper Figs 12–13 — OLTP on the light-CPU multicore (private
+//! L1/L2, shared coherent L3, NoC), execution-time decomposition vs
+//! worker count.
+//!
+//! Paper shape: good scaling with workers; transfer-phase time roughly
+//! constant across configurations while max-cluster work shrinks; at high
+//! worker counts sync overhead is no longer marginal because the light
+//! model simulates at 100s of KHz.
+
+use scalesim::harness::{fig09, fig12_13};
+
+fn main() {
+    let small = std::env::var("SCALESIM_BENCH_SCALE").as_deref() == Ok("small");
+    let (cores, workers): (usize, Vec<usize>) = if small {
+        (4, vec![1, 2, 4])
+    } else {
+        (32, vec![1, 2, 4, 8, 16])
+    };
+    println!("# barrier model: paper common-atomic curve (see DESIGN.md §3)");
+    let barrier = fig09::barrier_model("paper", &workers, 5_000);
+    println!("# running OLTP light-CPU, {cores} simulated cores...");
+    let out = fig12_13::run(cores, &workers, &barrier, None);
+    fig12_13::print(&out);
+    let first = &out.rows[0];
+    let last = out.rows.last().unwrap();
+    println!(
+        "# serial sim speed: {:.1} KHz over {} cycles",
+        first.sim_khz_serial, first.sim_cycles
+    );
+    println!(
+        "# modeled speedup at {} workers: {:.2}x",
+        last.workers,
+        out.serial_ns as f64 / last.modeled.total_ns().max(1) as f64
+    );
+}

@@ -1,0 +1,53 @@
+//! Bench: paper Fig 14 — speedups of the OOO-based platform (8
+//! out-of-order cores, full coherency) running OLTP and a SPEC-like
+//! kernel.
+//!
+//! Paper shape: sustainable speedup, slope ≈ 1 in some cases, because the
+//! full-CPU model runs at 10–20 KHz per core — work dominates sync.
+
+use scalesim::harness::{fig09, fig14};
+use scalesim::workload::SpecKind;
+
+fn main() {
+    let small = std::env::var("SCALESIM_BENCH_SCALE").as_deref() == Ok("small");
+    let (cores, workers): (usize, Vec<usize>) = if small {
+        (4, vec![1, 2, 4])
+    } else {
+        (8, vec![1, 2, 4, 8])
+    };
+    let barrier = fig09::barrier_model("paper", &workers, 5_000);
+    println!("# OOO {cores}-core, OLTP (the paper's §5.3 configuration):");
+    let oltp = fig14::run(cores, &workers, &barrier, fig14::Workload::Oltp);
+    fig14::print(&oltp);
+    println!("# OOO {cores}-core, SPEC-like (compute):");
+    let spec = fig14::run(
+        cores,
+        &workers,
+        &barrier,
+        fig14::Workload::Spec(SpecKind::Compute),
+    );
+    fig14::print(&spec);
+    for rows in [&oltp, &spec] {
+        let last = rows.last().unwrap();
+        println!(
+            "# {}: slope at {} workers = {:.2} (paper: ~1), serial {:.1} KHz",
+            last.workload, last.workers, last.slope, rows[0].sim_khz_serial
+        );
+    }
+    if !small {
+        // The paper's slope≈1 regime needs heavy per-cycle work relative to
+        // the barrier. Our implementation simulates the 8-core model faster
+        // per cycle than the authors' (which runs at 10-20 KHz/core), so the
+        // equivalent regime on this codebase is a larger model: 32 OOO
+        // cores, 2-4 cores per worker — same cores-per-worker ratio as the
+        // paper's Fig 12 clustering.
+        println!("# OOO 32-core (heavy-work regime — the paper's ratio):");
+        let heavy = fig14::run(32, &workers, &barrier, fig14::Workload::Oltp);
+        fig14::print(&heavy);
+        let last = heavy.last().unwrap();
+        println!(
+            "# heavy regime slope at {} workers = {:.2} (paper: ~1)",
+            last.workers, last.slope
+        );
+    }
+}

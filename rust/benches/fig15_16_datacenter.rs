@@ -1,0 +1,47 @@
+//! Bench: paper Figs 15–16 — data-center simulation runtime and speedup
+//! vs worker count.
+//!
+//! Paper: 128,000 nodes / 5,500 × 128-port switches / 3M packets, 1–24
+//! host cores, "a reasonable speedup of 6-10 times". Default here: k=16
+//! fat-tree (1,024 hosts, 320 switches) with a proportionally scaled
+//! packet count; set SCALESIM_BENCH_SCALE=paper to build the full-size
+//! fabric (k=80, 128,000 hosts — slow; smoke-capped workload).
+
+use scalesim::dc::FatTreeCfg;
+use scalesim::harness::{fig09, fig15_16};
+use scalesim::sched::PartitionStrategy;
+
+fn main() {
+    let scale = std::env::var("SCALESIM_BENCH_SCALE").unwrap_or_default();
+    let (cfg, workers): (FatTreeCfg, Vec<usize>) = match scale.as_str() {
+        "small" => {
+            let mut c = fig15_16::default_cfg();
+            c.k = 8;
+            c.traffic.packets = 5_000;
+            c.traffic.inject_window = 1_000;
+            (c, vec![1, 2, 4])
+        }
+        "paper" => {
+            let mut c = FatTreeCfg::paper_scale();
+            c.traffic.packets = 100_000; // smoke-capped workload
+            c.traffic.inject_window = 10_000;
+            (c, vec![1, 8, 24])
+        }
+        _ => (fig15_16::default_cfg(), vec![1, 2, 4, 8, 16, 24]),
+    };
+    println!(
+        "# fat-tree k={} hosts={} switches={} packets={}",
+        cfg.k,
+        cfg.hosts(),
+        cfg.switches(),
+        cfg.traffic.packets
+    );
+    let barrier = fig09::barrier_model("paper", &workers, 5_000);
+    let rows = fig15_16::run(&cfg, &workers, &barrier, PartitionStrategy::Contiguous);
+    fig15_16::print(&rows);
+    let last = rows.last().unwrap();
+    println!(
+        "# modeled speedup at {} workers: {:.1}x (paper: 6-10x at 24 cores)",
+        last.workers, last.speedup
+    );
+}

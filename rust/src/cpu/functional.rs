@@ -1,0 +1,451 @@
+//! The functional model (FM) — our QEMU substitute (paper §2, Figure 1).
+//!
+//! Executes one program per simulated core over a *shared* byte-addressable
+//! memory, interleaving cores round-robin one instruction at a time. This
+//! produces a legal execution path for each core — including real lock
+//! contention through CAS — exactly the contract the paper requires of the
+//! FM ("generate a legal execution path of each core, and if possible
+//! ensure that this path can represent the average case").
+//!
+//! The FM runs *ahead of* the performance model (trace-driven coupling):
+//! the interleaving is fixed by instruction count, not by PM timing, which
+//! keeps FM output — and therefore the whole simulation — deterministic and
+//! identical between serial and parallel PM runs.
+
+use super::isa::{Alu, Cond, Instr, OpClass, Program, TraceOp, NO_REG, NUM_REGS};
+
+/// Word-granular shared memory (8-byte words; addresses are byte addresses,
+/// word-aligned by the generators).
+pub struct SharedMem {
+    words: Vec<u64>,
+}
+
+impl SharedMem {
+    pub fn new(bytes: usize) -> Self {
+        SharedMem {
+            words: vec![0; bytes.div_ceil(8)],
+        }
+    }
+
+    #[inline]
+    pub fn load(&self, addr: u64) -> u64 {
+        self.words[(addr / 8) as usize]
+    }
+
+    #[inline]
+    pub fn store(&mut self, addr: u64, v: u64) {
+        self.words[(addr / 8) as usize] = v;
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// Architectural state of one FM core.
+struct CoreState {
+    regs: [u64; NUM_REGS],
+    pc: usize,
+    halted: bool,
+    /// Executed instruction count (for fairness accounting).
+    retired: u64,
+}
+
+impl CoreState {
+    fn new() -> Self {
+        CoreState {
+            regs: [0; NUM_REGS],
+            pc: 0,
+            halted: false,
+            retired: 0,
+        }
+    }
+
+    #[inline]
+    fn rd(&self, r: u8) -> u64 {
+        if r == 0 {
+            0
+        } else {
+            self.regs[r as usize]
+        }
+    }
+
+    #[inline]
+    fn wr(&mut self, r: u8, v: u64) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+}
+
+/// The multicore functional model.
+pub struct Functional {
+    programs: Vec<Program>,
+    cores: Vec<CoreState>,
+    pub mem: SharedMem,
+}
+
+/// Per-core output trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub ops: Vec<TraceOp>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+fn alu_eval(alu: Alu, a: u64, b: u64) -> u64 {
+    match alu {
+        Alu::Add => a.wrapping_add(b),
+        Alu::Sub => a.wrapping_sub(b),
+        Alu::Mul => a.wrapping_mul(b),
+        Alu::And => a & b,
+        Alu::Or => a | b,
+        Alu::Xor => a ^ b,
+        Alu::Shl => a.wrapping_shl((b & 63) as u32),
+        Alu::Shr => a.wrapping_shr((b & 63) as u32),
+        Alu::Sltu => (a < b) as u64,
+    }
+}
+
+fn cond_eval(c: Cond, a: u64, b: u64) -> bool {
+    match c {
+        Cond::Eq => a == b,
+        Cond::Ne => a != b,
+        Cond::Lt => a < b,
+        Cond::Ge => a >= b,
+    }
+}
+
+impl Functional {
+    pub fn new(programs: Vec<Program>, mem_bytes: usize) -> Self {
+        let cores = (0..programs.len()).map(|_| CoreState::new()).collect();
+        Functional {
+            programs,
+            cores,
+            mem: SharedMem::new(mem_bytes),
+        }
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Pre-set a register of a core (e.g. core id for data partitioning).
+    pub fn set_reg(&mut self, core: usize, reg: u8, v: u64) {
+        self.cores[core].wr(reg, v);
+    }
+
+    pub fn halted(&self, core: usize) -> bool {
+        self.cores[core].halted
+    }
+
+    pub fn retired(&self, core: usize) -> u64 {
+        self.cores[core].retired
+    }
+
+    /// Execute one instruction on `core`; push its TraceOp. Returns false
+    /// if the core is halted (nothing executed).
+    pub fn step_core(&mut self, core: usize, out: &mut Trace) -> bool {
+        let st = &mut self.cores[core];
+        if st.halted {
+            return false;
+        }
+        let code = &self.programs[core].code;
+        if st.pc >= code.len() {
+            st.halted = true;
+            return false;
+        }
+        let pc = st.pc;
+        let instr = code[pc];
+        let mut next = pc + 1;
+        let top = match instr {
+            Instr::Op { alu, rd, rs1, rs2 } => {
+                let v = alu_eval(alu, st.rd(rs1), st.rd(rs2));
+                st.wr(rd, v);
+                TraceOp::new(instr.class(), rd, rs1, rs2, 0, pc as u32, false)
+            }
+            Instr::OpImm { alu, rd, rs1, imm } => {
+                let v = alu_eval(alu, st.rd(rs1), imm as u64);
+                st.wr(rd, v);
+                TraceOp::new(instr.class(), rd, rs1, NO_REG, 0, pc as u32, false)
+            }
+            Instr::Li { rd, imm } => {
+                st.wr(rd, imm);
+                TraceOp::new(OpClass::Alu, rd, NO_REG, NO_REG, 0, pc as u32, false)
+            }
+            Instr::Ld { rd, rs1, imm } => {
+                let addr = st.rd(rs1).wrapping_add(imm as u64) & !7;
+                let v = self.mem.load(addr);
+                let st = &mut self.cores[core];
+                st.wr(rd, v);
+                TraceOp::new(OpClass::Load, rd, rs1, NO_REG, addr, pc as u32, false)
+            }
+            Instr::St { rs2, rs1, imm } => {
+                let addr = st.rd(rs1).wrapping_add(imm as u64) & !7;
+                let v = st.rd(rs2);
+                self.mem.store(addr, v);
+                TraceOp::new(OpClass::Store, NO_REG, rs1, rs2, addr, pc as u32, false)
+            }
+            Instr::Cas { rd, rs1, rs2, rs3 } => {
+                let addr = st.rd(rs1) & !7;
+                let expected = st.rd(rs2);
+                let newval = st.rd(rs3);
+                let old = self.mem.load(addr);
+                if old == expected {
+                    self.mem.store(addr, newval);
+                }
+                let st = &mut self.cores[core];
+                st.wr(rd, old);
+                TraceOp::new(OpClass::Atomic, rd, rs1, rs2, addr, pc as u32, false)
+            }
+            Instr::Faa { rd, rs1, imm } => {
+                let addr = st.rd(rs1) & !7;
+                let old = self.mem.load(addr);
+                self.mem.store(addr, old.wrapping_add(imm as u64));
+                let st = &mut self.cores[core];
+                st.wr(rd, old);
+                TraceOp::new(OpClass::Atomic, rd, rs1, NO_REG, addr, pc as u32, false)
+            }
+            Instr::Br {
+                cond,
+                rs1,
+                rs2,
+                off,
+            } => {
+                let taken = cond_eval(cond, st.rd(rs1), st.rd(rs2));
+                let target = (pc as i64 + off as i64) as usize;
+                if taken {
+                    next = target;
+                }
+                TraceOp::new(
+                    OpClass::Branch,
+                    NO_REG,
+                    rs1,
+                    rs2,
+                    target as u64,
+                    pc as u32,
+                    taken,
+                )
+            }
+            Instr::Jmp { off } => {
+                let target = (pc as i64 + off as i64) as usize;
+                next = target;
+                TraceOp::new(OpClass::Branch, NO_REG, NO_REG, NO_REG, target as u64, pc as u32, true)
+            }
+            Instr::Halt => {
+                let st = &mut self.cores[core];
+                st.halted = true;
+                TraceOp::new(OpClass::Halt, NO_REG, NO_REG, NO_REG, 0, pc as u32, false)
+            }
+            Instr::Nop => TraceOp::new(OpClass::Alu, NO_REG, NO_REG, NO_REG, 0, pc as u32, false),
+        };
+        let st = &mut self.cores[core];
+        st.pc = next;
+        st.retired += 1;
+        out.ops.push(top);
+        true
+    }
+
+    /// Run all cores round-robin until each has retired `per_core`
+    /// instructions (or halted). Returns one trace per core.
+    pub fn run(&mut self, per_core: u64) -> Vec<Trace> {
+        let n = self.num_cores();
+        let mut traces: Vec<Trace> = (0..n)
+            .map(|_| Trace {
+                ops: Vec::with_capacity(per_core as usize),
+            })
+            .collect();
+        let mut live = true;
+        while live {
+            live = false;
+            for c in 0..n {
+                if self.cores[c].retired < per_core && self.step_core(c, &mut traces[c]) {
+                    live = true;
+                }
+            }
+        }
+        traces
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prog(code: Vec<Instr>) -> Program {
+        Program {
+            code,
+            labels: vec![],
+        }
+    }
+
+    #[test]
+    fn arithmetic_and_halt() {
+        // r1 = 5; r2 = 7; r3 = r1 * r2; store to 0x100; halt.
+        let p = prog(vec![
+            Instr::Li { rd: 1, imm: 5 },
+            Instr::Li { rd: 2, imm: 7 },
+            Instr::Op {
+                alu: Alu::Mul,
+                rd: 3,
+                rs1: 1,
+                rs2: 2,
+            },
+            Instr::Li { rd: 4, imm: 0x100 },
+            Instr::St {
+                rs2: 3,
+                rs1: 4,
+                imm: 0,
+            },
+            Instr::Halt,
+        ]);
+        let mut fm = Functional::new(vec![p], 4096);
+        let traces = fm.run(100);
+        assert!(fm.halted(0));
+        assert_eq!(fm.mem.load(0x100), 35);
+        assert_eq!(traces[0].len(), 6);
+        assert_eq!(traces[0].ops[4].class(), OpClass::Store);
+        assert_eq!(traces[0].ops[4].addr, 0x100);
+    }
+
+    #[test]
+    fn branch_loop_counts() {
+        // r1 = 0; loop: r1 += 1; if r1 != 10 goto loop; halt.
+        let p = prog(vec![
+            Instr::Li { rd: 1, imm: 0 },
+            Instr::OpImm {
+                alu: Alu::Add,
+                rd: 1,
+                rs1: 1,
+                imm: 1,
+            },
+            Instr::Li { rd: 2, imm: 10 },
+            Instr::Br {
+                cond: Cond::Ne,
+                rs1: 1,
+                rs2: 2,
+                off: -2,
+            },
+            Instr::Halt,
+        ]);
+        let mut fm = Functional::new(vec![p], 64);
+        let traces = fm.run(1000);
+        // 1 li + 10*(add,li,br) + halt
+        assert_eq!(traces[0].len(), 1 + 30 + 1);
+        let takens = traces[0]
+            .ops
+            .iter()
+            .filter(|t| t.class() == OpClass::Branch && t.taken())
+            .count();
+        assert_eq!(takens, 9, "taken 9 times, not-taken once");
+    }
+
+    #[test]
+    fn cas_lock_is_mutually_exclusive() {
+        // Two cores FAA a counter 100 times each under a CAS spinlock.
+        // lock @0x0, counter @0x8.
+        let worker = || {
+            let mut p = Program::new();
+            p.push(Instr::Li { rd: 10, imm: 0 }); // lock addr
+            p.push(Instr::Li { rd: 11, imm: 0 }); // expected = 0
+            p.push(Instr::Li { rd: 12, imm: 1 }); // new = 1
+            p.push(Instr::Li { rd: 13, imm: 8 }); // counter addr
+            p.push(Instr::Li { rd: 20, imm: 0 }); // i = 0
+            p.label("loop");
+            let loop_pc = p.len();
+            // acquire: cas r1 = [r10]; if r1 != 0 retry
+            p.push(Instr::Cas {
+                rd: 1,
+                rs1: 10,
+                rs2: 11,
+                rs3: 12,
+            });
+            p.push(Instr::Br {
+                cond: Cond::Ne,
+                rs1: 1,
+                rs2: 0,
+                off: -1,
+            });
+            // critical section: counter = counter + 1 (non-atomic ld/st —
+            // correctness depends on the lock).
+            p.push(Instr::Ld {
+                rd: 2,
+                rs1: 13,
+                imm: 0,
+            });
+            p.push(Instr::OpImm {
+                alu: Alu::Add,
+                rd: 2,
+                rs1: 2,
+                imm: 1,
+            });
+            p.push(Instr::St {
+                rs2: 2,
+                rs1: 13,
+                imm: 0,
+            });
+            // release
+            p.push(Instr::St {
+                rs2: 0,
+                rs1: 10,
+                imm: 0,
+            });
+            // i += 1; if i != 100 goto loop
+            p.push(Instr::OpImm {
+                alu: Alu::Add,
+                rd: 20,
+                rs1: 20,
+                imm: 1,
+            });
+            p.push(Instr::Li { rd: 21, imm: 100 });
+            let br = p.push(Instr::Br {
+                cond: Cond::Ne,
+                rs1: 20,
+                rs2: 21,
+                off: 0,
+            });
+            p.patch_off(br, loop_pc);
+            p.push(Instr::Halt);
+            p
+        };
+        let mut fm = Functional::new(vec![worker(), worker()], 4096);
+        fm.run(1_000_000);
+        assert!(fm.halted(0) && fm.halted(1));
+        assert_eq!(fm.mem.load(8), 200, "lock must serialize increments");
+    }
+
+    #[test]
+    fn run_respects_per_core_budget() {
+        // Infinite loop program: must stop at the budget.
+        let p = prog(vec![Instr::Jmp { off: 0 }]);
+        let mut fm = Functional::new(vec![p], 64);
+        let traces = fm.run(500);
+        assert_eq!(traces[0].len(), 500);
+        assert!(!fm.halted(0));
+    }
+
+    #[test]
+    fn determinism_across_runs() {
+        let mk = || {
+            let p = prog(vec![
+                Instr::Li { rd: 1, imm: 3 },
+                Instr::Faa { rd: 2, rs1: 1, imm: 5 },
+                Instr::Jmp { off: -1 },
+            ]);
+            Functional::new(vec![p.clone(), p], 4096)
+        };
+        let t1 = mk().run(200);
+        let t2 = mk().run(200);
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.ops, b.ops);
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! A tiny RISC ISA — the instruction set executed by the functional model.
+//!
+//! The paper's functional model is QEMU running an unmodified OS + OLTP
+//! stack; the performance model only consumes the resulting *execution
+//! path*. Our substitute (DESIGN.md §3) is a small register machine rich
+//! enough to express the synthetic OLTP / SPEC-like workloads with real
+//! shared-memory semantics: loads, stores, compare-and-swap for lock
+//! acquisition, branches for spin loops and B-tree walks.
+
+/// Number of general-purpose registers. r0 is hardwired to zero.
+pub const NUM_REGS: usize = 32;
+
+/// ALU operation selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Alu {
+    Add,
+    Sub,
+    Mul,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    /// Set-less-than (unsigned): rd = (rs1 < rs2) as u64.
+    Sltu,
+}
+
+/// Branch condition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+}
+
+/// One instruction. `Reg` fields index the register file; immediates are
+/// 64-bit (we never encode to bits — programs are synthesized, not
+/// assembled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    /// rd = alu(rs1, rs2)
+    Op {
+        alu: Alu,
+        rd: u8,
+        rs1: u8,
+        rs2: u8,
+    },
+    /// rd = alu(rs1, imm)
+    OpImm {
+        alu: Alu,
+        rd: u8,
+        rs1: u8,
+        imm: i64,
+    },
+    /// rd = imm
+    Li { rd: u8, imm: u64 },
+    /// rd = mem[rs1 + imm]
+    Ld { rd: u8, rs1: u8, imm: i64 },
+    /// mem[rs1 + imm] = rs2
+    St { rs2: u8, rs1: u8, imm: i64 },
+    /// Atomic compare-and-swap: rd = mem[rs1]; if rd == rs2 { mem[rs1] = rs3 }.
+    /// rd receives the *old* value (success iff rd == expected).
+    Cas { rd: u8, rs1: u8, rs2: u8, rs3: u8 },
+    /// Atomic fetch-and-add: rd = mem[rs1]; mem[rs1] += imm.
+    Faa { rd: u8, rs1: u8, imm: i64 },
+    /// if cond(rs1, rs2) branch to pc + off (instruction-indexed).
+    Br {
+        cond: Cond,
+        rs1: u8,
+        rs2: u8,
+        off: i32,
+    },
+    /// Unconditional jump to pc + off.
+    Jmp { off: i32 },
+    /// End of program (core idles afterwards).
+    Halt,
+    Nop,
+}
+
+impl Instr {
+    /// The timing class the performance models care about.
+    pub fn class(&self) -> OpClass {
+        match self {
+            Instr::Op { alu: Alu::Mul, .. } | Instr::OpImm { alu: Alu::Mul, .. } => OpClass::Mul,
+            Instr::Op { .. } | Instr::OpImm { .. } | Instr::Li { .. } => OpClass::Alu,
+            Instr::Ld { .. } => OpClass::Load,
+            Instr::St { .. } => OpClass::Store,
+            Instr::Cas { .. } | Instr::Faa { .. } => OpClass::Atomic,
+            Instr::Br { .. } | Instr::Jmp { .. } => OpClass::Branch,
+            Instr::Halt => OpClass::Halt,
+            Instr::Nop => OpClass::Alu,
+        }
+    }
+}
+
+/// Timing class of an executed instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum OpClass {
+    Alu = 0,
+    Mul = 1,
+    Load = 2,
+    Store = 3,
+    /// CAS / FAA: read-modify-write, needs exclusive ownership.
+    Atomic = 4,
+    Branch = 5,
+    Halt = 6,
+}
+
+impl OpClass {
+    pub fn from_u8(v: u8) -> OpClass {
+        match v {
+            0 => OpClass::Alu,
+            1 => OpClass::Mul,
+            2 => OpClass::Load,
+            3 => OpClass::Store,
+            4 => OpClass::Atomic,
+            5 => OpClass::Branch,
+            _ => OpClass::Halt,
+        }
+    }
+
+    pub fn is_mem(&self) -> bool {
+        matches!(self, OpClass::Load | OpClass::Store | OpClass::Atomic)
+    }
+}
+
+/// One executed instruction as the performance models see it: timing class,
+/// register dependencies, resolved memory address, branch outcome. 16 bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceOp {
+    /// Resolved byte address (mem ops) or branch target pc (branches).
+    pub addr: u64,
+    /// Program counter of this instruction (for branch-predictor indexing).
+    pub pc: u32,
+    /// OpClass discriminant.
+    pub op: u8,
+    /// Destination register (0xFF = none).
+    pub rd: u8,
+    /// Source registers (0xFF = none).
+    pub rs1: u8,
+    pub rs2: u8,
+}
+
+pub const NO_REG: u8 = 0xFF;
+
+impl TraceOp {
+    pub fn class(&self) -> OpClass {
+        OpClass::from_u8(self.op & 0x7F)
+    }
+
+    /// For branches: was it taken? (bit 7 of `op`).
+    pub fn taken(&self) -> bool {
+        self.op & 0x80 != 0
+    }
+
+    pub fn new(class: OpClass, rd: u8, rs1: u8, rs2: u8, addr: u64, pc: u32, taken: bool) -> Self {
+        TraceOp {
+            addr,
+            pc,
+            op: class as u8 | if taken { 0x80 } else { 0 },
+            rd,
+            rs1,
+            rs2,
+        }
+    }
+}
+
+/// A program: instructions plus the data-segment size it expects.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub code: Vec<Instr>,
+    /// Human-readable labels for diagnostics: (pc, label).
+    pub labels: Vec<(usize, String)>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, i: Instr) -> usize {
+        self.code.push(i);
+        self.code.len() - 1
+    }
+
+    pub fn label(&mut self, name: &str) {
+        self.labels.push((self.code.len(), name.to_string()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.code.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.code.is_empty()
+    }
+
+    /// Patch a previously-pushed branch/jump with the offset to reach
+    /// `target_pc` from `at`.
+    pub fn patch_off(&mut self, at: usize, target_pc: usize) {
+        let off = target_pc as i64 - at as i64;
+        match &mut self.code[at] {
+            Instr::Br { off: o, .. } => *o = off as i32,
+            Instr::Jmp { off: o } => *o = off as i32,
+            other => panic!("patch_off on non-branch {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traceop_is_16_bytes() {
+        assert_eq!(std::mem::size_of::<TraceOp>(), 16);
+    }
+
+    #[test]
+    fn traceop_roundtrips_class_and_taken() {
+        for class in [
+            OpClass::Alu,
+            OpClass::Mul,
+            OpClass::Load,
+            OpClass::Store,
+            OpClass::Atomic,
+            OpClass::Branch,
+            OpClass::Halt,
+        ] {
+            for taken in [false, true] {
+                let t = TraceOp::new(class, 1, 2, 3, 0x1000, 7, taken);
+                assert_eq!(t.class(), class);
+                assert_eq!(t.taken(), taken);
+            }
+        }
+    }
+
+    #[test]
+    fn instr_classes() {
+        assert_eq!(
+            Instr::Op {
+                alu: Alu::Add,
+                rd: 1,
+                rs1: 2,
+                rs2: 3
+            }
+            .class(),
+            OpClass::Alu
+        );
+        assert_eq!(
+            Instr::OpImm {
+                alu: Alu::Mul,
+                rd: 1,
+                rs1: 2,
+                imm: 3
+            }
+            .class(),
+            OpClass::Mul
+        );
+        assert_eq!(
+            Instr::Cas {
+                rd: 1,
+                rs1: 2,
+                rs2: 3,
+                rs3: 4
+            }
+            .class(),
+            OpClass::Atomic
+        );
+        assert!(OpClass::Load.is_mem());
+        assert!(!OpClass::Branch.is_mem());
+    }
+
+    #[test]
+    fn patch_off_fixes_branches() {
+        let mut p = Program::new();
+        let b = p.push(Instr::Jmp { off: 0 });
+        p.push(Instr::Nop);
+        p.push(Instr::Halt);
+        p.patch_off(b, 2);
+        assert_eq!(p.code[b], Instr::Jmp { off: 2 });
+    }
+}

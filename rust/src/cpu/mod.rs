@@ -1,0 +1,13 @@
+//! The CPU substrate: a tiny RISC ISA, the functional model (QEMU
+//! substitute), and the two performance-model core classes the paper
+//! evaluates — "light" in-order cores (§5.2) and full out-of-order cores
+//! (§5.3).
+
+pub mod functional;
+pub mod isa;
+pub mod light;
+pub mod ooo;
+
+pub use functional::{Functional, SharedMem, Trace};
+pub use isa::{Alu, Cond, Instr, OpClass, Program, TraceOp};
+pub use light::LightCore;

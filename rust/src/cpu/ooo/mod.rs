@@ -1,0 +1,461 @@
+//! The out-of-order core performance model (paper §5.3: "a cycle accurate
+//! model of a full CPU with 8 out-of-order cores ... running an unmodified
+//! OLTP benchmark", at 10–20 simulated KHz per core).
+//!
+//! Classic speculative OOO structure over the functional trace:
+//!
+//! - **Fetch/rename** up to `fetch_width` ops per cycle into the ROB,
+//!   renaming through a last-writer table. A gshare misprediction stalls
+//!   fetch until the branch *executes*, plus a refill penalty — the
+//!   standard trace-driven wrong-path timing approximation.
+//! - **Issue**: oldest-ready-first to bounded FU pools (ALU/MUL/mem
+//!   ports). Loads check the store queue for older same-line stores
+//!   (forwarding); atomics issue only at ROB head.
+//! - **Memory**: loads/atomics go to L1 over ports and complete on
+//!   `CoreResp`; stores issue to L1 at *commit* (write-through below).
+//! - **Commit** up to `commit_width` completed ops per cycle, in order.
+
+pub mod bpred;
+
+use self::bpred::Gshare;
+use super::isa::{OpClass, TraceOp, NO_REG};
+use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use crate::mem::msg::MemMsg;
+use crate::stats::counters::CounterId;
+use crate::stats::StatsMap;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OooCfg {
+    pub fetch_width: usize,
+    pub commit_width: usize,
+    pub rob_size: usize,
+    pub alu_units: usize,
+    pub mul_units: usize,
+    /// L1 request ports (loads/atomics issued per cycle).
+    pub mem_ports: usize,
+    pub bpred_bits: u32,
+    /// Extra front-end refill cycles after a mispredict resolves.
+    pub mispredict_penalty: u64,
+    pub mul_latency: u64,
+}
+
+impl Default for OooCfg {
+    fn default() -> Self {
+        OooCfg {
+            fetch_width: 4,
+            commit_width: 4,
+            rob_size: 128,
+            alu_units: 3,
+            mul_units: 1,
+            mem_ports: 2,
+            bpred_bits: 12,
+            mispredict_penalty: 6,
+            mul_latency: 3,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RobState {
+    /// Waiting for source operands.
+    Wait,
+    /// Operands ready, not yet issued.
+    Ready,
+    /// Executing; completes at the stored cycle.
+    Exec(u64),
+    /// Load/atomic in flight to L1 under the stored tag.
+    Mem(u64),
+    /// Completed, waiting to commit.
+    Done,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RobEntry {
+    op: TraceOp,
+    state: RobState,
+    /// ROB indices this entry waits on (up to 2 sources).
+    dep1: Option<u64>,
+    dep2: Option<u64>,
+    /// Global sequence number (stable id; ROB slots recycle).
+    seq: u64,
+}
+
+pub struct OooCore {
+    pub core: u32,
+    cfg: OooCfg,
+    trace: Vec<TraceOp>,
+    fetch_pos: usize,
+    to_l1: OutPort,
+    from_l1: InPort,
+    rob: VecDeque<RobEntry>,
+    /// seq → done?, for dependency checks of entries already committed.
+    committed_up_to: u64,
+    next_seq: u64,
+    /// Architectural last-writer: register → seq of producing op.
+    last_writer: [u64; 256],
+    bpred: Gshare,
+    /// Fetch stalled until this cycle (mispredict resolution + penalty).
+    fetch_stall_until: u64,
+    /// seq of the unresolved mispredicted branch (fetch resumes when it
+    /// executes).
+    pending_branch: Option<u64>,
+    next_tag: u64,
+    /// Stores issued to L1 at commit, not yet acked.
+    stores_inflight: usize,
+    done_counter: CounterId,
+    done_signalled: bool,
+    // stats
+    pub retired: u64,
+    cycles_rob_full: u64,
+    fetch_stall_cycles: u64,
+}
+
+const SEQ_NONE: u64 = 0;
+
+impl OooCore {
+    pub fn new(
+        core: u32,
+        trace: Vec<TraceOp>,
+        cfg: OooCfg,
+        to_l1: OutPort,
+        from_l1: InPort,
+        done_counter: CounterId,
+    ) -> Self {
+        OooCore {
+            core,
+            cfg,
+            trace,
+            fetch_pos: 0,
+            to_l1,
+            from_l1,
+            rob: VecDeque::with_capacity(cfg.rob_size),
+            committed_up_to: 0,
+            next_seq: 1,
+            last_writer: [SEQ_NONE; 256],
+            bpred: Gshare::new(cfg.bpred_bits),
+            fetch_stall_until: 0,
+            pending_branch: None,
+            next_tag: 1,
+            stores_inflight: 0,
+            done_counter,
+            done_signalled: false,
+            retired: 0,
+            cycles_rob_full: 0,
+            fetch_stall_cycles: 0,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.fetch_pos >= self.trace.len() && self.rob.is_empty() && self.stores_inflight == 0
+    }
+
+    fn rob_index_of_seq(&self, seq: u64) -> Option<usize> {
+        if self.rob.is_empty() {
+            return None;
+        }
+        let first = self.rob.front().unwrap().seq;
+        if seq < first {
+            None // already committed
+        } else {
+            Some((seq - first) as usize)
+        }
+    }
+
+    /// Is the producing op of `seq` complete?
+    fn seq_done(&self, seq: u64) -> bool {
+        if seq == SEQ_NONE || seq <= self.committed_up_to {
+            return true;
+        }
+        match self.rob_index_of_seq(seq) {
+            Some(i) => matches!(self.rob[i].state, RobState::Done),
+            None => true,
+        }
+    }
+
+    fn fetch(&mut self, cycle: u64) {
+        if cycle < self.fetch_stall_until || self.pending_branch.is_some() {
+            self.fetch_stall_cycles += 1;
+            return;
+        }
+        for _ in 0..self.cfg.fetch_width {
+            if self.rob.len() >= self.cfg.rob_size {
+                self.cycles_rob_full += 1;
+                break;
+            }
+            let Some(&op) = self.trace.get(self.fetch_pos) else { break };
+            self.fetch_pos += 1;
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            // Rename: record dependencies on in-flight producers.
+            let dep_of = |lw: &[u64; 256], r: u8| -> Option<u64> {
+                if r == NO_REG || r == 0 {
+                    None
+                } else {
+                    let s = lw[r as usize];
+                    if s == SEQ_NONE {
+                        None
+                    } else {
+                        Some(s)
+                    }
+                }
+            };
+            let dep1 = dep_of(&self.last_writer, op.rs1);
+            let dep2 = dep_of(&self.last_writer, op.rs2);
+            if op.rd != NO_REG && op.rd != 0 {
+                self.last_writer[op.rd as usize] = seq;
+            }
+            let mispredict = if op.class() == OpClass::Branch {
+                self.bpred.predict_and_update(op.pc as u64, op.taken())
+            } else {
+                false
+            };
+            self.rob.push_back(RobEntry {
+                op,
+                state: RobState::Wait,
+                dep1,
+                dep2,
+                seq,
+            });
+            if mispredict {
+                // Fetch stops until this branch executes.
+                self.pending_branch = Some(seq);
+                break;
+            }
+        }
+    }
+
+    /// Move Wait → Ready where operands are complete.
+    fn wake(&mut self) {
+        // Collect completions first to avoid borrow gymnastics: seq_done
+        // only needs immutable access, so compute ready flags in one pass.
+        let n = self.rob.len();
+        for i in 0..n {
+            if self.rob[i].state != RobState::Wait {
+                continue;
+            }
+            let (d1, d2) = (self.rob[i].dep1, self.rob[i].dep2);
+            let ok1 = d1.map_or(true, |s| self.seq_done(s));
+            let ok2 = d2.map_or(true, |s| self.seq_done(s));
+            if ok1 && ok2 {
+                self.rob[i].state = RobState::Ready;
+            }
+        }
+    }
+
+    /// Does an older store in the ROB write the same line as `op` at `i`?
+    fn older_store_same_line(&self, i: usize) -> Option<bool> {
+        // Returns Some(done) for the *youngest* older store to the line.
+        let line = self.rob[i].op.addr & !63;
+        for j in (0..i).rev() {
+            let e = &self.rob[j];
+            if matches!(e.op.class(), OpClass::Store | OpClass::Atomic)
+                && e.op.addr & !63 == line
+            {
+                return Some(matches!(e.state, RobState::Done));
+            }
+        }
+        None
+    }
+
+    fn issue(&mut self, cycle: u64, ctx: &mut Ctx<'_>) {
+        let mut alu_free = self.cfg.alu_units;
+        let mut mul_free = self.cfg.mul_units;
+        let mut mem_free = self.cfg.mem_ports;
+        for i in 0..self.rob.len() {
+            if alu_free == 0 && mul_free == 0 && mem_free == 0 {
+                break;
+            }
+            if self.rob[i].state != RobState::Ready {
+                continue;
+            }
+            let class = self.rob[i].op.class();
+            match class {
+                OpClass::Alu | OpClass::Branch | OpClass::Halt => {
+                    if alu_free > 0 {
+                        alu_free -= 1;
+                        self.rob[i].state = RobState::Exec(cycle + 1);
+                    }
+                }
+                OpClass::Mul => {
+                    if mul_free > 0 {
+                        mul_free -= 1;
+                        self.rob[i].state = RobState::Exec(cycle + self.cfg.mul_latency);
+                    }
+                }
+                OpClass::Load => {
+                    if mem_free == 0 {
+                        continue;
+                    }
+                    match self.older_store_same_line(i) {
+                        Some(true) => {
+                            // Store-to-load forwarding: 1-cycle bypass.
+                            mem_free -= 1;
+                            self.rob[i].state = RobState::Exec(cycle + 1);
+                        }
+                        Some(false) => continue, // wait for the store
+                        None => {
+                            if !ctx.out_vacant(self.to_l1) {
+                                continue;
+                            }
+                            mem_free -= 1;
+                            let tag = self.next_tag;
+                            self.next_tag += 1;
+                            ctx.send(
+                                self.to_l1,
+                                Msg::with(MemMsg::CoreLd as u32, self.rob[i].op.addr, 0, tag),
+                            )
+                            .expect("vacancy checked");
+                            self.rob[i].state = RobState::Mem(tag);
+                        }
+                    }
+                }
+                OpClass::Atomic => {
+                    // Conservative: atomics issue only at ROB head.
+                    if i != 0 || mem_free == 0 || !ctx.out_vacant(self.to_l1) {
+                        continue;
+                    }
+                    mem_free -= 1;
+                    let tag = self.next_tag;
+                    self.next_tag += 1;
+                    ctx.send(
+                        self.to_l1,
+                        Msg::with(MemMsg::CoreAmo as u32, self.rob[i].op.addr, 0, tag),
+                    )
+                    .expect("vacancy checked");
+                    self.rob[i].state = RobState::Mem(tag);
+                }
+                OpClass::Store => {
+                    // Stores "execute" by computing their address (1 cycle);
+                    // data goes to L1 at commit.
+                    if alu_free > 0 {
+                        alu_free -= 1;
+                        self.rob[i].state = RobState::Exec(cycle + 1);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Exec → Done at completion time; resolve pending branch.
+    fn complete(&mut self, cycle: u64) {
+        for i in 0..self.rob.len() {
+            if let RobState::Exec(done_at) = self.rob[i].state {
+                if cycle >= done_at {
+                    self.rob[i].state = RobState::Done;
+                    if self.pending_branch == Some(self.rob[i].seq) {
+                        self.pending_branch = None;
+                        self.fetch_stall_until = cycle + self.cfg.mispredict_penalty;
+                    }
+                }
+            }
+        }
+    }
+
+    fn commit(&mut self, ctx: &mut Ctx<'_>) {
+        for _ in 0..self.cfg.commit_width {
+            let Some(head) = self.rob.front() else { break };
+            if !matches!(head.state, RobState::Done) {
+                break;
+            }
+            // Stores write through to L1 at commit.
+            if head.op.class() == OpClass::Store {
+                if !ctx.out_vacant(self.to_l1) {
+                    break;
+                }
+                let tag = self.next_tag;
+                self.next_tag += 1;
+                ctx.send(
+                    self.to_l1,
+                    Msg::with(MemMsg::CoreSt as u32, head.op.addr, 0, tag),
+                )
+                .expect("vacancy checked");
+                self.stores_inflight += 1;
+            }
+            let e = self.rob.pop_front().unwrap();
+            self.committed_up_to = e.seq;
+            self.retired += 1;
+        }
+    }
+}
+
+impl Unit for OooCore {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        let cycle = ctx.cycle;
+        // Memory responses.
+        while let Some(m) = ctx.recv(self.from_l1) {
+            match MemMsg::from_u32(m.kind) {
+                Some(MemMsg::CoreResp) => {
+                    let tag = m.c;
+                    for i in 0..self.rob.len() {
+                        if self.rob[i].state == RobState::Mem(tag) {
+                            self.rob[i].state = RobState::Done;
+                            break;
+                        }
+                    }
+                }
+                Some(MemMsg::CoreStAck) => {
+                    debug_assert!(self.stores_inflight > 0);
+                    self.stores_inflight -= 1;
+                }
+                other => panic!("ooo core {}: unexpected {:?}", self.core, other),
+            }
+        }
+        self.complete(cycle);
+        self.commit(ctx);
+        self.wake();
+        self.issue(cycle, ctx);
+        self.fetch(cycle);
+        if self.done() && !self.done_signalled {
+            self.done_signalled = true;
+            ctx.counters.add(self.done_counter, 1);
+        }
+    }
+
+    fn stats(&self, out: &mut StatsMap) {
+        out.add("core.retired", self.retired);
+        out.add("ooo.rob_full_cycles", self.cycles_rob_full);
+        out.add("ooo.fetch_stall_cycles", self.fetch_stall_cycles);
+        out.add("ooo.bpred_predictions", self.bpred.predictions);
+        out.add("ooo.bpred_mispredicts", self.bpred.mispredicts);
+        if self.done() {
+            out.add("core.done", 1);
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.retired);
+        h.write_u64(self.fetch_pos as u64);
+        h.write_u64(self.rob.len() as u64);
+        h.write_u64(self.stores_inflight as u64);
+        h.write_u64(self.bpred.mispredicts);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.done()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The OOO core needs an L1 to talk to; its integration behaviour is
+    // covered by systems::cpu_system tests. Here: pure-pipeline behaviours
+    // through a ports-less harness would need a fake L1, so we test the
+    // pieces that are port-free.
+
+    #[test]
+    fn rob_seq_bookkeeping() {
+        let cfg = OooCfg::default();
+        assert!(cfg.rob_size >= cfg.fetch_width);
+        assert!(cfg.commit_width >= 1);
+    }
+
+    #[test]
+    fn dep_tracking_structures() {
+        // last_writer starts clear; NO_REG and r0 never create deps.
+        let lw = [SEQ_NONE; 256];
+        assert_eq!(lw[NO_REG as usize], SEQ_NONE);
+    }
+}

@@ -1,0 +1,340 @@
+//! k-ary fat-tree fabric builder.
+//!
+//! Standard 3-tier fat-tree: `k` pods, each with `k/2` edge and `k/2`
+//! aggregation switches; `(k/2)²` core switches; `k³/4` hosts; every
+//! switch has radix `k`. The paper's 128,000-node / 5,500-switch / 128-port
+//! configuration corresponds to k≈80 (128,000 hosts = 80³/4, 8,000
+//! switches); the default bench scale is k=16 (1,024 hosts, 320 switches).
+//!
+//! Units are created pod-by-pod (hosts, then edges, then aggs), cores
+//! last, so the `Contiguous` partition keeps pods together — the
+//! locality-aware clustering the paper proposes as future work falls out
+//! of construction order.
+
+use super::host::Host;
+use super::switch::{Switch, SwitchRole};
+use super::traffic::{packets_by_host, TrafficCfg};
+use crate::engine::{Model, ModelBuilder, PortCfg};
+use crate::stats::counters::CounterId;
+
+#[derive(Debug, Clone)]
+pub struct FatTreeCfg {
+    /// Switch radix; must be even. Hosts = k³/4.
+    pub k: u32,
+    /// Input buffer depth per switch port (flits).
+    pub buffer: usize,
+    /// Link traversal delay (cycles).
+    pub link_delay: u64,
+    /// Switch internal pipeline latency is modeled as extra port delay on
+    /// switch-to-switch links.
+    pub pipeline: u64,
+    pub traffic: TrafficCfg,
+}
+
+impl Default for FatTreeCfg {
+    fn default() -> Self {
+        FatTreeCfg {
+            k: 8,
+            buffer: 4,
+            link_delay: 1,
+            pipeline: 1,
+            traffic: TrafficCfg::default(),
+        }
+    }
+}
+
+impl FatTreeCfg {
+    pub fn hosts(&self) -> u32 {
+        self.k * self.k * self.k / 4
+    }
+
+    pub fn switches(&self) -> u32 {
+        // k pods × (k/2 edge + k/2 agg) + (k/2)² core
+        self.k * self.k + (self.k / 2) * (self.k / 2)
+    }
+
+    /// The paper-scale configuration (§5.4): ≈128k hosts, 128-port
+    /// switches. k=80 gives exactly 128,000 hosts and 8,000 switches.
+    pub fn paper_scale() -> Self {
+        FatTreeCfg {
+            k: 80,
+            buffer: 8,
+            link_delay: 1,
+            pipeline: 1,
+            traffic: TrafficCfg {
+                seed: 0xDC,
+                hosts: 128_000,
+                packets: 3_000_000,
+                inject_window: 100_000,
+            },
+        }
+    }
+}
+
+pub struct FatTreeHandles {
+    pub delivered: CounterId,
+    pub hosts: u32,
+    pub packets: u64,
+    pub host_units: Vec<u32>,
+}
+
+pub fn build_fattree(cfg: &FatTreeCfg) -> (Model, FatTreeHandles) {
+    assert!(cfg.k >= 4 && cfg.k % 2 == 0, "fat-tree radix must be even ≥ 4");
+    let k = cfg.k;
+    let half = k / 2;
+    let hosts = cfg.hosts();
+    let hosts_per_pod = half * half;
+    let mut traffic = cfg.traffic;
+    traffic.hosts = hosts;
+
+    let mut mb = ModelBuilder::new();
+    let delivered = mb.counter("dc.delivered");
+
+    // Reserve units pod-by-pod for contiguity.
+    let mut host_units = vec![0u32; hosts as usize];
+    let mut edge_units = vec![0u32; (k * half) as usize]; // [pod*half + e]
+    let mut agg_units = vec![0u32; (k * half) as usize];
+    for pod in 0..k {
+        for h in 0..hosts_per_pod {
+            let hid = pod * hosts_per_pod + h;
+            host_units[hid as usize] = mb.reserve_unit(&format!("host{hid}"));
+        }
+        for e in 0..half {
+            edge_units[(pod * half + e) as usize] = mb.reserve_unit(&format!("edge{pod}_{e}"));
+        }
+        for a in 0..half {
+            agg_units[(pod * half + a) as usize] = mb.reserve_unit(&format!("agg{pod}_{a}"));
+        }
+    }
+    let core_units: Vec<u32> = (0..half * half)
+        .map(|c| mb.reserve_unit(&format!("core{c}")))
+        .collect();
+
+    // Switch objects (ports wired below, installed at the end).
+    let mut edges: Vec<Switch> = (0..k * half)
+        .map(|i| {
+            Switch::new(
+                SwitchRole::Edge {
+                    pod: i / half,
+                    index: i % half,
+                },
+                k,
+            )
+        })
+        .collect();
+    let mut aggs: Vec<Switch> = (0..k * half)
+        .map(|i| {
+            Switch::new(
+                SwitchRole::Agg {
+                    pod: i / half,
+                    index: i % half,
+                },
+                k,
+            )
+        })
+        .collect();
+    let mut cores: Vec<Switch> = (0..half * half)
+        .map(|i| Switch::new(SwitchRole::Core { index: i }, k))
+        .collect();
+
+    let host_link = PortCfg::new(cfg.buffer, cfg.link_delay);
+    let fabric_link = PortCfg::new(cfg.buffer, cfg.link_delay + cfg.pipeline);
+
+    // Host ↔ edge.
+    let per_host = packets_by_host(&traffic);
+    for hid in 0..hosts {
+        let pod = hid / hosts_per_pod;
+        let e = (hid % hosts_per_pod) / half;
+        let local = hid % half;
+        let hu = host_units[hid as usize];
+        let eu = edge_units[(pod * half + e) as usize];
+        let (h2e, e_in) = mb.connect(hu, eu, host_link);
+        let (e_out, h_in) = mb.connect(eu, hu, host_link);
+        edges[(pod * half + e) as usize].set_port(local, e_in, e_out);
+        mb.install(
+            hu,
+            Box::new(Host::new(
+                hid,
+                per_host[hid as usize].clone(),
+                h2e,
+                h_in,
+                delivered,
+            )),
+        );
+    }
+
+    // Edge ↔ agg (within pod): edge e uplink port half+a ↔ agg a down port e.
+    for pod in 0..k {
+        for e in 0..half {
+            for a in 0..half {
+                let eu = edge_units[(pod * half + e) as usize];
+                let au = agg_units[(pod * half + a) as usize];
+                let (e2a, a_in) = mb.connect(eu, au, fabric_link);
+                let (a2e, e_in) = mb.connect(au, eu, fabric_link);
+                edges[(pod * half + e) as usize].set_port(half + a, e_in, e2a);
+                aggs[(pod * half + a) as usize].set_port(e, a_in, a2e);
+            }
+        }
+    }
+
+    // Agg ↔ core: agg a uplink port half+j ↔ core (a*half + j) port pod.
+    for pod in 0..k {
+        for a in 0..half {
+            for j in 0..half {
+                let au = agg_units[(pod * half + a) as usize];
+                let c = a * half + j;
+                let cu = core_units[c as usize];
+                let (a2c, c_in) = mb.connect(au, cu, fabric_link);
+                let (c2a, a_in) = mb.connect(cu, au, fabric_link);
+                aggs[(pod * half + a) as usize].set_port(half + j, a_in, a2c);
+                cores[c as usize].set_port(pod, c_in, c2a);
+            }
+        }
+    }
+
+    // Install switches.
+    for (i, sw) in edges.into_iter().enumerate() {
+        mb.install(edge_units[i], Box::new(sw));
+    }
+    for (i, sw) in aggs.into_iter().enumerate() {
+        mb.install(agg_units[i], Box::new(sw));
+    }
+    for (i, sw) in cores.into_iter().enumerate() {
+        mb.install(core_units[i], Box::new(sw));
+    }
+
+    let model = mb.build().expect("fat-tree wiring");
+    (
+        model,
+        FatTreeHandles {
+            delivered,
+            hosts,
+            packets: traffic.packets,
+            host_units,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{RunOpts, Stop};
+
+    fn small_cfg(packets: u64, buffer: usize) -> FatTreeCfg {
+        FatTreeCfg {
+            k: 4,
+            buffer,
+            traffic: TrafficCfg {
+                seed: 7,
+                hosts: 16,
+                packets,
+                inject_window: 200,
+            },
+            ..Default::default()
+        }
+    }
+
+    fn run_to_completion(cfg: &FatTreeCfg) -> crate::stats::RunStats {
+        let (mut model, h) = build_fattree(cfg);
+        model.run_serial(RunOpts::with_stop(Stop::CounterAtLeast {
+            counter: h.delivered,
+            target: h.packets,
+            max_cycles: 1_000_000,
+        }))
+    }
+
+    #[test]
+    fn topology_counts() {
+        let cfg = small_cfg(10, 4);
+        assert_eq!(cfg.hosts(), 16);
+        assert_eq!(cfg.switches(), 20);
+        let (model, _h) = build_fattree(&cfg);
+        assert_eq!(model.num_units(), 16 + 20);
+        let paper = FatTreeCfg::paper_scale();
+        assert_eq!(paper.hosts(), 128_000);
+        assert_eq!(paper.switches(), 8_000);
+    }
+
+    #[test]
+    fn all_packets_delivered() {
+        let stats = run_to_completion(&small_cfg(500, 4));
+        assert_eq!(stats.counters.get("dc.delivered"), 500);
+        assert_eq!(stats.counters.get("dc.sent"), 500);
+        assert_eq!(stats.counters.get("dc.received"), 500);
+        assert!(stats.counters.get("dc.latency_max") >= 4, "multi-hop latency");
+    }
+
+    #[test]
+    fn tiny_buffers_still_deliver_everything() {
+        // Back pressure must never drop packets.
+        let stats = run_to_completion(&small_cfg(500, 1));
+        assert_eq!(stats.counters.get("dc.delivered"), 500);
+        assert!(
+            stats.counters.get("dc.switch_stalls") > 0,
+            "buffer=1 must cause stalls"
+        );
+    }
+
+    #[test]
+    fn serial_equals_parallel_fattree() {
+        use crate::sched::{partition, PartitionStrategy};
+        use crate::sync::{run_ladder, ParallelOpts, SyncMethod};
+        let cfg = small_cfg(300, 2);
+        let stop = |h: &FatTreeHandles| Stop::CounterAtLeast {
+            counter: h.delivered,
+            target: h.packets,
+            max_cycles: 100_000,
+        };
+        let (mut m1, h1) = build_fattree(&cfg);
+        let s = m1.run_serial(RunOpts::with_stop(stop(&h1)).fingerprinted());
+        for strat in [
+            PartitionStrategy::Contiguous,
+            PartitionStrategy::Random(3),
+            PartitionStrategy::Locality,
+        ] {
+            let (mut m2, h2) = build_fattree(&cfg);
+            let part = partition(&m2, 3, strat);
+            let p = run_ladder(
+                &mut m2,
+                &part,
+                &ParallelOpts::new(
+                    SyncMethod::CommonAtomic,
+                    RunOpts::with_stop(stop(&h2)).fingerprinted(),
+                ),
+            );
+            assert_eq!(p.fingerprint, s.fingerprint, "strategy {:?}", strat.name());
+            assert_eq!(p.cycles, s.cycles);
+        }
+    }
+
+    #[test]
+    fn latency_grows_under_congestion() {
+        // Same packet count, much narrower inject window → higher latency.
+        let relaxed = run_to_completion(&FatTreeCfg {
+            traffic: TrafficCfg {
+                inject_window: 5_000,
+                packets: 2_000,
+                seed: 7,
+                hosts: 16,
+            },
+            ..small_cfg(2_000, 4)
+        });
+        let congested = run_to_completion(&FatTreeCfg {
+            traffic: TrafficCfg {
+                inject_window: 100,
+                packets: 2_000,
+                seed: 7,
+                hosts: 16,
+            },
+            ..small_cfg(2_000, 4)
+        });
+        let mean_relaxed =
+            relaxed.counters.get("dc.latency_sum") as f64 / 2_000.0;
+        let mean_congested =
+            congested.counters.get("dc.latency_sum") as f64 / 2_000.0;
+        assert!(
+            mean_congested > mean_relaxed * 1.5,
+            "congestion must raise latency: {mean_congested} vs {mean_relaxed}"
+        );
+    }
+}

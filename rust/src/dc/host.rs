@@ -1,0 +1,99 @@
+//! A data-center host: injects its share of the workload at the scheduled
+//! cycles (subject to link back pressure) and sinks packets addressed to
+//! it, recording end-to-end latency.
+
+use super::traffic::Packet;
+use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use crate::noc::{net_b, net_dst};
+use crate::stats::counters::CounterId;
+use crate::stats::{Histogram, StatsMap};
+
+/// Packet message kind (single namespace; the fabric routes on `b`).
+pub const PKT: u32 = 0x200;
+
+pub struct Host {
+    pub id: u32,
+    /// This host's outgoing packets, sorted by inject cycle.
+    sendlist: Vec<Packet>,
+    next: usize,
+    to_net: OutPort,
+    from_net: InPort,
+    delivered: CounterId,
+    latency: Histogram,
+    received: u64,
+    sent: u64,
+    /// Cycles the NIC wanted to inject but the link was full.
+    inject_stalls: u64,
+}
+
+impl Host {
+    pub fn new(
+        id: u32,
+        sendlist: Vec<Packet>,
+        to_net: OutPort,
+        from_net: InPort,
+        delivered: CounterId,
+    ) -> Self {
+        Host {
+            id,
+            sendlist,
+            next: 0,
+            to_net,
+            from_net,
+            delivered,
+            latency: Histogram::new(),
+            received: 0,
+            sent: 0,
+            inject_stalls: 0,
+        }
+    }
+
+    pub fn latency_histogram(&self) -> &Histogram {
+        &self.latency
+    }
+}
+
+impl Unit for Host {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        // Sink arrivals.
+        while let Some(m) = ctx.recv(self.from_net) {
+            debug_assert_eq!(m.kind, PKT);
+            debug_assert_eq!(net_dst(m.b), self.id);
+            self.received += 1;
+            self.latency.record(ctx.cycle - m.c);
+            ctx.counters.add(self.delivered, 1);
+        }
+        // Inject due packets (one per cycle — the link rate).
+        if let Some(p) = self.sendlist.get(self.next) {
+            if p.inject_cycle <= ctx.cycle {
+                if ctx.out_vacant(self.to_net) {
+                    let mut m = Msg::with(PKT, p.id, 0, ctx.cycle);
+                    m.b = net_b(self.id, p.dst);
+                    ctx.send(self.to_net, m).expect("vacancy checked");
+                    self.sent += 1;
+                    self.next += 1;
+                } else {
+                    self.inject_stalls += 1;
+                }
+            }
+        }
+    }
+
+    fn stats(&self, out: &mut StatsMap) {
+        out.add("dc.sent", self.sent);
+        out.add("dc.received", self.received);
+        out.add("dc.inject_stalls", self.inject_stalls);
+        out.add("dc.latency_sum", self.latency.sum());
+        out.add("dc.latency_max", self.latency.max());
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.sent);
+        h.write_u64(self.received);
+        h.write_u64(self.latency.sum());
+    }
+
+    fn is_idle(&self) -> bool {
+        self.next >= self.sendlist.len()
+    }
+}

@@ -1,0 +1,23 @@
+//! The data-center model (paper §5.4): cycle-accurate communication
+//! through a fat-tree fabric of multi-port switches with internal buffers,
+//! pipeline latency and back pressure, moving millions of pseudo-random
+//! packets.
+//!
+//! The paper's configuration — 128,000 nodes through 5,500 switches of 128
+//! ports each, 3,000,000 packets — maps to a 3-tier fat-tree; we
+//! parameterize by the switch radix `k` (paper scale ≈ k=80) and default
+//! to k=16 (1,024 hosts, 320 switches) for benches on this container. The
+//! traffic generator is a pure counter-based hash of the packet index —
+//! the *same function* implemented by the Pallas L1 kernel, so the
+//! AOT-compiled artifact and the native fallback produce bit-identical
+//! workloads (asserted in `runtime` tests).
+
+pub mod fattree;
+pub mod host;
+pub mod switch;
+pub mod traffic;
+
+pub use fattree::{build_fattree, FatTreeCfg, FatTreeHandles};
+pub use host::Host;
+pub use switch::{Switch, SwitchRole};
+pub use traffic::{packet, TrafficCfg};

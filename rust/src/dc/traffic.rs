@@ -1,0 +1,168 @@
+//! Counter-based pseudo-random traffic generation.
+//!
+//! `packet(seed, i)` is a *stateless* function of the packet index — the
+//! classic counter-based RNG construction — so any subrange of the
+//! workload can be generated independently, in parallel, or on a different
+//! substrate. `python/compile/kernels/traffic.py` implements the identical
+//! mixing function as a Pallas kernel; `runtime::tests` asserts the two
+//! agree bit-for-bit.
+
+use crate::util::rng::SplitMix64;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficCfg {
+    pub seed: u64,
+    pub hosts: u32,
+    pub packets: u64,
+    /// Packets are injected uniformly over [0, window) cycles.
+    pub inject_window: u64,
+}
+
+impl Default for TrafficCfg {
+    fn default() -> Self {
+        TrafficCfg {
+            seed: 0xDC,
+            hosts: 1024,
+            packets: 100_000,
+            inject_window: 10_000,
+        }
+    }
+}
+
+/// One generated packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Packet {
+    pub id: u64,
+    pub src: u32,
+    pub dst: u32,
+    pub inject_cycle: u64,
+}
+
+/// SplitMix64 finalizer as a pure function (must match traffic.py).
+#[inline]
+pub fn mix(z: u64) -> u64 {
+    let mut z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Generate packet `i` of the workload. dst is guaranteed ≠ src by
+/// offsetting into the remaining hosts.
+pub fn packet(cfg: &TrafficCfg, i: u64) -> Packet {
+    let h = cfg.hosts as u64;
+    let r1 = mix(cfg.seed ^ i.wrapping_mul(0x0100_0000_01B3));
+    let r2 = mix(r1);
+    let r3 = mix(r2);
+    let src = r1 % h;
+    let dst = (src + 1 + (r2 % (h - 1))) % h;
+    Packet {
+        id: i,
+        src: src as u32,
+        dst: dst as u32,
+        inject_cycle: r3 % cfg.inject_window.max(1),
+    }
+}
+
+/// All packets of host `src`, sorted by inject cycle (stable by id).
+/// O(packets) per call — callers generate per-host lists once at build.
+pub fn packets_for_host(cfg: &TrafficCfg, src: u32) -> Vec<Packet> {
+    let mut v: Vec<Packet> = (0..cfg.packets)
+        .map(|i| packet(cfg, i))
+        .filter(|p| p.src == src)
+        .collect();
+    v.sort_by_key(|p| (p.inject_cycle, p.id));
+    v
+}
+
+/// Group all packets by source host in one pass (build-time helper).
+pub fn packets_by_host(cfg: &TrafficCfg) -> Vec<Vec<Packet>> {
+    let mut per: Vec<Vec<Packet>> = vec![Vec::new(); cfg.hosts as usize];
+    for i in 0..cfg.packets {
+        let p = packet(cfg, i);
+        per[p.src as usize].push(p);
+    }
+    for v in &mut per {
+        v.sort_by_key(|p| (p.inject_cycle, p.id));
+    }
+    per
+}
+
+/// ECMP-style deterministic uplink choice (must stay in sync with the
+/// switch implementation and any analytic model of it).
+#[inline]
+pub fn ecmp_hash(src: u32, dst: u32, id: u64, ways: u32) -> u32 {
+    (mix(((src as u64) << 32 | dst as u64) ^ id.wrapping_mul(0x9E37)) % ways as u64) as u32
+}
+
+/// Self-check against the generic SplitMix64 (same constants).
+pub fn mix_matches_splitmix(seed: u64) -> bool {
+    let mut sm = SplitMix64::new(seed);
+    sm.next_u64() == mix(seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packets_are_deterministic_and_valid() {
+        let cfg = TrafficCfg::default();
+        for i in [0u64, 1, 999, 99_999] {
+            let a = packet(&cfg, i);
+            let b = packet(&cfg, i);
+            assert_eq!(a, b);
+            assert!(a.src < cfg.hosts);
+            assert!(a.dst < cfg.hosts);
+            assert_ne!(a.src, a.dst);
+            assert!(a.inject_cycle < cfg.inject_window);
+        }
+    }
+
+    #[test]
+    fn sources_are_roughly_uniform() {
+        let cfg = TrafficCfg {
+            hosts: 64,
+            packets: 64_000,
+            ..Default::default()
+        };
+        let per = packets_by_host(&cfg);
+        let total: usize = per.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 64_000);
+        let expect = 1000.0;
+        for (h, v) in per.iter().enumerate() {
+            let dev = (v.len() as f64 - expect).abs() / expect;
+            assert!(dev < 0.25, "host {h} got {} packets", v.len());
+        }
+    }
+
+    #[test]
+    fn per_host_lists_sorted() {
+        let cfg = TrafficCfg {
+            hosts: 16,
+            packets: 1000,
+            ..Default::default()
+        };
+        for v in packets_by_host(&cfg) {
+            assert!(v.windows(2).all(|w| w[0].inject_cycle <= w[1].inject_cycle));
+        }
+    }
+
+    #[test]
+    fn mix_is_splitmix_compatible() {
+        for seed in [0u64, 1, 0xDEADBEEF, u64::MAX] {
+            assert!(mix_matches_splitmix(seed));
+        }
+    }
+
+    #[test]
+    fn ecmp_is_balanced() {
+        let mut buckets = [0u32; 8];
+        for i in 0..8000u64 {
+            buckets[ecmp_hash(3, 900, i, 8) as usize] += 1;
+        }
+        for b in buckets {
+            assert!((700..1300).contains(&b), "ECMP imbalance: {b}");
+        }
+    }
+}

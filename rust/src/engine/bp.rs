@@ -1,0 +1,271 @@
+//! Explicit back pressure (paper §3.3, Figure 3).
+//!
+//! Two ways exist to create back pressure: *implicit* (an occupied input
+//! port makes the transfer fail, pressure ripples backwards one stage per
+//! cycle — built into `PortArena::transfer`) and *explicit* — dedicated
+//! back-pressure ports through which a receiver warns its sender at cycle
+//! N−1 that it must stall at cycle N.
+//!
+//! These helpers package the explicit pattern so units stay small:
+//!
+//! - [`BpEmitter`] lives in the *receiver*: each cycle it compares queue
+//!   occupancy against a high/low watermark and sends STALL/RESUME edge
+//!   messages on the dedicated port (edges only — no per-cycle traffic).
+//! - [`BpThrottle`] lives in the *sender*: it drains the back-pressure
+//!   input and answers "may I send this cycle?".
+//!
+//! Because the STALL decision made during cycle N−1's work phase arrives
+//! at the sender no earlier than cycle N (rule 3), detection and reaction
+//! never share a cycle — exactly the discipline of paper Fig 3.
+
+use super::message::Msg;
+use super::port::{InPort, OutPort};
+use super::unit::Ctx;
+
+/// Message kinds on back-pressure ports.
+pub const BP_STALL: u32 = 0x0B50;
+pub const BP_RESUME: u32 = 0x0B51;
+
+/// Receiver side: watches an occupancy signal, emits STALL when it rises
+/// to `high` and RESUME when it falls back to `low`.
+#[derive(Debug)]
+pub struct BpEmitter {
+    bp_out: OutPort,
+    high: usize,
+    low: usize,
+    stalled: bool,
+    pub stalls_sent: u64,
+    pub resumes_sent: u64,
+}
+
+impl BpEmitter {
+    pub fn new(bp_out: OutPort, high: usize, low: usize) -> Self {
+        assert!(low <= high, "watermarks inverted");
+        BpEmitter {
+            bp_out,
+            high,
+            low,
+            stalled: false,
+            stalls_sent: 0,
+            resumes_sent: 0,
+        }
+    }
+
+    /// Call once per work phase with the current occupancy.
+    pub fn update(&mut self, ctx: &mut Ctx<'_>, occupancy: usize) {
+        if !self.stalled && occupancy >= self.high {
+            if ctx.send(self.bp_out, Msg::new(BP_STALL)).is_ok() {
+                self.stalled = true;
+                self.stalls_sent += 1;
+            }
+            // A full bp port means a previous edge is still in flight;
+            // retry next cycle (sound: the sender is already stalled or
+            // will see the queued edge first).
+        } else if self.stalled && occupancy <= self.low {
+            if ctx.send(self.bp_out, Msg::new(BP_RESUME)).is_ok() {
+                self.stalled = false;
+                self.resumes_sent += 1;
+            }
+        }
+    }
+
+    pub fn is_stalling(&self) -> bool {
+        self.stalled
+    }
+}
+
+/// Sender side: drains the back-pressure port, answers "may I send?".
+#[derive(Debug)]
+pub struct BpThrottle {
+    bp_in: InPort,
+    stalled: bool,
+    pub stall_cycles: u64,
+}
+
+impl BpThrottle {
+    pub fn new(bp_in: InPort) -> Self {
+        BpThrottle {
+            bp_in,
+            stalled: false,
+            stall_cycles: 0,
+        }
+    }
+
+    /// Call once per work phase, before deciding to send. Returns true if
+    /// sending is allowed this cycle.
+    pub fn may_send(&mut self, ctx: &mut Ctx<'_>) -> bool {
+        while let Some(m) = ctx.recv(self.bp_in) {
+            match m.kind {
+                BP_STALL => self.stalled = true,
+                BP_RESUME => self.stalled = false,
+                k => panic!("unexpected kind {k:#x} on back-pressure port"),
+            }
+        }
+        if self.stalled {
+            self.stall_cycles += 1;
+        }
+        !self.stalled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::model::{ModelBuilder, RunOpts};
+    use crate::engine::port::PortCfg;
+    use crate::engine::unit::Unit;
+    use crate::engine::Fnv;
+    use crate::stats::StatsMap;
+    use std::collections::VecDeque;
+
+    /// Producer that sends as fast as the explicit throttle allows.
+    struct Producer {
+        data_out: OutPort,
+        throttle: BpThrottle,
+        sent: u64,
+    }
+
+    impl Unit for Producer {
+        fn work(&mut self, ctx: &mut Ctx<'_>) {
+            if self.throttle.may_send(ctx) && ctx.out_vacant(self.data_out) {
+                ctx.send(self.data_out, Msg::with(1, self.sent, 0, 0)).unwrap();
+                self.sent += 1;
+            }
+        }
+
+        fn state_hash(&self, h: &mut Fnv) {
+            h.write_u64(self.sent);
+        }
+
+        fn stats(&self, out: &mut StatsMap) {
+            out.set("producer.sent", self.sent);
+            out.set("producer.stall_cycles", self.throttle.stall_cycles);
+        }
+    }
+
+    /// Consumer with a slow internal pipeline (drains 1 item every
+    /// `period` cycles) and a bounded internal queue guarded by the
+    /// explicit emitter.
+    struct Consumer {
+        data_in: InPort,
+        emitter: BpEmitter,
+        queue: VecDeque<Msg>,
+        period: u64,
+        max_queue_seen: usize,
+        consumed: u64,
+    }
+
+    impl Unit for Consumer {
+        fn work(&mut self, ctx: &mut Ctx<'_>) {
+            while let Some(m) = ctx.recv(self.data_in) {
+                self.queue.push_back(m);
+            }
+            if ctx.cycle % self.period == 0 {
+                if self.queue.pop_front().is_some() {
+                    self.consumed += 1;
+                }
+            }
+            self.max_queue_seen = self.max_queue_seen.max(self.queue.len());
+            self.emitter.update(ctx, self.queue.len());
+        }
+
+        fn state_hash(&self, h: &mut Fnv) {
+            h.write_u64(self.consumed);
+            h.write_u64(self.queue.len() as u64);
+        }
+
+        fn stats(&self, out: &mut StatsMap) {
+            out.set("consumer.consumed", self.consumed);
+            out.set("consumer.max_queue", self.max_queue_seen as u64);
+            out.set("consumer.stalls_sent", self.emitter.stalls_sent);
+        }
+    }
+
+    fn build(period: u64, high: usize, low: usize) -> crate::engine::Model {
+        let mut mb = ModelBuilder::new();
+        let p = mb.reserve_unit("producer");
+        let c = mb.reserve_unit("consumer");
+        // Generous data-port capacity: the *explicit* path must do the
+        // throttling, not the implicit port occupancy.
+        let (data_out, data_in) = mb.connect(p, c, PortCfg::new(64, 1));
+        let (bp_out, bp_in) = mb.connect(c, p, PortCfg::new(2, 1));
+        mb.install(
+            p,
+            Box::new(Producer {
+                data_out,
+                throttle: BpThrottle::new(bp_in),
+                sent: 0,
+            }),
+        );
+        mb.install(
+            c,
+            Box::new(Consumer {
+                data_in,
+                emitter: BpEmitter::new(bp_out, high, low),
+                queue: VecDeque::new(),
+                period,
+                max_queue_seen: 0,
+                consumed: 0,
+            }),
+        );
+        mb.build().unwrap()
+    }
+
+    #[test]
+    fn explicit_bp_bounds_receiver_queue() {
+        // Fast producer (1/cycle), slow consumer (1 per 4 cycles): without
+        // bp the queue would grow ~0.75/cycle; the watermark at 8 must cap
+        // it near 8 (+ in-flight slack: 2 cycles of round-trip).
+        let mut m = build(4, 8, 2);
+        let stats = m.run_serial(RunOpts::cycles(2_000));
+        let maxq = stats.counters.get("consumer.max_queue");
+        assert!(maxq >= 8, "watermark must be reachable: {maxq}");
+        assert!(
+            maxq <= 12,
+            "explicit bp must cap the queue near the watermark: {maxq}"
+        );
+        assert!(stats.counters.get("consumer.stalls_sent") > 0);
+        assert!(stats.counters.get("producer.stall_cycles") > 0);
+    }
+
+    #[test]
+    fn throughput_matches_consumer_rate_under_bp() {
+        let mut m = build(4, 8, 2);
+        let stats = m.run_serial(RunOpts::cycles(4_000));
+        let consumed = stats.counters.get("consumer.consumed");
+        // Steady state: consumer rate = 1/4 cycle.
+        let expected = 4_000 / 4;
+        assert!(
+            (consumed as i64 - expected as i64).abs() < 32,
+            "consumed {consumed} vs expected ≈ {expected}"
+        );
+        // Producer must not have run unboundedly ahead.
+        let sent = stats.counters.get("producer.sent");
+        assert!(sent < consumed + 32, "sent {sent} vs consumed {consumed}");
+    }
+
+    #[test]
+    fn no_bp_traffic_when_consumer_keeps_up() {
+        // Consumer drains every cycle: no stall edges should ever be sent.
+        let mut m = build(1, 8, 2);
+        let stats = m.run_serial(RunOpts::cycles(1_000));
+        assert_eq!(stats.counters.get("consumer.stalls_sent"), 0);
+        assert_eq!(stats.counters.get("producer.stall_cycles"), 0);
+    }
+
+    #[test]
+    fn explicit_bp_is_deterministic_in_parallel() {
+        use crate::sync::{run_ladder, ParallelOpts, SyncMethod};
+        let serial_fp = {
+            let mut m = build(3, 6, 2);
+            m.run_serial(RunOpts::cycles(500).fingerprinted()).fingerprint
+        };
+        let mut m = build(3, 6, 2);
+        let p = run_ladder(
+            &mut m,
+            &[vec![0], vec![1]],
+            &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::cycles(500).fingerprinted()),
+        );
+        assert_eq!(p.fingerprint, serial_fp);
+    }
+}

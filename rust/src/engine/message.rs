@@ -1,0 +1,136 @@
+//! Messages — the only way control and data move between units (paper §3.1
+//! rule 4).
+//!
+//! The paper stresses that the transfer phase moves *pointers*, not message
+//! bodies (§3.2.2). We get the same effect by keeping `Msg` a small POD
+//! (moved by value, 5 words) with an optional boxed payload for the rare
+//! large message — the box moves as a single pointer.
+
+use std::any::Any;
+
+/// A message in flight between two units.
+///
+/// `kind` and the three scalar fields cover the vast majority of traffic
+/// (cache requests, NoC flits, pipeline ops, data-center packets) without
+/// heap allocation; substrates define their own `kind` namespaces and
+/// encode/decode helpers.
+#[derive(Debug)]
+pub struct Msg {
+    /// Substrate-defined discriminant.
+    pub kind: u32,
+    /// Unit id of the sender (diagnostics / routing).
+    pub src: u32,
+    /// Scalar payload words (substrate-defined meaning).
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    /// Rare large payloads ride in a box and move as one pointer.
+    pub payload: Option<Box<dyn Any + Send>>,
+}
+
+impl Msg {
+    pub fn new(kind: u32) -> Self {
+        Msg {
+            kind,
+            src: u32::MAX,
+            a: 0,
+            b: 0,
+            c: 0,
+            payload: None,
+        }
+    }
+
+    pub fn with(kind: u32, a: u64, b: u64, c: u64) -> Self {
+        Msg {
+            kind,
+            src: u32::MAX,
+            a,
+            b,
+            c,
+            payload: None,
+        }
+    }
+
+    pub fn with_payload<T: Any + Send>(mut self, p: T) -> Self {
+        self.payload = Some(Box::new(p));
+        self
+    }
+
+    /// Take the payload, downcast to `T`. Panics on type mismatch — a
+    /// mismatch is a wiring bug, not a runtime condition.
+    pub fn take_payload<T: Any + Send>(&mut self) -> Option<Box<T>> {
+        self.payload
+            .take()
+            .map(|p| p.downcast::<T>().expect("payload type mismatch"))
+    }
+
+    /// Mix the observable fields into a fingerprint hasher (determinism
+    /// tests). Payload contents are not hashed (not all payloads are
+    /// hashable); `kind/a/b/c/src` identify a message for our models.
+    pub fn fingerprint(&self, h: &mut Fnv) {
+        h.write_u64(self.kind as u64);
+        h.write_u64(self.src as u64);
+        h.write_u64(self.a);
+        h.write_u64(self.b);
+        h.write_u64(self.c);
+    }
+}
+
+/// FNV-1a 64-bit — tiny deterministic hasher for state fingerprints.
+#[derive(Debug, Clone)]
+pub struct Fnv(pub u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_is_small() {
+        // The hot path moves Msg by value; keep it compact.
+        assert!(std::mem::size_of::<Msg>() <= 64, "Msg grew too large");
+    }
+
+    #[test]
+    fn payload_roundtrip() {
+        let mut m = Msg::new(1).with_payload(vec![1u8, 2, 3]);
+        let p = m.take_payload::<Vec<u8>>().unwrap();
+        assert_eq!(*p, vec![1, 2, 3]);
+        assert!(m.take_payload::<Vec<u8>>().is_none(), "payload consumed");
+    }
+
+    #[test]
+    fn fingerprint_sensitivity() {
+        let mut h1 = Fnv::new();
+        Msg::with(1, 2, 3, 4).fingerprint(&mut h1);
+        let mut h2 = Fnv::new();
+        Msg::with(1, 2, 3, 5).fingerprint(&mut h2);
+        assert_ne!(h1.finish(), h2.finish());
+        let mut h3 = Fnv::new();
+        Msg::with(1, 2, 3, 4).fingerprint(&mut h3);
+        assert_eq!(h1.finish(), h3.finish());
+    }
+}

@@ -1,0 +1,15 @@
+//! The simulation core: messages, ports, units, models, and the serial
+//! reference engine (paper §2–§3). The parallel engine lives in
+//! `crate::sync` (ladder-barrier) and drives the same `Model` phase
+//! primitives.
+
+pub mod bp;
+pub mod message;
+pub mod model;
+pub mod port;
+pub mod unit;
+
+pub use message::{Fnv, Msg};
+pub use model::{Model, ModelBuilder, RunOpts, Stop};
+pub use port::{InPort, OutPort, PortCfg};
+pub use unit::{Ctx, Unit};

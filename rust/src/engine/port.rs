@@ -1,0 +1,388 @@
+//! Ports — point-to-point, contention-free links between units (paper §3.1
+//! rules 3, 5, 6) with capacity, delay, and both back-pressure styles
+//! (paper §3.3).
+//!
+//! # Phase-ownership model (paper Table 2)
+//!
+//! A port is split into two halves so the two phases touch disjoint memory:
+//!
+//! - **OutHalf** — written by the *sender* unit during the work phase
+//!   (`send`), drained by the *sender's worker thread* during the transfer
+//!   phase.
+//! - **InHalf** — filled by the *sender's worker thread* during the
+//!   transfer phase, drained by the *receiver* unit during the next work
+//!   phase.
+//!
+//! Each half therefore has exactly one owning thread in each phase, with
+//! the phase barrier providing the happens-before edge when ownership
+//! switches. This is the paper's "thread-safe lockless data access":
+//! no atomics, no locks, on any port operation.
+//!
+//! # Safety
+//!
+//! `PortArena` stores both halves in `UnsafeCell`s and is `Sync`. All
+//! mutable access goes through `unsafe` accessors whose contract is the
+//! ownership schedule above; the engine upholds it by construction
+//! (clusters partition units; a port's out-half is only touched by its
+//! sender's cluster, its in-half only by the receiver's cluster during
+//! work and by the sender's cluster during transfer). Debug builds verify
+//! unit-level ownership on every access via `debug_assert`s in `Ctx`.
+
+use super::message::{Fnv, Msg};
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+
+/// Port configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PortCfg {
+    /// Receiver-side queue capacity (paper: port meta-data "capacity").
+    /// An occupied input queue makes the transfer fail — implicit
+    /// back pressure.
+    pub capacity: usize,
+    /// Sender-side staging capacity. The paper's description implies 1
+    /// (an occupied output port stalls the sender); raise it to model
+    /// deeper output FIFOs.
+    pub out_capacity: usize,
+    /// Cycles between send (cycle m) and earliest consumption (cycle
+    /// m + delay). Clamped to >= 1 to uphold rule 3: n > m.
+    pub delay: u64,
+}
+
+impl Default for PortCfg {
+    fn default() -> Self {
+        PortCfg {
+            capacity: 1,
+            out_capacity: 1,
+            delay: 1,
+        }
+    }
+}
+
+impl PortCfg {
+    pub fn with_capacity(capacity: usize) -> Self {
+        PortCfg {
+            capacity,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_delay(delay: u64) -> Self {
+        PortCfg {
+            delay,
+            ..Default::default()
+        }
+    }
+
+    /// Capacity `c`, delay `d`, out staging 1.
+    pub fn new(capacity: usize, delay: u64) -> Self {
+        PortCfg {
+            capacity,
+            out_capacity: 1,
+            delay,
+        }
+    }
+}
+
+/// Sender-side handle, held by the sending unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutPort(pub(crate) u32);
+
+/// Receiver-side handle, held by the receiving unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InPort(pub(crate) u32);
+
+impl OutPort {
+    pub fn index(&self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl InPort {
+    pub fn index(&self) -> usize {
+        self.0 as usize
+    }
+}
+
+pub(crate) struct OutHalf {
+    pub q: VecDeque<Msg>,
+    pub cap: usize,
+}
+
+pub(crate) struct InHalf {
+    /// (ready_cycle, msg); FIFO per port, single writer ⇒ deterministic.
+    pub q: VecDeque<(u64, Msg)>,
+    pub cap: usize,
+    pub delay: u64,
+}
+
+/// All ports of a model, half-split for phase ownership.
+///
+/// `out_lens` / `in_lens` are packed queue-length hints (4 B per port,
+/// L1-resident even for 10⁶-port fabrics). They let the hot loops —
+/// transfer over all owned ports, units polling many mostly-idle inputs —
+/// skip empty queues with one packed load instead of touching each
+/// half's cache line. Ownership schedule is identical to the halves they
+/// mirror, so no synchronization is needed.
+pub struct PortArena {
+    outs: Vec<UnsafeCell<OutHalf>>,
+    ins: Vec<UnsafeCell<InHalf>>,
+    out_lens: Vec<UnsafeCell<u32>>,
+    in_lens: Vec<UnsafeCell<u32>>,
+    /// Sending / receiving unit of each port (wiring metadata; used for
+    /// partitioning, ownership checks, and locality heuristics).
+    pub(crate) src_unit: Vec<u32>,
+    pub(crate) dst_unit: Vec<u32>,
+}
+
+// SAFETY: see module docs. Access is partitioned by the engine so that no
+// half is ever touched by two threads within the same phase, and phase
+// barriers order cross-phase handoffs.
+unsafe impl Sync for PortArena {}
+
+impl PortArena {
+    pub(crate) fn new() -> Self {
+        PortArena {
+            outs: Vec::new(),
+            ins: Vec::new(),
+            out_lens: Vec::new(),
+            in_lens: Vec::new(),
+            src_unit: Vec::new(),
+            dst_unit: Vec::new(),
+        }
+    }
+
+    pub(crate) fn add(&mut self, cfg: PortCfg, src: u32, dst: u32) -> (OutPort, InPort) {
+        let idx = self.outs.len() as u32;
+        self.outs.push(UnsafeCell::new(OutHalf {
+            q: VecDeque::with_capacity(cfg.out_capacity.min(64)),
+            cap: cfg.out_capacity.max(1),
+        }));
+        self.ins.push(UnsafeCell::new(InHalf {
+            q: VecDeque::with_capacity(cfg.capacity.min(64)),
+            cap: cfg.capacity.max(1),
+            delay: cfg.delay.max(1),
+        }));
+        self.out_lens.push(UnsafeCell::new(0));
+        self.in_lens.push(UnsafeCell::new(0));
+        self.src_unit.push(src);
+        self.dst_unit.push(dst);
+        (OutPort(idx), InPort(idx))
+    }
+
+    pub fn len(&self) -> usize {
+        self.outs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.outs.is_empty()
+    }
+
+    /// # Safety
+    /// Caller must hold phase ownership of port `i`'s out-half.
+    #[inline]
+    pub(crate) unsafe fn out_half(&self, i: u32) -> &mut OutHalf {
+        &mut *self.outs[i as usize].get()
+    }
+
+    /// # Safety
+    /// Caller must hold phase ownership of port `i`'s in-half.
+    #[inline]
+    pub(crate) unsafe fn in_half(&self, i: u32) -> &mut InHalf {
+        &mut *self.ins[i as usize].get()
+    }
+
+    /// Packed occupancy hint for the out-half (same ownership rules).
+    ///
+    /// # Safety
+    /// As `out_half`.
+    #[inline]
+    pub(crate) unsafe fn out_len_hint(&self, i: u32) -> u32 {
+        *self.out_lens[i as usize].get()
+    }
+
+    /// # Safety
+    /// As `out_half` (the writer side of the hint).
+    #[inline]
+    pub(crate) unsafe fn bump_out_len(&self, i: u32, delta: i32) {
+        let p = self.out_lens[i as usize].get();
+        *p = (*p as i32 + delta) as u32;
+    }
+
+    /// Packed occupancy hint for the in-half (same ownership rules).
+    ///
+    /// # Safety
+    /// As `in_half`.
+    #[inline]
+    pub(crate) unsafe fn in_len_hint(&self, i: u32) -> u32 {
+        *self.in_lens[i as usize].get()
+    }
+
+    /// # Safety
+    /// As `in_half` (the writer side of the hint).
+    #[inline]
+    pub(crate) unsafe fn bump_in_len(&self, i: u32, delta: i32) {
+        let p = self.in_lens[i as usize].get();
+        *p = (*p as i32 + delta) as u32;
+    }
+
+    /// Transfer phase for one port: move staged messages to the receiver
+    /// queue while it has vacancy, stamping the ready cycle. Runs on the
+    /// *sender's* worker thread (paper Table 2).
+    ///
+    /// # Safety
+    /// Caller must be the sender's thread during the transfer phase.
+    #[inline]
+    pub(crate) unsafe fn transfer(&self, i: u32, now: u64) -> u32 {
+        // Packed-hint early out: skip the (cold) half structures entirely
+        // when nothing is staged — the common case in large fabrics.
+        if self.out_len_hint(i) == 0 {
+            return 0;
+        }
+        let out = self.out_half(i);
+        let inp = self.in_half(i);
+        let mut moved = 0;
+        while !out.q.is_empty() && inp.q.len() < inp.cap {
+            let msg = out.q.pop_front().unwrap();
+            inp.q.push_back((now + inp.delay, msg));
+            moved += 1;
+        }
+        if moved > 0 {
+            self.bump_out_len(i, -(moved as i32));
+            self.bump_in_len(i, moved as i32);
+        }
+        debug_assert_eq!(self.out_len_hint(i) as usize, out.q.len());
+        debug_assert_eq!(self.in_len_hint(i) as usize, inp.q.len());
+        moved
+    }
+
+    /// `in_flight` through a shared reference.
+    ///
+    /// # Safety
+    /// Caller must hold logical exclusivity (e.g. the scheduler between
+    /// ticks, when all workers are parked at a barrier).
+    pub(crate) unsafe fn in_flight_shared(&self) -> usize {
+        let mut n = 0;
+        for c in &self.outs {
+            n += (*c.get()).q.len();
+        }
+        for c in &self.ins {
+            n += (*c.get()).q.len();
+        }
+        n
+    }
+
+    /// Messages currently in flight (staged + queued). Only callable with
+    /// exclusive access (between cycles / single-threaded).
+    pub(crate) fn in_flight(&mut self) -> usize {
+        let mut n = 0;
+        for c in &mut self.outs {
+            n += c.get_mut().q.len();
+        }
+        for c in &mut self.ins {
+            n += c.get_mut().q.len();
+        }
+        n
+    }
+
+    /// Fingerprint all queue contents (exclusive access required).
+    pub(crate) fn fingerprint(&mut self, h: &mut Fnv) {
+        for c in &mut self.outs {
+            let half = c.get_mut();
+            h.write_u64(half.q.len() as u64);
+            for m in &half.q {
+                m.fingerprint(h);
+            }
+        }
+        for c in &mut self.ins {
+            let half = c.get_mut();
+            h.write_u64(half.q.len() as u64);
+            for (r, m) in &half.q {
+                h.write_u64(*r);
+                m.fingerprint(h);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena_one(cfg: PortCfg) -> PortArena {
+        let mut a = PortArena::new();
+        a.add(cfg, 0, 1);
+        a
+    }
+
+    /// Stage a message the way `Ctx::send` would (queue + hint).
+    unsafe fn stage(a: &PortArena, i: u32, m: Msg) {
+        a.out_half(i).q.push_back(m);
+        a.bump_out_len(i, 1);
+    }
+
+    #[test]
+    fn transfer_respects_capacity_and_delay() {
+        let a = arena_one(PortCfg::new(1, 2));
+        unsafe {
+            stage(&a, 0, Msg::with(1, 10, 0, 0));
+            stage(&a, 0, Msg::with(1, 11, 0, 0));
+            // capacity 1: only one message moves.
+            assert_eq!(a.transfer(0, 5), 1);
+            assert_eq!(a.out_half(0).q.len(), 1, "second msg stays staged");
+            let inp = a.in_half(0);
+            assert_eq!(inp.q.len(), 1);
+            assert_eq!(inp.q[0].0, 7, "ready at now + delay = 5 + 2");
+        }
+    }
+
+    #[test]
+    fn occupied_input_blocks_transfer() {
+        let a = arena_one(PortCfg::new(1, 1));
+        unsafe {
+            stage(&a, 0, Msg::with(1, 1, 0, 0));
+            assert_eq!(a.transfer(0, 0), 1);
+            stage(&a, 0, Msg::with(1, 2, 0, 0));
+            // input not drained — transfer fails, msg remains staged.
+            assert_eq!(a.transfer(0, 1), 0);
+            assert_eq!(a.out_half(0).q.len(), 1);
+        }
+    }
+
+    #[test]
+    fn delay_clamped_to_one() {
+        let a = arena_one(PortCfg {
+            capacity: 1,
+            out_capacity: 1,
+            delay: 0,
+        });
+        unsafe {
+            stage(&a, 0, Msg::new(0));
+            a.transfer(0, 3);
+            assert_eq!(a.in_half(0).q[0].0, 4, "delay 0 clamps to 1 (rule: n > m)");
+        }
+    }
+
+    #[test]
+    fn in_flight_counts_both_halves() {
+        let mut a = arena_one(PortCfg::new(4, 1));
+        unsafe {
+            stage(&a, 0, Msg::new(0));
+            stage(&a, 0, Msg::new(0));
+            a.transfer(0, 0);
+        }
+        assert_eq!(a.in_flight(), 2);
+    }
+
+    #[test]
+    fn fingerprint_tracks_queue_contents() {
+        let mut a = arena_one(PortCfg::new(4, 1));
+        let mut h1 = Fnv::new();
+        a.fingerprint(&mut h1);
+        unsafe {
+            stage(&a, 0, Msg::with(7, 1, 2, 3));
+        }
+        let mut h2 = Fnv::new();
+        a.fingerprint(&mut h2);
+        assert_ne!(h1.finish(), h2.finish());
+    }
+}

@@ -1,0 +1,260 @@
+//! Units and the per-unit execution context.
+//!
+//! A unit is the paper's basic hardware-model entity (§2, Figure 2): it
+//! stores its own state, is driven by messages on its input ports, and
+//! submits results to output ports. All inter-unit communication goes
+//! through ports — units never share state (paper §3.1 rule 4).
+
+use super::message::{Fnv, Msg};
+use super::port::{InPort, OutPort, PortArena};
+use crate::stats::{Counters, StatsMap};
+
+/// The hardware-model entity. Implementations follow the paper's work-phase
+/// recipe (§3.2.1): read input messages → read stored data → check output
+/// vacancy → compute → store → submit to output ports.
+pub trait Unit: Send {
+    /// One work phase of one simulated cycle.
+    fn work(&mut self, ctx: &mut Ctx<'_>);
+
+    /// Report end-of-run statistics.
+    fn stats(&self, _out: &mut StatsMap) {}
+
+    /// Mix internal state into a fingerprint (determinism tests). Units
+    /// with externally-observable state should implement this.
+    fn state_hash(&self, _h: &mut Fnv) {}
+
+    /// True when the unit has no pending internal work. Used by the
+    /// `AllIdle` stop condition; conservative default is `true` (a model
+    /// relying on AllIdle must implement it for stateful units).
+    fn is_idle(&self) -> bool {
+        true
+    }
+}
+
+/// Execution context handed to `Unit::work` — the only gateway to ports,
+/// counters and the clock, which lets debug builds verify the phase
+/// ownership discipline on every access.
+pub struct Ctx<'a> {
+    /// Current simulated cycle.
+    pub cycle: u64,
+    /// Id of the unit being executed.
+    pub unit_id: u32,
+    pub(crate) arena: &'a PortArena,
+    /// Global shared counters (relaxed atomics; deterministic at cycle
+    /// boundaries — see stats::counters).
+    pub counters: &'a Counters,
+    /// The owning cluster's active-port worklist: ports that need a
+    /// transfer this cycle. `send` registers a port when its staging
+    /// queue goes 0 → 1; the transfer phase drains the list instead of
+    /// scanning every port (O(active) instead of O(ports)).
+    pub(crate) dirty: &'a mut Vec<u32>,
+}
+
+impl<'a> Ctx<'a> {
+    /// Is there room to stage a message on `p` this cycle?
+    #[inline]
+    pub fn out_vacant(&self, p: OutPort) -> bool {
+        self.out_space(p) > 0
+    }
+
+    /// Remaining staging slots on `p`.
+    #[inline]
+    pub fn out_space(&self, p: OutPort) -> usize {
+        debug_assert_eq!(
+            self.arena.src_unit[p.0 as usize], self.unit_id,
+            "unit {} touched out-port of unit {}",
+            self.unit_id, self.arena.src_unit[p.0 as usize]
+        );
+        // SAFETY: p belongs to this unit (asserted above); during the work
+        // phase this unit's cluster owns the out-half.
+        let out = unsafe { self.arena.out_half(p.0) };
+        out.cap - out.q.len()
+    }
+
+    /// Stage `msg` on output port `p`. Fails (returning the message) if the
+    /// staging buffer is full — the implicit back-pressure signal to the
+    /// sender (paper §3.3).
+    #[inline]
+    pub fn send(&mut self, p: OutPort, mut msg: Msg) -> Result<(), Msg> {
+        debug_assert_eq!(
+            self.arena.src_unit[p.0 as usize], self.unit_id,
+            "unit {} touched out-port of unit {}",
+            self.unit_id, self.arena.src_unit[p.0 as usize]
+        );
+        msg.src = self.unit_id;
+        // SAFETY: as in out_space.
+        let out = unsafe { self.arena.out_half(p.0) };
+        if out.q.len() >= out.cap {
+            return Err(msg);
+        }
+        out.q.push_back(msg);
+        // SAFETY: same ownership as the out-half just touched.
+        unsafe {
+            if self.arena.out_len_hint(p.0) == 0 {
+                self.dirty.push(p.0); // newly active: schedule a transfer
+            }
+            self.arena.bump_out_len(p.0, 1);
+        }
+        Ok(())
+    }
+
+    /// Pop the next ready message (sent at cycle < now, per rule 3).
+    #[inline]
+    pub fn recv(&mut self, p: InPort) -> Option<Msg> {
+        debug_assert_eq!(
+            self.arena.dst_unit[p.0 as usize], self.unit_id,
+            "unit {} touched in-port of unit {}",
+            self.unit_id, self.arena.dst_unit[p.0 as usize]
+        );
+        // SAFETY: p belongs to this unit; during the work phase the
+        // receiver's cluster owns the in-half (and its hint).
+        unsafe {
+            if self.arena.in_len_hint(p.0) == 0 {
+                return None; // packed early-out: cold half untouched
+            }
+            let inp = self.arena.in_half(p.0);
+            match inp.q.front() {
+                Some((ready, _)) if *ready <= self.cycle => {
+                    self.arena.bump_in_len(p.0, -1);
+                    inp.q.pop_front().map(|(_, m)| m)
+                }
+                _ => None,
+            }
+        }
+    }
+
+    /// Peek at the next ready message without consuming it.
+    #[inline]
+    pub fn peek(&self, p: InPort) -> Option<&Msg> {
+        debug_assert_eq!(self.arena.dst_unit[p.0 as usize], self.unit_id);
+        // SAFETY: as in recv.
+        unsafe {
+            if self.arena.in_len_hint(p.0) == 0 {
+                return None;
+            }
+            let inp = self.arena.in_half(p.0);
+            match inp.q.front() {
+                Some((ready, m)) if *ready <= self.cycle => Some(m),
+                _ => None,
+            }
+        }
+    }
+
+    /// Number of ready messages waiting on `p`.
+    #[inline]
+    pub fn in_ready(&self, p: InPort) -> usize {
+        debug_assert_eq!(self.arena.dst_unit[p.0 as usize], self.unit_id);
+        // SAFETY: as in recv.
+        unsafe {
+            if self.arena.in_len_hint(p.0) == 0 {
+                return 0;
+            }
+            let inp = self.arena.in_half(p.0);
+            inp.q.iter().take_while(|(r, _)| *r <= self.cycle).count()
+        }
+    }
+
+    /// True if the input queue holds anything at all (ready or in-flight) —
+    /// the receiver-side occupancy that gates transfers.
+    #[inline]
+    pub fn in_occupied(&self, p: InPort) -> bool {
+        debug_assert_eq!(self.arena.dst_unit[p.0 as usize], self.unit_id);
+        // SAFETY: as in recv.
+        unsafe { self.arena.in_len_hint(p.0) > 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::port::PortCfg;
+
+    fn setup() -> (PortArena, Counters) {
+        let mut a = PortArena::new();
+        a.add(PortCfg::new(2, 1), 0, 1);
+        (a, Counters::new())
+    }
+
+    fn ctx<'a>(
+        arena: &'a PortArena,
+        counters: &'a Counters,
+        dirty: &'a mut Vec<u32>,
+        unit: u32,
+        cycle: u64,
+    ) -> Ctx<'a> {
+        Ctx {
+            cycle,
+            unit_id: unit,
+            arena,
+            counters,
+            dirty,
+        }
+    }
+
+    #[test]
+    fn send_then_recv_next_cycle() {
+        let (a, c) = setup();
+        let (op, ip) = (OutPort(0), InPort(0));
+        {
+            let mut d = Vec::new();
+            let mut sender = ctx(&a, &c, &mut d, 0, 0);
+            assert!(sender.out_vacant(op));
+            sender.send(op, Msg::with(9, 1, 2, 3)).unwrap();
+            assert!(!sender.out_vacant(op), "out_capacity 1 now full");
+        }
+        unsafe { a.transfer(0, 0) };
+        {
+            // Same cycle: not ready yet (rule 3: n > m).
+            let mut d = Vec::new();
+            let mut rx = ctx(&a, &c, &mut d, 1, 0);
+            assert!(rx.recv(ip).is_none());
+        }
+        {
+            let mut d = Vec::new();
+            let mut rx = ctx(&a, &c, &mut d, 1, 1);
+            assert!(rx.in_occupied(ip));
+            assert_eq!(rx.in_ready(ip), 1);
+            let m = rx.recv(ip).unwrap();
+            assert_eq!((m.kind, m.a, m.src), (9, 1, 0));
+            assert!(rx.recv(ip).is_none());
+        }
+    }
+
+    #[test]
+    fn send_fails_when_staging_full() {
+        let (a, c) = setup();
+        let op = OutPort(0);
+        let mut d = Vec::new();
+        let mut s = ctx(&a, &c, &mut d, 0, 0);
+        s.send(op, Msg::new(1)).unwrap();
+        let back = s.send(op, Msg::new(2));
+        assert!(back.is_err());
+        assert_eq!(back.unwrap_err().kind, 2, "message handed back");
+    }
+
+    #[test]
+    #[should_panic(expected = "touched out-port")]
+    #[cfg(debug_assertions)]
+    fn wrong_owner_panics_in_debug() {
+        let (a, c) = setup();
+        let mut d = Vec::new();
+        let mut wrong = ctx(&a, &c, &mut d, 7, 0);
+        let _ = wrong.send(OutPort(0), Msg::new(0));
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let (a, c) = setup();
+        {
+            let mut d = Vec::new();
+            let mut s = ctx(&a, &c, &mut d, 0, 0);
+            s.send(OutPort(0), Msg::with(5, 0, 0, 0)).unwrap();
+        }
+        unsafe { a.transfer(0, 0) };
+        let mut d = Vec::new();
+        let mut rx = ctx(&a, &c, &mut d, 1, 1);
+        assert_eq!(rx.peek(InPort(0)).unwrap().kind, 5);
+        assert_eq!(rx.peek(InPort(0)).unwrap().kind, 5);
+        assert!(rx.recv(InPort(0)).is_some());
+    }
+}

@@ -1,0 +1,143 @@
+//! Gradient-based architectural exploration — the "exploration" of the
+//! paper's title, made concrete: the differentiable analytic surrogate
+//! (AOT JAX/Pallas, executed via PJRT) proposes design points cheaply, and
+//! the cycle-accurate simulator validates them.
+//!
+//! Workflow (`scalesim explore`):
+//! 1. Seed a batch of fabric configurations.
+//! 2. Descend the exploration objective (latency − reward·load) with the
+//!    AOT gradient artifact, projecting onto parameter bounds.
+//! 3. Take the best surviving config and run the *real* fat-tree
+//!    simulation at that design point; report surrogate vs measured.
+
+use crate::dc::{build_fattree, FatTreeCfg, TrafficCfg};
+use crate::engine::{RunOpts, Stop};
+use crate::runtime::artifacts::{FabricGrad, FabricModel, FABRIC_B};
+use anyhow::Result;
+
+/// Bounds for each tunable dimension: [k, lam, buffer, link, pipeline].
+/// k/link/pipeline are architectural givens here; lam and buffer explore.
+pub const LO: [f32; 5] = [4.0, 0.01, 1.0, 1.0, 1.0];
+pub const HI: [f32; 5] = [80.0, 0.94, 16.0, 4.0, 4.0];
+
+/// Which dimensions gradient descent may move.
+pub const TRAINABLE: [bool; 5] = [false, true, true, false, false];
+
+#[derive(Debug, Clone)]
+pub struct GdResult {
+    pub objective_history: Vec<f32>,
+    pub params: [[f32; 5]; FABRIC_B],
+}
+
+/// Projected gradient descent on the exploration objective.
+pub fn gradient_descent(
+    grad: &FabricGrad,
+    mut params: [[f32; 5]; FABRIC_B],
+    steps: usize,
+    lr: f32,
+) -> Result<GdResult> {
+    let mut history = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let (obj, g) = grad.grad(&params)?;
+        history.push(obj);
+        for (row, grow) in params.iter_mut().zip(&g) {
+            for d in 0..5 {
+                if TRAINABLE[d] {
+                    row[d] = (row[d] - lr * grow[d]).clamp(LO[d], HI[d]);
+                }
+            }
+        }
+    }
+    Ok(GdResult {
+        objective_history: history,
+        params,
+    })
+}
+
+/// Initial batch: spread loads/buffers across the box for config `k`.
+pub fn seed_batch(k: f32, link: f32, pipeline: f32) -> [[f32; 5]; FABRIC_B] {
+    let mut p = [[0f32; 5]; FABRIC_B];
+    for (i, row) in p.iter_mut().enumerate() {
+        let t = i as f32 / (FABRIC_B - 1) as f32;
+        row[0] = k;
+        row[1] = LO[1] + t * (0.6 - LO[1]);
+        row[2] = 2.0 + t * 8.0;
+        row[3] = link;
+        row[4] = pipeline;
+    }
+    p
+}
+
+/// Analytic latency at one config via the forward artifact (first row of
+/// a broadcast batch).
+pub fn surrogate_latency(fabric: &FabricModel, cfg: [f32; 5]) -> Result<f32> {
+    let batch = [cfg; FABRIC_B];
+    Ok(fabric.latency(&batch)?[0])
+}
+
+#[derive(Debug, Clone)]
+pub struct Validation {
+    pub config: [f32; 5],
+    pub surrogate_latency: f32,
+    pub measured_mean_latency: f64,
+    pub measured_p99: u64,
+    pub cycles: u64,
+}
+
+/// Run the cycle-accurate fat-tree at a design point and compare with the
+/// surrogate. `lam` maps to the inject window: window = packets/(hosts·λ).
+pub fn cross_validate(
+    fabric: &FabricModel,
+    cfg: [f32; 5],
+    packets: u64,
+    seed: u64,
+) -> Result<Validation> {
+    let k = cfg[0] as u32;
+    let lam = cfg[1] as f64;
+    let sim_cfg = FatTreeCfg {
+        k,
+        buffer: cfg[2].round() as usize,
+        link_delay: cfg[3].round() as u64,
+        pipeline: cfg[4].round() as u64,
+        traffic: TrafficCfg {
+            seed,
+            hosts: 0, // filled by the builder
+            packets,
+            inject_window: ((packets as f64) / (((k * k * k / 4) as f64) * lam)).ceil()
+                as u64,
+        },
+    };
+    let (mut model, h) = build_fattree(&sim_cfg);
+    let stats = model.run_serial(RunOpts::with_stop(Stop::CounterAtLeast {
+        counter: h.delivered,
+        target: h.packets,
+        max_cycles: 10_000_000,
+    }));
+    let delivered = stats.counters.get("dc.delivered");
+    let mean = stats.counters.get("dc.latency_sum") as f64 / delivered.max(1) as f64;
+    Ok(Validation {
+        config: cfg,
+        surrogate_latency: surrogate_latency(fabric, cfg)?,
+        measured_mean_latency: mean,
+        measured_p99: stats.counters.get("dc.latency_max"),
+        cycles: stats.cycles,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_batch_in_bounds() {
+        let p = seed_batch(16.0, 1.0, 1.0);
+        for row in &p {
+            for d in 0..5 {
+                assert!(row[d] >= LO[d] - 1e-6 && row[d] <= HI[d] + 1e-6);
+            }
+        }
+    }
+
+    // Artifact-dependent tests live in rust/tests/runtime_artifacts.rs
+    // (they need `make artifacts` to have run).
+}

@@ -1,0 +1,192 @@
+//! Figs 12–13 — OLTP on the light-CPU multicore: simulation time vs
+//! worker count, decomposed into per-cluster work, transfer, and sync.
+//!
+//! Paper setup (§5.2): 32 light cores with private L1/L2, shared coherent
+//! L3, NoC, running OLTP; 1–16 worker threads; Fig 12 plots total
+//! execution time, per-cluster time, and sync overhead; Fig 13 plots the
+//! work vs transfer split per worker, showing transfer roughly constant
+//! while max-cluster work shrinks.
+//!
+//! We run the instrumented serial engine once per worker count (identical
+//! simulation, per-cluster attribution) and compose modeled parallel time
+//! with the measured barrier cost (DESIGN.md §3); measured wall-clock of
+//! the true threaded run is reported alongside.
+
+use crate::engine::{RunOpts, Stop};
+use crate::sched::{partition, PartitionStrategy};
+use crate::stats::scaling::{model_parallel_time, BarrierCost, ClusterCosts, ScalingPoint};
+use crate::sync::{run_ladder, ParallelOpts, SyncMethod};
+use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
+use crate::workload::{generate_oltp_traces, OltpCfg};
+
+#[derive(Debug, Clone)]
+pub struct Fig12Row {
+    pub workers: usize,
+    /// Modeled parallel time decomposition (ns).
+    pub modeled: ScalingPoint,
+    /// Sum of work over clusters (the serial-equivalent work).
+    pub total_work_ns: u64,
+    /// Wall-clock of the real threaded run on this host (ns).
+    pub measured_wall_ns: u64,
+    pub sim_cycles: u64,
+    pub sim_khz_serial: f64,
+}
+
+pub struct Fig12Output {
+    pub rows: Vec<Fig12Row>,
+    pub serial_ns: u64,
+}
+
+pub fn default_oltp(cores: usize) -> OltpCfg {
+    OltpCfg {
+        cores,
+        rows: 1024,
+        theta: 0.6,
+        txns_per_core: 300,
+        write_frac: 0.5,
+        index_depth: 2,
+        row_words: 2,
+        max_instrs_per_core: 300_000,
+        seed: 0xF12,
+    }
+}
+
+pub fn run(
+    cores: usize,
+    worker_counts: &[usize],
+    barrier: &BarrierCost,
+    strategy: Option<PartitionStrategy>,
+) -> Fig12Output {
+    let mut rows = Vec::new();
+    let mut serial_ns = 0u64;
+    for &w in worker_counts {
+        let traces = generate_oltp_traces(&default_oltp(cores));
+        let cfg = CpuSystemCfg {
+            kind: CoreKind::Light,
+            ..Default::default()
+        };
+        let (mut model, h) = build_cpu_system(traces, &cfg);
+        let stop = Stop::CounterAtLeast {
+            counter: h.cores_done,
+            target: cores as u64,
+            max_cycles: 5_000_000,
+        };
+        let part = match strategy {
+            Some(s) => partition(&model, w, s),
+            None => h.partition(w), // paper clustering: cores spread evenly
+        };
+        let (stats, per_cluster) =
+            model.run_serial_partitioned(&part, RunOpts::with_stop(stop));
+        let costs = ClusterCosts {
+            work_ns: per_cluster.iter().map(|t| t.work_ns).collect(),
+            transfer_ns: per_cluster.iter().map(|t| t.transfer_ns).collect(),
+            cycles: stats.cycles,
+        };
+        let modeled = model_parallel_time(&costs, barrier);
+        let total_work_ns: u64 = costs.work_ns.iter().sum::<u64>()
+            + costs.transfer_ns.iter().sum::<u64>();
+        if w == 1 {
+            serial_ns = total_work_ns;
+        }
+        // Real threaded run (measured wall-clock on this host).
+        let traces = generate_oltp_traces(&default_oltp(cores));
+        let (mut pmodel, h2) = build_cpu_system(traces, &cfg);
+        let stop2 = Stop::CounterAtLeast {
+            counter: h2.cores_done,
+            target: cores as u64,
+            max_cycles: 5_000_000,
+        };
+        let part2 = match strategy {
+            Some(s) => partition(&pmodel, w, s),
+            None => h2.partition(w),
+        };
+        let pstats = run_ladder(
+            &mut pmodel,
+            &part2,
+            &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::with_stop(stop2)),
+        );
+        rows.push(Fig12Row {
+            workers: w,
+            modeled,
+            total_work_ns,
+            measured_wall_ns: pstats.wall.as_nanos() as u64,
+            sim_cycles: stats.cycles,
+            sim_khz_serial: stats.sim_khz(),
+        });
+    }
+    Fig12Output { rows, serial_ns }
+}
+
+pub fn print(out: &Fig12Output) {
+    let rows: Vec<Vec<String>> = out
+        .rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.workers.to_string(),
+                format!("{:.1}", r.modeled.total_ns() as f64 / 1e6),
+                format!("{:.1}", r.modeled.work_ns as f64 / 1e6),
+                format!("{:.1}", r.modeled.transfer_ns as f64 / 1e6),
+                format!("{:.1}", r.modeled.sync_ns as f64 / 1e6),
+                format!("{:.2}x", out.serial_ns as f64 / r.modeled.total_ns().max(1) as f64),
+                format!("{:.1}", r.measured_wall_ns as f64 / 1e6),
+                r.sim_cycles.to_string(),
+            ]
+        })
+        .collect();
+    super::print_table(
+        "Fig 12: OLTP light-CPU — modeled time decomposition vs workers (ms)",
+        &[
+            "workers",
+            "total",
+            "max-work",
+            "max-xfer",
+            "sync",
+            "speedup",
+            "wall(1cpu)",
+            "sim-cycles",
+        ],
+        &rows,
+    );
+    // Fig 13 view: work vs transfer, per worker count.
+    let rows13: Vec<Vec<String>> = out
+        .rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.workers.to_string(),
+                format!("{:.1}", r.modeled.work_ns as f64 / 1e6),
+                format!("{:.1}", r.modeled.transfer_ns as f64 / 1e6),
+                format!(
+                    "{:.2}",
+                    r.modeled.work_ns as f64 / r.modeled.transfer_ns.max(1) as f64
+                ),
+            ]
+        })
+        .collect();
+    super::print_table(
+        "Fig 13: work vs transfer per worker (ms, max over clusters)",
+        &["workers", "work", "transfer", "ratio"],
+        &rows13,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_small_config_runs() {
+        let barrier = BarrierCost {
+            points: vec![(1, 0.0), (4, 2000.0)],
+        };
+        let out = run(4, &[1, 2], &barrier, None);
+        assert_eq!(out.rows.len(), 2);
+        // Max-cluster work at 2 workers ≤ total work at 1 worker.
+        assert!(out.rows[1].modeled.work_ns <= out.rows[0].modeled.work_ns);
+        assert!(out.rows[0].modeled.sync_ns == 0, "serial pays no sync");
+        assert!(out.rows[1].modeled.sync_ns > 0);
+        assert_eq!(out.rows[0].sim_cycles, out.rows[1].sim_cycles,
+            "same simulation regardless of partitioning");
+    }
+}

@@ -1,0 +1,129 @@
+//! Fig 14 — speedups of the OOO-based platform: 8 out-of-order cores with
+//! full coherency running OLTP (and SPEC), speedup vs worker threads.
+//!
+//! The paper's observation: even for the complex core model, speedup is
+//! sustainable and "in some cases the speedup slope is around 1" — because
+//! the OOO model runs at 10–20 simulated KHz (heavy work per cycle), the
+//! barrier and transfer costs are marginal.
+
+use crate::cpu::ooo::OooCfg;
+use crate::engine::{RunOpts, Stop};
+use crate::stats::scaling::{model_parallel_time, BarrierCost, ClusterCosts};
+use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
+use crate::workload::{generate_oltp_traces, generate_spec_traces, OltpCfg, SpecKind};
+
+#[derive(Debug, Clone)]
+pub struct Fig14Row {
+    pub workload: String,
+    pub workers: usize,
+    pub modeled_total_ns: u64,
+    pub speedup: f64,
+    pub slope: f64,
+    pub sim_khz_serial: f64,
+}
+
+pub enum Workload {
+    Oltp,
+    Spec(SpecKind),
+}
+
+pub fn run(
+    cores: usize,
+    worker_counts: &[usize],
+    barrier: &BarrierCost,
+    workload: Workload,
+) -> Vec<Fig14Row> {
+    let name = match &workload {
+        Workload::Oltp => "oltp".to_string(),
+        Workload::Spec(k) => k.name().to_string(),
+    };
+    let mk_traces = || match &workload {
+        Workload::Oltp => generate_oltp_traces(&OltpCfg {
+            cores,
+            txns_per_core: 16,
+            max_instrs_per_core: 60_000,
+            seed: 0xF14,
+            ..Default::default()
+        }),
+        Workload::Spec(k) => generate_spec_traces(*k, cores, 500, 60_000, 0xF14),
+    };
+    let cfg = CpuSystemCfg {
+        kind: CoreKind::Ooo(OooCfg::default()),
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    let mut serial_ns = 0u64;
+    for &w in worker_counts {
+        let (mut model, h) = build_cpu_system(mk_traces(), &cfg);
+        let stop = Stop::CounterAtLeast {
+            counter: h.cores_done,
+            target: cores as u64,
+            max_cycles: 10_000_000,
+        };
+        let part = h.partition(w);
+        let (stats, per_cluster) =
+            model.run_serial_partitioned(&part, RunOpts::with_stop(stop));
+        let costs = ClusterCosts {
+            work_ns: per_cluster.iter().map(|t| t.work_ns).collect(),
+            transfer_ns: per_cluster.iter().map(|t| t.transfer_ns).collect(),
+            cycles: stats.cycles,
+        };
+        let modeled = model_parallel_time(&costs, barrier);
+        if w == worker_counts[0] {
+            serial_ns = modeled.total_ns();
+        }
+        let speedup = serial_ns as f64 / modeled.total_ns().max(1) as f64;
+        rows.push(Fig14Row {
+            workload: name.clone(),
+            workers: w,
+            modeled_total_ns: modeled.total_ns(),
+            speedup,
+            slope: speedup / (w as f64 / worker_counts[0] as f64),
+            sim_khz_serial: stats.sim_khz(),
+        });
+    }
+    rows
+}
+
+pub fn print(rows: &[Fig14Row]) {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.workload.clone(),
+                r.workers.to_string(),
+                format!("{:.1}", r.modeled_total_ns as f64 / 1e6),
+                format!("{:.2}x", r.speedup),
+                format!("{:.2}", r.slope),
+                format!("{:.1}", r.sim_khz_serial),
+            ]
+        })
+        .collect();
+    super::print_table(
+        "Fig 14: OOO platform speedups (modeled from measured cluster costs)",
+        &["workload", "workers", "time(ms)", "speedup", "slope", "serial KHz"],
+        &table,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ooo_speedup_slope_near_one_with_heavy_work() {
+        // OOO work per cycle is heavy → barrier negligible → slope ≈ 1.
+        let barrier = BarrierCost {
+            points: vec![(1, 500.0), (8, 2_000.0)],
+        };
+        let rows = run(4, &[1, 2, 4], &barrier, Workload::Oltp);
+        assert_eq!(rows.len(), 3);
+        let last = rows.last().unwrap();
+        assert!(
+            last.slope > 0.5,
+            "OOO slope should be sustainable: {:.2}",
+            last.slope
+        );
+        assert!(last.speedup > 1.5, "speedup at 4w: {:.2}", last.speedup);
+    }
+}

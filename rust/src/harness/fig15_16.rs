@@ -1,0 +1,149 @@
+//! Figs 15–16 — data-center simulation: overall runtime vs physical cores
+//! (Fig 15) and speedup vs serial (Fig 16, "a reasonable speedup of 6-10
+//! times").
+//!
+//! Paper configuration: 128,000 nodes, 5,500 × 128-port switches,
+//! 3,000,000 pseudo-random packets, 1–24 host cores. Scaled default here:
+//! a k=16 fat-tree (1,024 hosts, 320 switches) moving a proportionally
+//! scaled packet count; `FatTreeCfg::paper_scale()` builds the full-size
+//! fabric for smoke runs.
+
+use crate::dc::{build_fattree, FatTreeCfg, TrafficCfg};
+use crate::engine::{RunOpts, Stop};
+use crate::sched::{partition, PartitionStrategy};
+use crate::stats::scaling::{model_parallel_time, BarrierCost, ClusterCosts};
+
+#[derive(Debug, Clone)]
+pub struct Fig15Row {
+    pub workers: usize,
+    pub modeled_total_ns: u64,
+    pub speedup: f64,
+    pub sim_cycles: u64,
+    pub delivered: u64,
+    pub mean_latency: f64,
+}
+
+pub fn default_cfg() -> FatTreeCfg {
+    FatTreeCfg {
+        k: 16,
+        buffer: 8,
+        link_delay: 1,
+        pipeline: 1,
+        traffic: TrafficCfg {
+            seed: 0xDC,
+            hosts: 1024, // set by builder
+            packets: 30_000,
+            inject_window: 3_000,
+        },
+    }
+}
+
+pub fn run(
+    cfg: &FatTreeCfg,
+    worker_counts: &[usize],
+    barrier: &BarrierCost,
+    strategy: PartitionStrategy,
+) -> Vec<Fig15Row> {
+    let mut rows = Vec::new();
+    let mut serial_ns = 0u64;
+    for &w in worker_counts {
+        let (mut model, h) = build_fattree(cfg);
+        let stop = Stop::CounterAtLeast {
+            counter: h.delivered,
+            target: h.packets,
+            max_cycles: 10_000_000,
+        };
+        let part = partition(&model, w, strategy);
+        let (stats, per_cluster) =
+            model.run_serial_partitioned(&part, RunOpts::with_stop(stop));
+        let costs = ClusterCosts {
+            work_ns: per_cluster.iter().map(|t| t.work_ns).collect(),
+            transfer_ns: per_cluster.iter().map(|t| t.transfer_ns).collect(),
+            cycles: stats.cycles,
+        };
+        let modeled = model_parallel_time(&costs, barrier);
+        if w == worker_counts[0] {
+            serial_ns = modeled.total_ns();
+        }
+        let delivered = stats.counters.get("dc.delivered");
+        rows.push(Fig15Row {
+            workers: w,
+            modeled_total_ns: modeled.total_ns(),
+            speedup: serial_ns as f64 / modeled.total_ns().max(1) as f64,
+            sim_cycles: stats.cycles,
+            delivered,
+            mean_latency: stats.counters.get("dc.latency_sum") as f64
+                / delivered.max(1) as f64,
+        });
+    }
+    rows
+}
+
+pub fn print(rows: &[Fig15Row]) {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.workers.to_string(),
+                format!("{:.1}", r.modeled_total_ns as f64 / 1e6),
+                format!("{:.2}x", r.speedup),
+                r.sim_cycles.to_string(),
+                r.delivered.to_string(),
+                format!("{:.1}", r.mean_latency),
+            ]
+        })
+        .collect();
+    super::print_table(
+        "Figs 15-16: data-center runtime (modeled, ms) and speedup vs workers",
+        &[
+            "workers",
+            "time(ms)",
+            "speedup",
+            "sim-cycles",
+            "delivered",
+            "mean-lat",
+        ],
+        &table,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dc_scaling_shape() {
+        let cfg = FatTreeCfg {
+            k: 4,
+            buffer: 4,
+            link_delay: 1,
+            pipeline: 1,
+            traffic: TrafficCfg {
+                seed: 0xDC,
+                hosts: 16,
+                packets: 1_500,
+                inject_window: 300,
+            },
+        };
+        let barrier = BarrierCost {
+            points: vec![(1, 200.0), (8, 1_000.0)],
+        };
+        let rows = run(&cfg, &[1, 2, 4], &barrier, PartitionStrategy::Contiguous);
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| r.delivered == 1_500));
+        // Identical simulation at every worker count.
+        let c0 = rows[0].sim_cycles;
+        assert!(rows.iter().all(|r| r.sim_cycles == c0));
+        // Speedup grows with workers (work dominates at this scale). The
+        // micro-config in a debug build is timing-noisy, so allow slack on
+        // the monotonicity while still requiring real parallel benefit.
+        assert!(
+            rows[2].speedup > rows[1].speedup * 0.8,
+            "4w {:.2} vs 2w {:.2}",
+            rows[2].speedup,
+            rows[1].speedup
+        );
+        assert!(rows[1].speedup > 0.9, "{:.2}", rows[1].speedup);
+        assert!(rows[2].speedup > 1.0, "{:.2}", rows[2].speedup);
+    }
+}

@@ -1,0 +1,71 @@
+//! Experiment harness: one module per figure/table of the paper's
+//! evaluation section (§5). Each module exposes a `run(...)` returning
+//! structured rows and a `print(...)` that renders the same table/series
+//! the paper plots; the `cargo bench` targets and the `scalesim` CLI both
+//! drive these functions (EXPERIMENTS.md records the outputs).
+//!
+//! Testbed note (DESIGN.md §3): this container has one vCPU, so scaling
+//! figures report both the *measured* wall-clock of the real threaded run
+//! and the *modeled* multi-core runtime composed from natively measured
+//! per-cluster work and barrier costs (`stats::scaling`).
+
+pub mod ablation;
+pub mod fig09;
+pub mod fig10_11;
+pub mod fig12_13;
+pub mod fig14;
+pub mod fig15_16;
+
+/// Minimal fixed-width table printer shared by the harness modules.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let widths: Vec<usize> = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            rows.iter()
+                .map(|r| r.get(i).map(|c| c.len()).unwrap_or(0))
+                .chain(std::iter::once(h.len()))
+                .max()
+                .unwrap_or(0)
+        })
+        .collect();
+    let line = |cells: &[String]| {
+        let s: Vec<String> = cells
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        println!("  {}", s.join("  "));
+    };
+    line(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    for r in rows {
+        line(r);
+    }
+}
+
+/// Format a float with engineering-style précis.
+pub fn eng(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eng_format() {
+        assert_eq!(eng(12.0), "12.00");
+        assert_eq!(eng(1200.0), "1.20k");
+        assert_eq!(eng(3_400_000.0), "3.40M");
+        assert_eq!(eng(2.5e9), "2.50G");
+    }
+}

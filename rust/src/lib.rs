@@ -1,0 +1,49 @@
+//! # ScaleSimulator (reproduction)
+//!
+//! A fast, cycle-accurate *parallel* simulator for architectural
+//! exploration, reproducing Chalak et al., "ScaleSimulator: A Fast and
+//! Cycle-Accurate Parallel Simulator for Architectural Exploration"
+//! (CS.DC 2018).
+//!
+//! The library is organized around the paper's methodology:
+//!
+//! - [`engine`] — units, point-to-point ports, messages, and the 2.5-phase
+//!   cycle semantics (work → barrier → transfer → barrier), §2–§3.
+//! - [`sync`] — the ladder-barrier synchronization mechanism and the four
+//!   sync-point implementations compared in Fig 9, §4.
+//! - [`sched`] — unit→cluster partitioning for the two-level scheduler.
+//! - [`cpu`], [`mem`], [`noc`] — the CPU substrate: a tiny RISC ISA with a
+//!   functional model (QEMU substitute), light in-order and full
+//!   out-of-order performance models, caches with MESI coherence, and a
+//!   mesh NoC (§5.2–§5.3).
+//! - [`dc`] — the data-center model: multi-port switches, fat-tree
+//!   topologies, packet workloads (§5.4).
+//! - [`workload`] — synthetic OLTP and SPEC-like workload generators.
+//! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas analytic
+//!   models (`artifacts/*.hlo.txt`).
+//! - [`explore`] — gradient-based design-space exploration driven by the
+//!   differentiable analytic model, cross-validated against the
+//!   cycle-accurate simulator.
+//! - [`systems`] — ready-made model assemblies for the paper's evaluated
+//!   configurations.
+//! - [`harness`] — regenerates every figure/table of the paper's
+//!   evaluation section (see EXPERIMENTS.md).
+
+pub mod cpu;
+pub mod dc;
+pub mod engine;
+pub mod explore;
+pub mod harness;
+pub mod mem;
+pub mod noc;
+pub mod runtime;
+pub mod sched;
+pub mod stats;
+pub mod sync;
+pub mod systems;
+pub mod util;
+pub mod workload;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

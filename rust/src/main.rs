@@ -1,0 +1,242 @@
+//! `scalesim` — the launcher.
+//!
+//! Subcommands map 1:1 to the paper's evaluation section (see
+//! EXPERIMENTS.md) plus the exploration workflow:
+//!
+//! ```text
+//! scalesim barrier-bench   Figs 9-11: sync methods + barrier scaling
+//! scalesim oltp-light      Figs 12-13: OLTP on light cores
+//! scalesim ooo             Fig 14: OLTP/SPEC on OOO cores
+//! scalesim datacenter      Figs 15-16: fat-tree fabric
+//! scalesim ablation        design-choice ablations
+//! scalesim explore         gradient-based design-space exploration (AOT)
+//! ```
+//!
+//! Every subcommand accepts `--config file.toml` (flat TOML, see
+//! `util::config`) with CLI flags overriding file values.
+
+use scalesim::dc::{FatTreeCfg, TrafficCfg};
+use scalesim::harness::{ablation, fig09, fig10_11, fig12_13, fig14, fig15_16};
+use scalesim::sched::PartitionStrategy;
+use scalesim::sync::SpinMode;
+use scalesim::util::cli::Args;
+use scalesim::util::config::Config;
+use scalesim::workload::SpecKind;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: scalesim <command> [options]\n\
+         commands:\n\
+         \x20 barrier-bench  [--workers 1,2,4] [--cycles N] [--spin yield|pure]\n\
+         \x20 oltp-light     [--cores N] [--workers 1,2,4,8,16] [--strategy S]\n\
+         \x20 ooo            [--cores N] [--workers 1,2,4,8] [--workload oltp|stream|chase|compute|branchy]\n\
+         \x20 datacenter     [--k N] [--packets N] [--window N] [--workers 1,2,...,24] [--paper-scale]\n\
+         \x20 ablation       [--cores N]\n\
+         \x20 explore        [--k N] [--steps N] [--lr F] [--validate-packets N]\n\
+         \x20 version\n\
+         all commands accept --config file.toml (CLI overrides file)"
+    );
+    std::process::exit(2);
+}
+
+fn parse_list(s: &str) -> Result<Vec<usize>, String> {
+    s.split(',')
+        .map(|t| scalesim::util::cli::parse_u64(t.trim()).map(|v| v as usize))
+        .collect()
+}
+
+fn merged_config(args: &Args) -> Result<Config, String> {
+    let mut cfg = Config::new();
+    if let Some(path) = args.get("config") {
+        cfg.overlay(&Config::from_file(std::path::Path::new(path))?);
+    }
+    Ok(cfg)
+}
+
+fn cmd_barrier_bench(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &["workers", "cycles", "spin", "config"], &[])?;
+    let cfg = merged_config(&args)?;
+    let workers = parse_list(args.get_or(
+        "workers",
+        cfg.get("workers").unwrap_or("1,2,3,4,6,8"),
+    ))?;
+    let cycles = args.get_u64("cycles", cfg.get_u64("cycles", 20_000)?)?;
+    let spin = match args.get_or("spin", cfg.get("spin").unwrap_or("yield")) {
+        "pure" => SpinMode::Pure,
+        _ => SpinMode::Yield,
+    };
+    println!("# Fig 9: sync methods, {cycles} cycles per point");
+    let rows = fig09::run(&workers, cycles, spin);
+    fig09::print(&rows);
+    println!("\n# Figs 10-11: common-atomic at scale + modeled fixed-pool speedup");
+    let (points, _) = fig10_11::run(&workers, cycles, 1_000_000.0);
+    fig10_11::print(&points);
+    Ok(())
+}
+
+fn cmd_oltp_light(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &["cores", "workers", "strategy", "barrier", "config"], &[])?;
+    let cfg = merged_config(&args)?;
+    let cores = args.get_usize("cores", cfg.get_usize("cores", 32)?)?;
+    let workers = parse_list(args.get_or(
+        "workers",
+        cfg.get("workers").unwrap_or("1,2,4,8,16"),
+    ))?;
+    let strategy = match args.get("strategy").or(cfg.get("strategy")) {
+        None | Some("paper") => None,
+        Some(s) => Some(PartitionStrategy::parse(s, 42)?),
+    };
+    let bkind = args.get_or("barrier", cfg.get("barrier").unwrap_or("paper"));
+    println!("# barrier model: {bkind}");
+    let barrier = fig09::barrier_model(bkind, &workers, 5_000);
+    println!("# running OLTP light-CPU sweeps ({cores} cores)...");
+    let out = fig12_13::run(cores, &workers, &barrier, strategy);
+    fig12_13::print(&out);
+    Ok(())
+}
+
+fn cmd_ooo(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &["cores", "workers", "workload", "barrier", "config"], &[])?;
+    let cfg = merged_config(&args)?;
+    let cores = args.get_usize("cores", cfg.get_usize("cores", 8)?)?;
+    let workers = parse_list(args.get_or("workers", cfg.get("workers").unwrap_or("1,2,4,8")))?;
+    let wl = match args.get_or("workload", cfg.get("workload").unwrap_or("oltp")) {
+        "oltp" => fig14::Workload::Oltp,
+        other => fig14::Workload::Spec(SpecKind::parse(other)?),
+    };
+    let bkind = args.get_or("barrier", cfg.get("barrier").unwrap_or("paper"));
+    let barrier = fig09::barrier_model(bkind, &workers, 5_000);
+    println!("# running OOO sweeps ({cores} cores, barrier model: {bkind})...");
+    let rows = fig14::run(cores, &workers, &barrier, wl);
+    fig14::print(&rows);
+    Ok(())
+}
+
+fn cmd_datacenter(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(
+        argv,
+        &["k", "packets", "window", "workers", "buffer", "barrier", "config"],
+        &["paper-scale", "smoke"],
+    )?;
+    let cfg = merged_config(&args)?;
+    let mut ft = if args.flag("paper-scale") {
+        FatTreeCfg::paper_scale()
+    } else {
+        let mut d = fig15_16::default_cfg();
+        d.k = args.get_u64("k", cfg.get_u64("k", d.k as u64)?)? as u32;
+        d.buffer = args.get_usize("buffer", cfg.get_usize("buffer", d.buffer)?)?;
+        d.traffic = TrafficCfg {
+            seed: 0xDC,
+            hosts: 0,
+            packets: args.get_u64("packets", cfg.get_u64("packets", d.traffic.packets)?)?,
+            inject_window: args
+                .get_u64("window", cfg.get_u64("window", d.traffic.inject_window)?)?,
+        };
+        d
+    };
+    if args.flag("smoke") {
+        // Paper-scale fabrics are huge; a smoke run caps the workload and
+        // the injection window (simulated cycles scale with the window).
+        ft.traffic.packets = ft.traffic.packets.min(50_000);
+        ft.traffic.inject_window = ft.traffic.inject_window.min(2_000);
+    }
+    let workers = parse_list(args.get_or(
+        "workers",
+        cfg.get("workers").unwrap_or("1,2,4,8,16,24"),
+    ))?;
+    println!(
+        "# fat-tree k={} hosts={} switches={} packets={}",
+        ft.k,
+        ft.hosts(),
+        ft.switches(),
+        ft.traffic.packets
+    );
+    let bkind = args.get_or("barrier", cfg.get("barrier").unwrap_or("paper"));
+    let barrier = fig09::barrier_model(bkind, &workers, 5_000);
+    let rows = fig15_16::run(&ft, &workers, &barrier, PartitionStrategy::Contiguous);
+    fig15_16::print(&rows);
+    Ok(())
+}
+
+fn cmd_ablation(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &["cores", "config"], &[])?;
+    let cfg = merged_config(&args)?;
+    let cores = args.get_usize("cores", cfg.get_usize("cores", 4)?)?;
+    let r = ablation::same_cycle_relaxation(cores);
+    ablation::print_relaxation(&r);
+    let rows = ablation::partition_ablation(cores, 2.min(cores));
+    ablation::print_partition(&rows);
+    Ok(())
+}
+
+fn cmd_explore(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(
+        argv,
+        &["k", "steps", "lr", "validate-packets", "config"],
+        &[],
+    )?;
+    let cfg = merged_config(&args)?;
+    let k = args.get_f64("k", cfg.get_f64("k", 16.0)?)? as f32;
+    let steps = args.get_usize("steps", cfg.get_usize("steps", 60)?)?;
+    let lr = args.get_f64("lr", cfg.get_f64("lr", 0.05)?)? as f32;
+    let packets = args.get_u64("validate-packets", cfg.get_u64("validate-packets", 5_000)?)?;
+
+    let rt = scalesim::runtime::Runtime::cpu().map_err(|e| e.to_string())?;
+    println!("# PJRT platform: {}", rt.platform());
+    let dir = scalesim::runtime::artifacts::artifacts_dir();
+    let arts =
+        scalesim::runtime::Artifacts::load(&rt, &dir).map_err(|e| format!("{e:#}"))?;
+
+    let init = scalesim::explore::seed_batch(k, 1.0, 1.0);
+    let res = scalesim::explore::gradient_descent(&arts.fabric_grad, init, steps, lr)
+        .map_err(|e| e.to_string())?;
+    println!(
+        "# objective: {:.4} → {:.4} over {steps} steps",
+        res.objective_history[0],
+        res.objective_history.last().unwrap()
+    );
+    // Best config = the highest sustainable load the descent found.
+    let best = res
+        .params
+        .iter()
+        .max_by(|a, b| a[1].partial_cmp(&b[1]).unwrap())
+        .copied()
+        .unwrap();
+    println!(
+        "# best design point: k={} lam={:.3} buffer={:.2} link={} pipe={}",
+        best[0], best[1], best[2], best[3], best[4]
+    );
+    // Cross-validate against the cycle-accurate simulator (clamped to a
+    // tractable fabric for the validation run).
+    let v_cfg = [best[0].min(8.0), best[1].min(0.6), best[2], best[3], best[4]];
+    let v = scalesim::explore::cross_validate(&arts.fabric, v_cfg, packets, 0xE1)
+        .map_err(|e| e.to_string())?;
+    println!(
+        "# validation at k={}: surrogate={:.1} measured-mean={:.1} max-lat={} cycles={}",
+        v_cfg[0], v.surrogate_latency, v.measured_mean_latency, v.measured_p99, v.cycles
+    );
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let rest = &argv[1..];
+    let result = match cmd.as_str() {
+        "barrier-bench" => cmd_barrier_bench(rest),
+        "oltp-light" => cmd_oltp_light(rest),
+        "ooo" => cmd_ooo(rest),
+        "datacenter" => cmd_datacenter(rest),
+        "ablation" => cmd_ablation(rest),
+        "explore" => cmd_explore(rest),
+        "version" => {
+            println!("scalesim {}", scalesim::version());
+            Ok(())
+        }
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,252 @@
+//! Set-associative tag array with LRU replacement.
+//!
+//! Performance models track *tags and states only* — data values live in
+//! the functional model, so the PM caches never carry bytes. A `u8` state
+//! is stored per line; its meaning belongs to the owning unit (MESI for
+//! L2, valid/invalid for L1, present/dirty for L3).
+
+use crate::engine::Fnv;
+
+#[derive(Debug, Clone, Copy)]
+pub struct CacheCfg {
+    /// Total size in bytes.
+    pub size: usize,
+    /// Associativity.
+    pub ways: usize,
+    /// Line size (bytes, power of two).
+    pub line: usize,
+}
+
+impl CacheCfg {
+    pub fn new(size: usize, ways: usize) -> Self {
+        CacheCfg {
+            size,
+            ways,
+            line: 64,
+        }
+    }
+
+    pub fn sets(&self) -> usize {
+        (self.size / self.line / self.ways).max(1)
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Way {
+    tag: u64,
+    /// 0 = invalid; other values are owner-defined states.
+    state: u8,
+    /// LRU timestamp (monotone counter).
+    lru: u64,
+}
+
+/// The tag array. Addresses are byte addresses; lookups are by line.
+pub struct CacheArray {
+    cfg: CacheCfg,
+    sets: usize,
+    line_shift: u32,
+    ways: Vec<Way>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheArray {
+    pub fn new(cfg: CacheCfg) -> Self {
+        assert!(cfg.line.is_power_of_two());
+        assert!(cfg.ways >= 1);
+        let sets = cfg.sets();
+        assert!(sets.is_power_of_two(), "sets must be a power of two: {sets}");
+        CacheArray {
+            cfg,
+            sets,
+            line_shift: cfg.line.trailing_zeros(),
+            ways: vec![Way::default(); sets * cfg.ways],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u64) -> usize {
+        ((addr >> self.line_shift) as usize) & (self.sets - 1)
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr >> self.line_shift
+    }
+
+    /// Look up a line; on hit, touch LRU and return its state.
+    pub fn lookup(&mut self, addr: u64) -> Option<u8> {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        self.tick += 1;
+        let base = set * self.cfg.ways;
+        for w in &mut self.ways[base..base + self.cfg.ways] {
+            if w.state != 0 && w.tag == tag {
+                w.lru = self.tick;
+                self.hits += 1;
+                return Some(w.state);
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Look up without disturbing LRU or hit/miss counters.
+    pub fn probe(&self, addr: u64) -> Option<u8> {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let base = set * self.cfg.ways;
+        self.ways[base..base + self.cfg.ways]
+            .iter()
+            .find(|w| w.state != 0 && w.tag == tag)
+            .map(|w| w.state)
+    }
+
+    /// Update the state of a resident line. Panics if absent.
+    pub fn set_state(&mut self, addr: u64, state: u8) {
+        assert_ne!(state, 0, "use invalidate() to drop a line");
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let base = set * self.cfg.ways;
+        for w in &mut self.ways[base..base + self.cfg.ways] {
+            if w.state != 0 && w.tag == tag {
+                w.state = state;
+                return;
+            }
+        }
+        panic!("set_state on absent line {addr:#x}");
+    }
+
+    /// Drop a line if present; returns its previous state.
+    pub fn invalidate(&mut self, addr: u64) -> Option<u8> {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let base = set * self.cfg.ways;
+        for w in &mut self.ways[base..base + self.cfg.ways] {
+            if w.state != 0 && w.tag == tag {
+                let s = w.state;
+                w.state = 0;
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    /// Insert a line with `state`, evicting the LRU way if the set is
+    /// full. Returns the evicted `(line_addr, state)` if any.
+    pub fn insert(&mut self, addr: u64, state: u8) -> Option<(u64, u8)> {
+        assert_ne!(state, 0);
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        self.tick += 1;
+        let base = set * self.cfg.ways;
+        // Already present? Just update.
+        for w in &mut self.ways[base..base + self.cfg.ways] {
+            if w.state != 0 && w.tag == tag {
+                w.state = state;
+                w.lru = self.tick;
+                return None;
+            }
+        }
+        // Free way?
+        for w in &mut self.ways[base..base + self.cfg.ways] {
+            if w.state == 0 {
+                *w = Way {
+                    tag,
+                    state,
+                    lru: self.tick,
+                };
+                return None;
+            }
+        }
+        // Evict LRU.
+        let victim = (base..base + self.cfg.ways)
+            .min_by_key(|&i| self.ways[i].lru)
+            .unwrap();
+        let old = self.ways[victim];
+        self.ways[victim] = Way {
+            tag,
+            state,
+            lru: self.tick,
+        };
+        Some((old.tag << self.line_shift, old.state))
+    }
+
+    pub fn line_bytes(&self) -> usize {
+        self.cfg.line
+    }
+
+    pub fn state_hash(&self, h: &mut Fnv) {
+        for w in &self.ways {
+            if w.state != 0 {
+                h.write_u64(w.tag);
+                h.write_u64(w.state as u64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CacheArray {
+        // 4 sets x 2 ways x 64B = 512B
+        CacheArray::new(CacheCfg::new(512, 2))
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = small();
+        assert_eq!(c.lookup(0x1000), None);
+        c.insert(0x1000, 1);
+        assert_eq!(c.lookup(0x1000), Some(1));
+        assert_eq!(c.lookup(0x1004), Some(1), "same line, different word");
+        assert_eq!((c.hits, c.misses), (2, 1));
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = small();
+        // Three lines mapping to the same set (stride = sets*line = 256).
+        c.insert(0x0000, 1);
+        c.insert(0x0100, 1);
+        // Touch 0x0000 so 0x0100 is LRU.
+        c.lookup(0x0000);
+        let ev = c.insert(0x0200, 1);
+        assert_eq!(ev, Some((0x0100, 1)));
+        assert!(c.probe(0x0000).is_some());
+        assert!(c.probe(0x0100).is_none());
+    }
+
+    #[test]
+    fn invalidate_and_state_update() {
+        let mut c = small();
+        c.insert(0x40, 2);
+        c.set_state(0x40, 3);
+        assert_eq!(c.probe(0x40), Some(3));
+        assert_eq!(c.invalidate(0x40), Some(3));
+        assert_eq!(c.invalidate(0x40), None);
+        assert_eq!(c.probe(0x40), None);
+    }
+
+    #[test]
+    fn insert_present_updates_in_place() {
+        let mut c = small();
+        c.insert(0x80, 1);
+        let ev = c.insert(0x80, 2);
+        assert!(ev.is_none());
+        assert_eq!(c.probe(0x80), Some(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "absent line")]
+    fn set_state_absent_panics() {
+        let mut c = small();
+        c.set_state(0xdead40, 1);
+    }
+}

@@ -1,0 +1,414 @@
+//! Shared L3 bank + MESI directory — the serialization point of the
+//! coherence protocol.
+//!
+//! Each bank owns an address stripe (`(line >> 6) % nbanks`). Per line the
+//! directory tracks either an exclusive owner (E or M at the owner — the
+//! directory cannot tell, and treats both as "owned") or a set of sharers.
+//! A line with an in-flight transaction is *busy*: later requests for it
+//! queue in arrival order, which gives the protocol its global order
+//! without any locks — exactly the design-for-parallelism discipline the
+//! paper's methodology prescribes.
+//!
+//! Silent clean evictions at L2 (S and E lines drop without notice) make
+//! the sharer/owner view conservative: the directory may Inv/FwdWb a cache
+//! that no longer holds the line, and clients ack regardless.
+
+use super::cache::{CacheArray, CacheCfg};
+use super::msg::MemMsg;
+use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use crate::noc::net_b;
+use crate::stats::StatsMap;
+use std::collections::{BTreeMap, VecDeque};
+
+const CLEAN: u8 = 1;
+const DIRTY: u8 = 2;
+
+/// Stable directory entry.
+#[derive(Debug, Clone, Default)]
+struct DirEntry {
+    /// Exclusive owner core (holds E or M).
+    owner: Option<u32>,
+    /// Sharer cores (bitmask; asserted ≤ 64 cores).
+    sharers: u64,
+}
+
+impl DirEntry {
+    fn is_empty(&self) -> bool {
+        self.owner.is_none() && self.sharers == 0
+    }
+}
+
+/// In-flight transaction of a busy line.
+#[derive(Debug)]
+enum Busy {
+    /// Waiting for a DRAM fetch; then serve `first` (GetS or GetM).
+    Fetch { first: Msg },
+    /// FwdWbS sent to the owner; on WbData grant DataS to the requester.
+    AwaitWbS { requester: u32, old_owner: u32 },
+    /// FwdWbI sent to the owner; on WbData grant DataM to the requester.
+    AwaitWbI { requester: u32 },
+    /// Invs sent to sharers; on the last InvAck grant DataM.
+    CollectAcks { requester: u32, remaining: u32 },
+}
+
+struct BusyLine {
+    state: Busy,
+    /// Requests that arrived while busy, replayed in order.
+    waiting: VecDeque<Msg>,
+}
+
+pub struct DirBank {
+    pub bank: u32,
+    node: u32,
+    /// NoC node of each core's L2 (for Inv/FwdWb/Data routing).
+    core_nodes: Vec<u32>,
+    /// L3 data array (tag-only, clean/dirty).
+    array: CacheArray,
+    dir: BTreeMap<u64, DirEntry>,
+    busy: BTreeMap<u64, BusyLine>,
+    from_net: InPort,
+    to_net: OutPort,
+    to_dram: OutPort,
+    from_dram: InPort,
+    net_q: VecDeque<Msg>,
+    dram_q: VecDeque<Msg>,
+    /// Messages to re-process (from lines that un-busied).
+    replay_q: VecDeque<Msg>,
+    width: usize,
+    // stats
+    gets: u64,
+    getm: u64,
+    putm: u64,
+    invs_sent: u64,
+    fwds_sent: u64,
+    dram_fetches: u64,
+    l3_hits: u64,
+}
+
+impl DirBank {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        bank: u32,
+        node: u32,
+        core_nodes: Vec<u32>,
+        cfg: CacheCfg,
+        from_net: InPort,
+        to_net: OutPort,
+        to_dram: OutPort,
+        from_dram: InPort,
+    ) -> Self {
+        assert!(core_nodes.len() <= 64, "sharer bitmask is 64-wide");
+        DirBank {
+            bank,
+            node,
+            core_nodes,
+            array: CacheArray::new(cfg),
+            dir: BTreeMap::new(),
+            busy: BTreeMap::new(),
+            from_net,
+            to_net,
+            to_dram,
+            from_dram,
+            net_q: VecDeque::new(),
+            dram_q: VecDeque::new(),
+            replay_q: VecDeque::new(),
+            width: 2,
+            gets: 0,
+            getm: 0,
+            putm: 0,
+            invs_sent: 0,
+            fwds_sent: 0,
+            dram_fetches: 0,
+            l3_hits: 0,
+        }
+    }
+
+    fn send_core(&mut self, kind: MemMsg, line: u64, core: u32) {
+        let mut m = Msg::with(kind as u32, line, 0, core as u64);
+        m.b = net_b(self.node, self.core_nodes[core as usize]);
+        self.net_q.push_back(m);
+    }
+
+    fn send_dram(&mut self, kind: MemMsg, line: u64) {
+        self.dram_q.push_back(Msg::with(kind as u32, line, 0, 0));
+    }
+
+    fn flush_queues(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(m) = self.net_q.pop_front() {
+            if let Err(m) = ctx.send(self.to_net, m) {
+                self.net_q.push_front(m);
+                break;
+            }
+        }
+        while let Some(m) = self.dram_q.pop_front() {
+            if let Err(m) = ctx.send(self.to_dram, m) {
+                self.dram_q.push_front(m);
+                break;
+            }
+        }
+    }
+
+    /// Insert into the L3 array, writing back any dirty victim. Directory
+    /// entries are full-map and survive L3 evictions.
+    fn l3_insert(&mut self, line: u64, state: u8) {
+        if let Some((victim, vstate)) = self.array.insert(line, state) {
+            if vstate == DIRTY {
+                self.send_dram(MemMsg::DramWr, victim);
+            }
+        }
+    }
+
+    /// Release a busy line, queueing its waiters for replay.
+    fn release(&mut self, waiting: VecDeque<Msg>) {
+        for m in waiting {
+            self.replay_q.push_back(m);
+        }
+    }
+
+    /// Serve a GetS/GetM whose line is present in L3 with a stable,
+    /// owner-less directory state.
+    fn serve_with_data(&mut self, m: &Msg) {
+        let line = m.a;
+        let core = m.c as u32;
+        let (owner, sharers) = {
+            let e = self.dir.entry(line).or_default();
+            (e.owner, e.sharers)
+        };
+        debug_assert!(owner.is_none(), "serve_with_data with live owner");
+        match MemMsg::from_u32(m.kind) {
+            Some(MemMsg::GetS) => {
+                if sharers == 0 {
+                    // Exclusive-clean grant; track grantee as owner.
+                    self.dir.get_mut(&line).unwrap().owner = Some(core);
+                    self.send_core(MemMsg::DataE, line, core);
+                } else {
+                    self.dir.get_mut(&line).unwrap().sharers |= 1 << core;
+                    self.send_core(MemMsg::DataS, line, core);
+                }
+            }
+            Some(MemMsg::GetM) => {
+                let invs = sharers & !(1u64 << core);
+                {
+                    let e = self.dir.get_mut(&line).unwrap();
+                    e.sharers = 0;
+                    e.owner = Some(core);
+                }
+                if invs == 0 {
+                    self.send_core(MemMsg::DataM, line, core);
+                } else {
+                    self.busy.insert(
+                        line,
+                        BusyLine {
+                            state: Busy::CollectAcks {
+                                requester: core,
+                                remaining: invs.count_ones(),
+                            },
+                            waiting: VecDeque::new(),
+                        },
+                    );
+                    for c in 0..64u32 {
+                        if invs & (1u64 << c) != 0 {
+                            self.invs_sent += 1;
+                            self.send_core(MemMsg::Inv, line, c);
+                        }
+                    }
+                }
+            }
+            other => unreachable!("serve_with_data: {other:?}"),
+        }
+    }
+
+    fn handle_request(&mut self, m: Msg) {
+        let line = m.a;
+        let core = m.c as u32;
+        // Busy line: queue in arrival order.
+        if let Some(b) = self.busy.get_mut(&line) {
+            b.waiting.push_back(m);
+            return;
+        }
+        match MemMsg::from_u32(m.kind) {
+            Some(MemMsg::GetS) | Some(MemMsg::GetM) => {
+                let is_getm = m.kind == MemMsg::GetM as u32;
+                if is_getm {
+                    self.getm += 1;
+                } else {
+                    self.gets += 1;
+                }
+                let mut owner = self.dir.get(&line).and_then(|e| e.owner);
+                if owner == Some(core) {
+                    // The recorded owner lost its copy via a silent clean
+                    // (E-state) eviction and is re-requesting.
+                    self.dir.get_mut(&line).unwrap().owner = None;
+                    owner = None;
+                }
+                if let Some(o) = owner {
+                    // Recall from the owner, then grant.
+                    self.fwds_sent += 1;
+                    let (fwd, busy) = if is_getm {
+                        (MemMsg::FwdWbI, Busy::AwaitWbI { requester: core })
+                    } else {
+                        (
+                            MemMsg::FwdWbS,
+                            Busy::AwaitWbS {
+                                requester: core,
+                                old_owner: o,
+                            },
+                        )
+                    };
+                    self.send_core(fwd, line, o);
+                    self.busy.insert(
+                        line,
+                        BusyLine {
+                            state: busy,
+                            waiting: VecDeque::new(),
+                        },
+                    );
+                } else if self.array.lookup(line).is_some() {
+                    self.l3_hits += 1;
+                    self.serve_with_data(&m);
+                } else {
+                    // L3 miss: fetch from DRAM first.
+                    self.dram_fetches += 1;
+                    self.send_dram(MemMsg::DramRd, line);
+                    self.busy.insert(
+                        line,
+                        BusyLine {
+                            state: Busy::Fetch { first: m },
+                            waiting: VecDeque::new(),
+                        },
+                    );
+                }
+            }
+            Some(MemMsg::PutM) => {
+                self.putm += 1;
+                let was_owner = {
+                    let e = self.dir.entry(line).or_default();
+                    if e.owner == Some(core) {
+                        e.owner = None;
+                        true
+                    } else {
+                        false // stale PutM: ownership already moved
+                    }
+                };
+                if was_owner {
+                    self.l3_insert(line, DIRTY);
+                }
+                if self.dir.get(&line).is_some_and(|e| e.is_empty()) {
+                    self.dir.remove(&line);
+                }
+                self.send_core(MemMsg::PutAck, line, core);
+            }
+            other => panic!("dir bank {}: unexpected request {:?}", self.bank, other),
+        }
+    }
+
+    fn handle_response(&mut self, m: Msg) {
+        let line = m.a;
+        let b = self
+            .busy
+            .remove(&line)
+            .unwrap_or_else(|| panic!("bank {}: response for non-busy line {line:#x}", self.bank));
+        match (MemMsg::from_u32(m.kind), b.state) {
+            (Some(MemMsg::WbData), Busy::AwaitWbS { requester, old_owner }) => {
+                {
+                    let e = self.dir.get_mut(&line).expect("owned line has entry");
+                    e.owner = None;
+                    e.sharers = (1u64 << old_owner) | (1u64 << requester);
+                }
+                self.l3_insert(line, DIRTY);
+                self.send_core(MemMsg::DataS, line, requester);
+                self.release(b.waiting);
+            }
+            (Some(MemMsg::WbData), Busy::AwaitWbI { requester }) => {
+                {
+                    let e = self.dir.get_mut(&line).expect("owned line has entry");
+                    e.owner = Some(requester);
+                    e.sharers = 0;
+                }
+                self.l3_insert(line, DIRTY);
+                self.send_core(MemMsg::DataM, line, requester);
+                self.release(b.waiting);
+            }
+            (Some(MemMsg::InvAck), Busy::CollectAcks { requester, remaining }) => {
+                if remaining == 1 {
+                    self.send_core(MemMsg::DataM, line, requester);
+                    self.release(b.waiting);
+                } else {
+                    self.busy.insert(
+                        line,
+                        BusyLine {
+                            state: Busy::CollectAcks {
+                                requester,
+                                remaining: remaining - 1,
+                            },
+                            waiting: b.waiting,
+                        },
+                    );
+                }
+            }
+            (Some(MemMsg::DramResp), Busy::Fetch { first }) => {
+                self.l3_insert(line, CLEAN);
+                self.array.lookup(line); // touch (hit by construction)
+                self.serve_with_data(&first);
+                self.release(b.waiting);
+            }
+            (k, s) => panic!("dir bank {}: response {k:?} in state {s:?}", self.bank),
+        }
+    }
+}
+
+impl Unit for DirBank {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        self.flush_queues(ctx);
+        // DRAM responses.
+        while let Some(m) = ctx.recv(self.from_dram) {
+            debug_assert_eq!(m.kind, MemMsg::DramResp as u32);
+            self.handle_response(m);
+        }
+        // Replays from lines that un-busied.
+        while let Some(m) = self.replay_q.pop_front() {
+            self.handle_request(m);
+        }
+        // New network messages (bounded width).
+        for _ in 0..self.width {
+            let Some(m) = ctx.recv(self.from_net) else { break };
+            match MemMsg::from_u32(m.kind) {
+                Some(MemMsg::GetS) | Some(MemMsg::GetM) | Some(MemMsg::PutM) => {
+                    self.handle_request(m)
+                }
+                Some(MemMsg::WbData) | Some(MemMsg::InvAck) => self.handle_response(m),
+                other => panic!("dir bank {}: unexpected net {:?}", self.bank, other),
+            }
+        }
+        self.flush_queues(ctx);
+    }
+
+    fn stats(&self, out: &mut StatsMap) {
+        out.add("dir.gets", self.gets);
+        out.add("dir.getm", self.getm);
+        out.add("dir.putm", self.putm);
+        out.add("dir.invs_sent", self.invs_sent);
+        out.add("dir.fwds_sent", self.fwds_sent);
+        out.add("dir.dram_fetches", self.dram_fetches);
+        out.add("dir.l3_hits", self.l3_hits);
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.gets);
+        h.write_u64(self.getm);
+        h.write_u64(self.invs_sent);
+        for (&line, e) in &self.dir {
+            h.write_u64(line);
+            h.write_u64(e.sharers);
+            h.write_u64(e.owner.map(|o| o as u64 + 1).unwrap_or(0));
+        }
+        self.array.state_hash(h);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.busy.is_empty()
+            && self.net_q.is_empty()
+            && self.dram_q.is_empty()
+            && self.replay_q.is_empty()
+    }
+}

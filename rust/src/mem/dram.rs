@@ -1,0 +1,83 @@
+//! DRAM channel model: fixed access latency plus a service-rate bound.
+//!
+//! One `DramChannel` unit serves one L3 bank over a port pair. Requests
+//! are pipelined: up to `bw` requests enter service per cycle, each
+//! completing `latency` cycles later (FIFO, so completion order is
+//! deterministic).
+
+use super::msg::MemMsg;
+use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use crate::stats::StatsMap;
+use std::collections::VecDeque;
+
+pub struct DramChannel {
+    pub channel: u32,
+    from_bank: InPort,
+    to_bank: OutPort,
+    /// Access latency in cycles.
+    latency: u64,
+    /// Requests accepted per cycle.
+    bw: usize,
+    /// (ready_cycle, line) of in-service reads.
+    in_service: VecDeque<(u64, u64)>,
+    reads: u64,
+    writes: u64,
+}
+
+impl DramChannel {
+    pub fn new(channel: u32, from_bank: InPort, to_bank: OutPort, latency: u64, bw: usize) -> Self {
+        DramChannel {
+            channel,
+            from_bank,
+            to_bank,
+            latency,
+            bw: bw.max(1),
+            in_service: VecDeque::new(),
+            reads: 0,
+            writes: 0,
+        }
+    }
+}
+
+impl Unit for DramChannel {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        // Complete ready reads (FIFO; constant latency keeps order).
+        while let Some(&(ready, line)) = self.in_service.front() {
+            if ready > ctx.cycle || !ctx.out_vacant(self.to_bank) {
+                break;
+            }
+            self.in_service.pop_front();
+            ctx.send(self.to_bank, Msg::with(MemMsg::DramResp as u32, line, 0, 0))
+                .expect("vacancy checked");
+        }
+        // Accept new requests.
+        for _ in 0..self.bw {
+            let Some(m) = ctx.recv(self.from_bank) else { break };
+            match MemMsg::from_u32(m.kind) {
+                Some(MemMsg::DramRd) => {
+                    self.reads += 1;
+                    self.in_service.push_back((ctx.cycle + self.latency, m.a));
+                }
+                Some(MemMsg::DramWr) => {
+                    self.writes += 1; // posted write: no response
+                }
+                other => panic!("dram {}: unexpected {:?}", self.channel, other),
+            }
+        }
+    }
+
+    fn stats(&self, out: &mut StatsMap) {
+        out.add("dram.reads", self.reads);
+        out.add("dram.writes", self.writes);
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.reads);
+        h.write_u64(self.writes);
+        h.write_u64(self.in_service.len() as u64);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.in_service.is_empty()
+    }
+}

@@ -1,0 +1,218 @@
+//! L1 data cache unit: per-core, tag-only, write-through, read-allocate.
+//!
+//! Keeping L1 write-through (stores always forward to L2) means L1 never
+//! holds dirty data, so coherence only has to reach L2; L2 back-invalidates
+//! L1 (`L1Inv`) whenever it loses a line, preserving inclusion.
+
+use super::cache::{CacheArray, CacheCfg};
+use super::msg::{line_of, MemMsg};
+use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use crate::stats::StatsMap;
+use std::collections::VecDeque;
+
+const VALID: u8 = 1;
+
+/// One outstanding miss: the line plus the core requests waiting on it.
+struct Mshr {
+    line: u64,
+    /// (addr, tag) of pending core loads.
+    waiting: Vec<(u64, u64)>,
+}
+
+pub struct L1Cache {
+    pub core: u32,
+    array: CacheArray,
+    from_core: InPort,
+    to_core: OutPort,
+    to_l2: OutPort,
+    from_l2: InPort,
+    mshrs: Vec<Mshr>,
+    max_mshrs: usize,
+    /// Core-bound responses that found `to_core` full.
+    resp_q: VecDeque<Msg>,
+    /// L2-bound requests that found `to_l2` full.
+    req_q: VecDeque<Msg>,
+    /// Requests the core can have processed per cycle.
+    width: usize,
+    /// Tags of in-flight atomic RMWs: their L1WriteAck must surface as a
+    /// CoreResp (the core blocks on atomics), not a store ack.
+    amo_tags: Vec<u64>,
+    // stats
+    loads: u64,
+    stores: u64,
+    amos: u64,
+    invals: u64,
+}
+
+impl L1Cache {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        core: u32,
+        cfg: CacheCfg,
+        from_core: InPort,
+        to_core: OutPort,
+        to_l2: OutPort,
+        from_l2: InPort,
+    ) -> Self {
+        L1Cache {
+            core,
+            array: CacheArray::new(cfg),
+            from_core,
+            to_core,
+            to_l2,
+            from_l2,
+            mshrs: Vec::new(),
+            max_mshrs: 4,
+            resp_q: VecDeque::new(),
+            req_q: VecDeque::new(),
+            width: 2,
+            amo_tags: Vec::new(),
+            loads: 0,
+            stores: 0,
+            amos: 0,
+            invals: 0,
+        }
+    }
+
+    fn push_resp(&mut self, ctx: &mut Ctx<'_>, m: Msg) {
+        if self.resp_q.is_empty() {
+            if let Err(m) = ctx.send(self.to_core, m) {
+                self.resp_q.push_back(m);
+            }
+        } else {
+            self.resp_q.push_back(m);
+        }
+    }
+
+    fn push_req(&mut self, ctx: &mut Ctx<'_>, m: Msg) {
+        if self.req_q.is_empty() {
+            if let Err(m) = ctx.send(self.to_l2, m) {
+                self.req_q.push_back(m);
+            }
+        } else {
+            self.req_q.push_back(m);
+        }
+    }
+
+    fn flush_queues(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(m) = self.resp_q.pop_front() {
+            if let Err(m) = ctx.send(self.to_core, m) {
+                self.resp_q.push_front(m);
+                break;
+            }
+        }
+        while let Some(m) = self.req_q.pop_front() {
+            if let Err(m) = ctx.send(self.to_l2, m) {
+                self.req_q.push_front(m);
+                break;
+            }
+        }
+    }
+}
+
+impl Unit for L1Cache {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        self.flush_queues(ctx);
+        // 1. L2 responses (drain all ready).
+        while let Some(m) = ctx.recv(self.from_l2) {
+            match MemMsg::from_u32(m.kind) {
+                Some(MemMsg::L1Fill) => {
+                    let line = m.a;
+                    self.array.insert(line, VALID);
+                    if let Some(pos) = self.mshrs.iter().position(|h| h.line == line) {
+                        let mshr = self.mshrs.swap_remove(pos);
+                        for (addr, tag) in mshr.waiting {
+                            let resp = Msg::with(MemMsg::CoreResp as u32, addr, 0, tag);
+                            self.push_resp(ctx, resp);
+                        }
+                    }
+                }
+                Some(MemMsg::L1WriteAck) => {
+                    let kind = if let Some(pos) = self.amo_tags.iter().position(|&t| t == m.c) {
+                        self.amo_tags.swap_remove(pos);
+                        MemMsg::CoreResp
+                    } else {
+                        MemMsg::CoreStAck
+                    };
+                    let resp = Msg::with(kind as u32, m.a, m.b, m.c);
+                    self.push_resp(ctx, resp);
+                }
+                Some(MemMsg::L1Inv) => {
+                    self.array.invalidate(m.a);
+                    self.invals += 1;
+                }
+                other => panic!("L1 core {}: unexpected {:?}", self.core, other),
+            }
+        }
+        // 2. Core requests (bounded width, in order, with back pressure).
+        for _ in 0..self.width {
+            let Some(kind) = ctx.peek(self.from_core).map(|m| m.kind) else {
+                break;
+            };
+            match MemMsg::from_u32(kind) {
+                Some(MemMsg::CoreLd) => {
+                    let line = line_of(ctx.peek(self.from_core).unwrap().a);
+                    if self.array.lookup(line).is_some() {
+                        let m = ctx.recv(self.from_core).unwrap();
+                        self.loads += 1;
+                        let resp = Msg::with(MemMsg::CoreResp as u32, m.a, 0, m.c);
+                        self.push_resp(ctx, resp);
+                    } else if let Some(h) = self.mshrs.iter_mut().find(|h| h.line == line) {
+                        let m = ctx.recv(self.from_core).unwrap();
+                        self.loads += 1;
+                        h.waiting.push((m.a, m.c));
+                    } else if self.mshrs.len() < self.max_mshrs {
+                        let m = ctx.recv(self.from_core).unwrap();
+                        self.loads += 1;
+                        self.mshrs.push(Mshr {
+                            line,
+                            waiting: vec![(m.a, m.c)],
+                        });
+                        let req = Msg::with(MemMsg::L1Read as u32, line, 0, self.core as u64);
+                        self.push_req(ctx, req);
+                    } else {
+                        break; // MSHRs full: stall the core (implicit BP).
+                    }
+                }
+                Some(MemMsg::CoreSt) | Some(MemMsg::CoreAmo) => {
+                    // Write-through / RMW: forward to L2, ack on completion.
+                    let m = ctx.recv(self.from_core).unwrap();
+                    let is_amo = m.kind == MemMsg::CoreAmo as u32;
+                    if is_amo {
+                        self.amos += 1;
+                    } else {
+                        self.stores += 1;
+                    }
+                    let fwd_kind = if is_amo { MemMsg::L1Amo } else { MemMsg::L1Write };
+                    if is_amo {
+                        self.amo_tags.push(m.c);
+                    }
+                    let req = Msg::with(fwd_kind as u32, line_of(m.a), m.a, m.c);
+                    self.push_req(ctx, req);
+                }
+                other => panic!("L1 core {}: unexpected core req {:?}", self.core, other),
+            }
+        }
+    }
+
+    fn stats(&self, out: &mut StatsMap) {
+        out.add("l1.loads", self.loads);
+        out.add("l1.stores", self.stores);
+        out.add("l1.amos", self.amos);
+        out.add("l1.hits", self.array.hits);
+        out.add("l1.misses", self.array.misses);
+        out.add("l1.invals", self.invals);
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.loads);
+        h.write_u64(self.stores);
+        h.write_u64(self.array.hits);
+        h.write_u64(self.array.misses);
+        self.array.state_hash(h);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.mshrs.is_empty() && self.resp_q.is_empty() && self.req_q.is_empty()
+    }
+}

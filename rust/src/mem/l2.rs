@@ -1,0 +1,324 @@
+//! L2 cache unit: per-core, write-back, inclusive of L1 — the MESI
+//! *client* side of the directory protocol.
+//!
+//! Stable states live in the tag array (S/E/M); transient states live in a
+//! small transaction table keyed by line. The directory is the
+//! serialization point, so the client only needs three transaction kinds:
+//! awaiting a read fill (`WaitS`), awaiting a write fill/upgrade (`WaitM`),
+//! and awaiting a writeback ack (`WaitPutAck`).
+
+use super::cache::{CacheArray, CacheCfg};
+use super::msg::MemMsg;
+use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use crate::noc::net_b;
+use crate::stats::StatsMap;
+use std::collections::{BTreeMap, VecDeque};
+
+const S: u8 = 1;
+const E: u8 = 2;
+const M: u8 = 3;
+
+/// A queued L1 request: (kind, line, original addr, tag).
+#[derive(Debug, Clone, Copy)]
+struct PendingReq {
+    kind: MemMsg,
+    addr: u64,
+    tag: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TransKind {
+    /// GetS sent; waiting for DataS/DataE.
+    WaitS,
+    /// GetM sent; waiting for DataM.
+    WaitM,
+    /// PutM sent; waiting for PutAck.
+    WaitPutAck,
+}
+
+struct Trans {
+    kind: TransKind,
+    pending: Vec<PendingReq>,
+}
+
+pub struct L2Cache {
+    pub core: u32,
+    /// This unit's NoC node.
+    node: u32,
+    /// Home bank node for each line: `bank_nodes[(line >> 6) % nbanks]`.
+    bank_nodes: Vec<u32>,
+    array: CacheArray,
+    from_l1: InPort,
+    to_l1: OutPort,
+    to_net: OutPort,
+    from_net: InPort,
+    trans: BTreeMap<u64, Trans>,
+    max_trans: usize,
+    l1_q: VecDeque<Msg>,
+    net_q: VecDeque<Msg>,
+    width: usize,
+    // stats
+    gets_sent: u64,
+    getm_sent: u64,
+    putm_sent: u64,
+    invs_received: u64,
+    fwds_received: u64,
+}
+
+impl L2Cache {
+    pub fn new(
+        core: u32,
+        node: u32,
+        bank_nodes: Vec<u32>,
+        cfg: CacheCfg,
+        from_l1: InPort,
+        to_l1: OutPort,
+        to_net: OutPort,
+        from_net: InPort,
+    ) -> Self {
+        L2Cache {
+            core,
+            node,
+            bank_nodes,
+            array: CacheArray::new(cfg),
+            from_l1,
+            to_l1,
+            to_net,
+            from_net,
+            trans: BTreeMap::new(),
+            max_trans: 8,
+            l1_q: VecDeque::new(),
+            net_q: VecDeque::new(),
+            width: 2,
+            gets_sent: 0,
+            getm_sent: 0,
+            putm_sent: 0,
+            invs_received: 0,
+            fwds_received: 0,
+        }
+    }
+
+    fn home_node(&self, line: u64) -> u32 {
+        self.bank_nodes[((line >> 6) as usize) % self.bank_nodes.len()]
+    }
+
+    fn send_l1(&mut self, m: Msg) {
+        self.l1_q.push_back(m);
+    }
+
+    fn send_net(&mut self, kind: MemMsg, line: u64, aux: u64) {
+        let mut m = Msg::with(kind as u32, line, 0, aux);
+        m.b = net_b(self.node, self.home_node(line));
+        self.net_q.push_back(m);
+    }
+
+    fn flush_queues(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(m) = self.l1_q.pop_front() {
+            if let Err(m) = ctx.send(self.to_l1, m) {
+                self.l1_q.push_front(m);
+                break;
+            }
+        }
+        while let Some(m) = self.net_q.pop_front() {
+            if let Err(m) = ctx.send(self.to_net, m) {
+                self.net_q.push_front(m);
+                break;
+            }
+        }
+    }
+
+    /// Install a fill; handle any eviction (M lines write back, clean
+    /// lines drop silently, and L1 is back-invalidated for inclusion).
+    fn install(&mut self, line: u64, state: u8) {
+        if let Some((victim, vstate)) = self.array.insert(line, state) {
+            // Inclusion: L1 must drop the victim too.
+            self.send_l1(Msg::with(MemMsg::L1Inv as u32, victim, 0, 0));
+            if vstate == M {
+                self.putm_sent += 1;
+                self.send_net(MemMsg::PutM, victim, self.core as u64);
+                self.trans.insert(
+                    victim,
+                    Trans {
+                        kind: TransKind::WaitPutAck,
+                        pending: Vec::new(),
+                    },
+                );
+            }
+        }
+    }
+
+    /// Handle one L1 request; returns false if it must stall (transaction
+    /// table full).
+    fn handle_l1_req(&mut self, req: PendingReq) -> bool {
+        let line = req.addr & !63;
+        if let Some(t) = self.trans.get_mut(&line) {
+            t.pending.push(req);
+            return true;
+        }
+        let state = self.array.lookup(line);
+        match req.kind {
+            MemMsg::L1Read => match state {
+                Some(_) => {
+                    self.send_l1(Msg::with(MemMsg::L1Fill as u32, line, 0, req.tag));
+                }
+                None => {
+                    if self.trans.len() >= self.max_trans {
+                        return false;
+                    }
+                    self.gets_sent += 1;
+                    self.send_net(MemMsg::GetS, line, self.core as u64);
+                    self.trans.insert(
+                        line,
+                        Trans {
+                            kind: TransKind::WaitS,
+                            pending: vec![req],
+                        },
+                    );
+                }
+            },
+            MemMsg::L1Write | MemMsg::L1Amo => match state {
+                Some(M) => {
+                    self.send_l1(Msg::with(MemMsg::L1WriteAck as u32, req.addr & !63, req.addr, req.tag));
+                }
+                Some(E) => {
+                    // Silent E→M upgrade.
+                    self.array.set_state(line, M);
+                    self.send_l1(Msg::with(MemMsg::L1WriteAck as u32, line, req.addr, req.tag));
+                }
+                Some(_) | None => {
+                    // S upgrade or I miss: need M from the directory.
+                    if self.trans.len() >= self.max_trans {
+                        return false;
+                    }
+                    self.getm_sent += 1;
+                    self.send_net(MemMsg::GetM, line, self.core as u64);
+                    self.trans.insert(
+                        line,
+                        Trans {
+                            kind: TransKind::WaitM,
+                            pending: vec![req],
+                        },
+                    );
+                }
+            },
+            other => panic!("L2 core {}: unexpected L1 req {:?}", self.core, other),
+        }
+        true
+    }
+
+    /// Re-run the pending requests of a completed transaction.
+    fn replay(&mut self, pending: Vec<PendingReq>) {
+        for req in pending {
+            // Table slots were freed by the caller; these re-entries can
+            // only block on a *new* miss, which is fine — handle_l1_req
+            // requeues them in the fresh transaction.
+            let ok = self.handle_l1_req(req);
+            debug_assert!(ok, "replay must not exhaust transaction table");
+        }
+    }
+
+    fn handle_net(&mut self, m: Msg) {
+        let line = m.a;
+        match MemMsg::from_u32(m.kind) {
+            Some(MemMsg::DataS) => {
+                let t = self.trans.remove(&line).expect("DataS without trans");
+                debug_assert_eq!(t.kind, TransKind::WaitS);
+                self.install(line, S);
+                self.replay(t.pending);
+            }
+            Some(MemMsg::DataE) => {
+                let t = self.trans.remove(&line).expect("DataE without trans");
+                debug_assert_eq!(t.kind, TransKind::WaitS);
+                self.install(line, E);
+                self.replay(t.pending);
+            }
+            Some(MemMsg::DataM) => {
+                let t = self.trans.remove(&line).expect("DataM without trans");
+                debug_assert_eq!(t.kind, TransKind::WaitM);
+                self.install(line, M);
+                self.replay(t.pending);
+            }
+            Some(MemMsg::Inv) => {
+                // Invalidate stable copy (may be already gone — silent
+                // eviction or a racing upgrade); ack regardless.
+                self.invs_received += 1;
+                self.array.invalidate(line);
+                self.send_l1(Msg::with(MemMsg::L1Inv as u32, line, 0, 0));
+                self.send_net(MemMsg::InvAck, line, self.core as u64);
+            }
+            Some(MemMsg::FwdWbS) => {
+                self.fwds_received += 1;
+                // Downgrade M/E → S; reply with (notional) data.
+                if self.array.probe(line).is_some() {
+                    self.array.set_state(line, S);
+                }
+                self.send_net(MemMsg::WbData, line, self.core as u64);
+            }
+            Some(MemMsg::FwdWbI) => {
+                self.fwds_received += 1;
+                self.array.invalidate(line);
+                self.send_l1(Msg::with(MemMsg::L1Inv as u32, line, 0, 0));
+                self.send_net(MemMsg::WbData, line, self.core as u64);
+            }
+            Some(MemMsg::PutAck) => {
+                let t = self.trans.remove(&line).expect("PutAck without trans");
+                debug_assert_eq!(t.kind, TransKind::WaitPutAck);
+                self.replay(t.pending);
+            }
+            other => panic!("L2 core {}: unexpected net msg {:?}", self.core, other),
+        }
+    }
+}
+
+impl Unit for L2Cache {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        self.flush_queues(ctx);
+        // Network responses first (they free transaction slots).
+        while let Some(m) = ctx.recv(self.from_net) {
+            self.handle_net(m);
+        }
+        // Then bounded L1 requests. L1 messages carry the line in `a` and
+        // the requester tag in `c`.
+        for _ in 0..self.width {
+            let Some(peek) = ctx.peek(self.from_l1) else { break };
+            let req = PendingReq {
+                kind: MemMsg::from_u32(peek.kind).expect("bad L1 kind"),
+                addr: peek.a,
+                tag: peek.c,
+            };
+            if self.trans.contains_key(&(req.addr & !63)) || self.trans.len() < self.max_trans {
+                let _ = ctx.recv(self.from_l1).unwrap();
+                let ok = self.handle_l1_req(req);
+                debug_assert!(ok);
+            } else {
+                break; // stall: transaction table full
+            }
+        }
+        self.flush_queues(ctx);
+    }
+
+    fn stats(&self, out: &mut StatsMap) {
+        out.add("l2.hits", self.array.hits);
+        out.add("l2.misses", self.array.misses);
+        out.add("l2.gets_sent", self.gets_sent);
+        out.add("l2.getm_sent", self.getm_sent);
+        out.add("l2.putm_sent", self.putm_sent);
+        out.add("l2.invs_received", self.invs_received);
+        out.add("l2.fwds_received", self.fwds_received);
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.gets_sent);
+        h.write_u64(self.getm_sent);
+        h.write_u64(self.invs_received);
+        self.array.state_hash(h);
+        for (&line, t) in &self.trans {
+            h.write_u64(line);
+            h.write_u64(t.kind as u64);
+        }
+    }
+
+    fn is_idle(&self) -> bool {
+        self.trans.is_empty() && self.l1_q.is_empty() && self.net_q.is_empty()
+    }
+}

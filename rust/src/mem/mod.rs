@@ -1,0 +1,30 @@
+//! The memory-system substrate: set-associative cache arrays, a MESI
+//! directory coherence protocol spanning private L1/L2 caches and shared
+//! L3 banks, and a DRAM channel model (paper §5.2–§5.3: "each core has
+//! private L1 and L2 caches, and shared L3 with full coherency").
+//!
+//! Protocol overview (blocking directory, inclusive-L2/write-through-L1):
+//!
+//! - **L1** (per core): tag-only, write-through, read-allocate. Loads hit
+//!   locally; stores and misses forward to L2. L2 back-invalidates L1 when
+//!   it loses a line, so L1 never holds a line L2 lost.
+//! - **L2** (per core): write-back MESI client. On a miss it sends
+//!   GetS/GetM to the line's home L3 bank over the NoC; on Inv/Fwd it
+//!   downgrades and acks.
+//! - **L3 bank + directory** (shared, address-striped): serializes
+//!   transactions per line (busy lines queue), tracks sharers/owner,
+//!   fetches from its DRAM channel on L3 miss.
+//!
+//! All communication is engine messages over point-to-point ports — the
+//! protocol exercises exactly the back-pressure and ordering machinery the
+//! paper's methodology prescribes.
+
+pub mod cache;
+pub mod dir;
+pub mod dram;
+pub mod l1;
+pub mod l2;
+pub mod msg;
+
+pub use cache::{CacheArray, CacheCfg};
+pub use msg::MemMsg;

@@ -1,0 +1,142 @@
+//! Memory-system message vocabulary.
+//!
+//! Encoding over `engine::Msg`:
+//! - `kind` — `MemMsg` discriminant (namespaced above the NoC layer).
+//! - `a` — line address (byte address of the line base).
+//! - `b` — NoC (src, dst) node pair for routed messages (`noc::net_b`).
+//! - `c` — auxiliary: requester core id, or ack counts.
+
+/// Line size in bytes (64 B everywhere).
+pub const LINE: u64 = 64;
+
+#[inline]
+pub fn line_of(addr: u64) -> u64 {
+    addr & !(LINE - 1)
+}
+
+/// Message kinds of the memory system. Values are stable (used in `kind`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u32)]
+pub enum MemMsg {
+    // ---- core ↔ L1 ----
+    /// Core → L1: load request (a = addr).
+    CoreLd = 0x100,
+    /// Core → L1: store request.
+    CoreSt = 0x101,
+    /// Core → L1: atomic read-modify-write request.
+    CoreAmo = 0x102,
+    /// L1 → core: load/atomic data response (a = addr).
+    CoreResp = 0x103,
+    /// L1 → core: store acknowledged (write-through completed to L2).
+    CoreStAck = 0x104,
+
+    // ---- L1 ↔ L2 ----
+    /// L1 → L2: read line (a = line).
+    L1Read = 0x110,
+    /// L1 → L2: write word (write-through; a = line).
+    L1Write = 0x111,
+    /// L1 → L2: atomic RMW on line.
+    L1Amo = 0x112,
+    /// L2 → L1: read fill (a = line).
+    L1Fill = 0x113,
+    /// L2 → L1: write/atomic done.
+    L1WriteAck = 0x114,
+    /// L2 → L1: back-invalidate line (inclusive discipline).
+    L1Inv = 0x115,
+
+    // ---- L2 ↔ directory (routed over the NoC) ----
+    /// Read miss: requester wants the line Shared.
+    GetS = 0x120,
+    /// Write miss / upgrade: requester wants the line Modified.
+    GetM = 0x121,
+    /// Dirty eviction writeback (data to home bank).
+    PutM = 0x122,
+    /// Directory → L2: fill in Shared state.
+    DataS = 0x123,
+    /// Directory → L2: fill in Exclusive state (no other sharers).
+    DataE = 0x124,
+    /// Directory → L2: fill in Modified state (all invals collected).
+    DataM = 0x125,
+    /// Directory → L2: invalidate your copy, then InvAck.
+    Inv = 0x126,
+    /// L2 → directory: invalidation acknowledged.
+    InvAck = 0x127,
+    /// Directory → owner L2: write line back and downgrade to Shared.
+    FwdWbS = 0x128,
+    /// Directory → owner L2: write line back and invalidate.
+    FwdWbI = 0x129,
+    /// Owner L2 → directory: writeback data (response to FwdWb*).
+    WbData = 0x12A,
+    /// Directory → L2: PutM accepted.
+    PutAck = 0x12B,
+
+    // ---- L3 bank ↔ DRAM channel ----
+    /// Bank → DRAM: fetch line.
+    DramRd = 0x130,
+    /// Bank → DRAM: write line.
+    DramWr = 0x131,
+    /// DRAM → bank: fetch complete.
+    DramResp = 0x132,
+}
+
+impl MemMsg {
+    pub fn from_u32(v: u32) -> Option<MemMsg> {
+        use MemMsg::*;
+        Some(match v {
+            0x100 => CoreLd,
+            0x101 => CoreSt,
+            0x102 => CoreAmo,
+            0x103 => CoreResp,
+            0x104 => CoreStAck,
+            0x110 => L1Read,
+            0x111 => L1Write,
+            0x112 => L1Amo,
+            0x113 => L1Fill,
+            0x114 => L1WriteAck,
+            0x115 => L1Inv,
+            0x120 => GetS,
+            0x121 => GetM,
+            0x122 => PutM,
+            0x123 => DataS,
+            0x124 => DataE,
+            0x125 => DataM,
+            0x126 => Inv,
+            0x127 => InvAck,
+            0x128 => FwdWbS,
+            0x129 => FwdWbI,
+            0x12A => WbData,
+            0x12B => PutAck,
+            0x130 => DramRd,
+            0x131 => DramWr,
+            0x132 => DramResp,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_math() {
+        assert_eq!(line_of(0), 0);
+        assert_eq!(line_of(63), 0);
+        assert_eq!(line_of(64), 64);
+        assert_eq!(line_of(0x12345), 0x12340);
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [
+            MemMsg::CoreLd,
+            MemMsg::GetS,
+            MemMsg::DataM,
+            MemMsg::InvAck,
+            MemMsg::DramResp,
+        ] {
+            assert_eq!(MemMsg::from_u32(k as u32), Some(k));
+        }
+        assert_eq!(MemMsg::from_u32(0xdead), None);
+    }
+}

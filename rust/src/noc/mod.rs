@@ -1,0 +1,13 @@
+//! Network-on-chip: a 2-D mesh of XY-routed routers built from engine
+//! units and ports.
+//!
+//! Back pressure is entirely *implicit* (paper §3.3): a router only moves a
+//! flit when the downstream input queue has vacancy; otherwise the flit
+//! stays put and pressure ripples backwards one hop per cycle — no credit
+//! protocol needed, the port discipline is the flow control.
+
+pub mod mesh;
+pub mod router;
+
+pub use mesh::{Mesh, MeshCfg};
+pub use router::{net_b, net_dst, net_src, Router};

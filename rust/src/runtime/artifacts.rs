@@ -1,0 +1,180 @@
+//! Typed wrappers over the four AOT artifacts.
+//!
+//! Shapes here must stay in sync with `python/compile/model.py`
+//! (`TRAFFIC_N`, `FABRIC_B`, `CACHE_D`, `CACHE_S`).
+
+use super::pjrt::{Executable, Runtime};
+use crate::dc::traffic::Packet;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Batch sizes fixed at lowering time (see model.py).
+pub const TRAFFIC_N: usize = 65_536;
+pub const FABRIC_B: usize = 32;
+pub const CACHE_D: usize = 24;
+pub const CACHE_S: usize = 16;
+
+/// Locate the artifacts directory: `$SCALESIM_ARTIFACTS` or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SCALESIM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// All loaded executables.
+pub struct Artifacts {
+    pub traffic: TrafficGen,
+    pub fabric: FabricModel,
+    pub fabric_grad: FabricGrad,
+    pub cache: CacheModel,
+}
+
+impl Artifacts {
+    pub fn load(rt: &Runtime, dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        Ok(Artifacts {
+            traffic: TrafficGen {
+                exe: rt.load_hlo(dir.join("traffic.hlo.txt"))?,
+            },
+            fabric: FabricModel {
+                exe: rt.load_hlo(dir.join("fabric.hlo.txt"))?,
+            },
+            fabric_grad: FabricGrad {
+                exe: rt.load_hlo(dir.join("fabric_grad.hlo.txt"))?,
+            },
+            cache: CacheModel {
+                exe: rt.load_hlo(dir.join("cache.hlo.txt"))?,
+            },
+        })
+    }
+}
+
+/// The traffic-generation kernel: packets `[base, base + TRAFFIC_N)`.
+pub struct TrafficGen {
+    exe: Executable,
+}
+
+impl TrafficGen {
+    /// Generate one batch. Note: the artifact generates indices
+    /// [0, TRAFFIC_N); for larger workloads the *seed* folds in the batch
+    /// number on the python side too. Here we only need batch 0 semantics
+    /// to cross-check with `dc::traffic`.
+    pub fn generate(&self, seed: u64, hosts: u32, window: u64) -> Result<Vec<Packet>> {
+        let s = xla::Literal::vec1(&[seed]);
+        let h = xla::Literal::vec1(&[hosts as u64]);
+        let w = xla::Literal::vec1(&[window]);
+        let out = self.exe.run(&[s, h, w])?;
+        if out.len() != 3 {
+            bail!("traffic artifact returned {} outputs", out.len());
+        }
+        let src: Vec<u32> = out[0].to_vec().context("src")?;
+        let dst: Vec<u32> = out[1].to_vec().context("dst")?;
+        let cyc: Vec<u32> = out[2].to_vec().context("cyc")?;
+        Ok((0..src.len())
+            .map(|i| Packet {
+                id: i as u64,
+                src: src[i],
+                dst: dst[i],
+                inject_cycle: cyc[i] as u64,
+            })
+            .collect())
+    }
+}
+
+/// Analytic fat-tree latency: `FABRIC_B` configs per call.
+/// Config row: [k, lam, buffer, link_delay, pipeline].
+pub struct FabricModel {
+    exe: Executable,
+}
+
+impl FabricModel {
+    pub fn latency(&self, params: &[[f32; 5]; FABRIC_B]) -> Result<Vec<f32>> {
+        let flat: Vec<f32> = params.iter().flatten().copied().collect();
+        let p = xla::Literal::vec1(&flat).reshape(&[FABRIC_B as i64, 5])?;
+        let out = self.exe.run(&[p])?;
+        Ok(out[0].to_vec()?)
+    }
+}
+
+/// Value + gradient of the exploration objective.
+pub struct FabricGrad {
+    exe: Executable,
+}
+
+impl FabricGrad {
+    /// Returns (objective, gradient rows).
+    pub fn grad(&self, params: &[[f32; 5]; FABRIC_B]) -> Result<(f32, Vec<[f32; 5]>)> {
+        let flat: Vec<f32> = params.iter().flatten().copied().collect();
+        let p = xla::Literal::vec1(&flat).reshape(&[FABRIC_B as i64, 5])?;
+        let out = self.exe.run(&[p])?;
+        if out.len() != 2 {
+            bail!("fabric_grad returned {} outputs", out.len());
+        }
+        let obj: Vec<f32> = out[0].to_vec()?;
+        let g: Vec<f32> = out[1].to_vec()?;
+        let rows = g
+            .chunks_exact(5)
+            .map(|c| [c[0], c[1], c[2], c[3], c[4]])
+            .collect();
+        Ok((obj[0], rows))
+    }
+}
+
+/// Stack-distance cache hit-rate model.
+pub struct CacheModel {
+    exe: Executable,
+}
+
+impl CacheModel {
+    /// `hist`: reuse-distance histogram (CACHE_D power-of-two buckets);
+    /// `sizes`: candidate cache sizes in lines (CACHE_S entries).
+    pub fn hit_rates(&self, hist: &[f32; CACHE_D], sizes: &[f32; CACHE_S]) -> Result<Vec<f32>> {
+        let h = xla::Literal::vec1(hist);
+        let s = xla::Literal::vec1(sizes);
+        let out = self.exe.run(&[h, s])?;
+        Ok(out[0].to_vec()?)
+    }
+}
+
+/// Compute a reuse-distance histogram from a memory-reference stream —
+/// the input the cache artifact expects. Approximate stack distance via
+/// per-line last-access indices and a count of distinct lines touched
+/// since (exact would be O(n·m); the tree-based exact variant is overkill
+/// for model calibration).
+pub fn reuse_histogram(lines: impl Iterator<Item = u64>) -> [f32; CACHE_D] {
+    use std::collections::HashMap;
+    let mut hist = [0f32; CACHE_D];
+    let mut last_access: HashMap<u64, usize> = HashMap::new();
+    for (i, line) in lines.enumerate() {
+        if let Some(&prev) = last_access.get(&line) {
+            // Approximate distinct-lines-since by elapsed references
+            // scaled by observed distinct ratio (cheap upper bound).
+            let dist = (i - prev).max(1);
+            let bucket = (64 - (dist as u64).leading_zeros() as usize).min(CACHE_D - 1);
+            hist[bucket] += 1.0;
+        } else {
+            hist[CACHE_D - 1] += 1.0; // cold miss: infinite distance
+        }
+        last_access.insert(line, i);
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_histogram_buckets() {
+        // Pattern: A B A → A's reuse distance 2 → bucket 2 ([2,4)).
+        let h = reuse_histogram([1u64, 2, 1].into_iter());
+        assert_eq!(h[CACHE_D - 1], 2.0, "two cold misses");
+        assert_eq!(h[2], 1.0, "one short reuse");
+    }
+
+    #[test]
+    fn reuse_histogram_streaming_is_all_cold() {
+        let h = reuse_histogram((0..100u64).map(|i| i));
+        assert_eq!(h[CACHE_D - 1], 100.0);
+    }
+}

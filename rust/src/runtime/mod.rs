@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs only at build time (`make artifacts`); this module is how
+//! the rust coordinator executes the lowered computations on the request
+//! path: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `compile` → `execute`. HLO *text* is the interchange format (see
+//! `python/compile/aot.py` for why).
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{Artifacts, CacheModel, FabricGrad, FabricModel, TrafficGen};
+pub use pjrt::{Executable, Runtime};

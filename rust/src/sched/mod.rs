@@ -1,0 +1,11 @@
+//! Two-level scheduling support: unit→cluster partitioning strategies.
+//!
+//! The paper groups N simulated units into M−1 clusters, one per physical
+//! core, each run serially by a local scheduler (§4). The distribution "is
+//! currently random" in the paper, with locality-aware ordering named as
+//! future work (§6) — we implement both, plus round-robin, so the ablation
+//! bench can quantify the difference the authors predicted.
+
+pub mod partition;
+
+pub use partition::{cross_cluster_ports, partition, PartitionStrategy};

@@ -1,0 +1,239 @@
+//! Unit→cluster partitioning for the two-level scheduler.
+
+use crate::engine::Model;
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// How units are distributed over worker clusters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Unit i → cluster i mod M (deterministic interleave).
+    RoundRobin,
+    /// Shuffle units, then deal round-robin — the paper's current policy
+    /// ("the distribution of units ... is currently random", §6).
+    Random(u64),
+    /// BFS over the port graph, filling one cluster at a time — the
+    /// hierarchical/locality ordering the paper names as future work. Keeps
+    /// port endpoints on the same cluster where possible, so transfers stay
+    /// within one server core's cache.
+    Locality,
+    /// Contiguous blocks: units [0..n/M) → cluster 0, etc. Preserves the
+    /// builder's construction order, which assembled systems exploit (e.g.
+    /// all units of one simulated CPU core are built consecutively).
+    Contiguous,
+}
+
+impl PartitionStrategy {
+    pub fn parse(s: &str, seed: u64) -> Result<Self, String> {
+        match s {
+            "round-robin" | "rr" => Ok(PartitionStrategy::RoundRobin),
+            "random" => Ok(PartitionStrategy::Random(seed)),
+            "locality" => Ok(PartitionStrategy::Locality),
+            "contiguous" | "block" => Ok(PartitionStrategy::Contiguous),
+            _ => Err(format!(
+                "unknown partition strategy {s:?}; expected round-robin|random|locality|contiguous"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::RoundRobin => "round-robin",
+            PartitionStrategy::Random(_) => "random",
+            PartitionStrategy::Locality => "locality",
+            PartitionStrategy::Contiguous => "contiguous",
+        }
+    }
+}
+
+/// Partition `model`'s units into `clusters` balanced groups
+/// (sizes differ by at most 1).
+pub fn partition(model: &Model, clusters: usize, strategy: PartitionStrategy) -> Vec<Vec<u32>> {
+    let n = model.num_units();
+    let clusters = clusters.max(1).min(n.max(1));
+    match strategy {
+        PartitionStrategy::RoundRobin => {
+            let mut p = vec![Vec::new(); clusters];
+            for u in 0..n {
+                p[u % clusters].push(u as u32);
+            }
+            p
+        }
+        PartitionStrategy::Contiguous => {
+            let mut p = vec![Vec::new(); clusters];
+            // Sizes n/M rounded so that every cluster gets ⌊n/M⌋ or ⌈n/M⌉.
+            let base = n / clusters;
+            let extra = n % clusters;
+            let mut u = 0u32;
+            for (c, slot) in p.iter_mut().enumerate() {
+                let size = base + usize::from(c < extra);
+                for _ in 0..size {
+                    slot.push(u);
+                    u += 1;
+                }
+            }
+            p
+        }
+        PartitionStrategy::Random(seed) => {
+            let mut ids: Vec<u32> = (0..n as u32).collect();
+            let mut rng = Rng::from_seed_stream(seed, 0xC1u64);
+            // Fisher–Yates.
+            for i in (1..ids.len()).rev() {
+                let j = rng.gen_range((i + 1) as u64) as usize;
+                ids.swap(i, j);
+            }
+            let mut p = vec![Vec::new(); clusters];
+            for (i, u) in ids.into_iter().enumerate() {
+                p[i % clusters].push(u);
+            }
+            p
+        }
+        PartitionStrategy::Locality => locality_partition(model, clusters),
+    }
+}
+
+/// BFS-fill: pick the lowest-numbered unassigned unit, grow its connected
+/// neighbourhood breadth-first until the current cluster reaches its quota,
+/// then start the next cluster.
+fn locality_partition(model: &Model, clusters: usize) -> Vec<Vec<u32>> {
+    let n = model.num_units();
+    let mut assigned = vec![false; n];
+    let mut p: Vec<Vec<u32>> = vec![Vec::new(); clusters];
+    let base = n / clusters;
+    let extra = n % clusters;
+    let quota = |c: usize| base + usize::from(c < extra);
+    let mut cluster = 0usize;
+    let mut queue: VecDeque<u32> = VecDeque::new();
+    let mut next_seed = 0u32;
+    while cluster < clusters {
+        if p[cluster].len() >= quota(cluster) {
+            cluster += 1;
+            continue;
+        }
+        let u = match queue.pop_front() {
+            Some(u) if !assigned[u as usize] => u,
+            Some(_) => continue,
+            None => {
+                while (next_seed as usize) < n && assigned[next_seed as usize] {
+                    next_seed += 1;
+                }
+                if (next_seed as usize) >= n {
+                    break;
+                }
+                next_seed
+            }
+        };
+        assigned[u as usize] = true;
+        p[cluster].push(u);
+        for v in model.neighbours(u) {
+            if !assigned[v as usize] {
+                queue.push_back(v);
+            }
+        }
+    }
+    p
+}
+
+/// Count ports whose endpoints land on different clusters — the
+/// cross-cluster traffic that pays server cache-coherency cost
+/// (the bottleneck the paper identifies in Fig 13's discussion).
+pub fn cross_cluster_ports(model: &Model, partition: &[Vec<u32>]) -> usize {
+    let n = model.num_units();
+    let mut cluster_of = vec![0u32; n];
+    for (c, units) in partition.iter().enumerate() {
+        for &u in units {
+            cluster_of[u as usize] = c as u32;
+        }
+    }
+    model.port_endpoints()
+        .filter(|&(s, d)| cluster_of[s as usize] != cluster_of[d as usize])
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::unit::{Ctx, Unit};
+    use crate::engine::{ModelBuilder, PortCfg};
+
+    struct Nop;
+    impl Unit for Nop {
+        fn work(&mut self, _ctx: &mut Ctx<'_>) {}
+    }
+
+    /// Ring of n units (each connected to the next).
+    fn ring(n: usize) -> Model {
+        let mut mb = ModelBuilder::new();
+        let ids: Vec<u32> = (0..n).map(|i| mb.reserve_unit(&format!("u{i}"))).collect();
+        for i in 0..n {
+            mb.connect(ids[i], ids[(i + 1) % n], PortCfg::default());
+        }
+        for &id in &ids {
+            mb.install(id, Box::new(Nop));
+        }
+        mb.build().unwrap()
+    }
+
+    fn check_valid(p: &[Vec<u32>], n: usize) {
+        let mut seen = vec![false; n];
+        for cluster in p {
+            for &u in cluster {
+                assert!(!seen[u as usize], "unit {u} assigned twice");
+                seen[u as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "all units assigned");
+        let max = p.iter().map(|c| c.len()).max().unwrap();
+        let min = p.iter().map(|c| c.len()).min().unwrap();
+        assert!(max - min <= 1, "balanced: max={max} min={min}");
+    }
+
+    #[test]
+    fn all_strategies_produce_valid_balanced_partitions() {
+        let m = ring(17);
+        for strat in [
+            PartitionStrategy::RoundRobin,
+            PartitionStrategy::Random(7),
+            PartitionStrategy::Locality,
+            PartitionStrategy::Contiguous,
+        ] {
+            for clusters in [1, 2, 3, 5, 17] {
+                let p = partition(&m, clusters, strat);
+                assert_eq!(p.len(), clusters);
+                check_valid(&p, 17);
+            }
+        }
+    }
+
+    #[test]
+    fn clusters_clamped_to_units() {
+        let m = ring(3);
+        let p = partition(&m, 10, PartitionStrategy::RoundRobin);
+        assert_eq!(p.len(), 3, "no more clusters than units");
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let m = ring(20);
+        let a = partition(&m, 4, PartitionStrategy::Random(9));
+        let b = partition(&m, 4, PartitionStrategy::Random(9));
+        let c = partition(&m, 4, PartitionStrategy::Random(10));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn locality_beats_random_on_ring() {
+        let m = ring(64);
+        let loc = partition(&m, 4, PartitionStrategy::Locality);
+        let rnd = partition(&m, 4, PartitionStrategy::Random(3));
+        let x_loc = cross_cluster_ports(&m, &loc);
+        let x_rnd = cross_cluster_ports(&m, &rnd);
+        assert!(
+            x_loc < x_rnd,
+            "locality ({x_loc} cross ports) should beat random ({x_rnd})"
+        );
+        // A ring split into 4 contiguous arcs has exactly 4 cross ports.
+        assert!(x_loc <= 8, "near-optimal on a ring: {x_loc}");
+    }
+}

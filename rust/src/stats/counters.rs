@@ -1,0 +1,165 @@
+//! Global shared counters and per-unit stats maps.
+//!
+//! Shared counters are plain `AtomicU64`s updated with relaxed ordering from
+//! the work phase. Because every increment happens inside some cycle and is
+//! read only at cycle boundaries (while workers are parked at a barrier),
+//! the observed values are deterministic regardless of worker count — the
+//! barrier provides the happens-before edge.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A fixed set of named global counters, registered before the run starts.
+#[derive(Debug, Default)]
+pub struct Counters {
+    names: Vec<String>,
+    slots: Vec<AtomicU64>,
+}
+
+/// Handle to a registered counter (index into the slot table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(pub(crate) u32);
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a counter; returns existing id if the name is taken.
+    pub fn register(&mut self, name: &str) -> CounterId {
+        if let Some(i) = self.names.iter().position(|n| n == name) {
+            return CounterId(i as u32);
+        }
+        self.names.push(name.to_string());
+        self.slots.push(AtomicU64::new(0));
+        CounterId((self.names.len() - 1) as u32)
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<CounterId> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| CounterId(i as u32))
+    }
+
+    #[inline]
+    pub fn add(&self, id: CounterId, v: u64) {
+        self.slots[id.0 as usize].fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self, id: CounterId) -> u64 {
+        self.slots[id.0 as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> StatsMap {
+        let mut m = StatsMap::new();
+        for (n, s) in self.names.iter().zip(&self.slots) {
+            m.add(n, s.load(Ordering::Relaxed));
+        }
+        m
+    }
+}
+
+/// An ordered name → value accumulation map used for reports and per-unit
+/// stats. Adding to an existing key sums.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StatsMap {
+    map: BTreeMap<String, u64>,
+}
+
+impl StatsMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, key: &str, v: u64) {
+        *self.map.entry(key.to_string()).or_insert(0) += v;
+    }
+
+    pub fn set(&mut self, key: &str, v: u64) {
+        self.map.insert(key.to_string(), v);
+    }
+
+    pub fn get(&self, key: &str) -> u64 {
+        self.map.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &StatsMap) {
+        for (k, v) in &other.map {
+            *self.map.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+impl std::fmt::Display for StatsMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (k, v) in &self.map {
+            writeln!(f, "  {k:<40} {v}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_count() {
+        let mut c = Counters::new();
+        let a = c.register("pkts");
+        let b = c.register("pkts");
+        assert_eq!(a, b, "same name, same id");
+        c.add(a, 5);
+        c.add(a, 2);
+        assert_eq!(c.get(a), 7);
+        assert_eq!(c.snapshot().get("pkts"), 7);
+    }
+
+    #[test]
+    fn statsmap_merge_and_sum() {
+        let mut a = StatsMap::new();
+        a.add("x", 1);
+        a.add("x", 2);
+        let mut b = StatsMap::new();
+        b.add("x", 10);
+        b.add("y", 1);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 13);
+        assert_eq!(a.get("y"), 1);
+        assert_eq!(a.get("z"), 0);
+    }
+
+    #[test]
+    fn counters_are_threadsafe() {
+        let mut c = Counters::new();
+        let id = c.register("n");
+        let c = std::sync::Arc::new(c);
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.add(id, 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(id), 4000);
+    }
+}

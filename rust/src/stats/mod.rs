@@ -1,0 +1,14 @@
+//! Statistics: counters, histograms, per-phase timers, run reports, and the
+//! virtual-time scaling model used to reproduce the paper's multi-core
+//! speedup figures on this single-core testbed (see DESIGN.md §3).
+
+pub mod counters;
+pub mod hist;
+pub mod report;
+pub mod scaling;
+pub mod timers;
+
+pub use counters::{Counters, StatsMap};
+pub use hist::Histogram;
+pub use report::RunStats;
+pub use timers::PhaseTimers;

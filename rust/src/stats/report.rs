@@ -1,0 +1,111 @@
+//! Run-level statistics: what a simulation returns to its caller.
+
+use super::counters::StatsMap;
+use super::timers::PhaseTimers;
+use std::time::Duration;
+
+/// Everything measured during one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Simulated cycles actually executed.
+    pub cycles: u64,
+    /// Wall-clock duration of the run (excludes model construction).
+    pub wall: Duration,
+    /// Number of worker threads used (1 = serial engine).
+    pub workers: usize,
+    /// Per-worker phase timers (len == workers).
+    pub per_worker: Vec<PhaseTimers>,
+    /// Global counters + per-unit stats, merged.
+    pub counters: StatsMap,
+    /// Sync-point lock/unlock/wait operation count (paper's "lock economy"
+    /// claim: O(workers) per cycle, independent of model size).
+    pub sync_ops: u64,
+    /// State fingerprint after the final cycle (serial ≡ parallel checks).
+    pub fingerprint: u64,
+}
+
+impl RunStats {
+    /// Simulated KHz: simulated cycles per wall-clock second / 1000.
+    /// The paper quotes light-CPU models in "100s of KHz" and full OOO
+    /// models at "10-20 KHz" per core.
+    pub fn sim_khz(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.cycles as f64 / s / 1e3
+        }
+    }
+
+    /// Aggregate work/transfer/barrier split across workers (ns).
+    pub fn phase_split(&self) -> (u64, u64, u64) {
+        let mut w = 0;
+        let mut t = 0;
+        let mut b = 0;
+        for p in &self.per_worker {
+            w += p.work_ns;
+            t += p.transfer_ns;
+            b += p.barrier_ns;
+        }
+        (w, t, b)
+    }
+
+    /// The slowest worker's work-phase time — the paper notes "the slowest
+    /// worker thread dominates the simulation speed" (Fig 12 discussion).
+    pub fn max_worker_work_ns(&self) -> u64 {
+        self.per_worker.iter().map(|p| p.work_ns).max().unwrap_or(0)
+    }
+
+    pub fn summary(&self) -> String {
+        let (w, t, b) = self.phase_split();
+        format!(
+            "cycles={} wall={:?} workers={} sim={:.1} KHz work={}ms transfer={}ms barrier={}ms sync_ops={}",
+            self.cycles,
+            self.wall,
+            self.workers,
+            self.sim_khz(),
+            w / 1_000_000,
+            t / 1_000_000,
+            b / 1_000_000,
+            self.sync_ops,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn khz_math() {
+        let s = RunStats {
+            cycles: 100_000,
+            wall: Duration::from_secs(1),
+            ..Default::default()
+        };
+        assert!((s.sim_khz() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase_split_sums_workers() {
+        let s = RunStats {
+            per_worker: vec![
+                PhaseTimers {
+                    work_ns: 10,
+                    transfer_ns: 1,
+                    barrier_ns: 2,
+                    cycles: 5,
+                },
+                PhaseTimers {
+                    work_ns: 20,
+                    transfer_ns: 2,
+                    barrier_ns: 3,
+                    cycles: 5,
+                },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(s.phase_split(), (30, 3, 5));
+        assert_eq!(s.max_worker_work_ns(), 20);
+    }
+}

@@ -1,0 +1,194 @@
+//! Virtual-time parallel-scaling model (testbed substitution, DESIGN.md §3).
+//!
+//! The paper's scaling figures (9–16) were measured on 20-core and 384-HT
+//! servers; this container exposes a single vCPU, on which measured
+//! wall-clock speedup of a threaded run is meaningless. The paper itself
+//! gives the arithmetic its figures follow (§5.2): the slowest worker
+//! dominates each phase, and every cycle pays two barrier crossings, so
+//!
+//! ```text
+//! T_parallel(W) = Σ_cycles [ max_w(work_w) + max_w(transfer_w) ] + cycles·barrier(W)
+//! ```
+//!
+//! We *measure* every term natively on this host — per-cluster work and
+//! transfer times from an instrumented serial run, and barrier(W) cost from
+//! the real sync-point implementations — then compose them. This reproduces
+//! the *shape* of the paper's curves with measured constants rather than
+//! invented ones.
+
+/// Per-cluster measured phase costs for one configuration (ns, summed over
+/// the run).
+#[derive(Debug, Clone)]
+pub struct ClusterCosts {
+    pub work_ns: Vec<u64>,
+    pub transfer_ns: Vec<u64>,
+    pub cycles: u64,
+}
+
+/// Barrier cost model: ns per (work+transfer) barrier pair at `workers`
+/// threads, as measured by the synchronization micro-benchmark (Fig 9).
+#[derive(Debug, Clone)]
+pub struct BarrierCost {
+    /// (workers, ns_per_cycle) measurement points, ascending by workers.
+    pub points: Vec<(usize, f64)>,
+}
+
+impl BarrierCost {
+    /// Barrier cost calibrated from the **paper's own measurements** of the
+    /// common-atomic method (Fig 9: ~4M phases/s at 2 workers, ~2M at 37
+    /// on the 20-core Xeon; Fig 10: moderate degradation to ~1M phases/s
+    /// at 256 threads on the 384-HT server). Two phases per cycle, so
+    /// ns/cycle = 2e9 / (phases/s).
+    ///
+    /// Used by the virtual-time scaling model when reproducing the
+    /// multi-core figures on this single-vCPU testbed: our own threaded
+    /// barrier measurement is dominated by OS-level oversubscription
+    /// (yield storms), which no multi-core host would see — the honest
+    /// substitution is the paper's curve for the barrier term and native
+    /// measurements for everything else (DESIGN.md §3). The shape of the
+    /// paper's barrier curve is itself reproduced qualitatively by
+    /// `scalesim barrier-bench`.
+    pub fn paper_common_atomic() -> Self {
+        BarrierCost {
+            points: vec![
+                (1, 400.0),
+                (2, 500.0),
+                (8, 600.0),
+                (16, 800.0),
+                (37, 1_000.0),
+                (64, 1_300.0),
+                (128, 1_600.0),
+                (256, 2_000.0),
+            ],
+        }
+    }
+
+    /// Piecewise-linear interpolation (clamped at the ends).
+    pub fn ns_per_cycle(&self, workers: usize) -> f64 {
+        assert!(!self.points.is_empty());
+        let w = workers as f64;
+        if w <= self.points[0].0 as f64 {
+            return self.points[0].1;
+        }
+        for pair in self.points.windows(2) {
+            let (w0, c0) = (pair[0].0 as f64, pair[0].1);
+            let (w1, c1) = (pair[1].0 as f64, pair[1].1);
+            if w <= w1 {
+                let t = (w - w0) / (w1 - w0).max(1e-9);
+                return c0 + t * (c1 - c0);
+            }
+        }
+        self.points.last().unwrap().1
+    }
+}
+
+/// Modeled parallel run time for a partition of per-cluster costs.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub workers: usize,
+    /// max-over-workers work time (ns).
+    pub work_ns: u64,
+    /// max-over-workers transfer time (ns).
+    pub transfer_ns: u64,
+    /// cycles × modeled barrier cost (ns).
+    pub sync_ns: u64,
+}
+
+impl ScalingPoint {
+    pub fn total_ns(&self) -> u64 {
+        self.work_ns + self.transfer_ns + self.sync_ns
+    }
+}
+
+/// Compose per-cluster costs + a barrier model into a modeled runtime.
+pub fn model_parallel_time(costs: &ClusterCosts, barrier: &BarrierCost) -> ScalingPoint {
+    let workers = costs.work_ns.len();
+    assert_eq!(workers, costs.transfer_ns.len());
+    let work_ns = costs.work_ns.iter().copied().max().unwrap_or(0);
+    let transfer_ns = costs.transfer_ns.iter().copied().max().unwrap_or(0);
+    let sync_ns = if workers <= 1 {
+        0 // serial run: no barriers needed
+    } else {
+        (costs.cycles as f64 * barrier.ns_per_cycle(workers)) as u64
+    };
+    ScalingPoint {
+        workers,
+        work_ns,
+        transfer_ns,
+        sync_ns,
+    }
+}
+
+/// Speedup of a modeled point relative to a serial baseline time.
+pub fn speedup(serial_ns: u64, point: &ScalingPoint) -> f64 {
+    serial_ns as f64 / point.total_ns().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_barrier(ns: f64) -> BarrierCost {
+        BarrierCost {
+            points: vec![(1, ns), (64, ns)],
+        }
+    }
+
+    #[test]
+    fn perfect_split_halves_time() {
+        // 2 clusters, perfectly balanced, negligible barrier.
+        let costs = ClusterCosts {
+            work_ns: vec![500, 500],
+            transfer_ns: vec![50, 50],
+            cycles: 100,
+        };
+        let p = model_parallel_time(&costs, &flat_barrier(0.0));
+        assert_eq!(p.total_ns(), 550);
+        let s = speedup(1100, &p);
+        assert!((s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slowest_worker_dominates() {
+        let costs = ClusterCosts {
+            work_ns: vec![100, 900],
+            transfer_ns: vec![10, 10],
+            cycles: 10,
+        };
+        let p = model_parallel_time(&costs, &flat_barrier(0.0));
+        assert_eq!(p.work_ns, 900);
+    }
+
+    #[test]
+    fn barrier_cost_grows_with_cycles() {
+        let costs = ClusterCosts {
+            work_ns: vec![100, 100],
+            transfer_ns: vec![0, 0],
+            cycles: 1000,
+        };
+        let p = model_parallel_time(&costs, &flat_barrier(3.0));
+        assert_eq!(p.sync_ns, 3000);
+    }
+
+    #[test]
+    fn serial_pays_no_barrier() {
+        let costs = ClusterCosts {
+            work_ns: vec![100],
+            transfer_ns: vec![10],
+            cycles: 1000,
+        };
+        let p = model_parallel_time(&costs, &flat_barrier(100.0));
+        assert_eq!(p.sync_ns, 0);
+    }
+
+    #[test]
+    fn interpolation_clamps_and_lerps() {
+        let b = BarrierCost {
+            points: vec![(2, 100.0), (4, 200.0)],
+        };
+        assert_eq!(b.ns_per_cycle(1), 100.0);
+        assert_eq!(b.ns_per_cycle(2), 100.0);
+        assert_eq!(b.ns_per_cycle(3), 150.0);
+        assert_eq!(b.ns_per_cycle(8), 200.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Per-worker phase timers.
+//!
+//! Figures 12–13 of the paper break the simulation wall time into the work
+//! phase, the transfer phase and synchronization overhead per worker. Each
+//! worker accumulates nanoseconds spent in each region; the scheduler
+//! aggregates them after the run. Timers are plain fields (no atomics) —
+//! each instance is owned by exactly one worker thread.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimers {
+    pub work_ns: u64,
+    pub transfer_ns: u64,
+    /// Time blocked waiting on the WORK / TRANSFER gates (sync overhead).
+    pub barrier_ns: u64,
+    /// Number of cycles this worker participated in.
+    pub cycles: u64,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn time<R>(slot: &mut u64, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        *slot += t0.elapsed().as_nanos() as u64;
+        r
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.work_ns + self.transfer_ns + self.barrier_ns
+    }
+
+    pub fn merge(&mut self, o: &PhaseTimers) {
+        self.work_ns += o.work_ns;
+        self.transfer_ns += o.transfer_ns;
+        self.barrier_ns += o.barrier_ns;
+        self.cycles = self.cycles.max(o.cycles);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_accumulates() {
+        let mut t = PhaseTimers::new();
+        let r = PhaseTimers::time(&mut t.work_ns, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(r, 42);
+        assert!(t.work_ns >= 1_000_000, "at least 1ms recorded");
+        assert_eq!(t.transfer_ns, 0);
+    }
+
+    #[test]
+    fn merge_sums_and_maxes() {
+        let mut a = PhaseTimers {
+            work_ns: 10,
+            transfer_ns: 5,
+            barrier_ns: 1,
+            cycles: 100,
+        };
+        let b = PhaseTimers {
+            work_ns: 1,
+            transfer_ns: 1,
+            barrier_ns: 1,
+            cycles: 50,
+        };
+        a.merge(&b);
+        assert_eq!(a.work_ns, 11);
+        assert_eq!(a.total_ns(), 11 + 6 + 2);
+        assert_eq!(a.cycles, 100);
+    }
+}

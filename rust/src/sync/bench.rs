@@ -1,0 +1,147 @@
+//! Barrier-speed micro-benchmark (paper §5.1, Figs 9–11).
+//!
+//! Reproduces the paper's experiment exactly: "the simulator code has been
+//! manipulated to skip the actual work and transfer, leaving only the
+//! synchronization activity". We run the real ladder engine over no-op
+//! units, so the measured loop *is* the production barrier path, and
+//! report phases per second (two phases per simulated cycle).
+
+use super::ladder::{run_ladder, ParallelOpts};
+use super::syncpoint::{SpinMode, SyncMethod};
+use crate::engine::model::{Model, ModelBuilder, RunOpts};
+use crate::engine::unit::{Ctx, Unit};
+
+/// A unit that performs no work — sync activity only.
+struct IdleUnit;
+
+impl Unit for IdleUnit {
+    fn work(&mut self, _ctx: &mut Ctx<'_>) {}
+}
+
+/// A unit that spins for roughly `ns` of CPU work per cycle — used for the
+/// work+sync speedup experiments (Fig 11).
+pub struct BusyUnit {
+    pub iters: u64,
+    sink: u64,
+}
+
+impl BusyUnit {
+    /// Calibrated so `iters` multiply-xor rounds ≈ the desired work grain.
+    pub fn new(iters: u64) -> Self {
+        BusyUnit { iters, sink: 0x9E3779B97F4A7C15 }
+    }
+}
+
+impl Unit for BusyUnit {
+    fn work(&mut self, _ctx: &mut Ctx<'_>) {
+        let mut x = self.sink;
+        for _ in 0..self.iters {
+            x = x.wrapping_mul(0x2545F4914F6CDD1D) ^ (x >> 29);
+        }
+        self.sink = x; // keep the loop observable
+    }
+}
+
+/// One idle unit per worker cluster.
+fn idle_model(workers: usize) -> (Model, Vec<Vec<u32>>) {
+    let mut mb = ModelBuilder::new();
+    let mut partition = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let id = mb.add_unit(&format!("idle{w}"), Box::new(IdleUnit));
+        partition.push(vec![id]);
+    }
+    (mb.build().unwrap(), partition)
+}
+
+/// One busy unit (fixed work grain) per worker cluster.
+pub fn busy_model(workers: usize, iters_per_cycle: u64) -> (Model, Vec<Vec<u32>>) {
+    let mut mb = ModelBuilder::new();
+    let mut partition = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let id = mb.add_unit(&format!("busy{w}"), Box::new(BusyUnit::new(iters_per_cycle)));
+        partition.push(vec![id]);
+    }
+    (mb.build().unwrap(), partition)
+}
+
+/// Result of one barrier-speed measurement.
+#[derive(Debug, Clone)]
+pub struct BarrierBenchResult {
+    pub method: SyncMethod,
+    pub workers: usize,
+    pub cycles: u64,
+    pub wall_secs: f64,
+    pub sync_ops: u64,
+}
+
+impl BarrierBenchResult {
+    /// Phases per second: the paper's Fig 9/10 y-axis (2 phases/cycle).
+    pub fn phases_per_sec(&self) -> f64 {
+        2.0 * self.cycles as f64 / self.wall_secs.max(1e-12)
+    }
+
+    /// Barrier cost per simulated cycle in nanoseconds — feeds the
+    /// virtual-time scaling model.
+    pub fn ns_per_cycle(&self) -> f64 {
+        self.wall_secs * 1e9 / self.cycles.max(1) as f64
+    }
+}
+
+/// Measure barrier speed: `cycles` sync-only cycles at `workers` threads.
+pub fn barrier_speed(
+    method: SyncMethod,
+    workers: usize,
+    spin: SpinMode,
+    cycles: u64,
+) -> BarrierBenchResult {
+    let (mut model, partition) = idle_model(workers);
+    let mut opts = ParallelOpts::new(method, RunOpts::cycles(cycles));
+    opts.spin = spin;
+    let stats = run_ladder(&mut model, &partition, &opts);
+    BarrierBenchResult {
+        method,
+        workers,
+        cycles: stats.cycles,
+        wall_secs: stats.wall.as_secs_f64(),
+        sync_ops: stats.sync_ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_speed_runs_all_methods() {
+        for method in SyncMethod::ALL {
+            let r = barrier_speed(method, 2, SpinMode::Yield, 200);
+            assert_eq!(r.cycles, 200);
+            assert!(r.phases_per_sec() > 0.0);
+            assert!(r.sync_ops > 0);
+        }
+    }
+
+    #[test]
+    fn busy_model_does_work() {
+        let (mut m, part) = busy_model(2, 100);
+        let stats = run_ladder(
+            &mut m,
+            &part,
+            &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::cycles(50).timed()),
+        );
+        let (w, _, _) = stats.phase_split();
+        assert!(w > 0, "busy units must burn measurable work time");
+    }
+
+    #[test]
+    fn sync_ops_scale_with_workers() {
+        let a = barrier_speed(SyncMethod::Atomic, 2, SpinMode::Yield, 100);
+        let b = barrier_speed(SyncMethod::Atomic, 4, SpinMode::Yield, 100);
+        assert!(
+            b.sync_ops > a.sync_ops,
+            "more workers, more sync ops: {} !> {}",
+            b.sync_ops,
+            a.sync_ops
+        );
+    }
+}

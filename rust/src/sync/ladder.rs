@@ -1,0 +1,704 @@
+//! The ladder-barrier parallel engine (paper §4, Figs 6–8).
+//!
+//! One global scheduler thread and W worker threads execute each simulated
+//! cycle in lock-step through four sync-points per worker (paper Table 3):
+//!
+//! | sync-point | writer    | waiter    | gates            |
+//! |------------|-----------|-----------|------------------|
+//! | WORK       | scheduler | worker    | work phase       |
+//! | TRANSFER   | scheduler | worker    | transfer phase   |
+//! | PHASE0     | worker    | scheduler | end of work      |
+//! | PHASE1     | worker    | scheduler | end of transfer  |
+//!
+//! The scheduler per tick (paper Fig 6):
+//! `lockAll(TRANSFER); unlockAll(WORK); waitAll(PHASE0); lockAll(WORK);
+//! unlockAll(TRANSFER); waitAll(PHASE1)`.
+//!
+//! The worker (paper Fig 7): `wait(WORK); unlock(PHASE1); loop { work;
+//! lock(PHASE1); unlock(PHASE0); wait(TRANSFER); transfer; lock(PHASE0);
+//! unlock(PHASE1); wait(WORK) }`.
+//!
+//! With the **common-atomic** method the scheduler signals all workers
+//! through a single monotone generation counter: `phase = 2c+1` opens the
+//! work phase of cycle `c`, `phase = 2c+2` opens its transfer phase (an
+//! older generation is implicitly "locked", so `lockAll` costs zero
+//! operations). Workers still report back through per-worker PHASE0/1
+//! atomics — the scheduler remains the only writer of the common variable,
+//! exactly as the paper prescribes.
+//!
+//! Sync operations are counted per thread (padded slots — counting must
+//! not introduce the very contention it measures) to substantiate the
+//! paper's "lock economy" conclusion: operations per cycle are
+//! O(workers), independent of model size.
+
+use super::syncpoint::{AtomicGate, Gate, MutexGate, SpinGate, SpinMode, SyncMethod};
+use crate::engine::model::{Model, RunOpts};
+use crate::stats::{PhaseTimers, RunStats};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Cache-line padded atomic, one per thread, for contention-free op
+/// counting.
+#[repr(align(64))]
+struct PadCounter(AtomicU64);
+
+impl PadCounter {
+    fn new() -> Self {
+        PadCounter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    fn bump(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+enum GatesImpl {
+    /// One gate per (sync-point, worker): the mutex / spinlock / atomic
+    /// methods of paper Fig 9.
+    PerWorker {
+        work: Vec<Box<dyn Gate>>,
+        transfer: Vec<Box<dyn Gate>>,
+        phase0: Vec<Box<dyn Gate>>,
+        phase1: Vec<Box<dyn Gate>>,
+    },
+    /// The common-atomic method: one scheduler-written generation counter
+    /// opens WORK/TRANSFER for every worker at once.
+    Common {
+        phase: AtomicU64,
+        spin: SpinMode,
+        phase0: Vec<AtomicGate>,
+        phase1: Vec<AtomicGate>,
+    },
+}
+
+/// All sync-points for one run, plus per-thread op counters
+/// (slot 0 = scheduler, slot 1+w = worker w).
+pub struct LadderGates {
+    imp: GatesImpl,
+    ops: Vec<PadCounter>,
+}
+
+impl LadderGates {
+    pub fn new(method: SyncMethod, workers: usize, spin: SpinMode) -> Self {
+        let mk_closed = |_: usize| -> Box<dyn Gate> {
+            match method {
+                SyncMethod::Mutex => Box::new(MutexGate::new(true)),
+                SyncMethod::Spinlock => Box::new(SpinGate::new(true, spin)),
+                SyncMethod::Atomic => Box::new(AtomicGate::new(true, spin)),
+                SyncMethod::CommonAtomic => unreachable!(),
+            }
+        };
+        let imp = match method {
+            SyncMethod::CommonAtomic => GatesImpl::Common {
+                phase: AtomicU64::new(0),
+                spin,
+                phase0: (0..workers).map(|_| AtomicGate::new(true, spin)).collect(),
+                phase1: (0..workers).map(|_| AtomicGate::new(true, spin)).collect(),
+            },
+            _ => GatesImpl::PerWorker {
+                work: (0..workers).map(mk_closed).collect(),
+                transfer: (0..workers).map(mk_closed).collect(),
+                phase0: (0..workers).map(mk_closed).collect(),
+                phase1: (0..workers).map(mk_closed).collect(),
+            },
+        };
+        LadderGates {
+            imp,
+            ops: (0..=workers).map(|_| PadCounter::new()).collect(),
+        }
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.ops.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
+    }
+
+    // ---- scheduler side (thread slot 0) ----
+
+    /// `lockAll(TRANSFER)` — re-arm transfer gates for the coming cycle.
+    #[inline]
+    fn sched_close_transfer(&self) {
+        if let GatesImpl::PerWorker { transfer, .. } = &self.imp {
+            for g in transfer {
+                g.close();
+                self.ops[0].bump();
+            }
+        }
+        // Common: an old generation is implicitly closed — zero ops. This
+        // asymmetry is precisely why common-atomic wins Fig 9.
+    }
+
+    /// `unlockAll(WORK)` for cycle `c`.
+    #[inline]
+    fn sched_open_work(&self, c: u64) {
+        match &self.imp {
+            GatesImpl::PerWorker { work, .. } => {
+                for g in work {
+                    g.open();
+                    self.ops[0].bump();
+                }
+            }
+            GatesImpl::Common { phase, .. } => {
+                phase.store(2 * c + 1, Ordering::Release);
+                self.ops[0].bump();
+            }
+        }
+    }
+
+    /// `lockAll(WORK)` — re-arm work gates.
+    #[inline]
+    fn sched_close_work(&self) {
+        if let GatesImpl::PerWorker { work, .. } = &self.imp {
+            for g in work {
+                g.close();
+                self.ops[0].bump();
+            }
+        }
+    }
+
+    /// `unlockAll(TRANSFER)` for cycle `c`.
+    #[inline]
+    fn sched_open_transfer(&self, c: u64) {
+        match &self.imp {
+            GatesImpl::PerWorker { transfer, .. } => {
+                for g in transfer {
+                    g.open();
+                    self.ops[0].bump();
+                }
+            }
+            GatesImpl::Common { phase, .. } => {
+                phase.store(2 * c + 2, Ordering::Release);
+                self.ops[0].bump();
+            }
+        }
+    }
+
+    /// `waitAll(PHASE0)`.
+    #[inline]
+    fn sched_wait_phase0(&self) {
+        match &self.imp {
+            GatesImpl::PerWorker { phase0, .. } => {
+                for g in phase0 {
+                    g.wait();
+                    self.ops[0].bump();
+                }
+            }
+            GatesImpl::Common { phase0, .. } => {
+                for g in phase0 {
+                    g.wait();
+                    self.ops[0].bump();
+                }
+            }
+        }
+    }
+
+    /// `waitAll(PHASE1)`.
+    #[inline]
+    fn sched_wait_phase1(&self) {
+        match &self.imp {
+            GatesImpl::PerWorker { phase1, .. } => {
+                for g in phase1 {
+                    g.wait();
+                    self.ops[0].bump();
+                }
+            }
+            GatesImpl::Common { phase1, .. } => {
+                for g in phase1 {
+                    g.wait();
+                    self.ops[0].bump();
+                }
+            }
+        }
+    }
+
+    // ---- worker side (thread slot 1 + w) ----
+
+    /// `wait(WORK)` before working cycle `c`.
+    #[inline]
+    fn worker_wait_work(&self, w: usize, c: u64) {
+        match &self.imp {
+            GatesImpl::PerWorker { work, .. } => work[w].wait(),
+            GatesImpl::Common { phase, spin, .. } => {
+                while phase.load(Ordering::Acquire) < 2 * c + 1 {
+                    spin.relax();
+                }
+            }
+        }
+        self.ops[1 + w].bump();
+    }
+
+    /// `wait(TRANSFER)` before transferring cycle `c`.
+    #[inline]
+    fn worker_wait_transfer(&self, w: usize, c: u64) {
+        match &self.imp {
+            GatesImpl::PerWorker { transfer, .. } => transfer[w].wait(),
+            GatesImpl::Common { phase, spin, .. } => {
+                while phase.load(Ordering::Acquire) < 2 * c + 2 {
+                    spin.relax();
+                }
+            }
+        }
+        self.ops[1 + w].bump();
+    }
+
+    #[inline]
+    fn worker_close_phase0(&self, w: usize) {
+        match &self.imp {
+            GatesImpl::PerWorker { phase0, .. } => phase0[w].close(),
+            GatesImpl::Common { phase0, .. } => phase0[w].close(),
+        }
+        self.ops[1 + w].bump();
+    }
+
+    #[inline]
+    fn worker_open_phase0(&self, w: usize) {
+        match &self.imp {
+            GatesImpl::PerWorker { phase0, .. } => phase0[w].open(),
+            GatesImpl::Common { phase0, .. } => phase0[w].open(),
+        }
+        self.ops[1 + w].bump();
+    }
+
+    #[inline]
+    fn worker_close_phase1(&self, w: usize) {
+        match &self.imp {
+            GatesImpl::PerWorker { phase1, .. } => phase1[w].close(),
+            GatesImpl::Common { phase1, .. } => phase1[w].close(),
+        }
+        self.ops[1 + w].bump();
+    }
+
+    #[inline]
+    fn worker_open_phase1(&self, w: usize) {
+        match &self.imp {
+            GatesImpl::PerWorker { phase1, .. } => phase1[w].open(),
+            GatesImpl::Common { phase1, .. } => phase1[w].open(),
+        }
+        self.ops[1 + w].bump();
+    }
+}
+
+/// Options for a parallel (ladder) run.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelOpts {
+    pub method: SyncMethod,
+    pub spin: SpinMode,
+    pub run: RunOpts,
+}
+
+impl ParallelOpts {
+    pub fn new(method: SyncMethod, run: RunOpts) -> Self {
+        ParallelOpts {
+            method,
+            spin: SpinMode::Yield,
+            run,
+        }
+    }
+}
+
+/// Run `model` on `partition.len()` worker threads under the
+/// ladder-barrier, plus the global scheduler on the calling thread
+/// (the paper's dedicated M-th core).
+///
+/// The result is observably identical to `model.run_serial` with the same
+/// stop condition — the property checked by `tests/determinism.rs`.
+pub fn run_ladder(model: &mut Model, partition: &[Vec<u32>], opts: &ParallelOpts) -> RunStats {
+    let workers = partition.len();
+    assert!(workers >= 1, "need at least one worker cluster");
+    let gates = LadderGates::new(opts.method, workers, opts.spin);
+    let stop_flag = AtomicBool::new(false);
+    // Published cycle count for the iteration-number validation the paper
+    // describes in §5.1 ("validates that all workers are working on the
+    // same iteration number").
+    let sched_cycles = AtomicU64::new(0);
+
+    let t0 = Instant::now();
+    let timed = opts.run.timed;
+    let model_ref: &Model = model;
+    let per_worker: Vec<PhaseTimers> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for (w, units) in partition.iter().enumerate() {
+            let gates = &gates;
+            let stop_flag = &stop_flag;
+            handles.push(scope.spawn(move || {
+                let mut t = PhaseTimers::new();
+                // This cluster's active-port worklist (sender-owned by
+                // construction: only this cluster's sends populate it).
+                let mut dirty: Vec<u32> = Vec::new();
+                let mut cycle: u64 = 0;
+                // Paper Fig 7: wait(WORK); unlock(PHASE1).
+                gates.worker_wait_work(w, 0);
+                gates.worker_open_phase1(w);
+                loop {
+                    if stop_flag.load(Ordering::Acquire) {
+                        break;
+                    }
+                    // ---- work phase ----
+                    if timed {
+                        let tw = Instant::now();
+                        for &u in units {
+                            // SAFETY: partition is disjoint; this cluster
+                            // owns these units during the work phase.
+                            unsafe { model_ref.work_one(u, cycle, &mut dirty) };
+                        }
+                        t.work_ns += tw.elapsed().as_nanos() as u64;
+                    } else {
+                        for &u in units {
+                            // SAFETY: as above.
+                            unsafe { model_ref.work_one(u, cycle, &mut dirty) };
+                        }
+                    }
+                    gates.worker_close_phase1(w);
+                    gates.worker_open_phase0(w);
+                    if timed {
+                        let tb = Instant::now();
+                        gates.worker_wait_transfer(w, cycle);
+                        t.barrier_ns += tb.elapsed().as_nanos() as u64;
+                        // ---- transfer phase ----
+                        let tt = Instant::now();
+                        // SAFETY: the worklist holds only ports whose
+                        // sender is in this cluster.
+                        unsafe { model_ref.transfer_dirty(&mut dirty, cycle) };
+                        t.transfer_ns += tt.elapsed().as_nanos() as u64;
+                    } else {
+                        gates.worker_wait_transfer(w, cycle);
+                        // SAFETY: as above.
+                        unsafe { model_ref.transfer_dirty(&mut dirty, cycle) };
+                    }
+                    gates.worker_close_phase0(w);
+                    gates.worker_open_phase1(w);
+                    cycle += 1;
+                    if timed {
+                        let tb = Instant::now();
+                        gates.worker_wait_work(w, cycle);
+                        t.barrier_ns += tb.elapsed().as_nanos() as u64;
+                    } else {
+                        gates.worker_wait_work(w, cycle);
+                    }
+                }
+                gates.worker_open_phase0(w);
+                t.cycles = cycle;
+                t
+            }));
+        }
+
+        // ---- global scheduler (paper Fig 6), on this thread ----
+        let mut cycle: u64 = 0;
+        loop {
+            // Between ticks all workers are parked at wait(WORK): the
+            // scheduler has exclusive model access for the stop check.
+            // SAFETY: exclusivity argument above; gates provide the
+            // happens-before edges.
+            let stop_now = unsafe { model_ref.should_stop_shared(&opts.run.stop, cycle) };
+            if stop_now {
+                stop_flag.store(true, Ordering::Release);
+                // Release the workers so they can observe stop and exit.
+                gates.sched_open_work(cycle);
+                break;
+            }
+            // tick():
+            gates.sched_close_transfer();
+            gates.sched_open_work(cycle);
+            gates.sched_wait_phase0();
+            gates.sched_close_work();
+            gates.sched_open_transfer(cycle);
+            gates.sched_wait_phase1();
+            cycle += 1;
+            sched_cycles.store(cycle, Ordering::Relaxed);
+        }
+
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed();
+
+    let cycles = sched_cycles.load(Ordering::Relaxed);
+    // Iteration-number validation: every worker must have executed exactly
+    // the scheduler's cycle count.
+    for (w, t) in per_worker.iter().enumerate() {
+        assert_eq!(
+            t.cycles, cycles,
+            "worker {w} ran {} cycles, scheduler ran {cycles}",
+            t.cycles
+        );
+    }
+
+    let mut counters = model.counters().snapshot();
+    counters.merge(&model.unit_stats());
+    RunStats {
+        cycles,
+        wall,
+        workers,
+        per_worker,
+        counters,
+        sync_ops: gates.total_ops(),
+        fingerprint: if opts.run.fingerprint {
+            model.fingerprint()
+        } else {
+            0
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::message::Msg;
+    use crate::engine::model::{ModelBuilder, Stop};
+    use crate::engine::port::{InPort, OutPort, PortCfg};
+    use crate::engine::unit::{Ctx, Unit};
+    use crate::engine::Fnv;
+
+    struct Stage {
+        inp: Option<InPort>,
+        out: Option<OutPort>,
+        seq: u64,
+        limit: u64,
+        received: u64,
+        acc: u64,
+    }
+
+    impl Stage {
+        fn source(out: OutPort, limit: u64) -> Self {
+            Stage {
+                inp: None,
+                out: Some(out),
+                seq: 0,
+                limit,
+                received: 0,
+                acc: 0,
+            }
+        }
+
+        fn mid(inp: InPort, out: OutPort) -> Self {
+            Stage {
+                inp: Some(inp),
+                out: Some(out),
+                seq: 0,
+                limit: 0,
+                received: 0,
+                acc: 0,
+            }
+        }
+
+        fn sink(inp: InPort) -> Self {
+            Stage {
+                inp: Some(inp),
+                out: None,
+                seq: 0,
+                limit: 0,
+                received: 0,
+                acc: 0,
+            }
+        }
+    }
+
+    impl Unit for Stage {
+        fn work(&mut self, ctx: &mut Ctx<'_>) {
+            match (self.inp, self.out) {
+                (None, Some(out)) => {
+                    if self.seq < self.limit && ctx.out_vacant(out) {
+                        ctx.send(out, Msg::with(1, self.seq, 0, 0)).unwrap();
+                        self.seq += 1;
+                    }
+                }
+                (Some(inp), Some(out)) => {
+                    if ctx.out_vacant(out) {
+                        if let Some(mut m) = ctx.recv(inp) {
+                            m.b = m.a * 2;
+                            ctx.send(out, m).unwrap();
+                        }
+                    }
+                }
+                (Some(inp), None) => {
+                    while let Some(m) = ctx.recv(inp) {
+                        assert_eq!(m.a, self.received, "FIFO broken");
+                        self.received += 1;
+                        self.acc = self.acc.wrapping_mul(31).wrapping_add(m.b);
+                    }
+                }
+                (None, None) => {}
+            }
+        }
+
+        fn state_hash(&self, h: &mut Fnv) {
+            h.write_u64(self.seq);
+            h.write_u64(self.received);
+            h.write_u64(self.acc);
+        }
+
+        fn is_idle(&self) -> bool {
+            self.seq >= self.limit
+        }
+    }
+
+    /// Linear pipeline of `n` stages, first produces `msgs` messages.
+    fn pipeline(n: usize, msgs: u64) -> Model {
+        let mut mb = ModelBuilder::new();
+        let ids: Vec<u32> = (0..n).map(|i| mb.reserve_unit(&format!("s{i}"))).collect();
+        let mut ports = Vec::new();
+        for i in 0..n - 1 {
+            ports.push(mb.connect(ids[i], ids[i + 1], PortCfg::new(2, 1)));
+        }
+        for i in 0..n {
+            let unit: Box<dyn Unit> = if i == 0 {
+                Box::new(Stage::source(ports[0].0, msgs))
+            } else if i == n - 1 {
+                Box::new(Stage::sink(ports[i - 1].1))
+            } else {
+                Box::new(Stage::mid(ports[i - 1].1, ports[i].0))
+            };
+            mb.install(ids[i], unit);
+        }
+        mb.build().unwrap()
+    }
+
+    fn chunk_partition(n: usize, clusters: usize) -> Vec<Vec<u32>> {
+        let mut p = vec![Vec::new(); clusters];
+        for u in 0..n {
+            p[u % clusters].push(u as u32);
+        }
+        p
+    }
+
+    #[test]
+    fn parallel_matches_serial_all_methods() {
+        let cycles = 300;
+        let serial_fp = {
+            let mut m = pipeline(6, 100);
+            m.run_serial(RunOpts::cycles(cycles).fingerprinted())
+                .fingerprint
+        };
+        for method in SyncMethod::ALL {
+            for workers in [1, 2, 3] {
+                let mut m = pipeline(6, 100);
+                let part = chunk_partition(6, workers);
+                let stats = run_ladder(
+                    &mut m,
+                    &part,
+                    &ParallelOpts::new(method, RunOpts::cycles(cycles).fingerprinted()),
+                );
+                assert_eq!(
+                    stats.fingerprint,
+                    serial_fp,
+                    "method={} workers={workers} diverged from serial",
+                    method.name()
+                );
+                assert_eq!(stats.cycles, cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn lock_economy_is_o_workers_not_o_units() {
+        // Same worker count, 10x the units: sync op count must not grow.
+        let cycles = 50;
+        let ops_small = {
+            let mut m = pipeline(4, 10);
+            run_ladder(
+                &mut m,
+                &chunk_partition(4, 2),
+                &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::cycles(cycles)),
+            )
+            .sync_ops
+        };
+        let ops_large = {
+            let mut m = pipeline(40, 10);
+            run_ladder(
+                &mut m,
+                &chunk_partition(40, 2),
+                &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::cycles(cycles)),
+            )
+            .sync_ops
+        };
+        assert_eq!(
+            ops_small, ops_large,
+            "sync ops must depend on workers only"
+        );
+    }
+
+    #[test]
+    fn common_atomic_uses_fewer_sched_ops_than_per_worker() {
+        let cycles = 50;
+        let run = |method| {
+            let mut m = pipeline(8, 10);
+            run_ladder(
+                &mut m,
+                &chunk_partition(8, 4),
+                &ParallelOpts::new(method, RunOpts::cycles(cycles)),
+            )
+            .sync_ops
+        };
+        let common = run(SyncMethod::CommonAtomic);
+        let atomic = run(SyncMethod::Atomic);
+        assert!(
+            common < atomic,
+            "common-atomic ({common}) should use fewer ops than per-worker atomic ({atomic})"
+        );
+    }
+
+    #[test]
+    fn counter_stop_works_in_parallel() {
+        let mut mb = ModelBuilder::new();
+        let delivered = mb.counter("delivered");
+        let a = mb.reserve_unit("a");
+        let b = mb.reserve_unit("b");
+        let (tx, rx) = mb.connect(a, b, PortCfg::new(2, 1));
+        struct Src {
+            out: OutPort,
+        }
+        impl Unit for Src {
+            fn work(&mut self, ctx: &mut Ctx<'_>) {
+                if ctx.out_vacant(self.out) {
+                    ctx.send(self.out, Msg::new(0)).unwrap();
+                }
+            }
+        }
+        struct Snk {
+            inp: InPort,
+            id: crate::stats::counters::CounterId,
+        }
+        impl Unit for Snk {
+            fn work(&mut self, ctx: &mut Ctx<'_>) {
+                while let Some(_m) = ctx.recv(self.inp) {
+                    ctx.counters.add(self.id, 1);
+                }
+            }
+        }
+        mb.install(a, Box::new(Src { out: tx }));
+        mb.install(
+            b,
+            Box::new(Snk {
+                inp: rx,
+                id: delivered,
+            }),
+        );
+        let mut m = mb.build().unwrap();
+        let stats = run_ladder(
+            &mut m,
+            &[vec![0], vec![1]],
+            &ParallelOpts::new(
+                SyncMethod::CommonAtomic,
+                RunOpts::with_stop(Stop::CounterAtLeast {
+                    counter: delivered,
+                    target: 25,
+                    max_cycles: 10_000,
+                }),
+            ),
+        );
+        assert!(stats.counters.get("delivered") >= 25);
+        assert!(stats.cycles < 100);
+    }
+
+    #[test]
+    fn timed_run_collects_phase_timers() {
+        let mut m = pipeline(4, 50);
+        let stats = run_ladder(
+            &mut m,
+            &chunk_partition(4, 2),
+            &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::cycles(100).timed()),
+        );
+        assert_eq!(stats.per_worker.len(), 2);
+        let (w, t, b) = stats.phase_split();
+        assert!(w > 0 && t > 0 && b > 0, "timers populated: {w} {t} {b}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Synchronization: sync-points (paper Tables 3–5), the ladder-barrier
+//! scheduler/worker protocol (paper Figs 6–8), and the barrier-speed
+//! micro-benchmark (paper Figs 9–11).
+
+pub mod bench;
+pub mod ladder;
+pub mod syncpoint;
+
+pub use ladder::{run_ladder, LadderGates, ParallelOpts};
+pub use syncpoint::{Gate, SpinMode, SyncMethod};

@@ -1,0 +1,390 @@
+//! Assembly of the paper's CPU configurations: N cores (light in-order or
+//! full out-of-order), each with private L1+L2, a mesh NoC, shared banked
+//! L3 with the MESI directory, and one DRAM channel per bank.
+//!
+//! Unit construction order groups each core's units consecutively
+//! (core, L1, L2), so the `Contiguous` partition strategy maps naturally
+//! to the paper's "2 simulated cores per worker" clustering.
+
+use crate::cpu::light::LightCore;
+use crate::cpu::ooo::{OooCfg, OooCore};
+use crate::cpu::Trace;
+use crate::engine::{Model, ModelBuilder, PortCfg};
+use crate::mem::cache::CacheCfg;
+use crate::mem::dir::DirBank;
+use crate::mem::dram::DramChannel;
+use crate::mem::l1::L1Cache;
+use crate::mem::l2::L2Cache;
+use crate::noc::{Mesh, MeshCfg};
+use crate::stats::counters::CounterId;
+
+/// Which core performance model to instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreKind {
+    /// Simple in-order core (paper §5.2, "light CPU").
+    Light,
+    /// Full out-of-order core (paper §5.3).
+    Ooo(OooCfg),
+}
+
+#[derive(Debug, Clone)]
+pub struct CpuSystemCfg {
+    pub kind: CoreKind,
+    /// Number of L3 banks (each with its own DRAM channel).
+    pub banks: usize,
+    pub l1: CacheCfg,
+    pub l2: CacheCfg,
+    /// Per-bank L3 slice.
+    pub l3_bank: CacheCfg,
+    pub dram_latency: u64,
+    /// Light-core multiply latency (see `cpu::light`; rule-2 ablation).
+    pub mul_latency: u64,
+    /// Core→L1 port delay (L1 hit latency contribution).
+    pub l1_delay: u64,
+    /// L1→L2 port delay (L2 hit latency contribution).
+    pub l2_delay: u64,
+    pub mesh_link_delay: u64,
+}
+
+impl Default for CpuSystemCfg {
+    fn default() -> Self {
+        CpuSystemCfg {
+            kind: CoreKind::Light,
+            banks: 4,
+            l1: CacheCfg::new(32 * 1024, 4),
+            l2: CacheCfg::new(256 * 1024, 8),
+            l3_bank: CacheCfg::new(2 * 1024 * 1024, 16),
+            dram_latency: 100,
+            mul_latency: crate::cpu::light::MUL_LATENCY,
+            l1_delay: 1,
+            l2_delay: 2,
+            mesh_link_delay: 1,
+        }
+    }
+}
+
+/// Handles into the built system.
+pub struct CpuSystemHandles {
+    pub core_units: Vec<u32>,
+    /// Unit ids per core group: [core, l1, l2].
+    pub core_groups: Vec<[u32; 3]>,
+    /// Remaining infrastructure units (banks, DRAM channels, routers).
+    pub infra_units: Vec<u32>,
+    pub cores_done: CounterId,
+    pub num_cores: usize,
+}
+
+impl CpuSystemHandles {
+    /// The paper's clustering (§5.2): simulated cores evenly distributed
+    /// among worker threads — core group c goes to cluster c mod W, with
+    /// each core's private L1/L2 kept on its core's cluster and the shared
+    /// infrastructure (L3 banks, DRAM, routers) dealt round-robin.
+    pub fn partition(&self, workers: usize) -> Vec<Vec<u32>> {
+        let workers = workers.max(1).min(self.core_groups.len().max(1));
+        let mut p = vec![Vec::new(); workers];
+        for (c, group) in self.core_groups.iter().enumerate() {
+            p[c % workers].extend_from_slice(group);
+        }
+        for (i, &u) in self.infra_units.iter().enumerate() {
+            p[i % workers].push(u);
+        }
+        p
+    }
+}
+
+/// Build a full CPU system for the given per-core traces.
+pub fn build_cpu_system(traces: Vec<Trace>, cfg: &CpuSystemCfg) -> (Model, CpuSystemHandles) {
+    let cores = traces.len();
+    assert!(cores >= 1 && cores <= 64);
+    let mut mb = ModelBuilder::new();
+    let cores_done = mb.counter("cores_done");
+
+    // Reserve per-core units (consecutively per core).
+    let mut core_ids = Vec::with_capacity(cores);
+    let mut l1_ids = Vec::with_capacity(cores);
+    let mut l2_ids = Vec::with_capacity(cores);
+    for c in 0..cores {
+        core_ids.push(mb.reserve_unit(&format!("core{c}")));
+        l1_ids.push(mb.reserve_unit(&format!("l1_{c}")));
+        l2_ids.push(mb.reserve_unit(&format!("l2_{c}")));
+    }
+    let bank_ids: Vec<u32> = (0..cfg.banks)
+        .map(|b| mb.reserve_unit(&format!("l3bank{b}")))
+        .collect();
+    let dram_ids: Vec<u32> = (0..cfg.banks)
+        .map(|b| mb.reserve_unit(&format!("dram{b}")))
+        .collect();
+
+    // Mesh sized to fit cores + banks.
+    let nodes = cores + cfg.banks;
+    let width = (nodes as f64).sqrt().ceil() as u32;
+    let height = (nodes as u32).div_ceil(width);
+    let mut mesh = Mesh::build(
+        &mut mb,
+        MeshCfg {
+            width,
+            height,
+            link_capacity: 4,
+            link_delay: cfg.mesh_link_delay,
+            local_capacity: 4,
+        },
+    );
+    // Core c's L2 attaches at node c; bank b at node cores + b.
+    let core_nodes: Vec<u32> = (0..cores as u32).collect();
+    let bank_nodes: Vec<u32> = (0..cfg.banks as u32).map(|b| cores as u32 + b).collect();
+
+    for c in 0..cores {
+        // core ↔ L1
+        let (core_to_l1, l1_from_core) =
+            mb.connect(core_ids[c], l1_ids[c], PortCfg::new(4, cfg.l1_delay));
+        let (l1_to_core, core_from_l1) =
+            mb.connect(l1_ids[c], core_ids[c], PortCfg::new(4, cfg.l1_delay));
+        // L1 ↔ L2
+        let (l1_to_l2, l2_from_l1) =
+            mb.connect(l1_ids[c], l2_ids[c], PortCfg::new(4, cfg.l2_delay));
+        let (l2_to_l1, l1_from_l2) =
+            mb.connect(l2_ids[c], l1_ids[c], PortCfg::new(4, cfg.l2_delay));
+        // L2 ↔ NoC
+        let (l2_to_net, l2_from_net) = mesh.attach(&mut mb, core_nodes[c], l2_ids[c]);
+
+        match cfg.kind {
+            CoreKind::Light => {
+                let mut core = LightCore::new(
+                    c as u32,
+                    traces[c].ops.clone(),
+                    core_to_l1,
+                    core_from_l1,
+                    cores_done,
+                );
+                core.mul_latency = cfg.mul_latency;
+                mb.install(core_ids[c], Box::new(core));
+            }
+            CoreKind::Ooo(ooo_cfg) => {
+                mb.install(
+                    core_ids[c],
+                    Box::new(OooCore::new(
+                        c as u32,
+                        traces[c].ops.clone(),
+                        ooo_cfg,
+                        core_to_l1,
+                        core_from_l1,
+                        cores_done,
+                    )),
+                );
+            }
+        }
+        mb.install(
+            l1_ids[c],
+            Box::new(L1Cache::new(
+                c as u32,
+                cfg.l1,
+                l1_from_core,
+                l1_to_core,
+                l1_to_l2,
+                l1_from_l2,
+            )),
+        );
+        mb.install(
+            l2_ids[c],
+            Box::new(L2Cache::new(
+                c as u32,
+                core_nodes[c],
+                bank_nodes.clone(),
+                cfg.l2,
+                l2_from_l1,
+                l2_to_l1,
+                l2_to_net,
+                l2_from_net,
+            )),
+        );
+    }
+
+    for b in 0..cfg.banks {
+        let (bank_to_net, bank_from_net) = mesh.attach(&mut mb, bank_nodes[b], bank_ids[b]);
+        let (bank_to_dram, dram_from_bank) =
+            mb.connect(bank_ids[b], dram_ids[b], PortCfg::new(8, 1));
+        let (dram_to_bank, bank_from_dram) =
+            mb.connect(dram_ids[b], bank_ids[b], PortCfg::new(8, 1));
+        mb.install(
+            bank_ids[b],
+            Box::new(DirBank::new(
+                b as u32,
+                bank_nodes[b],
+                core_nodes.clone(),
+                cfg.l3_bank,
+                bank_from_net,
+                bank_to_net,
+                bank_to_dram,
+                bank_from_dram,
+            )),
+        );
+        mb.install(
+            dram_ids[b],
+            Box::new(DramChannel::new(
+                b as u32,
+                dram_from_bank,
+                dram_to_bank,
+                cfg.dram_latency,
+                1,
+            )),
+        );
+    }
+
+    let router_ids = mesh.router_ids.clone();
+    mesh.finish(&mut mb);
+    let model = mb.build().expect("cpu system wiring");
+    let core_groups: Vec<[u32; 3]> = (0..cores)
+        .map(|c| [core_ids[c], l1_ids[c], l2_ids[c]])
+        .collect();
+    let mut infra_units: Vec<u32> = Vec::new();
+    infra_units.extend(&bank_ids);
+    infra_units.extend(&dram_ids);
+    infra_units.extend(&router_ids);
+    (
+        model,
+        CpuSystemHandles {
+            core_units: core_ids,
+            core_groups,
+            infra_units,
+            cores_done,
+            num_cores: cores,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::isa::{OpClass, TraceOp, NO_REG};
+    use crate::engine::{RunOpts, Stop};
+
+    fn ld(addr: u64) -> TraceOp {
+        TraceOp::new(OpClass::Load, 1, 2, NO_REG, addr, 0, false)
+    }
+
+    fn st(addr: u64) -> TraceOp {
+        TraceOp::new(OpClass::Store, NO_REG, 1, 2, addr, 0, false)
+    }
+
+    fn alu() -> TraceOp {
+        TraceOp::new(OpClass::Alu, 1, 1, 2, 0, 0, false)
+    }
+
+    fn run_traces(traces: Vec<Trace>) -> crate::stats::RunStats {
+        let (mut model, h) = build_cpu_system(traces, &CpuSystemCfg::default());
+        model.run_serial(RunOpts::with_stop(Stop::CounterAtLeast {
+            counter: h.cores_done,
+            target: h.num_cores as u64,
+            max_cycles: 200_000,
+        }))
+    }
+
+    #[test]
+    fn single_core_load_hits_after_fill() {
+        // Two loads to the same line: one L1 miss then one hit.
+        let t = Trace {
+            ops: vec![ld(0x1000), ld(0x1008), alu()],
+        };
+        let stats = run_traces(vec![t]);
+        assert_eq!(stats.counters.get("cores_done"), 1);
+        assert_eq!(stats.counters.get("core.retired"), 3);
+        assert_eq!(stats.counters.get("l1.misses"), 1);
+        assert_eq!(stats.counters.get("l1.hits"), 1);
+        assert_eq!(stats.counters.get("dir.gets"), 1);
+        assert_eq!(stats.counters.get("dram.reads"), 1);
+        // Sanity on latency: one full miss is ~dram + hops, well under 1k.
+        assert!(stats.cycles > 100 && stats.cycles < 1_000, "{}", stats.cycles);
+    }
+
+    #[test]
+    fn store_then_load_same_core() {
+        let t = Trace {
+            ops: vec![st(0x2000), ld(0x2000)],
+        };
+        let stats = run_traces(vec![t]);
+        assert_eq!(stats.counters.get("cores_done"), 1);
+        // Store triggers GetM; load then misses L1 (write-through,
+        // no-allocate) but hits M in L2 — no second directory request.
+        assert_eq!(stats.counters.get("dir.getm"), 1);
+        assert_eq!(stats.counters.get("dir.gets"), 0);
+    }
+
+    #[test]
+    fn read_sharing_two_cores() {
+        // Both cores read the same line: GetS x2, second served from L3
+        // (or via owner recall), no invalidations.
+        let t0 = Trace { ops: vec![ld(0x3000)] };
+        let t1 = Trace { ops: vec![ld(0x3000)] };
+        let stats = run_traces(vec![t0, t1]);
+        assert_eq!(stats.counters.get("cores_done"), 2);
+        assert_eq!(stats.counters.get("dir.gets"), 2);
+        assert_eq!(stats.counters.get("dram.reads"), 1, "one fetch, then share");
+        assert_eq!(stats.counters.get("dir.invs_sent"), 0);
+    }
+
+    #[test]
+    fn write_invalidates_reader() {
+        // Core 0 reads a line; core 1 writes it (many ALU ops later so the
+        // read settles first). The write must recall/invalidate core 0.
+        let mut ops0 = vec![ld(0x4000)];
+        ops0.extend(std::iter::repeat(alu()).take(5));
+        let mut ops1: Vec<TraceOp> = std::iter::repeat(alu()).take(400).collect();
+        ops1.push(st(0x4000));
+        let stats = run_traces(vec![Trace { ops: ops0 }, Trace { ops: ops1 }]);
+        assert_eq!(stats.counters.get("cores_done"), 2);
+        assert_eq!(stats.counters.get("dir.getm"), 1);
+        // Core 0 held the line (E or S): the GetM either forwards
+        // (owner recall) or invalidates (sharer).
+        let recalls =
+            stats.counters.get("dir.fwds_sent") + stats.counters.get("dir.invs_sent");
+        assert!(recalls >= 1, "writer must recall reader's copy");
+    }
+
+    #[test]
+    fn parallel_matches_serial_cpu_system() {
+        use crate::sched::{partition, PartitionStrategy};
+        use crate::sync::{run_ladder, ParallelOpts, SyncMethod};
+        let mk_traces = || {
+            (0..4)
+                .map(|c| Trace {
+                    ops: (0..50)
+                        .map(|i| {
+                            if i % 3 == 0 {
+                                ld(0x1000 + ((c * 64 + i * 8) as u64 % 4096))
+                            } else if i % 7 == 0 {
+                                st(0x8000 + (i as u64 % 512))
+                            } else {
+                                alu()
+                            }
+                        })
+                        .collect(),
+                })
+                .collect::<Vec<_>>()
+        };
+        let stop = |h: &CpuSystemHandles| Stop::CounterAtLeast {
+            counter: h.cores_done,
+            target: 4,
+            max_cycles: 100_000,
+        };
+        let (mut serial, h) = build_cpu_system(mk_traces(), &CpuSystemCfg::default());
+        let s = serial.run_serial(RunOpts::with_stop(stop(&h)).fingerprinted());
+        assert_eq!(s.counters.get("cores_done"), 4);
+        for workers in [2, 3] {
+            let (mut par, h) = build_cpu_system(mk_traces(), &CpuSystemCfg::default());
+            let part = partition(&par, workers, PartitionStrategy::Contiguous);
+            let p = run_ladder(
+                &mut par,
+                &part,
+                &ParallelOpts::new(
+                    SyncMethod::CommonAtomic,
+                    RunOpts::with_stop(stop(&h)).fingerprinted(),
+                ),
+            );
+            assert_eq!(
+                p.fingerprint, s.fingerprint,
+                "parallel ({workers}w) must match serial"
+            );
+            assert_eq!(p.cycles, s.cycles, "cycle counts must match");
+        }
+    }
+}

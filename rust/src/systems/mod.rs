@@ -1,0 +1,7 @@
+//! Ready-made model assemblies for the paper's evaluated configurations:
+//! the light-CPU multicore (§5.2), the out-of-order multicore (§5.3), and
+//! the data-center fabric (§5.4, in `crate::dc`).
+
+pub mod cpu_system;
+
+pub use cpu_system::{build_cpu_system, CoreKind, CpuSystemCfg, CpuSystemHandles};

@@ -1,0 +1,170 @@
+//! Minimal command-line argument parser (offline substitute for `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Each subcommand of the `scalesim` binary declares the options
+//! it understands; unknown options are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    /// Option names the command declared; used for error reporting.
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand names).
+    ///
+    /// `known_opts` are options that take a value, `known_flags` are
+    /// booleans. Anything else is positional.
+    pub fn parse(
+        argv: &[String],
+        known_opts: &[&str],
+        known_flags: &[&str],
+    ) -> Result<Self, String> {
+        let mut a = Args::default();
+        a.known = known_opts
+            .iter()
+            .chain(known_flags.iter())
+            .map(|s| s.to_string())
+            .collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if known_flags.contains(&name.as_str()) {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} does not take a value"));
+                    }
+                    a.flags.push(name);
+                } else if known_opts.contains(&name.as_str()) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    a.opts.insert(name, val);
+                } else {
+                    return Err(format!(
+                        "unknown option --{name}; known: {}",
+                        a.known.join(", ")
+                    ));
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_u64(v).map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.get_u64(name, default as u64).map(|v| v as usize)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Parse a u64 allowing `_` separators and `k`/`m`/`g` suffixes
+/// (e.g. `128k`, `3m`, `1_000_000`).
+pub fn parse_u64(s: &str) -> Result<u64, String> {
+    let s = s.replace('_', "");
+    let (body, mult) = match s.chars().last() {
+        Some('k') | Some('K') => (&s[..s.len() - 1], 1_000u64),
+        Some('m') | Some('M') => (&s[..s.len() - 1], 1_000_000u64),
+        Some('g') | Some('G') => (&s[..s.len() - 1], 1_000_000_000u64),
+        _ => (s.as_str(), 1u64),
+    };
+    body.parse::<u64>()
+        .map(|v| v * mult)
+        .map_err(|e| format!("bad number {s:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_opts_flags_positional() {
+        let a = Args::parse(
+            &sv(&["--cycles", "100", "--verbose", "--out=x.txt", "posarg"]),
+            &["cycles", "out"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.get_u64("cycles", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("x.txt"));
+        assert_eq!(a.positional(), &["posarg".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(Args::parse(&sv(&["--nope", "1"]), &["cycles"], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--cycles"]), &["cycles"], &[]).is_err());
+    }
+
+    #[test]
+    fn suffixes() {
+        assert_eq!(parse_u64("128k").unwrap(), 128_000);
+        assert_eq!(parse_u64("3m").unwrap(), 3_000_000);
+        assert_eq!(parse_u64("1_000").unwrap(), 1_000);
+        assert!(parse_u64("xx").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &["cycles"], &[]).unwrap();
+        assert_eq!(a.get_u64("cycles", 77).unwrap(), 77);
+        assert_eq!(a.get_or("cycles", "d"), "d");
+    }
+}

@@ -1,0 +1,150 @@
+//! Minimal flat-TOML config parser (offline substitute for `serde`+`toml`).
+//!
+//! The launcher accepts `--config file.toml` for every experiment; the file
+//! holds `key = value` lines with optional `[section]` headers. Sections
+//! flatten to `section.key`. Values are strings, integers, floats or bools;
+//! everything is kept as a string and converted on access, mirroring the
+//! CLI layer so the two can be merged (CLI overrides file).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse from TOML-subset text. Comments start with `#`.
+    pub fn from_str(text: &str) -> Result<Self, String> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.split_once('#') {
+                Some((body, _)) => body.trim(),
+                None => raw.trim(),
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[') {
+                let sec = sec
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = sec.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            cfg.values.insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::from_str(&text)
+    }
+
+    pub fn set(&mut self, key: &str, val: impl ToString) {
+        self.values.insert(key.to_string(), val.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => super::cli::parse_u64(v).map_err(|e| format!("{key}: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        self.get_u64(key, default as u64).map(|v| v as usize)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<f64>().map_err(|e| format!("{key}: {e}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(format!("{key}: bad bool {v:?}")),
+        }
+    }
+
+    /// Merge `other` on top of `self` (other wins).
+    pub fn overlay(&mut self, other: &Config) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::from_str(
+            r#"
+            # top comment
+            seed = 42
+            [model]
+            cores = 32        # trailing comment
+            skew = 0.9
+            name = "oltp"
+            coherent = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.get_u64("seed", 0).unwrap(), 42);
+        assert_eq!(cfg.get_usize("model.cores", 0).unwrap(), 32);
+        assert!((cfg.get_f64("model.skew", 0.0).unwrap() - 0.9).abs() < 1e-12);
+        assert_eq!(cfg.get("model.name"), Some("oltp"));
+        assert!(cfg.get_bool("model.coherent", false).unwrap());
+    }
+
+    #[test]
+    fn overlay_wins() {
+        let mut a = Config::from_str("x = 1\ny = 2").unwrap();
+        let b = Config::from_str("y = 3").unwrap();
+        a.overlay(&b);
+        assert_eq!(a.get_u64("x", 0).unwrap(), 1);
+        assert_eq!(a.get_u64("y", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(Config::from_str("[bad").is_err());
+        assert!(Config::from_str("novalue").is_err());
+        let cfg = Config::from_str("z = zz").unwrap();
+        assert!(cfg.get_u64("z", 0).is_err());
+        assert!(cfg.get_bool("z", false).is_err());
+    }
+}

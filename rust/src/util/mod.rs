@@ -1,0 +1,9 @@
+//! Small self-contained utilities: deterministic RNG, CLI parsing, config.
+//!
+//! This build is fully offline; instead of pulling `rand`, `clap`, `serde`
+//! etc., we carry minimal hand-rolled equivalents tailored to what the
+//! simulator actually needs.
+
+pub mod cli;
+pub mod config;
+pub mod rng;

@@ -1,0 +1,14 @@
+//! Synthetic workload generators (DESIGN.md §3 substitutions).
+//!
+//! The paper drives its CPU models with OLTP (SQL) and SPEC2006 through a
+//! QEMU functional model. We synthesize programs in the tiny RISC ISA with
+//! the same performance-relevant structure — OLTP's lock contention, index
+//! walks and logging; SPEC-like loop kernels with controllable ILP and
+//! locality — and execute them on the real functional model so all sharing
+//! and contention is genuine.
+
+pub mod oltp;
+pub mod spec;
+
+pub use oltp::{generate_oltp_traces, OltpCfg};
+pub use spec::{generate_spec_traces, SpecKind};

@@ -1,0 +1,376 @@
+//! Synthetic OLTP workload: transactional key-value operations over shared
+//! tables, with per-row spinlocks, index walks (dependent loads), and a
+//! per-core append-only log — the performance-relevant skeleton of the
+//! OLTP-Bench workloads the paper runs (TPC-C-style row locking and hot-key
+//! contention).
+//!
+//! Memory layout (all 8-byte words, 64-byte rows):
+//!
+//! ```text
+//! [locks_base ..)   lock words, one per row (own line each)
+//! [rows_base ..)    row payloads, 64 B per row
+//! [index_base ..)   index nodes: chains walked before touching the row
+//! [log_base ..)     per-core append-only log regions
+//! [txn_base ..)     per-core transaction input tables (row id, is_write)
+//! ```
+//!
+//! The per-core program is a *loop* over its transaction input table (the
+//! "client requests"), exactly like a real OLTP worker thread: stable
+//! branch PCs for the spin/commit branches (so branch predictors see
+//! realistic streams), data-dependent read-vs-write branches, genuine CAS
+//! contention through the shared lock words.
+
+use crate::cpu::functional::Functional;
+use crate::cpu::isa::{Alu, Cond, Instr, Program};
+use crate::cpu::Trace;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct OltpCfg {
+    pub cores: usize,
+    /// Rows in the shared table.
+    pub rows: u64,
+    /// Zipf skew for row selection (0 = uniform, →1 = very hot).
+    pub theta: f64,
+    /// Transactions per core in the generated input table.
+    pub txns_per_core: u64,
+    /// Fraction of transactions that write (vs read-only).
+    pub write_frac: f64,
+    /// Dependent index-node hops before touching the row.
+    pub index_depth: u64,
+    /// Words read/written in the row payload (≤ 8 = one line).
+    pub row_words: u64,
+    /// Instruction budget per core when running the FM.
+    pub max_instrs_per_core: u64,
+    pub seed: u64,
+}
+
+impl Default for OltpCfg {
+    fn default() -> Self {
+        OltpCfg {
+            cores: 4,
+            rows: 1024,
+            theta: 0.6,
+            txns_per_core: 64,
+            write_frac: 0.5,
+            index_depth: 3,
+            row_words: 4,
+            max_instrs_per_core: 200_000,
+            seed: 0xB00C,
+        }
+    }
+}
+
+/// Layout constants.
+const ROW_BYTES: u64 = 64;
+const LOG_BYTES_PER_CORE: u64 = 64 * 1024;
+
+pub(crate) struct Layout {
+    pub locks_base: u64,
+    pub rows_base: u64,
+    pub index_base: u64,
+    pub log_base: u64,
+    pub txn_base: u64,
+    pub index_nodes: u64,
+    pub total: u64,
+}
+
+pub(crate) fn layout(cfg: &OltpCfg) -> Layout {
+    let locks_base = 64u64;
+    let rows_base = locks_base + cfg.rows * ROW_BYTES;
+    let index_nodes = (cfg.rows / 4).max(16).next_power_of_two();
+    let index_base = rows_base + cfg.rows * ROW_BYTES;
+    let log_base = index_base + index_nodes * ROW_BYTES;
+    let txn_base = log_base + cfg.cores as u64 * LOG_BYTES_PER_CORE;
+    // Transaction table: 2 words (row, is_write) per txn per core.
+    let total = txn_base + cfg.cores as u64 * cfg.txns_per_core * 16;
+    Layout {
+        locks_base,
+        rows_base,
+        index_base,
+        log_base,
+        txn_base,
+        index_nodes,
+        total,
+    }
+}
+
+// Register conventions for generated code.
+const R_T1: u8 = 1; // scratch
+const R_VAL: u8 = 2;
+const R_T3: u8 = 3;
+const R_NODE: u8 = 4; // index-walk node id
+const R_ROW: u8 = 5; // current row id
+const R_ISWR: u8 = 6; // is_write flag
+const R_LOCKADDR: u8 = 10;
+const R_ZERO_CMP: u8 = 11; // expected value for CAS (0)
+const R_ONE: u8 = 12; // lock-taken value
+const R_ROWADDR: u8 = 13;
+const R_IDXADDR: u8 = 14;
+const R_LOGPTR: u8 = 15;
+const R_TXNPTR: u8 = 16; // walks the transaction input table
+const R_TXN: u8 = 20; // transaction counter
+const R_NTXN: u8 = 21;
+
+/// The per-core OLTP worker program: a loop over the transaction table.
+pub fn oltp_program(core: usize, cfg: &OltpCfg) -> Program {
+    let lay = layout(cfg);
+    let mut p = Program::new();
+    // Prologue.
+    p.push(Instr::Li { rd: R_ZERO_CMP, imm: 0 });
+    p.push(Instr::Li { rd: R_ONE, imm: 1 });
+    p.push(Instr::Li {
+        rd: R_LOGPTR,
+        imm: lay.log_base + core as u64 * LOG_BYTES_PER_CORE,
+    });
+    p.push(Instr::Li {
+        rd: R_TXNPTR,
+        imm: lay.txn_base + core as u64 * cfg.txns_per_core * 16,
+    });
+    p.push(Instr::Li { rd: R_TXN, imm: 0 });
+    p.push(Instr::Li { rd: R_NTXN, imm: cfg.txns_per_core });
+
+    p.label("txn_loop");
+    let loop_top = p.len();
+    // Fetch the next transaction descriptor: row id and write flag.
+    p.push(Instr::Ld { rd: R_ROW, rs1: R_TXNPTR, imm: 0 });
+    p.push(Instr::Ld { rd: R_ISWR, rs1: R_TXNPTR, imm: 8 });
+
+    // Index walk: `index_depth` dependent loads; node = row & (nodes-1),
+    // then node = (node*7 + 3) & (nodes-1) per hop (B-tree-ish descent).
+    p.push(Instr::OpImm {
+        alu: Alu::And,
+        rd: R_NODE,
+        rs1: R_ROW,
+        imm: (lay.index_nodes - 1) as i64,
+    });
+    for _ in 0..cfg.index_depth {
+        // idx_addr = index_base + node*64
+        p.push(Instr::OpImm { alu: Alu::Shl, rd: R_IDXADDR, rs1: R_NODE, imm: 6 });
+        p.push(Instr::OpImm {
+            alu: Alu::Add,
+            rd: R_IDXADDR,
+            rs1: R_IDXADDR,
+            imm: lay.index_base as i64,
+        });
+        p.push(Instr::Ld { rd: R_T1, rs1: R_IDXADDR, imm: 0 });
+        // key-compare flavoured ALU work + next node
+        p.push(Instr::OpImm { alu: Alu::Mul, rd: R_NODE, rs1: R_NODE, imm: 7 });
+        p.push(Instr::OpImm { alu: Alu::Add, rd: R_NODE, rs1: R_NODE, imm: 3 });
+        p.push(Instr::OpImm {
+            alu: Alu::And,
+            rd: R_NODE,
+            rs1: R_NODE,
+            imm: (lay.index_nodes - 1) as i64,
+        });
+    }
+
+    // Lock acquire: spin on CAS(lock, 0 → 1). Stable PC: the predictor
+    // sees this branch once per acquire attempt.
+    p.push(Instr::OpImm { alu: Alu::Shl, rd: R_LOCKADDR, rs1: R_ROW, imm: 6 });
+    p.push(Instr::OpImm {
+        alu: Alu::Add,
+        rd: R_LOCKADDR,
+        rs1: R_LOCKADDR,
+        imm: lay.locks_base as i64,
+    });
+    p.label("acquire");
+    let spin_pc = p.len();
+    p.push(Instr::Cas { rd: R_T1, rs1: R_LOCKADDR, rs2: R_ZERO_CMP, rs3: R_ONE });
+    let br_spin = p.push(Instr::Br { cond: Cond::Ne, rs1: R_T1, rs2: 0, off: 0 });
+    p.patch_off(br_spin, spin_pc);
+
+    // Critical section: read (and maybe write) `row_words` of the row.
+    p.push(Instr::OpImm { alu: Alu::Shl, rd: R_ROWADDR, rs1: R_ROW, imm: 6 });
+    p.push(Instr::OpImm {
+        alu: Alu::Add,
+        rd: R_ROWADDR,
+        rs1: R_ROWADDR,
+        imm: lay.rows_base as i64,
+    });
+    // Data-dependent branch: read-only transactions skip the write block.
+    let br_ro = p.push(Instr::Br { cond: Cond::Eq, rs1: R_ISWR, rs2: 0, off: 0 });
+    for w in 0..cfg.row_words {
+        p.push(Instr::Ld { rd: R_VAL, rs1: R_ROWADDR, imm: (w * 8) as i64 });
+        p.push(Instr::OpImm { alu: Alu::Add, rd: R_VAL, rs1: R_VAL, imm: 1 });
+        p.push(Instr::St { rs2: R_VAL, rs1: R_ROWADDR, imm: (w * 8) as i64 });
+    }
+    // Log append: two sequential stores + bump pointer.
+    p.push(Instr::St { rs2: R_VAL, rs1: R_LOGPTR, imm: 0 });
+    p.push(Instr::St { rs2: R_ROW, rs1: R_LOGPTR, imm: 8 });
+    p.push(Instr::OpImm { alu: Alu::Add, rd: R_LOGPTR, rs1: R_LOGPTR, imm: 16 });
+    let after_write = p.len();
+    let br_join = p.push(Instr::Jmp { off: 0 }); // writers skip the read block
+    p.patch_off(br_ro, after_write + 1);
+    // Read-only block.
+    for w in 0..cfg.row_words {
+        p.push(Instr::Ld { rd: R_T3, rs1: R_ROWADDR, imm: (w * 8) as i64 });
+        p.push(Instr::Op { alu: Alu::Xor, rd: R_T3, rs1: R_T3, rs2: R_VAL });
+    }
+    p.patch_off(br_join, p.len());
+
+    // Release: plain store of 0.
+    p.push(Instr::St { rs2: 0, rs1: R_LOCKADDR, imm: 0 });
+
+    // Advance to the next transaction.
+    p.push(Instr::OpImm { alu: Alu::Add, rd: R_TXNPTR, rs1: R_TXNPTR, imm: 16 });
+    p.push(Instr::OpImm { alu: Alu::Add, rd: R_TXN, rs1: R_TXN, imm: 1 });
+    let br_loop = p.push(Instr::Br { cond: Cond::Ne, rs1: R_TXN, rs2: R_NTXN, off: 0 });
+    p.patch_off(br_loop, loop_top);
+    p.push(Instr::Halt);
+    p
+}
+
+/// Build the functional model with programs + initialized transaction
+/// tables (the "client request stream" each core consumes).
+pub fn build_oltp_fm(cfg: &OltpCfg) -> Functional {
+    let lay = layout(cfg);
+    let programs: Vec<Program> = (0..cfg.cores).map(|c| oltp_program(c, cfg)).collect();
+    let mut fm = Functional::new(programs, lay.total as usize);
+    for core in 0..cfg.cores {
+        let mut rng = Rng::from_seed_stream(cfg.seed, core as u64 + 1);
+        let base = lay.txn_base + core as u64 * cfg.txns_per_core * 16;
+        for t in 0..cfg.txns_per_core {
+            let row = rng.gen_zipf(cfg.rows, cfg.theta);
+            let is_write = rng.gen_bool(cfg.write_frac) as u64;
+            fm.mem.store(base + t * 16, row);
+            fm.mem.store(base + t * 16 + 8, is_write);
+        }
+    }
+    fm
+}
+
+/// Generate programs, run the functional model, return per-core traces.
+pub fn generate_oltp_traces(cfg: &OltpCfg) -> Vec<Trace> {
+    let mut fm = build_oltp_fm(cfg);
+    fm.run(cfg.max_instrs_per_core)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::isa::OpClass;
+
+    #[test]
+    fn traces_are_generated_and_bounded() {
+        let cfg = OltpCfg {
+            cores: 2,
+            txns_per_core: 8,
+            ..Default::default()
+        };
+        let traces = generate_oltp_traces(&cfg);
+        assert_eq!(traces.len(), 2);
+        for t in &traces {
+            assert!(!t.is_empty());
+            assert!(t.len() <= cfg.max_instrs_per_core as usize);
+            // Ends with Halt (all txns completed within budget).
+            assert_eq!(t.ops.last().unwrap().class(), OpClass::Halt);
+        }
+    }
+
+    #[test]
+    fn workload_mix_is_oltp_like() {
+        let traces = generate_oltp_traces(&OltpCfg {
+            cores: 2,
+            txns_per_core: 32,
+            ..Default::default()
+        });
+        let all: Vec<_> = traces.iter().flat_map(|t| t.ops.iter()).collect();
+        let n = all.len() as f64;
+        let loads = all.iter().filter(|o| o.class() == OpClass::Load).count() as f64;
+        let stores = all.iter().filter(|o| o.class() == OpClass::Store).count() as f64;
+        let atomics = all.iter().filter(|o| o.class() == OpClass::Atomic).count() as f64;
+        let branches = all.iter().filter(|o| o.class() == OpClass::Branch).count() as f64;
+        assert!(loads / n > 0.15, "OLTP is load-heavy: {}", loads / n);
+        assert!(stores / n > 0.03, "stores present: {}", stores / n);
+        assert!(atomics > 0.0, "lock CAS present");
+        assert!(branches / n > 0.05, "loop + spin branches: {}", branches / n);
+    }
+
+    #[test]
+    fn branch_pcs_repeat_across_transactions() {
+        // The worker is a loop: its branches reuse PCs, so a predictor can
+        // learn them (this is what distinguishes the loop encoding from
+        // naive unrolling).
+        let traces = generate_oltp_traces(&OltpCfg {
+            cores: 1,
+            txns_per_core: 16,
+            ..Default::default()
+        });
+        let mut pcs = std::collections::HashMap::new();
+        for o in traces[0].ops.iter().filter(|o| o.class() == OpClass::Branch) {
+            *pcs.entry(o.pc).or_insert(0u32) += 1;
+        }
+        let max_reuse = pcs.values().copied().max().unwrap();
+        assert!(max_reuse >= 16, "loop branch executes once per txn: {max_reuse}");
+    }
+
+    #[test]
+    fn hot_rows_are_contended() {
+        // With strong skew and many cores, CAS retries must appear
+        // (more atomic ops than transactions).
+        let cfg = OltpCfg {
+            cores: 8,
+            rows: 64,
+            theta: 0.95,
+            txns_per_core: 32,
+            ..Default::default()
+        };
+        let traces = generate_oltp_traces(&cfg);
+        let atomics: usize = traces
+            .iter()
+            .map(|t| {
+                t.ops
+                    .iter()
+                    .filter(|o| o.class() == OpClass::Atomic)
+                    .count()
+            })
+            .sum();
+        let txns = (cfg.cores as u64 * cfg.txns_per_core) as usize;
+        assert!(
+            atomics > txns,
+            "contention should cause CAS retries: {atomics} vs {txns}"
+        );
+    }
+
+    #[test]
+    fn locks_serialize_all_writers_functionally() {
+        // Every write txn increments row word 0 under the lock; the FM's
+        // final memory must show a consistent total — i.e. no lost updates.
+        let cfg = OltpCfg {
+            cores: 4,
+            rows: 4, // extremely hot
+            theta: 0.0,
+            write_frac: 1.0,
+            txns_per_core: 16,
+            index_depth: 1,
+            row_words: 1,
+            ..Default::default()
+        };
+        let lay = layout(&cfg);
+        let mut fm = build_oltp_fm(&cfg);
+        fm.run(cfg.max_instrs_per_core);
+        for c in 0..cfg.cores {
+            assert!(fm.halted(c), "core {c} must finish");
+        }
+        let mut total = 0;
+        for r in 0..cfg.rows {
+            total += fm.mem.load(lay.rows_base + r * ROW_BYTES);
+        }
+        assert_eq!(
+            total,
+            cfg.cores as u64 * cfg.txns_per_core,
+            "row locks must prevent lost updates"
+        );
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let cfg = OltpCfg::default();
+        let a = generate_oltp_traces(&cfg);
+        let b = generate_oltp_traces(&cfg);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ops, y.ops);
+        }
+    }
+}

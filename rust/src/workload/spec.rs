@@ -1,0 +1,331 @@
+//! SPEC-like synthetic kernels: loop programs with controllable ILP, memory
+//! locality and branch behaviour, standing in for the SPEC2006 suite
+//! (paper §5.3 runs "spec based applications" on the OOO model).
+//!
+//! Four kernel archetypes cover the classic performance quadrants:
+//! - `Stream` — unit-stride loads/stores, bandwidth-bound (≈ libquantum)
+//! - `PointerChase` — dependent loads over a shuffled ring, latency-bound
+//!   (≈ mcf)
+//! - `Compute` — independent ALU/MUL chains, ILP-bound (≈ hmmer)
+//! - `Branchy` — data-dependent branches, predictor-bound (≈ gobmk)
+
+use crate::cpu::functional::Functional;
+use crate::cpu::isa::{Alu, Cond, Instr, Program};
+use crate::cpu::Trace;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpecKind {
+    Stream,
+    PointerChase,
+    Compute,
+    Branchy,
+}
+
+impl SpecKind {
+    pub const ALL: [SpecKind; 4] = [
+        SpecKind::Stream,
+        SpecKind::PointerChase,
+        SpecKind::Compute,
+        SpecKind::Branchy,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecKind::Stream => "stream",
+            SpecKind::PointerChase => "pointer-chase",
+            SpecKind::Compute => "compute",
+            SpecKind::Branchy => "branchy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "stream" => Ok(SpecKind::Stream),
+            "pointer-chase" | "chase" => Ok(SpecKind::PointerChase),
+            "compute" => Ok(SpecKind::Compute),
+            "branchy" => Ok(SpecKind::Branchy),
+            _ => Err(format!("unknown spec kernel {s:?}")),
+        }
+    }
+}
+
+/// Per-core working set (bytes); each core gets a private region so SPEC
+/// cores don't share (rate-mode SPEC, as used for multicore studies).
+const WSET: u64 = 256 * 1024;
+
+fn region_base(core: usize) -> u64 {
+    64 + core as u64 * WSET // leave word 0 unused
+}
+
+/// Emit a loop running `iters` times around `body`.
+fn emit_loop(p: &mut Program, iters: u64, body: impl FnOnce(&mut Program)) {
+    const R_I: u8 = 28;
+    const R_N: u8 = 29;
+    p.push(Instr::Li { rd: R_I, imm: 0 });
+    p.push(Instr::Li { rd: R_N, imm: iters });
+    let top = p.len();
+    body(p);
+    p.push(Instr::OpImm {
+        alu: Alu::Add,
+        rd: R_I,
+        rs1: R_I,
+        imm: 1,
+    });
+    let br = p.push(Instr::Br {
+        cond: Cond::Ne,
+        rs1: R_I,
+        rs2: R_N,
+        off: 0,
+    });
+    p.patch_off(br, top);
+}
+
+pub fn spec_program(kind: SpecKind, core: usize, iters: u64, seed: u64) -> Program {
+    let base = region_base(core);
+    let mut p = Program::new();
+    let mut rng = Rng::from_seed_stream(seed, (core as u64) << 8 | kind as u64);
+    match kind {
+        SpecKind::Stream => {
+            // for i: a[i] = a[i] + b[i], unit stride, 2 loads + 1 store.
+            p.push(Instr::Li { rd: 10, imm: base });
+            p.push(Instr::Li { rd: 11, imm: base + WSET / 2 });
+            emit_loop(&mut p, iters, |p| {
+                p.push(Instr::Ld { rd: 1, rs1: 10, imm: 0 });
+                p.push(Instr::Ld { rd: 2, rs1: 11, imm: 0 });
+                p.push(Instr::Op {
+                    alu: Alu::Add,
+                    rd: 3,
+                    rs1: 1,
+                    rs2: 2,
+                });
+                p.push(Instr::St { rs2: 3, rs1: 10, imm: 0 });
+                p.push(Instr::OpImm {
+                    alu: Alu::Add,
+                    rd: 10,
+                    rs1: 10,
+                    imm: 8,
+                });
+                p.push(Instr::OpImm {
+                    alu: Alu::Add,
+                    rd: 11,
+                    rs1: 11,
+                    imm: 8,
+                });
+            });
+        }
+        SpecKind::PointerChase => {
+            // p = next[p] over a pre-built shuffled ring (the program first
+            // builds the ring, then chases it — both parts are measured,
+            // dominated by the chase).
+            let nodes = 1024u64;
+            // Build: next[i] = base + ((i*LCG) % nodes)*64 — a fixed
+            // pseudo-random permutation-ish walk (not a true permutation,
+            // but cycles through a large fraction of nodes).
+            p.push(Instr::Li { rd: 10, imm: base });
+            p.push(Instr::Li { rd: 11, imm: 0 }); // i
+            p.push(Instr::Li { rd: 12, imm: nodes });
+            let top = p.len();
+            // target = base + ((i*2654435761) & (nodes-1)) * 64
+            p.push(Instr::OpImm {
+                alu: Alu::Mul,
+                rd: 1,
+                rs1: 11,
+                imm: 0x9E3779B1,
+            });
+            p.push(Instr::OpImm {
+                alu: Alu::And,
+                rd: 1,
+                rs1: 1,
+                imm: (nodes - 1) as i64,
+            });
+            p.push(Instr::OpImm {
+                alu: Alu::Shl,
+                rd: 1,
+                rs1: 1,
+                imm: 6,
+            });
+            p.push(Instr::OpImm {
+                alu: Alu::Add,
+                rd: 1,
+                rs1: 1,
+                imm: base as i64,
+            });
+            p.push(Instr::St { rs2: 1, rs1: 10, imm: 0 });
+            p.push(Instr::OpImm {
+                alu: Alu::Add,
+                rd: 10,
+                rs1: 10,
+                imm: 64,
+            });
+            p.push(Instr::OpImm {
+                alu: Alu::Add,
+                rd: 11,
+                rs1: 11,
+                imm: 1,
+            });
+            let br = p.push(Instr::Br {
+                cond: Cond::Ne,
+                rs1: 11,
+                rs2: 12,
+                off: 0,
+            });
+            p.patch_off(br, top);
+            // Chase.
+            p.push(Instr::Li { rd: 20, imm: base });
+            emit_loop(&mut p, iters, |p| {
+                p.push(Instr::Ld { rd: 20, rs1: 20, imm: 0 });
+            });
+        }
+        SpecKind::Compute => {
+            // 4 independent mul/xor chains — high ILP, no memory.
+            for r in 1..=4u8 {
+                p.push(Instr::Li {
+                    rd: r,
+                    imm: rng.next_u64() >> 1,
+                });
+            }
+            emit_loop(&mut p, iters, |p| {
+                for r in 1..=4u8 {
+                    p.push(Instr::OpImm {
+                        alu: Alu::Mul,
+                        rd: r,
+                        rs1: r,
+                        imm: 0x5DEECE66D,
+                    });
+                    p.push(Instr::OpImm {
+                        alu: Alu::Xor,
+                        rd: r,
+                        rs1: r,
+                        imm: 0xB,
+                    });
+                }
+            });
+        }
+        SpecKind::Branchy => {
+            // Data-dependent branch on a pseudo-random value each
+            // iteration; both arms do a little work.
+            p.push(Instr::Li {
+                rd: 5,
+                imm: rng.next_u64() >> 1,
+            });
+            emit_loop(&mut p, iters, |p| {
+                // x = x*6364136223846793005 + 1442695040888963407 (LCG)
+                p.push(Instr::OpImm {
+                    alu: Alu::Mul,
+                    rd: 5,
+                    rs1: 5,
+                    imm: 0x5851F42D4C957F2Du64 as i64,
+                });
+                p.push(Instr::OpImm {
+                    alu: Alu::Add,
+                    rd: 5,
+                    rs1: 5,
+                    imm: 0x14057B7EF767814Fu64 as i64,
+                });
+                p.push(Instr::OpImm {
+                    alu: Alu::Shr,
+                    rd: 6,
+                    rs1: 5,
+                    imm: 62,
+                });
+                // if (x >> 62) != 0 skip the add below
+                let br = p.push(Instr::Br {
+                    cond: Cond::Ne,
+                    rs1: 6,
+                    rs2: 0,
+                    off: 0,
+                });
+                p.push(Instr::OpImm {
+                    alu: Alu::Add,
+                    rd: 7,
+                    rs1: 7,
+                    imm: 1,
+                });
+                p.patch_off(br, p.len());
+            });
+        }
+    }
+    p.push(Instr::Halt);
+    p
+}
+
+/// Generate traces for `cores` copies of `kind` (rate mode).
+pub fn generate_spec_traces(
+    kind: SpecKind,
+    cores: usize,
+    iters: u64,
+    max_instrs: u64,
+    seed: u64,
+) -> Vec<Trace> {
+    let programs: Vec<Program> = (0..cores)
+        .map(|c| spec_program(kind, c, iters, seed))
+        .collect();
+    let mem = 64 + cores as u64 * WSET;
+    let mut fm = Functional::new(programs, mem as usize);
+    fm.run(max_instrs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::isa::OpClass;
+
+    #[test]
+    fn all_kernels_generate_and_halt() {
+        for kind in SpecKind::ALL {
+            let traces = generate_spec_traces(kind, 2, 100, 1_000_000, 7);
+            assert_eq!(traces.len(), 2);
+            for t in &traces {
+                assert_eq!(
+                    t.ops.last().unwrap().class(),
+                    OpClass::Halt,
+                    "{} must complete",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stream_is_memory_heavy() {
+        let t = &generate_spec_traces(SpecKind::Stream, 1, 200, 1_000_000, 7)[0];
+        let mem = t.ops.iter().filter(|o| o.class().is_mem()).count() as f64;
+        assert!(mem / t.len() as f64 > 0.3, "{}", mem / t.len() as f64);
+    }
+
+    #[test]
+    fn chase_loads_are_dependent() {
+        let t = &generate_spec_traces(SpecKind::PointerChase, 1, 50, 1_000_000, 7)[0];
+        // In the chase phase, loads write r20 and read r20.
+        let dependent = t
+            .ops
+            .iter()
+            .filter(|o| o.class() == OpClass::Load && o.rd == 20 && o.rs1 == 20)
+            .count();
+        assert_eq!(dependent, 50);
+    }
+
+    #[test]
+    fn compute_has_no_memory_ops_in_loop() {
+        let t = &generate_spec_traces(SpecKind::Compute, 1, 100, 1_000_000, 7)[0];
+        let mem = t.ops.iter().filter(|o| o.class().is_mem()).count();
+        assert_eq!(mem, 0);
+    }
+
+    #[test]
+    fn branchy_takes_both_arms() {
+        let t = &generate_spec_traces(SpecKind::Branchy, 1, 500, 1_000_000, 7)[0];
+        let branches: Vec<_> = t
+            .ops
+            .iter()
+            .filter(|o| o.class() == OpClass::Branch)
+            .collect();
+        let taken = branches.iter().filter(|o| o.taken()).count();
+        let ratio = taken as f64 / branches.len() as f64;
+        assert!(
+            (0.3..0.95).contains(&ratio),
+            "mixed branch outcomes expected: {ratio}"
+        );
+    }
+}

@@ -1,0 +1,182 @@
+//! Protocol-level tests for the MESI directory: scripted drivers stand in
+//! for the cores so individual transitions can be asserted through the
+//! observable counters and timing (the PM carries no data — the FM owns
+//! values — so protocol correctness is about states, recalls and acks).
+
+use scalesim::cpu::isa::{OpClass, TraceOp, NO_REG};
+use scalesim::cpu::Trace;
+use scalesim::engine::{RunOpts, Stop};
+use scalesim::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
+
+fn ld(addr: u64) -> TraceOp {
+    TraceOp::new(OpClass::Load, 1, 2, NO_REG, addr, 0, false)
+}
+
+fn st(addr: u64) -> TraceOp {
+    TraceOp::new(OpClass::Store, NO_REG, 1, 2, addr, 0, false)
+}
+
+fn amo(addr: u64) -> TraceOp {
+    TraceOp::new(OpClass::Atomic, 1, 2, NO_REG, addr, 0, false)
+}
+
+fn alu_n(n: usize) -> Vec<TraceOp> {
+    std::iter::repeat(TraceOp::new(OpClass::Alu, 1, 1, 2, 0, 0, false))
+        .take(n)
+        .collect()
+}
+
+fn run(traces: Vec<Trace>) -> scalesim::stats::RunStats {
+    let (mut model, h) = build_cpu_system(traces, &CpuSystemCfg::default());
+    let n = h.num_cores as u64;
+    model.run_serial(RunOpts::with_stop(Stop::CounterAtLeast {
+        counter: h.cores_done,
+        target: n,
+        max_cycles: 1_000_000,
+    }))
+}
+
+#[test]
+fn exclusive_grant_on_sole_reader() {
+    // One reader, one line: DataE (tracked as owner), no sharer traffic.
+    let stats = run(vec![Trace { ops: vec![ld(0x1000)] }]);
+    assert_eq!(stats.counters.get("dir.gets"), 1);
+    assert_eq!(stats.counters.get("dir.invs_sent"), 0);
+    assert_eq!(stats.counters.get("dir.fwds_sent"), 0);
+}
+
+#[test]
+fn e_to_m_upgrade_is_silent() {
+    // Load then store from the same core: E→M needs no second directory
+    // transaction.
+    let mut ops = vec![ld(0x2000)];
+    ops.extend(alu_n(3));
+    ops.push(st(0x2000));
+    let stats = run(vec![Trace { ops }]);
+    assert_eq!(stats.counters.get("dir.gets"), 1);
+    assert_eq!(
+        stats.counters.get("dir.getm"),
+        0,
+        "silent E→M upgrade must not hit the directory"
+    );
+}
+
+#[test]
+fn owner_recall_on_second_reader() {
+    // Core 0 loads (E/owner); core 1 loads later → FwdWbS recall, DataS.
+    let t0 = Trace { ops: vec![ld(0x3000)] };
+    let mut ops1 = alu_n(400);
+    ops1.push(ld(0x3000));
+    let stats = run(vec![t0, Trace { ops: ops1 }]);
+    assert_eq!(stats.counters.get("dir.gets"), 2);
+    assert_eq!(stats.counters.get("dir.fwds_sent"), 1, "owner recalled");
+    assert_eq!(stats.counters.get("dram.reads"), 1, "data served from L3");
+}
+
+#[test]
+fn writer_invalidates_all_sharers() {
+    // Cores 0 and 1 read; core 2 writes → 2 invalidations collected.
+    let t0 = Trace { ops: vec![ld(0x4000)] };
+    let mut ops1 = alu_n(200);
+    ops1.push(ld(0x4000));
+    let mut ops2 = alu_n(800);
+    ops2.push(st(0x4000));
+    let stats = run(vec![t0, Trace { ops: ops1 }, Trace { ops: ops2 }]);
+    assert_eq!(stats.counters.get("dir.getm"), 1);
+    // The first reader became the owner (DataE), the second a sharer via
+    // recall — the writer's GetM therefore recalls the owner or
+    // invalidates sharers; in the sharers case both get Inv.
+    let recalls = stats.counters.get("dir.invs_sent") + stats.counters.get("dir.fwds_sent");
+    assert!(recalls >= 2, "both holders must lose the line: {recalls}");
+}
+
+#[test]
+fn capacity_eviction_writes_back_dirty_lines() {
+    // Write enough distinct lines to overflow L2 (256 KiB / 64 B = 4096
+    // lines; way-conflict via matching set bits is faster: stride by
+    // set-count × line so all map to one set).
+    // L2: 256 KiB, 8 ways, 64 B lines → 512 sets; stride = 512 × 64.
+    let stride = 512 * 64u64;
+    let mut ops = Vec::new();
+    for i in 0..16u64 {
+        ops.push(st(0x10000 + i * stride));
+        ops.extend(alu_n(2));
+    }
+    let stats = run(vec![Trace { ops }]);
+    assert!(
+        stats.counters.get("dir.putm") >= 8,
+        "conflict misses must write back dirty victims: {}",
+        stats.counters.get("dir.putm")
+    );
+    assert_eq!(stats.counters.get("cores_done"), 1);
+}
+
+#[test]
+fn atomics_serialize_through_the_directory() {
+    // All four cores AMO the same line; every AMO needs M, so ownership
+    // ping-pongs: ≥ cores GetM transactions (first may be uncached).
+    let mk = |pad: usize| {
+        let mut ops = alu_n(pad);
+        ops.push(amo(0x7000));
+        ops.extend(alu_n(50));
+        ops.push(amo(0x7000));
+        Trace { ops }
+    };
+    let stats = run(vec![mk(0), mk(40), mk(80), mk(120)]);
+    let getm = stats.counters.get("dir.getm");
+    assert!(getm >= 4, "ownership must migrate between cores: {getm}");
+    let recalls = stats.counters.get("dir.fwds_sent") + stats.counters.get("dir.invs_sent");
+    assert!(recalls >= 3, "migration implies recalls: {recalls}");
+}
+
+#[test]
+fn l1_inclusion_backinvalidate() {
+    // Core 0 reads a line (in L1+L2); core 1 writes it. Core 0's L1 copy
+    // must be back-invalidated (l1.invals counter).
+    let mut ops0 = vec![ld(0x8000)];
+    ops0.extend(alu_n(10));
+    let mut ops1 = alu_n(400);
+    ops1.push(st(0x8000));
+    let stats = run(vec![Trace { ops: ops0 }, Trace { ops: ops1 }]);
+    assert!(
+        stats.counters.get("l1.invals") >= 1,
+        "inclusion: L1 must drop the line the L2 lost"
+    );
+}
+
+#[test]
+fn coherence_traffic_rides_the_noc() {
+    // Any recall crosses the mesh: flit counts must reflect the protocol
+    // messages (requests, grants, recalls, acks).
+    let t0 = Trace { ops: vec![ld(0x9000)] };
+    let mut ops1 = alu_n(300);
+    ops1.push(st(0x9000));
+    let stats = run(vec![t0, Trace { ops: ops1 }]);
+    // ≥ 6 one-way messages: GetS, DataE, GetM, FwdWbI, WbData, DataM.
+    assert!(
+        stats.counters.get("noc.flits_forwarded") >= 6,
+        "protocol must traverse the NoC: {}",
+        stats.counters.get("noc.flits_forwarded")
+    );
+}
+
+#[test]
+fn miss_latency_ordering_l2_vs_l3_vs_dram() {
+    // Same-line second load (L1 hit) < L2 hit < DRAM miss, measured as
+    // completion cycles of three single-op runs.
+    let cold = run(vec![Trace { ops: vec![ld(0xA000)] }]).cycles;
+    let l1 = run(vec![Trace {
+        ops: vec![ld(0xA000), ld(0xA008)],
+    }])
+    .cycles;
+    // Third case: two loads far apart → two cold misses.
+    let two_cold = run(vec![Trace {
+        ops: vec![ld(0xA000), ld(0xFF000)],
+    }])
+    .cycles;
+    assert!(l1 < cold + 10, "L1 hit adds ~nothing: {l1} vs {cold}");
+    assert!(
+        two_cold > cold + 50,
+        "second cold miss pays full latency: {two_cold} vs {cold}"
+    );
+}

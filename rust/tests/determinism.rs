@@ -1,0 +1,272 @@
+//! Property tests for the paper's core correctness claims:
+//!
+//! 1. Parallel execution ≡ serial execution, for any model, worker count,
+//!    partition strategy, and sync method ("the simulation result ... is
+//!    indeed agnostic to the order of execution", §3.3/§5.1).
+//! 2. Back pressure never drops or duplicates messages under random stall
+//!    injection.
+//! 3. Message causality: sent at m, consumable at n > m, under every
+//!    delay/capacity configuration.
+//!
+//! No `proptest` in this offline environment, so properties are driven by
+//! the deterministic Rng over many random cases (seeds printed on
+//! failure).
+
+use scalesim::engine::{
+    Ctx, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RunOpts, Unit,
+};
+use scalesim::sched::{partition, PartitionStrategy};
+use scalesim::sync::{run_ladder, ParallelOpts, SyncMethod};
+use scalesim::util::rng::Rng;
+
+/// A randomized unit: every cycle it may consume from each input, do some
+/// state mixing, and may send on each output (if vacant). Behaviour is a
+/// pure function of (unit seed, cycle, messages seen) — never of wall
+/// clock or thread id — so any execution order must give the same result.
+struct ChaosUnit {
+    id: u64,
+    rng: Rng,
+    ins: Vec<InPort>,
+    outs: Vec<OutPort>,
+    state: u64,
+    sent: u64,
+    received: u64,
+    /// Probability of *not* consuming an input this cycle (stall injection).
+    stall_p: f64,
+    send_p: f64,
+}
+
+impl Unit for ChaosUnit {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        for i in 0..self.ins.len() {
+            if self.rng.gen_bool(self.stall_p) {
+                continue; // injected stall: back pressure builds upstream
+            }
+            while let Some(m) = ctx.recv(self.ins[i]) {
+                self.received += 1;
+                self.state = self
+                    .state
+                    .wrapping_mul(0x100000001B3)
+                    .wrapping_add(m.a ^ m.c);
+            }
+        }
+        for o in 0..self.outs.len() {
+            if self.rng.gen_bool(self.send_p) && ctx.out_vacant(self.outs[o]) {
+                let payload = self.state ^ (self.sent << 32) ^ self.id;
+                ctx.send(self.outs[o], Msg::with(1, payload, 0, self.sent))
+                    .unwrap();
+                self.sent += 1;
+            }
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.state);
+        h.write_u64(self.sent);
+        h.write_u64(self.received);
+    }
+
+    fn stats(&self, out: &mut scalesim::stats::StatsMap) {
+        out.add("chaos.sent", self.sent);
+        out.add("chaos.received", self.received);
+    }
+}
+
+/// Build a random connected model: `n` units, `e` random extra edges over
+/// a ring backbone, random port configs.
+fn random_model(seed: u64, n: usize, extra_edges: usize) -> Model {
+    let mut rng = Rng::from_seed_stream(seed, 0x10DE1);
+    let mut mb = ModelBuilder::new();
+    let ids: Vec<u32> = (0..n).map(|i| mb.reserve_unit(&format!("u{i}"))).collect();
+    let mut edges: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+    for _ in 0..extra_edges {
+        let a = rng.gen_range(n as u64) as usize;
+        let mut b = rng.gen_range(n as u64) as usize;
+        if a == b {
+            b = (b + 1) % n;
+        }
+        edges.push((a, b));
+    }
+    let mut unit_ins: Vec<Vec<InPort>> = vec![Vec::new(); n];
+    let mut unit_outs: Vec<Vec<OutPort>> = vec![Vec::new(); n];
+    for (a, b) in edges {
+        let cfg = PortCfg {
+            capacity: 1 + rng.gen_range(4) as usize,
+            out_capacity: 1 + rng.gen_range(2) as usize,
+            delay: 1 + rng.gen_range(3),
+        };
+        let (tx, rx) = mb.connect(ids[a], ids[b], cfg);
+        unit_outs[a].push(tx);
+        unit_ins[b].push(rx);
+    }
+    for i in 0..n {
+        let stall_p = rng.gen_f64() * 0.3;
+        let send_p = 0.3 + rng.gen_f64() * 0.7;
+        mb.install(
+            ids[i],
+            Box::new(ChaosUnit {
+                id: i as u64,
+                rng: Rng::from_seed_stream(seed, i as u64 + 100),
+                ins: unit_ins[i].clone(),
+                outs: unit_outs[i].clone(),
+                state: 0,
+                sent: 0,
+                received: 0,
+                stall_p,
+                send_p,
+            }),
+        );
+    }
+    mb.build().unwrap()
+}
+
+#[test]
+fn parallel_equals_serial_over_random_models() {
+    for seed in 0..8u64 {
+        let n = 4 + (seed as usize % 9);
+        let cycles = 150;
+        let serial = {
+            let mut m = random_model(seed, n, 6);
+            m.run_serial(RunOpts::cycles(cycles).fingerprinted())
+        };
+        for &method in &[SyncMethod::CommonAtomic, SyncMethod::Atomic] {
+            for workers in [2, 3, 4] {
+                for strat in [
+                    PartitionStrategy::RoundRobin,
+                    PartitionStrategy::Random(seed ^ 0x55),
+                    PartitionStrategy::Locality,
+                ] {
+                    let mut m = random_model(seed, n, 6);
+                    let part = partition(&m, workers, strat);
+                    let stats = run_ladder(
+                        &mut m,
+                        &part,
+                        &ParallelOpts::new(method, RunOpts::cycles(cycles).fingerprinted()),
+                    );
+                    assert_eq!(
+                        stats.fingerprint, serial.fingerprint,
+                        "seed={seed} method={} workers={workers} strat={}",
+                        method.name(),
+                        strat.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn messages_conserved_under_stalls() {
+    // Total sent == total received + in flight, for random stall patterns:
+    // back pressure may delay but never drop or duplicate a message.
+    for seed in 0..10u64 {
+        let mut m = random_model(seed.wrapping_mul(77), 6, 4);
+        let stats = m.run_serial(RunOpts::cycles(300));
+        let sent = stats.counters.get("chaos.sent");
+        let received = stats.counters.get("chaos.received");
+        let in_flight = m.in_flight() as u64;
+        assert_eq!(
+            sent,
+            received + in_flight,
+            "seed={seed}: sent={sent} received={received} in_flight={in_flight}"
+        );
+        assert!(sent > 0, "seed={seed}: workload must generate traffic");
+    }
+}
+
+/// A sender/receiver pair around a single port, verifying the causality
+/// rule n > m for every (capacity, delay) combination.
+struct SendEveryCycle {
+    out: OutPort,
+}
+
+impl Unit for SendEveryCycle {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        if ctx.out_vacant(self.out) {
+            ctx.send(self.out, Msg::with(1, ctx.cycle, 0, 0)).unwrap();
+        }
+    }
+}
+
+struct CheckCausality {
+    inp: InPort,
+    delay: u64,
+    checked: u64,
+}
+
+impl Unit for CheckCausality {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(m) = ctx.recv(self.inp) {
+            let sent = m.a;
+            assert!(
+                ctx.cycle > sent,
+                "consumed at {} but sent at {sent} (must be later)",
+                ctx.cycle
+            );
+            assert!(
+                ctx.cycle >= sent + self.delay,
+                "delay {} not honoured: sent {sent}, got {}",
+                self.delay,
+                ctx.cycle
+            );
+            self.checked += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.checked);
+    }
+}
+
+#[test]
+fn causality_holds_for_all_port_configs() {
+    for capacity in [1usize, 2, 8] {
+        for out_capacity in [1usize, 4] {
+            for delay in [0u64, 1, 2, 5] {
+                let mut mb = ModelBuilder::new();
+                let a = mb.reserve_unit("send");
+                let b = mb.reserve_unit("check");
+                let (tx, rx) = mb.connect(
+                    a,
+                    b,
+                    PortCfg {
+                        capacity,
+                        out_capacity,
+                        delay,
+                    },
+                );
+                mb.install(a, Box::new(SendEveryCycle { out: tx }));
+                mb.install(
+                    b,
+                    Box::new(CheckCausality {
+                        inp: rx,
+                        delay: delay.max(1),
+                        checked: 0,
+                    }),
+                );
+                let mut m = mb.build().unwrap();
+                m.run_serial(RunOpts::cycles(100));
+                // The checker's asserts fired inside the run if violated.
+            }
+        }
+    }
+}
+
+#[test]
+fn sync_ops_scale_with_workers_not_model_size() {
+    let count_ops = |units: usize, workers: usize| {
+        let mut m = random_model(3, units, 4);
+        let part = partition(&m, workers, PartitionStrategy::RoundRobin);
+        run_ladder(
+            &mut m,
+            &part,
+            &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::cycles(100)),
+        )
+        .sync_ops
+    };
+    let small = count_ops(6, 2);
+    let large = count_ops(24, 2);
+    assert_eq!(small, large, "model size must not affect sync ops");
+    let more_workers = count_ops(24, 4);
+    assert!(more_workers > large, "workers do affect sync ops");
+}

@@ -1,0 +1,144 @@
+//! End-to-end integration: full workloads through full systems.
+//!
+//! These are the heavyweight composition tests: OLTP traces through the
+//! light and OOO multicore systems (FM → PM → coherent memory → NoC), and
+//! the paper's headline determinism claim on those systems.
+
+use scalesim::cpu::ooo::OooCfg;
+use scalesim::engine::{RunOpts, Stop};
+use scalesim::sched::{partition, PartitionStrategy};
+use scalesim::sync::{run_ladder, ParallelOpts, SyncMethod};
+use scalesim::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
+use scalesim::workload::{generate_oltp_traces, generate_spec_traces, OltpCfg, SpecKind};
+
+fn oltp_cfg(cores: usize) -> OltpCfg {
+    OltpCfg {
+        cores,
+        rows: 256,
+        theta: 0.6,
+        txns_per_core: 12,
+        write_frac: 0.5,
+        index_depth: 2,
+        row_words: 2,
+        max_instrs_per_core: 50_000,
+        seed: 0xE2E,
+    }
+}
+
+fn run_system(kind: CoreKind, cores: usize) -> scalesim::stats::RunStats {
+    let traces = generate_oltp_traces(&oltp_cfg(cores));
+    let cfg = CpuSystemCfg {
+        kind,
+        ..Default::default()
+    };
+    let (mut model, h) = build_cpu_system(traces, &cfg);
+    model.run_serial(RunOpts::with_stop(Stop::CounterAtLeast {
+        counter: h.cores_done,
+        target: cores as u64,
+        max_cycles: 2_000_000,
+    }))
+}
+
+#[test]
+fn oltp_on_light_cores_completes_with_coherence_traffic() {
+    let stats = run_system(CoreKind::Light, 4);
+    assert_eq!(stats.counters.get("cores_done"), 4, "{}", stats.summary());
+    // The in-order core retires every trace op exactly once.
+    let expected: u64 = generate_oltp_traces(&oltp_cfg(4))
+        .iter()
+        .map(|t| t.len() as u64)
+        .sum();
+    assert_eq!(stats.counters.get("core.retired"), expected);
+    assert!(expected > 500, "workload non-trivial: {expected}");
+    // OLTP on shared rows must exercise the full protocol.
+    assert!(stats.counters.get("dir.gets") > 0, "read misses");
+    assert!(stats.counters.get("dir.getm") > 0, "write upgrades");
+    assert!(
+        stats.counters.get("dir.invs_sent") + stats.counters.get("dir.fwds_sent") > 0,
+        "shared hot rows must cause coherence recalls"
+    );
+    assert!(stats.counters.get("dram.reads") > 0);
+}
+
+#[test]
+fn oltp_on_ooo_cores_is_faster_than_light() {
+    let light = run_system(CoreKind::Light, 2);
+    let ooo = run_system(CoreKind::Ooo(OooCfg::default()), 2);
+    assert_eq!(ooo.counters.get("cores_done"), 2, "{}", ooo.summary());
+    let light_ipc =
+        light.counters.get("core.retired") as f64 / light.cycles.max(1) as f64;
+    let ooo_ipc = ooo.counters.get("core.retired") as f64 / ooo.cycles.max(1) as f64;
+    assert!(
+        ooo_ipc > light_ipc,
+        "OOO must beat in-order IPC: {ooo_ipc:.3} vs {light_ipc:.3}"
+    );
+    assert!(ooo.counters.get("ooo.bpred_predictions") > 0);
+}
+
+#[test]
+fn ooo_system_parallel_matches_serial() {
+    let mk = || {
+        let traces = generate_oltp_traces(&oltp_cfg(4));
+        build_cpu_system(
+            traces,
+            &CpuSystemCfg {
+                kind: CoreKind::Ooo(OooCfg::default()),
+                ..Default::default()
+            },
+        )
+    };
+    let (mut serial, h) = mk();
+    let stop = Stop::CounterAtLeast {
+        counter: h.cores_done,
+        target: 4,
+        max_cycles: 2_000_000,
+    };
+    let s = serial.run_serial(RunOpts::with_stop(stop).fingerprinted());
+    let (mut par, h2) = mk();
+    let stop2 = Stop::CounterAtLeast {
+        counter: h2.cores_done,
+        target: 4,
+        max_cycles: 2_000_000,
+    };
+    let part = partition(&par, 3, PartitionStrategy::Contiguous);
+    let p = run_ladder(
+        &mut par,
+        &part,
+        &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::with_stop(stop2).fingerprinted()),
+    );
+    assert_eq!(p.fingerprint, s.fingerprint);
+    assert_eq!(p.cycles, s.cycles);
+    assert_eq!(
+        p.counters.get("core.retired"),
+        s.counters.get("core.retired")
+    );
+}
+
+#[test]
+fn spec_kernels_show_expected_performance_ordering() {
+    // Compute-bound kernel should have much higher IPC than pointer-chase
+    // on the OOO core.
+    let run_kernel = |kind: SpecKind| {
+        let traces = generate_spec_traces(kind, 1, 800, 200_000, 11);
+        let (mut model, h) = build_cpu_system(
+            traces,
+            &CpuSystemCfg {
+                kind: CoreKind::Ooo(OooCfg::default()),
+                ..Default::default()
+            },
+        );
+        let stats = model.run_serial(RunOpts::with_stop(Stop::CounterAtLeast {
+            counter: h.cores_done,
+            target: 1,
+            max_cycles: 5_000_000,
+        }));
+        assert_eq!(stats.counters.get("cores_done"), 1, "{kind:?}");
+        stats.counters.get("core.retired") as f64 / stats.cycles.max(1) as f64
+    };
+    let compute_ipc = run_kernel(SpecKind::Compute);
+    let chase_ipc = run_kernel(SpecKind::PointerChase);
+    assert!(
+        compute_ipc > 2.0 * chase_ipc,
+        "ILP kernel must far outrun pointer chase: {compute_ipc:.3} vs {chase_ipc:.3}"
+    );
+}

@@ -1,0 +1,133 @@
+//! Integration: the AOT artifacts (python/jax/pallas → HLO text) executed
+//! from rust via PJRT must agree with the native implementations.
+//!
+//! Requires `make artifacts`. Tests soft-skip (with a loud message) when
+//! the artifacts directory is absent so `cargo test` stays runnable before
+//! the first build; the Makefile always builds artifacts first.
+
+use scalesim::dc::traffic::{packet, TrafficCfg};
+use scalesim::explore;
+use scalesim::runtime::artifacts::{Artifacts, FABRIC_B};
+use scalesim::runtime::Runtime;
+
+fn load() -> Option<(Runtime, Artifacts)> {
+    let dir = scalesim::runtime::artifacts::artifacts_dir();
+    if !dir.join("traffic.hlo.txt").exists() {
+        eprintln!(
+            "SKIP: artifacts not found in {} — run `make artifacts`",
+            dir.display()
+        );
+        return None;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let arts = Artifacts::load(&rt, &dir).expect("load artifacts");
+    Some((rt, arts))
+}
+
+#[test]
+fn traffic_artifact_matches_native_bit_for_bit() {
+    let Some((_rt, arts)) = load() else { return };
+    let cfg = TrafficCfg {
+        seed: 0xDC,
+        hosts: 1024,
+        packets: 0, // unused here
+        inject_window: 10_000,
+    };
+    let pkts = arts
+        .traffic
+        .generate(cfg.seed, cfg.hosts, cfg.inject_window)
+        .expect("run traffic artifact");
+    assert_eq!(pkts.len(), scalesim::runtime::artifacts::TRAFFIC_N);
+    for i in [0usize, 1, 7, 100, 4096, 65_535] {
+        let native = packet(&cfg, i as u64);
+        assert_eq!(pkts[i].src, native.src, "src of packet {i}");
+        assert_eq!(pkts[i].dst, native.dst, "dst of packet {i}");
+        assert_eq!(pkts[i].inject_cycle, native.inject_cycle, "cycle of {i}");
+    }
+    // Full-range equality.
+    for (i, p) in pkts.iter().enumerate() {
+        let native = packet(&cfg, i as u64);
+        assert_eq!((p.src, p.dst, p.inject_cycle), (native.src, native.dst, native.inject_cycle));
+    }
+}
+
+#[test]
+fn fabric_artifact_latency_is_sane_and_monotone_in_load() {
+    let Some((_rt, arts)) = load() else { return };
+    let mut low = [[16.0f32, 0.05, 8.0, 1.0, 1.0]; FABRIC_B];
+    let mut high = low;
+    for r in &mut high {
+        r[1] = 0.9;
+    }
+    let _ = &mut low;
+    let lo = arts.fabric.latency(&low).unwrap()[0];
+    let hi = arts.fabric.latency(&high).unwrap()[0];
+    assert!(lo > 8.0 && lo < 14.0, "unloaded k=16 ≈ hop latency: {lo}");
+    assert!(hi > lo + 1.0, "load must raise latency: {lo} → {hi}");
+}
+
+#[test]
+fn gradient_descent_reduces_objective() {
+    let Some((_rt, arts)) = load() else { return };
+    let init = explore::seed_batch(16.0, 1.0, 1.0);
+    let res = explore::gradient_descent(&arts.fabric_grad, init, 30, 0.05).unwrap();
+    let first = res.objective_history[0];
+    let last = *res.objective_history.last().unwrap();
+    assert!(
+        last < first,
+        "objective should decrease: {first} → {last} ({:?})",
+        res.objective_history
+    );
+    // All params stayed in bounds.
+    for row in &res.params {
+        for d in 0..5 {
+            assert!(row[d] >= explore::LO[d] - 1e-5 && row[d] <= explore::HI[d] + 1e-5);
+        }
+    }
+}
+
+#[test]
+fn surrogate_tracks_cycle_accurate_simulation() {
+    let Some((_rt, arts)) = load() else { return };
+    // Two design points: light load and heavy load on k=4. The surrogate
+    // must get the *ordering* and rough magnitude right (it's a queueing
+    // approximation, not a re-implementation).
+    let light = explore::cross_validate(&arts.fabric, [4.0, 0.1, 4.0, 1.0, 1.0], 2_000, 7)
+        .expect("light validation");
+    let heavy = explore::cross_validate(&arts.fabric, [4.0, 0.7, 4.0, 1.0, 1.0], 2_000, 7)
+        .expect("heavy validation");
+    assert!(
+        heavy.measured_mean_latency > light.measured_mean_latency,
+        "measured: heavier load, higher latency"
+    );
+    assert!(
+        heavy.surrogate_latency > light.surrogate_latency,
+        "surrogate: heavier load, higher latency"
+    );
+    // Magnitude: surrogate within 3x of measured at light load.
+    let ratio = light.surrogate_latency as f64 / light.measured_mean_latency;
+    assert!(
+        (0.33..3.0).contains(&ratio),
+        "light-load surrogate off by >3x: surrogate={} measured={}",
+        light.surrogate_latency,
+        light.measured_mean_latency
+    );
+}
+
+#[test]
+fn cache_artifact_hit_rates_monotone() {
+    let Some((_rt, arts)) = load() else { return };
+    let mut hist = [0f32; scalesim::runtime::artifacts::CACHE_D];
+    for (i, h) in hist.iter_mut().enumerate() {
+        *h = 100.0 / (i + 1) as f32;
+    }
+    let mut sizes = [0f32; scalesim::runtime::artifacts::CACHE_S];
+    for (i, s) in sizes.iter_mut().enumerate() {
+        *s = (1u64 << i) as f32;
+    }
+    let rates = arts.cache.hit_rates(&hist, &sizes).unwrap();
+    for w in rates.windows(2) {
+        assert!(w[1] >= w[0] - 1e-5, "monotone in size: {rates:?}");
+    }
+    assert!(rates.iter().all(|r| (0.0..=1.001).contains(r)));
+}
