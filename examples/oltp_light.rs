@@ -49,7 +49,7 @@ fn main() {
         target: cores as u64,
         max_cycles: 10_000_000,
     };
-    let s = model.run_serial(RunOpts::with_stop(stop).timed());
+    let s = model.run_serial(RunOpts::with_stop(stop).timed().fingerprinted());
     println!("serial: {}", s.summary());
     for key in [
         "core.retired",
@@ -68,6 +68,31 @@ fn main() {
     }
     let ipc = s.counters.get("core.retired") as f64 / s.cycles.max(1) as f64 / cores as f64;
     println!("  per-core IPC            {ipc:.3}");
+
+    // Same simulation under sleep/wake active-unit scheduling: identical
+    // fingerprint, fewer unit ticks on this sparse workload.
+    let (mut amodel, ha) = build_cpu_system(traces.clone(), &cfg);
+    let stop_a = Stop::CounterAtLeast {
+        counter: ha.cores_done,
+        target: cores as u64,
+        max_cycles: 10_000_000,
+    };
+    let a = amodel.run_serial(
+        RunOpts::with_stop(stop_a)
+            .timed()
+            .fingerprinted()
+            .active_list(),
+    );
+    println!("serial (active-list): {}", a.summary());
+    println!(
+        "  active-unit ratio       {:.3} (speedup {:.2}x over full scan)",
+        a.active_ratio(amodel.num_units()),
+        s.wall.as_secs_f64() / a.wall.as_secs_f64().max(1e-12)
+    );
+    assert_eq!(
+        a.fingerprint, s.fingerprint,
+        "sleep/wake must be observably identical to the full scan"
+    );
 
     // Parallel run with the paper's clustering (cores spread evenly).
     let (mut pmodel, h2) = build_cpu_system(traces, &cfg);

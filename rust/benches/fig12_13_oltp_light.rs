@@ -7,7 +7,7 @@
 //! worker counts sync overhead is no longer marginal because the light
 //! model simulates at 100s of KHz.
 
-use scalesim::harness::{fig09, fig12_13};
+use scalesim::harness::{bench_json, fig09, fig12_13};
 
 fn main() {
     let small = std::env::var("SCALESIM_BENCH_SCALE").as_deref() == Ok("small");
@@ -31,5 +31,22 @@ fn main() {
         "# modeled speedup at {} workers: {:.2}x",
         last.workers,
         out.serial_ns as f64 / last.modeled.total_ns().max(1) as f64
+    );
+
+    // Active-unit scheduling trajectory: full matrix, recorded as JSON so
+    // successive PRs can diff cycles/sec, sync ops, and active ratio.
+    println!("\n# sleep/wake scheduling matrix (BENCH_ladder.json)...");
+    let bench = bench_json::run_oltp_light(cores, &workers, None);
+    bench_json::print(&bench);
+    assert!(
+        bench.fingerprints_agree(),
+        "active-unit scheduling diverged from the reference engine"
+    );
+    let path = std::path::Path::new("BENCH_ladder.json");
+    bench.write_file(path).expect("write BENCH_ladder.json");
+    println!(
+        "# wrote {} (active/full speedup {:.2}x)",
+        path.display(),
+        bench.speedup_active_vs_full()
     );
 }

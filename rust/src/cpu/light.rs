@@ -186,6 +186,12 @@ impl Unit for LightCore {
     }
 
     fn is_idle(&self) -> bool {
-        self.done()
+        // Not `done()` alone: the work call that retires the last op
+        // returns before the done-signalling branch runs (that branch is
+        // the *next* call's early path). Claiming idleness before
+        // `cores_done` is bumped would let active-list scheduling park the
+        // core one cycle early and strand the Stop::CounterAtLeast
+        // condition — `work` must be a strict no-op once this is true.
+        self.done() && self.done_signalled
     }
 }

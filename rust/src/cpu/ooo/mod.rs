@@ -174,6 +174,12 @@ impl OooCore {
     }
 
     fn fetch(&mut self, cycle: u64) {
+        if self.fetch_pos >= self.trace.len() {
+            // Nothing left to fetch: not a stall, and — together with an
+            // empty ROB — keeps done-state `work` a strict no-op, which
+            // the sleep/wake contract (`engine::unit`) requires.
+            return;
+        }
         if cycle < self.fetch_stall_until || self.pending_branch.is_some() {
             self.fetch_stall_cycles += 1;
             return;

@@ -1,0 +1,210 @@
+//! Sleep/wake bookkeeping for activity-driven scheduling.
+//!
+//! The work phase normally ticks every unit every cycle. On sparse models
+//! (drained pipelines, quiescent routers, finished cores) most of those
+//! ticks are no-ops, and the full scan becomes the dominant wall-clock
+//! term. `ActiveState` lets each cluster tick only its *active* units:
+//!
+//! - A unit is **quiescent** when `is_idle()` holds and every one of its
+//!   input queues is empty. Its owning cluster then parks it (removes it
+//!   from the cluster's active list and sets its `asleep` flag).
+//! - A transfer that makes some input queue go 0 → 1 **wakes** the
+//!   destination unit: the sender's cluster posts the unit id into a wake
+//!   box addressed to the destination's cluster, which drains its boxes at
+//!   the start of the next work phase.
+//! - Units that must tick unconditionally (free-running sources, anything
+//!   whose `work` is not a no-op while quiescent) opt out via
+//!   [`crate::engine::Unit::always_active`].
+//!
+//! # Why this cannot lose a wakeup
+//!
+//! A unit only parks when *all* of its input queues are empty, counting
+//! messages that are queued but not yet consumable (delay still running).
+//! Any message that could later need the unit's attention is therefore
+//! either (a) already in one of its input queues — then the unit never
+//! parked, or (b) still staged in some sender's out-half — then the
+//! transfer that eventually delivers it performs the 0 → 1 transition and
+//! posts a wake. `tests/wakeup.rs` stresses case (b) with multi-cycle port
+//! delays.
+//!
+//! # Ownership / safety model
+//!
+//! The same phase-ownership discipline as `engine::port` (no locks, no
+//! atomics):
+//!
+//! - `asleep[u]` is written only by `u`'s owning cluster during the work
+//!   phase, and read by any cluster during the transfer phase (when no
+//!   writes occur). The existing work→transfer barrier provides the
+//!   happens-before edge.
+//! - `boxes[src → dst]` is written only by cluster `src` during the
+//!   transfer phase and drained only by cluster `dst` during the next
+//!   work phase; each (src, dst) pair has its own box, so every box has
+//!   exactly one writer and one reader per phase.
+
+use std::cell::UnsafeCell;
+
+/// Scheduling mode of the work phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedMode {
+    /// Tick every unit every cycle (the reference behaviour).
+    #[default]
+    FullScan,
+    /// Tick only awake units; park quiescent units and wake them on
+    /// message delivery. Observably identical to `FullScan` for units
+    /// honouring the `is_idle` contract (see `engine::unit`).
+    ActiveList,
+}
+
+impl SchedMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "full" | "full-scan" => Ok(SchedMode::FullScan),
+            "active" | "active-list" => Ok(SchedMode::ActiveList),
+            _ => Err(format!("unknown sched mode {s:?}; expected full|active")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedMode::FullScan => "full-scan",
+            SchedMode::ActiveList => "active-list",
+        }
+    }
+}
+
+/// Shared sleep flags and cluster-to-cluster wake boxes for one run.
+pub(crate) struct ActiveState {
+    /// `asleep[u]`: unit `u` is parked. See module docs for ownership.
+    asleep: Vec<UnsafeCell<bool>>,
+    /// Owning cluster of each unit.
+    cluster_of: Vec<u32>,
+    /// `boxes[src * clusters + dst]`: wake requests posted by cluster
+    /// `src` for units owned by cluster `dst`.
+    boxes: Vec<UnsafeCell<Vec<u32>>>,
+    clusters: usize,
+}
+
+// SAFETY: see module docs — every cell has exactly one writing thread in
+// any phase, and the engine's phase barriers order cross-phase handoffs.
+unsafe impl Sync for ActiveState {}
+
+impl ActiveState {
+    pub(crate) fn new(partition: &[Vec<u32>], n_units: usize) -> Self {
+        let clusters = partition.len();
+        let mut cluster_of = vec![0u32; n_units];
+        for (c, units) in partition.iter().enumerate() {
+            for &u in units {
+                cluster_of[u as usize] = c as u32;
+            }
+        }
+        ActiveState {
+            asleep: (0..n_units).map(|_| UnsafeCell::new(false)).collect(),
+            cluster_of,
+            boxes: (0..clusters * clusters)
+                .map(|_| UnsafeCell::new(Vec::new()))
+                .collect(),
+            clusters,
+        }
+    }
+
+    /// Park unit `u`.
+    ///
+    /// # Safety
+    /// Caller must be `u`'s owning cluster, inside the work phase.
+    #[inline]
+    pub(crate) unsafe fn park(&self, u: u32) {
+        *self.asleep[u as usize].get() = true;
+    }
+
+    /// Is `u` parked? Readable from any cluster during the transfer phase
+    /// (flags are only written during work phases).
+    ///
+    /// # Safety
+    /// Caller must be inside the transfer phase (or hold exclusivity).
+    #[inline]
+    pub(crate) unsafe fn is_asleep(&self, u: u32) -> bool {
+        *self.asleep[u as usize].get()
+    }
+
+    /// Post a wake for unit `u` from cluster `src`. Duplicates are fine —
+    /// the drain pass dedupes through the `asleep` flag.
+    ///
+    /// # Safety
+    /// Caller must be cluster `src`'s thread, inside the transfer phase.
+    #[inline]
+    pub(crate) unsafe fn post_wake(&self, src: usize, u: u32) {
+        let dst = self.cluster_of[u as usize] as usize;
+        (*self.boxes[src * self.clusters + dst].get()).push(u);
+    }
+
+    /// Drain every wake box addressed to cluster `dst`, un-parking each
+    /// still-parked unit and appending it to `active`. The active *set* is
+    /// deterministic regardless of box drain order (duplicates collapse on
+    /// the flag), so execution stays order-agnostic.
+    ///
+    /// # Safety
+    /// Caller must be cluster `dst`'s thread, at the start of the work
+    /// phase (after the transfer→work barrier).
+    pub(crate) unsafe fn drain_wakes(&self, dst: usize, active: &mut Vec<u32>) {
+        for src in 0..self.clusters {
+            let b = &mut *self.boxes[src * self.clusters + dst].get();
+            for &u in b.iter() {
+                let flag = self.asleep[u as usize].get();
+                if *flag {
+                    *flag = false;
+                    active.push(u);
+                }
+            }
+            b.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(SchedMode::parse("active").unwrap(), SchedMode::ActiveList);
+        assert_eq!(SchedMode::parse("full").unwrap(), SchedMode::FullScan);
+        assert!(SchedMode::parse("nope").is_err());
+        assert_eq!(SchedMode::ActiveList.name(), "active-list");
+    }
+
+    #[test]
+    fn wake_dedupes_and_clears() {
+        let part = vec![vec![0u32, 1], vec![2u32]];
+        let st = ActiveState::new(&part, 3);
+        unsafe {
+            st.park(1);
+            // Both clusters wake unit 1 in the same transfer phase.
+            st.post_wake(0, 1);
+            st.post_wake(1, 1);
+            let mut active = Vec::new();
+            st.drain_wakes(0, &mut active);
+            assert_eq!(active, vec![1], "woken exactly once");
+            assert!(!st.is_asleep(1));
+            // Boxes were cleared: a second drain is a no-op.
+            active.clear();
+            st.drain_wakes(0, &mut active);
+            assert!(active.is_empty());
+        }
+    }
+
+    #[test]
+    fn wake_routes_to_owning_cluster() {
+        let part = vec![vec![0u32], vec![1u32]];
+        let st = ActiveState::new(&part, 2);
+        unsafe {
+            st.park(1);
+            st.post_wake(0, 1); // cluster 0 delivers into cluster 1's unit
+            let mut active0 = Vec::new();
+            st.drain_wakes(0, &mut active0);
+            assert!(active0.is_empty(), "cluster 0 owns no woken unit");
+            let mut active1 = Vec::new();
+            st.drain_wakes(1, &mut active1);
+            assert_eq!(active1, vec![1]);
+        }
+    }
+}

@@ -3,12 +3,14 @@
 //! `crate::sync` (ladder-barrier) and drives the same `Model` phase
 //! primitives.
 
+pub mod active;
 pub mod bp;
 pub mod message;
 pub mod model;
 pub mod port;
 pub mod unit;
 
+pub use active::SchedMode;
 pub use message::{Fnv, Msg};
 pub use model::{Model, ModelBuilder, RunOpts, Stop};
 pub use port::{InPort, OutPort, PortCfg};

@@ -6,11 +6,40 @@
 //! serial engine is the *reference semantics*: the paper's headline
 //! correctness claim is that parallel execution is observably identical to
 //! serial execution, which `tests/determinism.rs` checks via fingerprints.
+//!
+//! # Sleep/wake protocol (`SchedMode::ActiveList`)
+//!
+//! Both engines can run the work phase activity-driven instead of
+//! full-scan. Each cluster keeps an *active list* of its units; the cycle
+//! then looks like:
+//!
+//! 1. **Drain wakes** — un-park units other clusters delivered to during
+//!    the previous transfer phase (`ActiveState::drain_wakes`).
+//! 2. **Work** — tick only the active list. After a unit's `work`, park it
+//!    if it is quiescent: `always_active()` is false, `is_idle()` holds,
+//!    and every input queue is empty (counting not-yet-ready messages, so
+//!    multi-cycle port delays can never strand a message — the queue stays
+//!    non-empty, the unit stays awake).
+//! 3. **Transfer** — as usual, plus: a delivery that makes a destination
+//!    input queue go 0 → 1 posts a wake for the destination unit if it is
+//!    parked (`transfer_dirty_wake`).
+//!
+//! Parking decisions are owned by the unit's cluster; wake posts cross
+//! clusters through single-writer boxes; the existing phase barriers
+//! provide every needed happens-before edge (`engine::active` has the full
+//! ownership argument). For units honouring the `is_idle` no-op contract
+//! (`engine::unit` docs) the schedule of `work` calls a unit *observes* is
+//! unchanged, so serial full-scan, serial active-list, and the parallel
+//! ladder all produce identical fingerprints — checked across the whole
+//! (engine × sync method × partition × workers) matrix by
+//! `tests/determinism.rs` and `tests/wakeup.rs`.
 
+use super::active::{ActiveState, SchedMode};
 use super::message::Fnv;
 use super::port::{InPort, OutPort, PortArena, PortCfg};
 use super::unit::{Ctx, Unit};
 use crate::stats::counters::CounterId;
+use crate::stats::timers::UnitProfile;
 use crate::stats::{Counters, PhaseTimers, RunStats, StatsMap};
 use std::cell::UnsafeCell;
 use std::time::Instant;
@@ -149,6 +178,9 @@ pub struct RunOpts {
     pub timed: bool,
     /// Compute a state fingerprint at the end (determinism tests).
     pub fingerprint: bool,
+    /// Work-phase scheduling policy (full scan vs sleep/wake active
+    /// lists). Both engines honour it; default is the reference full scan.
+    pub sched: SchedMode,
 }
 
 impl RunOpts {
@@ -157,6 +189,7 @@ impl RunOpts {
             stop: Stop::Cycles(n),
             timed: false,
             fingerprint: false,
+            sched: SchedMode::FullScan,
         }
     }
 
@@ -170,11 +203,23 @@ impl RunOpts {
         self
     }
 
+    /// Opt in to sleep/wake active-unit scheduling.
+    pub fn active_list(mut self) -> Self {
+        self.sched = SchedMode::ActiveList;
+        self
+    }
+
+    pub fn with_sched(mut self, sched: SchedMode) -> Self {
+        self.sched = sched;
+        self
+    }
+
     pub fn with_stop(stop: Stop) -> Self {
         RunOpts {
             stop,
             timed: false,
             fingerprint: false,
+            sched: SchedMode::FullScan,
         }
     }
 }
@@ -276,6 +321,77 @@ impl Model {
         });
     }
 
+    /// Work phase over a cluster's active list, parking units that have
+    /// gone quiescent (sleep/wake protocol, module docs). Returns the
+    /// number of `work` invocations — the cluster's active-unit ticks.
+    ///
+    /// The park check runs right after each unit's own `work`: input
+    /// queues only fill during transfer phases, so quiescence observed
+    /// here is final for this work phase.
+    ///
+    /// # Safety
+    /// Caller must be the owning cluster's thread inside the work phase,
+    /// and `active` must contain only this cluster's units.
+    pub(crate) unsafe fn work_active(
+        &self,
+        active: &mut Vec<u32>,
+        cycle: u64,
+        dirty: &mut Vec<u32>,
+        state: &ActiveState,
+    ) -> u64 {
+        let ticks = active.len() as u64;
+        active.retain(|&u| {
+            // SAFETY: forwarded from the caller's work-phase ownership.
+            unsafe {
+                self.work_one(u, cycle, dirty);
+                let unit = &*self.units[u as usize].get();
+                if unit.always_active() || !unit.is_idle() {
+                    return true;
+                }
+                let quiescent = self.in_ports_of[u as usize]
+                    .iter()
+                    .all(|&p| self.arena.in_len_hint(p) == 0);
+                if quiescent {
+                    state.park(u);
+                }
+                !quiescent
+            }
+        });
+        ticks
+    }
+
+    /// Transfer phase with wake detection: as [`Model::transfer_dirty`],
+    /// plus a wake post whenever a delivery makes a destination input
+    /// queue go 0 → 1 while the destination unit is parked.
+    ///
+    /// # Safety
+    /// As `transfer_dirty`; additionally `src_cluster` must be the calling
+    /// cluster's index in the partition `state` was built from.
+    pub(crate) unsafe fn transfer_dirty_wake(
+        &self,
+        dirty: &mut Vec<u32>,
+        cycle: u64,
+        state: &ActiveState,
+        src_cluster: usize,
+    ) {
+        dirty.retain(|&p| {
+            // SAFETY: forwarded from the caller's transfer-phase
+            // ownership (the in-half and both hints belong to the
+            // sender's cluster during transfer).
+            unsafe {
+                let was_empty = self.arena.in_len_hint(p) == 0;
+                let moved = self.arena.transfer(p, cycle);
+                if was_empty && moved > 0 {
+                    let dst = self.arena.dst_unit[p as usize];
+                    if state.is_asleep(dst) {
+                        state.post_wake(src_cluster, dst);
+                    }
+                }
+                self.arena.out_len_hint(p) > 0
+            }
+        });
+    }
+
     /// Exclusive-access helpers (between cycles / after a run).
     pub fn in_flight(&mut self) -> usize {
         self.arena.in_flight()
@@ -362,8 +478,17 @@ impl Model {
 
     /// The serial reference engine: work all units, transfer all ports,
     /// advance the clock — exactly the semantics the parallel engine must
-    /// reproduce.
+    /// reproduce. With `SchedMode::ActiveList` the work phase runs the
+    /// sleep/wake protocol (module docs) instead of the full scan; the
+    /// observable result is identical for contract-honouring units.
     pub fn run_serial(&mut self, opts: RunOpts) -> RunStats {
+        match opts.sched {
+            SchedMode::FullScan => self.run_serial_full(opts),
+            SchedMode::ActiveList => self.run_serial_active(opts),
+        }
+    }
+
+    fn run_serial_full(&mut self, opts: RunOpts) -> RunStats {
         let n_units = self.num_units() as u32;
         let mut dirty: Vec<u32> = Vec::with_capacity(self.arena.len().min(4096));
         let t0 = Instant::now();
@@ -391,6 +516,55 @@ impl Model {
                 }
                 // SAFETY: single thread.
                 unsafe { self.transfer_dirty(&mut dirty, cycle) };
+            }
+            timers.unit_ticks += n_units as u64;
+            cycle += 1;
+        }
+        timers.cycles = cycle;
+        let wall = t0.elapsed();
+        let mut counters = self.counters.snapshot();
+        counters.merge(&self.unit_stats());
+        RunStats {
+            cycles: cycle,
+            wall,
+            workers: 1,
+            per_worker: vec![timers],
+            counters,
+            sync_ops: 0,
+            fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
+        }
+    }
+
+    fn run_serial_active(&mut self, opts: RunOpts) -> RunStats {
+        let n_units = self.num_units();
+        let all: Vec<u32> = (0..n_units as u32).collect();
+        let state = ActiveState::new(std::slice::from_ref(&all), n_units);
+        let mut active = all;
+        let mut dirty: Vec<u32> = Vec::with_capacity(self.arena.len().min(4096));
+        let t0 = Instant::now();
+        let mut timers = PhaseTimers::new();
+        let mut cycle = 0u64;
+        loop {
+            if self.should_stop(&opts.stop, cycle) {
+                break;
+            }
+            // SAFETY (throughout): single thread — trivially exclusive for
+            // every phase of the sleep/wake ownership schedule.
+            unsafe {
+                state.drain_wakes(0, &mut active);
+                if opts.timed {
+                    let tw = Instant::now();
+                    timers.unit_ticks +=
+                        self.work_active(&mut active, cycle, &mut dirty, &state);
+                    timers.work_ns += tw.elapsed().as_nanos() as u64;
+                    let tt = Instant::now();
+                    self.transfer_dirty_wake(&mut dirty, cycle, &state, 0);
+                    timers.transfer_ns += tt.elapsed().as_nanos() as u64;
+                } else {
+                    timers.unit_ticks +=
+                        self.work_active(&mut active, cycle, &mut dirty, &state);
+                    self.transfer_dirty_wake(&mut dirty, cycle, &state, 0);
+                }
             }
             cycle += 1;
         }
@@ -422,18 +596,10 @@ impl Model {
         partition: &[Vec<u32>],
         opts: RunOpts,
     ) -> (RunStats, Vec<PhaseTimers>) {
-        // Calibrate the cost of one start/stop Instant pair.
-        let clock_overhead_ns = {
-            let n = 10_000u32;
-            let t0 = Instant::now();
-            let mut sink = 0u64;
-            for _ in 0..n {
-                let t = Instant::now();
-                sink = sink.wrapping_add(t.elapsed().as_nanos() as u64);
-            }
-            std::hint::black_box(sink);
-            (t0.elapsed().as_nanos() as u64 / n as u64).max(1)
-        };
+        let clock_overhead_ns = calibrate_clock_overhead_ns();
+        let active_sched = opts.sched == SchedMode::ActiveList;
+        let state = ActiveState::new(partition, self.num_units());
+        let mut actives: Vec<Vec<u32>> = partition.to_vec();
         let mut cluster_dirty: Vec<Vec<u32>> =
             partition.iter().map(|_| Vec::new()).collect();
         let t0 = Instant::now();
@@ -443,19 +609,44 @@ impl Model {
             if self.should_stop(&opts.stop, cycle) {
                 break;
             }
-            for (ci, units) in partition.iter().enumerate() {
-                let tw = Instant::now();
-                for &u in units {
-                    // SAFETY: single thread.
-                    unsafe { self.work_one(u, cycle, &mut cluster_dirty[ci]) };
+            if active_sched {
+                for (ci, active) in actives.iter_mut().enumerate() {
+                    let tw = Instant::now();
+                    // SAFETY: single thread — trivially exclusive; wake
+                    // boxes drained here were filled last cycle.
+                    unsafe {
+                        state.drain_wakes(ci, active);
+                        per_cluster[ci].unit_ticks += self.work_active(
+                            active,
+                            cycle,
+                            &mut cluster_dirty[ci],
+                            &state,
+                        );
+                    }
+                    per_cluster[ci].work_ns += tw.elapsed().as_nanos() as u64;
                 }
-                per_cluster[ci].work_ns += tw.elapsed().as_nanos() as u64;
-            }
-            for (ci, dirty) in cluster_dirty.iter_mut().enumerate() {
-                let tt = Instant::now();
-                // SAFETY: single thread.
-                unsafe { self.transfer_dirty(dirty, cycle) };
-                per_cluster[ci].transfer_ns += tt.elapsed().as_nanos() as u64;
+                for (ci, dirty) in cluster_dirty.iter_mut().enumerate() {
+                    let tt = Instant::now();
+                    // SAFETY: single thread.
+                    unsafe { self.transfer_dirty_wake(dirty, cycle, &state, ci) };
+                    per_cluster[ci].transfer_ns += tt.elapsed().as_nanos() as u64;
+                }
+            } else {
+                for (ci, units) in partition.iter().enumerate() {
+                    let tw = Instant::now();
+                    for &u in units {
+                        // SAFETY: single thread.
+                        unsafe { self.work_one(u, cycle, &mut cluster_dirty[ci]) };
+                    }
+                    per_cluster[ci].unit_ticks += units.len() as u64;
+                    per_cluster[ci].work_ns += tw.elapsed().as_nanos() as u64;
+                }
+                for (ci, dirty) in cluster_dirty.iter_mut().enumerate() {
+                    let tt = Instant::now();
+                    // SAFETY: single thread.
+                    unsafe { self.transfer_dirty(dirty, cycle) };
+                    per_cluster[ci].transfer_ns += tt.elapsed().as_nanos() as u64;
+                }
             }
             cycle += 1;
         }
@@ -486,6 +677,50 @@ impl Model {
             per_cluster,
         )
     }
+
+    /// Profiling prologue for cost-balanced partitioning: run `cycles`
+    /// full-scan cycles, timing each unit's work individually, and return
+    /// the accumulated per-unit nanoseconds (clock overhead calibrated
+    /// out, floored at 1 so every unit carries weight in LPT).
+    ///
+    /// This *advances simulation state* — profile a scratch instance built
+    /// from the same builder/seed, then partition the instance you intend
+    /// to measure (see `harness::fig12_13`).
+    pub fn profile_unit_costs(&mut self, cycles: u64) -> UnitProfile {
+        let n = self.num_units();
+        let clock_overhead_ns = calibrate_clock_overhead_ns();
+        let mut work_ns = vec![0u64; n];
+        let mut dirty: Vec<u32> = Vec::with_capacity(self.arena.len().min(4096));
+        for cycle in 0..cycles {
+            for u in 0..n as u32 {
+                let t = Instant::now();
+                // SAFETY: single thread — trivially exclusive.
+                unsafe { self.work_one(u, cycle, &mut dirty) };
+                work_ns[u as usize] += t.elapsed().as_nanos() as u64;
+            }
+            // SAFETY: single thread.
+            unsafe { self.transfer_dirty(&mut dirty, cycle) };
+        }
+        let bias = cycles * clock_overhead_ns;
+        for w in &mut work_ns {
+            *w = (*w).saturating_sub(bias).max(1);
+        }
+        UnitProfile { work_ns, cycles }
+    }
+}
+
+/// Measured cost of one start/stop `Instant` pair, for subtracting
+/// instrumentation bias from fine-grained spans.
+fn calibrate_clock_overhead_ns() -> u64 {
+    let n = 10_000u32;
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for _ in 0..n {
+        let t = Instant::now();
+        sink = sink.wrapping_add(t.elapsed().as_nanos() as u64);
+    }
+    std::hint::black_box(sink);
+    (t0.elapsed().as_nanos() as u64 / n as u64).max(1)
 }
 
 #[cfg(test)]
@@ -627,5 +862,51 @@ mod tests {
         let (m, _) = pipeline_model(1);
         assert_eq!(m.neighbours(0), vec![1]);
         assert_eq!(m.neighbours(1), vec![0]);
+    }
+
+    #[test]
+    fn active_list_matches_full_scan() {
+        let (mut m1, _) = pipeline_model(100);
+        let s1 = m1.run_serial(RunOpts::cycles(300).fingerprinted());
+        let (mut m2, _) = pipeline_model(100);
+        let s2 = m2.run_serial(RunOpts::cycles(300).fingerprinted().active_list());
+        assert_eq!(s1.fingerprint, s2.fingerprint, "sleep/wake must be invisible");
+        assert_eq!(s1.counters.get("delivered"), s2.counters.get("delivered"));
+        // Full scan ticks every unit every cycle; the producer drains
+        // after ~100 cycles and both units park, so the active engine
+        // must tick far fewer unit-cycles.
+        assert_eq!(s1.unit_ticks(), 300 * 2);
+        assert!(
+            s2.unit_ticks() < s1.unit_ticks() / 2,
+            "sleeping must save ticks: {} vs {}",
+            s2.unit_ticks(),
+            s1.unit_ticks()
+        );
+        assert!(s2.active_ratio(2) < 0.5, "{}", s2.active_ratio(2));
+    }
+
+    #[test]
+    fn active_partitioned_matches_full_scan() {
+        let (mut m1, _) = pipeline_model(100);
+        let s1 = m1.run_serial(RunOpts::cycles(300).fingerprinted());
+        let (mut m2, _) = pipeline_model(100);
+        let (s2, per_cluster) = m2.run_serial_partitioned(
+            &[vec![0], vec![1]],
+            RunOpts::cycles(300).fingerprinted().active_list(),
+        );
+        assert_eq!(s1.fingerprint, s2.fingerprint);
+        assert_eq!(s1.counters.get("delivered"), s2.counters.get("delivered"));
+        let ticks: u64 = per_cluster.iter().map(|t| t.unit_ticks).sum();
+        assert!(ticks < 300, "parked units must not tick: {ticks}");
+    }
+
+    #[test]
+    fn unit_profile_measures_every_unit() {
+        let (mut m, _) = pipeline_model(1_000);
+        let prof = m.profile_unit_costs(50);
+        assert_eq!(prof.work_ns.len(), 2);
+        assert_eq!(prof.cycles, 50);
+        assert!(prof.work_ns.iter().all(|&w| w >= 1), "floored at 1");
+        assert!(prof.total_ns() >= 2);
     }
 }

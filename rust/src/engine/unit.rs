@@ -24,10 +24,30 @@ pub trait Unit: Send {
     fn state_hash(&self, _h: &mut Fnv) {}
 
     /// True when the unit has no pending internal work. Used by the
-    /// `AllIdle` stop condition; conservative default is `true` (a model
-    /// relying on AllIdle must implement it for stateful units).
+    /// `AllIdle` stop condition *and* by active-list scheduling;
+    /// conservative default is `true` (a model relying on AllIdle must
+    /// implement it for stateful units).
+    ///
+    /// # Contract (sleep/wake)
+    ///
+    /// Under `SchedMode::ActiveList` a unit reporting `is_idle()` with
+    /// every input queue empty is parked and its `work` is not called
+    /// again until a message is delivered to one of its input ports. The
+    /// unit must therefore be a strict no-op in that state: no state
+    /// mutation, no sends, no stat/counter updates. This is the same
+    /// obligation `AllIdle` already imposes (stopping the run while a
+    /// unit still wanted to act would be wrong for the same reason).
+    /// Units that cannot honour it override [`Unit::always_active`].
     fn is_idle(&self) -> bool {
         true
+    }
+
+    /// Units that must tick every cycle regardless of message activity —
+    /// free-running traffic sources, refresh engines, benchmark spinners —
+    /// return `true` to opt out of sleep/wake parking. Default: `false`
+    /// (eligible to sleep when quiescent).
+    fn always_active(&self) -> bool {
+        false
     }
 }
 

@@ -1,0 +1,299 @@
+//! Machine-readable perf-trajectory benchmark: `BENCH_ladder.json`.
+//!
+//! Runs the sparse OLTP light-CPU workload (the fig 12/13 model) under
+//! every engine/scheduling combination and emits one JSON file so future
+//! PRs can track speedup without parsing human tables:
+//!
+//! - serial full-scan (the reference),
+//! - serial active-list (sleep/wake),
+//! - ladder full-scan and active-list at each requested worker count.
+//!
+//! Every run carries cycles/sec, the sync-op count, the work/transfer/
+//! barrier phase split, the active-unit ratio, and the state fingerprint
+//! (all runs of one report must agree — that is the determinism claim the
+//! speedup rides on). Serialization is hand-rolled: the crate is
+//! dependency-free by design, and the schema is flat enough that a JSON
+//! writer is ~40 lines. Fingerprints are emitted as hex strings (u64
+//! does not fit IEEE doubles losslessly).
+
+use super::fig12_13::{default_oltp, profile_costs, resolve_partition};
+use crate::engine::{RunOpts, SchedMode, Stop};
+use crate::sched::PartitionStrategy;
+use crate::stats::RunStats;
+use crate::sync::{run_ladder, ParallelOpts, SyncMethod};
+use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
+use crate::workload::generate_oltp_traces;
+
+/// One engine/mode measurement.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    /// "serial" or "ladder".
+    pub engine: &'static str,
+    pub sched: &'static str,
+    pub workers: usize,
+    pub cycles: u64,
+    pub wall_ns: u64,
+    pub cycles_per_sec: f64,
+    pub sync_ops: u64,
+    pub work_ns: u64,
+    pub transfer_ns: u64,
+    pub barrier_ns: u64,
+    /// Fraction of unit-cycles that ran `work` (1.0 = full scan).
+    pub active_ratio: f64,
+    pub fingerprint: u64,
+}
+
+impl BenchRow {
+    fn from_stats(
+        engine: &'static str,
+        sched: SchedMode,
+        workers: usize,
+        units: usize,
+        s: &RunStats,
+    ) -> Self {
+        let (work_ns, transfer_ns, barrier_ns) = s.phase_split();
+        BenchRow {
+            engine,
+            sched: sched.name(),
+            workers,
+            cycles: s.cycles,
+            wall_ns: s.wall.as_nanos() as u64,
+            cycles_per_sec: s.sim_khz() * 1e3,
+            sync_ops: s.sync_ops,
+            work_ns,
+            transfer_ns,
+            barrier_ns,
+            active_ratio: s.active_ratio(units),
+            fingerprint: s.fingerprint,
+        }
+    }
+}
+
+/// The full report.
+#[derive(Debug, Clone)]
+pub struct LadderBench {
+    pub model: &'static str,
+    pub cores: usize,
+    pub units: usize,
+    pub strategy: &'static str,
+    pub rows: Vec<BenchRow>,
+}
+
+impl LadderBench {
+    fn row(&self, engine: &str, sched: &str, workers: usize) -> Option<&BenchRow> {
+        self.rows
+            .iter()
+            .find(|r| r.engine == engine && r.sched == sched && r.workers == workers)
+    }
+
+    /// Headline number: serial active-list cycles/sec over serial
+    /// full-scan cycles/sec (same simulation, same fingerprint).
+    pub fn speedup_active_vs_full(&self) -> f64 {
+        match (
+            self.row("serial", "active-list", 1),
+            self.row("serial", "full-scan", 1),
+        ) {
+            (Some(a), Some(f)) if f.cycles_per_sec > 0.0 => {
+                a.cycles_per_sec / f.cycles_per_sec
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// All runs simulated the same execution.
+    pub fn fingerprints_agree(&self) -> bool {
+        self.rows
+            .windows(2)
+            .all(|w| w[0].fingerprint == w[1].fingerprint && w[0].cycles == w[1].cycles)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"model\": \"{}\",\n", self.model));
+        s.push_str(&format!("  \"cores\": {},\n", self.cores));
+        s.push_str(&format!("  \"units\": {},\n", self.units));
+        s.push_str(&format!("  \"strategy\": \"{}\",\n", self.strategy));
+        s.push_str(&format!(
+            "  \"fingerprints_agree\": {},\n",
+            self.fingerprints_agree()
+        ));
+        s.push_str(&format!(
+            "  \"speedup_active_vs_full\": {:.4},\n",
+            self.speedup_active_vs_full()
+        ));
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"engine\": \"{}\", \"sched\": \"{}\", \"workers\": {}, \
+                 \"cycles\": {}, \"wall_ns\": {}, \"cycles_per_sec\": {:.1}, \
+                 \"sync_ops\": {}, \"work_ns\": {}, \"transfer_ns\": {}, \
+                 \"barrier_ns\": {}, \"active_ratio\": {:.4}, \
+                 \"fingerprint\": \"{:#018x}\"}}{}\n",
+                r.engine,
+                r.sched,
+                r.workers,
+                r.cycles,
+                r.wall_ns,
+                r.cycles_per_sec,
+                r.sync_ops,
+                r.work_ns,
+                r.transfer_ns,
+                r.barrier_ns,
+                r.active_ratio,
+                r.fingerprint,
+                if i + 1 < self.rows.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    pub fn write_file(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// Run the benchmark matrix on the OLTP light-CPU model.
+pub fn run_oltp_light(
+    cores: usize,
+    worker_counts: &[usize],
+    strategy: Option<PartitionStrategy>,
+) -> LadderBench {
+    let cfg = CpuSystemCfg {
+        kind: CoreKind::Light,
+        ..Default::default()
+    };
+    let build = || build_cpu_system(generate_oltp_traces(&default_oltp(cores)), &cfg);
+    // One shared profile: every (worker, sched) row partitions from the
+    // same cost vector, so rows stay comparable.
+    let costs = profile_costs(strategy, || build().0);
+    let mut rows = Vec::new();
+
+    // Serial reference and serial sleep/wake.
+    let mut seen_units = None;
+    for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
+        let (mut model, h) = build();
+        let units = model.num_units();
+        seen_units = Some(units);
+        let stop = Stop::CounterAtLeast {
+            counter: h.cores_done,
+            target: cores as u64,
+            max_cycles: 5_000_000,
+        };
+        let stats = model.run_serial(
+            RunOpts::with_stop(stop)
+                .timed()
+                .fingerprinted()
+                .with_sched(sched),
+        );
+        rows.push(BenchRow::from_stats("serial", sched, 1, units, &stats));
+    }
+    let units = seen_units.expect("serial rows always run");
+
+    // Ladder runs at each worker count, both scheduling modes.
+    for &w in worker_counts {
+        for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
+            let (mut model, h) = build();
+            let stop = Stop::CounterAtLeast {
+                counter: h.cores_done,
+                target: cores as u64,
+                max_cycles: 5_000_000,
+            };
+            let part = resolve_partition(&model, w, strategy, &h, costs.as_deref());
+            let stats = run_ladder(
+                &mut model,
+                &part,
+                &ParallelOpts::new(
+                    SyncMethod::CommonAtomic,
+                    RunOpts::with_stop(stop)
+                        .timed()
+                        .fingerprinted()
+                        .with_sched(sched),
+                ),
+            );
+            rows.push(BenchRow::from_stats("ladder", sched, w, units, &stats));
+        }
+    }
+
+    LadderBench {
+        model: "oltp_light",
+        cores,
+        units,
+        strategy: match strategy {
+            None => "paper",
+            Some(s) => s.name(),
+        },
+        rows,
+    }
+}
+
+/// Render the report as a human table (the JSON is the artifact; this is
+/// the console echo).
+pub fn print(b: &LadderBench) {
+    let rows: Vec<Vec<String>> = b
+        .rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.engine.to_string(),
+                r.sched.to_string(),
+                r.workers.to_string(),
+                super::eng(r.cycles_per_sec),
+                r.sync_ops.to_string(),
+                format!("{:.3}", r.active_ratio),
+                format!("{:#018x}", r.fingerprint),
+            ]
+        })
+        .collect();
+    super::print_table(
+        &format!(
+            "BENCH_ladder: {} ({} cores, {} units, strategy {}) — active/full speedup {:.2}x",
+            b.model,
+            b.cores,
+            b.units,
+            b.strategy,
+            b.speedup_active_vs_full()
+        ),
+        &[
+            "engine",
+            "sched",
+            "workers",
+            "cyc/s",
+            "sync-ops",
+            "active",
+            "fingerprint",
+        ],
+        &rows,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_report_is_consistent_and_serializes() {
+        let b = run_oltp_light(2, &[2], None);
+        assert_eq!(b.rows.len(), 4, "2 serial + 2 ladder rows");
+        assert!(
+            b.fingerprints_agree(),
+            "all engines must simulate the same execution: {:?}",
+            b.rows
+                .iter()
+                .map(|r| (r.engine, r.sched, r.fingerprint))
+                .collect::<Vec<_>>()
+        );
+        assert!(b.speedup_active_vs_full() > 0.0);
+        let json = b.to_json();
+        assert!(json.contains("\"fingerprints_agree\": true"));
+        assert!(json.contains("\"rows\": ["));
+        // Crude structural sanity: balanced braces/brackets.
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count(),
+            "{json}"
+        );
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+}

@@ -12,12 +12,17 @@
 //! with the measured barrier cost (DESIGN.md §3); measured wall-clock of
 //! the true threaded run is reported alongside.
 
-use crate::engine::{RunOpts, Stop};
-use crate::sched::{partition, PartitionStrategy};
+use crate::engine::{Model, RunOpts, SchedMode, Stop};
+use crate::sched::{partition, partition_with_costs, PartitionStrategy};
 use crate::stats::scaling::{model_parallel_time, BarrierCost, ClusterCosts, ScalingPoint};
 use crate::sync::{run_ladder, ParallelOpts, SyncMethod};
-use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
+use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg, CpuSystemHandles};
 use crate::workload::{generate_oltp_traces, OltpCfg};
+
+/// Profiling prologue length (cycles) for cost-balanced partitioning: long
+/// enough to reach steady-state memory traffic, short against the
+/// multi-hundred-k-cycle measured runs.
+pub const PROFILE_CYCLES: u64 = 2_000;
 
 #[derive(Debug, Clone)]
 pub struct Fig12Row {
@@ -51,32 +56,81 @@ pub fn default_oltp(cores: usize) -> OltpCfg {
     }
 }
 
+/// Run the profiling prologue on a scratch instance when the strategy
+/// needs measured costs (profiling advances simulation state, so it must
+/// not touch an instance that will be measured). One profile serves a
+/// whole sweep: the cost vector is independent of the worker count, and
+/// sharing it keeps every sweep point partitioned consistently — the
+/// prologue is wall-clock-measured, so re-profiling could silently hand
+/// different partitions to the modeled and measured runs of one point.
+pub fn profile_costs(
+    strategy: Option<PartitionStrategy>,
+    scratch: impl FnOnce() -> Model,
+) -> Option<Vec<u64>> {
+    match strategy {
+        Some(PartitionStrategy::CostBalanced) => {
+            let mut probe = scratch();
+            Some(probe.profile_unit_costs(PROFILE_CYCLES).work_ns)
+        }
+        _ => None,
+    }
+}
+
+/// Resolve the unit→cluster mapping for one sweep point. `CostBalanced`
+/// uses the shared measured costs from [`profile_costs`], falling back to
+/// the static degree proxy (`sched::partition`) if none were gathered.
+pub fn resolve_partition(
+    model: &Model,
+    w: usize,
+    strategy: Option<PartitionStrategy>,
+    h: &CpuSystemHandles,
+    costs: Option<&[u64]>,
+) -> Vec<Vec<u32>> {
+    match (strategy, costs) {
+        (None, _) => h.partition(w), // paper clustering: cores spread evenly
+        (Some(PartitionStrategy::CostBalanced), Some(costs)) => {
+            partition_with_costs(w, costs)
+        }
+        (Some(s), _) => partition(model, w, s),
+    }
+}
+
 pub fn run(
     cores: usize,
     worker_counts: &[usize],
     barrier: &BarrierCost,
     strategy: Option<PartitionStrategy>,
 ) -> Fig12Output {
+    run_with(cores, worker_counts, barrier, strategy, SchedMode::FullScan)
+}
+
+pub fn run_with(
+    cores: usize,
+    worker_counts: &[usize],
+    barrier: &BarrierCost,
+    strategy: Option<PartitionStrategy>,
+    sched: SchedMode,
+) -> Fig12Output {
     let mut rows = Vec::new();
     let mut serial_ns = 0u64;
+    let cfg = CpuSystemCfg {
+        kind: CoreKind::Light,
+        ..Default::default()
+    };
+    let scratch = || build_cpu_system(generate_oltp_traces(&default_oltp(cores)), &cfg).0;
+    // Named to stay distinct from the per-cluster `ClusterCosts` below.
+    let unit_costs = profile_costs(strategy, scratch);
     for &w in worker_counts {
         let traces = generate_oltp_traces(&default_oltp(cores));
-        let cfg = CpuSystemCfg {
-            kind: CoreKind::Light,
-            ..Default::default()
-        };
         let (mut model, h) = build_cpu_system(traces, &cfg);
         let stop = Stop::CounterAtLeast {
             counter: h.cores_done,
             target: cores as u64,
             max_cycles: 5_000_000,
         };
-        let part = match strategy {
-            Some(s) => partition(&model, w, s),
-            None => h.partition(w), // paper clustering: cores spread evenly
-        };
+        let part = resolve_partition(&model, w, strategy, &h, unit_costs.as_deref());
         let (stats, per_cluster) =
-            model.run_serial_partitioned(&part, RunOpts::with_stop(stop));
+            model.run_serial_partitioned(&part, RunOpts::with_stop(stop).with_sched(sched));
         let costs = ClusterCosts {
             work_ns: per_cluster.iter().map(|t| t.work_ns).collect(),
             transfer_ns: per_cluster.iter().map(|t| t.transfer_ns).collect(),
@@ -96,14 +150,14 @@ pub fn run(
             target: cores as u64,
             max_cycles: 5_000_000,
         };
-        let part2 = match strategy {
-            Some(s) => partition(&pmodel, w, s),
-            None => h2.partition(w),
-        };
+        let part2 = resolve_partition(&pmodel, w, strategy, &h2, unit_costs.as_deref());
         let pstats = run_ladder(
             &mut pmodel,
             &part2,
-            &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::with_stop(stop2)),
+            &ParallelOpts::new(
+                SyncMethod::CommonAtomic,
+                RunOpts::with_stop(stop2).with_sched(sched),
+            ),
         );
         rows.push(Fig12Row {
             workers: w,
@@ -188,5 +242,23 @@ mod tests {
         assert!(out.rows[1].modeled.sync_ns > 0);
         assert_eq!(out.rows[0].sim_cycles, out.rows[1].sim_cycles,
             "same simulation regardless of partitioning");
+    }
+
+    #[test]
+    fn fig12_cost_balanced_active_is_same_simulation() {
+        let barrier = BarrierCost {
+            points: vec![(1, 0.0), (4, 2000.0)],
+        };
+        let full = run(4, &[2], &barrier, None);
+        let cost_active = run_with(
+            4,
+            &[2],
+            &barrier,
+            Some(PartitionStrategy::CostBalanced),
+            SchedMode::ActiveList,
+        );
+        // Partitioning and scheduling are performance knobs only: the
+        // simulated execution (cycle count) must be identical.
+        assert_eq!(full.rows[0].sim_cycles, cost_active.rows[0].sim_cycles);
     }
 }

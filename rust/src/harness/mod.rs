@@ -10,6 +10,7 @@
 //! per-cluster work and barrier costs (`stats::scaling`).
 
 pub mod ablation;
+pub mod bench_json;
 pub mod fig09;
 pub mod fig10_11;
 pub mod fig12_13;

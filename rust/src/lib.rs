@@ -32,10 +32,15 @@
 pub mod cpu;
 pub mod dc;
 pub mod engine;
+/// Gated behind the `pjrt` feature: depends on the `xla` and `anyhow`
+/// crates, which the offline container does not ship. The default build
+/// is std-only; enable `--features pjrt` where those crates are vendored.
+#[cfg(feature = "pjrt")]
 pub mod explore;
 pub mod harness;
 pub mod mem;
 pub mod noc;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sched;
 pub mod stats;
@@ -46,4 +51,9 @@ pub mod workload;
 
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")
+}
+
+/// Whether this build carries the PJRT runtime (`pjrt` feature).
+pub fn has_pjrt() -> bool {
+    cfg!(feature = "pjrt")
 }

@@ -16,7 +16,8 @@
 //! `util::config`) with CLI flags overriding file values.
 
 use scalesim::dc::{FatTreeCfg, TrafficCfg};
-use scalesim::harness::{ablation, fig09, fig10_11, fig12_13, fig14, fig15_16};
+use scalesim::engine::SchedMode;
+use scalesim::harness::{ablation, bench_json, fig09, fig10_11, fig12_13, fig14, fig15_16};
 use scalesim::sched::PartitionStrategy;
 use scalesim::sync::SpinMode;
 use scalesim::util::cli::Args;
@@ -29,6 +30,7 @@ fn usage() -> ! {
          commands:\n\
          \x20 barrier-bench  [--workers 1,2,4] [--cycles N] [--spin yield|pure]\n\
          \x20 oltp-light     [--cores N] [--workers 1,2,4,8,16] [--strategy S]\n\
+         \x20                [--sched full|active] [--bench-json BENCH_ladder.json]\n\
          \x20 ooo            [--cores N] [--workers 1,2,4,8] [--workload oltp|stream|chase|compute|branchy]\n\
          \x20 datacenter     [--k N] [--packets N] [--window N] [--workers 1,2,...,24] [--paper-scale]\n\
          \x20 ablation       [--cores N]\n\
@@ -75,7 +77,13 @@ fn cmd_barrier_bench(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_oltp_light(argv: &[String]) -> Result<(), String> {
-    let args = Args::parse(argv, &["cores", "workers", "strategy", "barrier", "config"], &[])?;
+    let args = Args::parse(
+        argv,
+        &[
+            "cores", "workers", "strategy", "barrier", "sched", "bench-json", "config",
+        ],
+        &[],
+    )?;
     let cfg = merged_config(&args)?;
     let cores = args.get_usize("cores", cfg.get_usize("cores", 32)?)?;
     let workers = parse_list(args.get_or(
@@ -86,12 +94,26 @@ fn cmd_oltp_light(argv: &[String]) -> Result<(), String> {
         None | Some("paper") => None,
         Some(s) => Some(PartitionStrategy::parse(s, 42)?),
     };
+    let sched = SchedMode::parse(args.get_or("sched", cfg.get("sched").unwrap_or("full")))?;
     let bkind = args.get_or("barrier", cfg.get("barrier").unwrap_or("paper"));
     println!("# barrier model: {bkind}");
     let barrier = fig09::barrier_model(bkind, &workers, 5_000);
-    println!("# running OLTP light-CPU sweeps ({cores} cores)...");
-    let out = fig12_13::run(cores, &workers, &barrier, strategy);
+    println!(
+        "# running OLTP light-CPU sweeps ({cores} cores, {} scheduling)...",
+        sched.name()
+    );
+    let out = fig12_13::run_with(cores, &workers, &barrier, strategy, sched);
     fig12_13::print(&out);
+    // Perf trajectory artifact: full engine/sched matrix with fingerprints.
+    if let Some(path) = args.get("bench-json").or(cfg.get("bench-json")) {
+        println!("# measuring active-vs-full matrix for {path} ...");
+        let bench = bench_json::run_oltp_light(cores, &workers, strategy);
+        bench_json::print(&bench);
+        bench
+            .write_file(std::path::Path::new(path))
+            .map_err(|e| format!("write {path}: {e}"))?;
+        println!("# wrote {path}");
+    }
     Ok(())
 }
 
@@ -169,6 +191,14 @@ fn cmd_ablation(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_explore(_argv: &[String]) -> Result<(), String> {
+    Err("this build has no PJRT runtime; rebuild with `--features pjrt` \
+         (requires the vendored `xla` crate) to use `scalesim explore`"
+        .to_string())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_explore(argv: &[String]) -> Result<(), String> {
     let args = Args::parse(
         argv,

@@ -3,9 +3,13 @@
 //! The paper groups N simulated units into M−1 clusters, one per physical
 //! core, each run serially by a local scheduler (§4). The distribution "is
 //! currently random" in the paper, with locality-aware ordering named as
-//! future work (§6) — we implement both, plus round-robin, so the ablation
-//! bench can quantify the difference the authors predicted.
+//! future work (§6) — we implement both, plus round-robin, contiguous
+//! blocks, and profile-guided cost balancing (LPT over measured per-unit
+//! work), so the ablation bench can quantify the differences the authors
+//! predicted.
 
 pub mod partition;
 
-pub use partition::{cross_cluster_ports, partition, PartitionStrategy};
+pub use partition::{
+    cross_cluster_ports, partition, partition_with_costs, PartitionStrategy,
+};

@@ -21,6 +21,13 @@ pub enum PartitionStrategy {
     /// builder's construction order, which assembled systems exploit (e.g.
     /// all units of one simulated CPU core are built consecutively).
     Contiguous,
+    /// Balance measured per-unit *cost* instead of unit count: LPT
+    /// bin-packing over profiled work nanoseconds (see
+    /// [`partition_with_costs`]). Through the plain [`partition`] entry
+    /// point — which has no measurements — each unit's port degree stands
+    /// in as a static cost proxy; harnesses that can afford a profiling
+    /// prologue pass real costs (`Model::profile_unit_costs`).
+    CostBalanced,
 }
 
 impl PartitionStrategy {
@@ -30,8 +37,10 @@ impl PartitionStrategy {
             "random" => Ok(PartitionStrategy::Random(seed)),
             "locality" => Ok(PartitionStrategy::Locality),
             "contiguous" | "block" => Ok(PartitionStrategy::Contiguous),
+            "cost" | "cost-balanced" => Ok(PartitionStrategy::CostBalanced),
             _ => Err(format!(
-                "unknown partition strategy {s:?}; expected round-robin|random|locality|contiguous"
+                "unknown partition strategy {s:?}; expected \
+                 round-robin|random|locality|contiguous|cost-balanced"
             )),
         }
     }
@@ -42,12 +51,14 @@ impl PartitionStrategy {
             PartitionStrategy::Random(_) => "random",
             PartitionStrategy::Locality => "locality",
             PartitionStrategy::Contiguous => "contiguous",
+            PartitionStrategy::CostBalanced => "cost-balanced",
         }
     }
 }
 
-/// Partition `model`'s units into `clusters` balanced groups
-/// (sizes differ by at most 1).
+/// Partition `model`'s units into `clusters` groups. Count-based
+/// strategies balance sizes to within 1; `CostBalanced` balances the cost
+/// proxy instead (counts may legitimately differ).
 pub fn partition(model: &Model, clusters: usize, strategy: PartitionStrategy) -> Vec<Vec<u32>> {
     let n = model.num_units();
     let clusters = clusters.max(1).min(n.max(1));
@@ -89,7 +100,43 @@ pub fn partition(model: &Model, clusters: usize, strategy: PartitionStrategy) ->
             p
         }
         PartitionStrategy::Locality => locality_partition(model, clusters),
+        PartitionStrategy::CostBalanced => {
+            // Static proxy: a unit's port degree tracks how much message
+            // handling (and transfer ownership) it pulls onto its cluster.
+            let costs: Vec<u64> = (0..n as u32)
+                .map(|u| 1 + model.neighbours(u).len() as u64)
+                .collect();
+            partition_with_costs(clusters, &costs)
+        }
     }
+}
+
+/// Cost-balanced partitioning: LPT (longest-processing-time-first)
+/// bin-packing of per-unit costs onto `clusters` bins. Deterministic for
+/// a given cost vector: ties in cost break on unit id, ties in bin load
+/// break on bin index. With equal costs it degenerates to a balanced
+/// count split; with measured costs (`Model::profile_unit_costs`) the
+/// heaviest cluster's load — the paper's "slowest worker dominates" term —
+/// is within 4/3 of optimal (Graham's LPT bound).
+pub fn partition_with_costs(clusters: usize, costs: &[u64]) -> Vec<Vec<u32>> {
+    let n = costs.len();
+    let clusters = clusters.max(1).min(n.max(1));
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    // Heaviest first; stable id tie-break keeps the result deterministic.
+    order.sort_by_key(|&u| (std::cmp::Reverse(costs[u as usize].max(1)), u));
+    let mut p: Vec<Vec<u32>> = vec![Vec::new(); clusters];
+    let mut load = vec![0u64; clusters];
+    for u in order {
+        let lightest = (0..clusters).min_by_key(|&c| (load[c], c)).unwrap();
+        load[lightest] += costs[u as usize].max(1);
+        p[lightest].push(u);
+    }
+    // Keep each cluster's execution order by unit id (irrelevant for
+    // determinism, helpful for cache locality of consecutive builds).
+    for cluster in &mut p {
+        cluster.sort_unstable();
+    }
+    p
 }
 
 /// BFS-fill: pick the lowest-numbered unassigned unit, grow its connected
@@ -190,12 +237,15 @@ mod tests {
 
     #[test]
     fn all_strategies_produce_valid_balanced_partitions() {
+        // On a ring every unit has the same degree, so even CostBalanced
+        // (degree proxy) must produce a count-balanced split here.
         let m = ring(17);
         for strat in [
             PartitionStrategy::RoundRobin,
             PartitionStrategy::Random(7),
             PartitionStrategy::Locality,
             PartitionStrategy::Contiguous,
+            PartitionStrategy::CostBalanced,
         ] {
             for clusters in [1, 2, 3, 5, 17] {
                 let p = partition(&m, clusters, strat);
@@ -220,6 +270,48 @@ mod tests {
         let c = partition(&m, 4, PartitionStrategy::Random(10));
         assert_eq!(a, b);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn lpt_balances_skewed_costs() {
+        // One hot unit (100), the rest cheap (1): LPT must isolate the hot
+        // unit and spread the cheap ones over the remaining clusters.
+        let costs = [100u64, 1, 1, 1, 1, 1, 1, 1, 1];
+        let p = partition_with_costs(3, &costs);
+        let mut seen = vec![false; costs.len()];
+        for cluster in &p {
+            for &u in cluster {
+                assert!(!seen[u as usize]);
+                seen[u as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every unit placed exactly once");
+        let load = |c: &Vec<u32>| c.iter().map(|&u| costs[u as usize]).sum::<u64>();
+        let hot = p
+            .iter()
+            .find(|c| c.contains(&0))
+            .expect("hot unit placed");
+        assert_eq!(load(hot), 100, "hot unit isolated on its own cluster");
+        let others: Vec<u64> = p.iter().filter(|c| !c.contains(&0)).map(load).collect();
+        assert_eq!(others.len(), 2);
+        assert!(others.iter().all(|&l| l == 4), "cheap units split 4/4: {others:?}");
+    }
+
+    #[test]
+    fn lpt_is_deterministic_and_total() {
+        let costs: Vec<u64> = (0..23).map(|i| (i * 7919) % 97 + 1).collect();
+        let a = partition_with_costs(4, &costs);
+        let b = partition_with_costs(4, &costs);
+        assert_eq!(a, b, "same costs, same partition");
+        let placed: usize = a.iter().map(|c| c.len()).sum();
+        assert_eq!(placed, 23);
+        // LPT guarantee sanity: max load within 2x of mean on this input.
+        let loads: Vec<u64> = a
+            .iter()
+            .map(|c| c.iter().map(|&u| costs[u as usize]).sum())
+            .collect();
+        let mean = loads.iter().sum::<u64>() / loads.len() as u64;
+        assert!(*loads.iter().max().unwrap() <= mean * 2, "{loads:?}");
     }
 
     #[test]

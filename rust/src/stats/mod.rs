@@ -11,4 +11,4 @@ pub mod timers;
 pub use counters::{Counters, StatsMap};
 pub use hist::Histogram;
 pub use report::RunStats;
-pub use timers::PhaseTimers;
+pub use timers::{PhaseTimers, UnitProfile};

@@ -56,6 +56,22 @@ impl RunStats {
         self.per_worker.iter().map(|p| p.work_ns).max().unwrap_or(0)
     }
 
+    /// Total `Unit::work` invocations across workers.
+    pub fn unit_ticks(&self) -> u64 {
+        self.per_worker.iter().map(|p| p.unit_ticks).sum()
+    }
+
+    /// Fraction of unit-cycles that actually ran the work phase: 1.0 under
+    /// full-scan scheduling, lower under active-list scheduling on sparse
+    /// models (the headline saving of sleep/wake).
+    pub fn active_ratio(&self, num_units: usize) -> f64 {
+        let denom = (self.cycles as f64) * (num_units as f64);
+        if denom <= 0.0 {
+            return 1.0;
+        }
+        self.unit_ticks() as f64 / denom
+    }
+
     pub fn summary(&self) -> String {
         let (w, t, b) = self.phase_split();
         format!(
@@ -95,17 +111,23 @@ mod tests {
                     transfer_ns: 1,
                     barrier_ns: 2,
                     cycles: 5,
+                    unit_ticks: 10,
                 },
                 PhaseTimers {
                     work_ns: 20,
                     transfer_ns: 2,
                     barrier_ns: 3,
                     cycles: 5,
+                    unit_ticks: 5,
                 },
             ],
+            cycles: 5,
             ..Default::default()
         };
         assert_eq!(s.phase_split(), (30, 3, 5));
         assert_eq!(s.max_worker_work_ns(), 20);
+        assert_eq!(s.unit_ticks(), 15);
+        // 15 ticks over 5 cycles × 4 units = 0.75 active ratio.
+        assert!((s.active_ratio(4) - 0.75).abs() < 1e-9);
     }
 }

@@ -16,6 +16,11 @@ pub struct PhaseTimers {
     pub barrier_ns: u64,
     /// Number of cycles this worker participated in.
     pub cycles: u64,
+    /// `Unit::work` invocations performed by this worker. Under full-scan
+    /// scheduling this is `cycles × cluster size`; under active-list
+    /// scheduling the ratio of the two is the active-unit ratio — the
+    /// fraction of unit-cycles that actually ran.
+    pub unit_ticks: u64,
 }
 
 impl PhaseTimers {
@@ -40,6 +45,26 @@ impl PhaseTimers {
         self.transfer_ns += o.transfer_ns;
         self.barrier_ns += o.barrier_ns;
         self.cycles = self.cycles.max(o.cycles);
+        self.unit_ticks += o.unit_ticks;
+    }
+}
+
+/// Per-unit measured work cost from a short profiling prologue
+/// (`Model::profile_unit_costs`) — the input to cost-balanced (LPT)
+/// partitioning in `sched::partition`.
+#[derive(Debug, Clone)]
+pub struct UnitProfile {
+    /// Accumulated work nanoseconds per unit, clock bias removed,
+    /// floored at 1.
+    pub work_ns: Vec<u64>,
+    /// Prologue length the costs were accumulated over.
+    pub cycles: u64,
+}
+
+impl UnitProfile {
+    /// Total measured work across all units.
+    pub fn total_ns(&self) -> u64 {
+        self.work_ns.iter().sum()
     }
 }
 
@@ -66,16 +91,19 @@ mod tests {
             transfer_ns: 5,
             barrier_ns: 1,
             cycles: 100,
+            unit_ticks: 400,
         };
         let b = PhaseTimers {
             work_ns: 1,
             transfer_ns: 1,
             barrier_ns: 1,
             cycles: 50,
+            unit_ticks: 100,
         };
         a.merge(&b);
         assert_eq!(a.work_ns, 11);
         assert_eq!(a.total_ns(), 11 + 6 + 2);
         assert_eq!(a.cycles, 100);
+        assert_eq!(a.unit_ticks, 500, "ticks sum across workers");
     }
 }

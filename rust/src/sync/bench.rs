@@ -40,6 +40,10 @@ impl Unit for BusyUnit {
         }
         self.sink = x; // keep the loop observable
     }
+
+    fn always_active(&self) -> bool {
+        true // burns its work grain every cycle, message-driven or not
+    }
 }
 
 /// One idle unit per worker cluster.

@@ -32,6 +32,7 @@
 //! O(workers), independent of model size.
 
 use super::syncpoint::{AtomicGate, Gate, MutexGate, SpinGate, SpinMode, SyncMethod};
+use crate::engine::active::{ActiveState, SchedMode};
 use crate::engine::model::{Model, RunOpts};
 use crate::stats::{PhaseTimers, RunStats};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -301,11 +302,17 @@ impl ParallelOpts {
 /// (the paper's dedicated M-th core).
 ///
 /// The result is observably identical to `model.run_serial` with the same
-/// stop condition — the property checked by `tests/determinism.rs`.
+/// stop condition — the property checked by `tests/determinism.rs`. This
+/// holds for both scheduling modes: with `SchedMode::ActiveList` each
+/// worker ticks only its awake units and wakes sleepers through the
+/// cluster-to-cluster boxes of `engine::active` (the serial engine runs
+/// the very same protocol, so all four engine/mode combinations agree).
 pub fn run_ladder(model: &mut Model, partition: &[Vec<u32>], opts: &ParallelOpts) -> RunStats {
     let workers = partition.len();
     assert!(workers >= 1, "need at least one worker cluster");
     let gates = LadderGates::new(opts.method, workers, opts.spin);
+    let sched = opts.run.sched;
+    let active_state = ActiveState::new(partition, model.num_units());
     let stop_flag = AtomicBool::new(false);
     // Published cycle count for the iteration-number validation the paper
     // describes in §5.1 ("validates that all workers are working on the
@@ -320,12 +327,49 @@ pub fn run_ladder(model: &mut Model, partition: &[Vec<u32>], opts: &ParallelOpts
         for (w, units) in partition.iter().enumerate() {
             let gates = &gates;
             let stop_flag = &stop_flag;
+            let active_state = &active_state;
             handles.push(scope.spawn(move || {
                 let mut t = PhaseTimers::new();
                 // This cluster's active-port worklist (sender-owned by
                 // construction: only this cluster's sends populate it).
                 let mut dirty: Vec<u32> = Vec::new();
+                // Sleep/wake: this cluster's active-unit list (all awake
+                // at cycle 0; quiescent units park after their first
+                // tick). Unused under full-scan.
+                let mut active: Vec<u32> = units.clone();
                 let mut cycle: u64 = 0;
+                // One work phase over this cluster, in the selected mode.
+                // SAFETY (both arms): partition is disjoint; this cluster
+                // owns these units — and their in-port hints and sleep
+                // flags — during the work phase.
+                let do_work = |cycle: u64,
+                               dirty: &mut Vec<u32>,
+                               active: &mut Vec<u32>,
+                               t: &mut PhaseTimers| match sched {
+                    SchedMode::ActiveList => unsafe {
+                        active_state.drain_wakes(w, active);
+                        t.unit_ticks +=
+                            model_ref.work_active(active, cycle, dirty, active_state);
+                    },
+                    SchedMode::FullScan => {
+                        for &u in units {
+                            unsafe { model_ref.work_one(u, cycle, dirty) };
+                        }
+                        t.unit_ticks += units.len() as u64;
+                    }
+                };
+                // One transfer phase over this cluster's dirty ports.
+                // SAFETY (both arms): the worklist holds only ports whose
+                // sender is in this cluster; wake posts go through this
+                // cluster's single-writer boxes.
+                let do_transfer = |cycle: u64, dirty: &mut Vec<u32>| match sched {
+                    SchedMode::ActiveList => unsafe {
+                        model_ref.transfer_dirty_wake(dirty, cycle, active_state, w)
+                    },
+                    SchedMode::FullScan => unsafe {
+                        model_ref.transfer_dirty(dirty, cycle)
+                    },
+                };
                 // Paper Fig 7: wait(WORK); unlock(PHASE1).
                 gates.worker_wait_work(w, 0);
                 gates.worker_open_phase1(w);
@@ -336,17 +380,10 @@ pub fn run_ladder(model: &mut Model, partition: &[Vec<u32>], opts: &ParallelOpts
                     // ---- work phase ----
                     if timed {
                         let tw = Instant::now();
-                        for &u in units {
-                            // SAFETY: partition is disjoint; this cluster
-                            // owns these units during the work phase.
-                            unsafe { model_ref.work_one(u, cycle, &mut dirty) };
-                        }
+                        do_work(cycle, &mut dirty, &mut active, &mut t);
                         t.work_ns += tw.elapsed().as_nanos() as u64;
                     } else {
-                        for &u in units {
-                            // SAFETY: as above.
-                            unsafe { model_ref.work_one(u, cycle, &mut dirty) };
-                        }
+                        do_work(cycle, &mut dirty, &mut active, &mut t);
                     }
                     gates.worker_close_phase1(w);
                     gates.worker_open_phase0(w);
@@ -356,14 +393,11 @@ pub fn run_ladder(model: &mut Model, partition: &[Vec<u32>], opts: &ParallelOpts
                         t.barrier_ns += tb.elapsed().as_nanos() as u64;
                         // ---- transfer phase ----
                         let tt = Instant::now();
-                        // SAFETY: the worklist holds only ports whose
-                        // sender is in this cluster.
-                        unsafe { model_ref.transfer_dirty(&mut dirty, cycle) };
+                        do_transfer(cycle, &mut dirty);
                         t.transfer_ns += tt.elapsed().as_nanos() as u64;
                     } else {
                         gates.worker_wait_transfer(w, cycle);
-                        // SAFETY: as above.
-                        unsafe { model_ref.transfer_dirty(&mut dirty, cycle) };
+                        do_transfer(cycle, &mut dirty);
                     }
                     gates.worker_close_phase0(w);
                     gates.worker_open_phase1(w);
@@ -651,6 +685,10 @@ mod tests {
                 if ctx.out_vacant(self.out) {
                     ctx.send(self.out, Msg::new(0)).unwrap();
                 }
+            }
+
+            fn always_active(&self) -> bool {
+                true // free-running source: must never be parked
             }
         }
         struct Snk {

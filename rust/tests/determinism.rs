@@ -13,7 +13,8 @@
 //! failure).
 
 use scalesim::engine::{
-    Ctx, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RunOpts, Unit,
+    Ctx, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RunOpts, SchedMode, Stop,
+    Unit,
 };
 use scalesim::sched::{partition, PartitionStrategy};
 use scalesim::sync::{run_ladder, ParallelOpts, SyncMethod};
@@ -69,6 +70,13 @@ impl Unit for ChaosUnit {
     fn stats(&self, out: &mut scalesim::stats::StatsMap) {
         out.add("chaos.sent", self.sent);
         out.add("chaos.received", self.received);
+    }
+
+    fn always_active(&self) -> bool {
+        // The rng advances on every call, so `work` is never a no-op:
+        // sleeping would change behaviour. Opting out keeps ChaosUnit
+        // usable under both scheduling modes.
+        true
     }
 }
 
@@ -135,6 +143,7 @@ fn parallel_equals_serial_over_random_models() {
                     PartitionStrategy::RoundRobin,
                     PartitionStrategy::Random(seed ^ 0x55),
                     PartitionStrategy::Locality,
+                    PartitionStrategy::CostBalanced,
                 ] {
                     let mut m = random_model(seed, n, 6);
                     let part = partition(&m, workers, strat);
@@ -247,6 +256,233 @@ fn causality_holds_for_all_port_configs() {
                 let mut m = mb.build().unwrap();
                 m.run_serial(RunOpts::cycles(100));
                 // The checker's asserts fired inside the run if violated.
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sleep-capable determinism matrix (ISSUE 1): fingerprints must agree
+// across {serial full-scan, serial active-list, ladder × sync method ×
+// worker count × partition strategy × sched mode} on models whose units
+// genuinely park and re-arm.
+// ---------------------------------------------------------------------
+
+/// A pipeline stage that honours the sleep contract: the source is idle
+/// once drained; mids and the sink are purely input-driven.
+struct PipeStage {
+    inp: Option<InPort>,
+    out: Option<OutPort>,
+    seq: u64,
+    limit: u64,
+    received: u64,
+    acc: u64,
+}
+
+impl Unit for PipeStage {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        match (self.inp, self.out) {
+            (None, Some(out)) => {
+                if self.seq < self.limit && ctx.out_vacant(out) {
+                    ctx.send(out, Msg::with(1, self.seq, 0, 0)).unwrap();
+                    self.seq += 1;
+                }
+            }
+            (Some(inp), Some(out)) => {
+                while ctx.out_vacant(out) {
+                    let Some(mut m) = ctx.recv(inp) else { break };
+                    m.b = m.b.wrapping_mul(31).wrapping_add(m.a);
+                    ctx.send(out, m).unwrap();
+                }
+            }
+            (Some(inp), None) => {
+                while let Some(m) = ctx.recv(inp) {
+                    assert_eq!(m.a, self.received, "FIFO broken");
+                    self.received += 1;
+                    self.acc = self.acc.wrapping_mul(31).wrapping_add(m.b);
+                }
+            }
+            (None, None) => {}
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.seq);
+        h.write_u64(self.received);
+        h.write_u64(self.acc);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.seq >= self.limit
+    }
+}
+
+/// Linear pipeline with mixed port delays so in-flight messages regularly
+/// outlive a receiver's last tick.
+fn sleepy_pipeline(n: usize, msgs: u64) -> Model {
+    let mut mb = ModelBuilder::new();
+    let ids: Vec<u32> = (0..n).map(|i| mb.reserve_unit(&format!("p{i}"))).collect();
+    let mut ports = Vec::new();
+    for i in 0..n - 1 {
+        let delay = 1 + (i as u64 % 3); // delays 1,2,3,1,2,...
+        ports.push(mb.connect(ids[i], ids[i + 1], PortCfg::new(2, delay)));
+    }
+    for i in 0..n {
+        let unit = PipeStage {
+            inp: if i == 0 { None } else { Some(ports[i - 1].1) },
+            out: if i == n - 1 { None } else { Some(ports[i].0) },
+            seq: 0,
+            limit: if i == 0 { msgs } else { 0 },
+            received: 0,
+            acc: 0,
+        };
+        mb.install(ids[i], Box::new(unit));
+    }
+    mb.build().unwrap()
+}
+
+#[test]
+fn sleep_capable_pipeline_full_matrix() {
+    let n = 8;
+    let cycles = 400;
+    let reference = {
+        let mut m = sleepy_pipeline(n, 60);
+        m.run_serial(RunOpts::cycles(cycles).fingerprinted())
+    };
+    // Serial active-list against the full-scan reference.
+    {
+        let mut m = sleepy_pipeline(n, 60);
+        let s = m.run_serial(RunOpts::cycles(cycles).fingerprinted().active_list());
+        assert_eq!(s.fingerprint, reference.fingerprint, "serial active-list");
+        assert!(
+            s.unit_ticks() < reference.unit_ticks(),
+            "pipeline must actually park: {} vs {}",
+            s.unit_ticks(),
+            reference.unit_ticks()
+        );
+    }
+    // Every ladder combination, both scheduling modes.
+    for method in SyncMethod::ALL {
+        for workers in [1usize, 2, 4] {
+            for strat in [
+                PartitionStrategy::RoundRobin,
+                PartitionStrategy::Random(0x55),
+                PartitionStrategy::Locality,
+                PartitionStrategy::Contiguous,
+                PartitionStrategy::CostBalanced,
+            ] {
+                for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
+                    let mut m = sleepy_pipeline(n, 60);
+                    let part = partition(&m, workers, strat);
+                    let stats = run_ladder(
+                        &mut m,
+                        &part,
+                        &ParallelOpts::new(
+                            method,
+                            RunOpts::cycles(cycles).fingerprinted().with_sched(sched),
+                        ),
+                    );
+                    assert_eq!(
+                        stats.fingerprint,
+                        reference.fingerprint,
+                        "method={} workers={workers} strat={} sched={}",
+                        method.name(),
+                        strat.name(),
+                        sched.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sleep_capable_cpu_system_matrix() {
+    use scalesim::cpu::isa::{OpClass, TraceOp, NO_REG};
+    use scalesim::cpu::Trace;
+    use scalesim::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
+
+    let mk_traces = || {
+        (0..4u64)
+            .map(|c| Trace {
+                ops: (0..60u64)
+                    .map(|i| {
+                        if i % 3 == 0 {
+                            TraceOp::new(
+                                OpClass::Load,
+                                1,
+                                2,
+                                NO_REG,
+                                0x1000 + ((c * 64 + i * 8) % 4096),
+                                0,
+                                false,
+                            )
+                        } else if i % 7 == 0 {
+                            TraceOp::new(OpClass::Store, NO_REG, 1, 2, 0x8000 + (i % 512), 0, false)
+                        } else {
+                            TraceOp::new(OpClass::Alu, 1, 1, 2, 0, 0, false)
+                        }
+                    })
+                    .collect(),
+            })
+            .collect::<Vec<_>>()
+    };
+    let cfg = CpuSystemCfg::default();
+    let (mut serial, h) = build_cpu_system(mk_traces(), &cfg);
+    let stop = Stop::CounterAtLeast {
+        counter: h.cores_done,
+        target: 4,
+        max_cycles: 100_000,
+    };
+    let reference = serial.run_serial(RunOpts::with_stop(stop).fingerprinted());
+    assert_eq!(reference.counters.get("cores_done"), 4);
+
+    // Serial active-list.
+    {
+        let (mut m, h) = build_cpu_system(mk_traces(), &cfg);
+        let stop = Stop::CounterAtLeast {
+            counter: h.cores_done,
+            target: 4,
+            max_cycles: 100_000,
+        };
+        let s = m.run_serial(RunOpts::with_stop(stop).fingerprinted().active_list());
+        assert_eq!(s.fingerprint, reference.fingerprint, "serial active-list");
+        assert_eq!(s.cycles, reference.cycles);
+    }
+    // Ladder sweep (reduced matrix: the pipeline test covers all four
+    // methods; here the heavier model covers both atomics end-to-end).
+    for method in [SyncMethod::CommonAtomic, SyncMethod::Atomic] {
+        for workers in [2usize, 3] {
+            for strat in [
+                PartitionStrategy::Contiguous,
+                PartitionStrategy::CostBalanced,
+            ] {
+                for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
+                    let (mut m, h) = build_cpu_system(mk_traces(), &cfg);
+                    let stop = Stop::CounterAtLeast {
+                        counter: h.cores_done,
+                        target: 4,
+                        max_cycles: 100_000,
+                    };
+                    let part = partition(&m, workers, strat);
+                    let stats = run_ladder(
+                        &mut m,
+                        &part,
+                        &ParallelOpts::new(
+                            method,
+                            RunOpts::with_stop(stop).fingerprinted().with_sched(sched),
+                        ),
+                    );
+                    assert_eq!(
+                        stats.fingerprint,
+                        reference.fingerprint,
+                        "method={} workers={workers} strat={} sched={}",
+                        method.name(),
+                        strat.name(),
+                        sched.name()
+                    );
+                    assert_eq!(stats.cycles, reference.cycles);
+                }
             }
         }
     }

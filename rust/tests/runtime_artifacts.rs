@@ -4,6 +4,11 @@
 //! Requires `make artifacts`. Tests soft-skip (with a loud message) when
 //! the artifacts directory is absent so `cargo test` stays runnable before
 //! the first build; the Makefile always builds artifacts first.
+//!
+//! The whole target is additionally gated on the `pjrt` feature (see
+//! Cargo.toml `required-features`): without it the crate has no runtime
+//! module at all, keeping the default build dependency-free.
+#![cfg(feature = "pjrt")]
 
 use scalesim::dc::traffic::{packet, TrafficCfg};
 use scalesim::explore;

@@ -1,0 +1,307 @@
+//! Sleep/wake stress tests: the lost-wakeup hazard class.
+//!
+//! The dangerous schedule is: a sink goes quiescent and parks; a message
+//! for it is still in flight (staged upstream, or queued with a
+//! multi-cycle port delay still running); the delivery must re-arm the
+//! sink, and nothing may be stranded. The protocol's defense is twofold —
+//! a unit only parks when *all* of its input queues are empty (counting
+//! not-yet-ready messages), and any later 0 → 1 delivery posts a wake —
+//! and these tests drive both edges with port delays > 1, burst gaps,
+//! multi-hop chains, and cross-cluster parallel runs.
+
+use scalesim::engine::{
+    Ctx, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RunOpts, Stop, Unit,
+};
+use scalesim::stats::StatsMap;
+use scalesim::sync::{run_ladder, ParallelOpts, SyncMethod};
+
+/// Sends one message at each scheduled cycle (retrying under back
+/// pressure). Not idle until the whole schedule has been sent, so it
+/// stays awake through the gaps — the *sink* is the unit that parks.
+struct BurstSource {
+    out: OutPort,
+    schedule: Vec<u64>,
+    next: usize,
+}
+
+impl Unit for BurstSource {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(&at) = self.schedule.get(self.next) {
+            if at > ctx.cycle || !ctx.out_vacant(self.out) {
+                break;
+            }
+            ctx.send(self.out, Msg::with(1, self.next as u64, 0, 0))
+                .unwrap();
+            self.next += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.next as u64);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.next >= self.schedule.len()
+    }
+}
+
+/// Input-driven relay: forwards everything, parks whenever quiet.
+struct Relay {
+    inp: InPort,
+    out: OutPort,
+}
+
+impl Unit for Relay {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while ctx.out_vacant(self.out) {
+            let Some(m) = ctx.recv(self.inp) else { break };
+            ctx.send(self.out, m).unwrap();
+        }
+    }
+}
+
+/// Input-driven sink; `is_idle` defaults to `true`, so it parks whenever
+/// its queue is empty — exactly the unit the hazard targets.
+struct CountingSink {
+    inp: InPort,
+    received: u64,
+}
+
+impl Unit for CountingSink {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(m) = ctx.recv(self.inp) {
+            assert_eq!(m.a, self.received, "FIFO order broken");
+            self.received += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.received);
+    }
+
+    fn stats(&self, out: &mut StatsMap) {
+        out.add("sink.received", self.received);
+    }
+}
+
+/// Source → sink over one port with the given delay; bursts separated by
+/// gaps long enough for the sink to park in between.
+fn burst_model(delay: u64) -> Model {
+    let mut mb = ModelBuilder::new();
+    let src = mb.reserve_unit("src");
+    let snk = mb.reserve_unit("snk");
+    let (tx, rx) = mb.connect(src, snk, PortCfg::new(2, delay));
+    mb.install(
+        src,
+        Box::new(BurstSource {
+            out: tx,
+            // Gaps of 10+ cycles: the sink drains, parks, and must be
+            // re-awoken by a delivery whose delay is still running.
+            schedule: vec![0, 1, 15, 16, 40, 70, 71, 72],
+            next: 0,
+        }),
+    );
+    mb.install(snk, Box::new(CountingSink { inp: rx, received: 0 }));
+    mb.build().unwrap()
+}
+
+/// Three-hop chain so wakes must propagate: src → relay → sink.
+fn chain_model(delay: u64) -> Model {
+    let mut mb = ModelBuilder::new();
+    let src = mb.reserve_unit("src");
+    let mid = mb.reserve_unit("mid");
+    let snk = mb.reserve_unit("snk");
+    let (tx0, rx0) = mb.connect(src, mid, PortCfg::new(2, delay));
+    let (tx1, rx1) = mb.connect(mid, snk, PortCfg::new(2, delay));
+    mb.install(
+        src,
+        Box::new(BurstSource {
+            out: tx0,
+            schedule: vec![0, 20, 21, 50],
+            next: 0,
+        }),
+    );
+    mb.install(mid, Box::new(Relay { inp: rx0, out: tx1 }));
+    mb.install(snk, Box::new(CountingSink { inp: rx1, received: 0 }));
+    mb.build().unwrap()
+}
+
+fn all_idle() -> Stop {
+    Stop::AllIdle {
+        check_every: 1,
+        max_cycles: 10_000,
+    }
+}
+
+#[test]
+fn delayed_delivery_rearms_parked_sink() {
+    for delay in [2u64, 4, 7] {
+        // Reference semantics: full scan.
+        let mut reference = burst_model(delay);
+        let r = reference.run_serial(RunOpts::with_stop(all_idle()).fingerprinted());
+        assert_eq!(r.counters.get("sink.received"), 8, "delay={delay}");
+
+        // Sleep/wake serial: same fingerprint, same deliveries, and the
+        // run must still terminate via AllIdle (a stranded message or a
+        // never-parked unit would push it to max_cycles).
+        let mut active = burst_model(delay);
+        let a = active.run_serial(
+            RunOpts::with_stop(all_idle()).fingerprinted().active_list(),
+        );
+        assert_eq!(
+            a.fingerprint, r.fingerprint,
+            "delay={delay}: active-list diverged"
+        );
+        assert_eq!(a.counters.get("sink.received"), 8, "delay={delay}");
+        assert_eq!(a.cycles, r.cycles, "delay={delay}: drain time must match");
+        assert!(a.cycles < 200, "delay={delay}: AllIdle must fire: {}", a.cycles);
+        // The sink slept through the gaps: far fewer ticks than 2 units
+        // × cycles.
+        assert!(
+            a.unit_ticks() < r.unit_ticks(),
+            "delay={delay}: no parking happened ({} vs {})",
+            a.unit_ticks(),
+            r.unit_ticks()
+        );
+    }
+}
+
+#[test]
+fn wake_crosses_cluster_boundary() {
+    for delay in [2u64, 5] {
+        let serial_fp = {
+            let mut m = burst_model(delay);
+            m.run_serial(RunOpts::cycles(120).fingerprinted()).fingerprint
+        };
+        for method in SyncMethod::ALL {
+            // src and snk on different clusters: the wake must travel
+            // through the cross-cluster box, ordered by the phase barrier.
+            let mut m = burst_model(delay);
+            let stats = run_ladder(
+                &mut m,
+                &[vec![0], vec![1]],
+                &ParallelOpts::new(
+                    method,
+                    RunOpts::cycles(120).fingerprinted().active_list(),
+                ),
+            );
+            assert_eq!(
+                stats.fingerprint,
+                serial_fp,
+                "delay={delay} method={}",
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn wake_propagates_along_chain() {
+    for delay in [1u64, 3] {
+        let mut reference = chain_model(delay);
+        let r = reference.run_serial(RunOpts::with_stop(all_idle()).fingerprinted());
+        assert_eq!(r.counters.get("sink.received"), 4, "delay={delay}");
+
+        let mut active = chain_model(delay);
+        let a = active.run_serial(
+            RunOpts::with_stop(all_idle()).fingerprinted().active_list(),
+        );
+        assert_eq!(a.fingerprint, r.fingerprint, "delay={delay}");
+        assert_eq!(a.cycles, r.cycles, "delay={delay}");
+
+        // One cluster per unit in parallel: every hop is a cross-cluster
+        // wake.
+        let mut par = chain_model(delay);
+        let p = run_ladder(
+            &mut par,
+            &[vec![0], vec![1], vec![2]],
+            &ParallelOpts::new(
+                SyncMethod::CommonAtomic,
+                RunOpts::with_stop(all_idle()).fingerprinted().active_list(),
+            ),
+        );
+        assert_eq!(p.fingerprint, r.fingerprint, "delay={delay} parallel");
+        assert_eq!(p.counters.get("sink.received"), 4, "delay={delay}");
+    }
+}
+
+#[test]
+fn simultaneous_wakes_from_two_senders_collapse() {
+    // Two sources deliver into a parked sink in the same transfer phase
+    // (same cycle, two ports): the drain pass must collapse the duplicate
+    // wakes and the sink must receive everything exactly once.
+    let build = || {
+        let mut mb = ModelBuilder::new();
+        let a = mb.reserve_unit("a");
+        let b = mb.reserve_unit("b");
+        let snk = mb.reserve_unit("snk");
+        let (ta, ra) = mb.connect(a, snk, PortCfg::new(2, 3));
+        let (tb, rb) = mb.connect(b, snk, PortCfg::new(2, 3));
+        struct TwoPortSink {
+            ins: [InPort; 2],
+            received: u64,
+        }
+        impl Unit for TwoPortSink {
+            fn work(&mut self, ctx: &mut Ctx<'_>) {
+                for &inp in &self.ins {
+                    while let Some(_m) = ctx.recv(inp) {
+                        self.received += 1;
+                    }
+                }
+            }
+            fn state_hash(&self, h: &mut Fnv) {
+                h.write_u64(self.received);
+            }
+            fn stats(&self, out: &mut StatsMap) {
+                out.add("sink.received", self.received);
+            }
+        }
+        mb.install(
+            a,
+            Box::new(BurstSource {
+                out: ta,
+                schedule: vec![10, 30],
+                next: 0,
+            }),
+        );
+        mb.install(
+            b,
+            Box::new(BurstSource {
+                out: tb,
+                schedule: vec![10, 30],
+                next: 0,
+            }),
+        );
+        mb.install(
+            snk,
+            Box::new(TwoPortSink {
+                ins: [ra, rb],
+                received: 0,
+            }),
+        );
+        mb.build().unwrap()
+    };
+    let mut reference = build();
+    let r = reference.run_serial(RunOpts::with_stop(all_idle()).fingerprinted());
+    assert_eq!(r.counters.get("sink.received"), 4);
+
+    let mut active = build();
+    let a = active.run_serial(RunOpts::with_stop(all_idle()).fingerprinted().active_list());
+    assert_eq!(a.fingerprint, r.fingerprint);
+    assert_eq!(a.counters.get("sink.received"), 4);
+
+    // Parallel: both senders on one cluster, sink on another, then one
+    // cluster each.
+    for part in [vec![vec![0, 1], vec![2]], vec![vec![0], vec![1], vec![2]]] {
+        let mut par = build();
+        let p = run_ladder(
+            &mut par,
+            &part,
+            &ParallelOpts::new(
+                SyncMethod::CommonAtomic,
+                RunOpts::with_stop(all_idle()).fingerprinted().active_list(),
+            ),
+        );
+        assert_eq!(p.fingerprint, r.fingerprint, "partition {part:?}");
+    }
+}
