@@ -9,9 +9,9 @@
 //! ```
 
 use scalesim::dc::{build_fattree, FatTreeCfg, TrafficCfg};
-use scalesim::engine::{RunOpts, Stop};
-use scalesim::sched::{partition, PartitionStrategy};
-use scalesim::sync::{run_ladder, ParallelOpts, SyncMethod};
+use scalesim::engine::{Engine, RunOpts, Sim, Stop};
+use scalesim::sched::PartitionStrategy;
+use scalesim::sync::SyncMethod;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -52,21 +52,23 @@ fn main() {
         s.counters.get("dc.switch_stalls"),
     );
 
-    // Parallel, pod-contiguous clustering.
-    let (mut pmodel, h2) = build_fattree(&cfg);
+    // Parallel, pod-contiguous clustering, via the session facade.
+    let (pmodel, h2) = build_fattree(&cfg);
     let stop2 = Stop::CounterAtLeast {
         counter: h2.delivered,
         target: h2.packets,
         max_cycles: 50_000_000,
     };
-    let part = partition(&pmodel, 4, PartitionStrategy::Contiguous);
-    let p = run_ladder(
-        &mut pmodel,
-        &part,
-        &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::with_stop(stop2)),
-    );
-    println!("parallel (4w): {}", p.summary());
-    assert_eq!(p.counters.get("dc.delivered"), delivered);
-    assert_eq!(p.cycles, s.cycles, "cycle-accurate: same cycle count");
+    let p = Sim::from_model(pmodel)
+        .workers(4)
+        .strategy(PartitionStrategy::Contiguous)
+        .sync(SyncMethod::CommonAtomic)
+        .stop(stop2)
+        .engine(Engine::Ladder)
+        .run()
+        .expect("parallel run");
+    println!("parallel (4w): {}", p.stats.summary());
+    assert_eq!(p.stats.counters.get("dc.delivered"), delivered);
+    assert_eq!(p.stats.cycles, s.cycles, "cycle-accurate: same cycle count");
     println!("OK: parallel delivery and timing identical to serial.");
 }

@@ -8,8 +8,8 @@
 //! cargo run --release --example oltp_light -- [cores] [workers]
 //! ```
 
-use scalesim::engine::{RunOpts, Stop};
-use scalesim::sync::{run_ladder, ParallelOpts, SyncMethod};
+use scalesim::engine::{Engine, RunOpts, Sim, Stop};
+use scalesim::sync::SyncMethod;
 use scalesim::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
 use scalesim::workload::{generate_oltp_traces, OltpCfg};
 
@@ -71,45 +71,49 @@ fn main() {
 
     // Same simulation under sleep/wake active-unit scheduling: identical
     // fingerprint, fewer unit ticks on this sparse workload.
-    let (mut amodel, ha) = build_cpu_system(traces.clone(), &cfg);
+    let (amodel, ha) = build_cpu_system(traces.clone(), &cfg);
     let stop_a = Stop::CounterAtLeast {
         counter: ha.cores_done,
         target: cores as u64,
         max_cycles: 10_000_000,
     };
-    let a = amodel.run_serial(
-        RunOpts::with_stop(stop_a)
-            .timed()
-            .fingerprinted()
-            .active_list(),
-    );
-    println!("serial (active-list): {}", a.summary());
+    let a = Sim::from_model(amodel)
+        .stop(stop_a)
+        .timed()
+        .fingerprinted()
+        .active_list()
+        .run()
+        .expect("active-list run");
+    println!("serial (active-list): {}", a.stats.summary());
     println!(
         "  active-unit ratio       {:.3} (speedup {:.2}x over full scan)",
-        a.active_ratio(amodel.num_units()),
-        s.wall.as_secs_f64() / a.wall.as_secs_f64().max(1e-12)
+        a.active_ratio(),
+        s.wall.as_secs_f64() / a.stats.wall.as_secs_f64().max(1e-12)
     );
     assert_eq!(
-        a.fingerprint, s.fingerprint,
+        a.fingerprint(),
+        s.fingerprint,
         "sleep/wake must be observably identical to the full scan"
     );
 
     // Parallel run with the paper's clustering (cores spread evenly).
-    let (mut pmodel, h2) = build_cpu_system(traces, &cfg);
+    let (pmodel, h2) = build_cpu_system(traces, &cfg);
     let stop2 = Stop::CounterAtLeast {
         counter: h2.cores_done,
         target: cores as u64,
         max_cycles: 10_000_000,
     };
-    let part = h2.partition(workers);
-    let p = run_ladder(
-        &mut pmodel,
-        &part,
-        &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::with_stop(stop2).timed()),
-    );
-    println!("parallel ({workers}w): {}", p.summary());
+    let p = Sim::from_model(pmodel)
+        .partition(h2.partition(workers))
+        .sync(SyncMethod::CommonAtomic)
+        .stop(stop2)
+        .timed()
+        .engine(Engine::Ladder)
+        .run()
+        .expect("parallel run");
+    println!("parallel ({workers}w): {}", p.stats.summary());
     assert_eq!(
-        p.counters.get("core.retired"),
+        p.stats.counters.get("core.retired"),
         s.counters.get("core.retired"),
         "parallel and serial must retire identically"
     );

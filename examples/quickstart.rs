@@ -1,15 +1,15 @@
 //! Quickstart: build the paper's Figure-5 three-unit model by hand, run it
-//! serially and in parallel under the ladder-barrier, and verify they
-//! agree — the smallest complete tour of the public API.
+//! serially and in parallel through the `Sim` session facade, and verify
+//! they agree — the smallest complete tour of the public API.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use scalesim::engine::{
-    Ctx, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RunOpts, Unit,
+    Ctx, Engine, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, Sim, Unit,
 };
-use scalesim::sync::{run_ladder, ParallelOpts, SyncMethod};
+use scalesim::sync::SyncMethod;
 
 /// Unit A of Fig 5: produces a number stream on two output ports.
 struct UnitA {
@@ -100,29 +100,34 @@ fn build() -> Model {
 fn main() {
     const CYCLES: u64 = 1_000;
 
-    // Serial reference run.
-    let mut serial = build();
-    let s = serial.run_serial(RunOpts::cycles(CYCLES).timed().fingerprinted());
-    println!("serial:   {}", s.summary());
-    println!("  C.sum = {}", s.counters.get("c.sum"));
+    // Serial reference run: a one-cluster session dispatches to the
+    // serial engine automatically.
+    let s = Sim::from_model(build())
+        .cycles(CYCLES)
+        .timed()
+        .fingerprinted()
+        .run()
+        .expect("serial run");
+    println!("serial:   {}", s.stats.summary());
+    println!("  C.sum = {}", s.stats.counters.get("c.sum"));
 
     // Parallel run: one cluster per unit (paper Table 1), common-atomic
-    // ladder-barrier.
-    let mut parallel = build();
-    let partition = vec![vec![0], vec![1], vec![2]];
-    let p = run_ladder(
-        &mut parallel,
-        &partition,
-        &ParallelOpts::new(
-            SyncMethod::CommonAtomic,
-            RunOpts::cycles(CYCLES).timed().fingerprinted(),
-        ),
-    );
-    println!("parallel: {}", p.summary());
-    println!("  C.sum = {}", p.counters.get("c.sum"));
+    // ladder-barrier — same session API, different knobs.
+    let p = Sim::from_model(build())
+        .partition(vec![vec![0], vec![1], vec![2]])
+        .sync(SyncMethod::CommonAtomic)
+        .cycles(CYCLES)
+        .timed()
+        .fingerprinted()
+        .engine(Engine::Ladder)
+        .run()
+        .expect("parallel run");
+    println!("parallel: {}", p.stats.summary());
+    println!("  C.sum = {}", p.stats.counters.get("c.sum"));
 
     assert_eq!(
-        s.fingerprint, p.fingerprint,
+        s.fingerprint(),
+        p.fingerprint(),
         "parallel must be observably identical to serial"
     );
     println!("\nOK: 3 workers, cycle-accurate, identical to serial.");

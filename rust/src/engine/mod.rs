@@ -1,17 +1,20 @@
 //! The simulation core: messages, ports, units, models, and the serial
 //! reference engine (paper §2–§3). The parallel engine lives in
 //! `crate::sync` (ladder-barrier) and drives the same `Model` phase
-//! primitives.
+//! primitives; the [`Sim`] session facade in [`sim`] is the one public
+//! entry point that dispatches between them.
 
 pub mod active;
 pub mod bp;
 pub mod message;
 pub mod model;
 pub mod port;
+pub mod sim;
 pub mod unit;
 
 pub use active::SchedMode;
 pub use message::{Fnv, Msg};
 pub use model::{Model, ModelBuilder, RunOpts, Stop};
 pub use port::{InPort, OutPort, PortCfg};
+pub use sim::{Engine, RunReport, Sim};
 pub use unit::{Ctx, Unit};

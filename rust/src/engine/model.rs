@@ -586,12 +586,13 @@ impl Model {
     /// Serial run instrumented per cluster: attributes work/transfer time
     /// to each cluster of `partition`, feeding the virtual-time scaling
     /// model (DESIGN.md §3). Semantically identical to `run_serial`.
+    /// Crate-internal: public callers use `Sim` with `Engine::Partitioned`.
     ///
     /// Instrumentation cost: each cluster span pays one `Instant` pair per
     /// cycle; the measured pair cost is calibrated up front and subtracted
     /// from every cluster's totals, so fine partitions aren't penalized by
     /// their own measurement.
-    pub fn run_serial_partitioned(
+    pub(crate) fn run_serial_partitioned(
         &mut self,
         partition: &[Vec<u32>],
         opts: RunOpts,

@@ -1,0 +1,653 @@
+//! The `Sim` session facade — the one public way to run a simulation.
+//!
+//! Before this module, every harness, bench, and example re-implemented
+//! the same dance: build a model, maybe run a profiling prologue on a
+//! scratch instance, compute a partition, pick the serial or ladder
+//! engine, and stitch the stats back together. `Sim` owns that whole
+//! sequence behind a chainable builder:
+//!
+//! ```ignore
+//! let report = Sim::from_model(model)
+//!     .workers(4)
+//!     .sync(SyncMethod::CommonAtomic)
+//!     .strategy(PartitionStrategy::CostBalanced)
+//!     .sched(SchedMode::ActiveList)
+//!     .cycles(10_000)
+//!     .fingerprinted()
+//!     .run()?;
+//! println!("{}", report.summary());
+//! ```
+//!
+//! or, for a registered scenario (see `crate::scenario`):
+//!
+//! ```ignore
+//! let report = Sim::scenario("cpu-light", &config)?.workers(8).run()?;
+//! ```
+//!
+//! `run()` resolves the partition (running the profiling prologue on a
+//! scratch instance when `CostBalanced` has measured costs available),
+//! dispatches to the serial reference engine, the per-cluster-instrumented
+//! serial engine, or the threaded ladder engine, and returns a unified
+//! [`RunReport`]. The raw engine entry points
+//! (`Model::run_serial_partitioned`, `sync::ladder::run_ladder`) are
+//! crate-internal; `Model::run_serial` stays public as the reference
+//! semantics.
+
+use super::active::SchedMode;
+use super::model::{Model, RunOpts, Stop};
+use crate::sched::{partition, partition_with_costs, PartitionStrategy};
+use crate::stats::{PhaseTimers, RunStats};
+use crate::sync::{run_ladder, ParallelOpts, SpinMode, SyncMethod};
+use crate::util::config::Config;
+
+/// Default profiling-prologue length (cycles) for cost-balanced
+/// partitioning: long enough to reach steady state, short against the
+/// multi-hundred-k-cycle measured runs.
+pub const DEFAULT_PROFILE_CYCLES: u64 = 2_000;
+
+/// Which engine executes the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Serial when the session resolves to one cluster, ladder otherwise.
+    Auto,
+    /// The serial reference engine (ignores the partition).
+    Serial,
+    /// Serial with per-cluster work/transfer attribution — feeds the
+    /// virtual-time scaling model on single-core testbeds (DESIGN.md §3).
+    Partitioned,
+    /// The threaded ladder-barrier engine.
+    Ladder,
+}
+
+impl Engine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Auto => "auto",
+            Engine::Serial => "serial",
+            Engine::Partitioned => "serial-partitioned",
+            Engine::Ladder => "ladder",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(Engine::Auto),
+            "serial" => Ok(Engine::Serial),
+            "partitioned" | "serial-partitioned" => Ok(Engine::Partitioned),
+            "ladder" | "parallel" => Ok(Engine::Ladder),
+            _ => Err(format!(
+                "unknown engine {s:?}; expected auto|serial|partitioned|ladder"
+            )),
+        }
+    }
+}
+
+type Scratch = Box<dyn Fn() -> Result<Model, String>>;
+
+/// A configured simulation session. Build with [`Sim::from_model`] or
+/// [`Sim::scenario`], chain the knobs, finish with [`Sim::run`].
+pub struct Sim {
+    model: Model,
+    /// Rebuilds a fresh instance of the model for the profiling prologue
+    /// (profiling advances simulation state, so it must never touch the
+    /// instance that will be measured).
+    scratch: Option<Scratch>,
+    scenario: Option<String>,
+    workers: usize,
+    engine: Engine,
+    sync: SyncMethod,
+    spin: SpinMode,
+    strategy: PartitionStrategy,
+    sched: SchedMode,
+    stop: Option<Stop>,
+    timed: bool,
+    fingerprint: bool,
+    explicit_partition: Option<Vec<Vec<u32>>>,
+    unit_costs: Option<Vec<u64>>,
+    profile_cycles: u64,
+}
+
+impl Sim {
+    /// Start a session from an already-built model. A stop condition must
+    /// be supplied via [`Sim::stop`] or [`Sim::cycles`] before `run()`.
+    pub fn from_model(model: Model) -> Self {
+        Sim {
+            model,
+            scratch: None,
+            scenario: None,
+            workers: 1,
+            engine: Engine::Auto,
+            sync: SyncMethod::CommonAtomic,
+            spin: SpinMode::Yield,
+            strategy: PartitionStrategy::Contiguous,
+            sched: SchedMode::FullScan,
+            stop: None,
+            timed: false,
+            fingerprint: false,
+            explicit_partition: None,
+            unit_costs: None,
+            profile_cycles: DEFAULT_PROFILE_CYCLES,
+        }
+    }
+
+    /// Start a session from a registered scenario (`crate::scenario`).
+    /// The scenario supplies the model, its default stop condition, and a
+    /// scratch builder for cost-balanced profiling.
+    pub fn scenario(name: &str, cfg: &Config) -> Result<Self, String> {
+        let sc = crate::scenario::find(name)?;
+        let (model, stop) = sc.build(cfg)?;
+        let canonical = sc.name().to_string();
+        let rebuild_name = canonical.clone();
+        let rebuild_cfg = cfg.clone();
+        let mut sim = Sim::from_model(model);
+        sim.scenario = Some(canonical);
+        sim.stop = Some(stop);
+        sim.scratch = Some(Box::new(move || {
+            crate::scenario::find(&rebuild_name)
+                .and_then(|s| s.build(&rebuild_cfg))
+                .map(|(m, _)| m)
+        }));
+        Ok(sim)
+    }
+
+    /// Number of worker clusters (ignored when an explicit partition is
+    /// set). Defaults to 1.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Engine selection; defaults to [`Engine::Auto`].
+    pub fn engine(mut self, e: Engine) -> Self {
+        self.engine = e;
+        self
+    }
+
+    /// Ladder sync-point method; defaults to the paper's winner,
+    /// common-atomic.
+    pub fn sync(mut self, method: SyncMethod) -> Self {
+        self.sync = method;
+        self
+    }
+
+    /// Spin-wait mode for spinning gates; defaults to yield.
+    pub fn spin(mut self, spin: SpinMode) -> Self {
+        self.spin = spin;
+        self
+    }
+
+    /// Unit→cluster partition strategy; defaults to `Contiguous`
+    /// (preserves builder order, which assembled systems exploit).
+    pub fn strategy(mut self, s: PartitionStrategy) -> Self {
+        self.strategy = s;
+        self
+    }
+
+    /// Work-phase scheduling (full scan vs sleep/wake active lists).
+    pub fn sched(mut self, sched: SchedMode) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    /// Opt in to sleep/wake active-unit scheduling.
+    pub fn active_list(self) -> Self {
+        self.sched(SchedMode::ActiveList)
+    }
+
+    /// Set (or override a scenario's) stop condition.
+    pub fn stop(mut self, stop: Stop) -> Self {
+        self.stop = Some(stop);
+        self
+    }
+
+    /// Shorthand for `.stop(Stop::Cycles(n))`.
+    pub fn cycles(self, n: u64) -> Self {
+        self.stop(Stop::Cycles(n))
+    }
+
+    /// Measure per-phase wall time.
+    pub fn timed(mut self) -> Self {
+        self.timed = true;
+        self
+    }
+
+    /// Compute the end-of-run state fingerprint (determinism checks).
+    pub fn fingerprinted(mut self) -> Self {
+        self.fingerprint = true;
+        self
+    }
+
+    /// Use an explicit unit→cluster mapping instead of a strategy. The
+    /// partition must place every unit in exactly one cluster (validated
+    /// at `run()` — the ladder engine's safety argument depends on it).
+    pub fn partition(mut self, partition: Vec<Vec<u32>>) -> Self {
+        self.explicit_partition = Some(partition);
+        self
+    }
+
+    /// Supply a pre-measured per-unit cost vector for `CostBalanced`
+    /// partitioning. Sweeps should profile once and pass the same costs to
+    /// every point so all points partition consistently.
+    pub fn unit_costs(mut self, costs: Vec<u64>) -> Self {
+        self.unit_costs = Some(costs);
+        self
+    }
+
+    /// Supply a scratch-instance builder for the `CostBalanced` profiling
+    /// prologue (scenario sessions get one automatically). Without costs
+    /// or a scratch builder, `CostBalanced` falls back to the static
+    /// port-degree proxy.
+    pub fn scratch(mut self, build: impl Fn() -> Model + 'static) -> Self {
+        self.scratch = Some(Box::new(move || Ok(build())));
+        self
+    }
+
+    /// Profiling-prologue length for cost-balanced partitioning.
+    pub fn profile_cycles(mut self, cycles: u64) -> Self {
+        self.profile_cycles = cycles;
+        self
+    }
+
+    /// The model under simulation (pre-run inspection).
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Give the model back without running (e.g. to rebuild the session).
+    pub fn into_model(self) -> Model {
+        self.model
+    }
+
+    fn resolve_partition(&mut self) -> Result<Vec<Vec<u32>>, String> {
+        let units = self.model.num_units();
+        if let Some(p) = &self.explicit_partition {
+            validate_partition(p, units)?;
+            return Ok(p.clone());
+        }
+        let w = self.workers.max(1).min(units.max(1));
+        if self.strategy == PartitionStrategy::CostBalanced {
+            if let Some(costs) = &self.unit_costs {
+                if costs.len() != units {
+                    return Err(format!(
+                        "unit_costs has {} entries but the model has {units} units",
+                        costs.len()
+                    ));
+                }
+                return Ok(partition_with_costs(w, costs));
+            }
+            if let Some(scratch) = &self.scratch {
+                let mut probe = scratch()?;
+                if probe.num_units() != units {
+                    return Err(format!(
+                        "scratch model has {} units, measured model has {units}",
+                        probe.num_units()
+                    ));
+                }
+                let costs = probe.profile_unit_costs(self.profile_cycles).work_ns;
+                return Ok(partition_with_costs(w, &costs));
+            }
+            // No measurements available: the degree proxy inside
+            // `sched::partition` stands in.
+        }
+        Ok(partition(&self.model, w, self.strategy))
+    }
+
+    /// Execute the session and return the unified report.
+    pub fn run(mut self) -> Result<RunReport, String> {
+        let stop = self
+            .stop
+            .ok_or("no stop condition: call .stop(...) or .cycles(n)")?;
+        let opts = RunOpts {
+            stop,
+            timed: self.timed,
+            fingerprint: self.fingerprint,
+            sched: self.sched,
+        };
+        let units = self.model.num_units();
+        let engine = match self.engine {
+            Engine::Auto => {
+                let clusters = self
+                    .explicit_partition
+                    .as_ref()
+                    .map(|p| p.len())
+                    .unwrap_or_else(|| self.workers.max(1).min(units.max(1)));
+                if clusters <= 1 {
+                    Engine::Serial
+                } else {
+                    Engine::Ladder
+                }
+            }
+            e => e,
+        };
+        let (part, stats, per_cluster) = match engine {
+            Engine::Serial => {
+                // The reference engine scans all units as one cluster;
+                // report it that way so partition/workers()/per_cluster
+                // stay consistent. An explicit partition is still
+                // validated (fail fast on a bad session) but not used.
+                if let Some(p) = &self.explicit_partition {
+                    validate_partition(p, units)?;
+                }
+                let part = vec![(0..units as u32).collect()];
+                let stats = self.model.run_serial(opts);
+                let per_cluster = stats.per_worker.clone();
+                (part, stats, per_cluster)
+            }
+            Engine::Partitioned => {
+                let part = self.resolve_partition()?;
+                let (stats, per_cluster) = self.model.run_serial_partitioned(&part, opts);
+                (part, stats, per_cluster)
+            }
+            Engine::Ladder => {
+                let part = self.resolve_partition()?;
+                let popts = ParallelOpts {
+                    method: self.sync,
+                    spin: self.spin,
+                    run: opts,
+                };
+                let stats = run_ladder(&mut self.model, &part, &popts);
+                let per_cluster = stats.per_worker.clone();
+                (part, stats, per_cluster)
+            }
+            Engine::Auto => unreachable!("Auto resolved above"),
+        };
+        Ok(RunReport {
+            stats,
+            partition: part,
+            per_cluster,
+            engine: engine.name(),
+            scenario: self.scenario,
+            units,
+            sched: self.sched,
+            sync: self.sync,
+        })
+    }
+}
+
+fn validate_partition(part: &[Vec<u32>], units: usize) -> Result<(), String> {
+    if part.is_empty() {
+        return Err("partition has no clusters".to_string());
+    }
+    let mut seen = vec![false; units];
+    for (ci, cluster) in part.iter().enumerate() {
+        for &u in cluster {
+            let i = u as usize;
+            if i >= units {
+                return Err(format!(
+                    "cluster {ci} references unit {u}, but the model has {units} units"
+                ));
+            }
+            if seen[i] {
+                return Err(format!("unit {u} appears in more than one cluster"));
+            }
+            seen[i] = true;
+        }
+    }
+    if let Some(missing) = seen.iter().position(|&s| !s) {
+        return Err(format!("unit {missing} is not assigned to any cluster"));
+    }
+    Ok(())
+}
+
+/// Everything a session run produced: the run statistics, the partition it
+/// ran under, and per-cluster phase attribution.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub stats: RunStats,
+    /// The unit→cluster mapping the run used.
+    pub partition: Vec<Vec<u32>>,
+    /// Per-cluster phase timers: cluster-attributed for
+    /// `Engine::Partitioned`, per-worker for the ladder, a single total
+    /// for the serial reference.
+    pub per_cluster: Vec<PhaseTimers>,
+    /// `"serial"`, `"serial-partitioned"`, or `"ladder"`.
+    pub engine: &'static str,
+    /// Scenario name when the session came from the registry.
+    pub scenario: Option<String>,
+    pub units: usize,
+    pub sched: SchedMode,
+    pub sync: SyncMethod,
+}
+
+impl RunReport {
+    pub fn workers(&self) -> usize {
+        self.partition.len()
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.stats.fingerprint
+    }
+
+    /// Fraction of unit-cycles that actually ran the work phase.
+    pub fn active_ratio(&self) -> f64 {
+        self.stats.active_ratio(self.units)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "[{}{} {}w {}] {}",
+            self.engine,
+            self.scenario
+                .as_deref()
+                .map(|s| format!(" {s}"))
+                .unwrap_or_default(),
+            self.workers(),
+            self.sched.name(),
+            self.stats.summary()
+        )
+    }
+
+    /// Flat JSON record of this run — one row of the perf-trajectory
+    /// schema (`harness::bench_json`). Hand-rolled: the crate is
+    /// dependency-free by design. Fingerprints are hex strings (u64 does
+    /// not fit IEEE doubles losslessly).
+    pub fn to_json(&self) -> String {
+        let (work_ns, transfer_ns, barrier_ns) = self.stats.phase_split();
+        format!(
+            "{{\"scenario\": {}, \"engine\": \"{}\", \"sched\": \"{}\", \
+             \"sync\": \"{}\", \"workers\": {}, \"units\": {}, \
+             \"cycles\": {}, \"wall_ns\": {}, \"cycles_per_sec\": {:.1}, \
+             \"sync_ops\": {}, \"work_ns\": {}, \"transfer_ns\": {}, \
+             \"barrier_ns\": {}, \"active_ratio\": {:.4}, \
+             \"fingerprint\": \"{:#018x}\"}}",
+            match &self.scenario {
+                Some(s) => format!("\"{s}\""),
+                None => "null".to_string(),
+            },
+            self.engine,
+            self.sched.name(),
+            self.sync.name(),
+            self.workers(),
+            self.units,
+            self.stats.cycles,
+            self.stats.wall.as_nanos(),
+            self.stats.sim_khz() * 1e3,
+            self.stats.sync_ops,
+            work_ns,
+            transfer_ns,
+            barrier_ns,
+            self.active_ratio(),
+            self.stats.fingerprint,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::message::{Fnv, Msg};
+    use crate::engine::model::ModelBuilder;
+    use crate::engine::port::{InPort, OutPort, PortCfg};
+    use crate::engine::unit::{Ctx, Unit};
+
+    struct Producer {
+        out: OutPort,
+        sent: u64,
+        limit: u64,
+    }
+
+    impl Unit for Producer {
+        fn work(&mut self, ctx: &mut Ctx<'_>) {
+            if self.sent < self.limit && ctx.out_vacant(self.out) {
+                ctx.send(self.out, Msg::with(1, self.sent, 0, 0)).unwrap();
+                self.sent += 1;
+            }
+        }
+
+        fn state_hash(&self, h: &mut Fnv) {
+            h.write_u64(self.sent);
+        }
+
+        fn is_idle(&self) -> bool {
+            self.sent >= self.limit
+        }
+    }
+
+    struct Consumer {
+        inp: InPort,
+        received: u64,
+    }
+
+    impl Unit for Consumer {
+        fn work(&mut self, ctx: &mut Ctx<'_>) {
+            while let Some(m) = ctx.recv(self.inp) {
+                assert_eq!(m.a, self.received);
+                self.received += 1;
+            }
+        }
+
+        fn state_hash(&self, h: &mut Fnv) {
+            h.write_u64(self.received);
+        }
+
+        fn stats(&self, out: &mut crate::stats::StatsMap) {
+            out.set("sim.delivered", self.received);
+        }
+    }
+
+    fn pair(limit: u64) -> Model {
+        let mut mb = ModelBuilder::new();
+        let a = mb.reserve_unit("A");
+        let b = mb.reserve_unit("B");
+        let (tx, rx) = mb.connect(a, b, PortCfg::new(2, 1));
+        mb.install(
+            a,
+            Box::new(Producer {
+                out: tx,
+                sent: 0,
+                limit,
+            }),
+        );
+        mb.install(b, Box::new(Consumer { inp: rx, received: 0 }));
+        mb.build().unwrap()
+    }
+
+    #[test]
+    fn missing_stop_is_an_error() {
+        assert!(Sim::from_model(pair(1)).run().is_err());
+    }
+
+    #[test]
+    fn auto_dispatches_serial_then_ladder() {
+        let serial = Sim::from_model(pair(50))
+            .cycles(200)
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(serial.engine, "serial");
+        assert_eq!(serial.workers(), 1);
+
+        let ladder = Sim::from_model(pair(50))
+            .workers(2)
+            .cycles(200)
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(ladder.engine, "ladder");
+        assert_eq!(ladder.workers(), 2);
+        assert_eq!(ladder.fingerprint(), serial.fingerprint());
+        assert_eq!(
+            ladder.stats.counters.get("sim.delivered"),
+            serial.stats.counters.get("sim.delivered")
+        );
+    }
+
+    #[test]
+    fn all_engines_agree_on_fingerprint() {
+        let reference = Sim::from_model(pair(60))
+            .cycles(200)
+            .fingerprinted()
+            .engine(Engine::Serial)
+            .run()
+            .unwrap();
+        for engine in [Engine::Partitioned, Engine::Ladder] {
+            let r = Sim::from_model(pair(60))
+                .partition(vec![vec![0], vec![1]])
+                .cycles(200)
+                .fingerprinted()
+                .engine(engine)
+                .run()
+                .unwrap();
+            assert_eq!(r.fingerprint(), reference.fingerprint(), "{}", r.engine);
+            assert_eq!(r.per_cluster.len(), 2);
+        }
+    }
+
+    #[test]
+    fn explicit_partition_is_validated() {
+        // Duplicate unit.
+        let err = Sim::from_model(pair(1))
+            .partition(vec![vec![0, 0], vec![1]])
+            .cycles(10)
+            .run();
+        assert!(err.is_err());
+        // Missing unit.
+        let err = Sim::from_model(pair(1))
+            .partition(vec![vec![0]])
+            .cycles(10)
+            .run();
+        assert!(err.is_err());
+        // Out-of-range unit.
+        let err = Sim::from_model(pair(1))
+            .partition(vec![vec![0], vec![7]])
+            .cycles(10)
+            .run();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn cost_balanced_profiles_the_scratch_instance() {
+        let reference = Sim::from_model(pair(60))
+            .cycles(200)
+            .fingerprinted()
+            .run()
+            .unwrap();
+        let r = Sim::from_model(pair(60))
+            .workers(2)
+            .strategy(PartitionStrategy::CostBalanced)
+            .scratch(|| pair(60))
+            .profile_cycles(50)
+            .cycles(200)
+            .fingerprinted()
+            .engine(Engine::Ladder)
+            .run()
+            .unwrap();
+        // Profiling must not perturb the measured run.
+        assert_eq!(r.fingerprint(), reference.fingerprint());
+        assert_eq!(r.workers(), 2);
+    }
+
+    #[test]
+    fn report_json_is_flat_and_balanced() {
+        let r = Sim::from_model(pair(10))
+            .cycles(50)
+            .fingerprinted()
+            .run()
+            .unwrap();
+        let json = r.to_json();
+        assert!(json.contains("\"engine\": \"serial\""));
+        assert!(json.contains("\"scenario\": null"));
+        assert!(json.contains("\"fingerprint\": \"0x"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+}

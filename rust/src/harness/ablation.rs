@@ -11,7 +11,7 @@
 //!
 //! Exposed via `scalesim ablation` and `cargo bench` targets.
 
-use crate::engine::{RunOpts, Stop};
+use crate::engine::{Engine, RunOpts, Sim, Stop};
 use crate::sched::{cross_cluster_ports, partition, PartitionStrategy};
 use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
 use crate::workload::{generate_oltp_traces, OltpCfg};
@@ -95,7 +95,7 @@ pub fn partition_ablation(cores: usize, workers: usize) -> Vec<PartitionAblation
         PartitionStrategy::Contiguous,
         PartitionStrategy::Locality,
     ] {
-        let (mut model, h) = build_cpu_system(traces.clone(), &cfg);
+        let (model, h) = build_cpu_system(traces.clone(), &cfg);
         let part = partition(&model, workers, strat);
         let cross = cross_cluster_ports(&model, &part);
         let stop = Stop::CounterAtLeast {
@@ -103,12 +103,21 @@ pub fn partition_ablation(cores: usize, workers: usize) -> Vec<PartitionAblation
             target: cores as u64,
             max_cycles: 5_000_000,
         };
-        let (_stats, per_cluster) =
-            model.run_serial_partitioned(&part, RunOpts::with_stop(stop));
+        let report = Sim::from_model(model)
+            .partition(part)
+            .stop(stop)
+            .engine(Engine::Partitioned)
+            .run()
+            .expect("ablation point");
         rows.push(PartitionAblationRow {
             strategy: strat.name(),
             cross_ports: cross,
-            max_cluster_work_ns: per_cluster.iter().map(|t| t.work_ns).max().unwrap_or(0),
+            max_cluster_work_ns: report
+                .per_cluster
+                .iter()
+                .map(|t| t.work_ns)
+                .max()
+                .unwrap_or(0),
         });
     }
     rows

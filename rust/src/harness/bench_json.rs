@@ -17,10 +17,10 @@
 //! does not fit IEEE doubles losslessly).
 
 use super::fig12_13::{default_oltp, profile_costs, resolve_partition};
-use crate::engine::{RunOpts, SchedMode, Stop};
+use crate::engine::{Engine, SchedMode, Sim, Stop};
 use crate::sched::PartitionStrategy;
 use crate::stats::RunStats;
-use crate::sync::{run_ladder, ParallelOpts, SyncMethod};
+use crate::sync::SyncMethod;
 use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
 use crate::workload::generate_oltp_traces;
 
@@ -73,6 +73,8 @@ impl BenchRow {
 #[derive(Debug, Clone)]
 pub struct LadderBench {
     pub model: &'static str,
+    /// Registry name of the scenario the matrix ran on (`crate::scenario`).
+    pub scenario: &'static str,
     pub cores: usize,
     pub units: usize,
     pub strategy: &'static str,
@@ -111,6 +113,7 @@ impl LadderBench {
         let mut s = String::with_capacity(1024);
         s.push_str("{\n");
         s.push_str(&format!("  \"model\": \"{}\",\n", self.model));
+        s.push_str(&format!("  \"scenario\": \"{}\",\n", self.scenario));
         s.push_str(&format!("  \"cores\": {},\n", self.cores));
         s.push_str(&format!("  \"units\": {},\n", self.units));
         s.push_str(&format!("  \"strategy\": \"{}\",\n", self.strategy));
@@ -173,7 +176,7 @@ pub fn run_oltp_light(
     // Serial reference and serial sleep/wake.
     let mut seen_units = None;
     for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
-        let (mut model, h) = build();
+        let (model, h) = build();
         let units = model.num_units();
         seen_units = Some(units);
         let stop = Stop::CounterAtLeast {
@@ -181,43 +184,45 @@ pub fn run_oltp_light(
             target: cores as u64,
             max_cycles: 5_000_000,
         };
-        let stats = model.run_serial(
-            RunOpts::with_stop(stop)
-                .timed()
-                .fingerprinted()
-                .with_sched(sched),
-        );
-        rows.push(BenchRow::from_stats("serial", sched, 1, units, &stats));
+        let report = Sim::from_model(model)
+            .stop(stop)
+            .sched(sched)
+            .timed()
+            .fingerprinted()
+            .engine(Engine::Serial)
+            .run()
+            .expect("serial bench row");
+        rows.push(BenchRow::from_stats("serial", sched, 1, units, &report.stats));
     }
     let units = seen_units.expect("serial rows always run");
 
     // Ladder runs at each worker count, both scheduling modes.
     for &w in worker_counts {
         for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
-            let (mut model, h) = build();
+            let (model, h) = build();
             let stop = Stop::CounterAtLeast {
                 counter: h.cores_done,
                 target: cores as u64,
                 max_cycles: 5_000_000,
             };
             let part = resolve_partition(&model, w, strategy, &h, costs.as_deref());
-            let stats = run_ladder(
-                &mut model,
-                &part,
-                &ParallelOpts::new(
-                    SyncMethod::CommonAtomic,
-                    RunOpts::with_stop(stop)
-                        .timed()
-                        .fingerprinted()
-                        .with_sched(sched),
-                ),
-            );
-            rows.push(BenchRow::from_stats("ladder", sched, w, units, &stats));
+            let report = Sim::from_model(model)
+                .partition(part)
+                .stop(stop)
+                .sched(sched)
+                .sync(SyncMethod::CommonAtomic)
+                .timed()
+                .fingerprinted()
+                .engine(Engine::Ladder)
+                .run()
+                .expect("ladder bench row");
+            rows.push(BenchRow::from_stats("ladder", sched, w, units, &report.stats));
         }
     }
 
     LadderBench {
         model: "oltp_light",
+        scenario: "cpu-light",
         cores,
         units,
         strategy: match strategy {
@@ -287,6 +292,7 @@ mod tests {
         assert!(b.speedup_active_vs_full() > 0.0);
         let json = b.to_json();
         assert!(json.contains("\"fingerprints_agree\": true"));
+        assert!(json.contains("\"scenario\": \"cpu-light\""));
         assert!(json.contains("\"rows\": ["));
         // Crude structural sanity: balanced braces/brackets.
         assert_eq!(

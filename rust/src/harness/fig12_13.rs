@@ -12,10 +12,10 @@
 //! with the measured barrier cost (DESIGN.md §3); measured wall-clock of
 //! the true threaded run is reported alongside.
 
-use crate::engine::{Model, RunOpts, SchedMode, Stop};
+use crate::engine::{Engine, Model, SchedMode, Sim, Stop};
 use crate::sched::{partition, partition_with_costs, PartitionStrategy};
 use crate::stats::scaling::{model_parallel_time, BarrierCost, ClusterCosts, ScalingPoint};
-use crate::sync::{run_ladder, ParallelOpts, SyncMethod};
+use crate::sync::SyncMethod;
 use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg, CpuSystemHandles};
 use crate::workload::{generate_oltp_traces, OltpCfg};
 
@@ -122,15 +122,21 @@ pub fn run_with(
     let unit_costs = profile_costs(strategy, scratch);
     for &w in worker_counts {
         let traces = generate_oltp_traces(&default_oltp(cores));
-        let (mut model, h) = build_cpu_system(traces, &cfg);
+        let (model, h) = build_cpu_system(traces, &cfg);
         let stop = Stop::CounterAtLeast {
             counter: h.cores_done,
             target: cores as u64,
             max_cycles: 5_000_000,
         };
         let part = resolve_partition(&model, w, strategy, &h, unit_costs.as_deref());
-        let (stats, per_cluster) =
-            model.run_serial_partitioned(&part, RunOpts::with_stop(stop).with_sched(sched));
+        let report = Sim::from_model(model)
+            .partition(part)
+            .stop(stop)
+            .sched(sched)
+            .engine(Engine::Partitioned)
+            .run()
+            .expect("partitioned sweep point");
+        let (stats, per_cluster) = (report.stats, report.per_cluster);
         let costs = ClusterCosts {
             work_ns: per_cluster.iter().map(|t| t.work_ns).collect(),
             transfer_ns: per_cluster.iter().map(|t| t.transfer_ns).collect(),
@@ -144,26 +150,26 @@ pub fn run_with(
         }
         // Real threaded run (measured wall-clock on this host).
         let traces = generate_oltp_traces(&default_oltp(cores));
-        let (mut pmodel, h2) = build_cpu_system(traces, &cfg);
+        let (pmodel, h2) = build_cpu_system(traces, &cfg);
         let stop2 = Stop::CounterAtLeast {
             counter: h2.cores_done,
             target: cores as u64,
             max_cycles: 5_000_000,
         };
         let part2 = resolve_partition(&pmodel, w, strategy, &h2, unit_costs.as_deref());
-        let pstats = run_ladder(
-            &mut pmodel,
-            &part2,
-            &ParallelOpts::new(
-                SyncMethod::CommonAtomic,
-                RunOpts::with_stop(stop2).with_sched(sched),
-            ),
-        );
+        let preport = Sim::from_model(pmodel)
+            .partition(part2)
+            .stop(stop2)
+            .sched(sched)
+            .sync(SyncMethod::CommonAtomic)
+            .engine(Engine::Ladder)
+            .run()
+            .expect("ladder sweep point");
         rows.push(Fig12Row {
             workers: w,
             modeled,
             total_work_ns,
-            measured_wall_ns: pstats.wall.as_nanos() as u64,
+            measured_wall_ns: preport.stats.wall.as_nanos() as u64,
             sim_cycles: stats.cycles,
             sim_khz_serial: stats.sim_khz(),
         });

@@ -7,7 +7,7 @@
 //! barrier and transfer costs are marginal.
 
 use crate::cpu::ooo::OooCfg;
-use crate::engine::{RunOpts, Stop};
+use crate::engine::{Engine, Sim, Stop};
 use crate::stats::scaling::{model_parallel_time, BarrierCost, ClusterCosts};
 use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
 use crate::workload::{generate_oltp_traces, generate_spec_traces, OltpCfg, SpecKind};
@@ -54,15 +54,19 @@ pub fn run(
     let mut rows = Vec::new();
     let mut serial_ns = 0u64;
     for &w in worker_counts {
-        let (mut model, h) = build_cpu_system(mk_traces(), &cfg);
+        let (model, h) = build_cpu_system(mk_traces(), &cfg);
         let stop = Stop::CounterAtLeast {
             counter: h.cores_done,
             target: cores as u64,
             max_cycles: 10_000_000,
         };
-        let part = h.partition(w);
-        let (stats, per_cluster) =
-            model.run_serial_partitioned(&part, RunOpts::with_stop(stop));
+        let report = Sim::from_model(model)
+            .partition(h.partition(w))
+            .stop(stop)
+            .engine(Engine::Partitioned)
+            .run()
+            .expect("partitioned sweep point");
+        let (stats, per_cluster) = (report.stats, report.per_cluster);
         let costs = ClusterCosts {
             work_ns: per_cluster.iter().map(|t| t.work_ns).collect(),
             transfer_ns: per_cluster.iter().map(|t| t.transfer_ns).collect(),

@@ -9,8 +9,8 @@
 //! fabric for smoke runs.
 
 use crate::dc::{build_fattree, FatTreeCfg, TrafficCfg};
-use crate::engine::{RunOpts, Stop};
-use crate::sched::{partition, PartitionStrategy};
+use crate::engine::{Engine, Sim, Stop};
+use crate::sched::PartitionStrategy;
 use crate::stats::scaling::{model_parallel_time, BarrierCost, ClusterCosts};
 
 #[derive(Debug, Clone)]
@@ -47,15 +47,20 @@ pub fn run(
     let mut rows = Vec::new();
     let mut serial_ns = 0u64;
     for &w in worker_counts {
-        let (mut model, h) = build_fattree(cfg);
+        let (model, h) = build_fattree(cfg);
         let stop = Stop::CounterAtLeast {
             counter: h.delivered,
             target: h.packets,
             max_cycles: 10_000_000,
         };
-        let part = partition(&model, w, strategy);
-        let (stats, per_cluster) =
-            model.run_serial_partitioned(&part, RunOpts::with_stop(stop));
+        let report = Sim::from_model(model)
+            .workers(w)
+            .strategy(strategy)
+            .stop(stop)
+            .engine(Engine::Partitioned)
+            .run()
+            .expect("partitioned sweep point");
+        let (stats, per_cluster) = (report.stats, report.per_cluster);
         let costs = ClusterCosts {
             work_ns: per_cluster.iter().map(|t| t.work_ns).collect(),
             transfer_ns: per_cluster.iter().map(|t| t.transfer_ns).collect(),

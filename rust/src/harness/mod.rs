@@ -2,12 +2,15 @@
 //! evaluation section (§5). Each module exposes a `run(...)` returning
 //! structured rows and a `print(...)` that renders the same table/series
 //! the paper plots; the `cargo bench` targets and the `scalesim` CLI both
-//! drive these functions (EXPERIMENTS.md records the outputs).
+//! drive these functions, and every module runs its simulations through
+//! the `engine::Sim` facade (see EXPERIMENTS.md in the repo root for the
+//! command ↔ figure map and recorded outputs).
 //!
-//! Testbed note (DESIGN.md §3): this container has one vCPU, so scaling
-//! figures report both the *measured* wall-clock of the real threaded run
-//! and the *modeled* multi-core runtime composed from natively measured
-//! per-cluster work and barrier costs (`stats::scaling`).
+//! Testbed note (DESIGN.md §3, repo root): this container has one vCPU,
+//! so scaling figures report both the *measured* wall-clock of the real
+//! threaded run and the *modeled* multi-core runtime composed from
+//! natively measured per-cluster work and barrier costs
+//! (`stats::scaling`).
 
 pub mod ablation;
 pub mod bench_json;

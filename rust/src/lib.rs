@@ -8,7 +8,11 @@
 //! The library is organized around the paper's methodology:
 //!
 //! - [`engine`] — units, point-to-point ports, messages, and the 2.5-phase
-//!   cycle semantics (work → barrier → transfer → barrier), §2–§3.
+//!   cycle semantics (work → barrier → transfer → barrier), §2–§3; plus
+//!   the [`engine::Sim`] session facade, the single public way to run a
+//!   simulation (serial, instrumented, or parallel).
+//! - [`scenario`] — named, config-driven model presets (`scalesim run
+//!   --scenario <name>`) behind the same facade.
 //! - [`sync`] — the ladder-barrier synchronization mechanism and the four
 //!   sync-point implementations compared in Fig 9, §4.
 //! - [`sched`] — unit→cluster partitioning for the two-level scheduler.
@@ -42,6 +46,7 @@ pub mod mem;
 pub mod noc;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod stats;
 pub mod sync;

@@ -1,9 +1,11 @@
 //! `scalesim` — the launcher.
 //!
-//! Subcommands map 1:1 to the paper's evaluation section (see
-//! EXPERIMENTS.md) plus the exploration workflow:
+//! Subcommands map 1:1 to the paper's evaluation section (EXPERIMENTS.md
+//! records the commands and their outputs) plus the unified run surface
+//! and the exploration workflow:
 //!
 //! ```text
+//! scalesim run             any registered scenario through the Sim facade
 //! scalesim barrier-bench   Figs 9-11: sync methods + barrier scaling
 //! scalesim oltp-light      Figs 12-13: OLTP on light cores
 //! scalesim ooo             Fig 14: OLTP/SPEC on OOO cores
@@ -13,21 +15,28 @@
 //! ```
 //!
 //! Every subcommand accepts `--config file.toml` (flat TOML, see
-//! `util::config`) with CLI flags overriding file values.
+//! `util::config`) with CLI flags overriding file values; option parsing
+//! and the flag-vs-file merge live in `util::cli::Cmd`.
 
 use scalesim::dc::{FatTreeCfg, TrafficCfg};
-use scalesim::engine::SchedMode;
+use scalesim::engine::{Engine, SchedMode, Sim};
 use scalesim::harness::{ablation, bench_json, fig09, fig10_11, fig12_13, fig14, fig15_16};
+use scalesim::scenario;
 use scalesim::sched::PartitionStrategy;
-use scalesim::sync::SpinMode;
-use scalesim::util::cli::Args;
-use scalesim::util::config::Config;
+use scalesim::sync::{SpinMode, SyncMethod};
+use scalesim::util::cli::Cmd;
 use scalesim::workload::SpecKind;
 
 fn usage() -> ! {
     eprintln!(
         "usage: scalesim <command> [options]\n\
          commands:\n\
+         \x20 run            --scenario NAME [--list-scenarios] [--workers N]\n\
+         \x20                [--engine auto|serial|partitioned|ladder]\n\
+         \x20                [--sync common-atomic|atomic|spinlock|mutex]\n\
+         \x20                [--strategy S] [--sched full|active] [--spin yield|pure]\n\
+         \x20                [--cycles N] [--timed] [--fingerprint] [--counters]\n\
+         \x20                [--json out.json] [--set k=v,k=v] (scenario keys)\n\
          \x20 barrier-bench  [--workers 1,2,4] [--cycles N] [--spin yield|pure]\n\
          \x20 oltp-light     [--cores N] [--workers 1,2,4,8,16] [--strategy S]\n\
          \x20                [--sched full|active] [--bench-json BENCH_ladder.json]\n\
@@ -41,32 +50,83 @@ fn usage() -> ! {
     std::process::exit(2);
 }
 
-fn parse_list(s: &str) -> Result<Vec<usize>, String> {
-    s.split(',')
-        .map(|t| scalesim::util::cli::parse_u64(t.trim()).map(|v| v as usize))
-        .collect()
-}
-
-fn merged_config(args: &Args) -> Result<Config, String> {
-    let mut cfg = Config::new();
-    if let Some(path) = args.get("config") {
-        cfg.overlay(&Config::from_file(std::path::Path::new(path))?);
+/// `scalesim run`: one scenario, one session, one report.
+fn cmd_run(argv: &[String]) -> Result<(), String> {
+    let c = Cmd::parse(
+        argv,
+        &[
+            "scenario", "workers", "engine", "sync", "spin", "strategy", "sched", "cycles",
+            "seed", "set", "json",
+        ],
+        &["list-scenarios", "timed", "fingerprint", "counters"],
+    )?;
+    if c.flag("list-scenarios")? {
+        println!("registered scenarios:");
+        for line in scenario::list_lines() {
+            println!("  {line}");
+        }
+        return Ok(());
     }
-    Ok(cfg)
+    let name = c
+        .get("scenario")
+        .ok_or("missing --scenario NAME (or --list-scenarios)")?;
+    // Scenario keys come from the config file plus inline `--set k=v,...`
+    // pairs (CLI wins).
+    let mut cfg = c.file_config().clone();
+    if let Some(pairs) = c.get("set") {
+        for pair in pairs.split(',') {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("--set: expected k=v, got {pair:?}"))?;
+            cfg.set(k.trim(), v.trim());
+        }
+    }
+    // `--seed` doubles as the scenario's workload seed and the partition
+    // strategy's seed; bridge it into the scenario config like `--set`.
+    if let Some(seed) = c.get("seed") {
+        cfg.set("seed", seed);
+    }
+    let mut sim = Sim::scenario(name, &cfg)?
+        .workers(c.get_usize("workers", 1)?)
+        .engine(Engine::parse(c.get_or("engine", "auto"))?)
+        .sync(SyncMethod::parse(c.get_or("sync", "common-atomic"))?)
+        .spin(SpinMode::parse(c.get_or("spin", "yield"))?)
+        .sched(SchedMode::parse(c.get_or("sched", "full"))?);
+    if let Some(s) = c.get("strategy") {
+        sim = sim.strategy(PartitionStrategy::parse(s, c.get_u64("seed", 42)?)?);
+    }
+    // Only a CLI `--cycles` overrides the session stop: a `cycles` key in
+    // the config file (or `--set`) already reached the scenario builder,
+    // and re-applying the file value here would defeat `--set cycles=N`.
+    if c.from_cli("cycles").is_some() {
+        sim = sim.cycles(c.get_u64("cycles", 0)?);
+    }
+    if c.flag("timed")? {
+        sim = sim.timed();
+    }
+    if c.flag("fingerprint")? {
+        sim = sim.fingerprinted();
+    }
+    let report = sim.run()?;
+    println!("{}", report.summary());
+    if report.stats.fingerprint != 0 {
+        println!("  fingerprint {:#018x}", report.stats.fingerprint);
+    }
+    if c.flag("counters")? {
+        print!("{}", report.stats.counters);
+    }
+    if let Some(path) = c.get("json") {
+        std::fs::write(path, report.to_json()).map_err(|e| format!("write {path}: {e}"))?;
+        println!("# wrote {path}");
+    }
+    Ok(())
 }
 
 fn cmd_barrier_bench(argv: &[String]) -> Result<(), String> {
-    let args = Args::parse(argv, &["workers", "cycles", "spin", "config"], &[])?;
-    let cfg = merged_config(&args)?;
-    let workers = parse_list(args.get_or(
-        "workers",
-        cfg.get("workers").unwrap_or("1,2,3,4,6,8"),
-    ))?;
-    let cycles = args.get_u64("cycles", cfg.get_u64("cycles", 20_000)?)?;
-    let spin = match args.get_or("spin", cfg.get("spin").unwrap_or("yield")) {
-        "pure" => SpinMode::Pure,
-        _ => SpinMode::Yield,
-    };
+    let c = Cmd::parse(argv, &["workers", "cycles", "spin"], &[])?;
+    let workers = c.get_list("workers", "1,2,3,4,6,8")?;
+    let cycles = c.get_u64("cycles", 20_000)?;
+    let spin = SpinMode::parse(c.get_or("spin", "yield"))?;
     println!("# Fig 9: sync methods, {cycles} cycles per point");
     let rows = fig09::run(&workers, cycles, spin);
     fig09::print(&rows);
@@ -77,25 +137,19 @@ fn cmd_barrier_bench(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_oltp_light(argv: &[String]) -> Result<(), String> {
-    let args = Args::parse(
+    let c = Cmd::parse(
         argv,
-        &[
-            "cores", "workers", "strategy", "barrier", "sched", "bench-json", "config",
-        ],
+        &["cores", "workers", "strategy", "barrier", "sched", "bench-json"],
         &[],
     )?;
-    let cfg = merged_config(&args)?;
-    let cores = args.get_usize("cores", cfg.get_usize("cores", 32)?)?;
-    let workers = parse_list(args.get_or(
-        "workers",
-        cfg.get("workers").unwrap_or("1,2,4,8,16"),
-    ))?;
-    let strategy = match args.get("strategy").or(cfg.get("strategy")) {
+    let cores = c.get_usize("cores", 32)?;
+    let workers = c.get_list("workers", "1,2,4,8,16")?;
+    let strategy = match c.get("strategy") {
         None | Some("paper") => None,
         Some(s) => Some(PartitionStrategy::parse(s, 42)?),
     };
-    let sched = SchedMode::parse(args.get_or("sched", cfg.get("sched").unwrap_or("full")))?;
-    let bkind = args.get_or("barrier", cfg.get("barrier").unwrap_or("paper"));
+    let sched = SchedMode::parse(c.get_or("sched", "full"))?;
+    let bkind = c.get_or("barrier", "paper");
     println!("# barrier model: {bkind}");
     let barrier = fig09::barrier_model(bkind, &workers, 5_000);
     println!(
@@ -105,7 +159,7 @@ fn cmd_oltp_light(argv: &[String]) -> Result<(), String> {
     let out = fig12_13::run_with(cores, &workers, &barrier, strategy, sched);
     fig12_13::print(&out);
     // Perf trajectory artifact: full engine/sched matrix with fingerprints.
-    if let Some(path) = args.get("bench-json").or(cfg.get("bench-json")) {
+    if let Some(path) = c.get("bench-json") {
         println!("# measuring active-vs-full matrix for {path} ...");
         let bench = bench_json::run_oltp_light(cores, &workers, strategy);
         bench_json::print(&bench);
@@ -118,15 +172,14 @@ fn cmd_oltp_light(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_ooo(argv: &[String]) -> Result<(), String> {
-    let args = Args::parse(argv, &["cores", "workers", "workload", "barrier", "config"], &[])?;
-    let cfg = merged_config(&args)?;
-    let cores = args.get_usize("cores", cfg.get_usize("cores", 8)?)?;
-    let workers = parse_list(args.get_or("workers", cfg.get("workers").unwrap_or("1,2,4,8")))?;
-    let wl = match args.get_or("workload", cfg.get("workload").unwrap_or("oltp")) {
+    let c = Cmd::parse(argv, &["cores", "workers", "workload", "barrier"], &[])?;
+    let cores = c.get_usize("cores", 8)?;
+    let workers = c.get_list("workers", "1,2,4,8")?;
+    let wl = match c.get_or("workload", "oltp") {
         "oltp" => fig14::Workload::Oltp,
         other => fig14::Workload::Spec(SpecKind::parse(other)?),
     };
-    let bkind = args.get_or("barrier", cfg.get("barrier").unwrap_or("paper"));
+    let bkind = c.get_or("barrier", "paper");
     let barrier = fig09::barrier_model(bkind, &workers, 5_000);
     println!("# running OOO sweeps ({cores} cores, barrier model: {bkind})...");
     let rows = fig14::run(cores, &workers, &barrier, wl);
@@ -135,37 +188,32 @@ fn cmd_ooo(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_datacenter(argv: &[String]) -> Result<(), String> {
-    let args = Args::parse(
+    let c = Cmd::parse(
         argv,
-        &["k", "packets", "window", "workers", "buffer", "barrier", "config"],
+        &["k", "packets", "window", "workers", "buffer", "barrier"],
         &["paper-scale", "smoke"],
     )?;
-    let cfg = merged_config(&args)?;
-    let mut ft = if args.flag("paper-scale") {
+    let mut ft = if c.flag("paper-scale")? {
         FatTreeCfg::paper_scale()
     } else {
         let mut d = fig15_16::default_cfg();
-        d.k = args.get_u64("k", cfg.get_u64("k", d.k as u64)?)? as u32;
-        d.buffer = args.get_usize("buffer", cfg.get_usize("buffer", d.buffer)?)?;
+        d.k = c.get_u64("k", d.k as u64)? as u32;
+        d.buffer = c.get_usize("buffer", d.buffer)?;
         d.traffic = TrafficCfg {
             seed: 0xDC,
             hosts: 0,
-            packets: args.get_u64("packets", cfg.get_u64("packets", d.traffic.packets)?)?,
-            inject_window: args
-                .get_u64("window", cfg.get_u64("window", d.traffic.inject_window)?)?,
+            packets: c.get_u64("packets", d.traffic.packets)?,
+            inject_window: c.get_u64("window", d.traffic.inject_window)?,
         };
         d
     };
-    if args.flag("smoke") {
+    if c.flag("smoke")? {
         // Paper-scale fabrics are huge; a smoke run caps the workload and
         // the injection window (simulated cycles scale with the window).
         ft.traffic.packets = ft.traffic.packets.min(50_000);
         ft.traffic.inject_window = ft.traffic.inject_window.min(2_000);
     }
-    let workers = parse_list(args.get_or(
-        "workers",
-        cfg.get("workers").unwrap_or("1,2,4,8,16,24"),
-    ))?;
+    let workers = c.get_list("workers", "1,2,4,8,16,24")?;
     println!(
         "# fat-tree k={} hosts={} switches={} packets={}",
         ft.k,
@@ -173,7 +221,7 @@ fn cmd_datacenter(argv: &[String]) -> Result<(), String> {
         ft.switches(),
         ft.traffic.packets
     );
-    let bkind = args.get_or("barrier", cfg.get("barrier").unwrap_or("paper"));
+    let bkind = c.get_or("barrier", "paper");
     let barrier = fig09::barrier_model(bkind, &workers, 5_000);
     let rows = fig15_16::run(&ft, &workers, &barrier, PartitionStrategy::Contiguous);
     fig15_16::print(&rows);
@@ -181,9 +229,8 @@ fn cmd_datacenter(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_ablation(argv: &[String]) -> Result<(), String> {
-    let args = Args::parse(argv, &["cores", "config"], &[])?;
-    let cfg = merged_config(&args)?;
-    let cores = args.get_usize("cores", cfg.get_usize("cores", 4)?)?;
+    let c = Cmd::parse(argv, &["cores"], &[])?;
+    let cores = c.get_usize("cores", 4)?;
     let r = ablation::same_cycle_relaxation(cores);
     ablation::print_relaxation(&r);
     let rows = ablation::partition_ablation(cores, 2.min(cores));
@@ -200,16 +247,11 @@ fn cmd_explore(_argv: &[String]) -> Result<(), String> {
 
 #[cfg(feature = "pjrt")]
 fn cmd_explore(argv: &[String]) -> Result<(), String> {
-    let args = Args::parse(
-        argv,
-        &["k", "steps", "lr", "validate-packets", "config"],
-        &[],
-    )?;
-    let cfg = merged_config(&args)?;
-    let k = args.get_f64("k", cfg.get_f64("k", 16.0)?)? as f32;
-    let steps = args.get_usize("steps", cfg.get_usize("steps", 60)?)?;
-    let lr = args.get_f64("lr", cfg.get_f64("lr", 0.05)?)? as f32;
-    let packets = args.get_u64("validate-packets", cfg.get_u64("validate-packets", 5_000)?)?;
+    let c = Cmd::parse(argv, &["k", "steps", "lr", "validate-packets"], &[])?;
+    let k = c.get_f64("k", 16.0)? as f32;
+    let steps = c.get_usize("steps", 60)?;
+    let lr = c.get_f64("lr", 0.05)? as f32;
+    let packets = c.get_u64("validate-packets", 5_000)?;
 
     let rt = scalesim::runtime::Runtime::cpu().map_err(|e| e.to_string())?;
     println!("# PJRT platform: {}", rt.platform());
@@ -253,6 +295,7 @@ fn main() {
     let Some(cmd) = argv.first() else { usage() };
     let rest = &argv[1..];
     let result = match cmd.as_str() {
+        "run" => cmd_run(rest),
         "barrier-bench" => cmd_barrier_bench(rest),
         "oltp-light" => cmd_oltp_light(rest),
         "ooo" => cmd_ooo(rest),

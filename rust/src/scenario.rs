@@ -1,0 +1,630 @@
+//! The scenario registry: named, config-driven model presets behind the
+//! [`crate::engine::Sim`] session facade.
+//!
+//! The paper's claim is that one methodology serves many design points —
+//! a scenario is exactly that: a named builder that turns a flat
+//! [`Config`] into a ready-to-run `(Model, Stop)` pair. The CLI exposes
+//! the registry as `scalesim run --scenario <name>` (and
+//! `--list-scenarios`); programmatic callers go through
+//! `Sim::scenario(name, &config)`.
+//!
+//! Built-ins:
+//!
+//! | name        | model                                               |
+//! |-------------|-----------------------------------------------------|
+//! | `pipeline`  | linear sleep-capable pipeline (facade smoke model)  |
+//! | `cpu-light` | light in-order multicore running OLTP (§5.2)        |
+//! | `cpu-ooo`   | out-of-order multicore running OLTP/SPEC (§5.3)     |
+//! | `fat-tree`  | k-ary fat-tree data-center fabric (§5.4)            |
+//! | `mesh`      | 2-D mesh NoC with per-node traffic endpoints        |
+//!
+//! Config keys are scenario-specific and documented per scenario
+//! (`keys()`); unknown keys are ignored, so one config file can drive a
+//! sweep across scenarios.
+
+use crate::cpu::ooo::OooCfg;
+use crate::dc::{build_fattree, FatTreeCfg, TrafficCfg};
+use crate::engine::{
+    Ctx, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, Stop, Unit,
+};
+use crate::noc::{net_b, Mesh, MeshCfg};
+use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
+use crate::util::config::Config;
+use crate::util::rng::Rng;
+use crate::workload::{generate_oltp_traces, generate_spec_traces, OltpCfg, SpecKind};
+
+/// A named, config-driven model preset.
+pub trait Scenario {
+    /// Canonical registry name.
+    fn name(&self) -> &'static str;
+    /// One-line description for `--list-scenarios`.
+    fn summary(&self) -> &'static str;
+    /// Alternate lookup names.
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+    /// `(key, meaning/default)` pairs the scenario reads from the config.
+    fn keys(&self) -> &'static [(&'static str, &'static str)] {
+        &[]
+    }
+    /// Build the model and its default stop condition from `cfg`.
+    fn build(&self, cfg: &Config) -> Result<(Model, Stop), String>;
+}
+
+/// All registered scenarios, in listing order.
+pub fn all() -> Vec<Box<dyn Scenario>> {
+    vec![
+        Box::new(Pipeline),
+        Box::new(CpuLight),
+        Box::new(CpuOoo),
+        Box::new(FatTree),
+        Box::new(MeshNoc),
+    ]
+}
+
+/// Canonical names of every registered scenario.
+pub fn names() -> Vec<&'static str> {
+    all().into_iter().map(|s| s.name()).collect()
+}
+
+/// Look a scenario up by canonical name or alias.
+pub fn find(name: &str) -> Result<Box<dyn Scenario>, String> {
+    all()
+        .into_iter()
+        .find(|s| s.name() == name || s.aliases().contains(&name))
+        .ok_or_else(|| {
+            format!(
+                "unknown scenario {name:?}; available: {}",
+                names().join(", ")
+            )
+        })
+}
+
+/// Human-readable registry listing (one scenario per line, plus keys).
+pub fn list_lines() -> Vec<String> {
+    let mut lines = Vec::new();
+    for s in all() {
+        let alias = if s.aliases().is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", s.aliases().join(", "))
+        };
+        lines.push(format!("{:<10} {}{}", s.name(), s.summary(), alias));
+        for (k, v) in s.keys() {
+            lines.push(format!("             {k:<14} {v}"));
+        }
+    }
+    lines
+}
+
+/// Shared stop-condition plumbing: an explicit `cycles = N` key wins;
+/// otherwise the scenario's counter/idle default applies, capped at
+/// `max-cycles`.
+fn stop_from(cfg: &Config, default_stop: Stop) -> Result<Stop, String> {
+    match cfg.get("cycles") {
+        Some(_) => Ok(Stop::Cycles(cfg.get_u64("cycles", 0)?)),
+        None => Ok(default_stop),
+    }
+}
+
+// ---------------------------------------------------------------------
+// pipeline
+// ---------------------------------------------------------------------
+
+/// A linear pipeline stage honouring the sleep contract: the source is
+/// idle once drained; mids and the sink are purely input-driven.
+struct PipeStage {
+    inp: Option<InPort>,
+    out: Option<OutPort>,
+    seq: u64,
+    limit: u64,
+    received: u64,
+    acc: u64,
+}
+
+impl Unit for PipeStage {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        match (self.inp, self.out) {
+            (None, Some(out)) => {
+                if self.seq < self.limit && ctx.out_vacant(out) {
+                    ctx.send(out, Msg::with(1, self.seq, 0, 0)).unwrap();
+                    self.seq += 1;
+                }
+            }
+            (Some(inp), Some(out)) => {
+                while ctx.out_vacant(out) {
+                    let Some(mut m) = ctx.recv(inp) else { break };
+                    m.b = m.b.wrapping_mul(31).wrapping_add(m.a);
+                    ctx.send(out, m).unwrap();
+                }
+            }
+            (Some(inp), None) => {
+                while let Some(m) = ctx.recv(inp) {
+                    debug_assert_eq!(m.a, self.received, "FIFO broken");
+                    self.received += 1;
+                    self.acc = self.acc.wrapping_mul(31).wrapping_add(m.b);
+                }
+            }
+            (None, None) => {}
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.seq);
+        h.write_u64(self.received);
+        h.write_u64(self.acc);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.seq >= self.limit
+    }
+
+    fn stats(&self, out: &mut crate::stats::StatsMap) {
+        out.add("pipe.delivered", self.received);
+    }
+}
+
+struct Pipeline;
+
+impl Scenario for Pipeline {
+    fn name(&self) -> &'static str {
+        "pipeline"
+    }
+
+    fn summary(&self) -> &'static str {
+        "linear sleep-capable pipeline; mixed port delays"
+    }
+
+    fn keys(&self) -> &'static [(&'static str, &'static str)] {
+        &[
+            ("stages", "pipeline length (default 8, min 2)"),
+            ("messages", "messages produced by the source (default 100)"),
+            ("cycles", "run exactly N cycles instead of draining"),
+            ("max-cycles", "drain cap (default 100k)"),
+        ]
+    }
+
+    fn build(&self, cfg: &Config) -> Result<(Model, Stop), String> {
+        let stages = cfg.get_usize("stages", 8)?.max(2);
+        let messages = cfg.get_u64("messages", 100)?;
+        let mut mb = ModelBuilder::new();
+        let ids: Vec<u32> = (0..stages)
+            .map(|i| mb.reserve_unit(&format!("p{i}")))
+            .collect();
+        let mut ports = Vec::new();
+        for i in 0..stages - 1 {
+            // Delays 1,2,3,1,... so in-flight messages regularly outlive a
+            // receiver's last tick (exercises the wake protocol).
+            let delay = 1 + (i as u64 % 3);
+            ports.push(mb.connect(ids[i], ids[i + 1], PortCfg::new(2, delay)));
+        }
+        for i in 0..stages {
+            let unit = PipeStage {
+                inp: if i == 0 { None } else { Some(ports[i - 1].1) },
+                out: if i == stages - 1 { None } else { Some(ports[i].0) },
+                seq: 0,
+                limit: if i == 0 { messages } else { 0 },
+                received: 0,
+                acc: 0,
+            };
+            mb.install(ids[i], Box::new(unit));
+        }
+        let model = mb.build()?;
+        let stop = stop_from(
+            cfg,
+            Stop::AllIdle {
+                check_every: 1,
+                max_cycles: cfg.get_u64("max-cycles", 100_000)?,
+            },
+        )?;
+        Ok((model, stop))
+    }
+}
+
+// ---------------------------------------------------------------------
+// cpu-light / cpu-ooo
+// ---------------------------------------------------------------------
+
+fn oltp_from(cfg: &Config, defaults: &OltpCfg) -> Result<OltpCfg, String> {
+    Ok(OltpCfg {
+        cores: cfg.get_usize("cores", defaults.cores)?,
+        rows: cfg.get_u64("rows", defaults.rows)?,
+        theta: cfg.get_f64("theta", defaults.theta)?,
+        txns_per_core: cfg.get_u64("txns", defaults.txns_per_core)?,
+        write_frac: cfg.get_f64("write-frac", defaults.write_frac)?,
+        index_depth: cfg.get_u64("index-depth", defaults.index_depth)?,
+        row_words: cfg.get_u64("row-words", defaults.row_words)?,
+        max_instrs_per_core: cfg.get_u64("max-instrs", defaults.max_instrs_per_core)?,
+        seed: cfg.get_u64("seed", defaults.seed)?,
+    })
+}
+
+fn cpu_build(
+    cfg: &Config,
+    kind: CoreKind,
+    oltp_defaults: &OltpCfg,
+    default_max_cycles: u64,
+) -> Result<(Model, Stop), String> {
+    let oltp = oltp_from(cfg, oltp_defaults)?;
+    let cores = oltp.cores;
+    let traces = match cfg.get("workload").unwrap_or("oltp") {
+        "oltp" => generate_oltp_traces(&oltp),
+        other => generate_spec_traces(
+            SpecKind::parse(other)?,
+            cores,
+            cfg.get_u64("spec-n", 500)?,
+            oltp.max_instrs_per_core,
+            oltp.seed,
+        ),
+    };
+    let sys = CpuSystemCfg {
+        kind,
+        ..Default::default()
+    };
+    let (model, h) = build_cpu_system(traces, &sys);
+    let stop = stop_from(
+        cfg,
+        Stop::CounterAtLeast {
+            counter: h.cores_done,
+            target: cores as u64,
+            max_cycles: cfg.get_u64("max-cycles", default_max_cycles)?,
+        },
+    )?;
+    Ok((model, stop))
+}
+
+struct CpuLight;
+
+impl Scenario for CpuLight {
+    fn name(&self) -> &'static str {
+        "cpu-light"
+    }
+
+    fn summary(&self) -> &'static str {
+        "light in-order multicore + coherent memory + NoC running OLTP (paper \u{a7}5.2)"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["cpu-system", "oltp-light"]
+    }
+
+    fn keys(&self) -> &'static [(&'static str, &'static str)] {
+        &[
+            ("cores", "simulated cores (default 32)"),
+            ("workload", "oltp | stream | chase | compute | branchy"),
+            ("txns", "transactions per core (default 300)"),
+            ("rows", "shared table rows (default 1024)"),
+            ("theta", "Zipf skew (default 0.6)"),
+            ("max-instrs", "instruction budget per core (default 300k)"),
+            ("seed", "workload seed (default 0xF12)"),
+            ("cycles / max-cycles", "stop overrides (default: all cores done, cap 5M)"),
+        ]
+    }
+
+    fn build(&self, cfg: &Config) -> Result<(Model, Stop), String> {
+        let defaults = OltpCfg {
+            cores: 32,
+            rows: 1024,
+            theta: 0.6,
+            txns_per_core: 300,
+            write_frac: 0.5,
+            index_depth: 2,
+            row_words: 2,
+            max_instrs_per_core: 300_000,
+            seed: 0xF12,
+        };
+        cpu_build(cfg, CoreKind::Light, &defaults, 5_000_000)
+    }
+}
+
+struct CpuOoo;
+
+impl Scenario for CpuOoo {
+    fn name(&self) -> &'static str {
+        "cpu-ooo"
+    }
+
+    fn summary(&self) -> &'static str {
+        "out-of-order multicore running OLTP or SPEC-like kernels (paper \u{a7}5.3)"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["ooo"]
+    }
+
+    fn keys(&self) -> &'static [(&'static str, &'static str)] {
+        &[
+            ("cores", "simulated cores (default 8)"),
+            ("workload", "oltp | stream | chase | compute | branchy"),
+            ("txns", "transactions per core (default 16)"),
+            ("max-instrs", "instruction budget per core (default 60k)"),
+            ("seed", "workload seed (default 0xF14)"),
+            ("cycles / max-cycles", "stop overrides (default: all cores done, cap 10M)"),
+        ]
+    }
+
+    fn build(&self, cfg: &Config) -> Result<(Model, Stop), String> {
+        let defaults = OltpCfg {
+            cores: 8,
+            txns_per_core: 16,
+            max_instrs_per_core: 60_000,
+            seed: 0xF14,
+            ..Default::default()
+        };
+        cpu_build(cfg, CoreKind::Ooo(OooCfg::default()), &defaults, 10_000_000)
+    }
+}
+
+// ---------------------------------------------------------------------
+// fat-tree
+// ---------------------------------------------------------------------
+
+struct FatTree;
+
+impl Scenario for FatTree {
+    fn name(&self) -> &'static str {
+        "fat-tree"
+    }
+
+    fn summary(&self) -> &'static str {
+        "k-ary fat-tree fabric moving pseudo-random packets (paper \u{a7}5.4)"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["datacenter", "fattree"]
+    }
+
+    fn keys(&self) -> &'static [(&'static str, &'static str)] {
+        &[
+            ("k", "switch radix, even (default 8; hosts = k^3/4)"),
+            ("packets", "total packets (default 20k)"),
+            ("window", "inject window in cycles (default packets/8)"),
+            ("buffer", "switch port buffer depth (default 8)"),
+            ("seed", "traffic seed (default 0xDC)"),
+            ("cycles / max-cycles", "stop overrides (default: all delivered, cap 50M)"),
+        ]
+    }
+
+    fn build(&self, cfg: &Config) -> Result<(Model, Stop), String> {
+        let packets = cfg.get_u64("packets", 20_000)?;
+        let k = cfg.get_u64("k", 8)? as u32;
+        // `build_fattree` asserts on a bad radix; keep CLI input on the
+        // Result path instead.
+        if k < 4 || k % 2 != 0 {
+            return Err(format!("fat-tree radix k must be even and >= 4, got {k}"));
+        }
+        let ft = FatTreeCfg {
+            k,
+            buffer: cfg.get_usize("buffer", 8)?,
+            link_delay: cfg.get_u64("link-delay", 1)?,
+            pipeline: cfg.get_u64("pipeline", 1)?,
+            traffic: TrafficCfg {
+                seed: cfg.get_u64("seed", 0xDC)?,
+                hosts: 0, // derived from k by the builder
+                packets,
+                inject_window: cfg.get_u64("window", (packets / 8).max(1))?,
+            },
+        };
+        let (model, h) = build_fattree(&ft);
+        let stop = stop_from(
+            cfg,
+            Stop::CounterAtLeast {
+                counter: h.delivered,
+                target: h.packets,
+                max_cycles: cfg.get_u64("max-cycles", 50_000_000)?,
+            },
+        )?;
+        Ok((model, stop))
+    }
+}
+
+// ---------------------------------------------------------------------
+// mesh
+// ---------------------------------------------------------------------
+
+/// Traffic endpoint attached to one mesh node: injects a fixed number of
+/// packets to pseudo-random destinations and counts arrivals.
+struct MeshEndpoint {
+    out: OutPort,
+    inp: InPort,
+    node: u32,
+    nodes: u32,
+    to_send: u64,
+    sent: u64,
+    received: u64,
+    delivered: crate::stats::counters::CounterId,
+    rng: Rng,
+}
+
+impl Unit for MeshEndpoint {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(_m) = ctx.recv(self.inp) {
+            self.received += 1;
+            ctx.counters.add(self.delivered, 1);
+        }
+        while self.sent < self.to_send && ctx.out_vacant(self.out) {
+            // Uniform destination, self excluded; the rng only advances on
+            // an actual send, so the stream is engine-order independent.
+            let mut dst = self.rng.gen_range((self.nodes - 1) as u64) as u32;
+            if dst >= self.node {
+                dst += 1;
+            }
+            let mut m = Msg::with(1, self.sent, 0, 0);
+            m.b = net_b(self.node, dst);
+            m.c = ctx.cycle;
+            ctx.send(self.out, m).unwrap();
+            self.sent += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.sent);
+        h.write_u64(self.received);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.sent >= self.to_send
+    }
+
+    fn stats(&self, out: &mut crate::stats::StatsMap) {
+        out.add("mesh.sent", self.sent);
+    }
+}
+
+struct MeshNoc;
+
+impl Scenario for MeshNoc {
+    fn name(&self) -> &'static str {
+        "mesh"
+    }
+
+    fn summary(&self) -> &'static str {
+        "2-D mesh NoC with a traffic endpoint per node (uniform random)"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["noc"]
+    }
+
+    fn keys(&self) -> &'static [(&'static str, &'static str)] {
+        &[
+            ("width / height", "mesh dimensions (default 4x4)"),
+            ("packets", "packets injected per node (default 64)"),
+            ("seed", "destination-stream seed (default 0x4E5)"),
+            ("cycles / max-cycles", "stop overrides (default: all delivered, cap 200k)"),
+        ]
+    }
+
+    fn build(&self, cfg: &Config) -> Result<(Model, Stop), String> {
+        let mesh_cfg = MeshCfg {
+            width: cfg.get_u64("width", 4)? as u32,
+            height: cfg.get_u64("height", 4)? as u32,
+            ..Default::default()
+        };
+        if mesh_cfg.width * mesh_cfg.height < 2 {
+            return Err("mesh needs at least 2 nodes".to_string());
+        }
+        let per_node = cfg.get_u64("packets", 64)?;
+        let seed = cfg.get_u64("seed", 0x4E5)?;
+        let nodes = mesh_cfg.width * mesh_cfg.height;
+        let mut mb = ModelBuilder::new();
+        let delivered = mb.counter("mesh.delivered");
+        let ep_ids: Vec<u32> = (0..nodes)
+            .map(|n| mb.reserve_unit(&format!("ep{n}")))
+            .collect();
+        let mut mesh = Mesh::build(&mut mb, mesh_cfg);
+        let mut ports = Vec::with_capacity(nodes as usize);
+        for n in 0..nodes {
+            ports.push(mesh.attach(&mut mb, n, ep_ids[n as usize]));
+        }
+        mesh.finish(&mut mb);
+        for (n, (to_net, from_net)) in ports.into_iter().enumerate() {
+            mb.install(
+                ep_ids[n],
+                Box::new(MeshEndpoint {
+                    out: to_net,
+                    inp: from_net,
+                    node: n as u32,
+                    nodes,
+                    to_send: per_node,
+                    sent: 0,
+                    received: 0,
+                    delivered,
+                    rng: Rng::from_seed_stream(seed, n as u64),
+                }),
+            );
+        }
+        let model = mb.build()?;
+        let stop = stop_from(
+            cfg,
+            Stop::CounterAtLeast {
+                counter: delivered,
+                target: nodes as u64 * per_node,
+                max_cycles: cfg.get_u64("max-cycles", 200_000)?,
+            },
+        )?;
+        Ok((model, stop))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Engine, RunOpts, Sim};
+
+    #[test]
+    fn registry_finds_names_and_aliases() {
+        assert_eq!(names(), vec!["pipeline", "cpu-light", "cpu-ooo", "fat-tree", "mesh"]);
+        assert_eq!(find("cpu-system").unwrap().name(), "cpu-light");
+        assert_eq!(find("datacenter").unwrap().name(), "fat-tree");
+        assert!(find("bogus").is_err());
+        assert!(!list_lines().is_empty());
+    }
+
+    #[test]
+    fn fat_tree_rejects_bad_radix_without_panicking() {
+        for k in ["7", "2", "0"] {
+            let mut cfg = Config::new();
+            cfg.set("k", k);
+            let err = find("fat-tree").unwrap().build(&cfg).unwrap_err();
+            assert!(err.contains("radix"), "k={k}: {err}");
+        }
+    }
+
+    #[test]
+    fn pipeline_scenario_drains() {
+        let mut cfg = Config::new();
+        cfg.set("stages", 5);
+        cfg.set("messages", 20);
+        let (mut model, stop) = find("pipeline").unwrap().build(&cfg).unwrap();
+        let stats = model.run_serial(RunOpts::with_stop(stop));
+        assert_eq!(stats.counters.get("pipe.delivered"), 20);
+        assert!(stats.cycles < 100_000, "AllIdle must fire: {}", stats.cycles);
+    }
+
+    #[test]
+    fn mesh_scenario_delivers_everything_in_parallel() {
+        let mut cfg = Config::new();
+        cfg.set("width", 2);
+        cfg.set("height", 2);
+        cfg.set("packets", 10);
+        let serial = Sim::scenario("mesh", &cfg)
+            .unwrap()
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(serial.stats.counters.get("mesh.delivered"), 40);
+        let ladder = Sim::scenario("mesh", &cfg)
+            .unwrap()
+            .workers(2)
+            .fingerprinted()
+            .engine(Engine::Ladder)
+            .run()
+            .unwrap();
+        assert_eq!(ladder.fingerprint(), serial.fingerprint());
+        assert_eq!(ladder.stats.cycles, serial.stats.cycles);
+    }
+
+    #[test]
+    fn scenario_session_profiles_scratch_for_cost_balanced() {
+        use crate::sched::PartitionStrategy;
+        let mut cfg = Config::new();
+        cfg.set("stages", 6);
+        cfg.set("messages", 30);
+        let reference = Sim::scenario("pipeline", &cfg)
+            .unwrap()
+            .fingerprinted()
+            .run()
+            .unwrap();
+        let r = Sim::scenario("pipeline", &cfg)
+            .unwrap()
+            .workers(2)
+            .strategy(PartitionStrategy::CostBalanced)
+            .profile_cycles(30)
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(r.fingerprint(), reference.fingerprint());
+        assert_eq!(r.scenario.as_deref(), Some("pipeline"));
+    }
+}

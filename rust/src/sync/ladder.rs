@@ -279,9 +279,10 @@ impl LadderGates {
     }
 }
 
-/// Options for a parallel (ladder) run.
+/// Options for a parallel (ladder) run. Crate-internal: public callers
+/// configure the equivalent knobs on `engine::Sim`.
 #[derive(Debug, Clone, Copy)]
-pub struct ParallelOpts {
+pub(crate) struct ParallelOpts {
     pub method: SyncMethod,
     pub spin: SpinMode,
     pub run: RunOpts,
@@ -307,7 +308,11 @@ impl ParallelOpts {
 /// worker ticks only its awake units and wakes sleepers through the
 /// cluster-to-cluster boxes of `engine::active` (the serial engine runs
 /// the very same protocol, so all four engine/mode combinations agree).
-pub fn run_ladder(model: &mut Model, partition: &[Vec<u32>], opts: &ParallelOpts) -> RunStats {
+pub(crate) fn run_ladder(
+    model: &mut Model,
+    partition: &[Vec<u32>],
+    opts: &ParallelOpts,
+) -> RunStats {
     let workers = partition.len();
     assert!(workers >= 1, "need at least one worker cluster");
     let gates = LadderGates::new(opts.method, workers, opts.spin);

@@ -6,5 +6,9 @@ pub mod bench;
 pub mod ladder;
 pub mod syncpoint;
 
-pub use ladder::{run_ladder, LadderGates, ParallelOpts};
+pub use ladder::LadderGates;
 pub use syncpoint::{Gate, SpinMode, SyncMethod};
+
+// The raw ladder entry point is an engine internal: the public way to run
+// a parallel simulation is the `Sim` facade (`crate::engine::sim`).
+pub(crate) use ladder::{run_ladder, ParallelOpts};

@@ -49,6 +49,21 @@ impl SpinMode {
             SpinMode::Yield => std::thread::yield_now(),
         }
     }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "pure" => Ok(SpinMode::Pure),
+            "yield" => Ok(SpinMode::Yield),
+            _ => Err(format!("unknown spin mode {s:?}; expected yield|pure")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpinMode::Pure => "pure",
+            SpinMode::Yield => "yield",
+        }
+    }
 }
 
 /// The sync-point gate interface (paper: lock / unlock / wait).

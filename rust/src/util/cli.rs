@@ -3,7 +3,13 @@
 //! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
 //! arguments. Each subcommand of the `scalesim` binary declares the options
 //! it understands; unknown options are an error so typos fail loudly.
+//!
+//! [`Cmd`] is the merged view every subcommand actually wants: CLI
+//! arguments layered over an optional `--config file.toml`
+//! ([`super::config::Config`]), with typed accessors that fall back
+//! args → file → default.
 
+use super::config::Config;
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Default)]
@@ -106,6 +112,101 @@ impl Args {
     }
 }
 
+/// A subcommand's merged option view: CLI arguments override values from
+/// the `--config` file (which every subcommand accepts implicitly).
+#[derive(Debug, Clone, Default)]
+pub struct Cmd {
+    args: Args,
+    file: Config,
+}
+
+impl Cmd {
+    /// Parse `argv` with the subcommand's declared options/flags. The
+    /// `config` option is added automatically; when present, the file is
+    /// loaded so its values back the typed accessors.
+    pub fn parse(
+        argv: &[String],
+        known_opts: &[&str],
+        known_flags: &[&str],
+    ) -> Result<Self, String> {
+        let mut opts: Vec<&str> = known_opts.to_vec();
+        if !opts.contains(&"config") {
+            opts.push("config");
+        }
+        let args = Args::parse(argv, &opts, known_flags)?;
+        let file = match args.get("config") {
+            Some(path) => Config::from_file(std::path::Path::new(path))?,
+            None => Config::new(),
+        };
+        Ok(Cmd { args, file })
+    }
+
+    /// CLI value if given, else the config-file value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.args.get(name).or_else(|| self.file.get(name))
+    }
+
+    /// CLI value only — no config-file fallback. For options whose file
+    /// form is consumed elsewhere (e.g. scenario keys) and must not be
+    /// re-applied as a CLI override.
+    pub fn from_cli(&self, name: &str) -> Option<&str> {
+        self.args.get(name)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_u64(v).map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.get_u64(name, default as u64).map(|v| v as usize)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<f64>().map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    /// Comma-separated list of counts (`--workers 1,2,4`), args over file
+    /// over `default`.
+    pub fn get_list(&self, name: &str, default: &str) -> Result<Vec<usize>, String> {
+        parse_usize_list(self.get_or(name, default)).map_err(|e| format!("--{name}: {e}"))
+    }
+
+    /// True when the flag was passed on the CLI or set truthy in the file.
+    pub fn flag(&self, name: &str) -> Result<bool, String> {
+        if self.args.flag(name) {
+            return Ok(true);
+        }
+        self.file.get_bool(name, false)
+    }
+
+    /// The underlying config file contents (for scenario key passthrough).
+    pub fn file_config(&self) -> &Config {
+        &self.file
+    }
+
+    pub fn positional(&self) -> &[String] {
+        self.args.positional()
+    }
+}
+
+/// Parse a comma-separated list of counts (`1,2,4,8`), with the same
+/// suffix/underscore liberties as [`parse_u64`].
+pub fn parse_usize_list(s: &str) -> Result<Vec<usize>, String> {
+    s.split(',')
+        .map(|t| parse_u64(t.trim()).map(|v| v as usize))
+        .collect()
+}
+
 /// Parse a u64 allowing `_` separators and `k`/`m`/`g` suffixes
 /// (e.g. `128k`, `3m`, `1_000_000`).
 pub fn parse_u64(s: &str) -> Result<u64, String> {
@@ -166,5 +267,40 @@ mod tests {
         let a = Args::parse(&sv(&[]), &["cycles"], &[]).unwrap();
         assert_eq!(a.get_u64("cycles", 77).unwrap(), 77);
         assert_eq!(a.get_or("cycles", "d"), "d");
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        assert_eq!(parse_usize_list("1, 2,4").unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_usize_list("2k").unwrap(), vec![2000]);
+        assert!(parse_usize_list("1,x").is_err());
+    }
+
+    #[test]
+    fn cmd_merges_cli_over_file() {
+        let dir = std::env::temp_dir().join("scalesim_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cmd.toml");
+        std::fs::write(&path, "cycles = 100\nworkers = \"1,2\"\nsmoke = true\n").unwrap();
+        let argv = sv(&[
+            "--cycles",
+            "200",
+            "--config",
+            path.to_str().unwrap(),
+        ]);
+        let c = Cmd::parse(&argv, &["cycles", "workers"], &["smoke"]).unwrap();
+        // CLI wins over file; file backs what the CLI omits.
+        assert_eq!(c.get_u64("cycles", 0).unwrap(), 200);
+        assert_eq!(c.get_list("workers", "9").unwrap(), vec![1, 2]);
+        assert!(c.flag("smoke").unwrap(), "file-set flag is honoured");
+        assert_eq!(c.get_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn cmd_without_config_uses_defaults() {
+        let c = Cmd::parse(&sv(&[]), &["cycles"], &["v"]).unwrap();
+        assert_eq!(c.get_u64("cycles", 7).unwrap(), 7);
+        assert!(!c.flag("v").unwrap());
+        assert_eq!(c.get_list("workers", "1,2").unwrap(), vec![1, 2]);
     }
 }

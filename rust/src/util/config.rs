@@ -5,6 +5,8 @@
 //! flatten to `section.key`. Values are strings, integers, floats or bools;
 //! everything is kept as a string and converted on access, mirroring the
 //! CLI layer so the two can be merged (CLI overrides file).
+//!
+//! Parse with the standard trait: `text.parse::<Config>()`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -14,20 +16,39 @@ pub struct Config {
     values: BTreeMap<String, String>,
 }
 
-impl Config {
-    pub fn new() -> Self {
-        Self::default()
+/// Strip a `#` comment, honouring double quotes: a `#` inside a quoted
+/// value is part of the value.
+fn strip_comment(line: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &line[..i],
+            _ => {}
+        }
     }
+    line
+}
 
-    /// Parse from TOML-subset text. Comments start with `#`.
-    pub fn from_str(text: &str) -> Result<Self, String> {
+/// Remove one pair of surrounding double quotes, if present.
+fn unquote(v: &str) -> &str {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        &v[1..v.len() - 1]
+    } else {
+        v
+    }
+}
+
+impl std::str::FromStr for Config {
+    type Err = String;
+
+    /// Parse from TOML-subset text. Comments start with `#` (outside
+    /// quotes).
+    fn from_str(text: &str) -> Result<Self, String> {
         let mut cfg = Config::new();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
-            let line = match raw.split_once('#') {
-                Some((body, _)) => body.trim(),
-                None => raw.trim(),
-            };
+            let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
@@ -46,16 +67,22 @@ impl Config {
             } else {
                 format!("{}.{}", section, k.trim())
             };
-            let val = v.trim().trim_matches('"').to_string();
+            let val = unquote(v.trim()).to_string();
             cfg.values.insert(key, val);
         }
         Ok(cfg)
+    }
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
     }
 
     pub fn from_file(path: &Path) -> Result<Self, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("read {}: {e}", path.display()))?;
-        Self::from_str(&text)
+        text.parse()
     }
 
     pub fn set(&mut self, key: &str, val: impl ToString) {
@@ -109,9 +136,13 @@ impl Config {
 mod tests {
     use super::*;
 
+    fn parse(text: &str) -> Result<Config, String> {
+        text.parse()
+    }
+
     #[test]
     fn parses_sections_and_types() {
-        let cfg = Config::from_str(
+        let cfg = parse(
             r#"
             # top comment
             seed = 42
@@ -132,8 +163,8 @@ mod tests {
 
     #[test]
     fn overlay_wins() {
-        let mut a = Config::from_str("x = 1\ny = 2").unwrap();
-        let b = Config::from_str("y = 3").unwrap();
+        let mut a = parse("x = 1\ny = 2").unwrap();
+        let b = parse("y = 3").unwrap();
         a.overlay(&b);
         assert_eq!(a.get_u64("x", 0).unwrap(), 1);
         assert_eq!(a.get_u64("y", 0).unwrap(), 3);
@@ -141,10 +172,48 @@ mod tests {
 
     #[test]
     fn errors_are_reported() {
-        assert!(Config::from_str("[bad").is_err());
-        assert!(Config::from_str("novalue").is_err());
-        let cfg = Config::from_str("z = zz").unwrap();
+        assert!(parse("[bad").is_err());
+        assert!(parse("novalue").is_err());
+        let cfg = parse("z = zz").unwrap();
         assert!(cfg.get_u64("z", 0).is_err());
         assert!(cfg.get_bool("z", false).is_err());
+    }
+
+    #[test]
+    fn hash_inside_quotes_is_not_a_comment() {
+        let cfg = parse("label = \"a#b\"  # real comment\n").unwrap();
+        assert_eq!(cfg.get("label"), Some("a#b"));
+        // Unquoted values still end at the comment marker.
+        let cfg = parse("label = ab # comment").unwrap();
+        assert_eq!(cfg.get("label"), Some("ab"));
+    }
+
+    #[test]
+    fn unquoting_removes_exactly_one_pair() {
+        let cfg = parse("a = \"\"\nb = \"\"quoted\"\"\nc = \"").unwrap();
+        assert_eq!(cfg.get("a"), Some(""));
+        // Only the outer pair is stripped.
+        assert_eq!(cfg.get("b"), Some("\"quoted\""));
+        // A lone quote is preserved verbatim.
+        assert_eq!(cfg.get("c"), Some("\""));
+    }
+
+    #[test]
+    fn malformed_numbers_and_bools_error_with_key() {
+        let cfg = parse("n = 12x\nb = tru").unwrap();
+        let e = cfg.get_u64("n", 0).unwrap_err();
+        assert!(e.contains("n:"), "{e}");
+        let e = cfg.get_bool("b", false).unwrap_err();
+        assert!(e.contains("b:"), "{e}");
+        let e = cfg.get_f64("n", 0.0).unwrap_err();
+        assert!(e.contains("n:"), "{e}");
+    }
+
+    #[test]
+    fn fromstr_trait_is_implemented() {
+        // `str::parse` goes through `std::str::FromStr` — the clippy
+        // `should_implement_trait` shape.
+        let cfg: Config = "k = v".parse().unwrap();
+        assert_eq!(cfg.get("k"), Some("v"));
     }
 }

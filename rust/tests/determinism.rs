@@ -13,11 +13,11 @@
 //! failure).
 
 use scalesim::engine::{
-    Ctx, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RunOpts, SchedMode, Stop,
-    Unit,
+    Ctx, Engine, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RunOpts, SchedMode,
+    Sim, Stop, Unit,
 };
-use scalesim::sched::{partition, PartitionStrategy};
-use scalesim::sync::{run_ladder, ParallelOpts, SyncMethod};
+use scalesim::sched::PartitionStrategy;
+use scalesim::sync::SyncMethod;
 use scalesim::util::rng::Rng;
 
 /// A randomized unit: every cycle it may consume from each input, do some
@@ -145,13 +145,16 @@ fn parallel_equals_serial_over_random_models() {
                     PartitionStrategy::Locality,
                     PartitionStrategy::CostBalanced,
                 ] {
-                    let mut m = random_model(seed, n, 6);
-                    let part = partition(&m, workers, strat);
-                    let stats = run_ladder(
-                        &mut m,
-                        &part,
-                        &ParallelOpts::new(method, RunOpts::cycles(cycles).fingerprinted()),
-                    );
+                    let stats = Sim::from_model(random_model(seed, n, 6))
+                        .workers(workers)
+                        .strategy(strat)
+                        .sync(method)
+                        .cycles(cycles)
+                        .fingerprinted()
+                        .engine(Engine::Ladder)
+                        .run()
+                        .expect("ladder run")
+                        .stats;
                     assert_eq!(
                         stats.fingerprint, serial.fingerprint,
                         "seed={seed} method={} workers={workers} strat={}",
@@ -372,16 +375,17 @@ fn sleep_capable_pipeline_full_matrix() {
                 PartitionStrategy::CostBalanced,
             ] {
                 for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
-                    let mut m = sleepy_pipeline(n, 60);
-                    let part = partition(&m, workers, strat);
-                    let stats = run_ladder(
-                        &mut m,
-                        &part,
-                        &ParallelOpts::new(
-                            method,
-                            RunOpts::cycles(cycles).fingerprinted().with_sched(sched),
-                        ),
-                    );
+                    let stats = Sim::from_model(sleepy_pipeline(n, 60))
+                        .workers(workers)
+                        .strategy(strat)
+                        .sync(method)
+                        .sched(sched)
+                        .cycles(cycles)
+                        .fingerprinted()
+                        .engine(Engine::Ladder)
+                        .run()
+                        .expect("ladder run")
+                        .stats;
                     assert_eq!(
                         stats.fingerprint,
                         reference.fingerprint,
@@ -458,21 +462,23 @@ fn sleep_capable_cpu_system_matrix() {
                 PartitionStrategy::CostBalanced,
             ] {
                 for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
-                    let (mut m, h) = build_cpu_system(mk_traces(), &cfg);
+                    let (m, h) = build_cpu_system(mk_traces(), &cfg);
                     let stop = Stop::CounterAtLeast {
                         counter: h.cores_done,
                         target: 4,
                         max_cycles: 100_000,
                     };
-                    let part = partition(&m, workers, strat);
-                    let stats = run_ladder(
-                        &mut m,
-                        &part,
-                        &ParallelOpts::new(
-                            method,
-                            RunOpts::with_stop(stop).fingerprinted().with_sched(sched),
-                        ),
-                    );
+                    let stats = Sim::from_model(m)
+                        .workers(workers)
+                        .strategy(strat)
+                        .sync(method)
+                        .sched(sched)
+                        .stop(stop)
+                        .fingerprinted()
+                        .engine(Engine::Ladder)
+                        .run()
+                        .expect("ladder run")
+                        .stats;
                     assert_eq!(
                         stats.fingerprint,
                         reference.fingerprint,
@@ -491,14 +497,16 @@ fn sleep_capable_cpu_system_matrix() {
 #[test]
 fn sync_ops_scale_with_workers_not_model_size() {
     let count_ops = |units: usize, workers: usize| {
-        let mut m = random_model(3, units, 4);
-        let part = partition(&m, workers, PartitionStrategy::RoundRobin);
-        run_ladder(
-            &mut m,
-            &part,
-            &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::cycles(100)),
-        )
-        .sync_ops
+        Sim::from_model(random_model(3, units, 4))
+            .workers(workers)
+            .strategy(PartitionStrategy::RoundRobin)
+            .sync(SyncMethod::CommonAtomic)
+            .cycles(100)
+            .engine(Engine::Ladder)
+            .run()
+            .expect("ladder run")
+            .stats
+            .sync_ops
     };
     let small = count_ops(6, 2);
     let large = count_ops(24, 2);

@@ -5,9 +5,9 @@
 //! the paper's headline determinism claim on those systems.
 
 use scalesim::cpu::ooo::OooCfg;
-use scalesim::engine::{RunOpts, Stop};
-use scalesim::sched::{partition, PartitionStrategy};
-use scalesim::sync::{run_ladder, ParallelOpts, SyncMethod};
+use scalesim::engine::{Engine, RunOpts, Sim, Stop};
+use scalesim::sched::PartitionStrategy;
+use scalesim::sync::SyncMethod;
 use scalesim::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
 use scalesim::workload::{generate_oltp_traces, generate_spec_traces, OltpCfg, SpecKind};
 
@@ -94,18 +94,22 @@ fn ooo_system_parallel_matches_serial() {
         max_cycles: 2_000_000,
     };
     let s = serial.run_serial(RunOpts::with_stop(stop).fingerprinted());
-    let (mut par, h2) = mk();
+    let (par, h2) = mk();
     let stop2 = Stop::CounterAtLeast {
         counter: h2.cores_done,
         target: 4,
         max_cycles: 2_000_000,
     };
-    let part = partition(&par, 3, PartitionStrategy::Contiguous);
-    let p = run_ladder(
-        &mut par,
-        &part,
-        &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::with_stop(stop2).fingerprinted()),
-    );
+    let p = Sim::from_model(par)
+        .workers(3)
+        .strategy(PartitionStrategy::Contiguous)
+        .sync(SyncMethod::CommonAtomic)
+        .stop(stop2)
+        .fingerprinted()
+        .engine(Engine::Ladder)
+        .run()
+        .expect("ladder run")
+        .stats;
     assert_eq!(p.fingerprint, s.fingerprint);
     assert_eq!(p.cycles, s.cycles);
     assert_eq!(

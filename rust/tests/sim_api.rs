@@ -1,0 +1,135 @@
+//! Facade-level tests (ISSUE 2): the `Sim` session API must reproduce the
+//! pre-facade direct calls byte-for-byte, and the scenario registry must
+//! be reachable from the CLI.
+//!
+//! The serial reference (`Model::run_serial`) is still public — it *is*
+//! the pre-facade direct call — so each test builds the same scenario
+//! model twice, runs one instance directly, one through `Sim`, and
+//! compares fingerprints.
+
+use scalesim::engine::{Engine, RunOpts, SchedMode, Sim};
+use scalesim::scenario;
+use scalesim::sched::PartitionStrategy;
+use scalesim::sync::SyncMethod;
+use scalesim::util::config::Config;
+
+fn config(pairs: &[(&str, &str)]) -> Config {
+    let mut c = Config::new();
+    for &(k, v) in pairs {
+        c.set(k, v);
+    }
+    c
+}
+
+#[test]
+fn sim_reproduces_direct_serial_on_pipeline() {
+    let cfg = config(&[("stages", "6"), ("messages", "40")]);
+    // Pre-facade direct call: build the scenario's model and drive the
+    // serial reference engine by hand.
+    let (mut direct, stop) = scenario::find("pipeline").unwrap().build(&cfg).unwrap();
+    let reference = direct.run_serial(RunOpts::with_stop(stop).fingerprinted());
+    assert!(reference.fingerprint != 0);
+
+    // The facade, across engines, workers, and scheduling modes, must
+    // produce the identical fingerprint.
+    for engine in [Engine::Serial, Engine::Partitioned, Engine::Ladder] {
+        for workers in [1usize, 2, 3] {
+            for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
+                let report = Sim::scenario("pipeline", &cfg)
+                    .unwrap()
+                    .workers(workers)
+                    .sched(sched)
+                    .fingerprinted()
+                    .engine(engine)
+                    .run()
+                    .unwrap();
+                assert_eq!(
+                    report.fingerprint(),
+                    reference.fingerprint,
+                    "engine={} workers={workers} sched={}",
+                    report.engine,
+                    sched.name()
+                );
+                assert_eq!(report.stats.cycles, reference.cycles);
+            }
+        }
+    }
+}
+
+#[test]
+fn sim_reproduces_direct_serial_on_cpu_system() {
+    let cfg = config(&[
+        ("cores", "2"),
+        ("txns", "8"),
+        ("max-instrs", "20000"),
+        ("max-cycles", "200000"),
+    ]);
+    let (mut direct, stop) = scenario::find("cpu-system").unwrap().build(&cfg).unwrap();
+    let reference = direct.run_serial(RunOpts::with_stop(stop).fingerprinted());
+    assert_eq!(reference.counters.get("cores_done"), 2);
+
+    for (workers, strategy) in [
+        (2usize, PartitionStrategy::Contiguous),
+        (3, PartitionStrategy::CostBalanced),
+    ] {
+        let report = Sim::scenario("cpu-system", &cfg)
+            .unwrap()
+            .workers(workers)
+            .strategy(strategy)
+            .sync(SyncMethod::CommonAtomic)
+            .fingerprinted()
+            .engine(Engine::Ladder)
+            .run()
+            .unwrap();
+        assert_eq!(
+            report.fingerprint(),
+            reference.fingerprint,
+            "workers={workers} strategy={}",
+            strategy.name()
+        );
+        assert_eq!(report.stats.cycles, reference.cycles);
+        // The alias resolves to the canonical registry name.
+        assert_eq!(report.scenario.as_deref(), Some("cpu-light"));
+    }
+}
+
+#[test]
+fn list_scenarios_cli_smoke() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_scalesim"))
+        .args(["run", "--list-scenarios"])
+        .output()
+        .expect("spawn scalesim");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for name in ["pipeline", "cpu-light", "cpu-ooo", "fat-tree", "mesh"] {
+        assert!(stdout.contains(name), "{name} missing from:\n{stdout}");
+    }
+}
+
+#[test]
+fn run_scenario_cli_smoke() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_scalesim"))
+        .args([
+            "run",
+            "--scenario",
+            "pipeline",
+            "--set",
+            "stages=4,messages=10",
+            "--workers",
+            "2",
+            "--fingerprint",
+        ])
+        .output()
+        .expect("spawn scalesim");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("ladder"), "engine line missing:\n{stdout}");
+    assert!(stdout.contains("fingerprint"), "fingerprint missing:\n{stdout}");
+}
+
+#[test]
+fn unknown_scenario_is_a_clean_error() {
+    let err = Sim::scenario("nope", &Config::new()).err().unwrap();
+    assert!(err.contains("unknown scenario"), "{err}");
+    assert!(err.contains("pipeline"), "suggests the registry: {err}");
+}

@@ -10,10 +10,11 @@
 //! multi-hop chains, and cross-cluster parallel runs.
 
 use scalesim::engine::{
-    Ctx, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RunOpts, Stop, Unit,
+    Ctx, Engine, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RunOpts, Sim, Stop,
+    Unit,
 };
 use scalesim::stats::StatsMap;
-use scalesim::sync::{run_ladder, ParallelOpts, SyncMethod};
+use scalesim::sync::SyncMethod;
 
 /// Sends one message at each scheduled cycle (retrying under back
 /// pressure). Not idle until the whole schedule has been sent, so it
@@ -176,15 +177,16 @@ fn wake_crosses_cluster_boundary() {
         for method in SyncMethod::ALL {
             // src and snk on different clusters: the wake must travel
             // through the cross-cluster box, ordered by the phase barrier.
-            let mut m = burst_model(delay);
-            let stats = run_ladder(
-                &mut m,
-                &[vec![0], vec![1]],
-                &ParallelOpts::new(
-                    method,
-                    RunOpts::cycles(120).fingerprinted().active_list(),
-                ),
-            );
+            let stats = Sim::from_model(burst_model(delay))
+                .partition(vec![vec![0], vec![1]])
+                .sync(method)
+                .cycles(120)
+                .fingerprinted()
+                .active_list()
+                .engine(Engine::Ladder)
+                .run()
+                .expect("ladder run")
+                .stats;
             assert_eq!(
                 stats.fingerprint,
                 serial_fp,
@@ -211,15 +213,16 @@ fn wake_propagates_along_chain() {
 
         // One cluster per unit in parallel: every hop is a cross-cluster
         // wake.
-        let mut par = chain_model(delay);
-        let p = run_ladder(
-            &mut par,
-            &[vec![0], vec![1], vec![2]],
-            &ParallelOpts::new(
-                SyncMethod::CommonAtomic,
-                RunOpts::with_stop(all_idle()).fingerprinted().active_list(),
-            ),
-        );
+        let p = Sim::from_model(chain_model(delay))
+            .partition(vec![vec![0], vec![1], vec![2]])
+            .sync(SyncMethod::CommonAtomic)
+            .stop(all_idle())
+            .fingerprinted()
+            .active_list()
+            .engine(Engine::Ladder)
+            .run()
+            .expect("ladder run")
+            .stats;
         assert_eq!(p.fingerprint, r.fingerprint, "delay={delay} parallel");
         assert_eq!(p.counters.get("sink.received"), 4, "delay={delay}");
     }
@@ -293,15 +296,16 @@ fn simultaneous_wakes_from_two_senders_collapse() {
     // Parallel: both senders on one cluster, sink on another, then one
     // cluster each.
     for part in [vec![vec![0, 1], vec![2]], vec![vec![0], vec![1], vec![2]]] {
-        let mut par = build();
-        let p = run_ladder(
-            &mut par,
-            &part,
-            &ParallelOpts::new(
-                SyncMethod::CommonAtomic,
-                RunOpts::with_stop(all_idle()).fingerprinted().active_list(),
-            ),
-        );
+        let p = Sim::from_model(build())
+            .partition(part.clone())
+            .sync(SyncMethod::CommonAtomic)
+            .stop(all_idle())
+            .fingerprinted()
+            .active_list()
+            .engine(Engine::Ladder)
+            .run()
+            .expect("ladder run")
+            .stats;
         assert_eq!(p.fingerprint, r.fingerprint, "partition {part:?}");
     }
 }
