@@ -35,8 +35,16 @@ fn main() {
 
     // Active-unit scheduling trajectory: full matrix, recorded as JSON so
     // successive PRs can diff cycles/sec, sync ops, and active ratio.
+    // Ladder rows run with adaptive repartitioning on (interval 256) so
+    // the trajectory tracks the rebalancing ladder; serial rows stay the
+    // fixed reference the fingerprints are checked against.
     println!("\n# sleep/wake scheduling matrix (BENCH_ladder.json)...");
-    let bench = bench_json::run_oltp_light(cores, &workers, None);
+    let bench = bench_json::run_oltp_light(
+        cores,
+        &workers,
+        None,
+        Some(scalesim::engine::RepartitionPolicy::every(256)),
+    );
     bench_json::print(&bench);
     assert!(
         bench.fingerprints_agree(),

@@ -27,6 +27,21 @@
 //! posts a wake. `tests/wakeup.rs` stresses case (b) with multi-cycle port
 //! delays.
 //!
+//! # Transfer-phase sleep/wake (port parking)
+//!
+//! The same idea applies to the transfer phase: a port whose receiver
+//! queue is full cannot move anything, yet the dirty-list walk would
+//! retry it every cycle for as long as the receiver stalls. Instead the
+//! sender's cluster **parks** the port (sets `port_blocked`, drops it
+//! from its dirty list). The receiver's first `recv` that frees a slot —
+//! the full → not-full transition — posts the port id into a vacancy box
+//! addressed to the *sender's* cluster, which drains its boxes at the
+//! start of its next transfer phase and re-adds the port. A parked port's
+//! receiver queue is full, hence non-empty, so the receiving unit itself
+//! can never be asleep — the vacancy can only come from an awake unit's
+//! `recv`, and transfer could not have progressed any earlier than that
+//! `recv` anyway, so parking is observably free.
+//!
 //! # Ownership / safety model
 //!
 //! The same phase-ownership discipline as `engine::port` (no locks, no
@@ -40,6 +55,19 @@
 //!   transfer phase and drained only by cluster `dst` during the next
 //!   work phase; each (src, dst) pair has its own box, so every box has
 //!   exactly one writer and one reader per phase.
+//! - `port_blocked[p]` is written only during transfer phases: set by the
+//!   sender's cluster when parking, cleared by the same cluster when
+//!   draining the vacancy wake. It is read during work phases (by the
+//!   receiver's `recv`), with the phase barrier ordering the handoff.
+//! - `port_boxes[src → dst]` is written only by cluster `src` during the
+//!   work phase and drained only by cluster `dst` during the *same*
+//!   cycle's transfer phase (work → transfer barrier in between) — the
+//!   unit-wake discipline with the phases shifted by half a cycle.
+//! - `cluster_of[u]` is rewritten only by the global scheduler while
+//!   every worker is parked at the cycle barrier (adaptive
+//!   repartitioning, `engine::repart`), and read by workers during work
+//!   and transfer phases. The barrier gates provide the happens-before
+//!   edges in both directions.
 
 use std::cell::UnsafeCell;
 
@@ -72,15 +100,24 @@ impl SchedMode {
     }
 }
 
-/// Shared sleep flags and cluster-to-cluster wake boxes for one run.
+/// Shared sleep flags, cluster-to-cluster wake boxes, the port-parking
+/// state, and the (migration-mutable) unit→cluster ownership table for
+/// one run.
 pub(crate) struct ActiveState {
     /// `asleep[u]`: unit `u` is parked. See module docs for ownership.
     asleep: Vec<UnsafeCell<bool>>,
-    /// Owning cluster of each unit.
-    cluster_of: Vec<u32>,
+    /// Owning cluster of each unit. Plain reads during phases; rewritten
+    /// only by the scheduler at a cycle barrier (repartitioning).
+    cluster_of: Vec<UnsafeCell<u32>>,
     /// `boxes[src * clusters + dst]`: wake requests posted by cluster
     /// `src` for units owned by cluster `dst`.
     boxes: Vec<UnsafeCell<Vec<u32>>>,
+    /// `port_blocked[p]`: port `p` is parked out of its sender's dirty
+    /// list, waiting for a receiver-side vacancy wake.
+    port_blocked: Vec<UnsafeCell<bool>>,
+    /// `port_boxes[src * clusters + dst]`: vacancy wakes posted by the
+    /// *receiver's* cluster `src` for ports whose sender lives on `dst`.
+    port_boxes: Vec<UnsafeCell<Vec<u32>>>,
     clusters: usize,
 }
 
@@ -89,7 +126,7 @@ pub(crate) struct ActiveState {
 unsafe impl Sync for ActiveState {}
 
 impl ActiveState {
-    pub(crate) fn new(partition: &[Vec<u32>], n_units: usize) -> Self {
+    pub(crate) fn new(partition: &[Vec<u32>], n_units: usize, n_ports: usize) -> Self {
         let clusters = partition.len();
         let mut cluster_of = vec![0u32; n_units];
         for (c, units) in partition.iter().enumerate() {
@@ -99,12 +136,40 @@ impl ActiveState {
         }
         ActiveState {
             asleep: (0..n_units).map(|_| UnsafeCell::new(false)).collect(),
-            cluster_of,
+            cluster_of: cluster_of.into_iter().map(UnsafeCell::new).collect(),
             boxes: (0..clusters * clusters)
+                .map(|_| UnsafeCell::new(Vec::new()))
+                .collect(),
+            port_blocked: (0..n_ports).map(|_| UnsafeCell::new(false)).collect(),
+            port_boxes: (0..clusters * clusters)
                 .map(|_| UnsafeCell::new(Vec::new()))
                 .collect(),
             clusters,
         }
+    }
+
+    pub(crate) fn clusters(&self) -> usize {
+        self.clusters
+    }
+
+    /// Owning cluster of unit `u`.
+    ///
+    /// # Safety
+    /// Caller must be inside a phase (the table is only rewritten at
+    /// barriers) or hold exclusivity.
+    #[inline]
+    pub(crate) unsafe fn cluster_of(&self, u: u32) -> u32 {
+        *self.cluster_of[u as usize].get()
+    }
+
+    /// Reassign unit `u` to cluster `c` (adaptive repartitioning).
+    ///
+    /// # Safety
+    /// Caller must be the scheduler with every worker parked at the
+    /// cycle barrier.
+    #[inline]
+    pub(crate) unsafe fn set_cluster(&self, u: u32, c: u32) {
+        *self.cluster_of[u as usize].get() = c;
     }
 
     /// Park unit `u`.
@@ -133,7 +198,7 @@ impl ActiveState {
     /// Caller must be cluster `src`'s thread, inside the transfer phase.
     #[inline]
     pub(crate) unsafe fn post_wake(&self, src: usize, u: u32) {
-        let dst = self.cluster_of[u as usize] as usize;
+        let dst = self.cluster_of(u) as usize;
         (*self.boxes[src * self.clusters + dst].get()).push(u);
     }
 
@@ -158,6 +223,80 @@ impl ActiveState {
             b.clear();
         }
     }
+
+    /// Apply every pending unit wake directly (un-park, clear boxes)
+    /// without touching active lists — the scheduler calls this before a
+    /// barrier-side rebuild, which reconstitutes the active lists from the
+    /// `asleep` flags afterwards.
+    ///
+    /// # Safety
+    /// Caller must be the scheduler with every worker parked at the
+    /// cycle barrier.
+    pub(crate) unsafe fn apply_pending_wakes(&self) {
+        for b in &self.boxes {
+            let b = &mut *b.get();
+            for &u in b.iter() {
+                *self.asleep[u as usize].get() = false;
+            }
+            b.clear();
+        }
+    }
+
+    // ---- transfer-phase port parking ----
+
+    /// Park port `p`: its receiver queue is full, so drop it from the
+    /// sender's dirty list until a vacancy wake re-adds it.
+    ///
+    /// # Safety
+    /// Caller must be the sender's cluster, inside the transfer phase.
+    #[inline]
+    pub(crate) unsafe fn park_port(&self, p: u32) {
+        *self.port_blocked[p as usize].get() = true;
+    }
+
+    /// Is port `p` parked? Read by the receiver's `recv` during the work
+    /// phase (the flag is only written during transfer phases) and by the
+    /// scheduler during barrier-side rebuilds.
+    ///
+    /// # Safety
+    /// Caller must be inside the work phase (or hold exclusivity).
+    #[inline]
+    pub(crate) unsafe fn is_port_blocked(&self, p: u32) -> bool {
+        *self.port_blocked[p as usize].get()
+    }
+
+    /// Post a vacancy wake for parked port `p`: the receiver's cluster
+    /// `src` just freed a slot, so the cluster owning `sender_unit` must
+    /// re-add `p` to its dirty list. Duplicates are fine — the drain pass
+    /// dedupes through the `port_blocked` flag.
+    ///
+    /// # Safety
+    /// Caller must be cluster `src`'s thread, inside the work phase.
+    #[inline]
+    pub(crate) unsafe fn post_vacancy(&self, src: usize, sender_unit: u32, p: u32) {
+        let dst = self.cluster_of(sender_unit) as usize;
+        (*self.port_boxes[src * self.clusters + dst].get()).push(p);
+    }
+
+    /// Drain every vacancy box addressed to cluster `dst`, un-parking
+    /// each still-parked port and appending it to `dirty`.
+    ///
+    /// # Safety
+    /// Caller must be cluster `dst`'s thread, at the start of the
+    /// transfer phase (after the work→transfer barrier).
+    pub(crate) unsafe fn drain_port_wakes(&self, dst: usize, dirty: &mut Vec<u32>) {
+        for src in 0..self.clusters {
+            let b = &mut *self.port_boxes[src * self.clusters + dst].get();
+            for &p in b.iter() {
+                let flag = self.port_blocked[p as usize].get();
+                if *flag {
+                    *flag = false;
+                    dirty.push(p);
+                }
+            }
+            b.clear();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -175,7 +314,7 @@ mod tests {
     #[test]
     fn wake_dedupes_and_clears() {
         let part = vec![vec![0u32, 1], vec![2u32]];
-        let st = ActiveState::new(&part, 3);
+        let st = ActiveState::new(&part, 3, 0);
         unsafe {
             st.park(1);
             // Both clusters wake unit 1 in the same transfer phase.
@@ -195,7 +334,7 @@ mod tests {
     #[test]
     fn wake_routes_to_owning_cluster() {
         let part = vec![vec![0u32], vec![1u32]];
-        let st = ActiveState::new(&part, 2);
+        let st = ActiveState::new(&part, 2, 0);
         unsafe {
             st.park(1);
             st.post_wake(0, 1); // cluster 0 delivers into cluster 1's unit
@@ -205,6 +344,59 @@ mod tests {
             let mut active1 = Vec::new();
             st.drain_wakes(1, &mut active1);
             assert_eq!(active1, vec![1]);
+        }
+    }
+
+    #[test]
+    fn migration_reroutes_wakes() {
+        let part = vec![vec![0u32], vec![1u32]];
+        let st = ActiveState::new(&part, 2, 0);
+        unsafe {
+            assert_eq!(st.cluster_of(1), 1);
+            st.set_cluster(1, 0); // barrier-side migration
+            st.park(1);
+            st.post_wake(1, 1); // wake now routes to cluster 0
+            let mut active = Vec::new();
+            st.drain_wakes(0, &mut active);
+            assert_eq!(active, vec![1]);
+        }
+    }
+
+    #[test]
+    fn pending_wakes_apply_at_the_barrier() {
+        let part = vec![vec![0u32], vec![1u32]];
+        let st = ActiveState::new(&part, 2, 0);
+        unsafe {
+            st.park(1);
+            st.post_wake(0, 1);
+            st.apply_pending_wakes();
+            assert!(!st.is_asleep(1), "scheduler applied the wake");
+            // Boxes are empty: a later drain must not double-wake.
+            let mut active = Vec::new();
+            st.drain_wakes(1, &mut active);
+            assert!(active.is_empty());
+        }
+    }
+
+    #[test]
+    fn port_park_wake_roundtrip() {
+        let part = vec![vec![0u32], vec![1u32]];
+        // Port 0 is sent by unit 0 (cluster 0).
+        let st = ActiveState::new(&part, 2, 2);
+        unsafe {
+            st.park_port(0);
+            assert!(st.is_port_blocked(0));
+            // Receiver (cluster 1) frees a slot and posts the vacancy —
+            // twice, to check the dedupe.
+            st.post_vacancy(1, 0, 0);
+            st.post_vacancy(1, 0, 0);
+            let mut dirty = Vec::new();
+            st.drain_port_wakes(0, &mut dirty);
+            assert_eq!(dirty, vec![0], "re-added exactly once");
+            assert!(!st.is_port_blocked(0));
+            dirty.clear();
+            st.drain_port_wakes(0, &mut dirty);
+            assert!(dirty.is_empty(), "boxes cleared");
         }
     }
 }

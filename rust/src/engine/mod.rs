@@ -9,6 +9,7 @@ pub mod bp;
 pub mod message;
 pub mod model;
 pub mod port;
+pub mod repart;
 pub mod sim;
 pub mod unit;
 
@@ -16,5 +17,6 @@ pub use active::SchedMode;
 pub use message::{Fnv, Msg};
 pub use model::{Model, ModelBuilder, RunOpts, Stop};
 pub use port::{InPort, OutPort, PortCfg};
+pub use repart::RepartitionPolicy;
 pub use sim::{Engine, RunReport, Sim};
 pub use unit::{Ctx, Unit};

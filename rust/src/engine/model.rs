@@ -22,7 +22,10 @@
 //!    non-empty, the unit stays awake).
 //! 3. **Transfer** — as usual, plus: a delivery that makes a destination
 //!    input queue go 0 → 1 posts a wake for the destination unit if it is
-//!    parked (`transfer_dirty_wake`).
+//!    parked (`transfer_dirty_wake`), and a port that cannot move
+//!    anything because its receiver queue is full *parks* out of the
+//!    dirty list until the receiver's `recv` posts a vacancy wake
+//!    (transfer-phase sleep/wake, `engine::active`).
 //!
 //! Parking decisions are owned by the unit's cluster; wake posts cross
 //! clusters through single-writer boxes; the existing phase barriers
@@ -37,6 +40,7 @@
 use super::active::{ActiveState, SchedMode};
 use super::message::Fnv;
 use super::port::{InPort, OutPort, PortArena, PortCfg};
+use super::repart::{ClusterState, CostSamples};
 use super::unit::{Ctx, Unit};
 use crate::stats::counters::CounterId;
 use crate::stats::timers::UnitProfile;
@@ -139,6 +143,7 @@ impl ModelBuilder {
             counters: self.counters,
             out_ports_of,
             in_ports_of,
+            scratch_bufs: Vec::new(),
         })
     }
 }
@@ -234,6 +239,11 @@ pub struct Model {
     /// u's cluster (paper Table 2).
     pub(crate) out_ports_of: Vec<Vec<u32>>,
     pub(crate) in_ports_of: Vec<Vec<u32>>,
+    /// Recycled worklist buffers (dirty-port / active-unit lists): every
+    /// engine entry takes from the pool and returns on exit, so repeated
+    /// runs, profiling prologues, and per-cluster instrumentation stop
+    /// re-allocating per entry.
+    scratch_bufs: Vec<Vec<u32>>,
 }
 
 // SAFETY: units and port halves are only accessed according to the phase
@@ -292,6 +302,24 @@ impl Model {
     /// thread, inside the work phase).
     #[inline]
     pub(crate) unsafe fn work_one(&self, idx: u32, cycle: u64, dirty: &mut Vec<u32>) {
+        self.work_one_wake(idx, cycle, dirty, None);
+    }
+
+    /// As [`Model::work_one`], with the sleep/wake context wired into the
+    /// unit's `Ctx` so `recv` can post receiver-vacancy wakes for parked
+    /// ports (transfer-phase sleep/wake, `engine::active`).
+    ///
+    /// # Safety
+    /// As `work_one`; `wake`, when set, must carry the calling cluster's
+    /// own index.
+    #[inline]
+    pub(crate) unsafe fn work_one_wake(
+        &self,
+        idx: u32,
+        cycle: u64,
+        dirty: &mut Vec<u32>,
+        wake: Option<(&ActiveState, usize)>,
+    ) {
         let unit = &mut *self.units[idx as usize].get();
         let mut ctx = Ctx {
             cycle,
@@ -299,8 +327,32 @@ impl Model {
             arena: &self.arena,
             counters: &self.counters,
             dirty,
+            wake,
         };
         unit.work(&mut ctx);
+    }
+
+    /// One work-phase tick, optionally wall-timed into the unit's live
+    /// cost accumulator (adaptive repartitioning).
+    ///
+    /// # Safety
+    /// As [`Model::work_one_wake`].
+    #[inline]
+    pub(crate) unsafe fn work_one_sampled(
+        &self,
+        idx: u32,
+        cycle: u64,
+        dirty: &mut Vec<u32>,
+        wake: Option<(&ActiveState, usize)>,
+        samples: Option<&CostSamples>,
+    ) {
+        if let Some(s) = samples {
+            let t0 = Instant::now();
+            self.work_one_wake(idx, cycle, dirty, wake);
+            s.bump(idx, t0.elapsed().as_nanos() as u64);
+        } else {
+            self.work_one_wake(idx, cycle, dirty, wake);
+        }
     }
 
     /// Execute the transfer phase for the cluster's active ports,
@@ -329,8 +381,11 @@ impl Model {
     /// queues only fill during transfer phases, so quiescence observed
     /// here is final for this work phase.
     ///
+    /// When `samples` is set (adaptive repartitioning), each unit's
+    /// `work` is individually wall-timed into its live cost accumulator.
+    ///
     /// # Safety
-    /// Caller must be the owning cluster's thread inside the work phase,
+    /// Caller must be cluster `cluster`'s thread inside the work phase,
     /// and `active` must contain only this cluster's units.
     pub(crate) unsafe fn work_active(
         &self,
@@ -338,12 +393,14 @@ impl Model {
         cycle: u64,
         dirty: &mut Vec<u32>,
         state: &ActiveState,
+        cluster: usize,
+        samples: Option<&CostSamples>,
     ) -> u64 {
         let ticks = active.len() as u64;
         active.retain(|&u| {
             // SAFETY: forwarded from the caller's work-phase ownership.
             unsafe {
-                self.work_one(u, cycle, dirty);
+                self.work_one_sampled(u, cycle, dirty, Some((state, cluster)), samples);
                 let unit = &*self.units[u as usize].get();
                 if unit.always_active() || !unit.is_idle() {
                     return true;
@@ -362,7 +419,11 @@ impl Model {
 
     /// Transfer phase with wake detection: as [`Model::transfer_dirty`],
     /// plus a wake post whenever a delivery makes a destination input
-    /// queue go 0 → 1 while the destination unit is parked.
+    /// queue go 0 → 1 while the destination unit is parked, and
+    /// *port parking*: a port that moved nothing because its receiver
+    /// queue is full leaves the dirty list and waits for the receiver's
+    /// vacancy wake instead of being re-walked every cycle
+    /// (`engine::active`, transfer-phase sleep/wake).
     ///
     /// # Safety
     /// As `transfer_dirty`; additionally `src_cluster` must be the calling
@@ -387,9 +448,77 @@ impl Model {
                         state.post_wake(src_cluster, dst);
                     }
                 }
-                self.arena.out_len_hint(p) > 0
+                let staged = self.arena.out_len_hint(p) > 0;
+                if staged && moved == 0 {
+                    // `transfer` only stalls completely on a full
+                    // receiver queue, and a full queue is drained by an
+                    // awake unit whose `recv` will post the vacancy.
+                    state.park_port(p);
+                    return false;
+                }
+                staged
             }
         });
+    }
+
+    /// Take a recycled worklist buffer (empty, pre-sized on first use).
+    pub(crate) fn take_scratch_buf(&mut self) -> Vec<u32> {
+        self.scratch_bufs
+            .pop()
+            .unwrap_or_else(|| Vec::with_capacity(self.arena.len().min(4096)))
+    }
+
+    /// Return a worklist buffer to the pool for the next engine entry.
+    pub(crate) fn put_scratch_buf(&mut self, mut buf: Vec<u32>) {
+        buf.clear();
+        self.scratch_bufs.push(buf);
+    }
+
+    /// Seed a dirty-port list from the ports that already have staged
+    /// messages, so a run picks up exactly where the model's out-halves
+    /// stand (a freshly built model contributes nothing).
+    fn seed_dirty(&mut self, dirty: &mut Vec<u32>) {
+        for p in 0..self.arena.len() as u32 {
+            // SAFETY: `&mut self` — trivially exclusive.
+            if unsafe { self.arena.out_len_hint(p) } > 0 {
+                dirty.push(p);
+            }
+        }
+    }
+
+    /// Rebuild every cluster-derived structure after a barrier-side
+    /// ownership change (adaptive repartitioning, `engine::repart`), or
+    /// to initialise a ladder run. Pending unit wakes are applied
+    /// directly (their boxes are cluster-addressed and the addresses just
+    /// changed); active lists are reconstituted from the sleep flags;
+    /// dirty lists are reconstituted from the staged out-halves, skipping
+    /// ports parked behind a receiver-vacancy wake.
+    ///
+    /// # Safety
+    /// Caller must hold logical exclusivity over the model, `clusters`,
+    /// and `state` (scheduler between ticks, or before workers start).
+    pub(crate) unsafe fn rebuild_cluster_state(
+        &self,
+        clusters: &ClusterState,
+        state: &ActiveState,
+    ) {
+        state.apply_pending_wakes();
+        for c in 0..clusters.len() {
+            let active = clusters.active(c);
+            active.clear();
+            for &u in clusters.units(c).iter() {
+                if !state.is_asleep(u) {
+                    active.push(u);
+                }
+            }
+            clusters.dirty(c).clear();
+        }
+        for p in 0..self.arena.len() as u32 {
+            if self.arena.out_len_hint(p) > 0 && !state.is_port_blocked(p) {
+                let c = state.cluster_of(self.arena.src_unit[p as usize]) as usize;
+                clusters.dirty(c).push(p);
+            }
+        }
     }
 
     /// Exclusive-access helpers (between cycles / after a run).
@@ -490,7 +619,8 @@ impl Model {
 
     fn run_serial_full(&mut self, opts: RunOpts) -> RunStats {
         let n_units = self.num_units() as u32;
-        let mut dirty: Vec<u32> = Vec::with_capacity(self.arena.len().min(4096));
+        let mut dirty = self.take_scratch_buf();
+        self.seed_dirty(&mut dirty);
         let t0 = Instant::now();
         let mut timers = PhaseTimers::new();
         let mut cycle = 0u64;
@@ -506,6 +636,7 @@ impl Model {
                 }
                 timers.work_ns += tw.elapsed().as_nanos() as u64;
                 let tt = Instant::now();
+                timers.port_walks += dirty.len() as u64;
                 // SAFETY: single thread.
                 unsafe { self.transfer_dirty(&mut dirty, cycle) };
                 timers.transfer_ns += tt.elapsed().as_nanos() as u64;
@@ -514,6 +645,7 @@ impl Model {
                     // SAFETY: single thread.
                     unsafe { self.work_one(u, cycle, &mut dirty) };
                 }
+                timers.port_walks += dirty.len() as u64;
                 // SAFETY: single thread.
                 unsafe { self.transfer_dirty(&mut dirty, cycle) };
             }
@@ -522,6 +654,7 @@ impl Model {
         }
         timers.cycles = cycle;
         let wall = t0.elapsed();
+        self.put_scratch_buf(dirty);
         let mut counters = self.counters.snapshot();
         counters.merge(&self.unit_stats());
         RunStats {
@@ -532,15 +665,17 @@ impl Model {
             counters,
             sync_ops: 0,
             fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
+            repart: Default::default(),
         }
     }
 
     fn run_serial_active(&mut self, opts: RunOpts) -> RunStats {
         let n_units = self.num_units();
         let all: Vec<u32> = (0..n_units as u32).collect();
-        let state = ActiveState::new(std::slice::from_ref(&all), n_units);
+        let state = ActiveState::new(std::slice::from_ref(&all), n_units, self.num_ports());
         let mut active = all;
-        let mut dirty: Vec<u32> = Vec::with_capacity(self.arena.len().min(4096));
+        let mut dirty = self.take_scratch_buf();
+        self.seed_dirty(&mut dirty);
         let t0 = Instant::now();
         let mut timers = PhaseTimers::new();
         let mut cycle = 0u64;
@@ -555,14 +690,18 @@ impl Model {
                 if opts.timed {
                     let tw = Instant::now();
                     timers.unit_ticks +=
-                        self.work_active(&mut active, cycle, &mut dirty, &state);
+                        self.work_active(&mut active, cycle, &mut dirty, &state, 0, None);
                     timers.work_ns += tw.elapsed().as_nanos() as u64;
                     let tt = Instant::now();
+                    state.drain_port_wakes(0, &mut dirty);
+                    timers.port_walks += dirty.len() as u64;
                     self.transfer_dirty_wake(&mut dirty, cycle, &state, 0);
                     timers.transfer_ns += tt.elapsed().as_nanos() as u64;
                 } else {
                     timers.unit_ticks +=
-                        self.work_active(&mut active, cycle, &mut dirty, &state);
+                        self.work_active(&mut active, cycle, &mut dirty, &state, 0, None);
+                    state.drain_port_wakes(0, &mut dirty);
+                    timers.port_walks += dirty.len() as u64;
                     self.transfer_dirty_wake(&mut dirty, cycle, &state, 0);
                 }
             }
@@ -570,6 +709,7 @@ impl Model {
         }
         timers.cycles = cycle;
         let wall = t0.elapsed();
+        self.put_scratch_buf(dirty);
         let mut counters = self.counters.snapshot();
         counters.merge(&self.unit_stats());
         RunStats {
@@ -580,6 +720,7 @@ impl Model {
             counters,
             sync_ops: 0,
             fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
+            repart: Default::default(),
         }
     }
 
@@ -599,10 +740,22 @@ impl Model {
     ) -> (RunStats, Vec<PhaseTimers>) {
         let clock_overhead_ns = calibrate_clock_overhead_ns();
         let active_sched = opts.sched == SchedMode::ActiveList;
-        let state = ActiveState::new(partition, self.num_units());
+        let state = ActiveState::new(partition, self.num_units(), self.num_ports());
         let mut actives: Vec<Vec<u32>> = partition.to_vec();
-        let mut cluster_dirty: Vec<Vec<u32>> =
-            partition.iter().map(|_| Vec::new()).collect();
+        let mut cluster_dirty: Vec<Vec<u32>> = (0..partition.len())
+            .map(|_| self.take_scratch_buf())
+            .collect();
+        // Seed staged ports into their sender's cluster list, routing
+        // through the ownership table the run already built.
+        for p in 0..self.arena.len() as u32 {
+            // SAFETY: `&mut self` — trivially exclusive.
+            unsafe {
+                if self.arena.out_len_hint(p) > 0 {
+                    let c = state.cluster_of(self.arena.src_unit[p as usize]);
+                    cluster_dirty[c as usize].push(p);
+                }
+            }
+        }
         let t0 = Instant::now();
         let mut per_cluster: Vec<PhaseTimers> = vec![PhaseTimers::new(); partition.len()];
         let mut cycle = 0u64;
@@ -622,6 +775,8 @@ impl Model {
                             cycle,
                             &mut cluster_dirty[ci],
                             &state,
+                            ci,
+                            None,
                         );
                     }
                     per_cluster[ci].work_ns += tw.elapsed().as_nanos() as u64;
@@ -629,7 +784,11 @@ impl Model {
                 for (ci, dirty) in cluster_dirty.iter_mut().enumerate() {
                     let tt = Instant::now();
                     // SAFETY: single thread.
-                    unsafe { self.transfer_dirty_wake(dirty, cycle, &state, ci) };
+                    unsafe {
+                        state.drain_port_wakes(ci, dirty);
+                        per_cluster[ci].port_walks += dirty.len() as u64;
+                        self.transfer_dirty_wake(dirty, cycle, &state, ci);
+                    }
                     per_cluster[ci].transfer_ns += tt.elapsed().as_nanos() as u64;
                 }
             } else {
@@ -644,6 +803,7 @@ impl Model {
                 }
                 for (ci, dirty) in cluster_dirty.iter_mut().enumerate() {
                     let tt = Instant::now();
+                    per_cluster[ci].port_walks += dirty.len() as u64;
                     // SAFETY: single thread.
                     unsafe { self.transfer_dirty(dirty, cycle) };
                     per_cluster[ci].transfer_ns += tt.elapsed().as_nanos() as u64;
@@ -659,6 +819,9 @@ impl Model {
             t.transfer_ns = t.transfer_ns.saturating_sub(bias);
         }
         let wall = t0.elapsed();
+        for buf in cluster_dirty {
+            self.put_scratch_buf(buf);
+        }
         let mut counters = self.counters.snapshot();
         counters.merge(&self.unit_stats());
         let mut total = PhaseTimers::new();
@@ -674,6 +837,7 @@ impl Model {
                 counters,
                 sync_ops: 0,
                 fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
+                repart: Default::default(),
             },
             per_cluster,
         )
@@ -691,7 +855,8 @@ impl Model {
         let n = self.num_units();
         let clock_overhead_ns = calibrate_clock_overhead_ns();
         let mut work_ns = vec![0u64; n];
-        let mut dirty: Vec<u32> = Vec::with_capacity(self.arena.len().min(4096));
+        let mut dirty = self.take_scratch_buf();
+        self.seed_dirty(&mut dirty);
         for cycle in 0..cycles {
             for u in 0..n as u32 {
                 let t = Instant::now();
@@ -706,6 +871,7 @@ impl Model {
         for w in &mut work_ns {
             *w = (*w).saturating_sub(bias).max(1);
         }
+        self.put_scratch_buf(dirty);
         UnitProfile { work_ns, cycles }
     }
 }

@@ -1,0 +1,484 @@
+//! Adaptive mid-run repartitioning: live re-profiling and unit migration
+//! at cycle barriers.
+//!
+//! `PartitionStrategy::CostBalanced` (see `sched::partition`) bin-packs
+//! units from a one-shot profiling *prologue*. On phase-changing workloads
+//! (OLTP warm-up → steady state, cache cold → hot) the cost vector drifts
+//! and the slowest cluster gates every barrier — the paper's "slowest
+//! worker dominates" term grows back. This module closes the loop:
+//!
+//! 1. **Sample** — while a [`RepartitionPolicy`] is active, each worker
+//!    accumulates per-unit tick and nanosecond costs into `CostSamples`
+//!    as a side effect of the work phase (each cell is written only by the
+//!    unit's owning cluster, the usual phase-ownership discipline).
+//! 2. **Decide** — every `interval_cycles`, the global scheduler (which
+//!    holds exclusive model access between ticks: every worker is parked
+//!    at `wait(WORK)`) re-runs LPT bin-packing over the sampled costs,
+//!    label-matches the plan to the current assignment to avoid
+//!    permutation churn, and compares imbalance (max cluster load over
+//!    mean). Only an improvement larger than `hysteresis` migrates.
+//! 3. **Migrate** — a migration is a pure data-structure swap: the
+//!    ownership table (`ActiveState::set_cluster`), the per-cluster unit
+//!    lists (`ClusterState`), and the derived active and dirty-port
+//!    lists (`Model::rebuild_cluster_state`) are rewritten while the
+//!    workers are parked. No gate, no atomic, and no message moves:
+//!    repartitioning changes *where* a unit runs, never *when*, so state
+//!    fingerprints are bit-identical with repartitioning on or off
+//!    (`tests/repartition.rs`).
+//!
+//! Samples reset at every decision, so each epoch's costs reflect only
+//! the last interval — that is what makes the re-profiling *live* and
+//! lets the partition track workload phases instead of their average.
+
+use super::active::ActiveState;
+use super::model::Model;
+use crate::sched::partition_with_costs;
+use crate::stats::{RepartEpoch, RepartStats};
+use crate::util::cli::{parse_f64, parse_u64};
+use std::cell::UnsafeCell;
+
+/// When and how aggressively to repartition mid-run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RepartitionPolicy {
+    /// Re-evaluate the partition every this many cycles; 0 disables
+    /// repartitioning entirely (no sampling overhead either).
+    pub interval_cycles: u64,
+    /// Required imbalance improvement (in units of max/mean load) before
+    /// a migration happens. Guards against churn on noisy samples.
+    pub hysteresis: f64,
+    /// Upper bound on units migrated per epoch; excess moves (cheapest
+    /// first) are deferred to the next epoch.
+    pub max_moves: usize,
+}
+
+impl Default for RepartitionPolicy {
+    fn default() -> Self {
+        RepartitionPolicy {
+            interval_cycles: 0,
+            hysteresis: 0.05,
+            max_moves: usize::MAX,
+        }
+    }
+}
+
+impl RepartitionPolicy {
+    /// Repartition every `n` cycles with the default hysteresis and no
+    /// move cap.
+    pub fn every(n: u64) -> Self {
+        RepartitionPolicy {
+            interval_cycles: n,
+            ..Default::default()
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.interval_cycles > 0
+    }
+
+    /// Parse a compact policy spec: `INTERVAL[,HYSTERESIS[,MAX_MOVES]]`,
+    /// e.g. `"64"`, `"256,0.1"`, `"1k,5%,8"`. Interval 0 disables.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut policy = RepartitionPolicy::default();
+        let mut parts = spec.split(',').map(str::trim);
+        let interval = parts.next().filter(|s| !s.is_empty()).ok_or_else(|| {
+            format!("bad repartition spec {spec:?}: expected INTERVAL[,HYSTERESIS[,MAX_MOVES]]")
+        })?;
+        policy.interval_cycles =
+            parse_u64(interval).map_err(|e| format!("repartition interval: {e}"))?;
+        if let Some(h) = parts.next() {
+            policy.hysteresis =
+                parse_f64(h).map_err(|e| format!("repartition hysteresis: {e}"))?;
+        }
+        if let Some(m) = parts.next() {
+            policy.max_moves =
+                parse_u64(m).map_err(|e| format!("repartition max-moves: {e}"))? as usize;
+        }
+        if let Some(extra) = parts.next() {
+            return Err(format!("bad repartition spec {spec:?}: trailing {extra:?}"));
+        }
+        Ok(policy)
+    }
+}
+
+/// Per-unit live cost accumulators. `bump` is called by the unit's owning
+/// cluster inside the work phase (single writer per cell per phase); the
+/// scheduler reads and resets between ticks, when every worker is parked.
+pub(crate) struct CostSamples {
+    ticks: Vec<UnsafeCell<u64>>,
+    ns: Vec<UnsafeCell<u64>>,
+}
+
+// SAFETY: phase-ownership discipline above — each cell has one writer
+// (the owning cluster) during work phases and one reader (the scheduler)
+// during the exclusive between-tick window; the barrier gates provide
+// the happens-before edges.
+unsafe impl Sync for CostSamples {}
+
+impl CostSamples {
+    pub(crate) fn new(n_units: usize) -> Self {
+        CostSamples {
+            ticks: (0..n_units).map(|_| UnsafeCell::new(0)).collect(),
+            ns: (0..n_units).map(|_| UnsafeCell::new(0)).collect(),
+        }
+    }
+
+    /// Record one `work` invocation of unit `u` that took `ns` wall
+    /// nanoseconds.
+    ///
+    /// # Safety
+    /// Caller must be `u`'s owning cluster, inside the work phase.
+    #[inline]
+    pub(crate) unsafe fn bump(&self, u: u32, ns: u64) {
+        *self.ticks[u as usize].get() += 1;
+        *self.ns[u as usize].get() += ns;
+    }
+
+    /// Sampled cost of unit `u` since the last reset: measured
+    /// nanoseconds, floored at the tick count (clock granularity can
+    /// report 0 ns for cheap units that still did tick) and at 1 so every
+    /// unit carries weight in LPT.
+    ///
+    /// # Safety
+    /// Caller must hold exclusivity (scheduler between ticks).
+    unsafe fn cost(&self, u: usize) -> u64 {
+        (*self.ns[u].get()).max(*self.ticks[u].get()).max(1)
+    }
+
+    /// Zero all accumulators so the next epoch measures only its own
+    /// interval.
+    ///
+    /// # Safety
+    /// Caller must hold exclusivity (scheduler between ticks).
+    unsafe fn reset(&self) {
+        for c in &self.ticks {
+            *c.get() = 0;
+        }
+        for c in &self.ns {
+            *c.get() = 0;
+        }
+    }
+}
+
+/// The migration-mutable per-cluster worklists the ladder workers execute
+/// from: the unit list (current partition), the awake-unit list, and the
+/// dirty-port list. Each cluster's cells are written by that cluster's
+/// worker during its phases and by the scheduler only while all workers
+/// are parked at the cycle barrier.
+pub(crate) struct ClusterState {
+    units: Vec<UnsafeCell<Vec<u32>>>,
+    active: Vec<UnsafeCell<Vec<u32>>>,
+    dirty: Vec<UnsafeCell<Vec<u32>>>,
+}
+
+// SAFETY: see struct docs — one writing thread per cell per phase, with
+// the barrier gates ordering worker↔scheduler handoffs.
+unsafe impl Sync for ClusterState {}
+
+impl ClusterState {
+    /// Build from an initial partition, recycling buffers from the
+    /// model's scratch pool where possible.
+    pub(crate) fn new(partition: &[Vec<u32>], model: &mut Model) -> Self {
+        let mut mk = |fill: Option<&Vec<u32>>| {
+            let mut b = model.take_scratch_buf();
+            if let Some(f) = fill {
+                b.extend_from_slice(f);
+            }
+            UnsafeCell::new(b)
+        };
+        let mut units = Vec::with_capacity(partition.len());
+        let mut active = Vec::with_capacity(partition.len());
+        let mut dirty = Vec::with_capacity(partition.len());
+        for cluster in partition {
+            units.push(mk(Some(cluster)));
+        }
+        for _ in partition {
+            active.push(mk(None));
+        }
+        for _ in partition {
+            dirty.push(mk(None));
+        }
+        ClusterState {
+            units,
+            active,
+            dirty,
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Cluster `c`'s unit list.
+    ///
+    /// # Safety
+    /// Caller must be cluster `c`'s worker inside one of its phases, or
+    /// the scheduler with all workers parked.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub(crate) unsafe fn units(&self, c: usize) -> &mut Vec<u32> {
+        &mut *self.units[c].get()
+    }
+
+    /// Cluster `c`'s awake-unit list.
+    ///
+    /// # Safety
+    /// As [`ClusterState::units`].
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub(crate) unsafe fn active(&self, c: usize) -> &mut Vec<u32> {
+        &mut *self.active[c].get()
+    }
+
+    /// Cluster `c`'s dirty-port list.
+    ///
+    /// # Safety
+    /// As [`ClusterState::units`].
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub(crate) unsafe fn dirty(&self, c: usize) -> &mut Vec<u32> {
+        &mut *self.dirty[c].get()
+    }
+
+    /// The final unit→cluster mapping (exclusive access, post-run).
+    pub(crate) fn snapshot_partition(&mut self) -> Vec<Vec<u32>> {
+        self.units
+            .iter_mut()
+            .map(|c| c.get_mut().clone())
+            .collect()
+    }
+
+    /// Tear down, returning every buffer to the model's scratch pool.
+    pub(crate) fn recycle(self, model: &mut Model) {
+        for cell in self
+            .units
+            .into_iter()
+            .chain(self.active)
+            .chain(self.dirty)
+        {
+            model.put_scratch_buf(cell.into_inner());
+        }
+    }
+}
+
+/// Max cluster load over mean cluster load (1.0 = perfectly balanced).
+pub(crate) fn imbalance(loads: &[u64]) -> f64 {
+    let total: u64 = loads.iter().sum();
+    if loads.is_empty() || total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / loads.len() as f64;
+    *loads.iter().max().unwrap() as f64 / mean
+}
+
+/// The barrier-side decision engine the ladder scheduler drives. The
+/// live [`CostSamples`] are owned by the run (the workers write them) and
+/// passed in at each decision.
+pub(crate) struct Repartitioner {
+    policy: RepartitionPolicy,
+    next_check: u64,
+    pub(crate) stats: RepartStats,
+}
+
+impl Repartitioner {
+    pub(crate) fn new(policy: RepartitionPolicy) -> Self {
+        Repartitioner {
+            policy,
+            next_check: policy.interval_cycles.max(1),
+            stats: RepartStats::default(),
+        }
+    }
+
+    /// Re-evaluate (and possibly migrate) at the cycle barrier. Called by
+    /// the global scheduler between ticks.
+    ///
+    /// # Safety
+    /// Every worker must be parked at the cycle barrier (`wait(WORK)`),
+    /// giving the caller exclusive access to the model, `samples`,
+    /// `clusters`, and `state`.
+    pub(crate) unsafe fn maybe_repartition(
+        &mut self,
+        samples: &CostSamples,
+        model: &Model,
+        clusters: &ClusterState,
+        state: &ActiveState,
+        cycle: u64,
+    ) {
+        if !self.policy.enabled() || cycle < self.next_check {
+            return;
+        }
+        self.next_check = cycle + self.policy.interval_cycles;
+        let k = clusters.len();
+        let n = model.num_units();
+        self.stats.checks += 1;
+        let costs: Vec<u64> = (0..n).map(|u| samples.cost(u)).collect();
+        samples.reset();
+        if k <= 1 || n == 0 {
+            return;
+        }
+
+        // Current assignment and its imbalance.
+        let mut cur = vec![0u32; n];
+        for c in 0..k {
+            for &u in clusters.units(c).iter() {
+                cur[u as usize] = c as u32;
+            }
+        }
+        let loads = |assign: &[u32]| {
+            let mut l = vec![0u64; k];
+            for (u, &c) in assign.iter().enumerate() {
+                l[c as usize] += costs[u];
+            }
+            l
+        };
+        let cur_imb = imbalance(&loads(&cur));
+
+        // Fresh LPT plan over the live costs, label-matched to the
+        // current clusters (LPT bin indices are arbitrary; matching by
+        // shared cost mass keeps equivalent plans from registering as
+        // wholesale moves).
+        let plan_bins = partition_with_costs(k, &costs);
+        let plan = label_match(&plan_bins, &cur, &costs, k);
+        let plan_imb = imbalance(&loads(&plan));
+        if cur_imb - plan_imb <= self.policy.hysteresis {
+            return;
+        }
+
+        // Units whose cluster changes, costliest first, capped per epoch.
+        let mut movers: Vec<u32> = (0..n as u32)
+            .filter(|&u| plan[u as usize] != cur[u as usize])
+            .collect();
+        if movers.is_empty() {
+            return;
+        }
+        movers.sort_by_key(|&u| (std::cmp::Reverse(costs[u as usize]), u));
+        movers.truncate(self.policy.max_moves);
+        let mut next = cur;
+        for &u in &movers {
+            next[u as usize] = plan[u as usize];
+        }
+        // Re-gate on what will actually be applied: truncation can strand
+        // a plan whose improvement needed the full move set, and
+        // committing a sub-hysteresis partial move is exactly the churn
+        // hysteresis exists to prevent.
+        let next_loads = loads(&next);
+        let next_imb = imbalance(&next_loads);
+        if cur_imb - next_imb <= self.policy.hysteresis {
+            return;
+        }
+
+        // The swap: ownership table, unit lists, then every derived
+        // structure (active lists, dirty lists, pending wakes).
+        for c in 0..k {
+            clusters.units(c).clear();
+        }
+        for u in 0..n as u32 {
+            let c = next[u as usize];
+            clusters.units(c as usize).push(u); // ascending id per cluster
+            state.set_cluster(u, c);
+        }
+        model.rebuild_cluster_state(clusters, state);
+
+        self.stats.events += 1;
+        self.stats.epochs.push(RepartEpoch {
+            cycle,
+            imbalance_before: cur_imb,
+            imbalance_after: next_imb,
+            moves: movers.len(),
+            cluster_costs: next_loads,
+        });
+    }
+}
+
+/// Relabel LPT bins onto current cluster indices by greedy maximum
+/// cost-overlap matching, returning the per-unit assignment.
+fn label_match(plan_bins: &[Vec<u32>], cur: &[u32], costs: &[u64], k: usize) -> Vec<u32> {
+    let mut overlap = vec![vec![0u64; k]; k];
+    for (pb, bin) in plan_bins.iter().enumerate() {
+        for &u in bin {
+            overlap[pb][cur[u as usize] as usize] += costs[u as usize].max(1);
+        }
+    }
+    let mut bin_label = vec![usize::MAX; k];
+    let mut taken = vec![false; k];
+    for _ in 0..k {
+        let (mut best_pb, mut best_cc, mut best) = (usize::MAX, usize::MAX, 0u64);
+        for (pb, labels) in overlap.iter().enumerate() {
+            if bin_label[pb] != usize::MAX {
+                continue;
+            }
+            for (cc, &o) in labels.iter().enumerate() {
+                if !taken[cc] && (best_pb == usize::MAX || o > best) {
+                    best_pb = pb;
+                    best_cc = cc;
+                    best = o;
+                }
+            }
+        }
+        bin_label[best_pb] = best_cc;
+        taken[best_cc] = true;
+    }
+    let mut assign = vec![0u32; cur.len()];
+    for (pb, bin) in plan_bins.iter().enumerate() {
+        for &u in bin {
+            assign[u as usize] = bin_label[pb] as u32;
+        }
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_variants() {
+        assert_eq!(
+            RepartitionPolicy::parse("64").unwrap(),
+            RepartitionPolicy::every(64)
+        );
+        let p = RepartitionPolicy::parse("1k, 0.1, 8").unwrap();
+        assert_eq!(p.interval_cycles, 1_000);
+        assert!((p.hysteresis - 0.1).abs() < 1e-12);
+        assert_eq!(p.max_moves, 8);
+        let pct = RepartitionPolicy::parse("256,5%").unwrap();
+        assert!((pct.hysteresis - 0.05).abs() < 1e-12);
+        assert!(!RepartitionPolicy::parse("0").unwrap().enabled());
+        assert!(RepartitionPolicy::parse("").is_err());
+        assert!(RepartitionPolicy::parse("64,x").is_err());
+        assert!(RepartitionPolicy::parse("64,0.1,2,9").is_err());
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        assert!((imbalance(&[10, 10]) - 1.0).abs() < 1e-12);
+        assert!((imbalance(&[20, 0]) - 2.0).abs() < 1e-12);
+        assert!((imbalance(&[]) - 1.0).abs() < 1e-12);
+        assert!((imbalance(&[0, 0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn label_match_prefers_identity_on_balanced_input() {
+        // Current: {0,1} on cluster 0, {2,3} on cluster 1. LPT handed us
+        // the same bins in swapped order; matching must undo the swap so
+        // zero units register as moves.
+        let plan_bins = vec![vec![2, 3], vec![0, 1]];
+        let cur = vec![0, 0, 1, 1];
+        let costs = vec![5, 5, 5, 5];
+        let assign = label_match(&plan_bins, &cur, &costs, 2);
+        assert_eq!(assign, cur);
+    }
+
+    #[test]
+    fn sampling_floor_and_reset() {
+        let s = CostSamples::new(2);
+        unsafe {
+            assert_eq!(s.cost(0), 1, "unsampled units still carry weight");
+            s.bump(0, 0); // tick with sub-clock-resolution work
+            assert_eq!(s.cost(0), 1);
+            s.bump(0, 100);
+            assert_eq!(s.cost(0), 100);
+            s.reset();
+            assert_eq!(s.cost(0), 1);
+        }
+    }
+}

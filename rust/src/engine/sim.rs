@@ -35,6 +35,7 @@
 
 use super::active::SchedMode;
 use super::model::{Model, RunOpts, Stop};
+use super::repart::RepartitionPolicy;
 use crate::sched::{partition, partition_with_costs, PartitionStrategy};
 use crate::stats::{PhaseTimers, RunStats};
 use crate::sync::{run_ladder, ParallelOpts, SpinMode, SyncMethod};
@@ -105,6 +106,7 @@ pub struct Sim {
     explicit_partition: Option<Vec<Vec<u32>>>,
     unit_costs: Option<Vec<u64>>,
     profile_cycles: u64,
+    repart: RepartitionPolicy,
 }
 
 impl Sim {
@@ -127,12 +129,19 @@ impl Sim {
             explicit_partition: None,
             unit_costs: None,
             profile_cycles: DEFAULT_PROFILE_CYCLES,
+            repart: RepartitionPolicy::default(),
         }
     }
 
     /// Start a session from a registered scenario (`crate::scenario`).
     /// The scenario supplies the model, its default stop condition, and a
     /// scratch builder for cost-balanced profiling.
+    ///
+    /// Besides the scenario's own keys, every scenario config honours the
+    /// session-level `repartition` key (a [`RepartitionPolicy::parse`]
+    /// spec, e.g. `repartition = "64"` or `--set repartition=64`) plus
+    /// the `repartition-hysteresis` and `repartition-max-moves`
+    /// overrides.
     pub fn scenario(name: &str, cfg: &Config) -> Result<Self, String> {
         let sc = crate::scenario::find(name)?;
         let (model, stop) = sc.build(cfg)?;
@@ -147,6 +156,18 @@ impl Sim {
                 .and_then(|s| s.build(&rebuild_cfg))
                 .map(|(m, _)| m)
         }));
+        if let Some(spec) = cfg.get("repartition") {
+            sim.repart = RepartitionPolicy::parse(spec)?;
+        }
+        if let Some(h) = cfg.get("repartition-hysteresis") {
+            sim.repart.hysteresis = crate::util::cli::parse_f64(h)
+                .map_err(|e| format!("repartition-hysteresis: {e}"))?;
+        }
+        if let Some(m) = cfg.get("repartition-max-moves") {
+            sim.repart.max_moves = crate::util::cli::parse_u64(m)
+                .map_err(|e| format!("repartition-max-moves: {e}"))?
+                as usize;
+        }
         Ok(sim)
     }
 
@@ -192,6 +213,24 @@ impl Sim {
     /// Opt in to sleep/wake active-unit scheduling.
     pub fn active_list(self) -> Self {
         self.sched(SchedMode::ActiveList)
+    }
+
+    /// Enable adaptive mid-run repartitioning (ladder engine): sample
+    /// live per-unit costs, re-run LPT bin-packing every
+    /// `policy.interval_cycles`, and migrate units between clusters at
+    /// the cycle barrier when the projected imbalance improvement clears
+    /// `policy.hysteresis`. Migration is semantically invisible — it
+    /// changes where a unit runs, never when — so fingerprints are
+    /// unaffected. Ignored by the serial engines (one cluster: nothing
+    /// to migrate).
+    pub fn repartition(mut self, policy: RepartitionPolicy) -> Self {
+        self.repart = policy;
+        self
+    }
+
+    /// Shorthand for `.repartition(RepartitionPolicy::every(n))`.
+    pub fn repartition_every(self, n: u64) -> Self {
+        self.repartition(RepartitionPolicy::every(n))
     }
 
     /// Set (or override a scenario's) stop condition.
@@ -344,6 +383,7 @@ impl Sim {
                     method: self.sync,
                     spin: self.spin,
                     run: opts,
+                    repart: self.repart,
                 };
                 let stats = run_ladder(&mut self.model, &part, &popts);
                 let per_cluster = stats.per_worker.clone();
@@ -394,7 +434,9 @@ fn validate_partition(part: &[Vec<u32>], units: usize) -> Result<(), String> {
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub stats: RunStats,
-    /// The unit→cluster mapping the run used.
+    /// The unit→cluster mapping the run *started* with. With adaptive
+    /// repartitioning the mapping may change mid-run; the final mapping
+    /// is in [`RunReport::final_partition`].
     pub partition: Vec<Vec<u32>>,
     /// Per-cluster phase timers: cluster-attributed for
     /// `Engine::Partitioned`, per-worker for the ladder, a single total
@@ -418,6 +460,22 @@ impl RunReport {
         self.stats.fingerprint
     }
 
+    /// Barrier-side migrations the run performed (adaptive
+    /// repartitioning).
+    pub fn repartition_events(&self) -> u64 {
+        self.stats.repart.events
+    }
+
+    /// The unit→cluster mapping the run ended with: the last migration's
+    /// result, or the initial partition when nothing moved.
+    pub fn final_partition(&self) -> &[Vec<u32>] {
+        if self.stats.repart.final_partition.is_empty() {
+            &self.partition
+        } else {
+            &self.stats.repart.final_partition
+        }
+    }
+
     /// Fraction of unit-cycles that actually ran the work phase.
     pub fn active_ratio(&self) -> f64 {
         self.stats.active_ratio(self.units)
@@ -438,9 +496,11 @@ impl RunReport {
     }
 
     /// Flat JSON record of this run — one row of the perf-trajectory
-    /// schema (`harness::bench_json`). Hand-rolled: the crate is
-    /// dependency-free by design. Fingerprints are hex strings (u64 does
-    /// not fit IEEE doubles losslessly).
+    /// schema (`harness::bench_json`), plus the adaptive-repartitioning
+    /// outcome (event/check counts and one record per migration epoch
+    /// with its imbalance delta and post-migration cost vector).
+    /// Hand-rolled: the crate is dependency-free by design. Fingerprints
+    /// are hex strings (u64 does not fit IEEE doubles losslessly).
     pub fn to_json(&self) -> String {
         let (work_ns, transfer_ns, barrier_ns) = self.stats.phase_split();
         format!(
@@ -449,7 +509,7 @@ impl RunReport {
              \"cycles\": {}, \"wall_ns\": {}, \"cycles_per_sec\": {:.1}, \
              \"sync_ops\": {}, \"work_ns\": {}, \"transfer_ns\": {}, \
              \"barrier_ns\": {}, \"active_ratio\": {:.4}, \
-             \"fingerprint\": \"{:#018x}\"}}",
+             \"fingerprint\": \"{:#018x}\", {}}}",
             match &self.scenario {
                 Some(s) => format!("\"{s}\""),
                 None => "null".to_string(),
@@ -468,6 +528,7 @@ impl RunReport {
             barrier_ns,
             self.active_ratio(),
             self.stats.fingerprint,
+            self.stats.repart.to_json_fields(),
         )
     }
 }

@@ -5,6 +5,7 @@
 //! submits results to output ports. All inter-unit communication goes
 //! through ports — units never share state (paper §3.1 rule 4).
 
+use super::active::ActiveState;
 use super::message::{Fnv, Msg};
 use super::port::{InPort, OutPort, PortArena};
 use crate::stats::{Counters, StatsMap};
@@ -68,6 +69,13 @@ pub struct Ctx<'a> {
     /// queue goes 0 → 1; the transfer phase drains the list instead of
     /// scanning every port (O(active) instead of O(ports)).
     pub(crate) dirty: &'a mut Vec<u32>,
+    /// Sleep/wake context under active-list scheduling: the shared
+    /// park/wake state plus this worker's cluster index. `recv` uses it
+    /// to post a vacancy wake when consuming from a full input queue
+    /// whose port parked behind receiver back pressure (see
+    /// `engine::active`, transfer-phase sleep/wake). `None` under
+    /// full-scan scheduling.
+    pub(crate) wake: Option<(&'a ActiveState, usize)>,
 }
 
 impl<'a> Ctx<'a> {
@@ -129,13 +137,25 @@ impl<'a> Ctx<'a> {
         // SAFETY: p belongs to this unit; during the work phase the
         // receiver's cluster owns the in-half (and its hint).
         unsafe {
-            if self.arena.in_len_hint(p.0) == 0 {
+            let len = self.arena.in_len_hint(p.0);
+            if len == 0 {
                 return None; // packed early-out: cold half untouched
             }
             let inp = self.arena.in_half(p.0);
             match inp.q.front() {
                 Some((ready, _)) if *ready <= self.cycle => {
                     self.arena.bump_in_len(p.0, -1);
+                    // Transfer-phase sleep/wake: this pop is the
+                    // full → not-full transition, and the sender parked
+                    // the port on our occupancy — wake it. Exactly one
+                    // wake fires per park (the queue cannot refill while
+                    // the port is parked), and the work→transfer barrier
+                    // orders the post against the sender's drain.
+                    if let Some((state, cluster)) = self.wake {
+                        if len as usize == inp.cap && state.is_port_blocked(p.0) {
+                            state.post_vacancy(cluster, self.arena.src_unit[p.0 as usize], p.0);
+                        }
+                    }
                     inp.q.pop_front().map(|(_, m)| m)
                 }
                 _ => None,
@@ -208,6 +228,7 @@ mod tests {
             arena,
             counters,
             dirty,
+            wake: None,
         }
     }
 

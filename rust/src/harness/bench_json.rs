@@ -17,7 +17,7 @@
 //! does not fit IEEE doubles losslessly).
 
 use super::fig12_13::{default_oltp, profile_costs, resolve_partition};
-use crate::engine::{Engine, SchedMode, Sim, Stop};
+use crate::engine::{Engine, RepartitionPolicy, SchedMode, Sim, Stop};
 use crate::sched::PartitionStrategy;
 use crate::stats::RunStats;
 use crate::sync::SyncMethod;
@@ -40,6 +40,9 @@ pub struct BenchRow {
     pub barrier_ns: u64,
     /// Fraction of unit-cycles that ran `work` (1.0 = full scan).
     pub active_ratio: f64,
+    /// Barrier-side unit migrations (adaptive repartitioning; 0 when
+    /// disabled or serial).
+    pub repartition_events: u64,
     pub fingerprint: u64,
 }
 
@@ -64,6 +67,7 @@ impl BenchRow {
             transfer_ns,
             barrier_ns,
             active_ratio: s.active_ratio(units),
+            repartition_events: s.repart.events,
             fingerprint: s.fingerprint,
         }
     }
@@ -78,6 +82,8 @@ pub struct LadderBench {
     pub cores: usize,
     pub units: usize,
     pub strategy: &'static str,
+    /// Repartitioning interval applied to the ladder rows (None = off).
+    pub repartition_interval: Option<u64>,
     pub rows: Vec<BenchRow>,
 }
 
@@ -118,6 +124,13 @@ impl LadderBench {
         s.push_str(&format!("  \"units\": {},\n", self.units));
         s.push_str(&format!("  \"strategy\": \"{}\",\n", self.strategy));
         s.push_str(&format!(
+            "  \"repartition_interval\": {},\n",
+            match self.repartition_interval {
+                Some(n) => n.to_string(),
+                None => "null".to_string(),
+            }
+        ));
+        s.push_str(&format!(
             "  \"fingerprints_agree\": {},\n",
             self.fingerprints_agree()
         ));
@@ -132,7 +145,7 @@ impl LadderBench {
                  \"cycles\": {}, \"wall_ns\": {}, \"cycles_per_sec\": {:.1}, \
                  \"sync_ops\": {}, \"work_ns\": {}, \"transfer_ns\": {}, \
                  \"barrier_ns\": {}, \"active_ratio\": {:.4}, \
-                 \"fingerprint\": \"{:#018x}\"}}{}\n",
+                 \"repartition_events\": {}, \"fingerprint\": \"{:#018x}\"}}{}\n",
                 r.engine,
                 r.sched,
                 r.workers,
@@ -144,6 +157,7 @@ impl LadderBench {
                 r.transfer_ns,
                 r.barrier_ns,
                 r.active_ratio,
+                r.repartition_events,
                 r.fingerprint,
                 if i + 1 < self.rows.len() { "," } else { "" },
             ));
@@ -157,11 +171,14 @@ impl LadderBench {
     }
 }
 
-/// Run the benchmark matrix on the OLTP light-CPU model.
+/// Run the benchmark matrix on the OLTP light-CPU model. When `repart`
+/// is set, every ladder row runs with adaptive repartitioning (the
+/// serial rows are the fixed reference — fingerprints must still agree).
 pub fn run_oltp_light(
     cores: usize,
     worker_counts: &[usize],
     strategy: Option<PartitionStrategy>,
+    repart: Option<RepartitionPolicy>,
 ) -> LadderBench {
     let cfg = CpuSystemCfg {
         kind: CoreKind::Light,
@@ -206,16 +223,18 @@ pub fn run_oltp_light(
                 max_cycles: 5_000_000,
             };
             let part = resolve_partition(&model, w, strategy, &h, costs.as_deref());
-            let report = Sim::from_model(model)
+            let mut sim = Sim::from_model(model)
                 .partition(part)
                 .stop(stop)
                 .sched(sched)
                 .sync(SyncMethod::CommonAtomic)
                 .timed()
                 .fingerprinted()
-                .engine(Engine::Ladder)
-                .run()
-                .expect("ladder bench row");
+                .engine(Engine::Ladder);
+            if let Some(p) = repart {
+                sim = sim.repartition(p);
+            }
+            let report = sim.run().expect("ladder bench row");
             rows.push(BenchRow::from_stats("ladder", sched, w, units, &report.stats));
         }
     }
@@ -229,6 +248,7 @@ pub fn run_oltp_light(
             None => "paper",
             Some(s) => s.name(),
         },
+        repartition_interval: repart.map(|p| p.interval_cycles),
         rows,
     }
 }
@@ -247,17 +267,23 @@ pub fn print(b: &LadderBench) {
                 super::eng(r.cycles_per_sec),
                 r.sync_ops.to_string(),
                 format!("{:.3}", r.active_ratio),
+                r.repartition_events.to_string(),
                 format!("{:#018x}", r.fingerprint),
             ]
         })
         .collect();
     super::print_table(
         &format!(
-            "BENCH_ladder: {} ({} cores, {} units, strategy {}) — active/full speedup {:.2}x",
+            "BENCH_ladder: {} ({} cores, {} units, strategy {}, repartition {}) — \
+             active/full speedup {:.2}x",
             b.model,
             b.cores,
             b.units,
             b.strategy,
+            match b.repartition_interval {
+                Some(n) => format!("every {n}"),
+                None => "off".to_string(),
+            },
             b.speedup_active_vs_full()
         ),
         &[
@@ -267,6 +293,7 @@ pub fn print(b: &LadderBench) {
             "cyc/s",
             "sync-ops",
             "active",
+            "repart",
             "fingerprint",
         ],
         &rows,
@@ -279,7 +306,7 @@ mod tests {
 
     #[test]
     fn bench_report_is_consistent_and_serializes() {
-        let b = run_oltp_light(2, &[2], None);
+        let b = run_oltp_light(2, &[2], None, Some(RepartitionPolicy::every(256)));
         assert_eq!(b.rows.len(), 4, "2 serial + 2 ladder rows");
         assert!(
             b.fingerprints_agree(),
@@ -293,6 +320,8 @@ mod tests {
         let json = b.to_json();
         assert!(json.contains("\"fingerprints_agree\": true"));
         assert!(json.contains("\"scenario\": \"cpu-light\""));
+        assert!(json.contains("\"repartition_interval\": 256"));
+        assert!(json.contains("\"repartition_events\": "));
         assert!(json.contains("\"rows\": ["));
         // Crude structural sanity: balanced braces/brackets.
         assert_eq!(

@@ -12,7 +12,7 @@
 //! with the measured barrier cost (DESIGN.md §3); measured wall-clock of
 //! the true threaded run is reported alongside.
 
-use crate::engine::{Engine, Model, SchedMode, Sim, Stop};
+use crate::engine::{Engine, Model, RepartitionPolicy, SchedMode, Sim, Stop};
 use crate::sched::{partition, partition_with_costs, PartitionStrategy};
 use crate::stats::scaling::{model_parallel_time, BarrierCost, ClusterCosts, ScalingPoint};
 use crate::sync::SyncMethod;
@@ -101,15 +101,20 @@ pub fn run(
     barrier: &BarrierCost,
     strategy: Option<PartitionStrategy>,
 ) -> Fig12Output {
-    run_with(cores, worker_counts, barrier, strategy, SchedMode::FullScan)
+    run_with(cores, worker_counts, barrier, strategy, SchedMode::FullScan, None)
 }
 
+/// As [`run`], with the scheduling mode and (for the *measured* threaded
+/// ladder run only — the modeled series comes from the serial
+/// instrumented engine, which has a single cluster timeline and nothing
+/// to migrate) an adaptive-repartitioning policy.
 pub fn run_with(
     cores: usize,
     worker_counts: &[usize],
     barrier: &BarrierCost,
     strategy: Option<PartitionStrategy>,
     sched: SchedMode,
+    repart: Option<RepartitionPolicy>,
 ) -> Fig12Output {
     let mut rows = Vec::new();
     let mut serial_ns = 0u64;
@@ -157,14 +162,16 @@ pub fn run_with(
             max_cycles: 5_000_000,
         };
         let part2 = resolve_partition(&pmodel, w, strategy, &h2, unit_costs.as_deref());
-        let preport = Sim::from_model(pmodel)
+        let mut psim = Sim::from_model(pmodel)
             .partition(part2)
             .stop(stop2)
             .sched(sched)
             .sync(SyncMethod::CommonAtomic)
-            .engine(Engine::Ladder)
-            .run()
-            .expect("ladder sweep point");
+            .engine(Engine::Ladder);
+        if let Some(p) = repart {
+            psim = psim.repartition(p);
+        }
+        let preport = psim.run().expect("ladder sweep point");
         rows.push(Fig12Row {
             workers: w,
             modeled,
@@ -262,6 +269,7 @@ mod tests {
             &barrier,
             Some(PartitionStrategy::CostBalanced),
             SchedMode::ActiveList,
+            Some(crate::engine::RepartitionPolicy::every(64)),
         );
         // Partitioning and scheduling are performance knobs only: the
         // simulated execution (cycle count) must be identical.

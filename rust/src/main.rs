@@ -19,7 +19,7 @@
 //! and the flag-vs-file merge live in `util::cli::Cmd`.
 
 use scalesim::dc::{FatTreeCfg, TrafficCfg};
-use scalesim::engine::{Engine, SchedMode, Sim};
+use scalesim::engine::{Engine, RepartitionPolicy, SchedMode, Sim};
 use scalesim::harness::{ablation, bench_json, fig09, fig10_11, fig12_13, fig14, fig15_16};
 use scalesim::scenario;
 use scalesim::sched::PartitionStrategy;
@@ -35,11 +35,13 @@ fn usage() -> ! {
          \x20                [--engine auto|serial|partitioned|ladder]\n\
          \x20                [--sync common-atomic|atomic|spinlock|mutex]\n\
          \x20                [--strategy S] [--sched full|active] [--spin yield|pure]\n\
+         \x20                [--repartition N[,HYST[,MOVES]]] (adaptive rebalance)\n\
          \x20                [--cycles N] [--timed] [--fingerprint] [--counters]\n\
          \x20                [--json out.json] [--set k=v,k=v] (scenario keys)\n\
          \x20 barrier-bench  [--workers 1,2,4] [--cycles N] [--spin yield|pure]\n\
          \x20 oltp-light     [--cores N] [--workers 1,2,4,8,16] [--strategy S]\n\
-         \x20                [--sched full|active] [--bench-json BENCH_ladder.json]\n\
+         \x20                [--sched full|active] [--repartition N[,HYST[,MOVES]]]\n\
+         \x20                [--bench-json BENCH_ladder.json]\n\
          \x20 ooo            [--cores N] [--workers 1,2,4,8] [--workload oltp|stream|chase|compute|branchy]\n\
          \x20 datacenter     [--k N] [--packets N] [--window N] [--workers 1,2,...,24] [--paper-scale]\n\
          \x20 ablation       [--cores N]\n\
@@ -56,7 +58,7 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         argv,
         &[
             "scenario", "workers", "engine", "sync", "spin", "strategy", "sched", "cycles",
-            "seed", "set", "json",
+            "seed", "set", "json", "repartition",
         ],
         &["list-scenarios", "timed", "fingerprint", "counters"],
     )?;
@@ -86,6 +88,12 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     if let Some(seed) = c.get("seed") {
         cfg.set("seed", seed);
     }
+    // `--repartition` is a session key the facade reads from the scenario
+    // config (`Sim::scenario`); bridge the CLI spelling the same way so
+    // it wins over a file/`--set` value.
+    if let Some(spec) = c.from_cli("repartition") {
+        cfg.set("repartition", spec);
+    }
     let mut sim = Sim::scenario(name, &cfg)?
         .workers(c.get_usize("workers", 1)?)
         .engine(Engine::parse(c.get_or("engine", "auto"))?)
@@ -111,6 +119,18 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     println!("{}", report.summary());
     if report.stats.fingerprint != 0 {
         println!("  fingerprint {:#018x}", report.stats.fingerprint);
+    }
+    if report.stats.repart.checks > 0 {
+        println!(
+            "  repartition: {} events / {} checks",
+            report.stats.repart.events, report.stats.repart.checks
+        );
+        for e in &report.stats.repart.epochs {
+            println!(
+                "    cycle {}: imbalance {:.3} -> {:.3}, {} moved",
+                e.cycle, e.imbalance_before, e.imbalance_after, e.moves
+            );
+        }
     }
     if c.flag("counters")? {
         print!("{}", report.stats.counters);
@@ -139,7 +159,9 @@ fn cmd_barrier_bench(argv: &[String]) -> Result<(), String> {
 fn cmd_oltp_light(argv: &[String]) -> Result<(), String> {
     let c = Cmd::parse(
         argv,
-        &["cores", "workers", "strategy", "barrier", "sched", "bench-json"],
+        &[
+            "cores", "workers", "strategy", "barrier", "sched", "repartition", "bench-json",
+        ],
         &[],
     )?;
     let cores = c.get_usize("cores", 32)?;
@@ -149,19 +171,27 @@ fn cmd_oltp_light(argv: &[String]) -> Result<(), String> {
         Some(s) => Some(PartitionStrategy::parse(s, 42)?),
     };
     let sched = SchedMode::parse(c.get_or("sched", "full"))?;
+    let repart = match c.get("repartition") {
+        None => None,
+        Some(spec) => Some(RepartitionPolicy::parse(spec)?).filter(|p| p.enabled()),
+    };
     let bkind = c.get_or("barrier", "paper");
     println!("# barrier model: {bkind}");
     let barrier = fig09::barrier_model(bkind, &workers, 5_000);
     println!(
-        "# running OLTP light-CPU sweeps ({cores} cores, {} scheduling)...",
-        sched.name()
+        "# running OLTP light-CPU sweeps ({cores} cores, {} scheduling, repartition {})...",
+        sched.name(),
+        match repart {
+            Some(p) => format!("every {}", p.interval_cycles),
+            None => "off".to_string(),
+        }
     );
-    let out = fig12_13::run_with(cores, &workers, &barrier, strategy, sched);
+    let out = fig12_13::run_with(cores, &workers, &barrier, strategy, sched, repart);
     fig12_13::print(&out);
     // Perf trajectory artifact: full engine/sched matrix with fingerprints.
     if let Some(path) = c.get("bench-json") {
         println!("# measuring active-vs-full matrix for {path} ...");
-        let bench = bench_json::run_oltp_light(cores, &workers, strategy);
+        let bench = bench_json::run_oltp_light(cores, &workers, strategy, repart);
         bench_json::print(&bench);
         bench
             .write_file(std::path::Path::new(path))

@@ -94,6 +94,15 @@ pub fn list_lines() -> Vec<String> {
             lines.push(format!("             {k:<14} {v}"));
         }
     }
+    // Session-level keys the facade reads from every scenario config
+    // (`Sim::scenario`), in addition to the per-scenario keys above.
+    lines.push("any scenario:".to_string());
+    lines.push(
+        "             repartition    adaptive rebalance: N[,HYST[,MOVES]] (0 = off)".to_string(),
+    );
+    lines.push(
+        "             repartition-hysteresis / repartition-max-moves   overrides".to_string(),
+    );
     lines
 }
 

@@ -10,5 +10,5 @@ pub mod timers;
 
 pub use counters::{Counters, StatsMap};
 pub use hist::Histogram;
-pub use report::RunStats;
+pub use report::{RepartEpoch, RepartStats, RunStats};
 pub use timers::{PhaseTimers, UnitProfile};

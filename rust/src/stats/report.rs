@@ -4,6 +4,71 @@ use super::counters::StatsMap;
 use super::timers::PhaseTimers;
 use std::time::Duration;
 
+/// One adaptive-repartitioning migration (engine::repart): recorded only
+/// when units actually moved, so the log stays bounded by the hysteresis
+/// gate rather than the check cadence.
+#[derive(Debug, Clone)]
+pub struct RepartEpoch {
+    /// Cycle barrier the migration happened at.
+    pub cycle: u64,
+    /// Max/mean cluster load before the swap (1.0 = balanced).
+    pub imbalance_before: f64,
+    /// Max/mean cluster load of the applied assignment.
+    pub imbalance_after: f64,
+    /// Units that changed cluster.
+    pub moves: usize,
+    /// Post-migration per-cluster sampled cost (the projected load
+    /// vector the decision balanced).
+    pub cluster_costs: Vec<u64>,
+}
+
+/// Adaptive-repartitioning outcome of one run.
+#[derive(Debug, Clone, Default)]
+pub struct RepartStats {
+    /// Barrier-side decisions that actually migrated units.
+    pub events: u64,
+    /// Barrier-side decisions evaluated (including no-ops).
+    pub checks: u64,
+    /// One record per migration, in cycle order.
+    pub epochs: Vec<RepartEpoch>,
+    /// The unit→cluster mapping the run *ended* with; empty when no
+    /// migration happened (the initial partition was never changed).
+    pub final_partition: Vec<Vec<u32>>,
+}
+
+impl RepartStats {
+    /// Flat JSON fragment (no surrounding braces) for report embedding.
+    pub fn to_json_fields(&self) -> String {
+        let epochs: Vec<String> = self
+            .epochs
+            .iter()
+            .map(|e| {
+                format!(
+                    "{{\"cycle\": {}, \"imbalance_before\": {:.4}, \
+                     \"imbalance_after\": {:.4}, \"moves\": {}, \
+                     \"cluster_costs\": [{}]}}",
+                    e.cycle,
+                    e.imbalance_before,
+                    e.imbalance_after,
+                    e.moves,
+                    e.cluster_costs
+                        .iter()
+                        .map(|c| c.to_string())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+            .collect();
+        format!(
+            "\"repartition_events\": {}, \"repartition_checks\": {}, \
+             \"repartition_epochs\": [{}]",
+            self.events,
+            self.checks,
+            epochs.join(", ")
+        )
+    }
+}
+
 /// Everything measured during one simulation run.
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
@@ -22,6 +87,9 @@ pub struct RunStats {
     pub sync_ops: u64,
     /// State fingerprint after the final cycle (serial ≡ parallel checks).
     pub fingerprint: u64,
+    /// Adaptive-repartitioning outcome (ladder engine with a
+    /// `RepartitionPolicy`; default/empty otherwise).
+    pub repart: RepartStats,
 }
 
 impl RunStats {
@@ -112,6 +180,7 @@ mod tests {
                     barrier_ns: 2,
                     cycles: 5,
                     unit_ticks: 10,
+                    port_walks: 0,
                 },
                 PhaseTimers {
                     work_ns: 20,
@@ -119,6 +188,7 @@ mod tests {
                     barrier_ns: 3,
                     cycles: 5,
                     unit_ticks: 5,
+                    port_walks: 0,
                 },
             ],
             cycles: 5,

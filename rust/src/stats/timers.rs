@@ -21,6 +21,11 @@ pub struct PhaseTimers {
     /// scheduling the ratio of the two is the active-unit ratio — the
     /// fraction of unit-cycles that actually ran.
     pub unit_ticks: u64,
+    /// Dirty-port entries walked during transfer phases. Ports parked
+    /// behind a receiver-vacancy wake (active-list scheduling) stop
+    /// accruing walks — the saving the transfer-phase sleep/wake exists
+    /// to deliver.
+    pub port_walks: u64,
 }
 
 impl PhaseTimers {
@@ -46,6 +51,7 @@ impl PhaseTimers {
         self.barrier_ns += o.barrier_ns;
         self.cycles = self.cycles.max(o.cycles);
         self.unit_ticks += o.unit_ticks;
+        self.port_walks += o.port_walks;
     }
 }
 
@@ -92,6 +98,7 @@ mod tests {
             barrier_ns: 1,
             cycles: 100,
             unit_ticks: 400,
+            port_walks: 7,
         };
         let b = PhaseTimers {
             work_ns: 1,
@@ -99,11 +106,13 @@ mod tests {
             barrier_ns: 1,
             cycles: 50,
             unit_ticks: 100,
+            port_walks: 3,
         };
         a.merge(&b);
         assert_eq!(a.work_ns, 11);
         assert_eq!(a.total_ns(), 11 + 6 + 2);
         assert_eq!(a.cycles, 100);
         assert_eq!(a.unit_ticks, 500, "ticks sum across workers");
+        assert_eq!(a.port_walks, 10, "walks sum across workers");
     }
 }

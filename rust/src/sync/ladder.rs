@@ -34,7 +34,8 @@
 use super::syncpoint::{AtomicGate, Gate, MutexGate, SpinGate, SpinMode, SyncMethod};
 use crate::engine::active::{ActiveState, SchedMode};
 use crate::engine::model::{Model, RunOpts};
-use crate::stats::{PhaseTimers, RunStats};
+use crate::engine::repart::{ClusterState, CostSamples, RepartitionPolicy, Repartitioner};
+use crate::stats::{PhaseTimers, RepartStats, RunStats};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
 
@@ -286,6 +287,9 @@ pub(crate) struct ParallelOpts {
     pub method: SyncMethod,
     pub spin: SpinMode,
     pub run: RunOpts,
+    /// Adaptive mid-run repartitioning (`engine::repart`); disabled by
+    /// default.
+    pub repart: RepartitionPolicy,
 }
 
 impl ParallelOpts {
@@ -294,6 +298,7 @@ impl ParallelOpts {
             method,
             spin: SpinMode::Yield,
             run,
+            repart: RepartitionPolicy::default(),
         }
     }
 }
@@ -308,6 +313,9 @@ impl ParallelOpts {
 /// worker ticks only its awake units and wakes sleepers through the
 /// cluster-to-cluster boxes of `engine::active` (the serial engine runs
 /// the very same protocol, so all four engine/mode combinations agree).
+/// It also holds with adaptive repartitioning enabled: migrations swap
+/// data structures at the barrier, where every worker is parked, so they
+/// change *where* a unit runs, never *when* (`tests/repartition.rs`).
 pub(crate) fn run_ladder(
     model: &mut Model,
     partition: &[Vec<u32>],
@@ -317,7 +325,25 @@ pub(crate) fn run_ladder(
     assert!(workers >= 1, "need at least one worker cluster");
     let gates = LadderGates::new(opts.method, workers, opts.spin);
     let sched = opts.run.sched;
-    let active_state = ActiveState::new(partition, model.num_units());
+    let n_units = model.num_units();
+    let active_state = ActiveState::new(partition, n_units, model.num_ports());
+    // The migration-mutable per-cluster worklists (unit / active / dirty
+    // lists). Workers execute from these cells; the scheduler rewrites
+    // them only while every worker is parked at the cycle barrier.
+    let mut cluster_state = ClusterState::new(partition, model);
+    // SAFETY: workers have not started — trivially exclusive.
+    unsafe { model.rebuild_cluster_state(&cluster_state, &active_state) };
+    let repart_on = opts.repart.enabled() && workers > 1;
+    let samples = if repart_on {
+        Some(CostSamples::new(n_units))
+    } else {
+        None
+    };
+    let mut repartitioner = if repart_on {
+        Some(Repartitioner::new(opts.repart))
+    } else {
+        None
+    };
     let stop_flag = AtomicBool::new(false);
     // Published cycle count for the iteration-number validation the paper
     // describes in §5.1 ("validates that all workers are working on the
@@ -327,53 +353,65 @@ pub(crate) fn run_ladder(
     let t0 = Instant::now();
     let timed = opts.run.timed;
     let model_ref: &Model = model;
+    let clusters: &ClusterState = &cluster_state;
+    let samples_ref = samples.as_ref();
     let per_worker: Vec<PhaseTimers> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
-        for (w, units) in partition.iter().enumerate() {
+        for w in 0..workers {
             let gates = &gates;
             let stop_flag = &stop_flag;
             let active_state = &active_state;
             handles.push(scope.spawn(move || {
                 let mut t = PhaseTimers::new();
-                // This cluster's active-port worklist (sender-owned by
-                // construction: only this cluster's sends populate it).
-                let mut dirty: Vec<u32> = Vec::new();
-                // Sleep/wake: this cluster's active-unit list (all awake
-                // at cycle 0; quiescent units park after their first
-                // tick). Unused under full-scan.
-                let mut active: Vec<u32> = units.clone();
                 let mut cycle: u64 = 0;
                 // One work phase over this cluster, in the selected mode.
-                // SAFETY (both arms): partition is disjoint; this cluster
-                // owns these units — and their in-port hints and sleep
-                // flags — during the work phase.
-                let do_work = |cycle: u64,
-                               dirty: &mut Vec<u32>,
-                               active: &mut Vec<u32>,
-                               t: &mut PhaseTimers| match sched {
-                    SchedMode::ActiveList => unsafe {
-                        active_state.drain_wakes(w, active);
-                        t.unit_ticks +=
-                            model_ref.work_active(active, cycle, dirty, active_state);
-                    },
-                    SchedMode::FullScan => {
-                        for &u in units {
-                            unsafe { model_ref.work_one(u, cycle, dirty) };
+                // SAFETY (both arms): the partition is disjoint; this
+                // cluster owns its worklist cells, its units — and their
+                // in-port hints, sleep flags, and cost cells — during the
+                // work phase. The cells are re-borrowed every cycle
+                // because the scheduler may rewrite them between cycles
+                // (adaptive repartitioning) while this worker is parked.
+                let do_work = |cycle: u64, t: &mut PhaseTimers| unsafe {
+                    let dirty = clusters.dirty(w);
+                    match sched {
+                        SchedMode::ActiveList => {
+                            let active = clusters.active(w);
+                            active_state.drain_wakes(w, active);
+                            t.unit_ticks += model_ref.work_active(
+                                active,
+                                cycle,
+                                dirty,
+                                active_state,
+                                w,
+                                samples_ref,
+                            );
                         }
-                        t.unit_ticks += units.len() as u64;
+                        SchedMode::FullScan => {
+                            let units = clusters.units(w);
+                            for &u in units.iter() {
+                                model_ref.work_one_sampled(u, cycle, dirty, None, samples_ref);
+                            }
+                            t.unit_ticks += units.len() as u64;
+                        }
                     }
                 };
                 // One transfer phase over this cluster's dirty ports.
                 // SAFETY (both arms): the worklist holds only ports whose
                 // sender is in this cluster; wake posts go through this
                 // cluster's single-writer boxes.
-                let do_transfer = |cycle: u64, dirty: &mut Vec<u32>| match sched {
-                    SchedMode::ActiveList => unsafe {
-                        model_ref.transfer_dirty_wake(dirty, cycle, active_state, w)
-                    },
-                    SchedMode::FullScan => unsafe {
-                        model_ref.transfer_dirty(dirty, cycle)
-                    },
+                let do_transfer = |cycle: u64, t: &mut PhaseTimers| unsafe {
+                    let dirty = clusters.dirty(w);
+                    match sched {
+                        SchedMode::ActiveList => {
+                            active_state.drain_port_wakes(w, dirty);
+                            t.port_walks += dirty.len() as u64;
+                            model_ref.transfer_dirty_wake(dirty, cycle, active_state, w);
+                        }
+                        SchedMode::FullScan => {
+                            t.port_walks += dirty.len() as u64;
+                            model_ref.transfer_dirty(dirty, cycle);
+                        }
+                    }
                 };
                 // Paper Fig 7: wait(WORK); unlock(PHASE1).
                 gates.worker_wait_work(w, 0);
@@ -385,10 +423,10 @@ pub(crate) fn run_ladder(
                     // ---- work phase ----
                     if timed {
                         let tw = Instant::now();
-                        do_work(cycle, &mut dirty, &mut active, &mut t);
+                        do_work(cycle, &mut t);
                         t.work_ns += tw.elapsed().as_nanos() as u64;
                     } else {
-                        do_work(cycle, &mut dirty, &mut active, &mut t);
+                        do_work(cycle, &mut t);
                     }
                     gates.worker_close_phase1(w);
                     gates.worker_open_phase0(w);
@@ -398,11 +436,11 @@ pub(crate) fn run_ladder(
                         t.barrier_ns += tb.elapsed().as_nanos() as u64;
                         // ---- transfer phase ----
                         let tt = Instant::now();
-                        do_transfer(cycle, &mut dirty);
+                        do_transfer(cycle, &mut t);
                         t.transfer_ns += tt.elapsed().as_nanos() as u64;
                     } else {
                         gates.worker_wait_transfer(w, cycle);
-                        do_transfer(cycle, &mut dirty);
+                        do_transfer(cycle, &mut t);
                     }
                     gates.worker_close_phase0(w);
                     gates.worker_open_phase1(w);
@@ -425,7 +463,8 @@ pub(crate) fn run_ladder(
         let mut cycle: u64 = 0;
         loop {
             // Between ticks all workers are parked at wait(WORK): the
-            // scheduler has exclusive model access for the stop check.
+            // scheduler has exclusive model access for the stop check and
+            // the repartitioning hook.
             // SAFETY: exclusivity argument above; gates provide the
             // happens-before edges.
             let stop_now = unsafe { model_ref.should_stop_shared(&opts.run.stop, cycle) };
@@ -434,6 +473,18 @@ pub(crate) fn run_ladder(
                 // Release the workers so they can observe stop and exit.
                 gates.sched_open_work(cycle);
                 break;
+            }
+            if let Some(rp) = repartitioner.as_mut() {
+                // SAFETY: same exclusive window as the stop check.
+                unsafe {
+                    rp.maybe_repartition(
+                        samples_ref.expect("samples exist when repartitioning"),
+                        model_ref,
+                        clusters,
+                        &active_state,
+                        cycle,
+                    );
+                }
             }
             // tick():
             gates.sched_close_transfer();
@@ -461,6 +512,17 @@ pub(crate) fn run_ladder(
         );
     }
 
+    let repart = match repartitioner {
+        Some(rp) => {
+            let mut s = rp.stats;
+            if s.events > 0 {
+                s.final_partition = cluster_state.snapshot_partition();
+            }
+            s
+        }
+        None => RepartStats::default(),
+    };
+    cluster_state.recycle(model);
     let mut counters = model.counters().snapshot();
     counters.merge(&model.unit_stats());
     RunStats {
@@ -475,6 +537,7 @@ pub(crate) fn run_ladder(
         } else {
             0
         },
+        repart,
     }
 }
 

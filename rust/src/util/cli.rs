@@ -207,6 +207,18 @@ pub fn parse_usize_list(s: &str) -> Result<Vec<usize>, String> {
         .collect()
 }
 
+/// Parse an f64 allowing a trailing `%` (e.g. `5%` → `0.05`) — the
+/// natural way to write thresholds like the repartitioning hysteresis.
+pub fn parse_f64(s: &str) -> Result<f64, String> {
+    let (body, scale) = match s.strip_suffix('%') {
+        Some(b) => (b.trim(), 0.01),
+        None => (s, 1.0),
+    };
+    body.parse::<f64>()
+        .map(|v| v * scale)
+        .map_err(|e| format!("bad number {s:?}: {e}"))
+}
+
 /// Parse a u64 allowing `_` separators and `k`/`m`/`g` suffixes
 /// (e.g. `128k`, `3m`, `1_000_000`).
 pub fn parse_u64(s: &str) -> Result<u64, String> {
@@ -260,6 +272,14 @@ mod tests {
         assert_eq!(parse_u64("3m").unwrap(), 3_000_000);
         assert_eq!(parse_u64("1_000").unwrap(), 1_000);
         assert!(parse_u64("xx").is_err());
+    }
+
+    #[test]
+    fn f64_percent_suffix() {
+        assert!((parse_f64("0.25").unwrap() - 0.25).abs() < 1e-12);
+        assert!((parse_f64("5%").unwrap() - 0.05).abs() < 1e-12);
+        assert!((parse_f64("12.5 %").unwrap() - 0.125).abs() < 1e-12);
+        assert!(parse_f64("pct").is_err());
     }
 
     #[test]

@@ -13,8 +13,8 @@
 //! failure).
 
 use scalesim::engine::{
-    Ctx, Engine, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RunOpts, SchedMode,
-    Sim, Stop, Unit,
+    Ctx, Engine, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RepartitionPolicy,
+    RunOpts, SchedMode, Sim, Stop, Unit,
 };
 use scalesim::sched::PartitionStrategy;
 use scalesim::sync::SyncMethod;
@@ -489,6 +489,134 @@ fn sleep_capable_cpu_system_matrix() {
                     );
                     assert_eq!(stats.cycles, reference.cycles);
                 }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Adaptive-repartitioning determinism matrix (ISSUE 3): migration is a
+// barrier-side data-structure swap, so fingerprints must be bit-identical
+// across {repartition off, N=16, N=256} × {1, 2, 4 workers} × both
+// scheduling modes — regardless of when (or whether) the timing-driven
+// decisions fire on a given host.
+// ---------------------------------------------------------------------
+
+#[test]
+fn repartitioning_is_invisible_on_the_pipeline_matrix() {
+    let n = 8;
+    let cycles = 400;
+    let reference = {
+        let mut m = sleepy_pipeline(n, 60);
+        m.run_serial(RunOpts::cycles(cycles).fingerprinted())
+    };
+    for interval in [0u64, 16, 256] {
+        // Zero hysteresis: migrate on any projected improvement — the
+        // most migration-happy configuration is the strongest check.
+        let policy = RepartitionPolicy {
+            interval_cycles: interval,
+            hysteresis: 0.0,
+            max_moves: usize::MAX,
+        };
+        for workers in [1usize, 2, 4] {
+            for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
+                let stats = Sim::from_model(sleepy_pipeline(n, 60))
+                    .workers(workers)
+                    .sched(sched)
+                    .repartition(policy)
+                    .cycles(cycles)
+                    .fingerprinted()
+                    .engine(Engine::Ladder)
+                    .run()
+                    .expect("ladder run")
+                    .stats;
+                assert_eq!(
+                    stats.fingerprint,
+                    reference.fingerprint,
+                    "interval={interval} workers={workers} sched={}",
+                    sched.name()
+                );
+                assert_eq!(stats.cycles, cycles);
+                if interval == 0 || workers == 1 {
+                    assert_eq!(
+                        stats.repart.events, 0,
+                        "interval={interval} workers={workers}: nothing to migrate"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn repartitioning_is_invisible_on_the_cpu_system() {
+    use scalesim::cpu::isa::{OpClass, TraceOp, NO_REG};
+    use scalesim::cpu::Trace;
+    use scalesim::systems::{build_cpu_system, CpuSystemCfg};
+
+    let mk_traces = || {
+        (0..4u64)
+            .map(|c| Trace {
+                ops: (0..60u64)
+                    .map(|i| {
+                        if i % 3 == 0 {
+                            TraceOp::new(
+                                OpClass::Load,
+                                1,
+                                2,
+                                NO_REG,
+                                0x1000 + ((c * 64 + i * 8) % 4096),
+                                0,
+                                false,
+                            )
+                        } else {
+                            TraceOp::new(OpClass::Alu, 1, 1, 2, 0, 0, false)
+                        }
+                    })
+                    .collect(),
+            })
+            .collect::<Vec<_>>()
+    };
+    let cfg = CpuSystemCfg::default();
+    let (mut serial, h) = build_cpu_system(mk_traces(), &cfg);
+    let stop = Stop::CounterAtLeast {
+        counter: h.cores_done,
+        target: 4,
+        max_cycles: 100_000,
+    };
+    let reference = serial.run_serial(RunOpts::with_stop(stop).fingerprinted());
+
+    for interval in [16u64, 256] {
+        let policy = RepartitionPolicy {
+            interval_cycles: interval,
+            hysteresis: 0.0,
+            max_moves: usize::MAX,
+        };
+        for workers in [2usize, 4] {
+            for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
+                let (m, h) = build_cpu_system(mk_traces(), &cfg);
+                let stop = Stop::CounterAtLeast {
+                    counter: h.cores_done,
+                    target: 4,
+                    max_cycles: 100_000,
+                };
+                let stats = Sim::from_model(m)
+                    .workers(workers)
+                    .sched(sched)
+                    .repartition(policy)
+                    .stop(stop)
+                    .fingerprinted()
+                    .engine(Engine::Ladder)
+                    .run()
+                    .expect("ladder run")
+                    .stats;
+                assert_eq!(
+                    stats.fingerprint,
+                    reference.fingerprint,
+                    "interval={interval} workers={workers} sched={}",
+                    sched.name()
+                );
+                assert_eq!(stats.cycles, reference.cycles);
             }
         }
     }

@@ -1,0 +1,288 @@
+//! Adaptive mid-run repartitioning (ISSUE 3) and transfer-phase
+//! sleep/wake, end to end:
+//!
+//! 1. A migration stress: per-unit costs flip mid-run, the policy must
+//!    actually move units (`repartition_events > 0`) — and the simulated
+//!    execution must stay bit-identical to the serial reference, because
+//!    migration changes *where* a unit runs, never *when*.
+//! 2. Port parking: a port blocked on a stalling receiver leaves the
+//!    dirty list and comes back through the receiver-vacancy wake, so the
+//!    transfer phase stops re-walking it every cycle.
+
+use scalesim::engine::{
+    Ctx, Engine, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RepartitionPolicy,
+    RunOpts, SchedMode, Sim, Unit,
+};
+use scalesim::util::config::Config;
+
+// ---------------------------------------------------------------------
+// Migration stress: cost flip mid-run
+// ---------------------------------------------------------------------
+
+/// A unit whose work cost is a function of the cycle: heavy (a long
+/// deterministic mix loop) on one side of `flip_at`, nearly free on the
+/// other. State is a pure function of (id, cycles executed), so any
+/// engine, partition, or migration schedule must produce the same
+/// fingerprint — and a migration that ever skipped or repeated a tick
+/// would be caught.
+struct PhasedUnit {
+    id: u64,
+    heavy_before_flip: bool,
+    flip_at: u64,
+    acc: u64,
+}
+
+impl Unit for PhasedUnit {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        let heavy = (ctx.cycle < self.flip_at) == self.heavy_before_flip;
+        if heavy {
+            let mut x = self.acc ^ self.id ^ ctx.cycle;
+            for _ in 0..2_000 {
+                x = x.wrapping_mul(0x100000001B3).wrapping_add(1);
+            }
+            self.acc = self.acc.wrapping_add(x);
+        } else {
+            self.acc = self.acc.wrapping_add(ctx.cycle ^ self.id);
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.acc);
+    }
+
+    fn always_active(&self) -> bool {
+        true // cost model runs every cycle; never park
+    }
+}
+
+/// 8 independent units: 0–3 heavy before the flip, 4–7 heavy after.
+fn phased_model(flip_at: u64) -> Model {
+    let mut mb = ModelBuilder::new();
+    for i in 0..8u64 {
+        mb.add_unit(
+            &format!("ph{i}"),
+            Box::new(PhasedUnit {
+                id: i,
+                heavy_before_flip: i < 4,
+                flip_at,
+                acc: 0,
+            }),
+        );
+    }
+    mb.build().unwrap()
+}
+
+#[test]
+fn cost_flip_triggers_migration_and_preserves_fingerprints() {
+    let cycles = 3_000;
+    let flip_at = 1_500;
+    let reference = phased_model(flip_at).run_serial(RunOpts::cycles(cycles).fingerprinted());
+
+    // All heavy units start on cluster 0: massively imbalanced, so the
+    // first barrier decision must migrate (heavy/light cost ratio is
+    // ~1000x — far beyond any timing noise).
+    let report = Sim::from_model(phased_model(flip_at))
+        .partition(vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]])
+        .repartition(RepartitionPolicy::every(100))
+        .cycles(cycles)
+        .fingerprinted()
+        .engine(Engine::Ladder)
+        .run()
+        .expect("ladder run");
+    assert!(
+        report.repartition_events() >= 1,
+        "imbalanced start + cost flip must migrate: {:?}",
+        report.stats.repart
+    );
+    assert_eq!(
+        report.fingerprint(),
+        reference.fingerprint,
+        "migration must be semantically invisible"
+    );
+    assert_eq!(report.stats.cycles, cycles);
+    // The epochs record what the decision saw: a real improvement, at
+    // least one unit moved, and a full projected cost vector.
+    let first = &report.stats.repart.epochs[0];
+    assert!(first.moves >= 1);
+    assert!(
+        first.imbalance_before > first.imbalance_after,
+        "recorded imbalance must improve: {first:?}"
+    );
+    assert_eq!(first.cluster_costs.len(), 2);
+    // The run ended on a different mapping than it started.
+    assert_eq!(report.partition, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+    assert_ne!(report.final_partition(), report.partition.as_slice());
+    assert_eq!(
+        report.final_partition().iter().map(|c| c.len()).sum::<usize>(),
+        8,
+        "final mapping still covers every unit"
+    );
+}
+
+#[test]
+fn max_moves_caps_each_epoch() {
+    let cycles = 2_000;
+    let reference = phased_model(1_000).run_serial(RunOpts::cycles(cycles).fingerprinted());
+    let policy = RepartitionPolicy {
+        interval_cycles: 100,
+        hysteresis: 0.05,
+        max_moves: 1,
+    };
+    let report = Sim::from_model(phased_model(1_000))
+        .partition(vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]])
+        .repartition(policy)
+        .cycles(cycles)
+        .fingerprinted()
+        .engine(Engine::Ladder)
+        .run()
+        .expect("ladder run");
+    assert!(report.repartition_events() >= 1);
+    assert!(
+        report.stats.repart.epochs.iter().all(|e| e.moves <= 1),
+        "max_moves=1 violated: {:?}",
+        report.stats.repart.epochs
+    );
+    assert_eq!(report.fingerprint(), reference.fingerprint);
+}
+
+#[test]
+fn scenario_config_key_drives_repartitioning() {
+    let mut cfg = Config::new();
+    cfg.set("stages", 6);
+    cfg.set("messages", 40);
+    cfg.set("cycles", 300);
+    let reference = Sim::scenario("pipeline", &cfg)
+        .unwrap()
+        .fingerprinted()
+        .run()
+        .unwrap();
+    cfg.set("repartition", "16,0.0");
+    let r = Sim::scenario("pipeline", &cfg)
+        .unwrap()
+        .workers(2)
+        .sched(SchedMode::ActiveList)
+        .fingerprinted()
+        .run()
+        .unwrap();
+    assert_eq!(r.fingerprint(), reference.fingerprint());
+    assert!(
+        r.stats.repart.checks >= 1,
+        "the config key must reach the ladder: {:?}",
+        r.stats.repart
+    );
+    // A malformed spec fails the session build, not the run.
+    cfg.set("repartition", "not-a-number");
+    assert!(Sim::scenario("pipeline", &cfg).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Transfer-phase sleep/wake: blocked ports park behind a vacancy wake
+// ---------------------------------------------------------------------
+
+/// Sends `limit` messages as fast as back pressure allows.
+struct Flood {
+    out: OutPort,
+    sent: u64,
+    limit: u64,
+}
+
+impl Unit for Flood {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        if self.sent < self.limit && ctx.out_vacant(self.out) {
+            ctx.send(self.out, Msg::with(1, self.sent, 0, 0)).unwrap();
+            self.sent += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.sent);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.sent >= self.limit
+    }
+}
+
+/// Consumes only every 8th cycle — the port upstream spends most of its
+/// life blocked on a full receiver queue.
+struct SlowDrain {
+    inp: InPort,
+    received: u64,
+}
+
+impl Unit for SlowDrain {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        if ctx.cycle % 8 == 0 {
+            while let Some(m) = ctx.recv(self.inp) {
+                assert_eq!(m.a, self.received, "FIFO broken");
+                self.received += 1;
+            }
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.received);
+    }
+}
+
+fn blocked_pipeline(limit: u64) -> Model {
+    let mut mb = ModelBuilder::new();
+    let a = mb.reserve_unit("flood");
+    let b = mb.reserve_unit("slow");
+    let (tx, rx) = mb.connect(a, b, PortCfg::new(1, 1));
+    mb.install(
+        a,
+        Box::new(Flood {
+            out: tx,
+            sent: 0,
+            limit,
+        }),
+    );
+    mb.install(b, Box::new(SlowDrain { inp: rx, received: 0 }));
+    mb.build().unwrap()
+}
+
+#[test]
+fn blocked_ports_park_instead_of_rewalking() {
+    let cycles = 320;
+    let full = blocked_pipeline(30).run_serial(RunOpts::cycles(cycles).fingerprinted());
+    let active =
+        blocked_pipeline(30).run_serial(RunOpts::cycles(cycles).fingerprinted().active_list());
+    assert_eq!(
+        active.fingerprint, full.fingerprint,
+        "port parking must be semantically invisible"
+    );
+    let full_walks = full.per_worker[0].port_walks;
+    let active_walks = active.per_worker[0].port_walks;
+    // Full scan re-walks the blocked port every cycle (~cycles walks);
+    // parking wakes it only when the receiver actually frees a slot.
+    assert!(
+        active_walks < full_walks / 2,
+        "parking must cut port walks: active={active_walks} full={full_walks}"
+    );
+    assert!(full_walks > 200, "sanity: the port really was hot-blocked");
+}
+
+#[test]
+fn port_parking_holds_across_engines_and_workers() {
+    let cycles = 320;
+    let reference = blocked_pipeline(30).run_serial(RunOpts::cycles(cycles).fingerprinted());
+    for workers in [1usize, 2] {
+        for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
+            let r = Sim::from_model(blocked_pipeline(30))
+                .workers(workers)
+                .sched(sched)
+                .cycles(cycles)
+                .fingerprinted()
+                .engine(Engine::Ladder)
+                .run()
+                .expect("ladder run");
+            assert_eq!(
+                r.fingerprint(),
+                reference.fingerprint,
+                "workers={workers} sched={}",
+                sched.name()
+            );
+        }
+    }
+}
