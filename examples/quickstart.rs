@@ -1,28 +1,46 @@
-//! Quickstart: build the paper's Figure-5 three-unit model by hand, run it
-//! serially and in parallel through the `Sim` session facade, and verify
-//! they agree — the smallest complete tour of the public API.
+//! Quickstart: build the paper's Figure-5 three-unit model through the
+//! typed authoring API (`engine::wire`), run it serially and in parallel
+//! through the `Sim` session facade, and verify they agree — the smallest
+//! complete tour of the public API.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use scalesim::engine::{
-    Ctx, Engine, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, Sim, Unit,
+    Ctx, Engine, Fnv, IfaceSpec, In, Msg, Out, Payload, PortCfg, Sim, Unit, Wire,
 };
 use scalesim::sync::SyncMethod;
 
+/// The model's one message type: a single value, encoded zero-cost into
+/// the POD `Msg` scalar words.
+#[derive(Debug, Clone, Copy)]
+struct Val {
+    v: u64,
+}
+
+impl Payload for Val {
+    fn encode(self) -> Msg {
+        Msg::with(1, self.v, 0, 0)
+    }
+
+    fn decode(m: &Msg) -> Self {
+        Val { v: m.a }
+    }
+}
+
 /// Unit A of Fig 5: produces a number stream on two output ports.
 struct UnitA {
-    out0: OutPort,
-    out1: OutPort,
+    out0: Out<Val>,
+    out1: Out<Val>,
     n: u64,
 }
 
 impl Unit for UnitA {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
-        if ctx.out_vacant(self.out0) && ctx.out_vacant(self.out1) {
-            ctx.send(self.out0, Msg::with(1, self.n, 0, 0)).unwrap();
-            ctx.send(self.out1, Msg::with(1, self.n * 10, 0, 0)).unwrap();
+        if self.out0.vacant(ctx) && self.out1.vacant(ctx) {
+            self.out0.send(ctx, Val { v: self.n }).unwrap();
+            self.out1.send(ctx, Val { v: self.n * 10 }).unwrap();
             self.n += 1;
         }
     }
@@ -34,16 +52,16 @@ impl Unit for UnitA {
 
 /// Unit B: transforms in1 → out2 (doubles the value).
 struct UnitB {
-    in1: InPort,
-    out2: OutPort,
+    in1: In<Val>,
+    out2: Out<Val>,
 }
 
 impl Unit for UnitB {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
-        if ctx.out_vacant(self.out2) {
-            if let Some(mut m) = ctx.recv(self.in1) {
-                m.a *= 2;
-                ctx.send(self.out2, m).unwrap();
+        if self.out2.vacant(ctx) {
+            if let Some(mut m) = self.in1.recv(ctx) {
+                m.v *= 2;
+                self.out2.send(ctx, m).unwrap();
             }
         }
     }
@@ -51,18 +69,18 @@ impl Unit for UnitB {
 
 /// Unit C: sums everything it receives from two inputs.
 struct UnitC {
-    in2: InPort,
-    in3: InPort,
+    in2: In<Val>,
+    in3: In<Val>,
     pub sum: u64,
 }
 
 impl Unit for UnitC {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
-        while let Some(m) = ctx.recv(self.in2) {
-            self.sum += m.a;
+        while let Some(m) = self.in2.recv(ctx) {
+            self.sum += m.v;
         }
-        while let Some(m) = ctx.recv(self.in3) {
-            self.sum += m.a;
+        while let Some(m) = self.in3.recv(ctx) {
+            self.sum += m.v;
         }
     }
 
@@ -75,26 +93,58 @@ impl Unit for UnitC {
     }
 }
 
-fn build() -> Model {
-    let mut mb = ModelBuilder::new();
-    let a = mb.reserve_unit("A");
-    let b = mb.reserve_unit("B");
-    let c = mb.reserve_unit("C");
-    // A → B (out0/in1), B → C (out2/in2), A → C (out1/in3): paper Fig 5.
-    let (out0, in1) = mb.connect(a, b, PortCfg::new(2, 1));
-    let (out2, in2) = mb.connect(b, c, PortCfg::new(2, 1));
-    let (out1, in3) = mb.connect(a, c, PortCfg::new(2, 1));
-    mb.install(a, Box::new(UnitA { out0, out1, n: 1 }));
-    mb.install(b, Box::new(UnitB { in1, out2 }));
-    mb.install(
-        c,
-        Box::new(UnitC {
-            in2,
-            in3,
-            sum: 0,
-        }),
+/// Declare the three components and join them by interface name — the
+/// wiring layer validates that every declared interface is connected and
+/// records the topology for locality-aware partitioning.
+fn build() -> scalesim::engine::Model {
+    let link = PortCfg::new(2, 1);
+    let mut wire = Wire::new();
+    let a = wire.add_fn(
+        "A",
+        vec![],
+        vec![
+            IfaceSpec::new("out0", link).of::<Val>(),
+            IfaceSpec::new("out1", link).of::<Val>(),
+        ],
+        |p| {
+            Box::new(UnitA {
+                out0: p.output("out0"),
+                out1: p.output("out1"),
+                n: 1,
+            })
+        },
     );
-    mb.build().expect("wiring")
+    let b = wire.add_fn(
+        "B",
+        vec![IfaceSpec::new("in1", link).of::<Val>()],
+        vec![IfaceSpec::new("out2", link).of::<Val>()],
+        |p| {
+            Box::new(UnitB {
+                in1: p.input("in1"),
+                out2: p.output("out2"),
+            })
+        },
+    );
+    let c = wire.add_fn(
+        "C",
+        vec![
+            IfaceSpec::new("in2", link).of::<Val>(),
+            IfaceSpec::new("in3", link).of::<Val>(),
+        ],
+        vec![],
+        |p| {
+            Box::new(UnitC {
+                in2: p.input("in2"),
+                in3: p.input("in3"),
+                sum: 0,
+            })
+        },
+    );
+    // A → B (out0/in1), B → C (out2/in2), A → C (out1/in3): paper Fig 5.
+    wire.join(a, "out0", b, "in1");
+    wire.join(b, "out2", c, "in2");
+    wire.join(a, "out1", c, "in3");
+    wire.build().expect("every declared interface is joined")
 }
 
 fn main() {
@@ -124,6 +174,7 @@ fn main() {
         .expect("parallel run");
     println!("parallel: {}", p.stats.summary());
     println!("  C.sum = {}", p.stats.counters.get("c.sum"));
+    println!("  cross-cluster ports = {}", p.stats.cross_cluster_ports);
 
     assert_eq!(
         s.fingerprint(),

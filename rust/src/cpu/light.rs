@@ -7,8 +7,8 @@
 //! This is the model class the paper runs at "100s of KHz per core".
 
 use super::isa::{OpClass, TraceOp};
-use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
-use crate::mem::msg::MemMsg;
+use crate::engine::{Ctx, Fnv, In, Out, Unit};
+use crate::mem::msg::{MemMsg, MemPacket};
 use crate::stats::counters::CounterId;
 use crate::stats::StatsMap;
 
@@ -19,8 +19,8 @@ pub struct LightCore {
     pub core: u32,
     trace: Vec<TraceOp>,
     pos: usize,
-    to_l1: OutPort,
-    from_l1: InPort,
+    to_l1: Out<MemPacket>,
+    from_l1: In<MemPacket>,
     /// Multiply latency: design rule 2 models an n-cycle op as "1-cycle op
     /// + (n−1)-cycle delay", which lets a dependent op read the result in
     /// the completion cycle (the paper's same-cycle relaxation, §3). The
@@ -49,8 +49,8 @@ impl LightCore {
     pub fn new(
         core: u32,
         trace: Vec<TraceOp>,
-        to_l1: OutPort,
-        from_l1: InPort,
+        to_l1: Out<MemPacket>,
+        from_l1: In<MemPacket>,
         done_counter: CounterId,
     ) -> Self {
         LightCore {
@@ -82,16 +82,16 @@ impl LightCore {
 impl Unit for LightCore {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
         // Drain L1 responses.
-        while let Some(m) = ctx.recv(self.from_l1) {
-            match MemMsg::from_u32(m.kind) {
-                Some(MemMsg::CoreResp) => {
-                    if self.waiting_tag == Some(m.c) {
+        while let Some(p) = self.from_l1.recv(ctx) {
+            match p.kind {
+                MemMsg::CoreResp => {
+                    if self.waiting_tag == Some(p.c) {
                         self.waiting_tag = None;
                         self.retired += 1; // the blocked load/atomic retires
                         self.pos += 1;
                     }
                 }
-                Some(MemMsg::CoreStAck) => {
+                MemMsg::CoreStAck => {
                     debug_assert!(self.stores_inflight > 0);
                     self.stores_inflight -= 1;
                 }
@@ -130,7 +130,7 @@ impl Unit for LightCore {
                 self.pos += 1;
             }
             OpClass::Load | OpClass::Atomic => {
-                if !ctx.out_vacant(self.to_l1) {
+                if !self.to_l1.vacant(ctx) {
                     self.stall_mem += 1;
                     return;
                 }
@@ -141,7 +141,8 @@ impl Unit for LightCore {
                 };
                 let tag = self.next_tag;
                 self.next_tag += 1;
-                ctx.send(self.to_l1, Msg::with(kind as u32, op.addr, 0, tag))
+                self.to_l1
+                    .send(ctx, MemPacket::new(kind, op.addr, 0, tag))
                     .expect("vacancy checked");
                 self.waiting_tag = Some(tag);
                 // Retires when the response arrives.
@@ -151,13 +152,14 @@ impl Unit for LightCore {
                     self.stall_store += 1;
                     return;
                 }
-                if !ctx.out_vacant(self.to_l1) {
+                if !self.to_l1.vacant(ctx) {
                     self.stall_mem += 1;
                     return;
                 }
                 let tag = self.next_tag;
                 self.next_tag += 1;
-                ctx.send(self.to_l1, Msg::with(MemMsg::CoreSt as u32, op.addr, 0, tag))
+                self.to_l1
+                    .send(ctx, MemPacket::new(MemMsg::CoreSt, op.addr, 0, tag))
                     .expect("vacancy checked");
                 self.stores_inflight += 1;
                 self.retired += 1; // store retires into the buffer

@@ -19,8 +19,8 @@ pub mod bpred;
 
 use self::bpred::Gshare;
 use super::isa::{OpClass, TraceOp, NO_REG};
-use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
-use crate::mem::msg::MemMsg;
+use crate::engine::{Ctx, Fnv, In, Out, Unit};
+use crate::mem::msg::{MemMsg, MemPacket};
 use crate::stats::counters::CounterId;
 use crate::stats::StatsMap;
 use std::collections::VecDeque;
@@ -86,8 +86,8 @@ pub struct OooCore {
     cfg: OooCfg,
     trace: Vec<TraceOp>,
     fetch_pos: usize,
-    to_l1: OutPort,
-    from_l1: InPort,
+    to_l1: Out<MemPacket>,
+    from_l1: In<MemPacket>,
     rob: VecDeque<RobEntry>,
     /// seq → done?, for dependency checks of entries already committed.
     committed_up_to: u64,
@@ -118,8 +118,8 @@ impl OooCore {
         core: u32,
         trace: Vec<TraceOp>,
         cfg: OooCfg,
-        to_l1: OutPort,
-        from_l1: InPort,
+        to_l1: Out<MemPacket>,
+        from_l1: In<MemPacket>,
         done_counter: CounterId,
     ) -> Self {
         OooCore {
@@ -301,34 +301,36 @@ impl OooCore {
                         }
                         Some(false) => continue, // wait for the store
                         None => {
-                            if !ctx.out_vacant(self.to_l1) {
+                            if !self.to_l1.vacant(ctx) {
                                 continue;
                             }
                             mem_free -= 1;
                             let tag = self.next_tag;
                             self.next_tag += 1;
-                            ctx.send(
-                                self.to_l1,
-                                Msg::with(MemMsg::CoreLd as u32, self.rob[i].op.addr, 0, tag),
-                            )
-                            .expect("vacancy checked");
+                            self.to_l1
+                                .send(
+                                    ctx,
+                                    MemPacket::new(MemMsg::CoreLd, self.rob[i].op.addr, 0, tag),
+                                )
+                                .expect("vacancy checked");
                             self.rob[i].state = RobState::Mem(tag);
                         }
                     }
                 }
                 OpClass::Atomic => {
                     // Conservative: atomics issue only at ROB head.
-                    if i != 0 || mem_free == 0 || !ctx.out_vacant(self.to_l1) {
+                    if i != 0 || mem_free == 0 || !self.to_l1.vacant(ctx) {
                         continue;
                     }
                     mem_free -= 1;
                     let tag = self.next_tag;
                     self.next_tag += 1;
-                    ctx.send(
-                        self.to_l1,
-                        Msg::with(MemMsg::CoreAmo as u32, self.rob[i].op.addr, 0, tag),
-                    )
-                    .expect("vacancy checked");
+                    self.to_l1
+                        .send(
+                            ctx,
+                            MemPacket::new(MemMsg::CoreAmo, self.rob[i].op.addr, 0, tag),
+                        )
+                        .expect("vacancy checked");
                     self.rob[i].state = RobState::Mem(tag);
                 }
                 OpClass::Store => {
@@ -366,16 +368,14 @@ impl OooCore {
             }
             // Stores write through to L1 at commit.
             if head.op.class() == OpClass::Store {
-                if !ctx.out_vacant(self.to_l1) {
+                if !self.to_l1.vacant(ctx) {
                     break;
                 }
                 let tag = self.next_tag;
                 self.next_tag += 1;
-                ctx.send(
-                    self.to_l1,
-                    Msg::with(MemMsg::CoreSt as u32, head.op.addr, 0, tag),
-                )
-                .expect("vacancy checked");
+                self.to_l1
+                    .send(ctx, MemPacket::new(MemMsg::CoreSt, head.op.addr, 0, tag))
+                    .expect("vacancy checked");
                 self.stores_inflight += 1;
             }
             let e = self.rob.pop_front().unwrap();
@@ -389,10 +389,10 @@ impl Unit for OooCore {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
         let cycle = ctx.cycle;
         // Memory responses.
-        while let Some(m) = ctx.recv(self.from_l1) {
-            match MemMsg::from_u32(m.kind) {
-                Some(MemMsg::CoreResp) => {
-                    let tag = m.c;
+        while let Some(p) = self.from_l1.recv(ctx) {
+            match p.kind {
+                MemMsg::CoreResp => {
+                    let tag = p.c;
                     for i in 0..self.rob.len() {
                         if self.rob[i].state == RobState::Mem(tag) {
                             self.rob[i].state = RobState::Done;
@@ -400,7 +400,7 @@ impl Unit for OooCore {
                         }
                     }
                 }
-                Some(MemMsg::CoreStAck) => {
+                MemMsg::CoreStAck => {
                     debug_assert!(self.stores_inflight > 0);
                     self.stores_inflight -= 1;
                 }

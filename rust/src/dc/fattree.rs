@@ -11,10 +11,10 @@
 //! locality-aware clustering the paper proposes as future work falls out
 //! of construction order.
 
-use super::host::Host;
+use super::host::{DcPacket, Host};
 use super::switch::{Switch, SwitchRole};
 use super::traffic::{packets_by_host, TrafficCfg};
-use crate::engine::{Model, ModelBuilder, PortCfg};
+use crate::engine::{Model, ModelBuilder, PortCfg, Transit};
 use crate::stats::counters::CounterId;
 
 #[derive(Debug, Clone)]
@@ -140,7 +140,8 @@ pub fn build_fattree(cfg: &FatTreeCfg) -> (Model, FatTreeHandles) {
     let host_link = PortCfg::new(cfg.buffer, cfg.link_delay);
     let fabric_link = PortCfg::new(cfg.buffer, cfg.link_delay + cfg.pipeline);
 
-    // Host ↔ edge.
+    // Host ↔ edge. Host links carry weight 2: a host belongs with its
+    // edge switch before anything else in a locality partition.
     let per_host = packets_by_host(&traffic);
     for hid in 0..hosts {
         let pod = hid / hosts_per_pod;
@@ -148,9 +149,9 @@ pub fn build_fattree(cfg: &FatTreeCfg) -> (Model, FatTreeHandles) {
         let local = hid % half;
         let hu = host_units[hid as usize];
         let eu = edge_units[(pod * half + e) as usize];
-        let (h2e, e_in) = mb.connect(hu, eu, host_link);
-        let (e_out, h_in) = mb.connect(eu, hu, host_link);
-        edges[(pod * half + e) as usize].set_port(local, e_in, e_out);
+        let (h2e, e_in) = mb.link_weighted::<DcPacket>(hu, eu, host_link, 2);
+        let (e_out, h_in) = mb.link_weighted::<DcPacket>(eu, hu, host_link, 2);
+        edges[(pod * half + e) as usize].set_port(local, e_in.transit(), e_out.transit());
         mb.install(
             hu,
             Box::new(Host::new(
@@ -169,8 +170,8 @@ pub fn build_fattree(cfg: &FatTreeCfg) -> (Model, FatTreeHandles) {
             for a in 0..half {
                 let eu = edge_units[(pod * half + e) as usize];
                 let au = agg_units[(pod * half + a) as usize];
-                let (e2a, a_in) = mb.connect(eu, au, fabric_link);
-                let (a2e, e_in) = mb.connect(au, eu, fabric_link);
+                let (e2a, a_in) = mb.link::<Transit>(eu, au, fabric_link);
+                let (a2e, e_in) = mb.link::<Transit>(au, eu, fabric_link);
                 edges[(pod * half + e) as usize].set_port(half + a, e_in, e2a);
                 aggs[(pod * half + a) as usize].set_port(e, a_in, a2e);
             }
@@ -184,8 +185,8 @@ pub fn build_fattree(cfg: &FatTreeCfg) -> (Model, FatTreeHandles) {
                 let au = agg_units[(pod * half + a) as usize];
                 let c = a * half + j;
                 let cu = core_units[c as usize];
-                let (a2c, c_in) = mb.connect(au, cu, fabric_link);
-                let (c2a, a_in) = mb.connect(cu, au, fabric_link);
+                let (a2c, c_in) = mb.link::<Transit>(au, cu, fabric_link);
+                let (c2a, a_in) = mb.link::<Transit>(cu, au, fabric_link);
                 aggs[(pod * half + a) as usize].set_port(half + j, a_in, a2c);
                 cores[c as usize].set_port(pod, c_in, c2a);
             }

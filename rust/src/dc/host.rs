@@ -3,21 +3,51 @@
 //! it, recording end-to-end latency.
 
 use super::traffic::Packet;
-use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
-use crate::noc::{net_b, net_dst};
+use crate::engine::{Ctx, Fnv, In, Msg, Out, Payload, Unit};
+use crate::noc::{net_b, net_dst, net_src};
 use crate::stats::counters::CounterId;
 use crate::stats::{Histogram, StatsMap};
 
 /// Packet message kind (single namespace; the fabric routes on `b`).
 pub const PKT: u32 = 0x200;
 
+/// A data-center packet on the wire: the typed payload of host NICs.
+/// Encoding: `kind` = [`PKT`], `a` = packet id, `b` = packed
+/// `(src_host, dst_host)`, `c` = inject cycle. Switches are pass-through
+/// `Transit` units routing on `b`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DcPacket {
+    pub id: u64,
+    pub src: u32,
+    pub dst: u32,
+    pub inject: u64,
+}
+
+impl Payload for DcPacket {
+    fn encode(self) -> Msg {
+        let mut m = Msg::with(PKT, self.id, 0, self.inject);
+        m.b = net_b(self.src, self.dst);
+        m
+    }
+
+    fn decode(m: &Msg) -> Self {
+        assert_eq!(m.kind, PKT, "foreign kind on a host port");
+        DcPacket {
+            id: m.a,
+            src: net_src(m.b),
+            dst: net_dst(m.b),
+            inject: m.c,
+        }
+    }
+}
+
 pub struct Host {
     pub id: u32,
     /// This host's outgoing packets, sorted by inject cycle.
     sendlist: Vec<Packet>,
     next: usize,
-    to_net: OutPort,
-    from_net: InPort,
+    to_net: Out<DcPacket>,
+    from_net: In<DcPacket>,
     delivered: CounterId,
     latency: Histogram,
     received: u64,
@@ -30,8 +60,8 @@ impl Host {
     pub fn new(
         id: u32,
         sendlist: Vec<Packet>,
-        to_net: OutPort,
-        from_net: InPort,
+        to_net: Out<DcPacket>,
+        from_net: In<DcPacket>,
         delivered: CounterId,
     ) -> Self {
         Host {
@@ -56,20 +86,27 @@ impl Host {
 impl Unit for Host {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
         // Sink arrivals.
-        while let Some(m) = ctx.recv(self.from_net) {
-            debug_assert_eq!(m.kind, PKT);
-            debug_assert_eq!(net_dst(m.b), self.id);
+        while let Some(pkt) = self.from_net.recv(ctx) {
+            debug_assert_eq!(pkt.dst, self.id);
             self.received += 1;
-            self.latency.record(ctx.cycle - m.c);
+            self.latency.record(ctx.cycle - pkt.inject);
             ctx.counters.add(self.delivered, 1);
         }
         // Inject due packets (one per cycle — the link rate).
         if let Some(p) = self.sendlist.get(self.next) {
             if p.inject_cycle <= ctx.cycle {
-                if ctx.out_vacant(self.to_net) {
-                    let mut m = Msg::with(PKT, p.id, 0, ctx.cycle);
-                    m.b = net_b(self.id, p.dst);
-                    ctx.send(self.to_net, m).expect("vacancy checked");
+                if self.to_net.vacant(ctx) {
+                    self.to_net
+                        .send(
+                            ctx,
+                            DcPacket {
+                                id: p.id,
+                                src: self.id,
+                                dst: p.dst,
+                                inject: ctx.cycle,
+                            },
+                        )
+                        .expect("vacancy checked");
                     self.sent += 1;
                     self.next += 1;
                 } else {

@@ -18,6 +18,6 @@ pub mod switch;
 pub mod traffic;
 
 pub use fattree::{build_fattree, FatTreeCfg, FatTreeHandles};
-pub use host::Host;
+pub use host::{DcPacket, Host};
 pub use switch::{Switch, SwitchRole};
 pub use traffic::{packet, TrafficCfg};

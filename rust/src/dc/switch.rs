@@ -11,7 +11,7 @@
 //! packet hash, so routing is reproducible everywhere.
 
 use super::traffic::ecmp_hash;
-use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use crate::engine::{Ctx, Fnv, In, Msg, Out, Transit, Unit};
 use crate::noc::{net_dst, net_src};
 use crate::stats::StatsMap;
 
@@ -30,8 +30,8 @@ pub struct Switch {
     /// Switch radix (ports per switch).
     k: u32,
     /// Hosts per edge switch = k/2; hosts per pod = (k/2)^2.
-    inputs: Vec<Option<InPort>>,
-    outputs: Vec<Option<OutPort>>,
+    inputs: Vec<Option<In<Transit>>>,
+    outputs: Vec<Option<Out<Transit>>>,
     forwarded: u64,
     stalled: u64,
 }
@@ -48,7 +48,7 @@ impl Switch {
         }
     }
 
-    pub fn set_port(&mut self, idx: u32, inp: InPort, out: OutPort) {
+    pub fn set_port(&mut self, idx: u32, inp: In<Transit>, out: Out<Transit>) {
         self.inputs[idx as usize] = Some(inp);
         self.outputs[idx as usize] = Some(out);
     }
@@ -94,7 +94,7 @@ impl Unit for Switch {
         // crossbar arbitration); blocked flits keep their buffer slot.
         for i in 0..self.inputs.len() {
             let Some(inp) = self.inputs[i] else { continue };
-            let Some((src, dst, id)) = ctx.peek(inp).map(|m| (net_src(m.b), net_dst(m.b), m.a))
+            let Some((src, dst, id)) = inp.peek_msg(ctx).map(|m| (net_src(m.b), net_dst(m.b), m.a))
             else {
                 continue;
             };
@@ -102,9 +102,9 @@ impl Unit for Switch {
             let out = self.outputs[out_idx].unwrap_or_else(|| {
                 panic!("switch {:?}: no output {out_idx} for dst {dst}", self.role)
             });
-            if ctx.out_vacant(out) {
-                let m: Msg = ctx.recv(inp).expect("peeked");
-                ctx.send(out, m).expect("vacancy checked");
+            if out.vacant(ctx) {
+                let m: Msg = inp.recv_msg(ctx).expect("peeked");
+                out.send_msg(ctx, m).expect("vacancy checked");
                 self.forwarded += 1;
             } else {
                 self.stalled += 1;

@@ -12,11 +12,13 @@ pub mod port;
 pub mod repart;
 pub mod sim;
 pub mod unit;
+pub mod wire;
 
 pub use active::SchedMode;
 pub use message::{Fnv, Msg};
-pub use model::{Model, ModelBuilder, RunOpts, Stop};
+pub use model::{BuildError, Model, ModelBuilder, RunOpts, Stop, Topology};
 pub use port::{InPort, OutPort, PortCfg};
 pub use repart::RepartitionPolicy;
 pub use sim::{Engine, RunReport, Sim};
 pub use unit::{Ctx, Unit};
+pub use wire::{Component, IfaceSpec, In, Node, Out, Payload, Ports, Transit, Wire};

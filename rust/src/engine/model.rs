@@ -48,22 +48,113 @@ use crate::stats::{Counters, PhaseTimers, RunStats, StatsMap};
 use std::cell::UnsafeCell;
 use std::time::Instant;
 
-/// Builder for a simulated model. Typical use:
+/// A wiring mistake caught when the builder is finalized. `ModelBuilder`
+/// (and the typed [`super::wire::Wire`] layer on top of it) records
+/// violations as they happen and reports the first one from `build()`, so
+/// authoring code keeps its simple infallible signatures while bad models
+/// still fail loudly before they can run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BuildError {
+    /// A unit slot was reserved but no unit object was ever installed.
+    DanglingUnit { unit: u32, name: String },
+    /// A component declared an interface that was never wired
+    /// (typed wiring layer, `engine::wire`).
+    UnconnectedIface {
+        unit: u32,
+        name: String,
+        iface: &'static str,
+    },
+    /// A port was connected from a unit to itself; ports are point-to-point
+    /// links between *distinct* units (paper §3.1 rule 6).
+    SelfLoopPort { unit: u32, name: String },
+    /// A port was configured with a zero-capacity queue (receiver or
+    /// staging side); such a port could never move a message.
+    ZeroCapacityPort { src: u32, dst: u32 },
+}
+
+impl std::fmt::Display for BuildError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BuildError::DanglingUnit { unit, name } => {
+                write!(f, "unit {unit} ({name}) reserved but never installed")
+            }
+            BuildError::UnconnectedIface { unit, name, iface } => write!(
+                f,
+                "unit {unit} ({name}): declared interface {iface:?} was never connected"
+            ),
+            BuildError::SelfLoopPort { unit, name } => write!(
+                f,
+                "unit {unit} ({name}) wired to itself; ports connect distinct units"
+            ),
+            BuildError::ZeroCapacityPort { src, dst } => write!(
+                f,
+                "port {src} -> {dst} has a zero-capacity queue; capacities must be >= 1"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for BuildError {}
+
+impl From<BuildError> for String {
+    fn from(e: BuildError) -> String {
+        e.to_string()
+    }
+}
+
+/// Build-time edge metadata recorded by the wiring layer: one
+/// `(src_unit, dst_unit, weight)` entry per port, in port order. Weights
+/// default to 1 and can be raised by `ModelBuilder::link_weighted` /
+/// `IfaceSpec::weighted` to mark hot links; the locality-aware
+/// partitioner (`sched::partition_cost_locality`) and the mid-run
+/// repartitioner score cross-cluster traffic with them.
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    pub edges: Vec<(u32, u32, u64)>,
+}
+
+impl Topology {
+    /// Sum of all edge weights.
+    pub fn total_weight(&self) -> u64 {
+        self.edges.iter().map(|&(_, _, w)| w).sum()
+    }
+
+    /// Sum of weights of edges whose endpoints sit on different clusters,
+    /// given a per-unit cluster assignment.
+    pub fn cross_weight(&self, cluster_of: &[u32]) -> u64 {
+        self.edges
+            .iter()
+            .filter(|&&(s, d, _)| cluster_of[s as usize] != cluster_of[d as usize])
+            .map(|&(_, _, w)| w)
+            .sum()
+    }
+}
+
+/// Builder for a simulated model. Typical use goes through the typed
+/// wiring layer (`engine::wire`):
 ///
 /// ```ignore
 /// let mut mb = ModelBuilder::new();
 /// let a = mb.reserve_unit("A");
 /// let b = mb.reserve_unit("B");
-/// let (tx, rx) = mb.connect(a, b, PortCfg::default());
+/// let (tx, rx) = mb.link::<Pkt>(a, b, PortCfg::default());
 /// mb.install(a, Box::new(Producer::new(tx)));
 /// mb.install(b, Box::new(Consumer::new(rx)));
 /// let model = mb.build()?;
 /// ```
+///
+/// The raw tuple-returning [`ModelBuilder::connect`] remains as the
+/// untyped substrate `link` desugars to; outside `engine/` all wiring
+/// goes through the typed handles (enforced by the CI acceptance grep).
 pub struct ModelBuilder {
     names: Vec<String>,
     units: Vec<Option<Box<dyn Unit>>>,
     arena: PortArena,
     counters: Counters,
+    /// Edge weight per port (parallel to the arena).
+    weights: Vec<u64>,
+    /// Wiring violations noticed on the way; reported at `build()`.
+    violations: Vec<BuildError>,
 }
 
 impl Default for ModelBuilder {
@@ -79,6 +170,8 @@ impl ModelBuilder {
             units: Vec::new(),
             arena: PortArena::new(),
             counters: Counters::new(),
+            weights: Vec::new(),
+            violations: Vec::new(),
         }
     }
 
@@ -92,9 +185,37 @@ impl ModelBuilder {
 
     /// Wire a point-to-point port from `src` to `dst` (paper §3.1 rule 6:
     /// every connection is point-to-point, so transfer is contention-free).
+    ///
+    /// Untyped low-level entry; substrates use the typed
+    /// [`ModelBuilder::link`] family instead, which also records edge
+    /// weights for locality-aware partitioning.
     pub fn connect(&mut self, src: u32, dst: u32, cfg: PortCfg) -> (OutPort, InPort) {
+        self.connect_weighted(src, dst, cfg, 1)
+    }
+
+    /// As [`ModelBuilder::connect`], recording `weight` as the edge's
+    /// traffic-intensity metadata ([`Topology`]). Self-loops and
+    /// zero-capacity configurations are recorded as [`BuildError`]s and
+    /// surface from `build()`.
+    pub(crate) fn connect_weighted(
+        &mut self,
+        src: u32,
+        dst: u32,
+        cfg: PortCfg,
+        weight: u64,
+    ) -> (OutPort, InPort) {
         assert!((src as usize) < self.units.len(), "connect: bad src");
         assert!((dst as usize) < self.units.len(), "connect: bad dst");
+        if src == dst {
+            self.violations.push(BuildError::SelfLoopPort {
+                unit: src,
+                name: self.names[src as usize].clone(),
+            });
+        }
+        if cfg.capacity == 0 || cfg.out_capacity == 0 {
+            self.violations.push(BuildError::ZeroCapacityPort { src, dst });
+        }
+        self.weights.push(weight.max(1));
         self.arena.add(cfg, src, dst)
     }
 
@@ -121,12 +242,20 @@ impl ModelBuilder {
         self.units.len()
     }
 
-    pub fn build(self) -> Result<Model, String> {
+    pub fn build(mut self) -> Result<Model, BuildError> {
+        if !self.violations.is_empty() {
+            return Err(self.violations.remove(0));
+        }
         let mut units = Vec::with_capacity(self.units.len());
         for (i, u) in self.units.into_iter().enumerate() {
             match u {
                 Some(u) => units.push(UnsafeCell::new(u)),
-                None => return Err(format!("unit {} ({}) never installed", i, self.names[i])),
+                None => {
+                    return Err(BuildError::DanglingUnit {
+                        unit: i as u32,
+                        name: self.names[i].clone(),
+                    })
+                }
             }
         }
         let n = units.len();
@@ -144,6 +273,7 @@ impl ModelBuilder {
             out_ports_of,
             in_ports_of,
             scratch_bufs: Vec::new(),
+            edge_weights: self.weights,
         })
     }
 }
@@ -244,6 +374,8 @@ pub struct Model {
     /// runs, profiling prologues, and per-cluster instrumentation stop
     /// re-allocating per entry.
     scratch_bufs: Vec<Vec<u32>>,
+    /// Per-port edge weight recorded at build time (see [`Topology`]).
+    edge_weights: Vec<u64>,
 }
 
 // SAFETY: units and port halves are only accessed according to the phase
@@ -292,6 +424,18 @@ impl Model {
             .iter()
             .zip(&self.arena.dst_unit)
             .map(|(&s, &d)| (s, d))
+    }
+
+    /// The build-time edge list `(src, dst, weight)`, one entry per port —
+    /// the input of the locality-aware partitioner.
+    pub fn topology(&self) -> Topology {
+        Topology {
+            edges: self
+                .port_endpoints()
+                .zip(&self.edge_weights)
+                .map(|((s, d), &w)| (s, d, w))
+                .collect(),
+        }
     }
 
     /// Execute the work phase of one unit. `dirty` is the owning
@@ -666,6 +810,7 @@ impl Model {
             sync_ops: 0,
             fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
             repart: Default::default(),
+            cross_cluster_ports: 0,
         }
     }
 
@@ -721,6 +866,7 @@ impl Model {
             sync_ops: 0,
             fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
             repart: Default::default(),
+            cross_cluster_ports: 0,
         }
     }
 
@@ -838,6 +984,7 @@ impl Model {
                 sync_ops: 0,
                 fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
                 repart: Default::default(),
+                cross_cluster_ports: 0,
             },
             per_cluster,
         )

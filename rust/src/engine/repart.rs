@@ -31,11 +31,19 @@
 //! lets the partition track workload phases instead of their average.
 
 use super::active::ActiveState;
-use super::model::Model;
+use super::model::{Model, Topology};
+use crate::sched::partition::partition_cost_locality_topo;
 use crate::sched::partition_with_costs;
 use crate::stats::{RepartEpoch, RepartStats};
 use crate::util::cli::{parse_f64, parse_u64};
 use std::cell::UnsafeCell;
+
+/// Relative weight of the cross-cluster-traffic term in the locality
+/// plan score: `score = imbalance + LOCALITY_LAMBDA * cross/total`.
+/// Imbalance spans [1, k]; the cross fraction spans [0, 1] — 0.5 makes a
+/// full cut swing worth half an imbalance unit, enough to stop migrations
+/// that trade a sliver of balance for a shredded topology.
+const LOCALITY_LAMBDA: f64 = 0.5;
 
 /// When and how aggressively to repartition mid-run.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -276,14 +284,25 @@ pub(crate) fn imbalance(loads: &[u64]) -> f64 {
 pub(crate) struct Repartitioner {
     policy: RepartitionPolicy,
     next_check: u64,
+    /// Plan with the cost-locality objective (the session ran under
+    /// `PartitionStrategy::CostLocality`): LPT is replaced by the
+    /// topology-aware greedy, and the migration gate scores the
+    /// cross-cluster edge weight alongside imbalance.
+    locality: bool,
+    /// The build-time edge list, extracted once at the first locality
+    /// decision (it is static — re-walking the model every barrier check
+    /// would be pure waste).
+    topo: Option<Topology>,
     pub(crate) stats: RepartStats,
 }
 
 impl Repartitioner {
-    pub(crate) fn new(policy: RepartitionPolicy) -> Self {
+    pub(crate) fn new(policy: RepartitionPolicy, locality: bool) -> Self {
         Repartitioner {
             policy,
             next_check: policy.interval_cycles.max(1),
+            locality,
+            topo: None,
             stats: RepartStats::default(),
         }
     }
@@ -316,7 +335,7 @@ impl Repartitioner {
             return;
         }
 
-        // Current assignment and its imbalance.
+        // Current assignment and its score.
         let mut cur = vec![0u32; n];
         for c in 0..k {
             for &u in clusters.units(c).iter() {
@@ -330,16 +349,38 @@ impl Repartitioner {
             }
             l
         };
+        // Locality sessions fold the build-time topology's cross-cluster
+        // weight into the migration gate; cost-balanced sessions score
+        // pure imbalance as before. The edge list is extracted once and
+        // cached — it never changes after build.
+        if self.locality && self.topo.is_none() {
+            self.topo = Some(model.topology());
+        }
+        let topo = self.topo.as_ref();
+        let total_w = topo.map(|t| t.total_weight().max(1)).unwrap_or(1);
+        let score = |assign: &[u32]| -> f64 {
+            let base = imbalance(&loads(assign));
+            match &topo {
+                Some(t) => {
+                    base + LOCALITY_LAMBDA * t.cross_weight(assign) as f64 / total_w as f64
+                }
+                None => base,
+            }
+        };
         let cur_imb = imbalance(&loads(&cur));
+        let cur_score = score(&cur);
 
-        // Fresh LPT plan over the live costs, label-matched to the
-        // current clusters (LPT bin indices are arbitrary; matching by
-        // shared cost mass keeps equivalent plans from registering as
-        // wholesale moves).
-        let plan_bins = partition_with_costs(k, &costs);
+        // Fresh plan over the live costs — LPT, or the topology-aware
+        // greedy for locality sessions — label-matched to the current
+        // clusters (plan bin indices are arbitrary; matching by shared
+        // cost mass keeps equivalent plans from registering as wholesale
+        // moves).
+        let plan_bins = match topo {
+            Some(t) => partition_cost_locality_topo(t, k, &costs),
+            None => partition_with_costs(k, &costs),
+        };
         let plan = label_match(&plan_bins, &cur, &costs, k);
-        let plan_imb = imbalance(&loads(&plan));
-        if cur_imb - plan_imb <= self.policy.hysteresis {
+        if cur_score - score(&plan) <= self.policy.hysteresis {
             return;
         }
 
@@ -362,7 +403,8 @@ impl Repartitioner {
         // hysteresis exists to prevent.
         let next_loads = loads(&next);
         let next_imb = imbalance(&next_loads);
-        if cur_imb - next_imb <= self.policy.hysteresis {
+        let next_score = score(&next);
+        if cur_score - next_score <= self.policy.hysteresis {
             return;
         }
 
@@ -383,6 +425,8 @@ impl Repartitioner {
             cycle,
             imbalance_before: cur_imb,
             imbalance_after: next_imb,
+            score_before: cur_score,
+            score_after: next_score,
             moves: movers.len(),
             cluster_costs: next_loads,
         });

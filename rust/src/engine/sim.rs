@@ -36,7 +36,10 @@
 use super::active::SchedMode;
 use super::model::{Model, RunOpts, Stop};
 use super::repart::RepartitionPolicy;
-use crate::sched::{partition, partition_with_costs, PartitionStrategy};
+use crate::sched::{
+    cross_cluster_ports, partition, partition_cost_locality, partition_with_costs,
+    PartitionStrategy,
+};
 use crate::stats::{PhaseTimers, RunStats};
 use crate::sync::{run_ladder, ParallelOpts, SpinMode, SyncMethod};
 use crate::util::config::Config;
@@ -304,7 +307,22 @@ impl Sim {
             return Ok(p.clone());
         }
         let w = self.workers.max(1).min(units.max(1));
-        if self.strategy == PartitionStrategy::CostBalanced {
+        if matches!(
+            self.strategy,
+            PartitionStrategy::CostBalanced | PartitionStrategy::CostLocality
+        ) {
+            // Both cost-driven strategies prefer measured costs; they
+            // differ in the packing objective (pure LPT vs LPT with the
+            // cross-cluster edge-weight penalty over the build-time
+            // topology).
+            let locality = self.strategy == PartitionStrategy::CostLocality;
+            let pack = |model: &Model, costs: &[u64]| {
+                if locality {
+                    partition_cost_locality(model, w, costs)
+                } else {
+                    partition_with_costs(w, costs)
+                }
+            };
             if let Some(costs) = &self.unit_costs {
                 if costs.len() != units {
                     return Err(format!(
@@ -312,7 +330,7 @@ impl Sim {
                         costs.len()
                     ));
                 }
-                return Ok(partition_with_costs(w, costs));
+                return Ok(pack(&self.model, costs));
             }
             if let Some(scratch) = &self.scratch {
                 let mut probe = scratch()?;
@@ -323,7 +341,7 @@ impl Sim {
                     ));
                 }
                 let costs = probe.profile_unit_costs(self.profile_cycles).work_ns;
-                return Ok(partition_with_costs(w, &costs));
+                return Ok(pack(&self.model, &costs));
             }
             // No measurements available: the degree proxy inside
             // `sched::partition` stands in.
@@ -384,6 +402,7 @@ impl Sim {
                     spin: self.spin,
                     run: opts,
                     repart: self.repart,
+                    repart_locality: self.strategy == PartitionStrategy::CostLocality,
                 };
                 let stats = run_ladder(&mut self.model, &part, &popts);
                 let per_cluster = stats.per_worker.clone();
@@ -391,6 +410,22 @@ impl Sim {
             }
             Engine::Auto => unreachable!("Auto resolved above"),
         };
+        // Cross-cluster ports of the partition the run *ended* with (the
+        // migrated one when adaptive repartitioning moved units) — the
+        // locality objective's observable.
+        let mut stats = stats;
+        {
+            let final_part: &[Vec<u32>] = if stats.repart.final_partition.is_empty() {
+                &part
+            } else {
+                &stats.repart.final_partition
+            };
+            stats.cross_cluster_ports = if final_part.len() > 1 {
+                cross_cluster_ports(&self.model, final_part) as u64
+            } else {
+                0
+            };
+        }
         Ok(RunReport {
             stats,
             partition: part,
@@ -509,6 +544,7 @@ impl RunReport {
              \"cycles\": {}, \"wall_ns\": {}, \"cycles_per_sec\": {:.1}, \
              \"sync_ops\": {}, \"work_ns\": {}, \"transfer_ns\": {}, \
              \"barrier_ns\": {}, \"active_ratio\": {:.4}, \
+             \"cross_cluster_ports\": {}, \
              \"fingerprint\": \"{:#018x}\", {}}}",
             match &self.scenario {
                 Some(s) => format!("\"{s}\""),
@@ -527,6 +563,7 @@ impl RunReport {
             transfer_ns,
             barrier_ns,
             self.active_ratio(),
+            self.stats.cross_cluster_ports,
             self.stats.fingerprint,
             self.stats.repart.to_json_fields(),
         )

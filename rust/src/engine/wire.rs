@@ -1,0 +1,1116 @@
+//! The typed model-authoring layer: payload-typed port handles, declared
+//! component interfaces, and topology combinators.
+//!
+//! The raw builder API (`reserve_unit` / `connect` / `install`) moves
+//! untyped `(OutPort, InPort)` tuples around and leaves every substrate to
+//! invent its own `Msg.kind` conventions. This module wraps it in three
+//! composable pieces:
+//!
+//! 1. **[`Payload`]** — a typed message view that encodes/decodes
+//!    *zero-cost* into the existing POD `Msg` scalar words. The transfer
+//!    phase still moves the same 5-word `Msg` by value (the paper's
+//!    §3.2.2 move-pointers-not-bodies property is untouched); the type
+//!    only exists at the unit boundary. [`In<T>`]/[`Out<T>`] are
+//!    phantom-typed wrappers over the raw handles, so two ends of a link
+//!    can only exchange the payload the link was declared with.
+//!    Pass-through units (routers, switches) that forward foreign
+//!    messages use the [`Transit`] marker and the raw-`Msg` accessors.
+//!    Direct [`ModelBuilder::link`] wiring ties both handle types to the
+//!    link; component interfaces opt into the same guarantee by
+//!    declaring their payload with [`IfaceSpec::of`], which is enforced
+//!    at [`Wire::join`] and at [`Ports`] lookup time.
+//! 2. **[`Component`]** — a unit constructor that *declares* its named
+//!    input/output interfaces ([`IfaceSpec`], carrying the `PortCfg` and
+//!    an edge weight). Declared-but-unwired interfaces are a
+//!    [`BuildError::UnconnectedIface`] at build time.
+//! 3. **[`Wire`]** — the authoring session: place components, join their
+//!    interfaces by name (or via the [`Wire::chain`], [`Wire::ring`],
+//!    [`Wire::grid_of`], [`Wire::torus_of`], [`Wire::tree_of`],
+//!    [`Wire::replicate`] combinators), and `build()`. Every join records
+//!    an `(src, dst, weight)` edge onto the built model's [`Topology`](super::model::Topology),
+//!    which feeds `PartitionStrategy::CostLocality` and the mid-run
+//!    repartitioner's plan scoring.
+//!
+//! Irregular substrates (the fat-tree, the CPU system) that don't fit the
+//! component combinators wire through the typed [`ModelBuilder::link`] /
+//! [`ModelBuilder::link_weighted`] directly — same typed handles, same
+//! recorded topology, no declared-interface validation.
+
+use super::message::Msg;
+use super::model::{BuildError, Model, ModelBuilder};
+use super::port::{InPort, OutPort, PortCfg};
+use super::unit::{Ctx, Unit};
+use crate::stats::counters::CounterId;
+use std::any::TypeId;
+use std::marker::PhantomData;
+
+/// A typed message payload: a POD view over the `Msg` scalar words
+/// (`kind`, `a`, `b`, `c`). Encoding must be total; decoding may assume
+/// the message arrived on a port declared with this payload type (a
+/// foreign kind is a wiring bug — panic, don't limp).
+///
+/// Implementations must be pure field shuffles: no heap, no I/O, no
+/// global state — `encode`/`decode` run on the hot path of every typed
+/// send/receive.
+pub trait Payload: Sized + Send + 'static {
+    /// Pack into a `Msg`. The engine fills `Msg::src` at send time.
+    fn encode(self) -> Msg;
+    /// Unpack from the scalar words of a received `Msg`.
+    fn decode(m: &Msg) -> Self;
+}
+
+/// Marker payload for pass-through ports: the unit forwards messages it
+/// does not interpret (mesh routers, fat-tree switches). `In<Transit>` /
+/// `Out<Transit>` expose only the raw-`Msg` accessors; typed handles can
+/// be erased to transit with [`In::transit`]/[`Out::transit`] where a
+/// typed endpoint link terminates at a pass-through unit.
+#[derive(Debug, Clone, Copy)]
+pub enum Transit {}
+
+/// Typed sender-side handle over [`OutPort`].
+pub struct Out<T = Transit> {
+    raw: OutPort,
+    _t: PhantomData<fn() -> T>,
+}
+
+/// Typed receiver-side handle over [`InPort`].
+pub struct In<T = Transit> {
+    raw: InPort,
+    _t: PhantomData<fn() -> T>,
+}
+
+// Manual impls: the handles are Copy indices regardless of `T`.
+impl<T> Clone for Out<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for Out<T> {}
+impl<T> Clone for In<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for In<T> {}
+impl<T> PartialEq for Out<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.raw == other.raw
+    }
+}
+impl<T> PartialEq for In<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.raw == other.raw
+    }
+}
+impl<T> std::fmt::Debug for Out<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Out({})", self.raw.index())
+    }
+}
+impl<T> std::fmt::Debug for In<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "In({})", self.raw.index())
+    }
+}
+
+impl<T> Out<T> {
+    /// Wrap a raw handle (escape hatch; typed construction goes through
+    /// `ModelBuilder::link` / `Wire`).
+    pub fn from_raw(raw: OutPort) -> Self {
+        Out {
+            raw,
+            _t: PhantomData,
+        }
+    }
+
+    pub fn raw(&self) -> OutPort {
+        self.raw
+    }
+
+    /// Erase the payload type for a pass-through unit.
+    pub fn transit(self) -> Out<Transit> {
+        Out::from_raw(self.raw)
+    }
+
+    /// Is there room to stage a message this cycle?
+    #[inline]
+    pub fn vacant(&self, ctx: &Ctx<'_>) -> bool {
+        ctx.out_vacant(self.raw)
+    }
+
+    /// Remaining staging slots.
+    #[inline]
+    pub fn space(&self, ctx: &Ctx<'_>) -> usize {
+        ctx.out_space(self.raw)
+    }
+
+    /// Stage a pre-encoded (or forwarded foreign) `Msg`.
+    #[inline]
+    pub fn send_msg(&self, ctx: &mut Ctx<'_>, m: Msg) -> Result<(), Msg> {
+        ctx.send(self.raw, m)
+    }
+}
+
+impl<T: Payload> Out<T> {
+    /// Encode and stage a typed payload; hands the payload back on
+    /// back pressure (full staging queue), like `Ctx::send`.
+    #[inline]
+    pub fn send(&self, ctx: &mut Ctx<'_>, v: T) -> Result<(), T> {
+        ctx.send(self.raw, v.encode()).map_err(|m| T::decode(&m))
+    }
+}
+
+impl<T> In<T> {
+    pub fn from_raw(raw: InPort) -> Self {
+        In {
+            raw,
+            _t: PhantomData,
+        }
+    }
+
+    pub fn raw(&self) -> InPort {
+        self.raw
+    }
+
+    /// Erase the payload type for a pass-through unit.
+    pub fn transit(self) -> In<Transit> {
+        In::from_raw(self.raw)
+    }
+
+    /// Pop the next ready message, undecoded.
+    #[inline]
+    pub fn recv_msg(&self, ctx: &mut Ctx<'_>) -> Option<Msg> {
+        ctx.recv(self.raw)
+    }
+
+    /// Borrow the next ready message without consuming it.
+    #[inline]
+    pub fn peek_msg<'a>(&self, ctx: &'a Ctx<'_>) -> Option<&'a Msg> {
+        ctx.peek(self.raw)
+    }
+
+    /// Number of ready messages waiting.
+    #[inline]
+    pub fn ready(&self, ctx: &Ctx<'_>) -> usize {
+        ctx.in_ready(self.raw)
+    }
+
+    /// Anything queued at all (ready or still in delay)?
+    #[inline]
+    pub fn occupied(&self, ctx: &Ctx<'_>) -> bool {
+        ctx.in_occupied(self.raw)
+    }
+}
+
+impl<T: Payload> In<T> {
+    /// Pop and decode the next ready payload.
+    #[inline]
+    pub fn recv(&self, ctx: &mut Ctx<'_>) -> Option<T> {
+        ctx.recv(self.raw).map(|m| T::decode(&m))
+    }
+
+    /// Decode the next ready payload without consuming it.
+    #[inline]
+    pub fn peek(&self, ctx: &Ctx<'_>) -> Option<T> {
+        ctx.peek(self.raw).map(T::decode)
+    }
+}
+
+impl ModelBuilder {
+    /// Typed point-to-point link from `src` to `dst`: both handles carry
+    /// the payload type, and the edge is recorded on the model's
+    /// [`Topology`](super::model::Topology) with weight 1.
+    pub fn link<T>(&mut self, src: u32, dst: u32, cfg: PortCfg) -> (Out<T>, In<T>) {
+        self.link_weighted(src, dst, cfg, 1)
+    }
+
+    /// As [`ModelBuilder::link`], with an explicit edge weight — mark hot
+    /// links (e.g. core↔L1) so locality-aware partitioning prefers to keep
+    /// them intra-cluster.
+    pub fn link_weighted<T>(
+        &mut self,
+        src: u32,
+        dst: u32,
+        cfg: PortCfg,
+        weight: u64,
+    ) -> (Out<T>, In<T>) {
+        let (o, i) = self.connect_weighted(src, dst, cfg, weight);
+        (Out::from_raw(o), In::from_raw(i))
+    }
+}
+
+/// One declared interface of a component: its name, the `PortCfg` of the
+/// link it terminates (the *receiving* side's spec wins when two specs
+/// meet), the edge weight contributed to the
+/// [`Topology`](super::model::Topology), and an optional payload-type
+/// witness ([`IfaceSpec::of`]) that makes joins and port lookups
+/// type-checked at authoring time.
+#[derive(Debug, Clone, Copy)]
+pub struct IfaceSpec {
+    pub name: &'static str,
+    pub cfg: PortCfg,
+    pub weight: u64,
+    /// `(TypeId, type_name)` of the declared payload, when the component
+    /// opted into checking with [`IfaceSpec::of`].
+    payload: Option<(TypeId, &'static str)>,
+}
+
+impl IfaceSpec {
+    pub fn new(name: &'static str, cfg: PortCfg) -> Self {
+        IfaceSpec {
+            name,
+            cfg,
+            weight: 1,
+            payload: None,
+        }
+    }
+
+    pub fn weighted(name: &'static str, cfg: PortCfg, weight: u64) -> Self {
+        IfaceSpec {
+            name,
+            cfg,
+            weight,
+            payload: None,
+        }
+    }
+
+    /// Declare the payload type this interface speaks. A [`Wire::join`]
+    /// of two declared interfaces panics on mismatch, and
+    /// [`Ports::input`]/[`Ports::output`] verify the requested handle
+    /// type against it (requesting `Transit` is always allowed — that is
+    /// the sanctioned pass-through erasure).
+    pub fn of<T: 'static>(mut self) -> Self {
+        self.payload = Some((TypeId::of::<T>(), std::any::type_name::<T>()));
+        self
+    }
+}
+
+/// The wired port handles a component's `build` receives, resolvable by
+/// declared interface name. Lookups panic on unknown names or (for
+/// interfaces declared with [`IfaceSpec::of`]) on a payload-type
+/// mismatch — both are component-authoring bugs, not runtime conditions.
+pub struct Ports {
+    ins: Vec<(IfaceSpec, InPort)>,
+    outs: Vec<(IfaceSpec, OutPort)>,
+}
+
+fn check_witness<T: 'static>(spec: &IfaceSpec) {
+    if let Some((tid, tname)) = spec.payload {
+        if tid != TypeId::of::<T>() && TypeId::of::<T>() != TypeId::of::<Transit>() {
+            panic!(
+                "interface {:?} speaks {tname}, but {} was requested",
+                spec.name,
+                std::any::type_name::<T>()
+            );
+        }
+    }
+}
+
+impl Ports {
+    pub fn input<T: 'static>(&self, name: &str) -> In<T> {
+        self.ins
+            .iter()
+            .find(|(s, _)| s.name == name)
+            .map(|(s, p)| {
+                check_witness::<T>(s);
+                In::from_raw(*p)
+            })
+            .unwrap_or_else(|| panic!("component has no input interface {name:?}"))
+    }
+
+    pub fn output<T: 'static>(&self, name: &str) -> Out<T> {
+        self.outs
+            .iter()
+            .find(|(s, _)| s.name == name)
+            .map(|(s, p)| {
+                check_witness::<T>(s);
+                Out::from_raw(*p)
+            })
+            .unwrap_or_else(|| panic!("component has no output interface {name:?}"))
+    }
+}
+
+/// A unit constructor with a declared wiring interface. Components are
+/// placed on a [`Wire`], joined by interface name, and turned into the
+/// runtime [`Unit`] once every declared interface is connected.
+pub trait Component {
+    /// Instance name (becomes the unit name in the model).
+    fn name(&self) -> String;
+
+    /// Declared input interfaces, in a fixed order.
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        Vec::new()
+    }
+
+    /// Declared output interfaces, in a fixed order.
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        Vec::new()
+    }
+
+    /// Consume the component, producing the unit from its wired ports.
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit>;
+}
+
+/// Closure-backed component for ad-hoc units (`Wire::add_fn`).
+struct FnComponent<F> {
+    name: String,
+    ins: Vec<IfaceSpec>,
+    outs: Vec<IfaceSpec>,
+    f: F,
+}
+
+impl<F: FnOnce(&Ports) -> Box<dyn Unit>> Component for FnComponent<F> {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        self.ins.clone()
+    }
+
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        self.outs.clone()
+    }
+
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+        (self.f)(ports)
+    }
+}
+
+/// Handle to a placed component on a [`Wire`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Node {
+    /// The reserved unit id.
+    pub unit: u32,
+    idx: usize,
+}
+
+struct Entry {
+    unit: u32,
+    comp: Option<Box<dyn Component>>,
+    ins: Vec<(IfaceSpec, Option<InPort>)>,
+    outs: Vec<(IfaceSpec, Option<OutPort>)>,
+}
+
+/// The component-authoring session: place components, join interfaces,
+/// build. Validation (every declared interface wired, no dangling units,
+/// no self-loops, no zero-capacity ports) happens at [`Wire::build`] via
+/// [`BuildError`].
+#[derive(Default)]
+pub struct Wire {
+    mb: ModelBuilder,
+    nodes: Vec<Entry>,
+}
+
+impl Wire {
+    pub fn new() -> Self {
+        Wire {
+            mb: ModelBuilder::new(),
+            nodes: Vec::new(),
+        }
+    }
+
+    /// Register a global counter (see `ModelBuilder::counter`).
+    pub fn counter(&mut self, name: &str) -> CounterId {
+        self.mb.counter(name)
+    }
+
+    /// Place a component; its unit id is reserved immediately (placement
+    /// order fixes unit ids, which `Contiguous` partitioning exploits).
+    pub fn add(&mut self, comp: impl Component + 'static) -> Node {
+        let unit = self.mb.reserve_unit(&comp.name());
+        let ins = comp.inputs().into_iter().map(|s| (s, None)).collect();
+        let outs = comp.outputs().into_iter().map(|s| (s, None)).collect();
+        let idx = self.nodes.len();
+        self.nodes.push(Entry {
+            unit,
+            comp: Some(Box::new(comp)),
+            ins,
+            outs,
+        });
+        Node { unit, idx }
+    }
+
+    /// Place an ad-hoc component from a closure — the declared interfaces
+    /// plus a builder that receives the wired ports.
+    pub fn add_fn(
+        &mut self,
+        name: &str,
+        ins: Vec<IfaceSpec>,
+        outs: Vec<IfaceSpec>,
+        build: impl FnOnce(&Ports) -> Box<dyn Unit> + 'static,
+    ) -> Node {
+        self.add(FnComponent {
+            name: name.to_string(),
+            ins,
+            outs,
+            f: build,
+        })
+    }
+
+    /// Join `from`'s output interface to `to`'s input interface. The
+    /// receiving spec's `PortCfg` configures the port; the edge weight is
+    /// the max of the two specs' weights. Unknown interface names panic
+    /// (authoring bug); structural violations surface at `build()`.
+    pub fn join(&mut self, from: Node, out_iface: &str, to: Node, in_iface: &str) {
+        let o = self.nodes[from.idx]
+            .outs
+            .iter()
+            .position(|(s, _)| s.name == out_iface)
+            .unwrap_or_else(|| {
+                panic!(
+                    "component {} has no output interface {out_iface:?}",
+                    from.idx
+                )
+            });
+        let i = self.nodes[to.idx]
+            .ins
+            .iter()
+            .position(|(s, _)| s.name == in_iface)
+            .unwrap_or_else(|| {
+                panic!("component {} has no input interface {in_iface:?}", to.idx)
+            });
+        assert!(
+            self.nodes[from.idx].outs[o].1.is_none(),
+            "output {out_iface:?} of component {} joined twice",
+            from.idx
+        );
+        assert!(
+            self.nodes[to.idx].ins[i].1.is_none(),
+            "input {in_iface:?} of component {} joined twice",
+            to.idx
+        );
+        let out_spec = self.nodes[from.idx].outs[o].0;
+        let in_spec = self.nodes[to.idx].ins[i].0;
+        if let (Some((ot, on)), Some((it, int))) = (out_spec.payload, in_spec.payload) {
+            assert!(
+                ot == it,
+                "payload mismatch: output {out_iface:?} speaks {on}, \
+                 input {in_iface:?} speaks {int}"
+            );
+        }
+        let (op, ip) = self.mb.connect_weighted(
+            self.nodes[from.idx].unit,
+            self.nodes[to.idx].unit,
+            in_spec.cfg,
+            out_spec.weight.max(in_spec.weight),
+        );
+        self.nodes[from.idx].outs[o].1 = Some(op);
+        self.nodes[to.idx].ins[i].1 = Some(ip);
+    }
+
+    /// Join consecutive nodes: `nodes[i].out -> nodes[i+1].in`.
+    pub fn chain(&mut self, nodes: &[Node], out_iface: &str, in_iface: &str) {
+        for w in nodes.windows(2) {
+            self.join(w[0], out_iface, w[1], in_iface);
+        }
+    }
+
+    /// A closed chain: as [`Wire::chain`], plus last → first.
+    pub fn ring(&mut self, nodes: &[Node], out_iface: &str, in_iface: &str) {
+        self.chain(nodes, out_iface, in_iface);
+        if nodes.len() > 1 {
+            self.join(nodes[nodes.len() - 1], out_iface, nodes[0], in_iface);
+        }
+    }
+
+    /// Place `n` components from a factory.
+    pub fn replicate<C: Component + 'static>(
+        &mut self,
+        n: usize,
+        mut f: impl FnMut(usize) -> C,
+    ) -> Vec<Node> {
+        (0..n).map(|i| self.add(f(i))).collect()
+    }
+
+    /// Place a `width * height` grid of components and wire the four
+    /// neighbour directions. Convention: components declare in/out
+    /// interfaces named `"n"`, `"e"`, `"s"`, `"w"` for each neighbour they
+    /// actually have — the factory receives `(x, y)` and must omit
+    /// border-facing interfaces (an open grid has no wraparound).
+    pub fn grid_of<C: Component + 'static>(
+        &mut self,
+        width: u32,
+        height: u32,
+        mut f: impl FnMut(u32, u32) -> C,
+    ) -> Vec<Node> {
+        let mut nodes = Vec::with_capacity((width * height) as usize);
+        for y in 0..height {
+            for x in 0..width {
+                nodes.push(self.add(f(x, y)));
+            }
+        }
+        let at = |x: u32, y: u32| nodes[(y * width + x) as usize];
+        for y in 0..height {
+            for x in 0..width {
+                if x + 1 < width {
+                    self.join(at(x, y), "e", at(x + 1, y), "w");
+                    self.join(at(x + 1, y), "w", at(x, y), "e");
+                }
+                if y + 1 < height {
+                    self.join(at(x, y), "s", at(x, y + 1), "n");
+                    self.join(at(x, y + 1), "n", at(x, y), "s");
+                }
+            }
+        }
+        nodes
+    }
+
+    /// As [`Wire::grid_of`] with wraparound links: every node has all four
+    /// neighbours (`width` and `height` must be >= 2, or the wrap link
+    /// would be a self-loop / duplicate join).
+    pub fn torus_of<C: Component + 'static>(
+        &mut self,
+        width: u32,
+        height: u32,
+        mut f: impl FnMut(u32, u32) -> C,
+    ) -> Vec<Node> {
+        assert!(width >= 2 && height >= 2, "torus needs dims >= 2");
+        let mut nodes = Vec::with_capacity((width * height) as usize);
+        for y in 0..height {
+            for x in 0..width {
+                nodes.push(self.add(f(x, y)));
+            }
+        }
+        let at = |x: u32, y: u32| nodes[(y * width + x) as usize];
+        for y in 0..height {
+            for x in 0..width {
+                let e = (x + 1) % width;
+                let s = (y + 1) % height;
+                self.join(at(x, y), "e", at(e, y), "w");
+                self.join(at(e, y), "w", at(x, y), "e");
+                self.join(at(x, y), "s", at(x, s), "n");
+                self.join(at(x, s), "n", at(x, y), "s");
+            }
+        }
+        nodes
+    }
+
+    /// Place a complete `arity`-ary tree of `depth` levels (level 0 is the
+    /// root; `depth >= 1`) and wire parent↔child pairs both ways.
+    /// Convention: a parent declares out/in interfaces `"down0"` ..
+    /// `"down{arity-1}"`; every non-root declares out/in `"up"`. The
+    /// factory receives `(level, index_within_level)`. Returns nodes in
+    /// level order (root first).
+    pub fn tree_of<C: Component + 'static>(
+        &mut self,
+        arity: u32,
+        depth: u32,
+        mut f: impl FnMut(u32, u32) -> C,
+    ) -> Vec<Node> {
+        assert!(arity >= 1 && depth >= 1, "tree needs arity/depth >= 1");
+        let mut levels: Vec<Vec<Node>> = Vec::new();
+        for level in 0..depth {
+            let count = arity.pow(level);
+            levels.push((0..count).map(|i| self.add(f(level, i))).collect());
+        }
+        for level in 0..depth.saturating_sub(1) {
+            let (parents, children) = {
+                let (a, b) = levels.split_at(level as usize + 1);
+                (&a[level as usize], &b[0])
+            };
+            // Static names for the down interfaces: components declare the
+            // same fixed set, so look them up per child index.
+            for (pi, &parent) in parents.iter().enumerate() {
+                for j in 0..arity as usize {
+                    let child = children[pi * arity as usize + j];
+                    let down = DOWN_NAMES.get(j).copied().unwrap_or_else(|| {
+                        panic!("tree arity {} exceeds the supported {}", arity, DOWN_NAMES.len())
+                    });
+                    self.join(parent, down, child, "up");
+                    self.join(child, "up", parent, down);
+                }
+            }
+        }
+        levels.into_iter().flatten().collect()
+    }
+
+    /// Validate and build: every declared interface must be joined, every
+    /// placed component becomes an installed unit, and the underlying
+    /// builder's own checks (dangling units, self-loops, zero-capacity
+    /// ports) run last.
+    pub fn build(mut self) -> Result<Model, BuildError> {
+        for entry in &mut self.nodes {
+            let comp = entry.comp.take().expect("component placed once");
+            let name = comp.name();
+            let mut ins = Vec::with_capacity(entry.ins.len());
+            for (spec, port) in &entry.ins {
+                match port {
+                    Some(p) => ins.push((*spec, *p)),
+                    None => {
+                        return Err(BuildError::UnconnectedIface {
+                            unit: entry.unit,
+                            name,
+                            iface: spec.name,
+                        })
+                    }
+                }
+            }
+            let mut outs = Vec::with_capacity(entry.outs.len());
+            for (spec, port) in &entry.outs {
+                match port {
+                    Some(p) => outs.push((*spec, *p)),
+                    None => {
+                        return Err(BuildError::UnconnectedIface {
+                            unit: entry.unit,
+                            name,
+                            iface: spec.name,
+                        })
+                    }
+                }
+            }
+            let unit = comp.build(&Ports { ins, outs });
+            self.mb.install(entry.unit, unit);
+        }
+        self.mb.build()
+    }
+}
+
+/// Interface names for [`Wire::tree_of`] down links ( `'static` strs for
+/// `IfaceSpec`).
+pub const DOWN_NAMES: &[&str] = &[
+    "down0", "down1", "down2", "down3", "down4", "down5", "down6", "down7",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::message::Fnv;
+    use crate::engine::model::RunOpts;
+
+    /// A scalar payload used across the wire tests.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    struct Tok {
+        v: u64,
+    }
+
+    impl Payload for Tok {
+        fn encode(self) -> Msg {
+            Msg::with(7, self.v, 0, 0)
+        }
+
+        fn decode(m: &Msg) -> Self {
+            debug_assert_eq!(m.kind, 7);
+            Tok { v: m.a }
+        }
+    }
+
+    struct Src {
+        out: Out<Tok>,
+        n: u64,
+        limit: u64,
+    }
+
+    impl Unit for Src {
+        fn work(&mut self, ctx: &mut Ctx<'_>) {
+            while self.n < self.limit && self.out.vacant(ctx) {
+                self.out.send(ctx, Tok { v: self.n }).unwrap();
+                self.n += 1;
+            }
+        }
+
+        fn state_hash(&self, h: &mut Fnv) {
+            h.write_u64(self.n);
+        }
+
+        fn is_idle(&self) -> bool {
+            self.n >= self.limit
+        }
+    }
+
+    struct Snk {
+        inp: In<Tok>,
+        sum: u64,
+        got: u64,
+    }
+
+    impl Unit for Snk {
+        fn work(&mut self, ctx: &mut Ctx<'_>) {
+            while let Some(t) = self.inp.recv(ctx) {
+                assert_eq!(t.v, self.got, "typed FIFO broken");
+                self.got += 1;
+                self.sum += t.v;
+            }
+        }
+
+        fn state_hash(&self, h: &mut Fnv) {
+            h.write_u64(self.sum);
+        }
+
+        fn stats(&self, out: &mut crate::stats::StatsMap) {
+            out.set("snk.sum", self.sum);
+        }
+    }
+
+    struct SrcComp {
+        limit: u64,
+    }
+
+    impl Component for SrcComp {
+        fn name(&self) -> String {
+            "src".into()
+        }
+
+        fn outputs(&self) -> Vec<IfaceSpec> {
+            vec![IfaceSpec::new("tx", PortCfg::new(2, 1)).of::<Tok>()]
+        }
+
+        fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+            Box::new(Src {
+                out: ports.output("tx"),
+                n: 0,
+                limit: self.limit,
+            })
+        }
+    }
+
+    struct SnkComp;
+
+    impl Component for SnkComp {
+        fn name(&self) -> String {
+            "snk".into()
+        }
+
+        fn inputs(&self) -> Vec<IfaceSpec> {
+            vec![IfaceSpec::weighted("rx", PortCfg::new(2, 1), 3).of::<Tok>()]
+        }
+
+        fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+            Box::new(Snk {
+                inp: ports.input("rx"),
+                sum: 0,
+                got: 0,
+            })
+        }
+    }
+
+    #[test]
+    fn typed_pair_runs_and_records_weighted_topology() {
+        let mut w = Wire::new();
+        let s = w.add(SrcComp { limit: 10 });
+        let k = w.add(SnkComp);
+        w.join(s, "tx", k, "rx");
+        let mut model = w.build().unwrap();
+        let topo = model.topology();
+        assert_eq!(topo.edges, vec![(0, 1, 3)], "receiver weight wins (3 > 1)");
+        assert_eq!(topo.total_weight(), 3);
+        assert_eq!(topo.cross_weight(&[0, 1]), 3);
+        assert_eq!(topo.cross_weight(&[0, 0]), 0);
+        let stats = model.run_serial(RunOpts::cycles(40));
+        assert_eq!(stats.counters.get("snk.sum"), 45, "0+..+9");
+    }
+
+    /// A second payload type for the witness-mismatch tests.
+    #[derive(Debug, Clone, Copy)]
+    struct Tok2;
+
+    impl Payload for Tok2 {
+        fn encode(self) -> Msg {
+            Msg::new(9)
+        }
+
+        fn decode(_m: &Msg) -> Self {
+            Tok2
+        }
+    }
+
+    struct MisSnk;
+
+    impl Component for MisSnk {
+        fn name(&self) -> String {
+            "missnk".into()
+        }
+
+        fn inputs(&self) -> Vec<IfaceSpec> {
+            vec![IfaceSpec::new("rx", PortCfg::new(2, 1)).of::<Tok2>()]
+        }
+
+        fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+            struct Nop;
+            impl Unit for Nop {
+                fn work(&mut self, _ctx: &mut Ctx<'_>) {}
+            }
+            let _ = ports.input::<Tok2>("rx");
+            Box::new(Nop)
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "payload mismatch")]
+    fn joining_mismatched_payload_ifaces_panics() {
+        let mut w = Wire::new();
+        let s = w.add(SrcComp { limit: 1 }); // declares tx as Tok
+        let k = w.add(MisSnk); // declares rx as Tok2
+        w.join(s, "tx", k, "rx");
+    }
+
+    #[test]
+    #[should_panic(expected = "speaks")]
+    fn requesting_wrong_payload_from_ports_panics() {
+        struct WrongLookup;
+        impl Component for WrongLookup {
+            fn name(&self) -> String {
+                "wrong".into()
+            }
+            fn inputs(&self) -> Vec<IfaceSpec> {
+                vec![IfaceSpec::new("rx", PortCfg::new(2, 1)).of::<Tok>()]
+            }
+            fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+                let _mistyped = ports.input::<Tok2>("rx"); // panics here
+                unreachable!()
+            }
+        }
+        let mut w = Wire::new();
+        let s = w.add(SrcComp { limit: 1 });
+        let k = w.add(WrongLookup);
+        // Both interfaces declare Tok, so the join itself is fine; the
+        // bad lookup inside build() is what must blow up.
+        w.join(s, "tx", k, "rx");
+        let _ = w.build();
+    }
+
+    #[test]
+    fn transit_lookup_is_always_allowed() {
+        struct PassThrough;
+        impl Component for PassThrough {
+            fn name(&self) -> String {
+                "pass".into()
+            }
+            fn inputs(&self) -> Vec<IfaceSpec> {
+                vec![IfaceSpec::new("rx", PortCfg::new(2, 1)).of::<Tok>()]
+            }
+            fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+                // Pass-through erasure: a typed interface may always be
+                // taken as Transit.
+                let _raw: In<Transit> = ports.input::<Transit>("rx");
+                struct Nop;
+                impl Unit for Nop {
+                    fn work(&mut self, _ctx: &mut Ctx<'_>) {}
+                }
+                Box::new(Nop)
+            }
+        }
+        let mut w = Wire::new();
+        let s = w.add(SrcComp { limit: 1 });
+        let k = w.add(PassThrough);
+        w.join(s, "tx", k, "rx");
+        assert!(w.build().is_ok());
+    }
+
+    #[test]
+    fn unconnected_iface_is_a_build_error() {
+        let mut w = Wire::new();
+        let _ = w.add(SrcComp { limit: 1 });
+        match w.build() {
+            Err(BuildError::UnconnectedIface { iface, .. }) => assert_eq!(iface, "tx"),
+            other => panic!("expected UnconnectedIface, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn self_loop_and_zero_capacity_surface_at_build() {
+        let mut mb = ModelBuilder::new();
+        let a = mb.reserve_unit("a");
+        let _ = mb.link::<Tok>(a, a, PortCfg::default());
+        mb.install(a, Box::new(Snk { inp: In::from_raw(InPort(0)), sum: 0, got: 0 }));
+        match mb.build() {
+            Err(BuildError::SelfLoopPort { unit, .. }) => assert_eq!(unit, 0),
+            other => panic!("expected SelfLoopPort, got {other:?}"),
+        }
+
+        let mut mb = ModelBuilder::new();
+        let a = mb.reserve_unit("a");
+        let b = mb.reserve_unit("b");
+        let (_o, i) = mb.link::<Tok>(
+            a,
+            b,
+            PortCfg {
+                capacity: 0,
+                out_capacity: 1,
+                delay: 1,
+            },
+        );
+        mb.install(a, Box::new(Src { out: Out::from_raw(OutPort(0)), n: 0, limit: 0 }));
+        mb.install(b, Box::new(Snk { inp: i, sum: 0, got: 0 }));
+        match mb.build() {
+            Err(BuildError::ZeroCapacityPort { src, dst }) => assert_eq!((src, dst), (0, 1)),
+            other => panic!("expected ZeroCapacityPort, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn build_error_is_a_std_error() {
+        let e: Box<dyn std::error::Error> = Box::new(BuildError::DanglingUnit {
+            unit: 3,
+            name: "ghost".into(),
+        });
+        assert!(e.to_string().contains("ghost"));
+        let s: String = BuildError::ZeroCapacityPort { src: 1, dst: 2 }.into();
+        assert!(s.contains("zero-capacity"));
+    }
+
+    /// A relay with all four mesh directions, used by the grid/torus
+    /// combinator tests (payload-free: interfaces only).
+    struct FourWay {
+        dirs: Vec<&'static str>,
+    }
+
+    impl Component for FourWay {
+        fn name(&self) -> String {
+            "fw".into()
+        }
+
+        fn inputs(&self) -> Vec<IfaceSpec> {
+            self.dirs
+                .iter()
+                .map(|d| IfaceSpec::new(d, PortCfg::default()))
+                .collect()
+        }
+
+        fn outputs(&self) -> Vec<IfaceSpec> {
+            self.dirs
+                .iter()
+                .map(|d| IfaceSpec::new(d, PortCfg::default()))
+                .collect()
+        }
+
+        fn build(self: Box<Self>, _ports: &Ports) -> Box<dyn Unit> {
+            struct Nop;
+            impl Unit for Nop {
+                fn work(&mut self, _ctx: &mut Ctx<'_>) {}
+            }
+            Box::new(Nop)
+        }
+    }
+
+    #[test]
+    fn torus_wires_every_direction_and_grid_omits_borders() {
+        // 3x2 torus: every node keeps all four interfaces; 6 nodes * 4
+        // outs = 24 directed links.
+        let mut w = Wire::new();
+        let nodes = w.torus_of(3, 2, |_x, _y| FourWay {
+            dirs: vec!["n", "e", "s", "w"],
+        });
+        assert_eq!(nodes.len(), 6);
+        let model = w.build().unwrap();
+        assert_eq!(model.num_ports(), 24);
+
+        // 3x2 open grid: border nodes drop the outward interfaces; the
+        // remaining joins are 2*(links) = 2*(#horizontal + #vertical)
+        // directed = 2*(4 + 3) = 14.
+        let mut w = Wire::new();
+        let nodes = w.grid_of(3, 2, |x, y| {
+            let mut dirs = Vec::new();
+            if y > 0 {
+                dirs.push("n");
+            }
+            if x < 2 {
+                dirs.push("e");
+            }
+            if y < 1 {
+                dirs.push("s");
+            }
+            if x > 0 {
+                dirs.push("w");
+            }
+            FourWay { dirs }
+        });
+        assert_eq!(nodes.len(), 6);
+        let model = w.build().unwrap();
+        assert_eq!(model.num_ports(), 14);
+    }
+
+    #[test]
+    fn chain_ring_and_tree_combinators_wire_fully() {
+        struct Hop {
+            first: bool,
+            last: bool,
+        }
+        impl Component for Hop {
+            fn name(&self) -> String {
+                "hop".into()
+            }
+            fn inputs(&self) -> Vec<IfaceSpec> {
+                if self.first {
+                    vec![]
+                } else {
+                    vec![IfaceSpec::new("prev", PortCfg::default())]
+                }
+            }
+            fn outputs(&self) -> Vec<IfaceSpec> {
+                if self.last {
+                    vec![]
+                } else {
+                    vec![IfaceSpec::new("next", PortCfg::default())]
+                }
+            }
+            fn build(self: Box<Self>, _p: &Ports) -> Box<dyn Unit> {
+                struct Nop;
+                impl Unit for Nop {
+                    fn work(&mut self, _ctx: &mut Ctx<'_>) {}
+                }
+                Box::new(Nop)
+            }
+        }
+        let mut w = Wire::new();
+        let nodes = w.replicate(5, |i| Hop {
+            first: i == 0,
+            last: i == 4,
+        });
+        w.chain(&nodes, "next", "prev");
+        let model = w.build().unwrap();
+        assert_eq!(model.num_ports(), 4);
+
+        let mut w = Wire::new();
+        let nodes = w.replicate(4, |_| Hop {
+            first: false,
+            last: false,
+        });
+        w.ring(&nodes, "next", "prev");
+        let model = w.build().unwrap();
+        assert_eq!(model.num_ports(), 4, "closed ring: n links");
+
+        struct TreeNode {
+            root: bool,
+            leaf: bool,
+            arity: usize,
+        }
+        impl Component for TreeNode {
+            fn name(&self) -> String {
+                "t".into()
+            }
+            fn inputs(&self) -> Vec<IfaceSpec> {
+                let mut v = Vec::new();
+                if !self.root {
+                    v.push(IfaceSpec::new("up", PortCfg::default()));
+                }
+                if !self.leaf {
+                    for d in &DOWN_NAMES[..self.arity] {
+                        v.push(IfaceSpec::new(d, PortCfg::default()));
+                    }
+                }
+                v
+            }
+            fn outputs(&self) -> Vec<IfaceSpec> {
+                self.inputs()
+            }
+            fn build(self: Box<Self>, _p: &Ports) -> Box<dyn Unit> {
+                struct Nop;
+                impl Unit for Nop {
+                    fn work(&mut self, _ctx: &mut Ctx<'_>) {}
+                }
+                Box::new(Nop)
+            }
+        }
+        let mut w = Wire::new();
+        let nodes = w.tree_of(2, 3, |level, _| TreeNode {
+            root: level == 0,
+            leaf: level == 2,
+            arity: 2,
+        });
+        assert_eq!(nodes.len(), 1 + 2 + 4);
+        let model = w.build().unwrap();
+        // 6 parent-child pairs, wired both ways.
+        assert_eq!(model.num_ports(), 12);
+    }
+}

@@ -94,6 +94,8 @@ pub fn partition_ablation(cores: usize, workers: usize) -> Vec<PartitionAblation
         PartitionStrategy::RoundRobin,
         PartitionStrategy::Contiguous,
         PartitionStrategy::Locality,
+        PartitionStrategy::CostBalanced,
+        PartitionStrategy::CostLocality,
     ] {
         let (model, h) = build_cpu_system(traces.clone(), &cfg);
         let part = partition(&model, workers, strat);

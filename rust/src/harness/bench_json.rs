@@ -43,6 +43,9 @@ pub struct BenchRow {
     /// Barrier-side unit migrations (adaptive repartitioning; 0 when
     /// disabled or serial).
     pub repartition_events: u64,
+    /// Ports cut by the final partition (0 for serial rows) — the
+    /// locality objective's observable.
+    pub cross_cluster_ports: u64,
     pub fingerprint: u64,
 }
 
@@ -68,6 +71,7 @@ impl BenchRow {
             barrier_ns,
             active_ratio: s.active_ratio(units),
             repartition_events: s.repart.events,
+            cross_cluster_ports: s.cross_cluster_ports,
             fingerprint: s.fingerprint,
         }
     }
@@ -145,7 +149,8 @@ impl LadderBench {
                  \"cycles\": {}, \"wall_ns\": {}, \"cycles_per_sec\": {:.1}, \
                  \"sync_ops\": {}, \"work_ns\": {}, \"transfer_ns\": {}, \
                  \"barrier_ns\": {}, \"active_ratio\": {:.4}, \
-                 \"repartition_events\": {}, \"fingerprint\": \"{:#018x}\"}}{}\n",
+                 \"repartition_events\": {}, \"cross_cluster_ports\": {}, \
+                 \"fingerprint\": \"{:#018x}\"}}{}\n",
                 r.engine,
                 r.sched,
                 r.workers,
@@ -158,6 +163,7 @@ impl LadderBench {
                 r.barrier_ns,
                 r.active_ratio,
                 r.repartition_events,
+                r.cross_cluster_ports,
                 r.fingerprint,
                 if i + 1 < self.rows.len() { "," } else { "" },
             ));
@@ -268,6 +274,7 @@ pub fn print(b: &LadderBench) {
                 r.sync_ops.to_string(),
                 format!("{:.3}", r.active_ratio),
                 r.repartition_events.to_string(),
+                r.cross_cluster_ports.to_string(),
                 format!("{:#018x}", r.fingerprint),
             ]
         })
@@ -294,6 +301,7 @@ pub fn print(b: &LadderBench) {
             "sync-ops",
             "active",
             "repart",
+            "xports",
             "fingerprint",
         ],
         &rows,
@@ -322,6 +330,14 @@ mod tests {
         assert!(json.contains("\"scenario\": \"cpu-light\""));
         assert!(json.contains("\"repartition_interval\": 256"));
         assert!(json.contains("\"repartition_events\": "));
+        assert!(json.contains("\"cross_cluster_ports\": "));
+        let ladder_cut = b
+            .rows
+            .iter()
+            .find(|r| r.engine == "ladder")
+            .expect("ladder row")
+            .cross_cluster_ports;
+        assert!(ladder_cut > 0, "2-way split of the cpu system cuts ports");
         assert!(json.contains("\"rows\": ["));
         // Crude structural sanity: balanced braces/brackets.
         assert_eq!(

@@ -13,7 +13,7 @@
 //! the true threaded run is reported alongside.
 
 use crate::engine::{Engine, Model, RepartitionPolicy, SchedMode, Sim, Stop};
-use crate::sched::{partition, partition_with_costs, PartitionStrategy};
+use crate::sched::{partition, partition_cost_locality, partition_with_costs, PartitionStrategy};
 use crate::stats::scaling::{model_parallel_time, BarrierCost, ClusterCosts, ScalingPoint};
 use crate::sync::SyncMethod;
 use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg, CpuSystemHandles};
@@ -68,7 +68,7 @@ pub fn profile_costs(
     scratch: impl FnOnce() -> Model,
 ) -> Option<Vec<u64>> {
     match strategy {
-        Some(PartitionStrategy::CostBalanced) => {
+        Some(PartitionStrategy::CostBalanced) | Some(PartitionStrategy::CostLocality) => {
             let mut probe = scratch();
             Some(probe.profile_unit_costs(PROFILE_CYCLES).work_ns)
         }
@@ -76,9 +76,11 @@ pub fn profile_costs(
     }
 }
 
-/// Resolve the unit→cluster mapping for one sweep point. `CostBalanced`
-/// uses the shared measured costs from [`profile_costs`], falling back to
-/// the static degree proxy (`sched::partition`) if none were gathered.
+/// Resolve the unit→cluster mapping for one sweep point. The cost-driven
+/// strategies use the shared measured costs from [`profile_costs`]
+/// (`CostLocality` additionally reads the model's build-time topology),
+/// falling back to the static degree proxy (`sched::partition`) if none
+/// were gathered.
 pub fn resolve_partition(
     model: &Model,
     w: usize,
@@ -90,6 +92,9 @@ pub fn resolve_partition(
         (None, _) => h.partition(w), // paper clustering: cores spread evenly
         (Some(PartitionStrategy::CostBalanced), Some(costs)) => {
             partition_with_costs(w, costs)
+        }
+        (Some(PartitionStrategy::CostLocality), Some(costs)) => {
+            partition_cost_locality(model, w, costs)
         }
         (Some(s), _) => partition(model, w, s),
     }

@@ -34,7 +34,9 @@ fn usage() -> ! {
          \x20 run            --scenario NAME [--list-scenarios] [--workers N]\n\
          \x20                [--engine auto|serial|partitioned|ladder]\n\
          \x20                [--sync common-atomic|atomic|spinlock|mutex]\n\
-         \x20                [--strategy S] [--sched full|active] [--spin yield|pure]\n\
+         \x20                [--strategy round-robin|random|locality|contiguous|\n\
+         \x20                 cost-balanced|cost-locality]\n\
+         \x20                [--sched full|active] [--spin yield|pure]\n\
          \x20                [--repartition N[,HYST[,MOVES]]] (adaptive rebalance)\n\
          \x20                [--cycles N] [--timed] [--fingerprint] [--counters]\n\
          \x20                [--json out.json] [--set k=v,k=v] (scenario keys)\n\

@@ -14,8 +14,8 @@
 //! that no longer holds the line, and clients ack regardless.
 
 use super::cache::{CacheArray, CacheCfg};
-use super::msg::MemMsg;
-use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use super::msg::{MemMsg, MemPacket};
+use crate::engine::{Ctx, Fnv, In, Msg, Out, Unit};
 use crate::noc::net_b;
 use crate::stats::StatsMap;
 use std::collections::{BTreeMap, VecDeque};
@@ -66,10 +66,10 @@ pub struct DirBank {
     array: CacheArray,
     dir: BTreeMap<u64, DirEntry>,
     busy: BTreeMap<u64, BusyLine>,
-    from_net: InPort,
-    to_net: OutPort,
-    to_dram: OutPort,
-    from_dram: InPort,
+    from_net: In<MemPacket>,
+    to_net: Out<MemPacket>,
+    to_dram: Out<MemPacket>,
+    from_dram: In<MemPacket>,
     net_q: VecDeque<Msg>,
     dram_q: VecDeque<Msg>,
     /// Messages to re-process (from lines that un-busied).
@@ -92,10 +92,10 @@ impl DirBank {
         node: u32,
         core_nodes: Vec<u32>,
         cfg: CacheCfg,
-        from_net: InPort,
-        to_net: OutPort,
-        to_dram: OutPort,
-        from_dram: InPort,
+        from_net: In<MemPacket>,
+        to_net: Out<MemPacket>,
+        to_dram: Out<MemPacket>,
+        from_dram: In<MemPacket>,
     ) -> Self {
         assert!(core_nodes.len() <= 64, "sharer bitmask is 64-wide");
         DirBank {
@@ -135,13 +135,13 @@ impl DirBank {
 
     fn flush_queues(&mut self, ctx: &mut Ctx<'_>) {
         while let Some(m) = self.net_q.pop_front() {
-            if let Err(m) = ctx.send(self.to_net, m) {
+            if let Err(m) = self.to_net.send_msg(ctx, m) {
                 self.net_q.push_front(m);
                 break;
             }
         }
         while let Some(m) = self.dram_q.pop_front() {
-            if let Err(m) = ctx.send(self.to_dram, m) {
+            if let Err(m) = self.to_dram.send_msg(ctx, m) {
                 self.dram_q.push_front(m);
                 break;
             }
@@ -361,7 +361,7 @@ impl Unit for DirBank {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
         self.flush_queues(ctx);
         // DRAM responses.
-        while let Some(m) = ctx.recv(self.from_dram) {
+        while let Some(m) = self.from_dram.recv_msg(ctx) {
             debug_assert_eq!(m.kind, MemMsg::DramResp as u32);
             self.handle_response(m);
         }
@@ -371,7 +371,7 @@ impl Unit for DirBank {
         }
         // New network messages (bounded width).
         for _ in 0..self.width {
-            let Some(m) = ctx.recv(self.from_net) else { break };
+            let Some(m) = self.from_net.recv_msg(ctx) else { break };
             match MemMsg::from_u32(m.kind) {
                 Some(MemMsg::GetS) | Some(MemMsg::GetM) | Some(MemMsg::PutM) => {
                     self.handle_request(m)

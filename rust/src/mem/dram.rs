@@ -5,15 +5,15 @@
 //! completing `latency` cycles later (FIFO, so completion order is
 //! deterministic).
 
-use super::msg::MemMsg;
-use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use super::msg::{MemMsg, MemPacket};
+use crate::engine::{Ctx, Fnv, In, Out, Unit};
 use crate::stats::StatsMap;
 use std::collections::VecDeque;
 
 pub struct DramChannel {
     pub channel: u32,
-    from_bank: InPort,
-    to_bank: OutPort,
+    from_bank: In<MemPacket>,
+    to_bank: Out<MemPacket>,
     /// Access latency in cycles.
     latency: u64,
     /// Requests accepted per cycle.
@@ -25,7 +25,13 @@ pub struct DramChannel {
 }
 
 impl DramChannel {
-    pub fn new(channel: u32, from_bank: InPort, to_bank: OutPort, latency: u64, bw: usize) -> Self {
+    pub fn new(
+        channel: u32,
+        from_bank: In<MemPacket>,
+        to_bank: Out<MemPacket>,
+        latency: u64,
+        bw: usize,
+    ) -> Self {
         DramChannel {
             channel,
             from_bank,
@@ -43,22 +49,23 @@ impl Unit for DramChannel {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
         // Complete ready reads (FIFO; constant latency keeps order).
         while let Some(&(ready, line)) = self.in_service.front() {
-            if ready > ctx.cycle || !ctx.out_vacant(self.to_bank) {
+            if ready > ctx.cycle || !self.to_bank.vacant(ctx) {
                 break;
             }
             self.in_service.pop_front();
-            ctx.send(self.to_bank, Msg::with(MemMsg::DramResp as u32, line, 0, 0))
+            self.to_bank
+                .send(ctx, MemPacket::new(MemMsg::DramResp, line, 0, 0))
                 .expect("vacancy checked");
         }
         // Accept new requests.
         for _ in 0..self.bw {
-            let Some(m) = ctx.recv(self.from_bank) else { break };
-            match MemMsg::from_u32(m.kind) {
-                Some(MemMsg::DramRd) => {
+            let Some(p) = self.from_bank.recv(ctx) else { break };
+            match p.kind {
+                MemMsg::DramRd => {
                     self.reads += 1;
-                    self.in_service.push_back((ctx.cycle + self.latency, m.a));
+                    self.in_service.push_back((ctx.cycle + self.latency, p.a));
                 }
-                Some(MemMsg::DramWr) => {
+                MemMsg::DramWr => {
                     self.writes += 1; // posted write: no response
                 }
                 other => panic!("dram {}: unexpected {:?}", self.channel, other),

@@ -5,8 +5,8 @@
 //! L1 (`L1Inv`) whenever it loses a line, preserving inclusion.
 
 use super::cache::{CacheArray, CacheCfg};
-use super::msg::{line_of, MemMsg};
-use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use super::msg::{line_of, MemMsg, MemPacket};
+use crate::engine::{Ctx, Fnv, In, Msg, Out, Unit};
 use crate::stats::StatsMap;
 use std::collections::VecDeque;
 
@@ -22,10 +22,10 @@ struct Mshr {
 pub struct L1Cache {
     pub core: u32,
     array: CacheArray,
-    from_core: InPort,
-    to_core: OutPort,
-    to_l2: OutPort,
-    from_l2: InPort,
+    from_core: In<MemPacket>,
+    to_core: Out<MemPacket>,
+    to_l2: Out<MemPacket>,
+    from_l2: In<MemPacket>,
     mshrs: Vec<Mshr>,
     max_mshrs: usize,
     /// Core-bound responses that found `to_core` full.
@@ -49,10 +49,10 @@ impl L1Cache {
     pub fn new(
         core: u32,
         cfg: CacheCfg,
-        from_core: InPort,
-        to_core: OutPort,
-        to_l2: OutPort,
-        from_l2: InPort,
+        from_core: In<MemPacket>,
+        to_core: Out<MemPacket>,
+        to_l2: Out<MemPacket>,
+        from_l2: In<MemPacket>,
     ) -> Self {
         L1Cache {
             core,
@@ -76,7 +76,7 @@ impl L1Cache {
 
     fn push_resp(&mut self, ctx: &mut Ctx<'_>, m: Msg) {
         if self.resp_q.is_empty() {
-            if let Err(m) = ctx.send(self.to_core, m) {
+            if let Err(m) = self.to_core.send_msg(ctx, m) {
                 self.resp_q.push_back(m);
             }
         } else {
@@ -86,7 +86,7 @@ impl L1Cache {
 
     fn push_req(&mut self, ctx: &mut Ctx<'_>, m: Msg) {
         if self.req_q.is_empty() {
-            if let Err(m) = ctx.send(self.to_l2, m) {
+            if let Err(m) = self.to_l2.send_msg(ctx, m) {
                 self.req_q.push_back(m);
             }
         } else {
@@ -96,13 +96,13 @@ impl L1Cache {
 
     fn flush_queues(&mut self, ctx: &mut Ctx<'_>) {
         while let Some(m) = self.resp_q.pop_front() {
-            if let Err(m) = ctx.send(self.to_core, m) {
+            if let Err(m) = self.to_core.send_msg(ctx, m) {
                 self.resp_q.push_front(m);
                 break;
             }
         }
         while let Some(m) = self.req_q.pop_front() {
-            if let Err(m) = ctx.send(self.to_l2, m) {
+            if let Err(m) = self.to_l2.send_msg(ctx, m) {
                 self.req_q.push_front(m);
                 break;
             }
@@ -114,7 +114,7 @@ impl Unit for L1Cache {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
         self.flush_queues(ctx);
         // 1. L2 responses (drain all ready).
-        while let Some(m) = ctx.recv(self.from_l2) {
+        while let Some(m) = self.from_l2.recv_msg(ctx) {
             match MemMsg::from_u32(m.kind) {
                 Some(MemMsg::L1Fill) => {
                     let line = m.a;
@@ -146,23 +146,23 @@ impl Unit for L1Cache {
         }
         // 2. Core requests (bounded width, in order, with back pressure).
         for _ in 0..self.width {
-            let Some(kind) = ctx.peek(self.from_core).map(|m| m.kind) else {
+            let Some(kind) = self.from_core.peek_msg(ctx).map(|m| m.kind) else {
                 break;
             };
             match MemMsg::from_u32(kind) {
                 Some(MemMsg::CoreLd) => {
-                    let line = line_of(ctx.peek(self.from_core).unwrap().a);
+                    let line = line_of(self.from_core.peek_msg(ctx).unwrap().a);
                     if self.array.lookup(line).is_some() {
-                        let m = ctx.recv(self.from_core).unwrap();
+                        let m = self.from_core.recv_msg(ctx).unwrap();
                         self.loads += 1;
                         let resp = Msg::with(MemMsg::CoreResp as u32, m.a, 0, m.c);
                         self.push_resp(ctx, resp);
                     } else if let Some(h) = self.mshrs.iter_mut().find(|h| h.line == line) {
-                        let m = ctx.recv(self.from_core).unwrap();
+                        let m = self.from_core.recv_msg(ctx).unwrap();
                         self.loads += 1;
                         h.waiting.push((m.a, m.c));
                     } else if self.mshrs.len() < self.max_mshrs {
-                        let m = ctx.recv(self.from_core).unwrap();
+                        let m = self.from_core.recv_msg(ctx).unwrap();
                         self.loads += 1;
                         self.mshrs.push(Mshr {
                             line,
@@ -176,7 +176,7 @@ impl Unit for L1Cache {
                 }
                 Some(MemMsg::CoreSt) | Some(MemMsg::CoreAmo) => {
                     // Write-through / RMW: forward to L2, ack on completion.
-                    let m = ctx.recv(self.from_core).unwrap();
+                    let m = self.from_core.recv_msg(ctx).unwrap();
                     let is_amo = m.kind == MemMsg::CoreAmo as u32;
                     if is_amo {
                         self.amos += 1;

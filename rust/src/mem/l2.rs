@@ -8,8 +8,8 @@
 //! and awaiting a writeback ack (`WaitPutAck`).
 
 use super::cache::{CacheArray, CacheCfg};
-use super::msg::MemMsg;
-use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use super::msg::{MemMsg, MemPacket};
+use crate::engine::{Ctx, Fnv, In, Msg, Out, Unit};
 use crate::noc::net_b;
 use crate::stats::StatsMap;
 use std::collections::{BTreeMap, VecDeque};
@@ -48,10 +48,10 @@ pub struct L2Cache {
     /// Home bank node for each line: `bank_nodes[(line >> 6) % nbanks]`.
     bank_nodes: Vec<u32>,
     array: CacheArray,
-    from_l1: InPort,
-    to_l1: OutPort,
-    to_net: OutPort,
-    from_net: InPort,
+    from_l1: In<MemPacket>,
+    to_l1: Out<MemPacket>,
+    to_net: Out<MemPacket>,
+    from_net: In<MemPacket>,
     trans: BTreeMap<u64, Trans>,
     max_trans: usize,
     l1_q: VecDeque<Msg>,
@@ -71,10 +71,10 @@ impl L2Cache {
         node: u32,
         bank_nodes: Vec<u32>,
         cfg: CacheCfg,
-        from_l1: InPort,
-        to_l1: OutPort,
-        to_net: OutPort,
-        from_net: InPort,
+        from_l1: In<MemPacket>,
+        to_l1: Out<MemPacket>,
+        to_net: Out<MemPacket>,
+        from_net: In<MemPacket>,
     ) -> Self {
         L2Cache {
             core,
@@ -114,13 +114,13 @@ impl L2Cache {
 
     fn flush_queues(&mut self, ctx: &mut Ctx<'_>) {
         while let Some(m) = self.l1_q.pop_front() {
-            if let Err(m) = ctx.send(self.to_l1, m) {
+            if let Err(m) = self.to_l1.send_msg(ctx, m) {
                 self.l1_q.push_front(m);
                 break;
             }
         }
         while let Some(m) = self.net_q.pop_front() {
-            if let Err(m) = ctx.send(self.to_net, m) {
+            if let Err(m) = self.to_net.send_msg(ctx, m) {
                 self.net_q.push_front(m);
                 break;
             }
@@ -274,20 +274,20 @@ impl Unit for L2Cache {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
         self.flush_queues(ctx);
         // Network responses first (they free transaction slots).
-        while let Some(m) = ctx.recv(self.from_net) {
+        while let Some(m) = self.from_net.recv_msg(ctx) {
             self.handle_net(m);
         }
         // Then bounded L1 requests. L1 messages carry the line in `a` and
         // the requester tag in `c`.
         for _ in 0..self.width {
-            let Some(peek) = ctx.peek(self.from_l1) else { break };
+            let Some(peek) = self.from_l1.peek_msg(ctx) else { break };
             let req = PendingReq {
                 kind: MemMsg::from_u32(peek.kind).expect("bad L1 kind"),
                 addr: peek.a,
                 tag: peek.c,
             };
             if self.trans.contains_key(&(req.addr & !63)) || self.trans.len() < self.max_trans {
-                let _ = ctx.recv(self.from_l1).unwrap();
+                let _ = self.from_l1.recv_msg(ctx).unwrap();
                 let ok = self.handle_l1_req(req);
                 debug_assert!(ok);
             } else {

@@ -27,4 +27,4 @@ pub mod l2;
 pub mod msg;
 
 pub use cache::{CacheArray, CacheCfg};
-pub use msg::MemMsg;
+pub use msg::{MemMsg, MemPacket};

@@ -5,6 +5,14 @@
 //! - `a` — line address (byte address of the line base).
 //! - `b` — NoC (src, dst) node pair for routed messages (`noc::net_b`).
 //! - `c` — auxiliary: requester core id, or ack counts.
+//!
+//! [`MemPacket`] is the typed [`Payload`] view of that encoding: the
+//! memory substrate's ports are declared `In<MemPacket>`/`Out<MemPacket>`
+//! so only memory traffic can be wired onto them, while the wire format
+//! stays the same POD `Msg` scalar words (zero-cost; tested by the
+//! roundtrip below).
+
+use crate::engine::{Msg, Payload};
 
 /// Line size in bytes (64 B everywhere).
 pub const LINE: u64 = 64;
@@ -79,7 +87,71 @@ pub enum MemMsg {
     DramResp = 0x132,
 }
 
+/// One memory-system message: the typed view over `Msg`'s scalar words.
+/// Field meanings follow the module-level encoding (`a` = line/address,
+/// `b` = routed NoC node pair, `c` = tag/aux).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemPacket {
+    pub kind: MemMsg,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+}
+
+impl MemPacket {
+    pub fn new(kind: MemMsg, a: u64, b: u64, c: u64) -> Self {
+        MemPacket { kind, a, b, c }
+    }
+}
+
+impl Payload for MemPacket {
+    fn encode(self) -> Msg {
+        Msg::with(self.kind as u32, self.a, self.b, self.c)
+    }
+
+    fn decode(m: &Msg) -> Self {
+        let kind = MemMsg::from_u32(m.kind)
+            .unwrap_or_else(|| panic!("foreign kind {:#x} on a memory port", m.kind));
+        MemPacket {
+            kind,
+            a: m.a,
+            b: m.b,
+            c: m.c,
+        }
+    }
+}
+
 impl MemMsg {
+    /// Every message kind, for exhaustive roundtrip checks.
+    pub const ALL: &'static [MemMsg] = &[
+        MemMsg::CoreLd,
+        MemMsg::CoreSt,
+        MemMsg::CoreAmo,
+        MemMsg::CoreResp,
+        MemMsg::CoreStAck,
+        MemMsg::L1Read,
+        MemMsg::L1Write,
+        MemMsg::L1Amo,
+        MemMsg::L1Fill,
+        MemMsg::L1WriteAck,
+        MemMsg::L1Inv,
+        MemMsg::GetS,
+        MemMsg::GetM,
+        MemMsg::PutM,
+        MemMsg::DataS,
+        MemMsg::DataE,
+        MemMsg::DataM,
+        MemMsg::Inv,
+        MemMsg::InvAck,
+        MemMsg::FwdWbS,
+        MemMsg::FwdWbI,
+        MemMsg::WbData,
+        MemMsg::PutAck,
+        MemMsg::DramRd,
+        MemMsg::DramWr,
+        MemMsg::DramResp,
+    ];
+
     pub fn from_u32(v: u32) -> Option<MemMsg> {
         use MemMsg::*;
         Some(match v {
@@ -128,15 +200,43 @@ mod tests {
 
     #[test]
     fn kind_roundtrip() {
-        for k in [
-            MemMsg::CoreLd,
-            MemMsg::GetS,
-            MemMsg::DataM,
-            MemMsg::InvAck,
-            MemMsg::DramResp,
-        ] {
+        for &k in MemMsg::ALL {
             assert_eq!(MemMsg::from_u32(k as u32), Some(k));
         }
         assert_eq!(MemMsg::from_u32(0xdead), None);
+    }
+
+    #[test]
+    fn all_list_stays_in_sync_with_from_u32() {
+        // Guard against a new variant reaching the enum + `from_u32` but
+        // not `ALL` (which would silently shrink the "exhaustive"
+        // roundtrip coverage): sweep the whole discriminant space.
+        let known: Vec<u32> = (0..0x1000).filter(|&v| MemMsg::from_u32(v).is_some()).collect();
+        assert_eq!(
+            known.len(),
+            MemMsg::ALL.len(),
+            "MemMsg::ALL is missing (or duplicates) a kind: {known:x?}"
+        );
+        for &k in MemMsg::ALL {
+            assert!(known.contains(&(k as u32)));
+        }
+    }
+
+    #[test]
+    fn packet_payload_roundtrips_every_kind() {
+        for (i, &k) in MemMsg::ALL.iter().enumerate() {
+            let p = MemPacket::new(k, 0x1000 + i as u64 * 64, (7 << 32) | 42, i as u64);
+            let m = p.encode();
+            assert_eq!(m.kind, k as u32, "kind word is the discriminant");
+            assert_eq!((m.a, m.b, m.c), (p.a, p.b, p.c), "scalar words pass through");
+            assert!(m.payload.is_none(), "typed packets never box");
+            assert_eq!(MemPacket::decode(&m), p, "roundtrip");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "foreign kind")]
+    fn packet_decode_rejects_foreign_kinds() {
+        let _ = MemPacket::decode(&Msg::with(0xdead, 0, 0, 0));
     }
 }

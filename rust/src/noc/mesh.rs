@@ -1,8 +1,12 @@
 //! Mesh construction helper: reserves routers, wires neighbour links, and
-//! attaches endpoint units to local ports.
+//! attaches endpoint units to local ports — all through the typed wiring
+//! layer. Trunk (router↔router) links are [`Transit`] (routers forward
+//! without decoding); endpoint attachments are typed by the traffic the
+//! endpoint actually speaks (`Flit` for NoC scenarios, `MemPacket` for
+//! the CPU system's L2/banks).
 
 use super::router::{Router, DIR_E, DIR_LOCAL, DIR_N, DIR_S, DIR_W};
-use crate::engine::{InPort, ModelBuilder, OutPort, PortCfg};
+use crate::engine::{In, ModelBuilder, Out, PortCfg, Transit};
 
 #[derive(Debug, Clone, Copy)]
 pub struct MeshCfg {
@@ -62,19 +66,19 @@ impl Mesh {
                 let a = (y * cfg.width + x) as usize;
                 if x + 1 < cfg.width {
                     let b = a + 1;
-                    let (tx, rx) = mb.connect(router_ids[a], router_ids[b], link);
+                    let (tx, rx) = mb.link::<Transit>(router_ids[a], router_ids[b], link);
                     routers[a].as_mut().unwrap().set_output(DIR_E, tx);
                     routers[b].as_mut().unwrap().set_input(DIR_W, rx);
-                    let (tx, rx) = mb.connect(router_ids[b], router_ids[a], link);
+                    let (tx, rx) = mb.link::<Transit>(router_ids[b], router_ids[a], link);
                     routers[b].as_mut().unwrap().set_output(DIR_W, tx);
                     routers[a].as_mut().unwrap().set_input(DIR_E, rx);
                 }
                 if y + 1 < cfg.height {
                     let b = a + cfg.width as usize;
-                    let (tx, rx) = mb.connect(router_ids[a], router_ids[b], link);
+                    let (tx, rx) = mb.link::<Transit>(router_ids[a], router_ids[b], link);
                     routers[a].as_mut().unwrap().set_output(DIR_S, tx);
                     routers[b].as_mut().unwrap().set_input(DIR_N, rx);
-                    let (tx, rx) = mb.connect(router_ids[b], router_ids[a], link);
+                    let (tx, rx) = mb.link::<Transit>(router_ids[b], router_ids[a], link);
                     routers[b].as_mut().unwrap().set_output(DIR_N, tx);
                     routers[a].as_mut().unwrap().set_input(DIR_S, rx);
                 }
@@ -87,18 +91,21 @@ impl Mesh {
         }
     }
 
-    /// Attach `unit` to `node`'s local port. Returns
-    /// `(unit→net out, net→unit in)` handles for the endpoint unit.
-    pub fn attach(&mut self, mb: &mut ModelBuilder, node: u32, unit: u32) -> (OutPort, InPort) {
+    /// Attach `unit` to `node`'s local port, typed by the endpoint's
+    /// traffic. Returns `(unit→net out, net→unit in)` handles for the
+    /// endpoint unit; the router keeps transit-erased views of the same
+    /// ports. Local links carry weight 2 so locality partitioning binds
+    /// an endpoint to its own router before anything else.
+    pub fn attach<T>(&mut self, mb: &mut ModelBuilder, node: u32, unit: u32) -> (Out<T>, In<T>) {
         let local = PortCfg::new(self.cfg.local_capacity, 1);
         let rid = self.router_ids[node as usize];
-        let (to_net, router_in) = mb.connect(unit, rid, local);
-        let (router_out, from_net) = mb.connect(rid, unit, local);
+        let (to_net, router_in) = mb.link_weighted::<T>(unit, rid, local, 2);
+        let (router_out, from_net) = mb.link_weighted::<T>(rid, unit, local, 2);
         let r = self.routers[node as usize]
             .as_mut()
             .expect("attach after finish");
-        r.set_input(DIR_LOCAL, router_in);
-        r.set_output(DIR_LOCAL, router_out);
+        r.set_input(DIR_LOCAL, router_in.transit());
+        r.set_output(DIR_LOCAL, router_out.transit());
         (to_net, from_net)
     }
 
@@ -122,12 +129,12 @@ impl Mesh {
 mod tests {
     use super::*;
     use crate::engine::unit::{Ctx, Unit};
-    use crate::engine::{Fnv, Msg, RunOpts};
-    use crate::noc::router::net_b;
+    use crate::engine::{Fnv, RunOpts};
+    use crate::noc::router::Flit;
 
     /// Sends `count` packets to `dst_node` as fast as the port allows.
     struct Injector {
-        out: OutPort,
+        out: Out<Flit>,
         node: u32,
         dst: u32,
         count: u64,
@@ -136,11 +143,10 @@ mod tests {
 
     impl Unit for Injector {
         fn work(&mut self, ctx: &mut Ctx<'_>) {
-            while self.sent < self.count && ctx.out_vacant(self.out) {
-                let mut m = Msg::with(1, self.sent, 0, 0);
-                m.b = net_b(self.node, self.dst);
-                m.c = ctx.cycle; // inject time
-                ctx.send(self.out, m).unwrap();
+            while self.sent < self.count && self.out.vacant(ctx) {
+                self.out
+                    .send(ctx, Flit::new(self.sent, self.node, self.dst, ctx.cycle))
+                    .unwrap();
                 self.sent += 1;
             }
         }
@@ -156,7 +162,7 @@ mod tests {
 
     /// Receives packets; optionally refuses to drain (back-pressure test).
     struct Sink {
-        inp: InPort,
+        inp: In<Flit>,
         received: u64,
         last_latency: u64,
         drain: bool,
@@ -167,9 +173,9 @@ mod tests {
             if !self.drain {
                 return;
             }
-            while let Some(m) = ctx.recv(self.inp) {
+            while let Some(f) = self.inp.recv(ctx) {
                 self.received += 1;
-                self.last_latency = ctx.cycle - m.c;
+                self.last_latency = ctx.cycle - f.inject;
             }
         }
 
@@ -195,8 +201,8 @@ mod tests {
                 ..Default::default()
             },
         );
-        let (to_net, _unused_rx) = mesh.attach(&mut mb, 0, inj);
-        let (_unused_tx, from_net) = mesh.attach(&mut mb, 3, snk);
+        let (to_net, _unused_rx) = mesh.attach::<Flit>(&mut mb, 0, inj);
+        let (_unused_tx, from_net) = mesh.attach::<Flit>(&mut mb, 3, snk);
         mesh.finish(&mut mb);
         mb.install(
             inj,

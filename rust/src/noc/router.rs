@@ -1,6 +1,6 @@
 //! A mesh router unit with XY dimension-order routing.
 
-use crate::engine::{Ctx, Fnv, InPort, Msg, OutPort, Unit};
+use crate::engine::{Ctx, Fnv, In, Msg, Out, Payload, Transit, Unit};
 use crate::stats::StatsMap;
 
 /// Pack (src_node, dst_node) into a message's `b` field — the NoC routes
@@ -8,6 +8,50 @@ use crate::stats::StatsMap;
 #[inline]
 pub fn net_b(src: u32, dst: u32) -> u64 {
     ((src as u64) << 32) | dst as u64
+}
+
+/// Message kind of plain NoC traffic flits (endpoint-generated packets;
+/// the fabric itself routes any kind on `b`).
+pub const FLIT: u32 = 1;
+
+/// A plain network flit: the typed payload of NoC traffic endpoints
+/// (mesh/ring/torus scenarios). Encoding: `kind` = [`FLIT`], `a` = seq,
+/// `b` = packed `(src, dst)` node pair, `c` = inject cycle (for latency).
+/// Routers never decode flits — they are pass-through [`Transit`] units
+/// routing on `b` — so memory traffic and flits share the same fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flit {
+    pub seq: u64,
+    pub src: u32,
+    pub dst: u32,
+    pub inject: u64,
+}
+
+impl Flit {
+    pub fn new(seq: u64, src: u32, dst: u32, inject: u64) -> Self {
+        Flit {
+            seq,
+            src,
+            dst,
+            inject,
+        }
+    }
+}
+
+impl Payload for Flit {
+    fn encode(self) -> Msg {
+        Msg::with(FLIT, self.seq, net_b(self.src, self.dst), self.inject)
+    }
+
+    fn decode(m: &Msg) -> Self {
+        assert_eq!(m.kind, FLIT, "foreign kind on a flit port");
+        Flit {
+            seq: m.a,
+            src: net_src(m.b),
+            dst: net_dst(m.b),
+            inject: m.c,
+        }
+    }
 }
 
 #[inline]
@@ -36,8 +80,8 @@ pub struct Router {
     pub x: u32,
     pub y: u32,
     width: u32,
-    inputs: [Option<InPort>; NUM_DIRS],
-    outputs: [Option<OutPort>; NUM_DIRS],
+    inputs: [Option<In<Transit>>; NUM_DIRS],
+    outputs: [Option<Out<Transit>>; NUM_DIRS],
     /// Flits forwarded, per direction (stats).
     forwarded: u64,
     stalled: u64,
@@ -57,11 +101,11 @@ impl Router {
         }
     }
 
-    pub fn set_input(&mut self, dir: usize, p: InPort) {
+    pub fn set_input(&mut self, dir: usize, p: In<Transit>) {
         self.inputs[dir] = Some(p);
     }
 
-    pub fn set_output(&mut self, dir: usize, p: OutPort) {
+    pub fn set_output(&mut self, dir: usize, p: Out<Transit>) {
         self.outputs[dir] = Some(p);
     }
 
@@ -90,7 +134,7 @@ impl Unit for Router {
         // (implicit back pressure).
         for dir in 0..NUM_DIRS {
             let Some(inp) = self.inputs[dir] else { continue };
-            let Some(dst_node) = ctx.peek(inp).map(|m| net_dst(m.b)) else {
+            let Some(dst_node) = inp.peek_msg(ctx).map(|m| net_dst(m.b)) else {
                 continue;
             };
             let out_dir = self.route(dst_node);
@@ -100,9 +144,9 @@ impl Unit for Router {
                     self.node, out_dir, dst_node
                 );
             };
-            if ctx.out_vacant(out) {
-                let m: Msg = ctx.recv(inp).expect("peeked message vanished");
-                ctx.send(out, m).expect("vacancy checked");
+            if out.vacant(ctx) {
+                let m: Msg = inp.recv_msg(ctx).expect("peeked message vanished");
+                out.send_msg(ctx, m).expect("vacancy checked");
                 self.forwarded += 1;
             } else {
                 self.stalled += 1;

@@ -17,17 +17,24 @@
 //! | `cpu-ooo`   | out-of-order multicore running OLTP/SPEC (§5.3)     |
 //! | `fat-tree`  | k-ary fat-tree data-center fabric (§5.4)            |
 //! | `mesh`      | 2-D mesh NoC with per-node traffic endpoints        |
+//! | `ring`      | unidirectional ring NoC (typed `Wire::ring`)        |
+//! | `torus`     | 2-D torus NoC (typed `Wire::torus_of`)              |
 //!
 //! Config keys are scenario-specific and documented per scenario
 //! (`keys()`); unknown keys are ignored, so one config file can drive a
 //! sweep across scenarios.
+//!
+//! All scenarios author their models through the typed wiring layer
+//! (`engine::wire`); `ring` and `torus` are the showcase — a complete NoC
+//! scenario is one component plus one topology-combinator call.
 
 use crate::cpu::ooo::OooCfg;
 use crate::dc::{build_fattree, FatTreeCfg, TrafficCfg};
 use crate::engine::{
-    Ctx, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, Stop, Unit,
+    Component, Ctx, Fnv, IfaceSpec, In, Model, ModelBuilder, Msg, Out, Payload, PortCfg, Ports,
+    Stop, Unit, Wire,
 };
-use crate::noc::{net_b, Mesh, MeshCfg};
+use crate::noc::{Flit, Mesh, MeshCfg};
 use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
 use crate::util::config::Config;
 use crate::util::rng::Rng;
@@ -59,6 +66,8 @@ pub fn all() -> Vec<Box<dyn Scenario>> {
         Box::new(CpuOoo),
         Box::new(FatTree),
         Box::new(MeshNoc),
+        Box::new(RingNoc),
+        Box::new(TorusNoc),
     ]
 }
 
@@ -120,11 +129,30 @@ fn stop_from(cfg: &Config, default_stop: Stop) -> Result<Stop, String> {
 // pipeline
 // ---------------------------------------------------------------------
 
+/// The pipeline's typed payload: a sequence number plus a running
+/// accumulator each mid-stage folds into. Encoding: `kind` 1, `a` = seq,
+/// `b` = acc.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipeMsg {
+    pub seq: u64,
+    pub acc: u64,
+}
+
+impl Payload for PipeMsg {
+    fn encode(self) -> Msg {
+        Msg::with(1, self.seq, self.acc, 0)
+    }
+
+    fn decode(m: &Msg) -> Self {
+        PipeMsg { seq: m.a, acc: m.b }
+    }
+}
+
 /// A linear pipeline stage honouring the sleep contract: the source is
 /// idle once drained; mids and the sink are purely input-driven.
 struct PipeStage {
-    inp: Option<InPort>,
-    out: Option<OutPort>,
+    inp: Option<In<PipeMsg>>,
+    out: Option<Out<PipeMsg>>,
     seq: u64,
     limit: u64,
     received: u64,
@@ -135,23 +163,23 @@ impl Unit for PipeStage {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
         match (self.inp, self.out) {
             (None, Some(out)) => {
-                if self.seq < self.limit && ctx.out_vacant(out) {
-                    ctx.send(out, Msg::with(1, self.seq, 0, 0)).unwrap();
+                if self.seq < self.limit && out.vacant(ctx) {
+                    out.send(ctx, PipeMsg { seq: self.seq, acc: 0 }).unwrap();
                     self.seq += 1;
                 }
             }
             (Some(inp), Some(out)) => {
-                while ctx.out_vacant(out) {
-                    let Some(mut m) = ctx.recv(inp) else { break };
-                    m.b = m.b.wrapping_mul(31).wrapping_add(m.a);
-                    ctx.send(out, m).unwrap();
+                while out.vacant(ctx) {
+                    let Some(mut m) = inp.recv(ctx) else { break };
+                    m.acc = m.acc.wrapping_mul(31).wrapping_add(m.seq);
+                    out.send(ctx, m).unwrap();
                 }
             }
             (Some(inp), None) => {
-                while let Some(m) = ctx.recv(inp) {
-                    debug_assert_eq!(m.a, self.received, "FIFO broken");
+                while let Some(m) = inp.recv(ctx) {
+                    debug_assert_eq!(m.seq, self.received, "FIFO broken");
                     self.received += 1;
-                    self.acc = self.acc.wrapping_mul(31).wrapping_add(m.b);
+                    self.acc = self.acc.wrapping_mul(31).wrapping_add(m.acc);
                 }
             }
             (None, None) => {}
@@ -170,6 +198,52 @@ impl Unit for PipeStage {
 
     fn stats(&self, out: &mut crate::stats::StatsMap) {
         out.add("pipe.delivered", self.received);
+    }
+}
+
+/// Component wrapper: stage `index` of `stages`, declaring `prev`/`next`
+/// as position dictates. Port delays cycle 1,2,3,1,… (declared on the
+/// *receiving* interface, which configures the link) so in-flight
+/// messages regularly outlive a receiver's last tick — the wake-protocol
+/// workout the determinism matrix relies on.
+struct PipeStageComp {
+    index: usize,
+    stages: usize,
+    messages: u64,
+}
+
+impl Component for PipeStageComp {
+    fn name(&self) -> String {
+        format!("p{}", self.index)
+    }
+
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        if self.index == 0 {
+            vec![]
+        } else {
+            let delay = 1 + ((self.index - 1) as u64 % 3);
+            vec![IfaceSpec::new("prev", PortCfg::new(2, delay)).of::<PipeMsg>()]
+        }
+    }
+
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        if self.index == self.stages - 1 {
+            vec![]
+        } else {
+            let delay = 1 + (self.index as u64 % 3);
+            vec![IfaceSpec::new("next", PortCfg::new(2, delay)).of::<PipeMsg>()]
+        }
+    }
+
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+        Box::new(PipeStage {
+            inp: (self.index > 0).then(|| ports.input("prev")),
+            out: (self.index < self.stages - 1).then(|| ports.output("next")),
+            seq: 0,
+            limit: if self.index == 0 { self.messages } else { 0 },
+            received: 0,
+            acc: 0,
+        })
     }
 }
 
@@ -196,29 +270,14 @@ impl Scenario for Pipeline {
     fn build(&self, cfg: &Config) -> Result<(Model, Stop), String> {
         let stages = cfg.get_usize("stages", 8)?.max(2);
         let messages = cfg.get_u64("messages", 100)?;
-        let mut mb = ModelBuilder::new();
-        let ids: Vec<u32> = (0..stages)
-            .map(|i| mb.reserve_unit(&format!("p{i}")))
-            .collect();
-        let mut ports = Vec::new();
-        for i in 0..stages - 1 {
-            // Delays 1,2,3,1,... so in-flight messages regularly outlive a
-            // receiver's last tick (exercises the wake protocol).
-            let delay = 1 + (i as u64 % 3);
-            ports.push(mb.connect(ids[i], ids[i + 1], PortCfg::new(2, delay)));
-        }
-        for i in 0..stages {
-            let unit = PipeStage {
-                inp: if i == 0 { None } else { Some(ports[i - 1].1) },
-                out: if i == stages - 1 { None } else { Some(ports[i].0) },
-                seq: 0,
-                limit: if i == 0 { messages } else { 0 },
-                received: 0,
-                acc: 0,
-            };
-            mb.install(ids[i], Box::new(unit));
-        }
-        let model = mb.build()?;
+        let mut wire = Wire::new();
+        let nodes = wire.replicate(stages, |index| PipeStageComp {
+            index,
+            stages,
+            messages,
+        });
+        wire.chain(&nodes, "next", "prev");
+        let model = wire.build()?;
         let stop = stop_from(
             cfg,
             Stop::AllIdle {
@@ -434,8 +493,8 @@ impl Scenario for FatTree {
 /// Traffic endpoint attached to one mesh node: injects a fixed number of
 /// packets to pseudo-random destinations and counts arrivals.
 struct MeshEndpoint {
-    out: OutPort,
-    inp: InPort,
+    out: Out<Flit>,
+    inp: In<Flit>,
     node: u32,
     nodes: u32,
     to_send: u64,
@@ -447,21 +506,20 @@ struct MeshEndpoint {
 
 impl Unit for MeshEndpoint {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
-        while let Some(_m) = ctx.recv(self.inp) {
+        while let Some(_f) = self.inp.recv(ctx) {
             self.received += 1;
             ctx.counters.add(self.delivered, 1);
         }
-        while self.sent < self.to_send && ctx.out_vacant(self.out) {
+        while self.sent < self.to_send && self.out.vacant(ctx) {
             // Uniform destination, self excluded; the rng only advances on
             // an actual send, so the stream is engine-order independent.
             let mut dst = self.rng.gen_range((self.nodes - 1) as u64) as u32;
             if dst >= self.node {
                 dst += 1;
             }
-            let mut m = Msg::with(1, self.sent, 0, 0);
-            m.b = net_b(self.node, dst);
-            m.c = ctx.cycle;
-            ctx.send(self.out, m).unwrap();
+            self.out
+                .send(ctx, Flit::new(self.sent, self.node, dst, ctx.cycle))
+                .unwrap();
             self.sent += 1;
         }
     }
@@ -524,7 +582,7 @@ impl Scenario for MeshNoc {
         let mut mesh = Mesh::build(&mut mb, mesh_cfg);
         let mut ports = Vec::with_capacity(nodes as usize);
         for n in 0..nodes {
-            ports.push(mesh.attach(&mut mb, n, ep_ids[n as usize]));
+            ports.push(mesh.attach::<Flit>(&mut mb, n, ep_ids[n as usize]));
         }
         mesh.finish(&mut mb);
         for (n, (to_net, from_net)) in ports.into_iter().enumerate() {
@@ -556,6 +614,418 @@ impl Scenario for MeshNoc {
     }
 }
 
+// ---------------------------------------------------------------------
+// ring
+// ---------------------------------------------------------------------
+
+/// One node of the unidirectional ring: consumes flits addressed to it,
+/// store-and-forwards the rest (elastic internal buffer, so the ring can
+/// never deadlock on cyclic back pressure), and injects its own traffic
+/// to pseudo-random destinations.
+struct RingNode {
+    inp: In<Flit>,
+    out: Out<Flit>,
+    node: u32,
+    nodes: u32,
+    to_send: u64,
+    sent: u64,
+    received: u64,
+    forwarded: u64,
+    transit: std::collections::VecDeque<Flit>,
+    latency_sum: u64,
+    delivered: crate::stats::counters::CounterId,
+    rng: Rng,
+}
+
+impl Unit for RingNode {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        // Drain arrivals: consume ours, queue the rest for the next hop.
+        while let Some(f) = self.inp.recv(ctx) {
+            if f.dst == self.node {
+                self.received += 1;
+                self.latency_sum += ctx.cycle - f.inject;
+                ctx.counters.add(self.delivered, 1);
+            } else {
+                self.transit.push_back(f);
+            }
+        }
+        // Forward transit traffic first (link rate applies), then inject.
+        while !self.transit.is_empty() && self.out.vacant(ctx) {
+            let f = self.transit.pop_front().unwrap();
+            self.out.send(ctx, f).unwrap();
+            self.forwarded += 1;
+        }
+        while self.sent < self.to_send && self.out.vacant(ctx) {
+            // Uniform destination, self excluded; rng advances only on an
+            // actual send, so the stream is engine-order independent.
+            let mut dst = self.rng.gen_range((self.nodes - 1) as u64) as u32;
+            if dst >= self.node {
+                dst += 1;
+            }
+            self.out
+                .send(ctx, Flit::new(self.sent, self.node, dst, ctx.cycle))
+                .unwrap();
+            self.sent += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.sent);
+        h.write_u64(self.received);
+        h.write_u64(self.forwarded);
+        h.write_u64(self.latency_sum);
+        h.write_u64(self.transit.len() as u64);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.sent >= self.to_send && self.transit.is_empty()
+    }
+
+    fn stats(&self, out: &mut crate::stats::StatsMap) {
+        out.add("ring.sent", self.sent);
+        out.add("ring.forwarded", self.forwarded);
+        out.add("ring.latency_sum", self.latency_sum);
+    }
+}
+
+struct RingNodeComp {
+    node: u32,
+    nodes: u32,
+    packets: u64,
+    seed: u64,
+    capacity: usize,
+    delivered: crate::stats::counters::CounterId,
+}
+
+impl Component for RingNodeComp {
+    fn name(&self) -> String {
+        format!("ring{}", self.node)
+    }
+
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        vec![IfaceSpec::new("prev", PortCfg::new(self.capacity, 1)).of::<Flit>()]
+    }
+
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        vec![IfaceSpec::new("next", PortCfg::new(self.capacity, 1)).of::<Flit>()]
+    }
+
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+        Box::new(RingNode {
+            inp: ports.input("prev"),
+            out: ports.output("next"),
+            node: self.node,
+            nodes: self.nodes,
+            to_send: self.packets,
+            sent: 0,
+            received: 0,
+            forwarded: 0,
+            transit: std::collections::VecDeque::new(),
+            latency_sum: 0,
+            delivered: self.delivered,
+            rng: Rng::from_seed_stream(self.seed, self.node as u64),
+        })
+    }
+}
+
+struct RingNoc;
+
+impl Scenario for RingNoc {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn summary(&self) -> &'static str {
+        "unidirectional ring NoC, uniform random traffic (typed Wire::ring)"
+    }
+
+    fn keys(&self) -> &'static [(&'static str, &'static str)] {
+        &[
+            ("nodes", "ring length (default 16, min 2)"),
+            ("packets", "packets injected per node (default 64)"),
+            ("link-capacity", "per-hop link queue depth (default 4)"),
+            ("seed", "destination-stream seed (default 0x816)"),
+            ("cycles / max-cycles", "stop overrides (default: all delivered, cap 500k)"),
+        ]
+    }
+
+    fn build(&self, cfg: &Config) -> Result<(Model, Stop), String> {
+        let nodes = cfg.get_usize("nodes", 16)?.max(2) as u32;
+        let packets = cfg.get_u64("packets", 64)?;
+        let capacity = cfg.get_usize("link-capacity", 4)?.max(1);
+        let seed = cfg.get_u64("seed", 0x816)?;
+        let mut wire = Wire::new();
+        let delivered = wire.counter("ring.delivered");
+        let ids = wire.replicate(nodes as usize, |node| RingNodeComp {
+            node: node as u32,
+            nodes,
+            packets,
+            seed,
+            capacity,
+            delivered,
+        });
+        wire.ring(&ids, "next", "prev");
+        let model = wire.build()?;
+        let stop = stop_from(
+            cfg,
+            Stop::CounterAtLeast {
+                counter: delivered,
+                target: nodes as u64 * packets,
+                max_cycles: cfg.get_u64("max-cycles", 500_000)?,
+            },
+        )?;
+        Ok((model, stop))
+    }
+}
+
+// ---------------------------------------------------------------------
+// torus
+// ---------------------------------------------------------------------
+
+/// One node of the 2-D torus: a combined router + traffic endpoint.
+/// Dimension-order routing with shortest-wrap direction; transit flits
+/// ride an elastic internal queue (no cyclic-credit deadlock), link-rate
+/// limited on every hop.
+struct TorusNode {
+    ins: [In<Flit>; 4],
+    outs: [Out<Flit>; 4],
+    node: u32,
+    x: u32,
+    y: u32,
+    width: u32,
+    height: u32,
+    to_send: u64,
+    sent: u64,
+    received: u64,
+    forwarded: u64,
+    transit: std::collections::VecDeque<Flit>,
+    latency_sum: u64,
+    delivered: crate::stats::counters::CounterId,
+    rng: Rng,
+}
+
+/// Direction index into `ins`/`outs`: N, E, S, W (fixed priority order).
+const TD_N: usize = 0;
+const TD_E: usize = 1;
+const TD_S: usize = 2;
+const TD_W: usize = 3;
+
+impl TorusNode {
+    /// Dimension-order: correct X first (shortest wrap direction, ties go
+    /// east), then Y (ties go south).
+    fn route(&self, dst: u32) -> usize {
+        let dx = dst % self.width;
+        let dy = dst / self.width;
+        if dx != self.x {
+            let east = (dx + self.width - self.x) % self.width;
+            let west = (self.x + self.width - dx) % self.width;
+            if east <= west {
+                TD_E
+            } else {
+                TD_W
+            }
+        } else {
+            let south = (dy + self.height - self.y) % self.height;
+            let north = (self.y + self.height - dy) % self.height;
+            if south <= north {
+                TD_S
+            } else {
+                TD_N
+            }
+        }
+    }
+
+    fn dispatch(&mut self, ctx: &mut Ctx<'_>, f: Flit) -> bool {
+        let dir = self.route(f.dst);
+        if self.outs[dir].vacant(ctx) {
+            self.outs[dir].send(ctx, f).unwrap();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl Unit for TorusNode {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        // Drain all four inputs in fixed order (N, E, S, W): consume
+        // ours, queue the rest.
+        for inp in self.ins {
+            while let Some(f) = inp.recv(ctx) {
+                if f.dst == self.node {
+                    self.received += 1;
+                    self.latency_sum += ctx.cycle - f.inject;
+                    ctx.counters.add(self.delivered, 1);
+                } else {
+                    self.transit.push_back(f);
+                }
+            }
+        }
+        // Forward transit traffic (head-of-line on the elastic queue),
+        // then inject our own.
+        while let Some(&f) = self.transit.front() {
+            if !self.dispatch(ctx, f) {
+                break;
+            }
+            self.transit.pop_front();
+            self.forwarded += 1;
+        }
+        while self.sent < self.to_send {
+            let mut dst = self.rng.clone().gen_range((self.width * self.height - 1) as u64)
+                as u32;
+            if dst >= self.node {
+                dst += 1;
+            }
+            let f = Flit::new(self.sent, self.node, dst, ctx.cycle);
+            if !self.dispatch(ctx, f) {
+                break;
+            }
+            // Committed: advance the real rng the same way.
+            self.rng.gen_range((self.width * self.height - 1) as u64);
+            self.sent += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.sent);
+        h.write_u64(self.received);
+        h.write_u64(self.forwarded);
+        h.write_u64(self.latency_sum);
+        h.write_u64(self.transit.len() as u64);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.sent >= self.to_send && self.transit.is_empty()
+    }
+
+    fn stats(&self, out: &mut crate::stats::StatsMap) {
+        out.add("torus.sent", self.sent);
+        out.add("torus.forwarded", self.forwarded);
+        out.add("torus.latency_sum", self.latency_sum);
+    }
+}
+
+struct TorusNodeComp {
+    x: u32,
+    y: u32,
+    width: u32,
+    height: u32,
+    packets: u64,
+    seed: u64,
+    capacity: usize,
+    delivered: crate::stats::counters::CounterId,
+}
+
+impl Component for TorusNodeComp {
+    fn name(&self) -> String {
+        format!("torus{}_{}", self.x, self.y)
+    }
+
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        let cfg = PortCfg::new(self.capacity, 1);
+        vec![
+            IfaceSpec::new("n", cfg).of::<Flit>(),
+            IfaceSpec::new("e", cfg).of::<Flit>(),
+            IfaceSpec::new("s", cfg).of::<Flit>(),
+            IfaceSpec::new("w", cfg).of::<Flit>(),
+        ]
+    }
+
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        self.inputs()
+    }
+
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+        let node = self.y * self.width + self.x;
+        Box::new(TorusNode {
+            ins: [
+                ports.input("n"),
+                ports.input("e"),
+                ports.input("s"),
+                ports.input("w"),
+            ],
+            outs: [
+                ports.output("n"),
+                ports.output("e"),
+                ports.output("s"),
+                ports.output("w"),
+            ],
+            node,
+            x: self.x,
+            y: self.y,
+            width: self.width,
+            height: self.height,
+            to_send: self.packets,
+            sent: 0,
+            received: 0,
+            forwarded: 0,
+            transit: std::collections::VecDeque::new(),
+            latency_sum: 0,
+            delivered: self.delivered,
+            rng: Rng::from_seed_stream(self.seed, node as u64),
+        })
+    }
+}
+
+struct TorusNoc;
+
+impl Scenario for TorusNoc {
+    fn name(&self) -> &'static str {
+        "torus"
+    }
+
+    fn summary(&self) -> &'static str {
+        "2-D torus NoC, uniform random traffic (typed Wire::torus_of)"
+    }
+
+    fn keys(&self) -> &'static [(&'static str, &'static str)] {
+        &[
+            ("dim", "square torus side (default 4, min 2); overrides width/height"),
+            ("width / height", "explicit dimensions (default dim x dim)"),
+            ("packets", "packets injected per node (default 32)"),
+            ("link-capacity", "per-hop link queue depth (default 4)"),
+            ("seed", "destination-stream seed (default 0x707)"),
+            ("cycles / max-cycles", "stop overrides (default: all delivered, cap 500k)"),
+        ]
+    }
+
+    fn build(&self, cfg: &Config) -> Result<(Model, Stop), String> {
+        let dim = cfg.get_u64("dim", 4)? as u32;
+        let width = cfg.get_u64("width", dim as u64)? as u32;
+        let height = cfg.get_u64("height", dim as u64)? as u32;
+        if width < 2 || height < 2 {
+            return Err(format!(
+                "torus dimensions must be >= 2 (got {width}x{height})"
+            ));
+        }
+        let packets = cfg.get_u64("packets", 32)?;
+        let capacity = cfg.get_usize("link-capacity", 4)?.max(1);
+        let seed = cfg.get_u64("seed", 0x707)?;
+        let mut wire = Wire::new();
+        let delivered = wire.counter("torus.delivered");
+        wire.torus_of(width, height, |x, y| TorusNodeComp {
+            x,
+            y,
+            width,
+            height,
+            packets,
+            seed,
+            capacity,
+            delivered,
+        });
+        let model = wire.build()?;
+        let stop = stop_from(
+            cfg,
+            Stop::CounterAtLeast {
+                counter: delivered,
+                target: (width * height) as u64 * packets,
+                max_cycles: cfg.get_u64("max-cycles", 500_000)?,
+            },
+        )?;
+        Ok((model, stop))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -563,7 +1033,10 @@ mod tests {
 
     #[test]
     fn registry_finds_names_and_aliases() {
-        assert_eq!(names(), vec!["pipeline", "cpu-light", "cpu-ooo", "fat-tree", "mesh"]);
+        assert_eq!(
+            names(),
+            vec!["pipeline", "cpu-light", "cpu-ooo", "fat-tree", "mesh", "ring", "torus"]
+        );
         assert_eq!(find("cpu-system").unwrap().name(), "cpu-light");
         assert_eq!(find("datacenter").unwrap().name(), "fat-tree");
         assert!(find("bogus").is_err());
@@ -612,6 +1085,60 @@ mod tests {
             .unwrap();
         assert_eq!(ladder.fingerprint(), serial.fingerprint());
         assert_eq!(ladder.stats.cycles, serial.stats.cycles);
+    }
+
+    #[test]
+    fn ring_scenario_delivers_everything_and_drains() {
+        let mut cfg = Config::new();
+        cfg.set("nodes", 6);
+        cfg.set("packets", 8);
+        let serial = Sim::scenario("ring", &cfg)
+            .unwrap()
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(serial.stats.counters.get("ring.delivered"), 48);
+        assert!(serial.stats.counters.get("ring.forwarded") > 0, "multi-hop");
+        assert!(serial.stats.cycles < 500_000, "must not hit the cap");
+        let ladder = Sim::scenario("ring", &cfg)
+            .unwrap()
+            .workers(3)
+            .fingerprinted()
+            .engine(Engine::Ladder)
+            .run()
+            .unwrap();
+        assert_eq!(ladder.fingerprint(), serial.fingerprint());
+        assert_eq!(ladder.stats.cycles, serial.stats.cycles);
+    }
+
+    #[test]
+    fn torus_scenario_delivers_everything_and_reports_cross_ports() {
+        use crate::sched::PartitionStrategy;
+        let mut cfg = Config::new();
+        cfg.set("dim", 3);
+        cfg.set("packets", 6);
+        let serial = Sim::scenario("torus", &cfg)
+            .unwrap()
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(serial.stats.counters.get("torus.delivered"), 54);
+        assert_eq!(serial.stats.cross_cluster_ports, 0, "one cluster: no cut");
+        let ladder = Sim::scenario("torus", &cfg)
+            .unwrap()
+            .workers(2)
+            .strategy(PartitionStrategy::CostLocality)
+            .profile_cycles(20)
+            .fingerprinted()
+            .engine(Engine::Ladder)
+            .run()
+            .unwrap();
+        assert_eq!(ladder.fingerprint(), serial.fingerprint());
+        assert!(
+            ladder.stats.cross_cluster_ports > 0,
+            "a 2-way torus split must cut some links"
+        );
+        assert!(ladder.to_json().contains("\"cross_cluster_ports\""));
     }
 
     #[test]

@@ -4,12 +4,14 @@
 //! core, each run serially by a local scheduler (§4). The distribution "is
 //! currently random" in the paper, with locality-aware ordering named as
 //! future work (§6) — we implement both, plus round-robin, contiguous
-//! blocks, and profile-guided cost balancing (LPT over measured per-unit
-//! work), so the ablation bench can quantify the differences the authors
-//! predicted.
+//! blocks, profile-guided cost balancing (LPT over measured per-unit
+//! work), and cost-locality (cost balance with a cross-cluster
+//! edge-weight penalty over the build-time topology), so the ablation
+//! bench can quantify the differences the authors predicted.
 
 pub mod partition;
 
 pub use partition::{
-    cross_cluster_ports, partition, partition_with_costs, PartitionStrategy,
+    cross_cluster_ports, partition, partition_cost_locality, partition_with_costs,
+    PartitionStrategy,
 };

@@ -28,6 +28,13 @@ pub enum PartitionStrategy {
     /// in as a static cost proxy; harnesses that can afford a profiling
     /// prologue pass real costs (`Model::profile_unit_costs`).
     CostBalanced,
+    /// Cost balance *and* locality: greedy cost-capped placement over the
+    /// build-time weighted topology (`Model::topology`), so heavily-linked
+    /// units land on the same cluster while cluster loads stay within a
+    /// small slack of the LPT target (see [`partition_cost_locality`]).
+    /// This is the cross-cluster-port objective the paper's Fig 13
+    /// discussion identifies as the coherency-traffic bottleneck.
+    CostLocality,
 }
 
 impl PartitionStrategy {
@@ -38,9 +45,10 @@ impl PartitionStrategy {
             "locality" => Ok(PartitionStrategy::Locality),
             "contiguous" | "block" => Ok(PartitionStrategy::Contiguous),
             "cost" | "cost-balanced" => Ok(PartitionStrategy::CostBalanced),
+            "cost-locality" | "locality-cost" => Ok(PartitionStrategy::CostLocality),
             _ => Err(format!(
                 "unknown partition strategy {s:?}; expected \
-                 round-robin|random|locality|contiguous|cost-balanced"
+                 round-robin|random|locality|contiguous|cost-balanced|cost-locality"
             )),
         }
     }
@@ -52,6 +60,7 @@ impl PartitionStrategy {
             PartitionStrategy::Locality => "locality",
             PartitionStrategy::Contiguous => "contiguous",
             PartitionStrategy::CostBalanced => "cost-balanced",
+            PartitionStrategy::CostLocality => "cost-locality",
         }
     }
 }
@@ -108,6 +117,12 @@ pub fn partition(model: &Model, clusters: usize, strategy: PartitionStrategy) ->
                 .collect();
             partition_with_costs(clusters, &costs)
         }
+        PartitionStrategy::CostLocality => {
+            let costs: Vec<u64> = (0..n as u32)
+                .map(|u| 1 + model.neighbours(u).len() as u64)
+                .collect();
+            partition_cost_locality(model, clusters, &costs)
+        }
     }
 }
 
@@ -135,6 +150,139 @@ pub fn partition_with_costs(clusters: usize, costs: &[u64]) -> Vec<Vec<u32>> {
     // determinism, helpful for cache locality of consecutive builds).
     for cluster in &mut p {
         cluster.sort_unstable();
+    }
+    p
+}
+
+/// Locality-aware cost-balanced partitioning: greedy streaming placement
+/// over the build-time weighted topology, followed by one deterministic
+/// refinement pass.
+///
+/// Units are visited in BFS order over the port graph (lowest-id seeds,
+/// neighbours ascending — the order that makes already-placed neighbours
+/// available when a unit is scored). Each unit goes to the cluster holding
+/// the most edge weight to it, among clusters whose load would stay under
+/// `total/k` plus ~6% slack; with no feasible cluster it falls back to the
+/// least-loaded one, so the result is always total and near-balanced.
+/// A final pass re-scores every unit (ascending id) and moves it when a
+/// strictly higher-affinity cluster has room — each move strictly lowers
+/// the weighted cut, so one pass suffices and determinism is preserved.
+///
+/// Compared to [`partition_with_costs`] (pure LPT, edge-blind), this
+/// trades a bounded amount of load balance for strictly less
+/// cross-cluster traffic on structured topologies — the objective the
+/// ROADMAP names for weighing cross-cluster ports in LPT.
+pub fn partition_cost_locality(model: &Model, clusters: usize, costs: &[u64]) -> Vec<Vec<u32>> {
+    partition_cost_locality_topo(&model.topology(), clusters, costs)
+}
+
+/// [`partition_cost_locality`] over an already-extracted topology — the
+/// mid-run repartitioner caches the (static) edge list once and replans
+/// from it at every barrier decision without re-walking the model.
+pub(crate) fn partition_cost_locality_topo(
+    topo: &crate::engine::Topology,
+    clusters: usize,
+    costs: &[u64],
+) -> Vec<Vec<u32>> {
+    let n = costs.len();
+    let k = clusters.max(1).min(n.max(1));
+    if k <= 1 {
+        return vec![(0..n as u32).collect()];
+    }
+    let cost = |u: usize| costs[u].max(1);
+    // Weighted undirected adjacency; parallel ports accumulate.
+    let mut adj: Vec<Vec<(u32, u64)>> = vec![Vec::new(); n];
+    for &(s, d, w) in &topo.edges {
+        if s != d && (s as usize) < n && (d as usize) < n {
+            adj[s as usize].push((d, w));
+            adj[d as usize].push((s, w));
+        }
+    }
+    for l in &mut adj {
+        l.sort_unstable_by_key(|&(v, _)| v);
+    }
+    // Deterministic BFS order, restarting at the lowest unvisited id.
+    let mut order = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    let mut queue = VecDeque::new();
+    for seed in 0..n {
+        if seen[seed] {
+            continue;
+        }
+        seen[seed] = true;
+        queue.push_back(seed as u32);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &(v, _) in &adj[u as usize] {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    let total: u64 = (0..n).map(cost).sum();
+    let target = total / k as u64;
+    let cap = target + target / 16 + 1;
+    let mut assign = vec![usize::MAX; n];
+    let mut load = vec![0u64; k];
+    let place = |u: usize, assign: &[usize], load: &[u64]| -> usize {
+        let mut aff = vec![0u64; k];
+        for &(v, w) in &adj[u] {
+            let c = assign[v as usize];
+            if c != usize::MAX {
+                aff[c] += w;
+            }
+        }
+        let mut best: Option<usize> = None;
+        for c in 0..k {
+            if load[c] + cost(u) > cap {
+                continue;
+            }
+            best = match best {
+                None => Some(c),
+                Some(b) => {
+                    if aff[c] > aff[b] || (aff[c] == aff[b] && load[c] < load[b]) {
+                        Some(c)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        best.unwrap_or_else(|| (0..k).min_by_key(|&c| (load[c], c)).unwrap())
+    };
+    for &u in &order {
+        let c = place(u as usize, &assign, &load);
+        assign[u as usize] = c;
+        load[c] += cost(u as usize);
+    }
+    // Refinement: move a unit to a strictly higher-affinity cluster with
+    // room. Each move strictly reduces the weighted cut.
+    for u in 0..n {
+        let cur = assign[u];
+        let mut aff = vec![0u64; k];
+        for &(v, w) in &adj[u] {
+            aff[assign[v as usize]] += w;
+        }
+        let mut best = cur;
+        for c in 0..k {
+            if c == cur || load[c] + cost(u) > cap {
+                continue;
+            }
+            if aff[c] > aff[best] || (aff[c] == aff[best] && best != cur && load[c] < load[best]) {
+                best = c;
+            }
+        }
+        if best != cur && aff[best] > aff[cur] {
+            load[cur] -= cost(u);
+            load[best] += cost(u);
+            assign[u] = best;
+        }
+    }
+    let mut p = vec![Vec::new(); k];
+    for (u, &c) in assign.iter().enumerate() {
+        p[c].push(u as u32);
     }
     p
 }
@@ -213,7 +361,29 @@ mod tests {
         let mut mb = ModelBuilder::new();
         let ids: Vec<u32> = (0..n).map(|i| mb.reserve_unit(&format!("u{i}"))).collect();
         for i in 0..n {
-            mb.connect(ids[i], ids[(i + 1) % n], PortCfg::default());
+            mb.link::<crate::engine::Transit>(ids[i], ids[(i + 1) % n], PortCfg::default());
+        }
+        for &id in &ids {
+            mb.install(id, Box::new(Nop));
+        }
+        mb.build().unwrap()
+    }
+
+    /// width x height torus of units (4 directed links per unit).
+    fn torus(width: u32, height: u32) -> Model {
+        let mut mb = ModelBuilder::new();
+        let n = width * height;
+        let ids: Vec<u32> = (0..n).map(|i| mb.reserve_unit(&format!("t{i}"))).collect();
+        for y in 0..height {
+            for x in 0..width {
+                let u = ids[(y * width + x) as usize];
+                let e = ids[(y * width + (x + 1) % width) as usize];
+                let s = ids[(((y + 1) % height) * width + x) as usize];
+                mb.link::<crate::engine::Transit>(u, e, PortCfg::default());
+                mb.link::<crate::engine::Transit>(e, u, PortCfg::default());
+                mb.link::<crate::engine::Transit>(u, s, PortCfg::default());
+                mb.link::<crate::engine::Transit>(s, u, PortCfg::default());
+            }
         }
         for &id in &ids {
             mb.install(id, Box::new(Nop));
@@ -312,6 +482,68 @@ mod tests {
             .collect();
         let mean = loads.iter().sum::<u64>() / loads.len() as u64;
         assert!(*loads.iter().max().unwrap() <= mean * 2, "{loads:?}");
+    }
+
+    #[test]
+    fn cost_locality_is_total_deterministic_and_near_balanced() {
+        let m = torus(4, 4);
+        // Skewed-but-comparable costs: LPT's descending-cost order becomes
+        // effectively arbitrary with respect to the topology.
+        let costs: Vec<u64> = (0..16).map(|i| 100 + (i * 7919) % 97).collect();
+        let a = partition_cost_locality(&m, 4, &costs);
+        let b = partition_cost_locality(&m, 4, &costs);
+        assert_eq!(a, b, "deterministic");
+        let mut seen = vec![false; 16];
+        for cluster in &a {
+            for &u in cluster {
+                assert!(!seen[u as usize], "unit {u} placed twice");
+                seen[u as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "total");
+        let loads: Vec<u64> = a
+            .iter()
+            .map(|c| c.iter().map(|&u| costs[u as usize]).sum())
+            .collect();
+        let mean = loads.iter().sum::<u64>() / 4;
+        assert!(
+            *loads.iter().max().unwrap() <= mean + mean / 4,
+            "near-balanced: {loads:?}"
+        );
+    }
+
+    #[test]
+    fn cost_locality_cuts_cross_ports_vs_lpt_on_torus() {
+        let m = torus(4, 4);
+        let costs: Vec<u64> = (0..16).map(|i| 100 + (i * 7919) % 97).collect();
+        let lpt = partition_with_costs(4, &costs);
+        let loc = partition_cost_locality(&m, 4, &costs);
+        let x_lpt = cross_cluster_ports(&m, &lpt);
+        let x_loc = cross_cluster_ports(&m, &loc);
+        assert!(
+            x_loc < x_lpt,
+            "cost-locality ({x_loc} cross ports) must beat edge-blind LPT ({x_lpt})"
+        );
+        // 64 directed links; an optimal 4-way split leaves 32 cross.
+        assert!(x_loc <= 44, "locality must find real structure: {x_loc}");
+    }
+
+    #[test]
+    fn recorded_weights_drive_the_cross_cluster_objective() {
+        let mut mb = crate::engine::ModelBuilder::new();
+        let a = mb.reserve_unit("a");
+        let b = mb.reserve_unit("b");
+        let c = mb.reserve_unit("c");
+        mb.link_weighted::<crate::engine::Transit>(a, b, PortCfg::default(), 5);
+        mb.link::<crate::engine::Transit>(b, c, PortCfg::default());
+        for id in [a, b, c] {
+            mb.install(id, Box::new(Nop));
+        }
+        let topo = mb.build().unwrap().topology();
+        assert_eq!(topo.cross_weight(&[0, 0, 1]), 1, "only b->c cut");
+        assert_eq!(topo.cross_weight(&[0, 1, 1]), 5, "the hot a->b cut");
+        assert_eq!(topo.cross_weight(&[0, 0, 0]), 0);
+        assert_eq!(topo.total_weight(), 6);
     }
 
     #[test]

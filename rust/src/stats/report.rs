@@ -15,6 +15,12 @@ pub struct RepartEpoch {
     pub imbalance_before: f64,
     /// Max/mean cluster load of the applied assignment.
     pub imbalance_after: f64,
+    /// The migration gate's actual objective before/after: equal to the
+    /// imbalance pair for cost-balanced sessions; under cost-locality it
+    /// adds the cross-cluster-weight term, so an epoch whose imbalance
+    /// barely moved still shows the cut reduction that justified it.
+    pub score_before: f64,
+    pub score_after: f64,
     /// Units that changed cluster.
     pub moves: usize,
     /// Post-migration per-cluster sampled cost (the projected load
@@ -45,11 +51,14 @@ impl RepartStats {
             .map(|e| {
                 format!(
                     "{{\"cycle\": {}, \"imbalance_before\": {:.4}, \
-                     \"imbalance_after\": {:.4}, \"moves\": {}, \
+                     \"imbalance_after\": {:.4}, \"score_before\": {:.4}, \
+                     \"score_after\": {:.4}, \"moves\": {}, \
                      \"cluster_costs\": [{}]}}",
                     e.cycle,
                     e.imbalance_before,
                     e.imbalance_after,
+                    e.score_before,
+                    e.score_after,
                     e.moves,
                     e.cluster_costs
                         .iter()
@@ -90,6 +99,11 @@ pub struct RunStats {
     /// Adaptive-repartitioning outcome (ladder engine with a
     /// `RepartitionPolicy`; default/empty otherwise).
     pub repart: RepartStats,
+    /// Ports whose endpoints ended the run on different clusters — the
+    /// cross-cluster traffic the locality objective minimizes (0 for
+    /// single-cluster/serial runs). Filled in by the `Sim` facade from
+    /// the final partition (post-migration when repartitioning ran).
+    pub cross_cluster_ports: u64,
 }
 
 impl RunStats {

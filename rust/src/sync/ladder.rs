@@ -290,6 +290,10 @@ pub(crate) struct ParallelOpts {
     /// Adaptive mid-run repartitioning (`engine::repart`); disabled by
     /// default.
     pub repart: RepartitionPolicy,
+    /// Plan repartitioning with the cost-locality objective (session
+    /// strategy `CostLocality`): topology-aware plans, cross-cluster
+    /// weight in the migration gate.
+    pub repart_locality: bool,
 }
 
 impl ParallelOpts {
@@ -299,6 +303,7 @@ impl ParallelOpts {
             spin: SpinMode::Yield,
             run,
             repart: RepartitionPolicy::default(),
+            repart_locality: false,
         }
     }
 }
@@ -340,7 +345,7 @@ pub(crate) fn run_ladder(
         None
     };
     let mut repartitioner = if repart_on {
-        Some(Repartitioner::new(opts.repart))
+        Some(Repartitioner::new(opts.repart, opts.repart_locality))
     } else {
         None
     };
@@ -538,6 +543,7 @@ pub(crate) fn run_ladder(
             0
         },
         repart,
+        cross_cluster_ports: 0,
     }
 }
 
@@ -546,13 +552,14 @@ mod tests {
     use super::*;
     use crate::engine::message::Msg;
     use crate::engine::model::{ModelBuilder, Stop};
-    use crate::engine::port::{InPort, OutPort, PortCfg};
+    use crate::engine::port::PortCfg;
     use crate::engine::unit::{Ctx, Unit};
+    use crate::engine::wire::{In, Out, Transit};
     use crate::engine::Fnv;
 
     struct Stage {
-        inp: Option<InPort>,
-        out: Option<OutPort>,
+        inp: Option<In<Transit>>,
+        out: Option<Out<Transit>>,
         seq: u64,
         limit: u64,
         received: u64,
@@ -560,7 +567,7 @@ mod tests {
     }
 
     impl Stage {
-        fn source(out: OutPort, limit: u64) -> Self {
+        fn source(out: Out<Transit>, limit: u64) -> Self {
             Stage {
                 inp: None,
                 out: Some(out),
@@ -571,7 +578,7 @@ mod tests {
             }
         }
 
-        fn mid(inp: InPort, out: OutPort) -> Self {
+        fn mid(inp: In<Transit>, out: Out<Transit>) -> Self {
             Stage {
                 inp: Some(inp),
                 out: Some(out),
@@ -582,7 +589,7 @@ mod tests {
             }
         }
 
-        fn sink(inp: InPort) -> Self {
+        fn sink(inp: In<Transit>) -> Self {
             Stage {
                 inp: Some(inp),
                 out: None,
@@ -598,21 +605,21 @@ mod tests {
         fn work(&mut self, ctx: &mut Ctx<'_>) {
             match (self.inp, self.out) {
                 (None, Some(out)) => {
-                    if self.seq < self.limit && ctx.out_vacant(out) {
-                        ctx.send(out, Msg::with(1, self.seq, 0, 0)).unwrap();
+                    if self.seq < self.limit && out.vacant(ctx) {
+                        out.send_msg(ctx, Msg::with(1, self.seq, 0, 0)).unwrap();
                         self.seq += 1;
                     }
                 }
                 (Some(inp), Some(out)) => {
-                    if ctx.out_vacant(out) {
-                        if let Some(mut m) = ctx.recv(inp) {
+                    if out.vacant(ctx) {
+                        if let Some(mut m) = inp.recv_msg(ctx) {
                             m.b = m.a * 2;
-                            ctx.send(out, m).unwrap();
+                            out.send_msg(ctx, m).unwrap();
                         }
                     }
                 }
                 (Some(inp), None) => {
-                    while let Some(m) = ctx.recv(inp) {
+                    while let Some(m) = inp.recv_msg(ctx) {
                         assert_eq!(m.a, self.received, "FIFO broken");
                         self.received += 1;
                         self.acc = self.acc.wrapping_mul(31).wrapping_add(m.b);
@@ -639,7 +646,7 @@ mod tests {
         let ids: Vec<u32> = (0..n).map(|i| mb.reserve_unit(&format!("s{i}"))).collect();
         let mut ports = Vec::new();
         for i in 0..n - 1 {
-            ports.push(mb.connect(ids[i], ids[i + 1], PortCfg::new(2, 1)));
+            ports.push(mb.link::<Transit>(ids[i], ids[i + 1], PortCfg::new(2, 1)));
         }
         for i in 0..n {
             let unit: Box<dyn Unit> = if i == 0 {
@@ -744,14 +751,14 @@ mod tests {
         let delivered = mb.counter("delivered");
         let a = mb.reserve_unit("a");
         let b = mb.reserve_unit("b");
-        let (tx, rx) = mb.connect(a, b, PortCfg::new(2, 1));
+        let (tx, rx) = mb.link::<Transit>(a, b, PortCfg::new(2, 1));
         struct Src {
-            out: OutPort,
+            out: Out<Transit>,
         }
         impl Unit for Src {
             fn work(&mut self, ctx: &mut Ctx<'_>) {
-                if ctx.out_vacant(self.out) {
-                    ctx.send(self.out, Msg::new(0)).unwrap();
+                if self.out.vacant(ctx) {
+                    self.out.send_msg(ctx, Msg::new(0)).unwrap();
                 }
             }
 
@@ -760,12 +767,12 @@ mod tests {
             }
         }
         struct Snk {
-            inp: InPort,
+            inp: In<Transit>,
             id: crate::stats::counters::CounterId,
         }
         impl Unit for Snk {
             fn work(&mut self, ctx: &mut Ctx<'_>) {
-                while let Some(_m) = ctx.recv(self.inp) {
+                while let Some(_m) = self.inp.recv_msg(ctx) {
                     ctx.counters.add(self.id, 1);
                 }
             }

@@ -15,6 +15,7 @@ use crate::mem::dir::DirBank;
 use crate::mem::dram::DramChannel;
 use crate::mem::l1::L1Cache;
 use crate::mem::l2::L2Cache;
+use crate::mem::msg::MemPacket;
 use crate::noc::{Mesh, MeshCfg};
 use crate::stats::counters::CounterId;
 
@@ -134,18 +135,19 @@ pub fn build_cpu_system(traces: Vec<Trace>, cfg: &CpuSystemCfg) -> (Model, CpuSy
     let bank_nodes: Vec<u32> = (0..cfg.banks as u32).map(|b| cores as u32 + b).collect();
 
     for c in 0..cores {
-        // core ↔ L1
+        // core ↔ L1: the hottest links in the system — weight 4 tells the
+        // locality partitioner to never split a core from its L1.
         let (core_to_l1, l1_from_core) =
-            mb.connect(core_ids[c], l1_ids[c], PortCfg::new(4, cfg.l1_delay));
+            mb.link_weighted::<MemPacket>(core_ids[c], l1_ids[c], PortCfg::new(4, cfg.l1_delay), 4);
         let (l1_to_core, core_from_l1) =
-            mb.connect(l1_ids[c], core_ids[c], PortCfg::new(4, cfg.l1_delay));
-        // L1 ↔ L2
+            mb.link_weighted::<MemPacket>(l1_ids[c], core_ids[c], PortCfg::new(4, cfg.l1_delay), 4);
+        // L1 ↔ L2 (weight 3: private hierarchy stays together)
         let (l1_to_l2, l2_from_l1) =
-            mb.connect(l1_ids[c], l2_ids[c], PortCfg::new(4, cfg.l2_delay));
+            mb.link_weighted::<MemPacket>(l1_ids[c], l2_ids[c], PortCfg::new(4, cfg.l2_delay), 3);
         let (l2_to_l1, l1_from_l2) =
-            mb.connect(l2_ids[c], l1_ids[c], PortCfg::new(4, cfg.l2_delay));
+            mb.link_weighted::<MemPacket>(l2_ids[c], l1_ids[c], PortCfg::new(4, cfg.l2_delay), 3);
         // L2 ↔ NoC
-        let (l2_to_net, l2_from_net) = mesh.attach(&mut mb, core_nodes[c], l2_ids[c]);
+        let (l2_to_net, l2_from_net) = mesh.attach::<MemPacket>(&mut mb, core_nodes[c], l2_ids[c]);
 
         match cfg.kind {
             CoreKind::Light => {
@@ -200,11 +202,12 @@ pub fn build_cpu_system(traces: Vec<Trace>, cfg: &CpuSystemCfg) -> (Model, CpuSy
     }
 
     for b in 0..cfg.banks {
-        let (bank_to_net, bank_from_net) = mesh.attach(&mut mb, bank_nodes[b], bank_ids[b]);
+        let (bank_to_net, bank_from_net) =
+            mesh.attach::<MemPacket>(&mut mb, bank_nodes[b], bank_ids[b]);
         let (bank_to_dram, dram_from_bank) =
-            mb.connect(bank_ids[b], dram_ids[b], PortCfg::new(8, 1));
+            mb.link_weighted::<MemPacket>(bank_ids[b], dram_ids[b], PortCfg::new(8, 1), 3);
         let (dram_to_bank, bank_from_dram) =
-            mb.connect(dram_ids[b], bank_ids[b], PortCfg::new(8, 1));
+            mb.link_weighted::<MemPacket>(dram_ids[b], bank_ids[b], PortCfg::new(8, 1), 3);
         mb.install(
             bank_ids[b],
             Box::new(DirBank::new(

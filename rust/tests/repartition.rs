@@ -10,8 +10,8 @@
 //!    transfer phase stops re-walking it every cycle.
 
 use scalesim::engine::{
-    Ctx, Engine, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RepartitionPolicy,
-    RunOpts, SchedMode, Sim, Unit,
+    Ctx, Engine, Fnv, In, Model, ModelBuilder, Msg, Out, PortCfg, RepartitionPolicy, RunOpts,
+    SchedMode, Sim, Transit, Unit,
 };
 use scalesim::util::config::Config;
 
@@ -181,15 +181,17 @@ fn scenario_config_key_drives_repartitioning() {
 
 /// Sends `limit` messages as fast as back pressure allows.
 struct Flood {
-    out: OutPort,
+    out: Out<Transit>,
     sent: u64,
     limit: u64,
 }
 
 impl Unit for Flood {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
-        if self.sent < self.limit && ctx.out_vacant(self.out) {
-            ctx.send(self.out, Msg::with(1, self.sent, 0, 0)).unwrap();
+        if self.sent < self.limit && self.out.vacant(ctx) {
+            self.out
+                .send_msg(ctx, Msg::with(1, self.sent, 0, 0))
+                .unwrap();
             self.sent += 1;
         }
     }
@@ -206,14 +208,14 @@ impl Unit for Flood {
 /// Consumes only every 8th cycle — the port upstream spends most of its
 /// life blocked on a full receiver queue.
 struct SlowDrain {
-    inp: InPort,
+    inp: In<Transit>,
     received: u64,
 }
 
 impl Unit for SlowDrain {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
         if ctx.cycle % 8 == 0 {
-            while let Some(m) = ctx.recv(self.inp) {
+            while let Some(m) = self.inp.recv_msg(ctx) {
                 assert_eq!(m.a, self.received, "FIFO broken");
                 self.received += 1;
             }
@@ -229,7 +231,7 @@ fn blocked_pipeline(limit: u64) -> Model {
     let mut mb = ModelBuilder::new();
     let a = mb.reserve_unit("flood");
     let b = mb.reserve_unit("slow");
-    let (tx, rx) = mb.connect(a, b, PortCfg::new(1, 1));
+    let (tx, rx) = mb.link::<Transit>(a, b, PortCfg::new(1, 1));
     mb.install(
         a,
         Box::new(Flood {

@@ -10,7 +10,7 @@
 //! multi-hop chains, and cross-cluster parallel runs.
 
 use scalesim::engine::{
-    Ctx, Engine, Fnv, InPort, Model, ModelBuilder, Msg, OutPort, PortCfg, RunOpts, Sim, Stop,
+    Ctx, Engine, Fnv, In, Model, ModelBuilder, Msg, Out, PortCfg, RunOpts, Sim, Stop, Transit,
     Unit,
 };
 use scalesim::stats::StatsMap;
@@ -20,7 +20,7 @@ use scalesim::sync::SyncMethod;
 /// pressure). Not idle until the whole schedule has been sent, so it
 /// stays awake through the gaps — the *sink* is the unit that parks.
 struct BurstSource {
-    out: OutPort,
+    out: Out<Transit>,
     schedule: Vec<u64>,
     next: usize,
 }
@@ -28,10 +28,11 @@ struct BurstSource {
 impl Unit for BurstSource {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
         while let Some(&at) = self.schedule.get(self.next) {
-            if at > ctx.cycle || !ctx.out_vacant(self.out) {
+            if at > ctx.cycle || !self.out.vacant(ctx) {
                 break;
             }
-            ctx.send(self.out, Msg::with(1, self.next as u64, 0, 0))
+            self.out
+                .send_msg(ctx, Msg::with(1, self.next as u64, 0, 0))
                 .unwrap();
             self.next += 1;
         }
@@ -48,15 +49,15 @@ impl Unit for BurstSource {
 
 /// Input-driven relay: forwards everything, parks whenever quiet.
 struct Relay {
-    inp: InPort,
-    out: OutPort,
+    inp: In<Transit>,
+    out: Out<Transit>,
 }
 
 impl Unit for Relay {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
-        while ctx.out_vacant(self.out) {
-            let Some(m) = ctx.recv(self.inp) else { break };
-            ctx.send(self.out, m).unwrap();
+        while self.out.vacant(ctx) {
+            let Some(m) = self.inp.recv_msg(ctx) else { break };
+            self.out.send_msg(ctx, m).unwrap();
         }
     }
 }
@@ -64,13 +65,13 @@ impl Unit for Relay {
 /// Input-driven sink; `is_idle` defaults to `true`, so it parks whenever
 /// its queue is empty — exactly the unit the hazard targets.
 struct CountingSink {
-    inp: InPort,
+    inp: In<Transit>,
     received: u64,
 }
 
 impl Unit for CountingSink {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
-        while let Some(m) = ctx.recv(self.inp) {
+        while let Some(m) = self.inp.recv_msg(ctx) {
             assert_eq!(m.a, self.received, "FIFO order broken");
             self.received += 1;
         }
@@ -91,7 +92,7 @@ fn burst_model(delay: u64) -> Model {
     let mut mb = ModelBuilder::new();
     let src = mb.reserve_unit("src");
     let snk = mb.reserve_unit("snk");
-    let (tx, rx) = mb.connect(src, snk, PortCfg::new(2, delay));
+    let (tx, rx) = mb.link::<Transit>(src, snk, PortCfg::new(2, delay));
     mb.install(
         src,
         Box::new(BurstSource {
@@ -112,8 +113,8 @@ fn chain_model(delay: u64) -> Model {
     let src = mb.reserve_unit("src");
     let mid = mb.reserve_unit("mid");
     let snk = mb.reserve_unit("snk");
-    let (tx0, rx0) = mb.connect(src, mid, PortCfg::new(2, delay));
-    let (tx1, rx1) = mb.connect(mid, snk, PortCfg::new(2, delay));
+    let (tx0, rx0) = mb.link::<Transit>(src, mid, PortCfg::new(2, delay));
+    let (tx1, rx1) = mb.link::<Transit>(mid, snk, PortCfg::new(2, delay));
     mb.install(
         src,
         Box::new(BurstSource {
@@ -238,16 +239,16 @@ fn simultaneous_wakes_from_two_senders_collapse() {
         let a = mb.reserve_unit("a");
         let b = mb.reserve_unit("b");
         let snk = mb.reserve_unit("snk");
-        let (ta, ra) = mb.connect(a, snk, PortCfg::new(2, 3));
-        let (tb, rb) = mb.connect(b, snk, PortCfg::new(2, 3));
+        let (ta, ra) = mb.link::<Transit>(a, snk, PortCfg::new(2, 3));
+        let (tb, rb) = mb.link::<Transit>(b, snk, PortCfg::new(2, 3));
         struct TwoPortSink {
-            ins: [InPort; 2],
+            ins: [In<Transit>; 2],
             received: u64,
         }
         impl Unit for TwoPortSink {
             fn work(&mut self, ctx: &mut Ctx<'_>) {
                 for &inp in &self.ins {
-                    while let Some(_m) = ctx.recv(inp) {
+                    while let Some(_m) = inp.recv_msg(ctx) {
                         self.received += 1;
                     }
                 }
