@@ -11,12 +11,20 @@
 //!    accumulates per-unit tick and nanosecond costs into `CostSamples`
 //!    as a side effect of the work phase (each cell is written only by the
 //!    unit's owning cluster, the usual phase-ownership discipline).
-//! 2. **Decide** — every `interval_cycles`, the global scheduler (which
+//! 2. **Decide** — at the policy's cadence, the global scheduler (which
 //!    holds exclusive model access between ticks: every worker is parked
-//!    at `wait(WORK)`) re-runs LPT bin-packing over the sampled costs,
-//!    label-matches the plan to the current assignment to avoid
-//!    permutation churn, and compares imbalance (max cluster load over
-//!    mean). Only an improvement larger than `hysteresis` migrates.
+//!    at `wait(WORK)`) evaluates the sampled costs. Under
+//!    [`RepartitionPolicy::Fixed`] every decision runs the full planner
+//!    (LPT bin-packing, or the locality greedy + Kernighan–Lin when the
+//!    session strategy is `CostLocality`). Under
+//!    [`RepartitionPolicy::Adaptive`] — the drift-adaptive default for
+//!    `adaptive` specs — each decision is only a cheap O(units) probe
+//!    that folds the epoch's max/mean imbalance into an EWMA; the planner
+//!    runs when the smoothed drift crosses `drift_threshold`, and backs
+//!    off multiplicatively while its plans keep being rejected. Either
+//!    way the plan is label-matched to the current assignment to avoid
+//!    permutation churn, and only an improvement larger than `hysteresis`
+//!    migrates.
 //! 3. **Migrate** — a migration is a pure data-structure swap: the
 //!    ownership table (`ActiveState::set_cluster`), the per-cluster unit
 //!    lists (`ClusterState`), and the derived active and dirty-port
@@ -45,64 +53,216 @@ use std::cell::UnsafeCell;
 /// that trade a sliver of balance for a shredded topology.
 const LOCALITY_LAMBDA: f64 = 0.5;
 
-/// When and how aggressively to repartition mid-run.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct RepartitionPolicy {
-    /// Re-evaluate the partition every this many cycles; 0 disables
-    /// repartitioning entirely (no sampling overhead either).
-    pub interval_cycles: u64,
-    /// Required imbalance improvement (in units of max/mean load) before
-    /// a migration happens. Guards against churn on noisy samples.
-    pub hysteresis: f64,
-    /// Upper bound on units migrated per epoch; excess moves (cheapest
-    /// first) are deferred to the next epoch.
-    pub max_moves: usize,
-}
+/// Default required imbalance improvement before a migration happens.
+pub const DEFAULT_HYSTERESIS: f64 = 0.05;
+/// Adaptive defaults: probe cadence (cycles), smoothed-drift trigger
+/// (excess of EWMA max/mean imbalance over 1.0), and the multiplicative
+/// back-off applied to the planner after a rejected plan.
+pub const DEFAULT_CHECK_EVERY: u64 = 32;
+pub const DEFAULT_DRIFT_THRESHOLD: f64 = 0.25;
+pub const DEFAULT_BACKOFF: u32 = 2;
+/// EWMA smoothing factor for the drift signal (weight of the newest
+/// epoch's imbalance). 0.5 reacts within ~2 probe epochs while still
+/// riding out one-epoch sampling noise.
+const EWMA_ALPHA: f64 = 0.5;
 
-impl Default for RepartitionPolicy {
-    fn default() -> Self {
-        RepartitionPolicy {
-            interval_cycles: 0,
-            hysteresis: 0.05,
-            max_moves: usize::MAX,
-        }
-    }
+/// When and how aggressively to repartition mid-run.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum RepartitionPolicy {
+    /// No mid-run repartitioning (and no sampling overhead).
+    #[default]
+    Off,
+    /// Fixed cadence: run the full planner (LPT or the locality greedy +
+    /// KL) every `interval_cycles`, migrate when the projected
+    /// improvement clears `hysteresis`.
+    Fixed {
+        /// Planner cadence in cycles.
+        interval_cycles: u64,
+        /// Required score improvement (units of max/mean load) before a
+        /// migration happens. Guards against churn on noisy samples.
+        hysteresis: f64,
+        /// Upper bound on units migrated per epoch; excess moves
+        /// (cheapest first) are deferred to the next epoch.
+        max_moves: usize,
+    },
+    /// Drift-adaptive cadence — the default policy for `adaptive` specs:
+    /// a cheap O(units) imbalance probe runs every `check_every` cycles
+    /// and feeds an EWMA; the full planner runs only when the smoothed
+    /// drift (EWMA imbalance − 1.0) crosses `drift_threshold`. A plan the
+    /// migration gate rejects multiplies the planner's re-arm distance by
+    /// `backoff` (compounding over consecutive rejections, reset by a
+    /// migration), so a workload the planner cannot improve stops paying
+    /// for plans it will not take.
+    Adaptive {
+        /// Probe cadence in cycles (the cheap check).
+        check_every: u64,
+        /// Smoothed-imbalance excess over 1.0 that triggers a full plan.
+        drift_threshold: f64,
+        /// Multiplicative planner back-off per consecutive rejected plan.
+        backoff: u32,
+        /// As `Fixed::hysteresis`: required score improvement before a
+        /// migration happens.
+        hysteresis: f64,
+        /// As `Fixed::max_moves`: per-epoch migration cap.
+        max_moves: usize,
+    },
 }
 
 impl RepartitionPolicy {
-    /// Repartition every `n` cycles with the default hysteresis and no
-    /// move cap.
+    /// Fixed-cadence repartitioning every `n` cycles with the default
+    /// hysteresis and no move cap; `n == 0` disables.
     pub fn every(n: u64) -> Self {
-        RepartitionPolicy {
+        if n == 0 {
+            return RepartitionPolicy::Off;
+        }
+        RepartitionPolicy::Fixed {
             interval_cycles: n,
-            ..Default::default()
+            hysteresis: DEFAULT_HYSTERESIS,
+            max_moves: usize::MAX,
         }
     }
 
+    /// Drift-adaptive repartitioning with the default probe cadence,
+    /// drift threshold, and back-off.
+    pub fn adaptive() -> Self {
+        RepartitionPolicy::Adaptive {
+            check_every: DEFAULT_CHECK_EVERY,
+            drift_threshold: DEFAULT_DRIFT_THRESHOLD,
+            backoff: DEFAULT_BACKOFF,
+            hysteresis: DEFAULT_HYSTERESIS,
+            max_moves: usize::MAX,
+        }
+    }
+
+    /// A zero cadence disables the policy whichever way it was written —
+    /// `Off`, `Fixed { interval_cycles: 0, .. }`, and
+    /// `Adaptive { check_every: 0, .. }` are all inert (the old struct's
+    /// "interval 0 disables" contract, kept for directly-constructed
+    /// variants).
     pub fn enabled(&self) -> bool {
-        self.interval_cycles > 0
+        self.cadence() > 0
     }
 
-    /// Parse a compact policy spec: `INTERVAL[,HYSTERESIS[,MAX_MOVES]]`,
-    /// e.g. `"64"`, `"256,0.1"`, `"1k,5%,8"`. Interval 0 disables.
+    /// The decision cadence in cycles: the planner interval for `Fixed`,
+    /// the probe interval for `Adaptive`, 0 for `Off`.
+    pub fn cadence(&self) -> u64 {
+        match *self {
+            RepartitionPolicy::Off => 0,
+            RepartitionPolicy::Fixed { interval_cycles, .. } => interval_cycles,
+            RepartitionPolicy::Adaptive { check_every, .. } => check_every,
+        }
+    }
+
+    pub fn hysteresis(&self) -> f64 {
+        match *self {
+            RepartitionPolicy::Off => 0.0,
+            RepartitionPolicy::Fixed { hysteresis, .. }
+            | RepartitionPolicy::Adaptive { hysteresis, .. } => hysteresis,
+        }
+    }
+
+    pub fn max_moves(&self) -> usize {
+        match *self {
+            RepartitionPolicy::Off => 0,
+            RepartitionPolicy::Fixed { max_moves, .. }
+            | RepartitionPolicy::Adaptive { max_moves, .. } => max_moves,
+        }
+    }
+
+    /// Override the hysteresis (no-op on `Off`).
+    pub fn set_hysteresis(&mut self, h: f64) {
+        match self {
+            RepartitionPolicy::Off => {}
+            RepartitionPolicy::Fixed { hysteresis, .. }
+            | RepartitionPolicy::Adaptive { hysteresis, .. } => *hysteresis = h,
+        }
+    }
+
+    /// Override the per-epoch move cap (no-op on `Off`).
+    pub fn set_max_moves(&mut self, m: usize) {
+        match self {
+            RepartitionPolicy::Off => {}
+            RepartitionPolicy::Fixed { max_moves, .. }
+            | RepartitionPolicy::Adaptive { max_moves, .. } => *max_moves = m,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RepartitionPolicy::Off => "off",
+            RepartitionPolicy::Fixed { .. } => "fixed",
+            RepartitionPolicy::Adaptive { .. } => "adaptive",
+        }
+    }
+
+    /// One-line human summary (CLI echoes, BENCH rows).
+    pub fn summary(&self) -> String {
+        match *self {
+            RepartitionPolicy::Off => "off".to_string(),
+            RepartitionPolicy::Fixed { interval_cycles, .. } => {
+                format!("every {interval_cycles}")
+            }
+            RepartitionPolicy::Adaptive {
+                check_every,
+                drift_threshold,
+                ..
+            } => format!("adaptive(drift {drift_threshold}, check {check_every})"),
+        }
+    }
+
+    /// Parse a compact policy spec:
+    ///
+    /// - `INTERVAL[,HYSTERESIS[,MAX_MOVES]]` — fixed cadence, e.g.
+    ///   `"64"`, `"256,0.1"`, `"1k,5%,8"`. Interval 0 disables.
+    /// - `adaptive[,DRIFT[,CHECK_EVERY]]` — drift-adaptive cadence, e.g.
+    ///   `"adaptive"`, `"adaptive,0.4"`, `"adaptive,25%,64"`.
     pub fn parse(spec: &str) -> Result<Self, String> {
-        let mut policy = RepartitionPolicy::default();
         let mut parts = spec.split(',').map(str::trim);
-        let interval = parts.next().filter(|s| !s.is_empty()).ok_or_else(|| {
-            format!("bad repartition spec {spec:?}: expected INTERVAL[,HYSTERESIS[,MAX_MOVES]]")
+        let head = parts.next().filter(|s| !s.is_empty()).ok_or_else(|| {
+            format!(
+                "bad repartition spec {spec:?}: expected \
+                 INTERVAL[,HYSTERESIS[,MAX_MOVES]] or adaptive[,DRIFT[,CHECK_EVERY]]"
+            )
         })?;
-        policy.interval_cycles =
-            parse_u64(interval).map_err(|e| format!("repartition interval: {e}"))?;
-        if let Some(h) = parts.next() {
-            policy.hysteresis =
-                parse_f64(h).map_err(|e| format!("repartition hysteresis: {e}"))?;
-        }
-        if let Some(m) = parts.next() {
-            policy.max_moves =
-                parse_u64(m).map_err(|e| format!("repartition max-moves: {e}"))? as usize;
-        }
+        let mut policy = if head == "adaptive" {
+            let mut p = RepartitionPolicy::adaptive();
+            if let RepartitionPolicy::Adaptive {
+                drift_threshold,
+                check_every,
+                ..
+            } = &mut p
+            {
+                if let Some(d) = parts.next() {
+                    *drift_threshold =
+                        parse_f64(d).map_err(|e| format!("repartition drift threshold: {e}"))?;
+                }
+                if let Some(c) = parts.next() {
+                    // 0 disables (normalized to Off below), like the
+                    // fixed spelling's interval.
+                    *check_every =
+                        parse_u64(c).map_err(|e| format!("repartition check-every: {e}"))?;
+                }
+            }
+            p
+        } else {
+            let interval = parse_u64(head).map_err(|e| format!("repartition interval: {e}"))?;
+            let mut p = RepartitionPolicy::every(interval);
+            if let Some(h) = parts.next() {
+                let h = parse_f64(h).map_err(|e| format!("repartition hysteresis: {e}"))?;
+                p.set_hysteresis(h);
+            }
+            if let Some(m) = parts.next() {
+                let m = parse_u64(m).map_err(|e| format!("repartition max-moves: {e}"))?;
+                p.set_max_moves(m as usize);
+            }
+            p
+        };
         if let Some(extra) = parts.next() {
             return Err(format!("bad repartition spec {spec:?}: trailing {extra:?}"));
+        }
+        // Normalize: a disabled policy carries no knobs.
+        if !policy.enabled() {
+            policy = RepartitionPolicy::Off;
         }
         Ok(policy)
     }
@@ -284,10 +444,22 @@ pub(crate) fn imbalance(loads: &[u64]) -> f64 {
 pub(crate) struct Repartitioner {
     policy: RepartitionPolicy,
     next_check: u64,
+    /// Drift signal (`Adaptive` only): EWMA of the per-epoch max/mean
+    /// imbalance, re-seeded after every migration (the post-migration
+    /// loads are a new regime — smoothing across the swap would delay
+    /// the next detection).
+    ewma: Option<f64>,
+    /// Consecutive planner runs the migration gate rejected (`Adaptive`
+    /// back-off input); reset by a migration.
+    reject_streak: u32,
+    /// Earliest cycle the planner may run again after a rejection
+    /// (`Adaptive`): probes keep feeding the EWMA meanwhile, but the
+    /// expensive plan stays off until the back-off distance has passed.
+    plan_ok_at: u64,
     /// Plan with the cost-locality objective (the session ran under
     /// `PartitionStrategy::CostLocality`): LPT is replaced by the
-    /// topology-aware greedy, and the migration gate scores the
-    /// cross-cluster edge weight alongside imbalance.
+    /// topology-aware greedy + KL refinement, and the migration gate
+    /// scores the cross-cluster edge weight alongside imbalance.
     locality: bool,
     /// The build-time edge list, extracted once at the first locality
     /// decision (it is static — re-walking the model every barrier check
@@ -300,10 +472,28 @@ impl Repartitioner {
     pub(crate) fn new(policy: RepartitionPolicy, locality: bool) -> Self {
         Repartitioner {
             policy,
-            next_check: policy.interval_cycles.max(1),
+            next_check: policy.cadence().max(1),
+            ewma: None,
+            reject_streak: 0,
+            plan_ok_at: 0,
             locality,
             topo: None,
             stats: RepartStats::default(),
+        }
+    }
+
+    /// A plan the migration gate rejected: under `Adaptive`, stretch the
+    /// planner re-arm distance multiplicatively (probe cadence ×
+    /// backoff^streak) so repeatedly futile plans stop being computed.
+    fn plan_rejected(&mut self, cycle: u64) {
+        if let RepartitionPolicy::Adaptive { backoff, check_every, .. } = self.policy {
+            // Streak cap 8: at the defaults (probe 32, backoff 2) the
+            // worst lockout is 32·2⁸ = 8k cycles — long enough to stop
+            // paying for futile plans, short enough that a genuine
+            // regime change is picked up promptly.
+            self.reject_streak = (self.reject_streak + 1).min(8);
+            let factor = (backoff.max(1) as u64).saturating_pow(self.reject_streak);
+            self.plan_ok_at = cycle.saturating_add(check_every.saturating_mul(factor));
         }
     }
 
@@ -325,10 +515,12 @@ impl Repartitioner {
         if !self.policy.enabled() || cycle < self.next_check {
             return;
         }
-        self.next_check = cycle + self.policy.interval_cycles;
+        // `.max(1)` keeps forward progress even if a caller hands a
+        // directly-constructed policy a degenerate cadence.
+        self.next_check = cycle + self.policy.cadence().max(1);
         let k = clusters.len();
         let n = model.num_units();
-        self.stats.checks += 1;
+        self.stats.probes += 1;
         let costs: Vec<u64> = (0..n).map(|u| samples.cost(u)).collect();
         samples.reset();
         if k <= 1 || n == 0 {
@@ -349,6 +541,23 @@ impl Repartitioner {
             }
             l
         };
+        // Adaptive gate: fold this epoch's observed imbalance into the
+        // EWMA and only pay for a full plan when the smoothed drift
+        // crosses the threshold (and any rejection back-off has lapsed).
+        // This is the whole point of the policy — the probe above is
+        // O(units); the plan below is the expensive part.
+        if let RepartitionPolicy::Adaptive { drift_threshold, .. } = self.policy {
+            let observed = imbalance(&loads(&cur));
+            let smoothed = match self.ewma {
+                Some(prev) => EWMA_ALPHA * observed + (1.0 - EWMA_ALPHA) * prev,
+                None => observed,
+            };
+            self.ewma = Some(smoothed);
+            if smoothed - 1.0 <= drift_threshold || cycle < self.plan_ok_at {
+                return;
+            }
+        }
+        self.stats.checks += 1;
         // Locality sessions fold the build-time topology's cross-cluster
         // weight into the migration gate; cost-balanced sessions score
         // pure imbalance as before. The edge list is extracted once and
@@ -380,7 +589,8 @@ impl Repartitioner {
             None => partition_with_costs(k, &costs),
         };
         let plan = label_match(&plan_bins, &cur, &costs, k);
-        if cur_score - score(&plan) <= self.policy.hysteresis {
+        if cur_score - score(&plan) <= self.policy.hysteresis() {
+            self.plan_rejected(cycle);
             return;
         }
 
@@ -389,10 +599,11 @@ impl Repartitioner {
             .filter(|&u| plan[u as usize] != cur[u as usize])
             .collect();
         if movers.is_empty() {
+            self.plan_rejected(cycle);
             return;
         }
         movers.sort_by_key(|&u| (std::cmp::Reverse(costs[u as usize]), u));
-        movers.truncate(self.policy.max_moves);
+        movers.truncate(self.policy.max_moves());
         let mut next = cur;
         for &u in &movers {
             next[u as usize] = plan[u as usize];
@@ -404,7 +615,8 @@ impl Repartitioner {
         let next_loads = loads(&next);
         let next_imb = imbalance(&next_loads);
         let next_score = score(&next);
-        if cur_score - next_score <= self.policy.hysteresis {
+        if cur_score - next_score <= self.policy.hysteresis() {
+            self.plan_rejected(cycle);
             return;
         }
 
@@ -420,6 +632,11 @@ impl Repartitioner {
         }
         model.rebuild_cluster_state(clusters, state);
 
+        // A migration starts a new regime: clear the back-off and re-seed
+        // the drift signal from the post-swap loads.
+        self.reject_streak = 0;
+        self.plan_ok_at = 0;
+        self.ewma = None;
         self.stats.events += 1;
         self.stats.epochs.push(RepartEpoch {
             cycle,
@@ -481,15 +698,102 @@ mod tests {
             RepartitionPolicy::every(64)
         );
         let p = RepartitionPolicy::parse("1k, 0.1, 8").unwrap();
-        assert_eq!(p.interval_cycles, 1_000);
-        assert!((p.hysteresis - 0.1).abs() < 1e-12);
-        assert_eq!(p.max_moves, 8);
+        assert_eq!(p.cadence(), 1_000);
+        assert!((p.hysteresis() - 0.1).abs() < 1e-12);
+        assert_eq!(p.max_moves(), 8);
+        assert_eq!(p.name(), "fixed");
         let pct = RepartitionPolicy::parse("256,5%").unwrap();
-        assert!((pct.hysteresis - 0.05).abs() < 1e-12);
-        assert!(!RepartitionPolicy::parse("0").unwrap().enabled());
+        assert!((pct.hysteresis() - 0.05).abs() < 1e-12);
+        assert_eq!(
+            RepartitionPolicy::parse("0").unwrap(),
+            RepartitionPolicy::Off
+        );
+        assert!(!RepartitionPolicy::Off.enabled());
         assert!(RepartitionPolicy::parse("").is_err());
         assert!(RepartitionPolicy::parse("64,x").is_err());
         assert!(RepartitionPolicy::parse("64,0.1,2,9").is_err());
+    }
+
+    #[test]
+    fn policy_parse_adaptive_variants() {
+        let d = RepartitionPolicy::parse("adaptive").unwrap();
+        assert_eq!(d, RepartitionPolicy::adaptive());
+        assert_eq!(d.name(), "adaptive");
+        assert_eq!(d.cadence(), DEFAULT_CHECK_EVERY);
+        assert!((d.hysteresis() - DEFAULT_HYSTERESIS).abs() < 1e-12);
+        match RepartitionPolicy::parse("adaptive, 40%, 64").unwrap() {
+            RepartitionPolicy::Adaptive {
+                check_every,
+                drift_threshold,
+                backoff,
+                ..
+            } => {
+                assert_eq!(check_every, 64);
+                assert!((drift_threshold - 0.4).abs() < 1e-12);
+                assert_eq!(backoff, DEFAULT_BACKOFF);
+            }
+            other => panic!("expected Adaptive, got {other:?}"),
+        }
+        assert!(d.summary().starts_with("adaptive("));
+        assert_eq!(
+            RepartitionPolicy::parse("adaptive,0.25,0").unwrap(),
+            RepartitionPolicy::Off,
+            "a zero probe cadence disables, like the fixed spelling's 0"
+        );
+        assert!(RepartitionPolicy::parse("adaptive,x").is_err());
+        assert!(RepartitionPolicy::parse("adaptive,0.4,64,9").is_err());
+    }
+
+    #[test]
+    fn zero_cadence_disables_directly_constructed_policies() {
+        // The old struct's "interval 0 disables" contract must survive
+        // for callers constructing the public variants by hand.
+        let fixed0 = RepartitionPolicy::Fixed {
+            interval_cycles: 0,
+            hysteresis: 0.0,
+            max_moves: usize::MAX,
+        };
+        assert!(!fixed0.enabled());
+        let adaptive0 = RepartitionPolicy::Adaptive {
+            check_every: 0,
+            drift_threshold: 0.0,
+            backoff: 2,
+            hysteresis: 0.0,
+            max_moves: usize::MAX,
+        };
+        assert!(!adaptive0.enabled());
+        assert!(RepartitionPolicy::every(16).enabled());
+        assert!(RepartitionPolicy::adaptive().enabled());
+    }
+
+    #[test]
+    fn policy_knob_setters_apply_to_both_cadences() {
+        for mut p in [RepartitionPolicy::every(10), RepartitionPolicy::adaptive()] {
+            p.set_hysteresis(0.5);
+            p.set_max_moves(3);
+            assert!((p.hysteresis() - 0.5).abs() < 1e-12);
+            assert_eq!(p.max_moves(), 3);
+        }
+        let mut off = RepartitionPolicy::Off;
+        off.set_hysteresis(0.5);
+        assert_eq!(off, RepartitionPolicy::Off, "Off carries no knobs");
+    }
+
+    #[test]
+    fn rejected_plans_back_off_multiplicatively() {
+        let mut rp = Repartitioner::new(RepartitionPolicy::adaptive(), false);
+        let check = DEFAULT_CHECK_EVERY;
+        rp.plan_rejected(100);
+        assert_eq!(rp.plan_ok_at, 100 + check * u64::from(DEFAULT_BACKOFF));
+        rp.plan_rejected(200);
+        assert_eq!(
+            rp.plan_ok_at,
+            200 + check * u64::from(DEFAULT_BACKOFF).pow(2)
+        );
+        // Fixed policies never back off: every interval replans.
+        let mut fixed = Repartitioner::new(RepartitionPolicy::every(64), false);
+        fixed.plan_rejected(100);
+        assert_eq!(fixed.plan_ok_at, 0);
     }
 
     #[test]

@@ -142,8 +142,8 @@ impl Sim {
     ///
     /// Besides the scenario's own keys, every scenario config honours the
     /// session-level `repartition` key (a [`RepartitionPolicy::parse`]
-    /// spec, e.g. `repartition = "64"` or `--set repartition=64`) plus
-    /// the `repartition-hysteresis` and `repartition-max-moves`
+    /// spec, e.g. `repartition = "64"`, `--set repartition=adaptive`)
+    /// plus the `repartition-hysteresis` and `repartition-max-moves`
     /// overrides.
     pub fn scenario(name: &str, cfg: &Config) -> Result<Self, String> {
         let sc = crate::scenario::find(name)?;
@@ -163,13 +163,14 @@ impl Sim {
             sim.repart = RepartitionPolicy::parse(spec)?;
         }
         if let Some(h) = cfg.get("repartition-hysteresis") {
-            sim.repart.hysteresis = crate::util::cli::parse_f64(h)
+            let h = crate::util::cli::parse_f64(h)
                 .map_err(|e| format!("repartition-hysteresis: {e}"))?;
+            sim.repart.set_hysteresis(h);
         }
         if let Some(m) = cfg.get("repartition-max-moves") {
-            sim.repart.max_moves = crate::util::cli::parse_u64(m)
-                .map_err(|e| format!("repartition-max-moves: {e}"))?
-                as usize;
+            let m = crate::util::cli::parse_u64(m)
+                .map_err(|e| format!("repartition-max-moves: {e}"))?;
+            sim.repart.set_max_moves(m as usize);
         }
         Ok(sim)
     }
@@ -218,14 +219,16 @@ impl Sim {
         self.sched(SchedMode::ActiveList)
     }
 
-    /// Enable adaptive mid-run repartitioning (ladder engine): sample
-    /// live per-unit costs, re-run LPT bin-packing every
-    /// `policy.interval_cycles`, and migrate units between clusters at
-    /// the cycle barrier when the projected imbalance improvement clears
-    /// `policy.hysteresis`. Migration is semantically invisible — it
-    /// changes where a unit runs, never when — so fingerprints are
-    /// unaffected. Ignored by the serial engines (one cluster: nothing
-    /// to migrate).
+    /// Enable mid-run repartitioning (ladder engine): sample live
+    /// per-unit costs at the policy's cadence and migrate units between
+    /// clusters at the cycle barrier when the projected improvement
+    /// clears the policy's hysteresis. [`RepartitionPolicy::Fixed`] runs
+    /// the full planner every interval; [`RepartitionPolicy::Adaptive`]
+    /// probes cheaply and plans only when the smoothed imbalance drift
+    /// crosses its threshold (with rejection back-off). Migration is
+    /// semantically invisible — it changes where a unit runs, never
+    /// when — so fingerprints are unaffected. Ignored by the serial
+    /// engines (one cluster: nothing to migrate).
     pub fn repartition(mut self, policy: RepartitionPolicy) -> Self {
         self.repart = policy;
         self
@@ -234,6 +237,12 @@ impl Sim {
     /// Shorthand for `.repartition(RepartitionPolicy::every(n))`.
     pub fn repartition_every(self, n: u64) -> Self {
         self.repartition(RepartitionPolicy::every(n))
+    }
+
+    /// Shorthand for `.repartition(RepartitionPolicy::adaptive())` — the
+    /// drift-adaptive default cadence.
+    pub fn repartition_adaptive(self) -> Self {
+        self.repartition(RepartitionPolicy::adaptive())
     }
 
     /// Set (or override a scenario's) stop condition.

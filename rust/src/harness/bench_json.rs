@@ -86,8 +86,9 @@ pub struct LadderBench {
     pub cores: usize,
     pub units: usize,
     pub strategy: &'static str,
-    /// Repartitioning interval applied to the ladder rows (None = off).
-    pub repartition_interval: Option<u64>,
+    /// Repartitioning policy applied to the ladder rows
+    /// ([`RepartitionPolicy::summary`]; None = off).
+    pub repartition_policy: Option<String>,
     pub rows: Vec<BenchRow>,
 }
 
@@ -128,9 +129,9 @@ impl LadderBench {
         s.push_str(&format!("  \"units\": {},\n", self.units));
         s.push_str(&format!("  \"strategy\": \"{}\",\n", self.strategy));
         s.push_str(&format!(
-            "  \"repartition_interval\": {},\n",
-            match self.repartition_interval {
-                Some(n) => n.to_string(),
+            "  \"repartition_policy\": {},\n",
+            match &self.repartition_policy {
+                Some(p) => format!("\"{p}\""),
                 None => "null".to_string(),
             }
         ));
@@ -254,7 +255,7 @@ pub fn run_oltp_light(
             None => "paper",
             Some(s) => s.name(),
         },
-        repartition_interval: repart.map(|p| p.interval_cycles),
+        repartition_policy: repart.map(|p| p.summary()),
         rows,
     }
 }
@@ -287,10 +288,7 @@ pub fn print(b: &LadderBench) {
             b.cores,
             b.units,
             b.strategy,
-            match b.repartition_interval {
-                Some(n) => format!("every {n}"),
-                None => "off".to_string(),
-            },
+            b.repartition_policy.as_deref().unwrap_or("off"),
             b.speedup_active_vs_full()
         ),
         &[
@@ -328,7 +326,7 @@ mod tests {
         let json = b.to_json();
         assert!(json.contains("\"fingerprints_agree\": true"));
         assert!(json.contains("\"scenario\": \"cpu-light\""));
-        assert!(json.contains("\"repartition_interval\": 256"));
+        assert!(json.contains("\"repartition_policy\": \"every 256\""));
         assert!(json.contains("\"repartition_events\": "));
         assert!(json.contains("\"cross_cluster_ports\": "));
         let ladder_cut = b
@@ -346,5 +344,16 @@ mod tests {
             "{json}"
         );
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn bench_report_carries_the_adaptive_policy() {
+        let b = run_oltp_light(2, &[2], None, Some(RepartitionPolicy::adaptive()));
+        assert!(b.fingerprints_agree(), "adaptive rows must not diverge");
+        let json = b.to_json();
+        assert!(
+            json.contains("\"repartition_policy\": \"adaptive("),
+            "{json}"
+        );
     }
 }

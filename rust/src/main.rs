@@ -37,12 +37,13 @@ fn usage() -> ! {
          \x20                [--strategy round-robin|random|locality|contiguous|\n\
          \x20                 cost-balanced|cost-locality]\n\
          \x20                [--sched full|active] [--spin yield|pure]\n\
-         \x20                [--repartition N[,HYST[,MOVES]]] (adaptive rebalance)\n\
+         \x20                [--repartition N[,HYST[,MOVES]] | adaptive[,DRIFT[,CHECK]]]\n\
          \x20                [--cycles N] [--timed] [--fingerprint] [--counters]\n\
          \x20                [--json out.json] [--set k=v,k=v] (scenario keys)\n\
          \x20 barrier-bench  [--workers 1,2,4] [--cycles N] [--spin yield|pure]\n\
          \x20 oltp-light     [--cores N] [--workers 1,2,4,8,16] [--strategy S]\n\
-         \x20                [--sched full|active] [--repartition N[,HYST[,MOVES]]]\n\
+         \x20                [--sched full|active]\n\
+         \x20                [--repartition N[,HYST[,MOVES]] | adaptive[,DRIFT[,CHECK]]]\n\
          \x20                [--bench-json BENCH_ladder.json]\n\
          \x20 ooo            [--cores N] [--workers 1,2,4,8] [--workload oltp|stream|chase|compute|branchy]\n\
          \x20 datacenter     [--k N] [--packets N] [--window N] [--workers 1,2,...,24] [--paper-scale]\n\
@@ -122,10 +123,10 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     if report.stats.fingerprint != 0 {
         println!("  fingerprint {:#018x}", report.stats.fingerprint);
     }
-    if report.stats.repart.checks > 0 {
+    if report.stats.repart.probes > 0 {
         println!(
-            "  repartition: {} events / {} checks",
-            report.stats.repart.events, report.stats.repart.checks
+            "  repartition: {} events / {} plans / {} probes",
+            report.stats.repart.events, report.stats.repart.checks, report.stats.repart.probes
         );
         for e in &report.stats.repart.epochs {
             println!(
@@ -184,7 +185,7 @@ fn cmd_oltp_light(argv: &[String]) -> Result<(), String> {
         "# running OLTP light-CPU sweeps ({cores} cores, {} scheduling, repartition {})...",
         sched.name(),
         match repart {
-            Some(p) => format!("every {}", p.interval_cycles),
+            Some(p) => p.summary(),
             None => "off".to_string(),
         }
     );

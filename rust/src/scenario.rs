@@ -19,6 +19,7 @@
 //! | `mesh`      | 2-D mesh NoC with per-node traffic endpoints        |
 //! | `ring`      | unidirectional ring NoC (typed `Wire::ring`)        |
 //! | `torus`     | 2-D torus NoC (typed `Wire::torus_of`)              |
+//! | `tree`      | fan-out tree fabric (typed `Wire::tree_of`)         |
 //!
 //! Config keys are scenario-specific and documented per scenario
 //! (`keys()`); unknown keys are ignored, so one config file can drive a
@@ -68,6 +69,7 @@ pub fn all() -> Vec<Box<dyn Scenario>> {
         Box::new(MeshNoc),
         Box::new(RingNoc),
         Box::new(TorusNoc),
+        Box::new(TreeFabric),
     ]
 }
 
@@ -107,7 +109,13 @@ pub fn list_lines() -> Vec<String> {
     // (`Sim::scenario`), in addition to the per-scenario keys above.
     lines.push("any scenario:".to_string());
     lines.push(
-        "             repartition    adaptive rebalance: N[,HYST[,MOVES]] (0 = off)".to_string(),
+        "             repartition    mid-run rebalance: N[,HYST[,MOVES]] (fixed cadence, \
+         0 = off)"
+            .to_string(),
+    );
+    lines.push(
+        "                            or adaptive[,DRIFT[,CHECK]] (drift-adaptive cadence)"
+            .to_string(),
     );
     lines.push(
         "             repartition-hysteresis / repartition-max-moves   overrides".to_string(),
@@ -1026,6 +1034,303 @@ impl Scenario for TorusNoc {
     }
 }
 
+// ---------------------------------------------------------------------
+// tree
+// ---------------------------------------------------------------------
+
+/// One node of the fan-out tree fabric: a combined router + traffic
+/// endpoint over the level-order (heap) node numbering that
+/// `Wire::tree_of` places. Every node injects packets to pseudo-random
+/// other nodes and consumes its own; transit flits route down the child
+/// subtree that contains the destination, or up towards the common
+/// ancestor, through an elastic internal queue (no cyclic-credit
+/// deadlock), link-rate limited on every hop — the same store-and-forward
+/// discipline as the ring and torus nodes.
+struct TreeFabricNode {
+    up: Option<(In<Flit>, Out<Flit>)>,
+    down: Vec<(In<Flit>, Out<Flit>)>,
+    node: u32,
+    nodes: u32,
+    fanout: u32,
+    to_send: u64,
+    sent: u64,
+    received: u64,
+    forwarded: u64,
+    transit: std::collections::VecDeque<Flit>,
+    latency_sum: u64,
+    delivered: crate::stats::counters::CounterId,
+    rng: Rng,
+}
+
+impl TreeFabricNode {
+    /// Output for `dst`: `None` = the up link, `Some(j)` = down child
+    /// `j`. Heap numbering: node `g`'s children are `g*fanout + 1 + j`,
+    /// its parent `(g - 1) / fanout` — so `dst` is in our subtree iff
+    /// walking `dst` up lands on us, and the branch is the last step of
+    /// that walk.
+    fn route(&self, dst: u32) -> Option<usize> {
+        let mut a = dst;
+        while a > self.node {
+            let parent = (a - 1) / self.fanout;
+            if parent == self.node {
+                return Some((a - (self.node * self.fanout + 1)) as usize);
+            }
+            a = parent;
+        }
+        None
+    }
+
+    fn dispatch(&mut self, ctx: &mut Ctx<'_>, f: Flit) -> bool {
+        let out = match self.route(f.dst) {
+            Some(j) => self.down[j].1,
+            None => self.up.expect("root's subtree holds every node").1,
+        };
+        if out.vacant(ctx) {
+            out.send(ctx, f).unwrap();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl Unit for TreeFabricNode {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        // Drain all inputs in fixed order (up, then children ascending):
+        // consume ours, queue the rest. Index-driven so the port handles
+        // are copied out before the body mutates `self`.
+        let up_slot = usize::from(self.up.is_some());
+        for i in 0..up_slot + self.down.len() {
+            let inp = match (i, self.up) {
+                (0, Some((inp, _))) => inp,
+                _ => self.down[i - up_slot].0,
+            };
+            while let Some(f) = inp.recv(ctx) {
+                if f.dst == self.node {
+                    self.received += 1;
+                    self.latency_sum += ctx.cycle - f.inject;
+                    ctx.counters.add(self.delivered, 1);
+                } else {
+                    self.transit.push_back(f);
+                }
+            }
+        }
+        // Forward transit traffic (head-of-line on the elastic queue),
+        // then inject our own.
+        while let Some(&f) = self.transit.front() {
+            if !self.dispatch(ctx, f) {
+                break;
+            }
+            self.transit.pop_front();
+            self.forwarded += 1;
+        }
+        while self.sent < self.to_send {
+            let mut dst = self.rng.clone().gen_range((self.nodes - 1) as u64) as u32;
+            if dst >= self.node {
+                dst += 1;
+            }
+            let f = Flit::new(self.sent, self.node, dst, ctx.cycle);
+            if !self.dispatch(ctx, f) {
+                break;
+            }
+            // Committed: advance the real rng the same way.
+            self.rng.gen_range((self.nodes - 1) as u64);
+            self.sent += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.sent);
+        h.write_u64(self.received);
+        h.write_u64(self.forwarded);
+        h.write_u64(self.latency_sum);
+        h.write_u64(self.transit.len() as u64);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.sent >= self.to_send && self.transit.is_empty()
+    }
+
+    fn stats(&self, out: &mut crate::stats::StatsMap) {
+        out.add("tree.sent", self.sent);
+        out.add("tree.forwarded", self.forwarded);
+        out.add("tree.latency_sum", self.latency_sum);
+    }
+}
+
+struct TreeFabricComp {
+    level: u32,
+    index: u32,
+    fanout: u32,
+    depth: u32,
+    nodes: u32,
+    packets: u64,
+    seed: u64,
+    capacity: usize,
+    delivered: crate::stats::counters::CounterId,
+}
+
+impl TreeFabricComp {
+    /// Level-order (heap) id of this node — equals the placement order of
+    /// `Wire::tree_of`.
+    fn node_id(&self) -> u32 {
+        let mut offset = 0;
+        for l in 0..self.level {
+            offset += self.fanout.pow(l);
+        }
+        offset + self.index
+    }
+
+    fn is_root(&self) -> bool {
+        self.level == 0
+    }
+
+    fn is_leaf(&self) -> bool {
+        self.level + 1 == self.depth
+    }
+
+    fn ifaces(&self) -> Vec<IfaceSpec> {
+        let cfg = PortCfg::new(self.capacity, 1);
+        let mut v = Vec::new();
+        if !self.is_root() {
+            v.push(IfaceSpec::new("up", cfg).of::<Flit>());
+        }
+        if !self.is_leaf() {
+            for &d in &crate::engine::wire::DOWN_NAMES[..self.fanout as usize] {
+                v.push(IfaceSpec::new(d, cfg).of::<Flit>());
+            }
+        }
+        v
+    }
+}
+
+impl Component for TreeFabricComp {
+    fn name(&self) -> String {
+        format!("tree{}_{}", self.level, self.index)
+    }
+
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        self.ifaces()
+    }
+
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        self.ifaces()
+    }
+
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+        let node = self.node_id();
+        let up = (!self.is_root()).then(|| (ports.input("up"), ports.output("up")));
+        let down = if self.is_leaf() {
+            Vec::new()
+        } else {
+            crate::engine::wire::DOWN_NAMES[..self.fanout as usize]
+                .iter()
+                .map(|&d| (ports.input(d), ports.output(d)))
+                .collect()
+        };
+        Box::new(TreeFabricNode {
+            up,
+            down,
+            node,
+            nodes: self.nodes,
+            fanout: self.fanout,
+            to_send: self.packets,
+            sent: 0,
+            received: 0,
+            forwarded: 0,
+            transit: std::collections::VecDeque::new(),
+            latency_sum: 0,
+            delivered: self.delivered,
+            rng: Rng::from_seed_stream(self.seed, node as u64),
+        })
+    }
+}
+
+struct TreeFabric;
+
+impl Scenario for TreeFabric {
+    fn name(&self) -> &'static str {
+        "tree"
+    }
+
+    fn summary(&self) -> &'static str {
+        "fan-out tree fabric, uniform random traffic (typed Wire::tree_of)"
+    }
+
+    fn keys(&self) -> &'static [(&'static str, &'static str)] {
+        &[
+            ("fanout", "children per node (default 2, max 8)"),
+            ("depth", "tree levels incl. the root (default 3)"),
+            ("packets", "packets injected per node (default 32)"),
+            ("link-capacity", "per-hop link queue depth (default 4)"),
+            ("seed", "destination-stream seed (default 0x7EE)"),
+            ("cycles / max-cycles", "stop overrides (default: all delivered, cap 500k)"),
+        ]
+    }
+
+    fn build(&self, cfg: &Config) -> Result<(Model, Stop), String> {
+        let fanout = cfg.get_u64("fanout", 2)? as u32;
+        let depth = cfg.get_u64("depth", 3)? as u32;
+        if fanout < 1 || fanout as usize > crate::engine::wire::DOWN_NAMES.len() {
+            return Err(format!(
+                "tree fanout must be 1..={}, got {fanout}",
+                crate::engine::wire::DOWN_NAMES.len()
+            ));
+        }
+        if depth < 1 {
+            return Err("tree depth must be >= 1".to_string());
+        }
+        const MAX_TREE_NODES: u32 = 1 << 20;
+        let mut nodes: u32 = 0;
+        for l in 0..depth {
+            nodes = nodes
+                .checked_add(
+                    fanout
+                        .checked_pow(l)
+                        .ok_or_else(|| format!("tree fanout={fanout} depth={depth} overflows"))?,
+                )
+                .ok_or_else(|| format!("tree fanout={fanout} depth={depth} overflows"))?;
+            if nodes > MAX_TREE_NODES {
+                return Err(format!(
+                    "tree fanout={fanout} depth={depth} exceeds {MAX_TREE_NODES} nodes"
+                ));
+            }
+        }
+        if nodes < 2 {
+            return Err(format!(
+                "tree needs at least 2 nodes to move traffic \
+                 (fanout={fanout}, depth={depth} gives {nodes})"
+            ));
+        }
+        let packets = cfg.get_u64("packets", 32)?;
+        let capacity = cfg.get_usize("link-capacity", 4)?.max(1);
+        let seed = cfg.get_u64("seed", 0x7EE)?;
+        let mut wire = Wire::new();
+        let delivered = wire.counter("tree.delivered");
+        wire.tree_of(fanout, depth, |level, index| TreeFabricComp {
+            level,
+            index,
+            fanout,
+            depth,
+            nodes,
+            packets,
+            seed,
+            capacity,
+            delivered,
+        });
+        let model = wire.build()?;
+        let stop = stop_from(
+            cfg,
+            Stop::CounterAtLeast {
+                counter: delivered,
+                target: nodes as u64 * packets,
+                max_cycles: cfg.get_u64("max-cycles", 500_000)?,
+            },
+        )?;
+        Ok((model, stop))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1035,7 +1340,9 @@ mod tests {
     fn registry_finds_names_and_aliases() {
         assert_eq!(
             names(),
-            vec!["pipeline", "cpu-light", "cpu-ooo", "fat-tree", "mesh", "ring", "torus"]
+            vec![
+                "pipeline", "cpu-light", "cpu-ooo", "fat-tree", "mesh", "ring", "torus", "tree"
+            ]
         );
         assert_eq!(find("cpu-system").unwrap().name(), "cpu-light");
         assert_eq!(find("datacenter").unwrap().name(), "fat-tree");
@@ -1139,6 +1446,52 @@ mod tests {
             "a 2-way torus split must cut some links"
         );
         assert!(ladder.to_json().contains("\"cross_cluster_ports\""));
+    }
+
+    #[test]
+    fn tree_scenario_delivers_everything_and_routes_multi_hop() {
+        use crate::sched::PartitionStrategy;
+        let mut cfg = Config::new();
+        cfg.set("fanout", 2);
+        cfg.set("depth", 3);
+        cfg.set("packets", 8);
+        let serial = Sim::scenario("tree", &cfg)
+            .unwrap()
+            .fingerprinted()
+            .run()
+            .unwrap();
+        // 7 nodes x 8 packets, all delivered; leaf-to-leaf traffic must
+        // transit intermediate nodes.
+        assert_eq!(serial.stats.counters.get("tree.delivered"), 56);
+        assert!(serial.stats.counters.get("tree.forwarded") > 0, "multi-hop");
+        assert!(serial.stats.cycles < 500_000, "must drain, not hit the cap");
+        let ladder = Sim::scenario("tree", &cfg)
+            .unwrap()
+            .workers(2)
+            .strategy(PartitionStrategy::CostLocality)
+            .fingerprinted()
+            .engine(Engine::Ladder)
+            .run()
+            .unwrap();
+        assert_eq!(ladder.fingerprint(), serial.fingerprint());
+        assert_eq!(ladder.stats.cycles, serial.stats.cycles);
+        assert!(
+            ladder.stats.cross_cluster_ports > 0,
+            "a 2-way tree split must cut some links"
+        );
+    }
+
+    #[test]
+    fn tree_scenario_rejects_degenerate_shapes() {
+        for (fanout, depth) in [("0", "3"), ("9", "3"), ("2", "0"), ("1", "1"), ("4", "1")] {
+            let mut cfg = Config::new();
+            cfg.set("fanout", fanout);
+            cfg.set("depth", depth);
+            assert!(
+                find("tree").unwrap().build(&cfg).is_err(),
+                "fanout={fanout} depth={depth} must be rejected"
+            );
+        }
     }
 
     #[test]

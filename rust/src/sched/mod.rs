@@ -12,6 +12,6 @@
 pub mod partition;
 
 pub use partition::{
-    cross_cluster_ports, partition, partition_cost_locality, partition_with_costs,
-    PartitionStrategy,
+    cross_cluster_ports, partition, partition_cost_locality, partition_cost_locality_with,
+    partition_with_costs, LocalityRefine, PartitionStrategy,
 };

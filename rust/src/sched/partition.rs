@@ -1,6 +1,6 @@
 //! Unit→cluster partitioning for the two-level scheduler.
 
-use crate::engine::Model;
+use crate::engine::{Model, Topology};
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
 
@@ -154,9 +154,54 @@ pub fn partition_with_costs(clusters: usize, costs: &[u64]) -> Vec<Vec<u32>> {
     p
 }
 
+/// Which refinement runs after the greedy streaming placement of
+/// [`partition_cost_locality_with`]. All three are deterministic and
+/// respect the same per-cluster cost cap; they differ in how hard they
+/// chase the weighted-cut objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LocalityRefine {
+    /// Greedy streaming placement only (the baseline the refinements are
+    /// measured against).
+    Greedy,
+    /// One ascending-id sweep of strictly-improving single moves (the
+    /// pre-KL behaviour, kept as a comparison point).
+    OnePass,
+    /// Bounded Kernighan–Lin: repeated passes of gain-ordered tentative
+    /// moves with best-prefix rollback (the default). Falls back to the
+    /// one-pass sweep past `KL_MAX_UNITS` units, where KL's quadratic
+    /// move selection would stall the repartitioner's barrier window.
+    KernighanLin,
+}
+
 /// Locality-aware cost-balanced partitioning: greedy streaming placement
-/// over the build-time weighted topology, followed by one deterministic
-/// refinement pass.
+/// over the build-time weighted topology, refined by a bounded
+/// Kernighan–Lin pass ([`LocalityRefine::KernighanLin`]).
+///
+/// Compared to [`partition_with_costs`] (pure LPT, edge-blind), this
+/// trades a bounded amount of load balance for strictly less
+/// cross-cluster traffic on structured topologies — the objective the
+/// ROADMAP names for weighing cross-cluster ports in LPT.
+pub fn partition_cost_locality(model: &Model, clusters: usize, costs: &[u64]) -> Vec<Vec<u32>> {
+    partition_cost_locality_with(
+        &model.topology(),
+        clusters,
+        costs,
+        LocalityRefine::KernighanLin,
+    )
+}
+
+/// [`partition_cost_locality`] over an already-extracted topology — the
+/// mid-run repartitioner caches the (static) edge list once and replans
+/// from it at every barrier decision without re-walking the model.
+pub(crate) fn partition_cost_locality_topo(
+    topo: &Topology,
+    clusters: usize,
+    costs: &[u64],
+) -> Vec<Vec<u32>> {
+    partition_cost_locality_with(topo, clusters, costs, LocalityRefine::KernighanLin)
+}
+
+/// The full locality partitioner with an explicit refinement selector.
 ///
 /// Units are visited in BFS order over the port graph (lowest-id seeds,
 /// neighbours ascending — the order that makes already-placed neighbours
@@ -164,25 +209,13 @@ pub fn partition_with_costs(clusters: usize, costs: &[u64]) -> Vec<Vec<u32>> {
 /// the most edge weight to it, among clusters whose load would stay under
 /// `total/k` plus ~6% slack; with no feasible cluster it falls back to the
 /// least-loaded one, so the result is always total and near-balanced.
-/// A final pass re-scores every unit (ascending id) and moves it when a
-/// strictly higher-affinity cluster has room — each move strictly lowers
-/// the weighted cut, so one pass suffices and determinism is preserved.
-///
-/// Compared to [`partition_with_costs`] (pure LPT, edge-blind), this
-/// trades a bounded amount of load balance for strictly less
-/// cross-cluster traffic on structured topologies — the objective the
-/// ROADMAP names for weighing cross-cluster ports in LPT.
-pub fn partition_cost_locality(model: &Model, clusters: usize, costs: &[u64]) -> Vec<Vec<u32>> {
-    partition_cost_locality_topo(&model.topology(), clusters, costs)
-}
-
-/// [`partition_cost_locality`] over an already-extracted topology — the
-/// mid-run repartitioner caches the (static) edge list once and replans
-/// from it at every barrier decision without re-walking the model.
-pub(crate) fn partition_cost_locality_topo(
-    topo: &crate::engine::Topology,
+/// The selected [`LocalityRefine`] then reduces the weighted cut without
+/// ever worsening it or breaking the cap.
+pub fn partition_cost_locality_with(
+    topo: &Topology,
     clusters: usize,
     costs: &[u64],
+    refine: LocalityRefine,
 ) -> Vec<Vec<u32>> {
     let n = costs.len();
     let k = clusters.max(1).min(n.max(1));
@@ -257,8 +290,47 @@ pub(crate) fn partition_cost_locality_topo(
         assign[u as usize] = c;
         load[c] += cost(u as usize);
     }
-    // Refinement: move a unit to a strictly higher-affinity cluster with
-    // room. Each move strictly reduces the weighted cut.
+    match refine {
+        LocalityRefine::Greedy => {}
+        LocalityRefine::OnePass => one_pass_refine(&adj, costs, &mut assign, &mut load, cap, k),
+        LocalityRefine::KernighanLin if n <= KL_MAX_UNITS => {
+            kl_refine(&adj, costs, &mut assign, &mut load, cap, k)
+        }
+        LocalityRefine::KernighanLin => {
+            // KL's move selection is Θ(n²·(deg+k)) per pass — fine for the
+            // few-hundred-unit systems it was built for, an effective hang
+            // inside the repartitioner's barrier window on huge fabrics.
+            // Past the bound, the linear one-pass sweep stands in.
+            one_pass_refine(&adj, costs, &mut assign, &mut load, cap, k);
+        }
+    }
+    let mut p = vec![Vec::new(); k];
+    for (u, &c) in assign.iter().enumerate() {
+        p[c].push(u as u32);
+    }
+    p
+}
+
+/// Unit-count bound above which [`LocalityRefine::KernighanLin`] falls
+/// back to the linear one-pass sweep: KL's gain selection is
+/// Θ(n²·(deg+k)) per pass, which is sub-millisecond at this size but an
+/// effective hang inside the mid-run repartitioner's exclusive barrier
+/// window on million-unit fabrics.
+const KL_MAX_UNITS: usize = 1024;
+
+/// One ascending-id sweep: move a unit to a strictly higher-affinity
+/// cluster with room. Each move strictly reduces the weighted cut, so a
+/// single sweep terminates and never worsens the greedy placement.
+fn one_pass_refine(
+    adj: &[Vec<(u32, u64)>],
+    costs: &[u64],
+    assign: &mut [usize],
+    load: &mut [u64],
+    cap: u64,
+    k: usize,
+) {
+    let n = assign.len();
+    let cost = |u: usize| costs[u].max(1);
     for u in 0..n {
         let cur = assign[u];
         let mut aff = vec![0u64; k];
@@ -280,11 +352,104 @@ pub(crate) fn partition_cost_locality_topo(
             assign[u] = best;
         }
     }
-    let mut p = vec![Vec::new(); k];
-    for (u, &c) in assign.iter().enumerate() {
-        p[c].push(u as u32);
+}
+
+/// Bounded Kernighan–Lin refinement: repeated passes of gain-ordered
+/// tentative single-unit moves with best-prefix rollback.
+///
+/// Each pass tentatively moves every unit at most once, always taking the
+/// highest-gain feasible move over all (unlocked unit, destination)
+/// pairs, where gain is the weighted affinity to the destination minus
+/// the affinity to the unit's current cluster. Negative-gain moves are
+/// allowed — that is the hill-climbing that lets KL escape the local
+/// optimum a single strictly-improving sweep gets stuck in. The pass
+/// records the cumulative gain after every move; at pass end, moves past
+/// the best strictly-positive prefix are rolled back, so a pass can never
+/// increase the cut. Passes repeat until one yields no strict improvement
+/// (or `MAX_KL_PASSES`, a safety bound — each kept pass strictly reduces
+/// the cut, so termination is guaranteed regardless).
+///
+/// Feasibility: a move must keep its destination at or under `cap`, so
+/// the greedy phase's cost balance is preserved (a cluster the fallback
+/// path overfilled can only lose load — moves into it are barred).
+/// Determinism: move selection iterates units and clusters in ascending
+/// order and takes the first of equal gains.
+fn kl_refine(
+    adj: &[Vec<(u32, u64)>],
+    costs: &[u64],
+    assign: &mut [usize],
+    load: &mut [u64],
+    cap: u64,
+    k: usize,
+) {
+    const MAX_KL_PASSES: usize = 4;
+    let n = assign.len();
+    if k <= 1 || n == 0 {
+        return;
     }
-    p
+    let cost = |u: usize| costs[u].max(1);
+    let mut aff = vec![0u64; k];
+    for _pass in 0..MAX_KL_PASSES {
+        let mut locked = vec![false; n];
+        // The tentative move log: (unit, source cluster, destination).
+        let mut trail: Vec<(usize, usize, usize)> = Vec::new();
+        let mut cum: i64 = 0;
+        let mut best_cum: i64 = 0;
+        let mut best_len: usize = 0;
+        loop {
+            // Highest-gain feasible move over all unlocked units
+            // (first-wins on ties; ascending unit/cluster order).
+            let mut best: Option<(i64, usize, usize)> = None;
+            for u in 0..n {
+                if locked[u] {
+                    continue;
+                }
+                let cu = assign[u];
+                for a in aff.iter_mut() {
+                    *a = 0;
+                }
+                for &(v, w) in &adj[u] {
+                    aff[assign[v as usize]] += w;
+                }
+                for (c, &ac) in aff.iter().enumerate() {
+                    if c == cu || load[c] + cost(u) > cap {
+                        continue;
+                    }
+                    let gain = ac as i64 - aff[cu] as i64;
+                    let better = match best {
+                        None => true,
+                        Some((bg, _, _)) => gain > bg,
+                    };
+                    if better {
+                        best = Some((gain, u, c));
+                    }
+                }
+            }
+            let Some((gain, u, dst)) = best else { break };
+            let from = assign[u];
+            assign[u] = dst;
+            load[from] -= cost(u);
+            load[dst] += cost(u);
+            locked[u] = true;
+            trail.push((u, from, dst));
+            cum += gain;
+            if cum > best_cum {
+                best_cum = cum;
+                best_len = trail.len();
+            }
+        }
+        // Roll back everything past the best prefix (the whole trail when
+        // no prefix strictly improved).
+        for &(u, from, dst) in trail[best_len..].iter().rev() {
+            let c = cost(u);
+            load[dst] -= c;
+            load[from] += c;
+            assign[u] = from;
+        }
+        if best_cum <= 0 {
+            break;
+        }
+    }
 }
 
 /// BFS-fill: pick the lowest-numbered unassigned unit, grow its connected
@@ -526,6 +691,134 @@ mod tests {
         );
         // 64 directed links; an optimal 4-way split leaves 32 cross.
         assert!(x_loc <= 44, "locality must find real structure: {x_loc}");
+    }
+
+    /// Cost cap the locality partitioner enforces (mirrors the ~6% slack
+    /// formula in `partition_cost_locality_with`).
+    fn cost_cap(costs: &[u64], k: usize) -> u64 {
+        let total: u64 = costs.iter().map(|&c| c.max(1)).sum();
+        let target = total / k as u64;
+        target + target / 16 + 1
+    }
+
+    fn loads_of(p: &[Vec<u32>], costs: &[u64]) -> Vec<u64> {
+        p.iter()
+            .map(|c| c.iter().map(|&u| costs[u as usize].max(1)).sum())
+            .collect()
+    }
+
+    fn assign_of(p: &[Vec<u32>], n: usize) -> Vec<u32> {
+        let mut a = vec![0u32; n];
+        for (c, units) in p.iter().enumerate() {
+            for &u in units {
+                a[u as usize] = c as u32;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn kl_never_worse_than_greedy_and_respects_cap_on_random_topologies() {
+        // Property over seeded random weighted graphs: the KL refinement
+        // must never increase the weighted cut of the greedy placement it
+        // starts from (best-prefix rollback), and must never push a
+        // cluster past the ~6% cost cap the greedy pass satisfied.
+        for seed in 0..12u64 {
+            let mut rng = Rng::from_seed_stream(seed, 0x6B1);
+            let n = 12 + rng.gen_range(24) as usize;
+            // Ring backbone keeps it connected; extra edges randomize.
+            let mut edges: Vec<(u32, u32, u64)> = (0..n)
+                .map(|i| (i as u32, ((i + 1) % n) as u32, 1 + rng.gen_range(8)))
+                .collect();
+            for _ in 0..n {
+                let a = rng.gen_range(n as u64) as u32;
+                let mut b = rng.gen_range(n as u64) as u32;
+                if a == b {
+                    b = (b + 1) % n as u32;
+                }
+                edges.push((a, b, 1 + rng.gen_range(8)));
+            }
+            let topo = Topology { edges };
+            // Comparable costs: the cap is satisfiable, so the property
+            // is about the refinement, not the fallback path.
+            let costs: Vec<u64> = (0..n).map(|_| 50 + rng.gen_range(100)).collect();
+            for k in [2usize, 3, 4] {
+                let greedy =
+                    partition_cost_locality_with(&topo, k, &costs, LocalityRefine::Greedy);
+                let kl = partition_cost_locality_with(
+                    &topo,
+                    k,
+                    &costs,
+                    LocalityRefine::KernighanLin,
+                );
+                let cut_g = topo.cross_weight(&assign_of(&greedy, n));
+                let cut_kl = topo.cross_weight(&assign_of(&kl, n));
+                assert!(
+                    cut_kl <= cut_g,
+                    "seed={seed} k={k}: KL ({cut_kl}) worse than greedy ({cut_g})"
+                );
+                let cap = cost_cap(&costs, k);
+                let greedy_max = *loads_of(&greedy, &costs).iter().max().unwrap();
+                let kl_max = *loads_of(&kl, &costs).iter().max().unwrap();
+                assert!(
+                    kl_max <= cap.max(greedy_max),
+                    "seed={seed} k={k}: KL load {kl_max} breaks cap {cap} \
+                     (greedy max {greedy_max})"
+                );
+                // Total and deterministic, like every strategy here.
+                let placed: usize = kl.iter().map(|c| c.len()).sum();
+                assert_eq!(placed, n);
+                let again = partition_cost_locality_with(
+                    &topo,
+                    k,
+                    &costs,
+                    LocalityRefine::KernighanLin,
+                );
+                assert_eq!(kl, again, "seed={seed} k={k}: non-deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn kl_strictly_beats_one_pass_on_tree_and_torus() {
+        // Deterministic pinned cases where the single strictly-improving
+        // sweep is stuck in a local optimum and the KL hill-climb is not.
+        // Tree fabric: the real `tree` scenario's recorded topology
+        // (fanout 4, depth 3 — 21 nodes), skewed-but-comparable costs.
+        let mut cfg = crate::util::config::Config::new();
+        cfg.set("fanout", 4);
+        cfg.set("depth", 3);
+        let (model, _stop) = crate::scenario::find("tree").unwrap().build(&cfg).unwrap();
+        let tree_topo = model.topology();
+        let n = model.num_units();
+        assert_eq!(n, 21);
+        let costs: Vec<u64> = (0..n as u64).map(|i| 100 + (i * 7919) % 97).collect();
+        let one = partition_cost_locality_with(&tree_topo, 3, &costs, LocalityRefine::OnePass);
+        let kl =
+            partition_cost_locality_with(&tree_topo, 3, &costs, LocalityRefine::KernighanLin);
+        let cut_one = tree_topo.cross_weight(&assign_of(&one, n));
+        let cut_kl = tree_topo.cross_weight(&assign_of(&kl, n));
+        assert!(
+            cut_kl < cut_one,
+            "tree: KL ({cut_kl}) must strictly beat one-pass ({cut_one})"
+        );
+        assert!(cut_kl <= 20, "tree: KL must find real structure: {cut_kl}");
+
+        // Torus fabric: 6x6, 4 clusters.
+        let m = torus(6, 6);
+        let topo = m.topology();
+        let costs: Vec<u64> = (0..36u64).map(|i| 100 + (i * 7919) % 97).collect();
+        let one = partition_cost_locality_with(&topo, 4, &costs, LocalityRefine::OnePass);
+        let kl = partition_cost_locality_with(&topo, 4, &costs, LocalityRefine::KernighanLin);
+        let cut_one = topo.cross_weight(&assign_of(&one, 36));
+        let cut_kl = topo.cross_weight(&assign_of(&kl, 36));
+        assert!(
+            cut_kl < cut_one,
+            "torus: KL ({cut_kl}) must strictly beat one-pass ({cut_one})"
+        );
+        // Both refinements must respect the cost cap on these inputs.
+        let cap = cost_cap(&costs, 4);
+        assert!(*loads_of(&kl, &costs).iter().max().unwrap() <= cap);
     }
 
     #[test]

@@ -33,8 +33,16 @@ pub struct RepartEpoch {
 pub struct RepartStats {
     /// Barrier-side decisions that actually migrated units.
     pub events: u64,
-    /// Barrier-side decisions evaluated (including no-ops).
+    /// Full planner runs (LPT / locality replans) evaluated, including
+    /// ones the migration gate rejected. Under a fixed-cadence policy
+    /// every cadence hit is a check; under the drift-adaptive policy only
+    /// probes whose smoothed drift crossed the threshold are — the gap
+    /// between `probes` and `checks` is the planning work the adaptive
+    /// cadence avoided.
     pub checks: u64,
+    /// Cheap cadence hits: the O(units) cost snapshot + imbalance probe
+    /// that runs at every decision point of either policy.
+    pub probes: u64,
     /// One record per migration, in cycle order.
     pub epochs: Vec<RepartEpoch>,
     /// The unit→cluster mapping the run *ended* with; empty when no
@@ -70,9 +78,10 @@ impl RepartStats {
             .collect();
         format!(
             "\"repartition_events\": {}, \"repartition_checks\": {}, \
-             \"repartition_epochs\": [{}]",
+             \"repartition_probes\": {}, \"repartition_epochs\": [{}]",
             self.events,
             self.checks,
+            self.probes,
             epochs.join(", ")
         )
     }

@@ -1,0 +1,432 @@
+//! Shared fixtures for the integration suites: sleep-capable model
+//! builders, the serial fingerprint reference runner, and the cartesian
+//! serial-vs-ladder determinism matrix that `determinism.rs`,
+//! `repartition.rs`, and `wakeup.rs` all drive.
+//!
+//! This module is compiled into each test binary via `mod common;`; the
+//! binaries use different subsets of it, hence the file-level dead_code
+//! allowance.
+#![allow(dead_code)]
+
+use scalesim::cpu::isa::{OpClass, TraceOp, NO_REG};
+use scalesim::cpu::Trace;
+use scalesim::engine::{
+    Ctx, Engine, Fnv, In, Model, ModelBuilder, Msg, Out, Payload, PortCfg, RepartitionPolicy,
+    RunOpts, SchedMode, Sim, Stop, Transit, Unit,
+};
+use scalesim::sched::PartitionStrategy;
+use scalesim::stats::{RunStats, StatsMap};
+use scalesim::sync::SyncMethod;
+use scalesim::systems::{build_cpu_system, CpuSystemCfg};
+
+// ---------------------------------------------------------------------
+// Sleep-capable pipeline (the wake-protocol workout model)
+// ---------------------------------------------------------------------
+
+/// The pipeline's typed payload (sequence + accumulator), implementing
+/// `Payload` outside the crate — the extension point the wiring layer
+/// promises substrates.
+#[derive(Debug, Clone, Copy)]
+pub struct PM {
+    pub seq: u64,
+    pub acc: u64,
+}
+
+impl Payload for PM {
+    fn encode(self) -> Msg {
+        Msg::with(1, self.seq, self.acc, 0)
+    }
+
+    fn decode(m: &Msg) -> Self {
+        PM { seq: m.a, acc: m.b }
+    }
+}
+
+/// A pipeline stage that honours the sleep contract: the source is idle
+/// once drained; mids and the sink are purely input-driven.
+pub struct PipeStage {
+    pub inp: Option<In<PM>>,
+    pub out: Option<Out<PM>>,
+    pub seq: u64,
+    pub limit: u64,
+    pub received: u64,
+    pub acc: u64,
+}
+
+impl Unit for PipeStage {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        match (self.inp, self.out) {
+            (None, Some(out)) => {
+                if self.seq < self.limit && out.vacant(ctx) {
+                    out.send(ctx, PM { seq: self.seq, acc: 0 }).unwrap();
+                    self.seq += 1;
+                }
+            }
+            (Some(inp), Some(out)) => {
+                while out.vacant(ctx) {
+                    let Some(mut m) = inp.recv(ctx) else { break };
+                    m.acc = m.acc.wrapping_mul(31).wrapping_add(m.seq);
+                    out.send(ctx, m).unwrap();
+                }
+            }
+            (Some(inp), None) => {
+                while let Some(m) = inp.recv(ctx) {
+                    assert_eq!(m.seq, self.received, "FIFO broken");
+                    self.received += 1;
+                    self.acc = self.acc.wrapping_mul(31).wrapping_add(m.acc);
+                }
+            }
+            (None, None) => {}
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.seq);
+        h.write_u64(self.received);
+        h.write_u64(self.acc);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.seq >= self.limit
+    }
+}
+
+/// Linear pipeline with mixed port delays (1,2,3,1,…) so in-flight
+/// messages regularly outlive a receiver's last tick.
+pub fn sleepy_pipeline(n: usize, msgs: u64) -> Model {
+    let mut mb = ModelBuilder::new();
+    let ids: Vec<u32> = (0..n).map(|i| mb.reserve_unit(&format!("p{i}"))).collect();
+    let mut ports = Vec::new();
+    for i in 0..n - 1 {
+        let delay = 1 + (i as u64 % 3);
+        ports.push(mb.link::<PM>(ids[i], ids[i + 1], PortCfg::new(2, delay)));
+    }
+    for i in 0..n {
+        let unit = PipeStage {
+            inp: if i == 0 { None } else { Some(ports[i - 1].1) },
+            out: if i == n - 1 { None } else { Some(ports[i].0) },
+            seq: 0,
+            limit: if i == 0 { msgs } else { 0 },
+            received: 0,
+            acc: 0,
+        };
+        mb.install(ids[i], Box::new(unit));
+    }
+    mb.build().unwrap()
+}
+
+// ---------------------------------------------------------------------
+// CPU system (cores + coherent memory + NoC) at test scale
+// ---------------------------------------------------------------------
+
+/// Deterministic little traces mixing loads, ALU ops, and (optionally)
+/// stores — enough to light up the L1/L2/directory/NoC path.
+pub fn cpu_traces(cores: u64, ops_per_core: u64, with_stores: bool) -> Vec<Trace> {
+    (0..cores)
+        .map(|c| Trace {
+            ops: (0..ops_per_core)
+                .map(|i| {
+                    if i % 3 == 0 {
+                        TraceOp::new(
+                            OpClass::Load,
+                            1,
+                            2,
+                            NO_REG,
+                            0x1000 + ((c * 64 + i * 8) % 4096),
+                            0,
+                            false,
+                        )
+                    } else if with_stores && i % 7 == 0 {
+                        TraceOp::new(OpClass::Store, NO_REG, 1, 2, 0x8000 + (i % 512), 0, false)
+                    } else {
+                        TraceOp::new(OpClass::Alu, 1, 1, 2, 0, 0, false)
+                    }
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+/// The light-core CPU system over [`cpu_traces`], with its all-cores-done
+/// stop condition.
+pub fn cpu_system(cores: u64, with_stores: bool) -> (Model, Stop) {
+    let cfg = CpuSystemCfg::default();
+    let (model, h) = build_cpu_system(cpu_traces(cores, 60, with_stores), &cfg);
+    let stop = Stop::CounterAtLeast {
+        counter: h.cores_done,
+        target: cores,
+        max_cycles: 100_000,
+    };
+    (model, stop)
+}
+
+// ---------------------------------------------------------------------
+// Phase-flip cost model (the repartitioning stress workload)
+// ---------------------------------------------------------------------
+
+/// A unit whose work cost is a function of the cycle: heavy (a long
+/// deterministic mix loop) on one side of `flip_at`, nearly free on the
+/// other. State is a pure function of (id, cycles executed), so any
+/// engine, partition, or migration schedule must produce the same
+/// fingerprint — and a migration that ever skipped or repeated a tick
+/// would be caught.
+pub struct PhasedUnit {
+    pub id: u64,
+    pub heavy_before_flip: bool,
+    pub flip_at: u64,
+    pub acc: u64,
+}
+
+impl Unit for PhasedUnit {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        let heavy = (ctx.cycle < self.flip_at) == self.heavy_before_flip;
+        if heavy {
+            let mut x = self.acc ^ self.id ^ ctx.cycle;
+            for _ in 0..2_000 {
+                x = x.wrapping_mul(0x100000001B3).wrapping_add(1);
+            }
+            self.acc = self.acc.wrapping_add(x);
+        } else {
+            self.acc = self.acc.wrapping_add(ctx.cycle ^ self.id);
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.acc);
+    }
+
+    fn always_active(&self) -> bool {
+        true // cost model runs every cycle; never park
+    }
+}
+
+/// 8 independent units: 0–3 heavy before the flip, 4–7 heavy after.
+pub fn phased_model(flip_at: u64) -> Model {
+    let mut mb = ModelBuilder::new();
+    for i in 0..8u64 {
+        mb.add_unit(
+            &format!("ph{i}"),
+            Box::new(PhasedUnit {
+                id: i,
+                heavy_before_flip: i < 4,
+                flip_at,
+                acc: 0,
+            }),
+        );
+    }
+    mb.build().unwrap()
+}
+
+/// The partition every phased-model stress starts from: all heavy units
+/// on cluster 0 — massively imbalanced, so the first decision must see a
+/// ~1000x skew (far beyond any timing noise).
+pub fn phased_start_partition() -> Vec<Vec<u32>> {
+    vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]
+}
+
+// ---------------------------------------------------------------------
+// Burst/relay/sink units (the lost-wakeup hazard workload)
+// ---------------------------------------------------------------------
+
+/// Sends one message at each scheduled cycle (retrying under back
+/// pressure). Not idle until the whole schedule has been sent, so it
+/// stays awake through the gaps — the *sink* is the unit that parks.
+pub struct BurstSource {
+    pub out: Out<Transit>,
+    pub schedule: Vec<u64>,
+    pub next: usize,
+}
+
+impl Unit for BurstSource {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(&at) = self.schedule.get(self.next) {
+            if at > ctx.cycle || !self.out.vacant(ctx) {
+                break;
+            }
+            self.out
+                .send_msg(ctx, Msg::with(1, self.next as u64, 0, 0))
+                .unwrap();
+            self.next += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.next as u64);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.next >= self.schedule.len()
+    }
+}
+
+/// Input-driven relay: forwards everything, parks whenever quiet.
+pub struct Relay {
+    pub inp: In<Transit>,
+    pub out: Out<Transit>,
+}
+
+impl Unit for Relay {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while self.out.vacant(ctx) {
+            let Some(m) = self.inp.recv_msg(ctx) else { break };
+            self.out.send_msg(ctx, m).unwrap();
+        }
+    }
+}
+
+/// Input-driven sink; `is_idle` defaults to `true`, so it parks whenever
+/// its queue is empty — exactly the unit the lost-wakeup hazard targets.
+pub struct CountingSink {
+    pub inp: In<Transit>,
+    pub received: u64,
+}
+
+impl Unit for CountingSink {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(m) = self.inp.recv_msg(ctx) {
+            assert_eq!(m.a, self.received, "FIFO order broken");
+            self.received += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.received);
+    }
+
+    fn stats(&self, out: &mut StatsMap) {
+        out.add("sink.received", self.received);
+    }
+}
+
+/// Source → sink over one port with the given delay; bursts separated by
+/// gaps long enough for the sink to park in between.
+pub fn burst_model(delay: u64) -> Model {
+    let mut mb = ModelBuilder::new();
+    let src = mb.reserve_unit("src");
+    let snk = mb.reserve_unit("snk");
+    let (tx, rx) = mb.link::<Transit>(src, snk, PortCfg::new(2, delay));
+    mb.install(
+        src,
+        Box::new(BurstSource {
+            out: tx,
+            // Gaps of 10+ cycles: the sink drains, parks, and must be
+            // re-awoken by a delivery whose delay is still running.
+            schedule: vec![0, 1, 15, 16, 40, 70, 71, 72],
+            next: 0,
+        }),
+    );
+    mb.install(snk, Box::new(CountingSink { inp: rx, received: 0 }));
+    mb.build().unwrap()
+}
+
+/// Three-hop chain so wakes must propagate: src → relay → sink.
+pub fn chain_model(delay: u64) -> Model {
+    let mut mb = ModelBuilder::new();
+    let src = mb.reserve_unit("src");
+    let mid = mb.reserve_unit("mid");
+    let snk = mb.reserve_unit("snk");
+    let (tx0, rx0) = mb.link::<Transit>(src, mid, PortCfg::new(2, delay));
+    let (tx1, rx1) = mb.link::<Transit>(mid, snk, PortCfg::new(2, delay));
+    mb.install(
+        src,
+        Box::new(BurstSource {
+            out: tx0,
+            schedule: vec![0, 20, 21, 50],
+            next: 0,
+        }),
+    );
+    mb.install(mid, Box::new(Relay { inp: rx0, out: tx1 }));
+    mb.install(snk, Box::new(CountingSink { inp: rx1, received: 0 }));
+    mb.build().unwrap()
+}
+
+pub fn all_idle() -> Stop {
+    Stop::AllIdle {
+        check_every: 1,
+        max_cycles: 10_000,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The fingerprint runner and the determinism matrix
+// ---------------------------------------------------------------------
+
+/// Run the serial reference engine over a fresh `(model, stop)` pair and
+/// return its stats (fingerprint computed).
+pub fn serial_reference(build: impl FnOnce() -> (Model, Stop)) -> RunStats {
+    let (mut model, stop) = build();
+    model.run_serial(RunOpts::with_stop(stop).fingerprinted())
+}
+
+/// One cartesian determinism sweep: which sync methods, worker counts,
+/// partition strategies, scheduling modes, and repartition policies to
+/// cross. Every dimension defaults to a single baseline cell — name only
+/// the axes a test actually sweeps.
+pub struct MatrixSpec<'a> {
+    pub methods: &'a [SyncMethod],
+    pub workers: &'a [usize],
+    pub strategies: &'a [PartitionStrategy],
+    pub scheds: &'a [SchedMode],
+    pub repartition: &'a [RepartitionPolicy],
+}
+
+// Generic over the lifetime (not just 'static): the defaults are
+// promoted constants, and callers mix them with borrows of locals via
+// struct-update syntax.
+impl Default for MatrixSpec<'_> {
+    fn default() -> Self {
+        MatrixSpec {
+            methods: &[SyncMethod::CommonAtomic],
+            workers: &[2],
+            strategies: &[PartitionStrategy::Contiguous],
+            scheds: &[SchedMode::FullScan],
+            repartition: &[RepartitionPolicy::Off],
+        }
+    }
+}
+
+/// Run every cell of the matrix through the ladder engine on a fresh
+/// model and assert its fingerprint and cycle count match the serial
+/// reference — the paper's "result is agnostic to the order of
+/// execution" claim, which every scheduling feature in this repo must
+/// preserve.
+pub fn assert_ladder_matrix(
+    label: &str,
+    reference: &RunStats,
+    build: impl Fn() -> (Model, Stop),
+    spec: MatrixSpec<'_>,
+) {
+    for &method in spec.methods {
+        for &workers in spec.workers {
+            for &strat in spec.strategies {
+                for &sched in spec.scheds {
+                    for &repart in spec.repartition {
+                        let (model, stop) = build();
+                        let stats = Sim::from_model(model)
+                            .workers(workers)
+                            .strategy(strat)
+                            .sync(method)
+                            .sched(sched)
+                            .repartition(repart)
+                            .stop(stop)
+                            .fingerprinted()
+                            .engine(Engine::Ladder)
+                            .run()
+                            .expect("ladder run")
+                            .stats;
+                        let cell = format!(
+                            "{label}: method={} workers={workers} strat={} sched={} \
+                             repart={}",
+                            method.name(),
+                            strat.name(),
+                            sched.name(),
+                            repart.summary(),
+                        );
+                        assert_eq!(stats.fingerprint, reference.fingerprint, "{cell}");
+                        assert_eq!(stats.cycles, reference.cycles, "{cell}: cycles");
+                    }
+                }
+            }
+        }
+    }
+}

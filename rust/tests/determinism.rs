@@ -12,9 +12,12 @@
 //! the deterministic Rng over many random cases (seeds printed on
 //! failure).
 
+mod common;
+
+use common::{assert_ladder_matrix, cpu_system, serial_reference, sleepy_pipeline, MatrixSpec};
 use scalesim::engine::{
-    Ctx, Engine, Fnv, In, Model, ModelBuilder, Msg, Out, Payload, PortCfg, RepartitionPolicy,
-    RunOpts, SchedMode, Sim, Stop, Transit, Unit,
+    Ctx, Engine, Fnv, In, Model, ModelBuilder, Msg, Out, PortCfg, RepartitionPolicy, RunOpts,
+    SchedMode, Sim, Stop, Transit, Unit,
 };
 use scalesim::sched::PartitionStrategy;
 use scalesim::sync::SyncMethod;
@@ -273,109 +276,16 @@ fn causality_holds_for_all_port_configs() {
 // Sleep-capable determinism matrix (ISSUE 1): fingerprints must agree
 // across {serial full-scan, serial active-list, ladder × sync method ×
 // worker count × partition strategy × sched mode} on models whose units
-// genuinely park and re-arm.
+// genuinely park and re-arm. Model builders and the cartesian runner
+// live in `tests/common`.
 // ---------------------------------------------------------------------
-
-/// The pipeline's typed payload (sequence + accumulator), implementing
-/// `Payload` outside the crate — the extension point the wiring layer
-/// promises substrates.
-#[derive(Debug, Clone, Copy)]
-struct PM {
-    seq: u64,
-    acc: u64,
-}
-
-impl Payload for PM {
-    fn encode(self) -> Msg {
-        Msg::with(1, self.seq, self.acc, 0)
-    }
-
-    fn decode(m: &Msg) -> Self {
-        PM { seq: m.a, acc: m.b }
-    }
-}
-
-/// A pipeline stage that honours the sleep contract: the source is idle
-/// once drained; mids and the sink are purely input-driven.
-struct PipeStage {
-    inp: Option<In<PM>>,
-    out: Option<Out<PM>>,
-    seq: u64,
-    limit: u64,
-    received: u64,
-    acc: u64,
-}
-
-impl Unit for PipeStage {
-    fn work(&mut self, ctx: &mut Ctx<'_>) {
-        match (self.inp, self.out) {
-            (None, Some(out)) => {
-                if self.seq < self.limit && out.vacant(ctx) {
-                    out.send(ctx, PM { seq: self.seq, acc: 0 }).unwrap();
-                    self.seq += 1;
-                }
-            }
-            (Some(inp), Some(out)) => {
-                while out.vacant(ctx) {
-                    let Some(mut m) = inp.recv(ctx) else { break };
-                    m.acc = m.acc.wrapping_mul(31).wrapping_add(m.seq);
-                    out.send(ctx, m).unwrap();
-                }
-            }
-            (Some(inp), None) => {
-                while let Some(m) = inp.recv(ctx) {
-                    assert_eq!(m.seq, self.received, "FIFO broken");
-                    self.received += 1;
-                    self.acc = self.acc.wrapping_mul(31).wrapping_add(m.acc);
-                }
-            }
-            (None, None) => {}
-        }
-    }
-
-    fn state_hash(&self, h: &mut Fnv) {
-        h.write_u64(self.seq);
-        h.write_u64(self.received);
-        h.write_u64(self.acc);
-    }
-
-    fn is_idle(&self) -> bool {
-        self.seq >= self.limit
-    }
-}
-
-/// Linear pipeline with mixed port delays so in-flight messages regularly
-/// outlive a receiver's last tick.
-fn sleepy_pipeline(n: usize, msgs: u64) -> Model {
-    let mut mb = ModelBuilder::new();
-    let ids: Vec<u32> = (0..n).map(|i| mb.reserve_unit(&format!("p{i}"))).collect();
-    let mut ports = Vec::new();
-    for i in 0..n - 1 {
-        let delay = 1 + (i as u64 % 3); // delays 1,2,3,1,2,...
-        ports.push(mb.link::<PM>(ids[i], ids[i + 1], PortCfg::new(2, delay)));
-    }
-    for i in 0..n {
-        let unit = PipeStage {
-            inp: if i == 0 { None } else { Some(ports[i - 1].1) },
-            out: if i == n - 1 { None } else { Some(ports[i].0) },
-            seq: 0,
-            limit: if i == 0 { msgs } else { 0 },
-            received: 0,
-            acc: 0,
-        };
-        mb.install(ids[i], Box::new(unit));
-    }
-    mb.build().unwrap()
-}
 
 #[test]
 fn sleep_capable_pipeline_full_matrix() {
     let n = 8;
     let cycles = 400;
-    let reference = {
-        let mut m = sleepy_pipeline(n, 60);
-        m.run_serial(RunOpts::cycles(cycles).fingerprinted())
-    };
+    let build = || (sleepy_pipeline(n, 60), Stop::Cycles(cycles));
+    let reference = serial_reference(build);
     // Serial active-list against the full-scan reference.
     {
         let mut m = sleepy_pipeline(n, 60);
@@ -389,262 +299,138 @@ fn sleep_capable_pipeline_full_matrix() {
         );
     }
     // Every ladder combination, both scheduling modes.
-    for method in SyncMethod::ALL {
-        for workers in [1usize, 2, 4] {
-            for strat in [
+    assert_ladder_matrix(
+        "pipeline",
+        &reference,
+        build,
+        MatrixSpec {
+            methods: &SyncMethod::ALL,
+            workers: &[1, 2, 4],
+            strategies: &[
                 PartitionStrategy::RoundRobin,
                 PartitionStrategy::Random(0x55),
                 PartitionStrategy::Locality,
                 PartitionStrategy::Contiguous,
                 PartitionStrategy::CostBalanced,
                 PartitionStrategy::CostLocality,
-            ] {
-                for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
-                    let stats = Sim::from_model(sleepy_pipeline(n, 60))
-                        .workers(workers)
-                        .strategy(strat)
-                        .sync(method)
-                        .sched(sched)
-                        .cycles(cycles)
-                        .fingerprinted()
-                        .engine(Engine::Ladder)
-                        .run()
-                        .expect("ladder run")
-                        .stats;
-                    assert_eq!(
-                        stats.fingerprint,
-                        reference.fingerprint,
-                        "method={} workers={workers} strat={} sched={}",
-                        method.name(),
-                        strat.name(),
-                        sched.name()
-                    );
-                }
-            }
-        }
-    }
+            ],
+            scheds: &[SchedMode::FullScan, SchedMode::ActiveList],
+            ..Default::default()
+        },
+    );
 }
 
 #[test]
 fn sleep_capable_cpu_system_matrix() {
-    use scalesim::cpu::isa::{OpClass, TraceOp, NO_REG};
-    use scalesim::cpu::Trace;
-    use scalesim::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
-
-    let mk_traces = || {
-        (0..4u64)
-            .map(|c| Trace {
-                ops: (0..60u64)
-                    .map(|i| {
-                        if i % 3 == 0 {
-                            TraceOp::new(
-                                OpClass::Load,
-                                1,
-                                2,
-                                NO_REG,
-                                0x1000 + ((c * 64 + i * 8) % 4096),
-                                0,
-                                false,
-                            )
-                        } else if i % 7 == 0 {
-                            TraceOp::new(OpClass::Store, NO_REG, 1, 2, 0x8000 + (i % 512), 0, false)
-                        } else {
-                            TraceOp::new(OpClass::Alu, 1, 1, 2, 0, 0, false)
-                        }
-                    })
-                    .collect(),
-            })
-            .collect::<Vec<_>>()
-    };
-    let cfg = CpuSystemCfg::default();
-    let (mut serial, h) = build_cpu_system(mk_traces(), &cfg);
-    let stop = Stop::CounterAtLeast {
-        counter: h.cores_done,
-        target: 4,
-        max_cycles: 100_000,
-    };
-    let reference = serial.run_serial(RunOpts::with_stop(stop).fingerprinted());
+    let build = || cpu_system(4, true);
+    let reference = serial_reference(build);
     assert_eq!(reference.counters.get("cores_done"), 4);
 
     // Serial active-list.
     {
-        let (mut m, h) = build_cpu_system(mk_traces(), &cfg);
-        let stop = Stop::CounterAtLeast {
-            counter: h.cores_done,
-            target: 4,
-            max_cycles: 100_000,
-        };
+        let (mut m, stop) = build();
         let s = m.run_serial(RunOpts::with_stop(stop).fingerprinted().active_list());
         assert_eq!(s.fingerprint, reference.fingerprint, "serial active-list");
         assert_eq!(s.cycles, reference.cycles);
     }
     // Ladder sweep (reduced matrix: the pipeline test covers all four
     // methods; here the heavier model covers both atomics end-to-end).
-    for method in [SyncMethod::CommonAtomic, SyncMethod::Atomic] {
-        for workers in [2usize, 3] {
-            for strat in [
+    assert_ladder_matrix(
+        "cpu-system",
+        &reference,
+        build,
+        MatrixSpec {
+            methods: &[SyncMethod::CommonAtomic, SyncMethod::Atomic],
+            workers: &[2, 3],
+            strategies: &[
                 PartitionStrategy::Contiguous,
                 PartitionStrategy::CostLocality,
-            ] {
-                for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
-                    let (m, h) = build_cpu_system(mk_traces(), &cfg);
-                    let stop = Stop::CounterAtLeast {
-                        counter: h.cores_done,
-                        target: 4,
-                        max_cycles: 100_000,
-                    };
-                    let stats = Sim::from_model(m)
-                        .workers(workers)
-                        .strategy(strat)
-                        .sync(method)
-                        .sched(sched)
-                        .stop(stop)
-                        .fingerprinted()
-                        .engine(Engine::Ladder)
-                        .run()
-                        .expect("ladder run")
-                        .stats;
-                    assert_eq!(
-                        stats.fingerprint,
-                        reference.fingerprint,
-                        "method={} workers={workers} strat={} sched={}",
-                        method.name(),
-                        strat.name(),
-                        sched.name()
-                    );
-                    assert_eq!(stats.cycles, reference.cycles);
-                }
-            }
-        }
-    }
+            ],
+            scheds: &[SchedMode::FullScan, SchedMode::ActiveList],
+            ..Default::default()
+        },
+    );
 }
 
 // ---------------------------------------------------------------------
-// Adaptive-repartitioning determinism matrix (ISSUE 3): migration is a
+// Repartitioning determinism matrix (ISSUE 3 + ISSUE 5): migration is a
 // barrier-side data-structure swap, so fingerprints must be bit-identical
-// across {repartition off, N=16, N=256} × {1, 2, 4 workers} × both
+// across {off, fixed N=16/256, drift-adaptive} × worker counts × both
 // scheduling modes — regardless of when (or whether) the timing-driven
-// decisions fire on a given host.
+// decisions fire on a given host. The adaptive rows use a zero drift
+// threshold (plan at every probe) and a zero-hysteresis gate: the most
+// migration-happy configuration is the strongest check.
 // ---------------------------------------------------------------------
+
+/// The repartition axis shared by both invisibility matrices.
+fn migration_happy_policies() -> [RepartitionPolicy; 4] {
+    [
+        RepartitionPolicy::Off,
+        RepartitionPolicy::Fixed {
+            interval_cycles: 16,
+            hysteresis: 0.0,
+            max_moves: usize::MAX,
+        },
+        RepartitionPolicy::Fixed {
+            interval_cycles: 256,
+            hysteresis: 0.0,
+            max_moves: usize::MAX,
+        },
+        RepartitionPolicy::Adaptive {
+            check_every: 16,
+            drift_threshold: 0.0,
+            backoff: 2,
+            hysteresis: 0.0,
+            max_moves: usize::MAX,
+        },
+    ]
+}
 
 #[test]
 fn repartitioning_is_invisible_on_the_pipeline_matrix() {
     let n = 8;
     let cycles = 400;
-    let reference = {
-        let mut m = sleepy_pipeline(n, 60);
-        m.run_serial(RunOpts::cycles(cycles).fingerprinted())
-    };
-    for interval in [0u64, 16, 256] {
-        // Zero hysteresis: migrate on any projected improvement — the
-        // most migration-happy configuration is the strongest check.
-        let policy = RepartitionPolicy {
-            interval_cycles: interval,
-            hysteresis: 0.0,
-            max_moves: usize::MAX,
-        };
-        for workers in [1usize, 2, 4] {
-            for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
-                let stats = Sim::from_model(sleepy_pipeline(n, 60))
-                    .workers(workers)
-                    .sched(sched)
-                    .repartition(policy)
-                    .cycles(cycles)
-                    .fingerprinted()
-                    .engine(Engine::Ladder)
-                    .run()
-                    .expect("ladder run")
-                    .stats;
-                assert_eq!(
-                    stats.fingerprint,
-                    reference.fingerprint,
-                    "interval={interval} workers={workers} sched={}",
-                    sched.name()
-                );
-                assert_eq!(stats.cycles, cycles);
-                if interval == 0 || workers == 1 {
-                    assert_eq!(
-                        stats.repart.events, 0,
-                        "interval={interval} workers={workers}: nothing to migrate"
-                    );
-                }
-            }
-        }
-    }
+    let build = || (sleepy_pipeline(n, 60), Stop::Cycles(cycles));
+    let reference = serial_reference(build);
+    assert_ladder_matrix(
+        "pipeline+repart",
+        &reference,
+        build,
+        MatrixSpec {
+            workers: &[1, 2, 4],
+            scheds: &[SchedMode::FullScan, SchedMode::ActiveList],
+            repartition: &migration_happy_policies(),
+            ..Default::default()
+        },
+    );
+    // Nothing to migrate with one cluster: the policy must be a no-op.
+    let stats = Sim::from_model(sleepy_pipeline(n, 60))
+        .workers(1)
+        .repartition(RepartitionPolicy::every(16))
+        .cycles(cycles)
+        .fingerprinted()
+        .engine(Engine::Ladder)
+        .run()
+        .expect("ladder run")
+        .stats;
+    assert_eq!(stats.repart.events, 0, "one cluster: nothing to migrate");
 }
 
 #[test]
 fn repartitioning_is_invisible_on_the_cpu_system() {
-    use scalesim::cpu::isa::{OpClass, TraceOp, NO_REG};
-    use scalesim::cpu::Trace;
-    use scalesim::systems::{build_cpu_system, CpuSystemCfg};
-
-    let mk_traces = || {
-        (0..4u64)
-            .map(|c| Trace {
-                ops: (0..60u64)
-                    .map(|i| {
-                        if i % 3 == 0 {
-                            TraceOp::new(
-                                OpClass::Load,
-                                1,
-                                2,
-                                NO_REG,
-                                0x1000 + ((c * 64 + i * 8) % 4096),
-                                0,
-                                false,
-                            )
-                        } else {
-                            TraceOp::new(OpClass::Alu, 1, 1, 2, 0, 0, false)
-                        }
-                    })
-                    .collect(),
-            })
-            .collect::<Vec<_>>()
-    };
-    let cfg = CpuSystemCfg::default();
-    let (mut serial, h) = build_cpu_system(mk_traces(), &cfg);
-    let stop = Stop::CounterAtLeast {
-        counter: h.cores_done,
-        target: 4,
-        max_cycles: 100_000,
-    };
-    let reference = serial.run_serial(RunOpts::with_stop(stop).fingerprinted());
-
-    for interval in [16u64, 256] {
-        let policy = RepartitionPolicy {
-            interval_cycles: interval,
-            hysteresis: 0.0,
-            max_moves: usize::MAX,
-        };
-        for workers in [2usize, 4] {
-            for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
-                let (m, h) = build_cpu_system(mk_traces(), &cfg);
-                let stop = Stop::CounterAtLeast {
-                    counter: h.cores_done,
-                    target: 4,
-                    max_cycles: 100_000,
-                };
-                let stats = Sim::from_model(m)
-                    .workers(workers)
-                    .sched(sched)
-                    .repartition(policy)
-                    .stop(stop)
-                    .fingerprinted()
-                    .engine(Engine::Ladder)
-                    .run()
-                    .expect("ladder run")
-                    .stats;
-                assert_eq!(
-                    stats.fingerprint,
-                    reference.fingerprint,
-                    "interval={interval} workers={workers} sched={}",
-                    sched.name()
-                );
-                assert_eq!(stats.cycles, reference.cycles);
-            }
-        }
-    }
+    let build = || cpu_system(4, false);
+    let reference = serial_reference(build);
+    assert_ladder_matrix(
+        "cpu-system+repart",
+        &reference,
+        build,
+        MatrixSpec {
+            workers: &[2, 4],
+            scheds: &[SchedMode::FullScan, SchedMode::ActiveList],
+            repartition: &migration_happy_policies(),
+            ..Default::default()
+        },
+    );
 }
 
 #[test]
@@ -669,15 +455,15 @@ fn sync_ops_scale_with_workers_not_model_size() {
 }
 
 // ---------------------------------------------------------------------
-// Typed-wiring scenario matrix (ISSUE 4): the combinator-built ring and
-// torus NoCs must run deterministically across workers {1,2,4}, both
-// scheduling modes, and the cost-locality strategy — fingerprints equal
-// to their serial reference in every cell.
+// Typed-wiring scenario matrix (ISSUE 4 + ISSUE 5): the combinator-built
+// ring, torus, and tree NoCs must run deterministically across workers
+// {1,2,4}, both scheduling modes, and the cost-locality strategy (whose
+// planner is now the KL refinement) — fingerprints equal to their serial
+// reference in every cell.
 // ---------------------------------------------------------------------
 
 #[test]
-fn ring_and_torus_scenarios_full_matrix() {
-    use scalesim::engine::Sim;
+fn ring_torus_and_tree_scenarios_full_matrix() {
     let configs: Vec<(&str, Config)> = vec![
         ("ring", {
             let mut c = Config::new();
@@ -691,45 +477,36 @@ fn ring_and_torus_scenarios_full_matrix() {
             c.set("packets", 8);
             c
         }),
+        ("tree", {
+            let mut c = Config::new();
+            c.set("fanout", 3);
+            c.set("depth", 3);
+            c.set("packets", 6);
+            c
+        }),
     ];
     for (name, cfg) in &configs {
-        let reference = Sim::scenario(name, cfg)
-            .unwrap()
-            .fingerprinted()
-            .run()
-            .unwrap();
+        let build = || scalesim::scenario::find(name).unwrap().build(cfg).unwrap();
+        let reference = serial_reference(build);
         assert!(
-            reference.stats.cycles < 500_000,
+            reference.cycles < 500_000,
             "{name}: serial run must drain, not hit the cap"
         );
-        for workers in [1usize, 2, 4] {
-            for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
-                for strat in [
+        assert_ladder_matrix(
+            name,
+            &reference,
+            build,
+            MatrixSpec {
+                workers: &[1, 2, 4],
+                scheds: &[SchedMode::FullScan, SchedMode::ActiveList],
+                strategies: &[
                     PartitionStrategy::Contiguous,
                     PartitionStrategy::CostBalanced,
                     PartitionStrategy::CostLocality,
-                ] {
-                    let r = Sim::scenario(name, cfg)
-                        .unwrap()
-                        .workers(workers)
-                        .sched(sched)
-                        .strategy(strat)
-                        .profile_cycles(30)
-                        .fingerprinted()
-                        .engine(Engine::Ladder)
-                        .run()
-                        .unwrap();
-                    assert_eq!(
-                        r.fingerprint(),
-                        reference.fingerprint(),
-                        "{name} workers={workers} sched={} strat={}",
-                        sched.name(),
-                        strat.name()
-                    );
-                    assert_eq!(r.stats.cycles, reference.stats.cycles, "{name}");
-                }
-            }
-        }
+                ],
+                ..Default::default()
+            },
+        );
     }
 }
 

@@ -1,0 +1,251 @@
+//! The golden-fingerprint harness (ISSUE 5): every registered scenario is
+//! pinned at a fixed small config, and its serial fingerprint is checked
+//! into `rust/tests/golden_fingerprints.txt`. Any semantic drift — a
+//! scheduling change that alters *when* a unit runs, a scenario edit, an
+//! engine bug — shows up as a pin mismatch, while pure performance work
+//! (partitioning, sleep/wake, repartitioning cadence) must keep every pin
+//! bit-identical.
+//!
+//! On top of the pins, every scenario is re-run under the ladder engine
+//! with repartitioning off, fixed-cadence, and drift-adaptive policies;
+//! all three must reproduce the serial fingerprint and cycle count. That
+//! parity holds (and is enforced) even while a pin is still `pending`.
+//!
+//! Regenerate the pins after an *intended* semantic change:
+//!
+//! ```text
+//! UPDATE_GOLDEN=1 cargo test -q --test golden
+//! ```
+
+use scalesim::engine::{Engine, RepartitionPolicy, Sim};
+use scalesim::scenario;
+use scalesim::util::config::Config;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+const GOLDEN_PATH: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/rust/tests/golden_fingerprints.txt"
+);
+
+const HEADER: &str = "\
+# Golden serial fingerprints for every registered scenario at the pinned
+# small configs in rust/tests/golden.rs (`pinned_config`).
+#
+# Format: <scenario> <fingerprint> <cycles>
+# Regenerate: UPDATE_GOLDEN=1 cargo test -q --test golden
+#
+# An entry of `pending pending` means the pin has not been captured on
+# the reference machine yet; golden.rs still enforces serial == parallel
+# == repartitioned == adaptive on every run, and prints the value to pin.
+";
+
+/// The fixed small config each scenario is pinned at. Every registered
+/// scenario must have an arm here — the panic keeps the golden suite
+/// honest when a new scenario lands.
+fn pinned_config(name: &str) -> Config {
+    let mut c = Config::new();
+    match name {
+        "pipeline" => {
+            c.set("stages", 5);
+            c.set("messages", 20);
+        }
+        "cpu-light" => {
+            c.set("cores", 2);
+            c.set("txns", 20);
+        }
+        "cpu-ooo" => {
+            c.set("cores", 2);
+            c.set("txns", 2);
+        }
+        "fat-tree" => {
+            c.set("k", 4);
+            c.set("packets", 120);
+            c.set("window", 30);
+        }
+        "mesh" => {
+            c.set("width", 2);
+            c.set("height", 2);
+            c.set("packets", 8);
+        }
+        "ring" => {
+            c.set("nodes", 6);
+            c.set("packets", 8);
+        }
+        "torus" => {
+            c.set("dim", 3);
+            c.set("packets", 6);
+        }
+        "tree" => {
+            c.set("fanout", 2);
+            c.set("depth", 3);
+            c.set("packets", 8);
+        }
+        other => panic!(
+            "scenario {other:?} has no pinned golden config — add an arm to \
+             pinned_config() and regenerate with UPDATE_GOLDEN=1"
+        ),
+    }
+    c
+}
+
+/// A parsed golden entry; `None` = the `pending` placeholder.
+struct Pin {
+    fingerprint: Option<u64>,
+    cycles: Option<u64>,
+}
+
+fn load_pins(update: bool) -> BTreeMap<String, Pin> {
+    let text = match std::fs::read_to_string(GOLDEN_PATH) {
+        Ok(t) => t,
+        Err(e) if update => {
+            eprintln!("golden: {GOLDEN_PATH} unreadable ({e}); regenerating from scratch");
+            return BTreeMap::new();
+        }
+        Err(e) => panic!("golden: cannot read {GOLDEN_PATH}: {e}"),
+    };
+    let mut pins = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(name), Some(fp), Some(cycles)) = (parts.next(), parts.next(), parts.next())
+        else {
+            panic!("golden: line {} is malformed: {line:?}", lineno + 1);
+        };
+        let parse_hex = |s: &str| {
+            u64::from_str_radix(s.trim_start_matches("0x"), 16)
+                .unwrap_or_else(|e| panic!("golden: line {}: bad value {s:?}: {e}", lineno + 1))
+        };
+        let pin = if fp == "pending" {
+            Pin {
+                fingerprint: None,
+                cycles: None,
+            }
+        } else {
+            Pin {
+                fingerprint: Some(parse_hex(fp)),
+                cycles: Some(
+                    cycles
+                        .parse()
+                        .unwrap_or_else(|e| panic!("golden: line {}: {e}", lineno + 1)),
+                ),
+            }
+        };
+        pins.insert(name.to_string(), pin);
+    }
+    pins
+}
+
+/// The ladder-side policies every scenario must reproduce the serial
+/// fingerprint under: plain parallel, migration-happy fixed cadence, and
+/// migration-happy drift-adaptive cadence.
+fn parity_policies() -> [(&'static str, RepartitionPolicy); 3] {
+    [
+        ("parallel", RepartitionPolicy::Off),
+        (
+            "fixed-repartition",
+            RepartitionPolicy::Fixed {
+                interval_cycles: 16,
+                hysteresis: 0.0,
+                max_moves: usize::MAX,
+            },
+        ),
+        (
+            "adaptive-repartition",
+            RepartitionPolicy::Adaptive {
+                check_every: 8,
+                drift_threshold: 0.0,
+                backoff: 2,
+                hysteresis: 0.0,
+                max_moves: usize::MAX,
+            },
+        ),
+    ]
+}
+
+#[test]
+fn golden_fingerprints_pin_every_scenario() {
+    let update = std::env::var("UPDATE_GOLDEN").is_ok_and(|v| !v.is_empty() && v != "0");
+    let pins = load_pins(update);
+    let names = scenario::names();
+    if !update {
+        for name in &names {
+            assert!(
+                pins.contains_key(*name),
+                "scenario {name:?} is missing from golden_fingerprints.txt — \
+                 regenerate with UPDATE_GOLDEN=1 cargo test -q --test golden"
+            );
+        }
+        for key in pins.keys() {
+            assert!(
+                names.contains(&key.as_str()),
+                "golden_fingerprints.txt pins unknown scenario {key:?} — remove the line"
+            );
+        }
+    }
+
+    let mut regenerated = String::new();
+    for name in &names {
+        let cfg = pinned_config(name);
+        let serial = Sim::scenario(name, &cfg)
+            .unwrap()
+            .fingerprinted()
+            .run()
+            .unwrap();
+        let (fp, cycles) = (serial.fingerprint(), serial.stats.cycles);
+        assert_ne!(fp, 0, "{name}: fingerprint must be computed");
+        if update {
+            writeln!(regenerated, "{name} {fp:#018x} {cycles}").unwrap();
+        } else {
+            let pin = &pins[*name];
+            match pin.fingerprint {
+                Some(pinned) => {
+                    assert_eq!(
+                        fp, pinned,
+                        "{name}: serial fingerprint {fp:#018x} drifted from the pinned \
+                         golden value {pinned:#018x} — if this semantic change is \
+                         intended, regenerate with UPDATE_GOLDEN=1 cargo test -q --test \
+                         golden"
+                    );
+                    assert_eq!(
+                        Some(cycles),
+                        pin.cycles,
+                        "{name}: cycle count drifted from the pin"
+                    );
+                }
+                None => eprintln!(
+                    "golden: {name} is unpinned — UPDATE_GOLDEN=1 would pin \
+                     {fp:#018x} @ {cycles} cycles"
+                ),
+            }
+        }
+
+        // Parallel / repartition / adaptive parity against the serial
+        // value — enforced regardless of the pin's state.
+        for (label, policy) in parity_policies() {
+            let r = Sim::scenario(name, &cfg)
+                .unwrap()
+                .workers(2)
+                .repartition(policy)
+                .fingerprinted()
+                .engine(Engine::Ladder)
+                .run()
+                .unwrap();
+            assert_eq!(
+                r.fingerprint(),
+                fp,
+                "{name}/{label}: ladder run diverged from the serial fingerprint"
+            );
+            assert_eq!(r.stats.cycles, cycles, "{name}/{label}: cycle count diverged");
+        }
+    }
+
+    if update {
+        std::fs::write(GOLDEN_PATH, format!("{HEADER}{regenerated}"))
+            .unwrap_or_else(|e| panic!("golden: cannot write {GOLDEN_PATH}: {e}"));
+        eprintln!("golden: rewrote {GOLDEN_PATH}");
+    }
+}

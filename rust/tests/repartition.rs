@@ -1,14 +1,24 @@
-//! Adaptive mid-run repartitioning (ISSUE 3) and transfer-phase
+//! Mid-run repartitioning (ISSUE 3 + ISSUE 5) and transfer-phase
 //! sleep/wake, end to end:
 //!
 //! 1. A migration stress: per-unit costs flip mid-run, the policy must
 //!    actually move units (`repartition_events > 0`) — and the simulated
 //!    execution must stay bit-identical to the serial reference, because
 //!    migration changes *where* a unit runs, never *when*.
-//! 2. Port parking: a port blocked on a stalling receiver leaves the
+//! 2. The drift-adaptive cadence: on the same cost flip, the adaptive
+//!    policy must still migrate, reach at least the fixed-interval
+//!    policy's imbalance improvement, and run strictly fewer full
+//!    planner evaluations (`repartition_checks`) — that is the saving
+//!    the drift signal exists to buy.
+//! 3. Port parking: a port blocked on a stalling receiver leaves the
 //!    dirty list and comes back through the receiver-vacancy wake, so the
 //!    transfer phase stops re-walking it every cycle.
+//!
+//! The phased cost model lives in `tests/common`.
 
+mod common;
+
+use common::{phased_model, phased_start_partition};
 use scalesim::engine::{
     Ctx, Engine, Fnv, In, Model, ModelBuilder, Msg, Out, PortCfg, RepartitionPolicy, RunOpts,
     SchedMode, Sim, Transit, Unit,
@@ -18,59 +28,6 @@ use scalesim::util::config::Config;
 // ---------------------------------------------------------------------
 // Migration stress: cost flip mid-run
 // ---------------------------------------------------------------------
-
-/// A unit whose work cost is a function of the cycle: heavy (a long
-/// deterministic mix loop) on one side of `flip_at`, nearly free on the
-/// other. State is a pure function of (id, cycles executed), so any
-/// engine, partition, or migration schedule must produce the same
-/// fingerprint — and a migration that ever skipped or repeated a tick
-/// would be caught.
-struct PhasedUnit {
-    id: u64,
-    heavy_before_flip: bool,
-    flip_at: u64,
-    acc: u64,
-}
-
-impl Unit for PhasedUnit {
-    fn work(&mut self, ctx: &mut Ctx<'_>) {
-        let heavy = (ctx.cycle < self.flip_at) == self.heavy_before_flip;
-        if heavy {
-            let mut x = self.acc ^ self.id ^ ctx.cycle;
-            for _ in 0..2_000 {
-                x = x.wrapping_mul(0x100000001B3).wrapping_add(1);
-            }
-            self.acc = self.acc.wrapping_add(x);
-        } else {
-            self.acc = self.acc.wrapping_add(ctx.cycle ^ self.id);
-        }
-    }
-
-    fn state_hash(&self, h: &mut Fnv) {
-        h.write_u64(self.acc);
-    }
-
-    fn always_active(&self) -> bool {
-        true // cost model runs every cycle; never park
-    }
-}
-
-/// 8 independent units: 0–3 heavy before the flip, 4–7 heavy after.
-fn phased_model(flip_at: u64) -> Model {
-    let mut mb = ModelBuilder::new();
-    for i in 0..8u64 {
-        mb.add_unit(
-            &format!("ph{i}"),
-            Box::new(PhasedUnit {
-                id: i,
-                heavy_before_flip: i < 4,
-                flip_at,
-                acc: 0,
-            }),
-        );
-    }
-    mb.build().unwrap()
-}
 
 #[test]
 fn cost_flip_triggers_migration_and_preserves_fingerprints() {
@@ -82,7 +39,7 @@ fn cost_flip_triggers_migration_and_preserves_fingerprints() {
     // first barrier decision must migrate (heavy/light cost ratio is
     // ~1000x — far beyond any timing noise).
     let report = Sim::from_model(phased_model(flip_at))
-        .partition(vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]])
+        .partition(phased_start_partition())
         .repartition(RepartitionPolicy::every(100))
         .cycles(cycles)
         .fingerprinted()
@@ -123,13 +80,13 @@ fn cost_flip_triggers_migration_and_preserves_fingerprints() {
 fn max_moves_caps_each_epoch() {
     let cycles = 2_000;
     let reference = phased_model(1_000).run_serial(RunOpts::cycles(cycles).fingerprinted());
-    let policy = RepartitionPolicy {
+    let policy = RepartitionPolicy::Fixed {
         interval_cycles: 100,
         hysteresis: 0.05,
         max_moves: 1,
     };
     let report = Sim::from_model(phased_model(1_000))
-        .partition(vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]])
+        .partition(phased_start_partition())
         .repartition(policy)
         .cycles(cycles)
         .fingerprinted()
@@ -143,6 +100,87 @@ fn max_moves_caps_each_epoch() {
         report.stats.repart.epochs
     );
     assert_eq!(report.fingerprint(), reference.fingerprint);
+}
+
+#[test]
+fn adaptive_cadence_migrates_with_fewer_planner_runs_than_fixed() {
+    let cycles = 3_000;
+    let flip_at = 1_500;
+    let reference = phased_model(flip_at).run_serial(RunOpts::cycles(cycles).fingerprinted());
+    let run = |policy: RepartitionPolicy| {
+        Sim::from_model(phased_model(flip_at))
+            .partition(phased_start_partition())
+            .repartition(policy)
+            .cycles(cycles)
+            .fingerprinted()
+            .engine(Engine::Ladder)
+            .run()
+            .expect("ladder run")
+    };
+    // Same decision cadence (100 cycles); the policies differ only in
+    // when they pay for a full plan.
+    let fixed = run(RepartitionPolicy::every(100));
+    let adaptive = run(RepartitionPolicy::Adaptive {
+        check_every: 100,
+        drift_threshold: 0.25,
+        backoff: 2,
+        hysteresis: 0.05,
+        max_moves: usize::MAX,
+    });
+
+    // Serial parity throughout: the cadence policy is a performance knob,
+    // never a semantic one.
+    assert_eq!(fixed.fingerprint(), reference.fingerprint);
+    assert_eq!(adaptive.fingerprint(), reference.fingerprint);
+    assert_eq!(adaptive.stats.cycles, cycles);
+
+    // The drift must actually trigger: the start partition is ~1000x
+    // imbalanced, far past the 0.25 drift threshold.
+    assert!(
+        adaptive.repartition_events() >= 1,
+        "adaptive must migrate on the skew: {:?}",
+        adaptive.stats.repart
+    );
+    assert!(fixed.repartition_events() >= 1);
+
+    // The headline saving: both policies probed ~cycles/100 times, but
+    // the fixed policy ran the full planner at every probe while the
+    // adaptive one planned only when the smoothed drift crossed the
+    // threshold.
+    let f = &fixed.stats.repart;
+    let a = &adaptive.stats.repart;
+    assert_eq!(f.checks, f.probes, "fixed: every probe is a full plan");
+    assert!(
+        a.checks < f.checks,
+        "adaptive must run strictly fewer planner evaluations: \
+         adaptive {}/{} (plans/probes) vs fixed {}/{}",
+        a.checks,
+        a.probes,
+        f.checks,
+        f.probes
+    );
+    assert!(a.probes >= f.checks / 2, "same cadence: probes stay cheap, not absent");
+
+    // And it must not trade away balance: the best migration epoch's
+    // imbalance improvement reaches the fixed policy's (0.1 of slack for
+    // wall-clock sampling noise — the skew itself is ~1.0 of max/mean).
+    let best = |r: &scalesim::stats::RepartStats| {
+        r.epochs
+            .iter()
+            .map(|e| e.imbalance_before - e.imbalance_after)
+            .fold(0.0f64, f64::max)
+    };
+    let fixed_gain = best(f);
+    let adaptive_gain = best(a);
+    assert!(
+        adaptive_gain >= fixed_gain - 0.1,
+        "adaptive improvement {adaptive_gain:.3} must reach fixed {fixed_gain:.3}"
+    );
+    assert!(
+        adaptive_gain > 0.5,
+        "the ~2.0 starting imbalance must really have been rebalanced: \
+         {adaptive_gain:.3}"
+    );
 }
 
 #[test]
@@ -168,6 +206,20 @@ fn scenario_config_key_drives_repartitioning() {
     assert!(
         r.stats.repart.checks >= 1,
         "the config key must reach the ladder: {:?}",
+        r.stats.repart
+    );
+    // The adaptive spelling reaches the ladder the same way.
+    cfg.set("repartition", "adaptive,0.0,16");
+    let r = Sim::scenario("pipeline", &cfg)
+        .unwrap()
+        .workers(2)
+        .fingerprinted()
+        .run()
+        .unwrap();
+    assert_eq!(r.fingerprint(), reference.fingerprint());
+    assert!(
+        r.stats.repart.probes >= 1,
+        "the adaptive key must reach the ladder: {:?}",
         r.stats.repart
     );
     // A malformed spec fails the session build, not the run.

@@ -101,7 +101,9 @@ fn list_scenarios_cli_smoke() {
         .expect("spawn scalesim");
     assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
     let stdout = String::from_utf8_lossy(&out.stdout);
-    for name in ["pipeline", "cpu-light", "cpu-ooo", "fat-tree", "mesh", "ring", "torus"] {
+    for name in [
+        "pipeline", "cpu-light", "cpu-ooo", "fat-tree", "mesh", "ring", "torus", "tree",
+    ] {
         assert!(stdout.contains(name), "{name} missing from:\n{stdout}");
     }
 }

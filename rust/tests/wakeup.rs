@@ -9,131 +9,14 @@
 //! and these tests drive both edges with port delays > 1, burst gaps,
 //! multi-hop chains, and cross-cluster parallel runs.
 
-use scalesim::engine::{
-    Ctx, Engine, Fnv, In, Model, ModelBuilder, Msg, Out, PortCfg, RunOpts, Sim, Stop, Transit,
-    Unit,
-};
+//! The burst/relay/sink units and models live in `tests/common`.
+
+mod common;
+
+use common::{all_idle, burst_model, chain_model, BurstSource};
+use scalesim::engine::{Ctx, Engine, Fnv, In, ModelBuilder, PortCfg, RunOpts, Sim, Transit, Unit};
 use scalesim::stats::StatsMap;
 use scalesim::sync::SyncMethod;
-
-/// Sends one message at each scheduled cycle (retrying under back
-/// pressure). Not idle until the whole schedule has been sent, so it
-/// stays awake through the gaps — the *sink* is the unit that parks.
-struct BurstSource {
-    out: Out<Transit>,
-    schedule: Vec<u64>,
-    next: usize,
-}
-
-impl Unit for BurstSource {
-    fn work(&mut self, ctx: &mut Ctx<'_>) {
-        while let Some(&at) = self.schedule.get(self.next) {
-            if at > ctx.cycle || !self.out.vacant(ctx) {
-                break;
-            }
-            self.out
-                .send_msg(ctx, Msg::with(1, self.next as u64, 0, 0))
-                .unwrap();
-            self.next += 1;
-        }
-    }
-
-    fn state_hash(&self, h: &mut Fnv) {
-        h.write_u64(self.next as u64);
-    }
-
-    fn is_idle(&self) -> bool {
-        self.next >= self.schedule.len()
-    }
-}
-
-/// Input-driven relay: forwards everything, parks whenever quiet.
-struct Relay {
-    inp: In<Transit>,
-    out: Out<Transit>,
-}
-
-impl Unit for Relay {
-    fn work(&mut self, ctx: &mut Ctx<'_>) {
-        while self.out.vacant(ctx) {
-            let Some(m) = self.inp.recv_msg(ctx) else { break };
-            self.out.send_msg(ctx, m).unwrap();
-        }
-    }
-}
-
-/// Input-driven sink; `is_idle` defaults to `true`, so it parks whenever
-/// its queue is empty — exactly the unit the hazard targets.
-struct CountingSink {
-    inp: In<Transit>,
-    received: u64,
-}
-
-impl Unit for CountingSink {
-    fn work(&mut self, ctx: &mut Ctx<'_>) {
-        while let Some(m) = self.inp.recv_msg(ctx) {
-            assert_eq!(m.a, self.received, "FIFO order broken");
-            self.received += 1;
-        }
-    }
-
-    fn state_hash(&self, h: &mut Fnv) {
-        h.write_u64(self.received);
-    }
-
-    fn stats(&self, out: &mut StatsMap) {
-        out.add("sink.received", self.received);
-    }
-}
-
-/// Source → sink over one port with the given delay; bursts separated by
-/// gaps long enough for the sink to park in between.
-fn burst_model(delay: u64) -> Model {
-    let mut mb = ModelBuilder::new();
-    let src = mb.reserve_unit("src");
-    let snk = mb.reserve_unit("snk");
-    let (tx, rx) = mb.link::<Transit>(src, snk, PortCfg::new(2, delay));
-    mb.install(
-        src,
-        Box::new(BurstSource {
-            out: tx,
-            // Gaps of 10+ cycles: the sink drains, parks, and must be
-            // re-awoken by a delivery whose delay is still running.
-            schedule: vec![0, 1, 15, 16, 40, 70, 71, 72],
-            next: 0,
-        }),
-    );
-    mb.install(snk, Box::new(CountingSink { inp: rx, received: 0 }));
-    mb.build().unwrap()
-}
-
-/// Three-hop chain so wakes must propagate: src → relay → sink.
-fn chain_model(delay: u64) -> Model {
-    let mut mb = ModelBuilder::new();
-    let src = mb.reserve_unit("src");
-    let mid = mb.reserve_unit("mid");
-    let snk = mb.reserve_unit("snk");
-    let (tx0, rx0) = mb.link::<Transit>(src, mid, PortCfg::new(2, delay));
-    let (tx1, rx1) = mb.link::<Transit>(mid, snk, PortCfg::new(2, delay));
-    mb.install(
-        src,
-        Box::new(BurstSource {
-            out: tx0,
-            schedule: vec![0, 20, 21, 50],
-            next: 0,
-        }),
-    );
-    mb.install(mid, Box::new(Relay { inp: rx0, out: tx1 }));
-    mb.install(snk, Box::new(CountingSink { inp: rx1, received: 0 }));
-    mb.build().unwrap()
-}
-
-fn all_idle() -> Stop {
-    Stop::AllIdle {
-        check_every: 1,
-        max_cycles: 10_000,
-    }
-}
 
 #[test]
 fn delayed_delivery_rearms_parked_sink() {

@@ -161,7 +161,11 @@ fn build_errors_propagate_through_scenario_sessions_as_strings() {
     // A bad scenario config path still yields Err, not a panic.
     let mut cfg = scalesim::util::config::Config::new();
     cfg.set("dim", "1");
-    let err = scalesim::engine::Sim::scenario("torus", &cfg).unwrap_err();
+    // `.err()` rather than `.unwrap_err()`: `Sim` carries closures and has
+    // no Debug impl.
+    let err = scalesim::engine::Sim::scenario("torus", &cfg)
+        .err()
+        .expect("dim=1 torus must fail to build");
     assert!(err.contains(">= 2"), "{err}");
 }
 
@@ -439,10 +443,10 @@ fn build_cpu_system_raw(
         }
     }
     let local = PortCfg::new(mesh_cfg.local_capacity, 1);
-    let mut attach_raw = |mb: &mut ModelBuilder,
-                          routers: &mut Vec<Router>,
-                          node: u32,
-                          unit: u32| {
+    let attach_raw = |mb: &mut ModelBuilder,
+                      routers: &mut [Router],
+                      node: u32,
+                      unit: u32| {
         let rid = router_ids[node as usize];
         let (to_net, router_in) = mb.connect(unit, rid, local);
         let (router_out, from_net) = mb.connect(rid, unit, local);
