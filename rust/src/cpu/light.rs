@@ -196,4 +196,19 @@ impl Unit for LightCore {
         // condition — `work` must be a strict no-op once this is true.
         self.done() && self.done_signalled
     }
+
+    // The trace itself is config-derived (rebuilt by the scenario);
+    // everything that advances over it is state.
+    crate::persist_fields!(
+        pos,
+        busy_until,
+        waiting_tag,
+        next_tag,
+        stores_inflight,
+        done_signalled,
+        retired,
+        stall_mem,
+        stall_store,
+        done_at
+    );
 }

@@ -242,6 +242,43 @@ impl ActiveState {
         }
     }
 
+    // ---- checkpoint/restore ----
+
+    /// Snapshot the unit sleep flags. Call after `apply_pending_wakes`
+    /// (or a full rebuild) so the flags are canonical.
+    ///
+    /// # Safety
+    /// Caller must be the scheduler with every worker parked at the
+    /// cycle barrier (or hold exclusivity).
+    pub(crate) unsafe fn asleep_flags(&self) -> Vec<bool> {
+        self.asleep.iter().map(|c| *c.get()).collect()
+    }
+
+    /// Snapshot the port-parking flags (same contract as
+    /// [`ActiveState::asleep_flags`]).
+    ///
+    /// # Safety
+    /// As `asleep_flags`.
+    pub(crate) unsafe fn blocked_flags(&self) -> Vec<bool> {
+        self.port_blocked.iter().map(|c| *c.get()).collect()
+    }
+
+    /// Restore sleep/park flags from a snapshot (engine start, before the
+    /// first rebuild re-derives active and dirty lists from them).
+    ///
+    /// # Safety
+    /// As `asleep_flags`; slice lengths must match the model.
+    pub(crate) unsafe fn set_flags(&self, asleep: &[bool], blocked: &[bool]) {
+        debug_assert_eq!(asleep.len(), self.asleep.len());
+        debug_assert_eq!(blocked.len(), self.port_blocked.len());
+        for (c, &v) in self.asleep.iter().zip(asleep) {
+            *c.get() = v;
+        }
+        for (c, &v) in self.port_blocked.iter().zip(blocked) {
+            *c.get() = v;
+        }
+    }
+
     // ---- transfer-phase port parking ----
 
     /// Park port `p`: its receiver queue is full, so drop it from the

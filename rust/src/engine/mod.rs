@@ -11,6 +11,8 @@ pub mod model;
 pub mod port;
 pub mod repart;
 pub mod sim;
+pub mod snapshot;
+pub mod supervise;
 pub mod unit;
 pub mod wire;
 
@@ -20,5 +22,7 @@ pub use model::{BuildError, Model, ModelBuilder, RunOpts, Stop, Topology};
 pub use port::{InPort, OutPort, PortCfg};
 pub use repart::RepartitionPolicy;
 pub use sim::{Engine, RunReport, Sim};
+pub use snapshot::{Persist, SnapshotReader, SnapshotWriter};
+pub use supervise::{Fault, FaultPlan, SimError, SimPhase, Watchdog};
 pub use unit::{Ctx, Unit};
 pub use wire::{Component, IfaceSpec, In, Node, Out, Payload, Ports, Transit, Wire};

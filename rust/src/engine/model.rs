@@ -41,6 +41,8 @@ use super::active::{ActiveState, SchedMode};
 use super::message::Fnv;
 use super::port::{InPort, OutPort, PortArena, PortCfg};
 use super::repart::{ClusterState, CostSamples};
+use super::snapshot::{save_slice, write_snapshot_file, Persist, SnapshotReader, SnapshotWriter};
+use super::supervise::{CheckpointCfg, RepartResume, SimError, SimPhase, SuperviseOpts};
 use super::unit::{Ctx, Unit};
 use crate::stats::counters::CounterId;
 use crate::stats::timers::UnitProfile;
@@ -316,6 +318,11 @@ pub struct RunOpts {
     /// Work-phase scheduling policy (full scan vs sleep/wake active
     /// lists). Both engines honour it; default is the reference full scan.
     pub sched: SchedMode,
+    /// First cycle to execute — 0 for a fresh run, the snapshot's cycle
+    /// when resuming from a checkpoint. Stop conditions are expressed in
+    /// absolute cycles, so a restored run ends at the same cycle as an
+    /// uninterrupted one.
+    pub start_cycle: u64,
 }
 
 impl RunOpts {
@@ -325,6 +332,7 @@ impl RunOpts {
             timed: false,
             fingerprint: false,
             sched: SchedMode::FullScan,
+            start_cycle: 0,
         }
     }
 
@@ -349,12 +357,19 @@ impl RunOpts {
         self
     }
 
+    /// Resume execution at `cycle` (checkpoint restore).
+    pub fn starting_at(mut self, cycle: u64) -> Self {
+        self.start_cycle = cycle;
+        self
+    }
+
     pub fn with_stop(stop: Stop) -> Self {
         RunOpts {
             stop,
             timed: false,
             fingerprint: false,
             sched: SchedMode::FullScan,
+            start_cycle: 0,
         }
     }
 }
@@ -749,28 +764,249 @@ impl Model {
         }
     }
 
+    /// First unit that opted out of checkpointing, or `None` when the
+    /// whole model can be snapshotted.
+    pub(crate) fn snapshot_unsupported(&mut self) -> Option<String> {
+        for (i, cell) in self.units.iter_mut().enumerate() {
+            if !cell.get_mut().snapshot_supported() {
+                return Some(format!("unit {i} ({})", self.names[i]));
+            }
+        }
+        None
+    }
+
+    /// Serialize the model's full mutable state: shape (unit/port counts,
+    /// validated on load), counters, every unit's `Unit::save`, and the
+    /// port queues. Pending sleep/wake boxes are *not* part of model state
+    /// — callers normalize them into the flags before snapshotting
+    /// (`rebuild_cluster_state`), which is semantically invisible for the
+    /// same reason repartitioning is.
+    ///
+    /// # Safety
+    /// Caller must hold logical exclusivity over the model (between
+    /// cycles, all workers parked).
+    pub(crate) unsafe fn save_state_shared(&self, w: &mut SnapshotWriter) {
+        w.put_u64(self.units.len() as u64);
+        w.put_u64(self.arena.len() as u64);
+        Persist::save(&self.counters.values(), w);
+        for (i, cell) in self.units.iter().enumerate() {
+            let unit = &*cell.get();
+            if !unit.snapshot_supported() {
+                w.fail(format!(
+                    "unit {i} ({}) does not support checkpointing",
+                    self.names[i]
+                ));
+                return;
+            }
+            unit.save(w);
+        }
+        self.arena.save_state(w);
+    }
+
+    /// Inverse of [`Model::save_state_shared`], applied to a freshly built
+    /// model of the same shape. Reader errors are sticky; the caller
+    /// checks `r` afterwards.
+    pub(crate) fn load_state(&mut self, r: &mut SnapshotReader<'_>) {
+        let nu = r.get_u64() as usize;
+        let np = r.get_u64() as usize;
+        if nu != self.units.len() || np != self.arena.len() {
+            r.fail(format!(
+                "snapshot shape ({nu} units, {np} ports) does not match the \
+                 rebuilt model ({} units, {} ports)",
+                self.units.len(),
+                self.arena.len()
+            ));
+            return;
+        }
+        let vals: Vec<u64> = Persist::load(r);
+        if r.error().is_some() {
+            return;
+        }
+        if vals.len() != self.counters.len() {
+            r.fail(format!(
+                "snapshot has {} counters, model registered {}",
+                vals.len(),
+                self.counters.len()
+            ));
+            return;
+        }
+        self.counters.restore_values(&vals);
+        for cell in self.units.iter_mut() {
+            if r.error().is_some() {
+                return;
+            }
+            cell.get_mut().load(r);
+        }
+        self.arena.load_state(r);
+    }
+
+    /// Compose and atomically write a barrier snapshot: scenario metadata
+    /// (pre-serialized by `Sim`), the cycle, the model state, the
+    /// sleep/wake flags, the live partition, and the repartitioner's
+    /// resume state.
+    ///
+    /// # Safety
+    /// As [`Model::save_state_shared`] — exclusive barrier window.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) unsafe fn write_checkpoint(
+        &self,
+        ck: &CheckpointCfg,
+        cycle: u64,
+        asleep: &[bool],
+        blocked: &[bool],
+        partition: &[Vec<u32>],
+        repart: Option<RepartResume>,
+    ) -> Result<(), String> {
+        let mut w = SnapshotWriter::new();
+        w.put_bytes(&ck.meta);
+        w.put_u64(cycle);
+        self.save_state_shared(&mut w);
+        save_slice(asleep, &mut w);
+        save_slice(blocked, &mut w);
+        save_slice(partition, &mut w);
+        repart.save(&mut w);
+        let body = w.finish()?;
+        write_snapshot_file(&ck.path, &body)
+    }
+
+    /// Is a checkpoint due at this barrier? Skips the snapshot's own cycle
+    /// on a restored run (the state would be identical to the file that
+    /// produced it).
+    pub(crate) fn checkpoint_due(ck: &CheckpointCfg, cycle: u64, start_cycle: u64) -> bool {
+        cycle > start_cycle && cycle % ck.every.max(1) == 0
+    }
+
+    /// Barrier-side lost-wakeup report: called when an epoch ticked zero
+    /// units. If any input queue still holds messages, its receiver is
+    /// parked with pending input — a wakeup was lost (organically, or via
+    /// an injected stall fault) and the run would spin to its cycle cap
+    /// doing nothing. Zero ticks with *all* queues empty is legal (e.g. a
+    /// drained model running out a `Stop::Cycles` budget) and reports
+    /// nothing.
+    ///
+    /// # Safety
+    /// Caller must hold logical exclusivity over the model (barrier
+    /// window), for the in-queue hints.
+    pub(crate) unsafe fn stall_check(&self, cycle: u64) -> Option<SimError> {
+        let mut parked: Vec<u32> = Vec::new();
+        let mut queued = 0u64;
+        for p in 0..self.arena.len() as u32 {
+            let n = self.arena.in_len_hint(p);
+            if n > 0 {
+                queued += n as u64;
+                parked.push(self.arena.dst_unit[p as usize]);
+            }
+        }
+        if parked.is_empty() {
+            return None;
+        }
+        parked.sort_unstable();
+        parked.dedup();
+        let names: Vec<String> = parked
+            .iter()
+            .take(8)
+            .map(|&u| format!("{u} ({})", self.names[u as usize]))
+            .collect();
+        let more = if parked.len() > 8 {
+            format!(" and {} more", parked.len() - 8)
+        } else {
+            String::new()
+        };
+        Some(SimError::new(
+            cycle,
+            SimPhase::Barrier,
+            format!(
+                "watchdog: zero units ticked while {queued} message(s) sit in input \
+                 queues — lost wakeup; parked units: {}{more}",
+                names.join(", ")
+            ),
+        ))
+    }
+
     /// The serial reference engine: work all units, transfer all ports,
     /// advance the clock — exactly the semantics the parallel engine must
     /// reproduce. With `SchedMode::ActiveList` the work phase runs the
     /// sleep/wake protocol (module docs) instead of the full scan; the
     /// observable result is identical for contract-honouring units.
+    ///
+    /// Thin wrapper over [`Model::run_serial_supervised`] with no
+    /// supervision, preserving the original panicking signature for tests
+    /// and internal callers.
     pub fn run_serial(&mut self, opts: RunOpts) -> RunStats {
+        self.run_serial_supervised(opts, &SuperviseOpts::none())
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Serial engine with crash-resilience supervision: barrier
+    /// checkpointing, deterministic fault injection, the stall watchdog,
+    /// and checkpoint resume. The serial "barrier" is simply the top of
+    /// the cycle loop — the same exclusive window the parallel scheduler
+    /// has between ticks.
+    pub(crate) fn run_serial_supervised(
+        &mut self,
+        opts: RunOpts,
+        sup: &SuperviseOpts,
+    ) -> Result<RunStats, SimError> {
         match opts.sched {
-            SchedMode::FullScan => self.run_serial_full(opts),
-            SchedMode::ActiveList => self.run_serial_active(opts),
+            SchedMode::FullScan => self.run_serial_full(opts, sup),
+            SchedMode::ActiveList => self.run_serial_active(opts, sup),
         }
     }
 
-    fn run_serial_full(&mut self, opts: RunOpts) -> RunStats {
+    fn run_serial_full(&mut self, opts: RunOpts, sup: &SuperviseOpts) -> Result<RunStats, SimError> {
         let n_units = self.num_units() as u32;
+        let serial_partition: Vec<Vec<u32>> = vec![(0..n_units).collect()];
         let mut dirty = self.take_scratch_buf();
         self.seed_dirty(&mut dirty);
         let t0 = Instant::now();
         let mut timers = PhaseTimers::new();
-        let mut cycle = 0u64;
-        loop {
+        let mut cycle = opts.start_cycle;
+        let mut epoch_t0 = Instant::now();
+        let result = loop {
+            // Barrier-side supervision (checkpoint before the stop check,
+            // so a run configured to stop on a checkpoint cycle still
+            // writes its file).
+            if let Some(ck) = &sup.checkpoint {
+                if Self::checkpoint_due(ck, cycle, opts.start_cycle) {
+                    // SAFETY: single thread — trivially exclusive.
+                    let res = unsafe {
+                        self.write_checkpoint(
+                            ck,
+                            cycle,
+                            &vec![false; n_units as usize],
+                            &vec![false; self.arena.len()],
+                            &serial_partition,
+                            None,
+                        )
+                    };
+                    if let Err(msg) = res {
+                        break Err(SimError::new(cycle, SimPhase::Barrier, msg));
+                    }
+                }
+            }
             if self.should_stop(&opts.stop, cycle) {
-                break;
+                break Ok(());
+            }
+            if let Some(u) = sup.faults.panic_unit_at(cycle, |_| true) {
+                break Err(SimError::new(cycle, SimPhase::Work, "injected fault: panic")
+                    .with_cluster(0)
+                    .with_unit(u));
+            }
+            if let Some(ms) = sup.faults.delay_for(cycle, 0) {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+            if let Some(budget) = sup.watchdog.epoch_budget_ms {
+                if cycle > opts.start_cycle {
+                    let ms = epoch_t0.elapsed().as_millis() as u64;
+                    if ms > budget {
+                        break Err(SimError::new(
+                            cycle,
+                            SimPhase::Barrier,
+                            format!("watchdog: epoch took {ms} ms (budget {budget} ms)"),
+                        ));
+                    }
+                }
+                epoch_t0 = Instant::now();
             }
             if opts.timed {
                 let tw = Instant::now();
@@ -795,13 +1031,14 @@ impl Model {
             }
             timers.unit_ticks += n_units as u64;
             cycle += 1;
-        }
+        };
         timers.cycles = cycle;
         let wall = t0.elapsed();
         self.put_scratch_buf(dirty);
+        result?;
         let mut counters = self.counters.snapshot();
         counters.merge(&self.unit_stats());
-        RunStats {
+        Ok(RunStats {
             cycles: cycle,
             wall,
             workers: 1,
@@ -811,31 +1048,103 @@ impl Model {
             fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
             repart: Default::default(),
             cross_cluster_ports: 0,
-        }
+        })
     }
 
-    fn run_serial_active(&mut self, opts: RunOpts) -> RunStats {
+    fn run_serial_active(
+        &mut self,
+        opts: RunOpts,
+        sup: &SuperviseOpts,
+    ) -> Result<RunStats, SimError> {
         let n_units = self.num_units();
         let all: Vec<u32> = (0..n_units as u32).collect();
+        let serial_partition: Vec<Vec<u32>> = vec![all.clone()];
         let state = ActiveState::new(std::slice::from_ref(&all), n_units, self.num_ports());
         let mut active = all;
         let mut dirty = self.take_scratch_buf();
-        self.seed_dirty(&mut dirty);
+        if let Some(res) = sup.resume.as_ref() {
+            // Checkpoint resume: reinstate the snapshot's sleep/wake flags,
+            // then seed the worklists exactly as `rebuild_cluster_state`
+            // would — active list from the flags, dirty list from staged
+            // out-halves minus back-pressure-parked ports.
+            // SAFETY: `&mut self`, state not yet shared — exclusive.
+            unsafe {
+                state.set_flags(&res.asleep, &res.port_blocked);
+                active.retain(|&u| !res.asleep[u as usize]);
+                for p in 0..self.arena.len() as u32 {
+                    if self.arena.out_len_hint(p) > 0 && !state.is_port_blocked(p) {
+                        dirty.push(p);
+                    }
+                }
+            }
+        } else {
+            self.seed_dirty(&mut dirty);
+        }
         let t0 = Instant::now();
         let mut timers = PhaseTimers::new();
-        let mut cycle = 0u64;
-        loop {
-            if self.should_stop(&opts.stop, cycle) {
-                break;
-            }
+        let mut cycle = opts.start_cycle;
+        let mut epoch_t0 = Instant::now();
+        let mut stall_streak: u32 = 0;
+        let result = loop {
             // SAFETY (throughout): single thread — trivially exclusive for
             // every phase of the sleep/wake ownership schedule.
             unsafe {
+                // Drain last cycle's wake boxes *before* the supervision
+                // hooks so a checkpoint observes canonical flags (no wake
+                // may be pending in a box when the flags are snapshotted).
                 state.drain_wakes(0, &mut active);
+                if let Some(ck) = &sup.checkpoint {
+                    if Self::checkpoint_due(ck, cycle, opts.start_cycle) {
+                        let res = self.write_checkpoint(
+                            ck,
+                            cycle,
+                            &state.asleep_flags(),
+                            &state.blocked_flags(),
+                            &serial_partition,
+                            None,
+                        );
+                        if let Err(msg) = res {
+                            break Err(SimError::new(cycle, SimPhase::Barrier, msg));
+                        }
+                    }
+                }
+                if self.should_stop_shared(&opts.stop, cycle) {
+                    break Ok(());
+                }
+                if let Some(u) = sup.faults.panic_unit_at(cycle, |_| true) {
+                    break Err(SimError::new(cycle, SimPhase::Work, "injected fault: panic")
+                        .with_cluster(0)
+                        .with_unit(u));
+                }
+                // Injected stall: force-park the unit after wake draining so
+                // any wake it received this barrier is suppressed — the
+                // deterministic simulation of a lost wakeup.
+                for u in sup.faults.stalled_units(cycle) {
+                    if (u as usize) < n_units && !state.is_asleep(u) {
+                        state.park(u);
+                        active.retain(|&x| x != u);
+                    }
+                }
+                if let Some(ms) = sup.faults.delay_for(cycle, 0) {
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+                if let Some(budget) = sup.watchdog.epoch_budget_ms {
+                    if cycle > opts.start_cycle {
+                        let ms = epoch_t0.elapsed().as_millis() as u64;
+                        if ms > budget {
+                            break Err(SimError::new(
+                                cycle,
+                                SimPhase::Barrier,
+                                format!("watchdog: epoch took {ms} ms (budget {budget} ms)"),
+                            ));
+                        }
+                    }
+                    epoch_t0 = Instant::now();
+                }
+                let ticks;
                 if opts.timed {
                     let tw = Instant::now();
-                    timers.unit_ticks +=
-                        self.work_active(&mut active, cycle, &mut dirty, &state, 0, None);
+                    ticks = self.work_active(&mut active, cycle, &mut dirty, &state, 0, None);
                     timers.work_ns += tw.elapsed().as_nanos() as u64;
                     let tt = Instant::now();
                     state.drain_port_wakes(0, &mut dirty);
@@ -843,21 +1152,39 @@ impl Model {
                     self.transfer_dirty_wake(&mut dirty, cycle, &state, 0);
                     timers.transfer_ns += tt.elapsed().as_nanos() as u64;
                 } else {
-                    timers.unit_ticks +=
-                        self.work_active(&mut active, cycle, &mut dirty, &state, 0, None);
+                    ticks = self.work_active(&mut active, cycle, &mut dirty, &state, 0, None);
                     state.drain_port_wakes(0, &mut dirty);
                     timers.port_walks += dirty.len() as u64;
                     self.transfer_dirty_wake(&mut dirty, cycle, &state, 0);
                 }
+                timers.unit_ticks += ticks;
+                // Debounced: a delivery across a multi-cycle-delay port can
+                // land on a zero-tick epoch, but the wake it posted only
+                // drains next cycle — a healthy run always ticks on the
+                // following epoch, so only *consecutive* zero-tick epochs
+                // with queued messages are a genuine lost wakeup.
+                if sup.watchdog.check_stall && ticks == 0 {
+                    if let Some(e) = self.stall_check(cycle) {
+                        stall_streak += 1;
+                        if stall_streak >= 2 {
+                            break Err(e);
+                        }
+                    } else {
+                        stall_streak = 0;
+                    }
+                } else {
+                    stall_streak = 0;
+                }
             }
             cycle += 1;
-        }
+        };
         timers.cycles = cycle;
         let wall = t0.elapsed();
         self.put_scratch_buf(dirty);
+        result?;
         let mut counters = self.counters.snapshot();
         counters.merge(&self.unit_stats());
-        RunStats {
+        Ok(RunStats {
             cycles: cycle,
             wall,
             workers: 1,
@@ -867,7 +1194,7 @@ impl Model {
             fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
             repart: Default::default(),
             cross_cluster_ports: 0,
-        }
+        })
     }
 
     /// Serial run instrumented per cluster: attributes work/transfer time

@@ -29,6 +29,7 @@
 //! unit-level ownership on every access via `debug_assert`s in `Ctx`.
 
 use super::message::{Fnv, Msg};
+use super::snapshot::{Persist, SnapshotReader, SnapshotWriter};
 use std::cell::UnsafeCell;
 use std::collections::VecDeque;
 
@@ -282,6 +283,48 @@ impl PortArena {
             n += c.get_mut().q.len();
         }
         n
+    }
+
+    /// Serialize every port's queue contents — staged out-halves and
+    /// delivered in-halves with their ready cycles. Capacities and delays
+    /// are rebuild-time configuration and are not written.
+    ///
+    /// # Safety
+    /// Caller must hold logical exclusivity (e.g. the scheduler between
+    /// ticks, when all workers are parked at a barrier).
+    pub(crate) unsafe fn save_state(&self, w: &mut SnapshotWriter) {
+        w.put_u64(self.outs.len() as u64);
+        for i in 0..self.outs.len() {
+            Persist::save(&(*self.outs[i].get()).q, w);
+            Persist::save(&(*self.ins[i].get()).q, w);
+        }
+    }
+
+    /// Refill every port queue from a snapshot and rebuild the packed
+    /// occupancy hints (`&mut self`: exclusive by construction).
+    pub(crate) fn load_state(&mut self, r: &mut SnapshotReader<'_>) {
+        let n = r.get_u64() as usize;
+        if n != self.outs.len() {
+            r.fail(format!(
+                "snapshot has {n} ports, model has {} — config mismatch",
+                self.outs.len()
+            ));
+            return;
+        }
+        for i in 0..n {
+            let out = self.outs[i].get_mut();
+            out.q = Persist::load(r);
+            let inp = self.ins[i].get_mut();
+            inp.q = Persist::load(r);
+            if out.q.len() > out.cap || inp.q.len() > inp.cap {
+                r.fail(format!(
+                    "port {i}: snapshot queue exceeds capacity — config mismatch"
+                ));
+                return;
+            }
+            *self.out_lens[i].get_mut() = out.q.len() as u32;
+            *self.in_lens[i].get_mut() = inp.q.len() as u32;
+        }
     }
 
     /// Fingerprint all queue contents (exclusive access required).

@@ -482,6 +482,25 @@ impl Repartitioner {
         }
     }
 
+    /// Snapshot the EWMA/back-off position for a barrier checkpoint.
+    pub(crate) fn resume_state(&self) -> super::supervise::RepartResume {
+        super::supervise::RepartResume {
+            ewma: self.ewma,
+            reject_streak: self.reject_streak,
+            plan_ok_at: self.plan_ok_at,
+            next_check: self.next_check,
+        }
+    }
+
+    /// Reinstate a checkpointed EWMA/back-off position, so a restored
+    /// adaptive run resumes its probing rhythm instead of restarting cold.
+    pub(crate) fn restore_from(&mut self, r: super::supervise::RepartResume) {
+        self.ewma = r.ewma;
+        self.reject_streak = r.reject_streak;
+        self.plan_ok_at = r.plan_ok_at;
+        self.next_check = r.next_check;
+    }
+
     /// A plan the migration gate rejected: under `Adaptive`, stretch the
     /// planner re-arm distance multiplicatively (probe cadence ×
     /// backoff^streak) so repeatedly futile plans stop being computed.

@@ -33,15 +33,19 @@
 //! crate-internal; `Model::run_serial` stays public as the reference
 //! semantics.
 
+use std::path::{Path, PathBuf};
+
 use super::active::SchedMode;
 use super::model::{Model, RunOpts, Stop};
 use super::repart::RepartitionPolicy;
+use super::snapshot::{read_snapshot_file, Persist, SnapshotReader, SnapshotWriter};
+use super::supervise::{CheckpointCfg, FaultPlan, ResumeState, SuperviseOpts, Watchdog};
 use crate::sched::{
     cross_cluster_ports, partition, partition_cost_locality, partition_with_costs,
     PartitionStrategy,
 };
 use crate::stats::{PhaseTimers, RunStats};
-use crate::sync::{run_ladder, ParallelOpts, SpinMode, SyncMethod};
+use crate::sync::{run_ladder_supervised, ParallelOpts, SpinMode, SyncMethod};
 use crate::util::config::Config;
 
 /// Default profiling-prologue length (cycles) for cost-balanced
@@ -110,6 +114,22 @@ pub struct Sim {
     unit_costs: Option<Vec<u64>>,
     profile_cycles: u64,
     repart: RepartitionPolicy,
+    /// Scenario config, retained so a checkpoint can record how to
+    /// rebuild the exact session (`Sim::restore`).
+    scenario_cfg: Option<Config>,
+    /// `(every, path)`: write a snapshot at the cycle barrier every
+    /// `every` cycles.
+    checkpoint: Option<(u64, PathBuf)>,
+    faults: FaultPlan,
+    watchdog: Watchdog,
+    /// Snapshot body + offset of the state section (set by
+    /// [`Sim::restore`]; consumed by `run()`).
+    restore: Option<RestoreData>,
+}
+
+struct RestoreData {
+    body: Vec<u8>,
+    state_at: usize,
 }
 
 impl Sim {
@@ -133,6 +153,11 @@ impl Sim {
             unit_costs: None,
             profile_cycles: DEFAULT_PROFILE_CYCLES,
             repart: RepartitionPolicy::default(),
+            scenario_cfg: None,
+            checkpoint: None,
+            faults: FaultPlan::default(),
+            watchdog: Watchdog::default(),
+            restore: None,
         }
     }
 
@@ -153,6 +178,7 @@ impl Sim {
         let rebuild_cfg = cfg.clone();
         let mut sim = Sim::from_model(model);
         sim.scenario = Some(canonical);
+        sim.scenario_cfg = Some(cfg.clone());
         sim.stop = Some(stop);
         sim.scratch = Some(Box::new(move || {
             crate::scenario::find(&rebuild_name)
@@ -268,6 +294,60 @@ impl Sim {
         self
     }
 
+    /// Write a checkpoint snapshot to `path` every `every` cycles, at the
+    /// cycle barrier (atomically: `.tmp` sibling + rename). Requires a
+    /// scenario session — the snapshot records the scenario name and
+    /// config so [`Sim::restore`] can rebuild the model — and a model
+    /// whose units all support persistence
+    /// (`crate::persist_fields!`). A restored run finishes with a
+    /// fingerprint bit-identical to an uninterrupted one.
+    pub fn checkpoint_every(mut self, every: u64, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint = Some((every.max(1), path.into()));
+        self
+    }
+
+    /// Inject deterministic faults (panics, stalls, delays) — the
+    /// test/CI knob behind `--inject`. See
+    /// [`FaultPlan`](crate::engine::FaultPlan).
+    pub fn inject(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
+    /// Configure the barrier-side watchdog (stall detection is on by
+    /// default; the per-epoch wall-time budget is opt-in).
+    pub fn watchdog(mut self, wd: Watchdog) -> Self {
+        self.watchdog = wd;
+        self
+    }
+
+    /// Rebuild a session from a snapshot written by
+    /// [`Sim::checkpoint_every`]. The snapshot's meta block names the
+    /// scenario and its config; the restored session resumes at the
+    /// checkpointed cycle with bit-identical state and runs to the
+    /// scenario's natural stop condition. Engine topology (workers, sync
+    /// method, scheduling mode, ...) is the caller's to chain afterwards —
+    /// it is an execution choice, not simulation state, so a serial
+    /// checkpoint may be resumed on the ladder and vice versa.
+    pub fn restore(path: impl AsRef<Path>) -> Result<Sim, String> {
+        let body = read_snapshot_file(path.as_ref())?;
+        let (name, cfg, state_at) = {
+            let mut r = SnapshotReader::new(&body);
+            let name = String::load(&mut r);
+            let pairs = Vec::<(String, String)>::load(&mut r);
+            r.ok_or_err()
+                .map_err(|e| format!("snapshot meta block: {e}"))?;
+            let mut cfg = Config::new();
+            for (k, v) in &pairs {
+                cfg.set(k, v);
+            }
+            (name, cfg, r.pos())
+        };
+        let mut sim = Sim::scenario(&name, &cfg)?;
+        sim.restore = Some(RestoreData { body, state_at });
+        Ok(sim)
+    }
+
     /// Use an explicit unit→cluster mapping instead of a strategy. The
     /// partition must place every unit in exactly one cluster (validated
     /// at `run()` — the ladder engine's safety argument depends on it).
@@ -363,13 +443,90 @@ impl Sim {
         let stop = self
             .stop
             .ok_or("no stop condition: call .stop(...) or .cycles(n)")?;
+        let units = self.model.num_units();
+
+        // ---- restore: load snapshot state into the rebuilt model ----
+        let mut start_cycle = 0u64;
+        let mut resume: Option<ResumeState> = None;
+        if let Some(rd) = self.restore.take() {
+            let mut r = SnapshotReader::at(&rd.body, rd.state_at);
+            start_cycle = u64::load(&mut r);
+            self.model.load_state(&mut r);
+            let asleep = Vec::<bool>::load(&mut r);
+            let port_blocked = Vec::<bool>::load(&mut r);
+            let partition = Vec::<Vec<u32>>::load(&mut r);
+            let repart = Option::<super::supervise::RepartResume>::load(&mut r);
+            r.ok_or_err()
+                .map_err(|e| format!("snapshot state block: {e}"))?;
+            if asleep.len() != units || port_blocked.len() != self.model.num_ports() {
+                return Err(format!(
+                    "snapshot flags do not match the rebuilt model ({} unit flags \
+                     for {units} units, {} port flags for {} ports)",
+                    asleep.len(),
+                    port_blocked.len(),
+                    self.model.num_ports()
+                ));
+            }
+            // Resume on the checkpointed partition when it fits the
+            // requested cluster count — placement is semantically free,
+            // but keeping it avoids a cold repartition ramp.
+            if self.explicit_partition.is_none()
+                && !partition.is_empty()
+                && partition.len() == self.workers.max(1).min(units.max(1))
+            {
+                self.explicit_partition = Some(partition.clone());
+            }
+            resume = Some(ResumeState {
+                asleep,
+                port_blocked,
+                partition,
+                repart,
+            });
+        }
         let opts = RunOpts {
             stop,
             timed: self.timed,
             fingerprint: self.fingerprint,
             sched: self.sched,
+            start_cycle,
         };
-        let units = self.model.num_units();
+
+        // ---- checkpoint meta: scenario name + config pairs ----
+        let sup_checkpoint = match self.checkpoint.as_ref() {
+            None => None,
+            Some((every, path)) => {
+                let name = self.scenario.as_deref().ok_or_else(|| {
+                    "checkpointing requires a scenario session (Sim::scenario): \
+                     the snapshot must record how to rebuild the model"
+                        .to_string()
+                })?;
+                if let Some(what) = self.model.snapshot_unsupported() {
+                    return Err(format!(
+                        "cannot checkpoint scenario {name:?}: {what} does not \
+                         support state snapshots"
+                    ));
+                }
+                let mut w = SnapshotWriter::new();
+                name.to_string().save(&mut w);
+                self.scenario_cfg
+                    .as_ref()
+                    .map(|c| c.pairs())
+                    .unwrap_or_default()
+                    .save(&mut w);
+                let meta = w.finish()?;
+                Some(CheckpointCfg {
+                    every: *every,
+                    path: path.clone(),
+                    meta,
+                })
+            }
+        };
+        let sup = SuperviseOpts {
+            faults: std::mem::take(&mut self.faults),
+            watchdog: self.watchdog,
+            checkpoint: sup_checkpoint,
+            resume,
+        };
         let engine = match self.engine {
             Engine::Auto => {
                 let clusters = self
@@ -395,11 +552,22 @@ impl Sim {
                     validate_partition(p, units)?;
                 }
                 let part = vec![(0..units as u32).collect()];
-                let stats = self.model.run_serial(opts);
+                let stats = self
+                    .model
+                    .run_serial_supervised(opts, &sup)
+                    .map_err(|e| e.to_string())?;
                 let per_cluster = stats.per_worker.clone();
                 (part, stats, per_cluster)
             }
             Engine::Partitioned => {
+                if sup.checkpoint.is_some() || sup.resume.is_some() || !sup.faults.is_empty() {
+                    return Err(
+                        "the partitioned serial engine does not support \
+                         checkpoint/restore or fault injection; use the serial \
+                         or ladder engine"
+                            .to_string(),
+                    );
+                }
                 let part = self.resolve_partition()?;
                 let (stats, per_cluster) = self.model.run_serial_partitioned(&part, opts);
                 (part, stats, per_cluster)
@@ -413,7 +581,8 @@ impl Sim {
                     repart: self.repart,
                     repart_locality: self.strategy == PartitionStrategy::CostLocality,
                 };
-                let stats = run_ladder(&mut self.model, &part, &popts);
+                let stats = run_ladder_supervised(&mut self.model, &part, &popts, &sup)
+                    .map_err(|e| e.to_string())?;
                 let per_cluster = stats.per_worker.clone();
                 (part, stats, per_cluster)
             }

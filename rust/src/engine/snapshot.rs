@@ -1,0 +1,687 @@
+//! Versioned, checksummed snapshot serialization for barrier
+//! checkpoint/restore (crash-resilient runs).
+//!
+//! A snapshot captures the *deterministic* simulation state at a cycle
+//! barrier — the same exclusive all-workers-parked window the
+//! repartitioner uses — so a killed run can be restored and finish with a
+//! fingerprint bit-identical to an uninterrupted one. The format is a
+//! flat little-endian byte stream:
+//!
+//! ```text
+//! magic "SSIMSNAP" | version u32 | body ... | fnv1a-64 checksum
+//! ```
+//!
+//! The body is composed with [`SnapshotWriter`] / [`SnapshotReader`] and
+//! the [`Persist`] trait: scenario name + config pairs (so `--restore`
+//! can rebuild the model without `--scenario`), then cycle, counters,
+//! per-unit state ([`crate::engine::Unit::save`]), port queues (both
+//! halves), `ActiveState` sleep/park flags, the live partition, and the
+//! repartitioner's EWMA/backoff resume block.
+//!
+//! What is deliberately *not* serialized:
+//!
+//! - **Pending wake boxes** — the checkpoint hook normalizes through
+//!   `Model::rebuild_cluster_state` first (apply pending wakes, re-derive
+//!   active and dirty lists from the sleep flags and queue occupancy),
+//!   which is semantically invisible by the same argument that makes
+//!   mid-run migration invisible. After normalization the boxes are empty
+//!   and the flags are canonical.
+//! - **Cost samples** — profiling state only steers *where* units run,
+//!   never *when*; a restored run may re-profile and migrate differently
+//!   without touching the fingerprint.
+//! - **Boxed `Msg` payloads** — none of the in-tree substrates use them
+//!   for in-flight traffic; a model that does gets a hard serialization
+//!   error rather than a silent drop.
+//!
+//! Writes go through a sibling `.tmp` file and an atomic rename, so a
+//! crash mid-checkpoint leaves the previous snapshot intact.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+
+use super::message::Msg;
+use crate::util::rng::{Rng, SplitMix64};
+
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"SSIMSNAP";
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// FNV-1a 64 over raw bytes (the file checksum; `engine::Fnv` hashes u64
+/// words and is kept for fingerprints).
+fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Append-only body builder with sticky-error semantics: the first
+/// failure is recorded and surfaces once from [`SnapshotWriter::finish`],
+/// so unit `save` implementations never need to thread `Result`s.
+pub struct SnapshotWriter {
+    buf: Vec<u8>,
+    err: Option<String>,
+}
+
+impl Default for SnapshotWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SnapshotWriter {
+    pub fn new() -> Self {
+        SnapshotWriter {
+            buf: Vec::with_capacity(4096),
+            err: None,
+        }
+    }
+
+    /// Record a serialization failure (first one wins).
+    pub fn fail(&mut self, msg: impl Into<String>) {
+        if self.err.is_none() {
+            self.err = Some(msg.into());
+        }
+    }
+
+    #[inline]
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn finish(self) -> Result<Vec<u8>, String> {
+        match self.err {
+            Some(e) => Err(e),
+            None => Ok(self.buf),
+        }
+    }
+}
+
+/// Cursor over a snapshot body with the same sticky-error discipline:
+/// after the first failure every read returns a zero value and the error
+/// is reported once by [`SnapshotReader::ok_or_err`].
+pub struct SnapshotReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    err: Option<String>,
+}
+
+impl<'a> SnapshotReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        SnapshotReader { buf, pos: 0, err: None }
+    }
+
+    /// Resume reading at a saved offset (the `Sim` restore path parses
+    /// the meta prefix eagerly and the state body later, at run time).
+    pub fn at(buf: &'a [u8], pos: usize) -> Self {
+        SnapshotReader { buf, pos, err: None }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn error(&self) -> Option<&str> {
+        self.err.as_deref()
+    }
+
+    pub fn fail(&mut self, msg: impl Into<String>) {
+        if self.err.is_none() {
+            self.err = Some(msg.into());
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.err.is_some() {
+            return None;
+        }
+        if self.remaining() < n {
+            self.fail(format!(
+                "snapshot truncated: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+            return None;
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Some(s)
+    }
+
+    #[inline]
+    pub fn get_u8(&mut self) -> u8 {
+        self.take(1).map(|b| b[0]).unwrap_or(0)
+    }
+
+    #[inline]
+    pub fn get_u32(&mut self) -> u32 {
+        self.take(4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .unwrap_or(0)
+    }
+
+    #[inline]
+    pub fn get_u64(&mut self) -> u64 {
+        self.take(8)
+            .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+            .unwrap_or(0)
+    }
+
+    pub fn get_bytes(&mut self, n: usize) -> &'a [u8] {
+        self.take(n).unwrap_or(&[])
+    }
+
+    /// Surface the sticky error, if any.
+    pub fn ok_or_err(&self) -> Result<(), String> {
+        match &self.err {
+            Some(e) => Err(e.clone()),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Field-wise binary serialization into a snapshot body. Implementations
+/// must be deterministic and version-stable; structural changes bump
+/// [`SNAPSHOT_VERSION`].
+pub trait Persist: Sized {
+    fn save(&self, w: &mut SnapshotWriter);
+    fn load(r: &mut SnapshotReader<'_>) -> Self;
+}
+
+impl Persist for u8 {
+    fn save(&self, w: &mut SnapshotWriter) {
+        w.put_u8(*self);
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        r.get_u8()
+    }
+}
+
+impl Persist for u32 {
+    fn save(&self, w: &mut SnapshotWriter) {
+        w.put_u32(*self);
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        r.get_u32()
+    }
+}
+
+impl Persist for u64 {
+    fn save(&self, w: &mut SnapshotWriter) {
+        w.put_u64(*self);
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        r.get_u64()
+    }
+}
+
+impl Persist for usize {
+    fn save(&self, w: &mut SnapshotWriter) {
+        w.put_u64(*self as u64);
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        r.get_u64() as usize
+    }
+}
+
+impl Persist for bool {
+    fn save(&self, w: &mut SnapshotWriter) {
+        w.put_u8(*self as u8);
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        r.get_u8() != 0
+    }
+}
+
+impl Persist for f64 {
+    fn save(&self, w: &mut SnapshotWriter) {
+        w.put_u64(self.to_bits());
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        f64::from_bits(r.get_u64())
+    }
+}
+
+impl Persist for String {
+    fn save(&self, w: &mut SnapshotWriter) {
+        w.put_u64(self.len() as u64);
+        w.put_bytes(self.as_bytes());
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        let n = r.get_u64() as usize;
+        let bytes = r.get_bytes(n).to_vec();
+        match String::from_utf8(bytes) {
+            Ok(s) => s,
+            Err(_) => {
+                r.fail("snapshot string is not valid UTF-8");
+                String::new()
+            }
+        }
+    }
+}
+
+impl<T: Persist> Persist for Option<T> {
+    fn save(&self, w: &mut SnapshotWriter) {
+        match self {
+            None => w.put_u8(0),
+            Some(v) => {
+                w.put_u8(1);
+                v.save(w);
+            }
+        }
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        match r.get_u8() {
+            0 => None,
+            1 => Some(T::load(r)),
+            t => {
+                r.fail(format!("bad Option tag {t}"));
+                None
+            }
+        }
+    }
+}
+
+impl<T: Persist> Persist for Vec<T> {
+    fn save(&self, w: &mut SnapshotWriter) {
+        w.put_u64(self.len() as u64);
+        for it in self {
+            it.save(w);
+        }
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        let n = r.get_u64();
+        // Every Persist encoding is at least one byte, so a length prefix
+        // beyond the remaining bytes is corruption, not a big vector.
+        if n > r.remaining() as u64 {
+            r.fail(format!("length prefix {n} exceeds snapshot size"));
+            return Vec::new();
+        }
+        let mut v = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            if r.error().is_some() {
+                break;
+            }
+            v.push(T::load(r));
+        }
+        v
+    }
+}
+
+/// Save a slice with the same framing as `Vec<T>` (so it loads back as a
+/// `Vec<T>`), without cloning into an owned vector first.
+pub fn save_slice<T: Persist>(s: &[T], w: &mut SnapshotWriter) {
+    w.put_u64(s.len() as u64);
+    for it in s {
+        it.save(w);
+    }
+}
+
+impl<T: Persist> Persist for VecDeque<T> {
+    fn save(&self, w: &mut SnapshotWriter) {
+        w.put_u64(self.len() as u64);
+        for it in self {
+            it.save(w);
+        }
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        Vec::<T>::load(r).into()
+    }
+}
+
+impl<K: Persist + Ord, V: Persist> Persist for BTreeMap<K, V> {
+    fn save(&self, w: &mut SnapshotWriter) {
+        w.put_u64(self.len() as u64);
+        for (k, v) in self {
+            k.save(w);
+            v.save(w);
+        }
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        let n = r.get_u64();
+        if n > r.remaining() as u64 {
+            r.fail(format!("length prefix {n} exceeds snapshot size"));
+            return BTreeMap::new();
+        }
+        let mut m = BTreeMap::new();
+        for _ in 0..n {
+            if r.error().is_some() {
+                break;
+            }
+            let k = K::load(r);
+            let v = V::load(r);
+            m.insert(k, v);
+        }
+        m
+    }
+}
+
+impl<A: Persist, B: Persist> Persist for (A, B) {
+    fn save(&self, w: &mut SnapshotWriter) {
+        self.0.save(w);
+        self.1.save(w);
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        let a = A::load(r);
+        let b = B::load(r);
+        (a, b)
+    }
+}
+
+impl<A: Persist, B: Persist, C: Persist> Persist for (A, B, C) {
+    fn save(&self, w: &mut SnapshotWriter) {
+        self.0.save(w);
+        self.1.save(w);
+        self.2.save(w);
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        let a = A::load(r);
+        let b = B::load(r);
+        let c = C::load(r);
+        (a, b, c)
+    }
+}
+
+impl Persist for Msg {
+    fn save(&self, w: &mut SnapshotWriter) {
+        if self.payload.is_some() {
+            w.fail(
+                "a message with a boxed payload is in flight — boxed payloads \
+                 are not checkpointable (encode state in the scalar words)",
+            );
+        }
+        w.put_u32(self.kind);
+        w.put_u32(self.src);
+        w.put_u64(self.a);
+        w.put_u64(self.b);
+        w.put_u64(self.c);
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        Msg {
+            kind: r.get_u32(),
+            src: r.get_u32(),
+            a: r.get_u64(),
+            b: r.get_u64(),
+            c: r.get_u64(),
+            payload: None,
+        }
+    }
+}
+
+impl Persist for Rng {
+    fn save(&self, w: &mut SnapshotWriter) {
+        for v in self.state() {
+            w.put_u64(v);
+        }
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        let mut s = [0u64; 4];
+        for v in &mut s {
+            *v = r.get_u64();
+        }
+        Rng::from_state(s)
+    }
+}
+
+impl Persist for SplitMix64 {
+    fn save(&self, w: &mut SnapshotWriter) {
+        w.put_u64(self.state());
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        SplitMix64::from_state(r.get_u64())
+    }
+}
+
+/// Implements the three snapshot methods of [`crate::engine::Unit`]
+/// (`snapshot_supported`, `save`, `load`) over the listed *mutable* state
+/// fields, in declaration order. Config-derived fields (ports, traces,
+/// latencies) are rebuilt by the scenario on restore and must not be
+/// listed. Use inside an `impl Unit for T` block:
+///
+/// ```ignore
+/// impl Unit for PipeStage {
+///     fn work(&mut self, ctx: &mut Ctx<'_>) { ... }
+///     crate::persist_fields!(seq, received, acc);
+/// }
+/// ```
+#[macro_export]
+macro_rules! persist_fields {
+    ($($field:ident),+ $(,)?) => {
+        fn snapshot_supported(&self) -> bool {
+            true
+        }
+        fn save(&self, w: &mut $crate::engine::snapshot::SnapshotWriter) {
+            $($crate::engine::snapshot::Persist::save(&self.$field, w);)+
+        }
+        fn load(&mut self, r: &mut $crate::engine::snapshot::SnapshotReader<'_>) {
+            $(self.$field = $crate::engine::snapshot::Persist::load(r);)+
+        }
+    };
+}
+
+/// Implements [`Persist`] for a plain struct over the listed fields —
+/// the derive-style helper for the POD records that ride inside unit
+/// state (MSHRs, directory entries, in-service DRAM requests, ...).
+#[macro_export]
+macro_rules! impl_persist {
+    ($ty:ty { $($field:ident),+ $(,)? }) => {
+        impl $crate::engine::snapshot::Persist for $ty {
+            fn save(&self, w: &mut $crate::engine::snapshot::SnapshotWriter) {
+                $($crate::engine::snapshot::Persist::save(&self.$field, w);)+
+            }
+            fn load(r: &mut $crate::engine::snapshot::SnapshotReader<'_>) -> Self {
+                $(let $field = $crate::engine::snapshot::Persist::load(r);)+
+                Self { $($field),+ }
+            }
+        }
+    };
+}
+
+/// Frame `body` (magic + version + body + checksum) and write it
+/// atomically: the bytes land in a sibling `.tmp` file first, then a
+/// rename makes the snapshot visible, so a crash mid-write cannot
+/// corrupt an existing snapshot.
+pub fn write_snapshot_file(path: &Path, body: &[u8]) -> Result<(), String> {
+    let mut framed = Vec::with_capacity(body.len() + 20);
+    framed.extend_from_slice(SNAPSHOT_MAGIC);
+    framed.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+    framed.extend_from_slice(body);
+    let sum = fnv1a_bytes(&framed);
+    framed.extend_from_slice(&sum.to_le_bytes());
+
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| format!("checkpoint path {} has no file name", path.display()))?;
+    let mut tmp_name = file_name.to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    std::fs::write(&tmp, &framed).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+}
+
+/// Read a snapshot file, verify magic, version and checksum, and return
+/// the body bytes.
+pub fn read_snapshot_file(path: &Path) -> Result<Vec<u8>, String> {
+    let bytes =
+        std::fs::read(path).map_err(|e| format!("read snapshot {}: {e}", path.display()))?;
+    let min = SNAPSHOT_MAGIC.len() + 4 + 8;
+    if bytes.len() < min {
+        return Err(format!(
+            "snapshot {} too short ({} bytes)",
+            path.display(),
+            bytes.len()
+        ));
+    }
+    if &bytes[..8] != SNAPSHOT_MAGIC {
+        return Err(format!("snapshot {}: bad magic", path.display()));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != SNAPSHOT_VERSION {
+        return Err(format!(
+            "snapshot {}: version {version} unsupported (expected {SNAPSHOT_VERSION})",
+            path.display()
+        ));
+    }
+    let split = bytes.len() - 8;
+    let stored = u64::from_le_bytes(bytes[split..].try_into().unwrap());
+    let computed = fnv1a_bytes(&bytes[..split]);
+    if stored != computed {
+        return Err(format!(
+            "snapshot {}: checksum mismatch (stored {stored:#018x}, computed \
+             {computed:#018x}) — file is corrupt or was truncated",
+            path.display()
+        ));
+    }
+    Ok(bytes[12..split].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_roundtrip() {
+        let mut w = SnapshotWriter::new();
+        42u8.save(&mut w);
+        7u32.save(&mut w);
+        u64::MAX.save(&mut w);
+        123usize.save(&mut w);
+        true.save(&mut w);
+        (-1.5f64).save(&mut w);
+        "héllo".to_string().save(&mut w);
+        Some(9u64).save(&mut w);
+        Option::<u64>::None.save(&mut w);
+        vec![1u32, 2, 3].save(&mut w);
+        VecDeque::from(vec![(1u64, 2u64)]).save(&mut w);
+        let mut m = BTreeMap::new();
+        m.insert(5u64, "x".to_string());
+        m.save(&mut w);
+        let body = w.finish().unwrap();
+
+        let mut r = SnapshotReader::new(&body);
+        assert_eq!(u8::load(&mut r), 42);
+        assert_eq!(u32::load(&mut r), 7);
+        assert_eq!(u64::load(&mut r), u64::MAX);
+        assert_eq!(usize::load(&mut r), 123);
+        assert!(bool::load(&mut r));
+        assert_eq!(f64::load(&mut r), -1.5);
+        assert_eq!(String::load(&mut r), "héllo");
+        assert_eq!(Option::<u64>::load(&mut r), Some(9));
+        assert_eq!(Option::<u64>::load(&mut r), None);
+        assert_eq!(Vec::<u32>::load(&mut r), vec![1, 2, 3]);
+        assert_eq!(
+            VecDeque::<(u64, u64)>::load(&mut r),
+            VecDeque::from(vec![(1, 2)])
+        );
+        assert_eq!(BTreeMap::<u64, String>::load(&mut r), m);
+        assert_eq!(r.remaining(), 0);
+        r.ok_or_err().unwrap();
+    }
+
+    #[test]
+    fn msg_roundtrip_and_payload_rejection() {
+        let mut w = SnapshotWriter::new();
+        let m = Msg::with(3, 4, 5, 6);
+        m.save(&mut w);
+        let body = w.finish().unwrap();
+        let mut r = SnapshotReader::new(&body);
+        let back = Msg::load(&mut r);
+        assert_eq!(
+            (back.kind, back.a, back.b, back.c),
+            (m.kind, m.a, m.b, m.c)
+        );
+
+        let mut w = SnapshotWriter::new();
+        Msg::new(1).with_payload(vec![1u8]).save(&mut w);
+        assert!(w.finish().is_err(), "boxed payloads must be rejected");
+    }
+
+    #[test]
+    fn rng_roundtrip_continues_stream() {
+        let mut rng = Rng::from_seed_stream(99, 3);
+        for _ in 0..17 {
+            rng.next_u64();
+        }
+        let mut w = SnapshotWriter::new();
+        rng.save(&mut w);
+        let body = w.finish().unwrap();
+        let mut r = SnapshotReader::new(&body);
+        let mut restored = Rng::load(&mut r);
+        assert_eq!(restored.next_u64(), rng.next_u64());
+        assert_eq!(restored.next_u64(), rng.next_u64());
+    }
+
+    #[test]
+    fn truncation_is_sticky_not_panicky() {
+        let mut w = SnapshotWriter::new();
+        vec![1u64, 2, 3].save(&mut w);
+        let body = w.finish().unwrap();
+        let mut r = SnapshotReader::new(&body[..body.len() - 4]);
+        let _ = Vec::<u64>::load(&mut r);
+        assert!(r.ok_or_err().is_err());
+    }
+
+    #[test]
+    fn corrupt_length_prefix_is_rejected() {
+        let mut w = SnapshotWriter::new();
+        w.put_u64(u64::MAX); // absurd element count
+        let body = w.finish().unwrap();
+        let mut r = SnapshotReader::new(&body);
+        let v = Vec::<u64>::load(&mut r);
+        assert!(v.is_empty());
+        assert!(r.ok_or_err().is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_checksum_and_corruption() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("scalesim_snap_test_{}.snap", std::process::id()));
+        let body = b"deterministic state bytes".to_vec();
+        write_snapshot_file(&path, &body).unwrap();
+        assert_eq!(read_snapshot_file(&path).unwrap(), body);
+
+        // Flip one body byte: checksum must catch it.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[14] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_snapshot_file(&path).unwrap_err();
+        assert!(err.contains("checksum"), "{err}");
+
+        // Bad magic.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_snapshot_file(&path).unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,396 @@
+//! Run supervision: structured failures, deterministic fault injection,
+//! and the stall watchdog (crash-resilient runs).
+//!
+//! Long simulations die all-or-nothing without this layer: a single unit
+//! panic aborts the process with no diagnostics, and a lost wakeup hangs
+//! forever. The supervision layer turns both into structured
+//! [`SimError`]s raised at the cycle barrier:
+//!
+//! - **Panic isolation** — ladder worker bodies run under `catch_unwind`;
+//!   the first panic is recorded here, the failed worker degrades to a
+//!   no-op barrier participant (so the gate protocol never deadlocks),
+//!   and the scheduler converts the record into a `SimError` carrying a
+//!   diagnostic dump (active lists, blocked ports, recent migrations).
+//! - **Stall watchdog** — a barrier-side progress check: under
+//!   active-list scheduling, *two consecutive* epochs in which zero
+//!   units ticked while some input queue still holds messages are
+//!   always a lost wakeup (a single such epoch can be a delay-port
+//!   delivery whose wake is still boxed; a healthy run ticks on the
+//!   epoch after); the watchdog names the parked units instead of
+//!   hanging. An optional per-epoch wall-time budget catches externally
+//!   stuck workers at the next barrier.
+//! - **Fault injection** — [`FaultPlan`] describes deterministic
+//!   panic/stall/delay faults at cycle x unit, threaded through a
+//!   test-only `Sim` knob and `--inject`, so all of the above is
+//!   exercisable reproducibly in tests and CI.
+
+use std::path::PathBuf;
+
+use super::snapshot::{Persist, SnapshotReader, SnapshotWriter};
+use crate::util::cli::parse_u64;
+
+/// Which phase of the ladder protocol a failure surfaced in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimPhase {
+    Work,
+    Transfer,
+    /// Scheduler-side (stop check, repartition, checkpoint, watchdog).
+    Barrier,
+}
+
+impl SimPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimPhase::Work => "work",
+            SimPhase::Transfer => "transfer",
+            SimPhase::Barrier => "barrier",
+        }
+    }
+}
+
+/// A structured simulation failure. `Display` always contains the
+/// literal token `SimError` so scripts (and the CI fault-injection step)
+/// can grep stderr for it.
+#[derive(Debug, Clone)]
+pub struct SimError {
+    /// Cycle the failure was observed at.
+    pub cycle: u64,
+    /// Cluster (worker) index, when the failure is attributable to one.
+    pub cluster: Option<usize>,
+    /// Unit id, when the failure is attributable to one.
+    pub unit: Option<u32>,
+    pub phase: SimPhase,
+    /// Human-readable cause (panic payload, watchdog verdict, ...).
+    pub message: String,
+    /// Multi-line state dump captured at the barrier (active lists,
+    /// blocked ports, recent migrations). May be empty.
+    pub diagnostic: String,
+}
+
+impl SimError {
+    pub fn new(cycle: u64, phase: SimPhase, message: impl Into<String>) -> Self {
+        SimError {
+            cycle,
+            cluster: None,
+            unit: None,
+            phase,
+            message: message.into(),
+            diagnostic: String::new(),
+        }
+    }
+
+    pub fn with_cluster(mut self, cluster: usize) -> Self {
+        self.cluster = Some(cluster);
+        self
+    }
+
+    pub fn with_unit(mut self, unit: u32) -> Self {
+        self.unit = Some(unit);
+        self
+    }
+
+    pub fn with_diagnostic(mut self, diagnostic: impl Into<String>) -> Self {
+        self.diagnostic = diagnostic.into();
+        self
+    }
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "SimError at cycle {} ({} phase",
+            self.cycle,
+            self.phase.name()
+        )?;
+        if let Some(c) = self.cluster {
+            write!(f, ", cluster {c}")?;
+        }
+        if let Some(u) = self.unit {
+            write!(f, ", unit {u}")?;
+        }
+        write!(f, "): {}", self.message)?;
+        if !self.diagnostic.is_empty() {
+            write!(f, "\n--- diagnostic ---\n{}", self.diagnostic)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Extract a printable message from a `catch_unwind` payload.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+/// One deterministic injected fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic while ticking `unit` in the work phase of `cycle`.
+    Panic { cycle: u64, unit: u32 },
+    /// From `cycle` on, force-park `unit` and suppress its wakes — a
+    /// synthetic lost-wakeup bug for exercising the watchdog.
+    Stall { cycle: u64, unit: u32 },
+    /// Sleep `millis` in `cluster`'s work phase at `cycle` — trips the
+    /// epoch wall-time budget.
+    Delay { cycle: u64, cluster: usize, millis: u64 },
+}
+
+/// A reproducible set of injected faults (test/CI tooling; threaded via
+/// `Sim::inject` or `--inject`).
+///
+/// Spec grammar (comma-separated): `panic@CYCLE:UNIT`,
+/// `stall@CYCLE:UNIT`, `delay@CYCLE:CLUSTER:MILLIS`.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub(crate) faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn panic_at(mut self, cycle: u64, unit: u32) -> Self {
+        self.faults.push(Fault::Panic { cycle, unit });
+        self
+    }
+
+    pub fn stall_at(mut self, cycle: u64, unit: u32) -> Self {
+        self.faults.push(Fault::Stall { cycle, unit });
+        self
+    }
+
+    pub fn delay_at(mut self, cycle: u64, cluster: usize, millis: u64) -> Self {
+        self.faults.push(Fault::Delay { cycle, cluster, millis });
+        self
+    }
+
+    /// Parse the `--inject` spec, e.g. `panic@120:3,delay@50:0:200`.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut plan = FaultPlan::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, rest) = part
+                .split_once('@')
+                .ok_or_else(|| format!("bad fault {part:?}: expected KIND@ARGS"))?;
+            let nums: Vec<u64> = rest
+                .split(':')
+                .map(|n| parse_u64(n).map_err(|e| format!("bad fault {part:?}: {e}")))
+                .collect::<Result<_, _>>()?;
+            let fault = match (kind, nums.as_slice()) {
+                ("panic", [cycle, unit]) => Fault::Panic {
+                    cycle: *cycle,
+                    unit: *unit as u32,
+                },
+                ("stall", [cycle, unit]) => Fault::Stall {
+                    cycle: *cycle,
+                    unit: *unit as u32,
+                },
+                ("delay", [cycle, cluster, millis]) => Fault::Delay {
+                    cycle: *cycle,
+                    cluster: *cluster as usize,
+                    millis: *millis,
+                },
+                _ => {
+                    return Err(format!(
+                        "bad fault {part:?}: expected panic@C:U, stall@C:U or \
+                         delay@C:W:MS"
+                    ))
+                }
+            };
+            plan.faults.push(fault);
+        }
+        Ok(plan)
+    }
+
+    /// Unit to panic on while working `unit_cluster`'s units at `cycle`,
+    /// if any (`unit_cluster` filters by a cluster-membership predicate
+    /// supplied by the engine).
+    pub(crate) fn panic_unit_at(
+        &self,
+        cycle: u64,
+        mut owns: impl FnMut(u32) -> bool,
+    ) -> Option<u32> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::Panic { cycle: c, unit } if *c == cycle && owns(*unit) => Some(*unit),
+            _ => None,
+        })
+    }
+
+    /// Units that must be force-parked (wakes suppressed) at `cycle`.
+    pub(crate) fn stalled_units(&self, cycle: u64) -> impl Iterator<Item = u32> + '_ {
+        self.faults.iter().filter_map(move |f| match f {
+            Fault::Stall { cycle: c, unit } if *c <= cycle => Some(*unit),
+            _ => None,
+        })
+    }
+
+    /// Milliseconds `cluster` must sleep in its work phase at `cycle`.
+    pub(crate) fn delay_for(&self, cycle: u64, cluster: usize) -> Option<u64> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::Delay {
+                cycle: c,
+                cluster: w,
+                millis,
+            } if *c == cycle && *w == cluster => Some(*millis),
+            _ => None,
+        })
+    }
+}
+
+/// Watchdog configuration. The stall check is on by default — it can
+/// only trip on a genuine lost wakeup (see module docs); the wall-time
+/// budget is opt-in because legitimate epoch times vary wildly across
+/// hosts.
+#[derive(Debug, Clone, Copy)]
+pub struct Watchdog {
+    /// Trip when one epoch (cycle) takes longer than this many
+    /// milliseconds of wall time, measured barrier-to-barrier.
+    pub epoch_budget_ms: Option<u64>,
+    /// Trip when zero units ticked in an epoch while input queues still
+    /// hold messages (lost wakeup). Active-list scheduling only; under
+    /// full scan every unit ticks every cycle so the condition is
+    /// unreachable.
+    pub check_stall: bool,
+}
+
+impl Default for Watchdog {
+    fn default() -> Self {
+        Watchdog {
+            epoch_budget_ms: None,
+            check_stall: true,
+        }
+    }
+}
+
+/// Repartitioner resume block: the EWMA drift estimate and back-off
+/// position survive a checkpoint so an adaptive-cadence run resumes its
+/// probing rhythm instead of restarting cold. (Cost samples themselves
+/// are re-profiled live — they only steer placement, never timing.)
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RepartResume {
+    pub ewma: Option<f64>,
+    pub reject_streak: u32,
+    pub plan_ok_at: u64,
+    pub next_check: u64,
+}
+
+impl Persist for RepartResume {
+    fn save(&self, w: &mut SnapshotWriter) {
+        self.ewma.save(w);
+        self.reject_streak.save(w);
+        self.plan_ok_at.save(w);
+        self.next_check.save(w);
+    }
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        RepartResume {
+            ewma: Persist::load(r),
+            reject_streak: Persist::load(r),
+            plan_ok_at: Persist::load(r),
+            next_check: Persist::load(r),
+        }
+    }
+}
+
+/// Checkpoint configuration handed to the engines: write a snapshot of
+/// `meta` + live state to `path` every `every` cycles, at the barrier.
+#[derive(Debug, Clone)]
+pub struct CheckpointCfg {
+    pub every: u64,
+    pub path: PathBuf,
+    /// Pre-serialized meta prefix (scenario name + config pairs) — the
+    /// engine appends dynamic state after it.
+    pub meta: Vec<u8>,
+}
+
+/// State parsed out of a snapshot body, applied when (re)starting an
+/// engine: canonical sleep/park flags, the live partition, and the
+/// repartitioner resume block. Unit state, port queues and counters are
+/// loaded directly into the model before the engine starts.
+#[derive(Debug, Clone, Default)]
+pub struct ResumeState {
+    pub asleep: Vec<bool>,
+    pub port_blocked: Vec<bool>,
+    pub partition: Vec<Vec<u32>>,
+    pub repart: Option<RepartResume>,
+}
+
+/// Everything the supervision layer threads into an engine run. The
+/// default is fully passive (no faults, no checkpoints, stall check on).
+#[derive(Debug, Clone, Default)]
+pub struct SuperviseOpts {
+    pub faults: FaultPlan,
+    pub watchdog: Watchdog,
+    pub checkpoint: Option<CheckpointCfg>,
+    pub resume: Option<ResumeState>,
+}
+
+impl SuperviseOpts {
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_parses_all_kinds() {
+        let p = FaultPlan::parse("panic@120:3, stall@8:1,delay@50:0:200").unwrap();
+        assert_eq!(
+            p.faults,
+            vec![
+                Fault::Panic { cycle: 120, unit: 3 },
+                Fault::Stall { cycle: 8, unit: 1 },
+                Fault::Delay {
+                    cycle: 50,
+                    cluster: 0,
+                    millis: 200
+                },
+            ]
+        );
+        assert_eq!(p.panic_unit_at(120, |u| u == 3), Some(3));
+        assert_eq!(p.panic_unit_at(120, |u| u == 4), None);
+        assert_eq!(p.panic_unit_at(119, |_| true), None);
+        assert_eq!(p.stalled_units(7).count(), 0);
+        assert_eq!(p.stalled_units(9).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(p.delay_for(50, 0), Some(200));
+        assert_eq!(p.delay_for(50, 1), None);
+    }
+
+    #[test]
+    fn fault_plan_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("panic@12").is_err());
+        assert!(FaultPlan::parse("fizzle@1:2").is_err());
+        assert!(FaultPlan::parse("delay@1:2").is_err());
+        assert!(FaultPlan::parse("panic@x:2").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn sim_error_display_is_greppable_and_attributed() {
+        let e = SimError::new(77, SimPhase::Work, "boom")
+            .with_cluster(2)
+            .with_unit(5)
+            .with_diagnostic("cluster 0: 3 active");
+        let s = e.to_string();
+        assert!(s.contains("SimError"), "{s}");
+        assert!(s.contains("cycle 77"), "{s}");
+        assert!(s.contains("cluster 2"), "{s}");
+        assert!(s.contains("unit 5"), "{s}");
+        assert!(s.contains("work phase"), "{s}");
+        assert!(s.contains("diagnostic"), "{s}");
+    }
+}

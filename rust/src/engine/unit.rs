@@ -8,6 +8,7 @@
 use super::active::ActiveState;
 use super::message::{Fnv, Msg};
 use super::port::{InPort, OutPort, PortArena};
+use super::snapshot::{SnapshotReader, SnapshotWriter};
 use crate::stats::{Counters, StatsMap};
 
 /// The hardware-model entity. Implementations follow the paper's work-phase
@@ -50,6 +51,27 @@ pub trait Unit: Send {
     fn always_active(&self) -> bool {
         false
     }
+
+    /// Whether this unit participates in checkpoint/restore. Units that
+    /// return `false` (the default) make the whole model
+    /// non-checkpointable — attempting `--checkpoint` names the first
+    /// offender. Implement [`Unit::save`]/[`Unit::load`] over every
+    /// *mutable* state field (the `crate::persist_fields!` macro writes
+    /// all three methods at once) to opt in; config-derived fields are
+    /// rebuilt by the scenario on restore.
+    fn snapshot_supported(&self) -> bool {
+        false
+    }
+
+    /// Serialize mutable state for a barrier checkpoint. Must be the
+    /// exact inverse of [`Unit::load`]: a save/load roundtrip may not
+    /// perturb `state_hash` or any future behavior.
+    fn save(&self, _w: &mut SnapshotWriter) {}
+
+    /// Restore mutable state from a snapshot, in-place (config-derived
+    /// fields — ports, traces, latencies — keep their freshly-built
+    /// values).
+    fn load(&mut self, _r: &mut SnapshotReader<'_>) {}
 }
 
 /// Execution context handed to `Unit::work` — the only gateway to ports,

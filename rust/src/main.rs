@@ -19,7 +19,7 @@
 //! and the flag-vs-file merge live in `util::cli::Cmd`.
 
 use scalesim::dc::{FatTreeCfg, TrafficCfg};
-use scalesim::engine::{Engine, RepartitionPolicy, SchedMode, Sim};
+use scalesim::engine::{Engine, FaultPlan, RepartitionPolicy, SchedMode, Sim, Watchdog};
 use scalesim::harness::{ablation, bench_json, fig09, fig10_11, fig12_13, fig14, fig15_16};
 use scalesim::scenario;
 use scalesim::sched::PartitionStrategy;
@@ -40,6 +40,12 @@ fn usage() -> ! {
          \x20                [--repartition N[,HYST[,MOVES]] | adaptive[,DRIFT[,CHECK]]]\n\
          \x20                [--cycles N] [--timed] [--fingerprint] [--counters]\n\
          \x20                [--json out.json] [--set k=v,k=v] (scenario keys)\n\
+         \x20                [--checkpoint FILE --checkpoint-every N]\n\
+         \x20                [--restore FILE] (rebuilds scenario + config from the\n\
+         \x20                 snapshot; engine/worker flags still apply)\n\
+         \x20                [--inject KIND@CYCLE:ARG,...] (panic@C:U stall@C:U\n\
+         \x20                 delay@C:W:MS — deterministic fault injection)\n\
+         \x20                [--epoch-budget-ms N] (stall watchdog wall budget)\n\
          \x20 barrier-bench  [--workers 1,2,4] [--cycles N] [--spin yield|pure]\n\
          \x20 oltp-light     [--cores N] [--workers 1,2,4,8,16] [--strategy S]\n\
          \x20                [--sched full|active]\n\
@@ -61,7 +67,8 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         argv,
         &[
             "scenario", "workers", "engine", "sync", "spin", "strategy", "sched", "cycles",
-            "seed", "set", "json", "repartition",
+            "seed", "set", "json", "repartition", "checkpoint", "checkpoint-every", "restore",
+            "inject", "epoch-budget-ms",
         ],
         &["list-scenarios", "timed", "fingerprint", "counters"],
     )?;
@@ -72,9 +79,6 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         }
         return Ok(());
     }
-    let name = c
-        .get("scenario")
-        .ok_or("missing --scenario NAME (or --list-scenarios)")?;
     // Scenario keys come from the config file plus inline `--set k=v,...`
     // pairs (CLI wins).
     let mut cfg = c.file_config().clone();
@@ -97,7 +101,23 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     if let Some(spec) = c.from_cli("repartition") {
         cfg.set("repartition", spec);
     }
-    let mut sim = Sim::scenario(name, &cfg)?
+    let mut sim = match c.get("restore") {
+        Some(snap) => {
+            if c.get("scenario").is_some() || c.get("set").is_some() {
+                return Err("--restore rebuilds the scenario and its config from the \
+                            snapshot; drop --scenario/--set"
+                    .to_string());
+            }
+            Sim::restore(snap)?
+        }
+        None => {
+            let name = c
+                .get("scenario")
+                .ok_or("missing --scenario NAME (or --list-scenarios / --restore FILE)")?;
+            Sim::scenario(name, &cfg)?
+        }
+    };
+    sim = sim
         .workers(c.get_usize("workers", 1)?)
         .engine(Engine::parse(c.get_or("engine", "auto"))?)
         .sync(SyncMethod::parse(c.get_or("sync", "common-atomic"))?)
@@ -117,6 +137,24 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     }
     if c.flag("fingerprint")? {
         sim = sim.fingerprinted();
+    }
+    match (c.get("checkpoint"), c.get_u64("checkpoint-every", 0)?) {
+        (Some(path), every) if every > 0 => sim = sim.checkpoint_every(every, path),
+        (Some(_), _) => return Err("--checkpoint needs --checkpoint-every N".to_string()),
+        (None, every) if every > 0 => {
+            return Err("--checkpoint-every needs --checkpoint FILE".to_string())
+        }
+        _ => {}
+    }
+    if let Some(spec) = c.get("inject") {
+        sim = sim.inject(FaultPlan::parse(spec)?);
+    }
+    if let Some(ms) = c.get("epoch-budget-ms") {
+        let ms = scalesim::util::cli::parse_u64(ms).map_err(|e| format!("epoch-budget-ms: {e}"))?;
+        sim = sim.watchdog(Watchdog {
+            epoch_budget_ms: Some(ms),
+            ..Watchdog::default()
+        });
     }
     let report = sim.run()?;
     println!("{}", report.summary());

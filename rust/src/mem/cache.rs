@@ -5,7 +5,7 @@
 //! is stored per line; its meaning belongs to the owning unit (MESI for
 //! L2, valid/invalid for L1, present/dirty for L3).
 
-use crate::engine::Fnv;
+use crate::engine::{Fnv, Persist, SnapshotReader, SnapshotWriter};
 
 #[derive(Debug, Clone, Copy)]
 pub struct CacheCfg {
@@ -39,6 +39,8 @@ struct Way {
     /// LRU timestamp (monotone counter).
     lru: u64,
 }
+
+crate::impl_persist!(Way { tag, state, lru });
 
 /// The tag array. Addresses are byte addresses; lookups are by line.
 pub struct CacheArray {
@@ -187,6 +189,32 @@ impl CacheArray {
                 h.write_u64(w.state as u64);
             }
         }
+    }
+
+    /// Snapshot the mutable contents. Geometry (`cfg`, `sets`,
+    /// `line_shift`) is config-derived and rebuilt by the owning unit's
+    /// constructor; on load the way count must match it.
+    pub fn save_state(&self, w: &mut SnapshotWriter) {
+        self.ways.save(w);
+        self.tick.save(w);
+        self.hits.save(w);
+        self.misses.save(w);
+    }
+
+    pub fn load_state(&mut self, r: &mut SnapshotReader<'_>) {
+        let ways = Vec::<Way>::load(r);
+        if ways.len() == self.ways.len() {
+            self.ways = ways;
+        } else {
+            r.fail(format!(
+                "cache geometry mismatch: snapshot has {} ways, model has {}",
+                ways.len(),
+                self.ways.len()
+            ));
+        }
+        self.tick = u64::load(r);
+        self.hits = u64::load(r);
+        self.misses = u64::load(r);
     }
 }
 

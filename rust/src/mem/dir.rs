@@ -15,7 +15,7 @@
 
 use super::cache::{CacheArray, CacheCfg};
 use super::msg::{MemMsg, MemPacket};
-use crate::engine::{Ctx, Fnv, In, Msg, Out, Unit};
+use crate::engine::{Ctx, Fnv, In, Msg, Out, Persist, SnapshotReader, SnapshotWriter, Unit};
 use crate::noc::net_b;
 use crate::stats::StatsMap;
 use std::collections::{BTreeMap, VecDeque};
@@ -55,6 +55,55 @@ struct BusyLine {
     state: Busy,
     /// Requests that arrived while busy, replayed in order.
     waiting: VecDeque<Msg>,
+}
+
+crate::impl_persist!(DirEntry { owner, sharers });
+crate::impl_persist!(BusyLine { state, waiting });
+
+impl Persist for Busy {
+    fn save(&self, w: &mut SnapshotWriter) {
+        match self {
+            Busy::Fetch { first } => {
+                0u8.save(w);
+                first.save(w);
+            }
+            Busy::AwaitWbS { requester, old_owner } => {
+                1u8.save(w);
+                requester.save(w);
+                old_owner.save(w);
+            }
+            Busy::AwaitWbI { requester } => {
+                2u8.save(w);
+                requester.save(w);
+            }
+            Busy::CollectAcks { requester, remaining } => {
+                3u8.save(w);
+                requester.save(w);
+                remaining.save(w);
+            }
+        }
+    }
+
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        match u8::load(r) {
+            0 => Busy::Fetch { first: Msg::load(r) },
+            1 => Busy::AwaitWbS {
+                requester: u32::load(r),
+                old_owner: u32::load(r),
+            },
+            2 => Busy::AwaitWbI {
+                requester: u32::load(r),
+            },
+            3 => Busy::CollectAcks {
+                requester: u32::load(r),
+                remaining: u32::load(r),
+            },
+            v => {
+                r.fail(format!("unknown Busy tag {v}"));
+                Busy::AwaitWbI { requester: 0 }
+            }
+        }
+    }
 }
 
 pub struct DirBank {
@@ -410,5 +459,44 @@ impl Unit for DirBank {
             && self.net_q.is_empty()
             && self.dram_q.is_empty()
             && self.replay_q.is_empty()
+    }
+
+    // `node`, `core_nodes`, the array geometry and `width` are
+    // config-derived; the directory map, busy table and staging queues
+    // are state.
+    fn snapshot_supported(&self) -> bool {
+        true
+    }
+
+    fn save(&self, w: &mut SnapshotWriter) {
+        self.array.save_state(w);
+        self.dir.save(w);
+        self.busy.save(w);
+        self.net_q.save(w);
+        self.dram_q.save(w);
+        self.replay_q.save(w);
+        self.gets.save(w);
+        self.getm.save(w);
+        self.putm.save(w);
+        self.invs_sent.save(w);
+        self.fwds_sent.save(w);
+        self.dram_fetches.save(w);
+        self.l3_hits.save(w);
+    }
+
+    fn load(&mut self, r: &mut SnapshotReader<'_>) {
+        self.array.load_state(r);
+        self.dir = Persist::load(r);
+        self.busy = Persist::load(r);
+        self.net_q = Persist::load(r);
+        self.dram_q = Persist::load(r);
+        self.replay_q = Persist::load(r);
+        self.gets = Persist::load(r);
+        self.getm = Persist::load(r);
+        self.putm = Persist::load(r);
+        self.invs_sent = Persist::load(r);
+        self.fwds_sent = Persist::load(r);
+        self.dram_fetches = Persist::load(r);
+        self.l3_hits = Persist::load(r);
     }
 }

@@ -87,4 +87,6 @@ impl Unit for DramChannel {
     fn is_idle(&self) -> bool {
         self.in_service.is_empty()
     }
+
+    crate::persist_fields!(in_service, reads, writes);
 }

@@ -6,7 +6,7 @@
 
 use super::cache::{CacheArray, CacheCfg};
 use super::msg::{line_of, MemMsg, MemPacket};
-use crate::engine::{Ctx, Fnv, In, Msg, Out, Unit};
+use crate::engine::{Ctx, Fnv, In, Msg, Out, Persist, SnapshotReader, SnapshotWriter, Unit};
 use crate::stats::StatsMap;
 use std::collections::VecDeque;
 
@@ -18,6 +18,8 @@ struct Mshr {
     /// (addr, tag) of pending core loads.
     waiting: Vec<(u64, u64)>,
 }
+
+crate::impl_persist!(Mshr { line, waiting });
 
 pub struct L1Cache {
     pub core: u32,
@@ -214,5 +216,35 @@ impl Unit for L1Cache {
 
     fn is_idle(&self) -> bool {
         self.mshrs.is_empty() && self.resp_q.is_empty() && self.req_q.is_empty()
+    }
+
+    // The tag array geometry, ports, `max_mshrs` and `width` are
+    // config-derived; everything that moves is state.
+    fn snapshot_supported(&self) -> bool {
+        true
+    }
+
+    fn save(&self, w: &mut SnapshotWriter) {
+        self.array.save_state(w);
+        self.mshrs.save(w);
+        self.resp_q.save(w);
+        self.req_q.save(w);
+        self.amo_tags.save(w);
+        self.loads.save(w);
+        self.stores.save(w);
+        self.amos.save(w);
+        self.invals.save(w);
+    }
+
+    fn load(&mut self, r: &mut SnapshotReader<'_>) {
+        self.array.load_state(r);
+        self.mshrs = Persist::load(r);
+        self.resp_q = Persist::load(r);
+        self.req_q = Persist::load(r);
+        self.amo_tags = Persist::load(r);
+        self.loads = Persist::load(r);
+        self.stores = Persist::load(r);
+        self.amos = Persist::load(r);
+        self.invals = Persist::load(r);
     }
 }

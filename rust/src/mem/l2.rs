@@ -9,7 +9,7 @@
 
 use super::cache::{CacheArray, CacheCfg};
 use super::msg::{MemMsg, MemPacket};
-use crate::engine::{Ctx, Fnv, In, Msg, Out, Unit};
+use crate::engine::{Ctx, Fnv, In, Msg, Out, Persist, SnapshotReader, SnapshotWriter, Unit};
 use crate::noc::net_b;
 use crate::stats::StatsMap;
 use std::collections::{BTreeMap, VecDeque};
@@ -39,6 +39,32 @@ enum TransKind {
 struct Trans {
     kind: TransKind,
     pending: Vec<PendingReq>,
+}
+
+crate::impl_persist!(PendingReq { kind, addr, tag });
+crate::impl_persist!(Trans { kind, pending });
+
+impl Persist for TransKind {
+    fn save(&self, w: &mut SnapshotWriter) {
+        let tag: u8 = match self {
+            TransKind::WaitS => 0,
+            TransKind::WaitM => 1,
+            TransKind::WaitPutAck => 2,
+        };
+        tag.save(w);
+    }
+
+    fn load(r: &mut SnapshotReader<'_>) -> Self {
+        match u8::load(r) {
+            0 => TransKind::WaitS,
+            1 => TransKind::WaitM,
+            2 => TransKind::WaitPutAck,
+            v => {
+                r.fail(format!("unknown TransKind tag {v}"));
+                TransKind::WaitS
+            }
+        }
+    }
 }
 
 pub struct L2Cache {
@@ -320,5 +346,36 @@ impl Unit for L2Cache {
 
     fn is_idle(&self) -> bool {
         self.trans.is_empty() && self.l1_q.is_empty() && self.net_q.is_empty()
+    }
+
+    // `node`, `bank_nodes`, the array geometry, `max_trans` and `width`
+    // are config-derived; the tag states, transaction table and staging
+    // queues are state.
+    fn snapshot_supported(&self) -> bool {
+        true
+    }
+
+    fn save(&self, w: &mut SnapshotWriter) {
+        self.array.save_state(w);
+        self.trans.save(w);
+        self.l1_q.save(w);
+        self.net_q.save(w);
+        self.gets_sent.save(w);
+        self.getm_sent.save(w);
+        self.putm_sent.save(w);
+        self.invs_received.save(w);
+        self.fwds_received.save(w);
+    }
+
+    fn load(&mut self, r: &mut SnapshotReader<'_>) {
+        self.array.load_state(r);
+        self.trans = Persist::load(r);
+        self.l1_q = Persist::load(r);
+        self.net_q = Persist::load(r);
+        self.gets_sent = Persist::load(r);
+        self.getm_sent = Persist::load(r);
+        self.putm_sent = Persist::load(r);
+        self.invs_received = Persist::load(r);
+        self.fwds_received = Persist::load(r);
     }
 }

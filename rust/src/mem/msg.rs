@@ -186,6 +186,20 @@ impl MemMsg {
     }
 }
 
+impl crate::engine::Persist for MemMsg {
+    fn save(&self, w: &mut crate::engine::SnapshotWriter) {
+        (*self as u32).save(w);
+    }
+
+    fn load(r: &mut crate::engine::SnapshotReader<'_>) -> Self {
+        let v = u32::load(r);
+        MemMsg::from_u32(v).unwrap_or_else(|| {
+            r.fail(format!("unknown MemMsg discriminant {v:#x}"));
+            MemMsg::CoreLd
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

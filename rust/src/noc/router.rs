@@ -38,6 +38,8 @@ impl Flit {
     }
 }
 
+crate::impl_persist!(Flit { seq, src, dst, inject });
+
 impl Payload for Flit {
     fn encode(self) -> Msg {
         Msg::with(FLIT, self.seq, net_b(self.src, self.dst), self.inject)
@@ -162,6 +164,8 @@ impl Unit for Router {
     fn state_hash(&self, h: &mut Fnv) {
         h.write_u64(self.forwarded);
     }
+
+    crate::persist_fields!(forwarded, stalled);
 }
 
 #[cfg(test)]

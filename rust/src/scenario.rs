@@ -207,6 +207,8 @@ impl Unit for PipeStage {
     fn stats(&self, out: &mut crate::stats::StatsMap) {
         out.add("pipe.delivered", self.received);
     }
+
+    crate::persist_fields!(seq, received, acc);
 }
 
 /// Component wrapper: stage `index` of `stages`, declaring `prev`/`next`
@@ -544,6 +546,8 @@ impl Unit for MeshEndpoint {
     fn stats(&self, out: &mut crate::stats::StatsMap) {
         out.add("mesh.sent", self.sent);
     }
+
+    crate::persist_fields!(sent, received, rng);
 }
 
 struct MeshNoc;
@@ -694,6 +698,8 @@ impl Unit for RingNode {
         out.add("ring.forwarded", self.forwarded);
         out.add("ring.latency_sum", self.latency_sum);
     }
+
+    crate::persist_fields!(sent, received, forwarded, transit, latency_sum, rng);
 }
 
 struct RingNodeComp {
@@ -911,6 +917,8 @@ impl Unit for TorusNode {
         out.add("torus.forwarded", self.forwarded);
         out.add("torus.latency_sum", self.latency_sum);
     }
+
+    crate::persist_fields!(sent, received, forwarded, transit, latency_sum, rng);
 }
 
 struct TorusNodeComp {
@@ -1156,6 +1164,8 @@ impl Unit for TreeFabricNode {
         out.add("tree.forwarded", self.forwarded);
         out.add("tree.latency_sum", self.latency_sum);
     }
+
+    crate::persist_fields!(sent, received, forwarded, transit, latency_sum, rng);
 }
 
 struct TreeFabricComp {

@@ -59,6 +59,30 @@ impl Counters {
         }
         m
     }
+
+    /// Number of registered counters.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Raw slot values in registration order (checkpoint/restore). Read at
+    /// a cycle barrier, so relaxed loads observe the deterministic values.
+    pub(crate) fn values(&self) -> Vec<u64> {
+        self.slots.iter().map(|s| s.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Overwrite slot values in registration order (checkpoint restore).
+    /// `vals` must have exactly `len()` entries.
+    pub(crate) fn restore_values(&self, vals: &[u64]) {
+        debug_assert_eq!(vals.len(), self.slots.len());
+        for (s, &v) in self.slots.iter().zip(vals) {
+            s.store(v, Ordering::Relaxed);
+        }
+    }
 }
 
 /// An ordered name → value accumulation map used for reports and per-unit

@@ -35,9 +35,23 @@ use super::syncpoint::{AtomicGate, Gate, MutexGate, SpinGate, SpinMode, SyncMeth
 use crate::engine::active::{ActiveState, SchedMode};
 use crate::engine::model::{Model, RunOpts};
 use crate::engine::repart::{ClusterState, CostSamples, RepartitionPolicy, Repartitioner};
+use crate::engine::supervise::{panic_message, SimError, SimPhase, SuperviseOpts};
 use crate::stats::{PhaseTimers, RepartStats, RunStats};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
+
+/// Record the run's *first* failure (later ones raced it and lost; their
+/// workers still degrade to no-op barrier participants). Poison-tolerant:
+/// the cell is locked from worker panic handlers, so a poisoned mutex is
+/// expected, not exceptional.
+fn record_first(slot: &Mutex<Option<SimError>>, e: SimError) {
+    let mut g = slot.lock().unwrap_or_else(|p| p.into_inner());
+    if g.is_none() {
+        *g = Some(e);
+    }
+}
 
 /// Cache-line padded atomic, one per thread, for contention-free op
 /// counting.
@@ -326,12 +340,46 @@ pub(crate) fn run_ladder(
     partition: &[Vec<u32>],
     opts: &ParallelOpts,
 ) -> RunStats {
+    run_ladder_supervised(model, partition, opts, &SuperviseOpts::none())
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Supervised ladder run: same engine as [`run_ladder`], plus the
+/// crash-resilience layer of `engine::supervise` —
+///
+/// * worker bodies run under `catch_unwind`; a panic (organic or injected
+///   via [`SuperviseOpts::faults`]) becomes a structured [`SimError`] and
+///   the failed worker degrades to a no-op barrier participant so every
+///   thread drains through the sync-points instead of deadlocking or
+///   aborting the process;
+/// * at the cycle barrier — the same exclusive all-workers-parked window
+///   the repartitioner uses — the scheduler can write a checkpoint,
+///   trip the stall watchdog (zero ticks in an epoch while messages sit
+///   in input queues, or an epoch exceeding its wall-time budget), and
+///   apply injected stalls/delays;
+/// * restore: `opts.run.start_cycle` + [`SuperviseOpts::resume`] seed the
+///   sleep/blocked flags and repartitioner state from a snapshot, and the
+///   barrier protocol starts counting from `start_cycle` (the gate waits
+///   are monotone in the cycle number, so nothing else changes).
+pub(crate) fn run_ladder_supervised(
+    model: &mut Model,
+    partition: &[Vec<u32>],
+    opts: &ParallelOpts,
+    sup: &SuperviseOpts,
+) -> Result<RunStats, SimError> {
     let workers = partition.len();
     assert!(workers >= 1, "need at least one worker cluster");
     let gates = LadderGates::new(opts.method, workers, opts.spin);
     let sched = opts.run.sched;
+    let start_cycle = opts.run.start_cycle;
     let n_units = model.num_units();
     let active_state = ActiveState::new(partition, n_units, model.num_ports());
+    if let Some(res) = sup.resume.as_ref() {
+        // Seed sleep/blocked flags from the snapshot before deriving the
+        // worklists from them below.
+        // SAFETY: workers have not started — trivially exclusive.
+        unsafe { active_state.set_flags(&res.asleep, &res.port_blocked) };
+    }
     // The migration-mutable per-cluster worklists (unit / active / dirty
     // lists). Workers execute from these cells; the scheduler rewrites
     // them only while every worker is parked at the cycle barrier.
@@ -349,11 +397,21 @@ pub(crate) fn run_ladder(
     } else {
         None
     };
+    if let (Some(rp), Some(res)) = (repartitioner.as_mut(), sup.resume.as_ref()) {
+        if let Some(rr) = res.repart {
+            rp.restore_from(rr);
+        }
+    }
     let stop_flag = AtomicBool::new(false);
+    // First failure wins; everyone else keeps walking the barrier.
+    let failure: Mutex<Option<SimError>> = Mutex::new(None);
+    // Cumulative per-worker tick counts, published at the barrier for the
+    // scheduler-side stall watchdog (padded: single writer per cell).
+    let tick_cells: Vec<PadCounter> = (0..workers).map(|_| PadCounter::new()).collect();
     // Published cycle count for the iteration-number validation the paper
     // describes in §5.1 ("validates that all workers are working on the
     // same iteration number").
-    let sched_cycles = AtomicU64::new(0);
+    let sched_cycles = AtomicU64::new(start_cycle);
 
     let t0 = Instant::now();
     let timed = opts.run.timed;
@@ -366,9 +424,15 @@ pub(crate) fn run_ladder(
             let gates = &gates;
             let stop_flag = &stop_flag;
             let active_state = &active_state;
+            let failure = &failure;
+            let tick_cells = &tick_cells;
             handles.push(scope.spawn(move || {
                 let mut t = PhaseTimers::new();
-                let mut cycle: u64 = 0;
+                let mut cycle: u64 = start_cycle;
+                // Set once this worker has failed: it stops touching the
+                // model but keeps walking the full gate protocol so the
+                // barrier (and every other thread) stays live.
+                let mut failed = false;
                 // One work phase over this cluster, in the selected mode.
                 // SAFETY (both arms): the partition is disjoint; this
                 // cluster owns its worklist cells, its units — and their
@@ -419,19 +483,50 @@ pub(crate) fn run_ladder(
                     }
                 };
                 // Paper Fig 7: wait(WORK); unlock(PHASE1).
-                gates.worker_wait_work(w, 0);
+                gates.worker_wait_work(w, start_cycle);
                 gates.worker_open_phase1(w);
                 loop {
                     if stop_flag.load(Ordering::Acquire) {
                         break;
                     }
-                    // ---- work phase ----
-                    if timed {
-                        let tw = Instant::now();
-                        do_work(cycle, &mut t);
-                        t.work_ns += tw.elapsed().as_nanos() as u64;
-                    } else {
-                        do_work(cycle, &mut t);
+                    // ---- work phase (supervised) ----
+                    if !failed {
+                        // Injected panics are attributed to the target
+                        // unit; organic panics carry whatever message the
+                        // model raised. Either way the unwind stops at
+                        // this frame.
+                        let injected = sup
+                            .faults
+                            .panic_unit_at(cycle, |u| unsafe { clusters.units(w).contains(&u) });
+                        let res = catch_unwind(AssertUnwindSafe(|| {
+                            if let Some(u) = injected {
+                                panic!("injected fault: panic while ticking unit {u}");
+                            }
+                            if let Some(ms) = sup.faults.delay_for(cycle, w) {
+                                std::thread::sleep(std::time::Duration::from_millis(ms));
+                            }
+                            if timed {
+                                let tw = Instant::now();
+                                do_work(cycle, &mut t);
+                                t.work_ns += tw.elapsed().as_nanos() as u64;
+                            } else {
+                                do_work(cycle, &mut t);
+                            }
+                        }));
+                        if let Err(payload) = res {
+                            let mut e = SimError::new(
+                                cycle,
+                                SimPhase::Work,
+                                panic_message(payload.as_ref()),
+                            )
+                            .with_cluster(w);
+                            if let Some(u) = injected {
+                                e = e.with_unit(u);
+                            }
+                            record_first(failure, e);
+                            failed = true;
+                        }
+                        tick_cells[w].0.store(t.unit_ticks, Ordering::Relaxed);
                     }
                     gates.worker_close_phase1(w);
                     gates.worker_open_phase0(w);
@@ -439,13 +534,32 @@ pub(crate) fn run_ladder(
                         let tb = Instant::now();
                         gates.worker_wait_transfer(w, cycle);
                         t.barrier_ns += tb.elapsed().as_nanos() as u64;
-                        // ---- transfer phase ----
-                        let tt = Instant::now();
-                        do_transfer(cycle, &mut t);
-                        t.transfer_ns += tt.elapsed().as_nanos() as u64;
                     } else {
                         gates.worker_wait_transfer(w, cycle);
-                        do_transfer(cycle, &mut t);
+                    }
+                    // ---- transfer phase (supervised) ----
+                    if !failed {
+                        let res = catch_unwind(AssertUnwindSafe(|| {
+                            if timed {
+                                let tt = Instant::now();
+                                do_transfer(cycle, &mut t);
+                                t.transfer_ns += tt.elapsed().as_nanos() as u64;
+                            } else {
+                                do_transfer(cycle, &mut t);
+                            }
+                        }));
+                        if let Err(payload) = res {
+                            record_first(
+                                failure,
+                                SimError::new(
+                                    cycle,
+                                    SimPhase::Transfer,
+                                    panic_message(payload.as_ref()),
+                                )
+                                .with_cluster(w),
+                            );
+                            failed = true;
+                        }
                     }
                     gates.worker_close_phase0(w);
                     gates.worker_open_phase1(w);
@@ -465,19 +579,134 @@ pub(crate) fn run_ladder(
         }
 
         // ---- global scheduler (paper Fig 6), on this thread ----
-        let mut cycle: u64 = 0;
+        let mut cycle: u64 = start_cycle;
+        let mut last_ticks: u64 = 0;
+        let mut stall_streak: u32 = 0;
+        let mut epoch_t0 = Instant::now();
         loop {
             // Between ticks all workers are parked at wait(WORK): the
-            // scheduler has exclusive model access for the stop check and
-            // the repartitioning hook.
-            // SAFETY: exclusivity argument above; gates provide the
-            // happens-before edges.
+            // scheduler has exclusive model access for the supervision
+            // hooks, the stop check and the repartitioning hook.
+            // SAFETY (all unsafe blocks below): exclusivity argument
+            // above; gates provide the happens-before edges.
+
+            // A worker failed last cycle: stop the run. Its SimError is
+            // picked up after the scope joins.
+            if failure.lock().unwrap_or_else(|p| p.into_inner()).is_some() {
+                stop_flag.store(true, Ordering::Release);
+                gates.sched_open_work(cycle);
+                break;
+            }
+            // Stall watchdog: an epoch where zero units ticked while
+            // messages sit in input queues is a lost wakeup (under
+            // FullScan every unit ticks every cycle, so the delta is
+            // never zero). Debounced over two consecutive epochs: a
+            // delivery across a multi-cycle-delay port can land on a
+            // zero-tick epoch with its wake still in the boxes, and a
+            // healthy run always ticks on the epoch after.
+            if sup.watchdog.check_stall && cycle > start_cycle {
+                let total: u64 = tick_cells.iter().map(|c| c.0.load(Ordering::Relaxed)).sum();
+                let delta = total.wrapping_sub(last_ticks);
+                last_ticks = total;
+                let stalled = if delta == 0 {
+                    unsafe { model_ref.stall_check(cycle) }
+                } else {
+                    None
+                };
+                match stalled {
+                    Some(e) => {
+                        stall_streak += 1;
+                        if stall_streak >= 2 {
+                            record_first(&failure, e);
+                            stop_flag.store(true, Ordering::Release);
+                            gates.sched_open_work(cycle);
+                            break;
+                        }
+                    }
+                    None => stall_streak = 0,
+                }
+            }
+            // Wall-time watchdog: one epoch over budget trips the run.
+            if let Some(budget) = sup.watchdog.epoch_budget_ms {
+                if cycle > start_cycle {
+                    let ms = epoch_t0.elapsed().as_millis() as u64;
+                    if ms > budget {
+                        record_first(
+                            &failure,
+                            SimError::new(
+                                cycle,
+                                SimPhase::Barrier,
+                                format!("watchdog: epoch took {ms} ms (budget {budget} ms)"),
+                            ),
+                        );
+                        stop_flag.store(true, Ordering::Release);
+                        gates.sched_open_work(cycle);
+                        break;
+                    }
+                }
+                epoch_t0 = Instant::now();
+            }
+            // Checkpoint hook — before the stop check, so a run whose
+            // horizon coincides with the cadence still writes its final
+            // snapshot.
+            if let Some(ck) = sup.checkpoint.as_ref() {
+                if Model::checkpoint_due(ck, cycle, start_cycle) {
+                    // SAFETY: exclusive window; rebuild normalizes the
+                    // pending wake boxes into flags first (fingerprint-
+                    // invariant), so the snapshot observes canonical
+                    // state.
+                    let res = unsafe {
+                        model_ref.rebuild_cluster_state(clusters, &active_state);
+                        let repart_resume = repartitioner.as_ref().map(|rp| rp.resume_state());
+                        let partition_now: Vec<Vec<u32>> =
+                            (0..workers).map(|c| clusters.units(c).clone()).collect();
+                        model_ref.write_checkpoint(
+                            ck,
+                            cycle,
+                            &active_state.asleep_flags(),
+                            &active_state.blocked_flags(),
+                            &partition_now,
+                            repart_resume,
+                        )
+                    };
+                    if let Err(msg) = res {
+                        record_first(
+                            &failure,
+                            SimError::new(cycle, SimPhase::Barrier, msg),
+                        );
+                        stop_flag.store(true, Ordering::Release);
+                        gates.sched_open_work(cycle);
+                        break;
+                    }
+                }
+            }
             let stop_now = unsafe { model_ref.should_stop_shared(&opts.run.stop, cycle) };
             if stop_now {
                 stop_flag.store(true, Ordering::Release);
                 // Release the workers so they can observe stop and exit.
                 gates.sched_open_work(cycle);
                 break;
+            }
+            // Injected stalls: force-park the target units each barrier
+            // from their fault cycle on, suppressing re-wakes — the
+            // deterministic synthesis of a lost wakeup (ActiveList only;
+            // FullScan ignores sleep flags).
+            let stalled: Vec<u32> = sup
+                .faults
+                .stalled_units(cycle)
+                .filter(|&u| (u as usize) < n_units)
+                .collect();
+            if !stalled.is_empty() {
+                unsafe {
+                    model_ref.rebuild_cluster_state(clusters, &active_state);
+                    for &u in &stalled {
+                        if !active_state.is_asleep(u) {
+                            active_state.park(u);
+                        }
+                        let c = active_state.cluster_of(u) as usize;
+                        clusters.active(c).retain(|&x| x != u);
+                    }
+                }
             }
             if let Some(rp) = repartitioner.as_mut() {
                 // SAFETY: same exclusive window as the stop check.
@@ -502,11 +731,80 @@ pub(crate) fn run_ladder(
             sched_cycles.store(cycle, Ordering::Relaxed);
         }
 
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        let mut timers = Vec::with_capacity(workers);
+        for (w, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(t) => timers.push(t),
+                Err(payload) => {
+                    // A worker died outside the supervised phases (a bug,
+                    // not a model panic) — still report it structurally.
+                    record_first(
+                        &failure,
+                        SimError::new(
+                            sched_cycles.load(Ordering::Relaxed),
+                            SimPhase::Barrier,
+                            format!(
+                                "worker thread died outside the supervised phases: {}",
+                                panic_message(payload.as_ref())
+                            ),
+                        )
+                        .with_cluster(w),
+                    );
+                    timers.push(PhaseTimers::new());
+                }
+            }
+        }
+        timers
     });
     let wall = t0.elapsed();
 
     let cycles = sched_cycles.load(Ordering::Relaxed);
+    let failed = failure.lock().unwrap_or_else(|p| p.into_inner()).take();
+    if let Some(e) = failed {
+        // Abort with a diagnostic dump instead of stats: per-cluster
+        // worklist sizes, input ports still holding messages, and the
+        // most recent migration epochs.
+        let mut d = String::new();
+        // SAFETY: workers joined — exclusive access to every structure.
+        unsafe {
+            for c in 0..workers {
+                d.push_str(&format!(
+                    "cluster {c}: {} units, {} awake, {} dirty ports\n",
+                    cluster_state.units(c).len(),
+                    cluster_state.active(c).len(),
+                    cluster_state.dirty(c).len(),
+                ));
+            }
+            let mut queued: Vec<(u32, u32)> = Vec::new();
+            for p in 0..model.num_ports() as u32 {
+                let n = model.arena.in_len_hint(p);
+                if n > 0 {
+                    queued.push((model.arena.dst_unit[p as usize], n));
+                }
+            }
+            if !queued.is_empty() {
+                queued.sort_unstable();
+                d.push_str("input ports holding messages (dst unit: queued):");
+                for (u, n) in queued.iter().take(8) {
+                    d.push_str(&format!(" {u}:{n}"));
+                }
+                if queued.len() > 8 {
+                    d.push_str(&format!(" (and {} more)", queued.len() - 8));
+                }
+                d.push('\n');
+            }
+        }
+        if let Some(rp) = repartitioner.as_ref() {
+            for ep in rp.stats.epochs.iter().rev().take(3) {
+                d.push_str(&format!(
+                    "repart @{}: {} moves, imbalance {:.3} -> {:.3}\n",
+                    ep.cycle, ep.moves, ep.imbalance_before, ep.imbalance_after
+                ));
+            }
+        }
+        cluster_state.recycle(model);
+        return Err(e.with_diagnostic(d.trim_end().to_string()));
+    }
     // Iteration-number validation: every worker must have executed exactly
     // the scheduler's cycle count.
     for (w, t) in per_worker.iter().enumerate() {
@@ -530,7 +828,7 @@ pub(crate) fn run_ladder(
     cluster_state.recycle(model);
     let mut counters = model.counters().snapshot();
     counters.merge(&model.unit_stats());
-    RunStats {
+    Ok(RunStats {
         cycles,
         wall,
         workers,
@@ -544,7 +842,7 @@ pub(crate) fn run_ladder(
         },
         repart,
         cross_cluster_ports: 0,
-    }
+    })
 }
 
 #[cfg(test)]

@@ -11,4 +11,4 @@ pub use syncpoint::{Gate, SpinMode, SyncMethod};
 
 // The raw ladder entry point is an engine internal: the public way to run
 // a parallel simulation is the `Sim` facade (`crate::engine::sim`).
-pub(crate) use ladder::{run_ladder, ParallelOpts};
+pub(crate) use ladder::{run_ladder, run_ladder_supervised, ParallelOpts};

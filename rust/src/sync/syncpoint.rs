@@ -109,19 +109,39 @@ impl MutexGate {
 }
 
 impl Gate for MutexGate {
+    // Poison tolerance (all three methods): a worker that panics while
+    // *not* holding the gate mutex cannot corrupt the bool inside it, but
+    // unwinding through a parked `wait` poisons the lock for everyone
+    // else. The supervision layer (`engine::supervise`) needs the
+    // surviving threads to keep making barrier progress so the failure
+    // can drain through the sync-points as a structured `SimError` —
+    // so poisoned locks are entered anyway instead of propagating the
+    // panic.
     fn close(&self) {
-        *self.closed.lock().unwrap() = true;
+        *self
+            .closed
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner) = true;
     }
 
     fn open(&self) {
-        *self.closed.lock().unwrap() = false;
+        *self
+            .closed
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner) = false;
         self.cv.notify_all();
     }
 
     fn wait(&self) {
-        let mut g = self.closed.lock().unwrap();
+        let mut g = self
+            .closed
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         while *g {
-            g = self.cv.wait(g).unwrap();
+            g = self
+                .cv
+                .wait(g)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 }

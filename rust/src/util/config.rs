@@ -130,6 +130,16 @@ impl Config {
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(|s| s.as_str())
     }
+
+    /// All `(key, value)` pairs in deterministic (sorted) order — the
+    /// checkpoint meta block records these so `--restore` can rebuild the
+    /// exact session without `--scenario`/`--set`.
+    pub fn pairs(&self) -> Vec<(String, String)> {
+        self.values
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
 }
 
 #[cfg(test)]

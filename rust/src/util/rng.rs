@@ -21,6 +21,16 @@ impl SplitMix64 {
         Self { state: seed }
     }
 
+    /// Raw generator state (checkpoint/restore).
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild a generator mid-stream from a saved state.
+    pub fn from_state(state: u64) -> Self {
+        Self { state }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -55,6 +65,16 @@ impl Rng {
 
     pub fn new(seed: u64) -> Self {
         Self::from_seed_stream(seed, 0)
+    }
+
+    /// Raw generator state (checkpoint/restore).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator mid-stream from a saved state.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
     }
 
     #[inline]

@@ -1,0 +1,379 @@
+//! Crash-resilience suite: barrier checkpoint/restore fingerprint parity,
+//! deterministic fault injection, and the stall watchdog.
+//!
+//! The hard invariant under test: a run that is checkpointed, killed, and
+//! restored must finish with a fingerprint bit-identical to an
+//! uninterrupted run — across the serial and ladder engines, both
+//! scheduling modes, and with mid-run repartitioning live.
+
+mod common;
+
+use std::path::PathBuf;
+
+use scalesim::engine::{Engine, FaultPlan, SchedMode, Sim, Watchdog};
+use scalesim::util::config::Config;
+
+fn cfg(pairs: &[(&str, &str)]) -> Config {
+    let mut c = Config::new();
+    for (k, v) in pairs {
+        c.set(k, v);
+    }
+    c
+}
+
+/// Unique-per-test snapshot path (the suite runs tests concurrently).
+fn snap_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("scalesim_{}_{}.snap", tag, std::process::id()))
+}
+
+/// Apply one engine-topology cell to a session.
+fn topo(sim: Sim, workers: usize, sched: SchedMode) -> Sim {
+    let engine = if workers <= 1 {
+        Engine::Serial
+    } else {
+        Engine::Ladder
+    };
+    sim.workers(workers).engine(engine).sched(sched).fingerprinted()
+}
+
+/// The tentpole invariant: full run vs checkpoint → kill → restore.
+///
+/// The "kill" is a truncated session (`.cycles(interrupt_at)`) that stops
+/// right after writing its last snapshot; the restore rebuilds the
+/// scenario from the snapshot's meta block and runs to the config's own
+/// stop condition.
+fn assert_checkpoint_restore_parity(
+    tag: &str,
+    scenario: &str,
+    pairs: &[(&str, &str)],
+    workers: usize,
+    sched: SchedMode,
+    every: u64,
+    interrupt_at: u64,
+) {
+    let c = cfg(pairs);
+    let full = topo(Sim::scenario(scenario, &c).unwrap(), workers, sched)
+        .run()
+        .unwrap_or_else(|e| panic!("{tag}: full run: {e}"));
+    assert_ne!(full.fingerprint(), 0, "{tag}: fingerprint not computed");
+
+    let path = snap_path(tag);
+    let interrupted = topo(Sim::scenario(scenario, &c).unwrap(), workers, sched)
+        .cycles(interrupt_at)
+        .checkpoint_every(every, &path)
+        .run()
+        .unwrap_or_else(|e| panic!("{tag}: interrupted run: {e}"));
+    assert_eq!(interrupted.stats.cycles, interrupt_at, "{tag}: truncated stop");
+    assert!(path.exists(), "{tag}: no snapshot written");
+
+    let restored = topo(Sim::restore(&path).unwrap(), workers, sched)
+        .run()
+        .unwrap_or_else(|e| panic!("{tag}: restored run: {e}"));
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(
+        restored.fingerprint(),
+        full.fingerprint(),
+        "{tag}: restored fingerprint diverged from the uninterrupted run"
+    );
+    assert_eq!(restored.stats.cycles, full.stats.cycles, "{tag}: cycle count");
+}
+
+const PIPELINE_CFG: &[(&str, &str)] = &[("stages", "6"), ("messages", "400"), ("cycles", "200")];
+
+#[test]
+fn pipeline_parity_serial_and_ladder() {
+    for (i, &(workers, sched)) in [
+        (1, SchedMode::FullScan),
+        (1, SchedMode::ActiveList),
+        (2, SchedMode::FullScan),
+        (2, SchedMode::ActiveList),
+        (4, SchedMode::ActiveList),
+    ]
+    .iter()
+    .enumerate()
+    {
+        // every=40 with the kill at 100: the file is written at 40 then
+        // overwritten at 80, so the restore also proves snapshot
+        // overwrite + resume-from-non-kill-cycle.
+        assert_checkpoint_restore_parity(
+            &format!("pipeline_{i}"),
+            "pipeline",
+            PIPELINE_CFG,
+            workers,
+            sched,
+            40,
+            100,
+        );
+    }
+}
+
+#[test]
+fn pipeline_parity_with_repartitioning() {
+    for (i, spec) in ["50", "adaptive"].iter().enumerate() {
+        let pairs = [
+            ("stages", "6"),
+            ("messages", "400"),
+            ("cycles", "200"),
+            ("repartition", spec),
+        ];
+        // The repartition policy rides in the scenario config, so the
+        // restored session re-arms it; the snapshot carries the live
+        // partition and the repartitioner's EWMA/backoff resume state.
+        assert_checkpoint_restore_parity(
+            &format!("pipeline_repart_{i}"),
+            "pipeline",
+            &pairs,
+            2,
+            SchedMode::ActiveList,
+            50,
+            100,
+        );
+    }
+}
+
+#[test]
+fn cpu_light_parity() {
+    let pairs = [
+        ("cores", "4"),
+        ("txns", "20"),
+        ("rows", "128"),
+        ("cycles", "400"),
+    ];
+    for (i, &(workers, sched)) in [(1, SchedMode::FullScan), (2, SchedMode::ActiveList)]
+        .iter()
+        .enumerate()
+    {
+        assert_checkpoint_restore_parity(
+            &format!("cpu_light_{i}"),
+            "cpu-light",
+            &pairs,
+            workers,
+            sched,
+            200,
+            200,
+        );
+    }
+}
+
+#[test]
+fn torus_parity() {
+    let pairs = [("dim", "3"), ("packets", "8"), ("cycles", "240")];
+    assert_checkpoint_restore_parity(
+        "torus",
+        "torus",
+        &pairs,
+        2,
+        SchedMode::ActiveList,
+        120,
+        120,
+    );
+}
+
+#[test]
+fn tree_parity() {
+    let pairs = [
+        ("fanout", "2"),
+        ("depth", "3"),
+        ("packets", "8"),
+        ("cycles", "240"),
+    ];
+    assert_checkpoint_restore_parity(
+        "tree",
+        "tree",
+        &pairs,
+        2,
+        SchedMode::ActiveList,
+        120,
+        120,
+    );
+}
+
+#[test]
+fn serial_checkpoint_resumes_on_the_ladder() {
+    // Engine topology is an execution choice, not simulation state: a
+    // snapshot written by the serial engine restores onto a 2-worker
+    // ladder with an identical final fingerprint.
+    let c = cfg(PIPELINE_CFG);
+    let full = topo(Sim::scenario("pipeline", &c).unwrap(), 1, SchedMode::FullScan)
+        .run()
+        .unwrap();
+
+    let path = snap_path("cross_topology");
+    topo(Sim::scenario("pipeline", &c).unwrap(), 1, SchedMode::FullScan)
+        .cycles(100)
+        .checkpoint_every(100, &path)
+        .run()
+        .unwrap();
+
+    let restored = topo(Sim::restore(&path).unwrap(), 2, SchedMode::ActiveList)
+        .run()
+        .unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(restored.fingerprint(), full.fingerprint());
+    assert_eq!(restored.engine, "ladder");
+}
+
+#[test]
+fn checkpoint_requires_a_scenario_session() {
+    let err = Sim::from_model(common::sleepy_pipeline(4, 10))
+        .cycles(50)
+        .checkpoint_every(10, snap_path("no_scenario"))
+        .run()
+        .unwrap_err();
+    assert!(err.contains("requires a scenario session"), "{err}");
+}
+
+#[test]
+fn unsupported_scenario_is_rejected_up_front() {
+    // The OOO core opts out of persistence; checkpointing must fail with
+    // a clear error before the run starts, not corrupt a snapshot.
+    let c = cfg(&[("cores", "2"), ("txns", "2"), ("cycles", "50")]);
+    let err = Sim::scenario("cpu-ooo", &c)
+        .unwrap()
+        .checkpoint_every(10, snap_path("ooo"))
+        .run()
+        .unwrap_err();
+    assert!(err.contains("does not support state snapshots"), "{err}");
+}
+
+#[test]
+fn restore_rejects_corrupt_snapshots() {
+    let path = snap_path("corrupt");
+    std::fs::write(&path, b"definitely not a snapshot").unwrap();
+    let err = Sim::restore(&path).map(|_| ()).unwrap_err();
+    let _ = std::fs::remove_file(&path);
+    assert!(err.contains("bad magic") || err.contains("too short"), "{err}");
+}
+
+#[test]
+fn partitioned_engine_rejects_supervision() {
+    let c = cfg(PIPELINE_CFG);
+    let err = Sim::scenario("pipeline", &c)
+        .unwrap()
+        .workers(2)
+        .engine(Engine::Partitioned)
+        .inject(FaultPlan::new().panic_at(10, 0))
+        .run()
+        .unwrap_err();
+    assert!(err.contains("partitioned serial engine"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Fault injection: panics surface as structured SimErrors, nothing hangs
+// ---------------------------------------------------------------------
+
+#[test]
+fn injected_panic_serial_is_structured() {
+    let c = cfg(PIPELINE_CFG);
+    let err = Sim::scenario("pipeline", &c)
+        .unwrap()
+        .engine(Engine::Serial)
+        .inject(FaultPlan::new().panic_at(20, 2))
+        .run()
+        .unwrap_err();
+    assert!(err.contains("SimError at cycle 20"), "{err}");
+    assert!(err.contains("unit 2"), "{err}");
+}
+
+#[test]
+fn injected_panic_ladder_unwinds_all_workers() {
+    // The worker that owns unit 2 panics mid-work; every other worker must
+    // drain through the barrier protocol and join cleanly (a hang here
+    // fails the suite on its timeout), and the error must carry the
+    // cycle, the unit, and a barrier diagnostic.
+    for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
+        let c = cfg(PIPELINE_CFG);
+        let err = Sim::scenario("pipeline", &c)
+            .unwrap()
+            .workers(2)
+            .engine(Engine::Ladder)
+            .sched(sched)
+            .inject(FaultPlan::new().panic_at(20, 2))
+            .run()
+            .unwrap_err();
+        assert!(err.contains("SimError at cycle 20"), "{err}");
+        assert!(err.contains("unit 2"), "{err}");
+        assert!(err.contains("work phase"), "{err}");
+        assert!(err.contains("diagnostic"), "{err}");
+    }
+}
+
+#[test]
+fn injected_panic_ladder_four_workers() {
+    let c = cfg(PIPELINE_CFG);
+    let err = Sim::scenario("pipeline", &c)
+        .unwrap()
+        .workers(4)
+        .engine(Engine::Ladder)
+        .sched(SchedMode::ActiveList)
+        .inject(FaultPlan::new().panic_at(30, 5))
+        .run()
+        .unwrap_err();
+    assert!(err.contains("SimError at cycle 30"), "{err}");
+    assert!(err.contains("unit 5"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Stall watchdog: a lost wakeup is named, not spun on
+// ---------------------------------------------------------------------
+
+#[test]
+fn watchdog_names_the_parked_unit_serial() {
+    // Force-park the sink (last stage) before its traffic arrives: the
+    // synthetic lost wakeup. Two messages fit the final port's queue, so
+    // the upstream stages drain and park too — the next epoch ticks zero
+    // units with messages still queued. Without the watchdog this would
+    // spin to the cycle cap doing nothing.
+    let c = cfg(&[("stages", "4"), ("messages", "2"), ("cycles", "5000")]);
+    let err = Sim::scenario("pipeline", &c)
+        .unwrap()
+        .engine(Engine::Serial)
+        .sched(SchedMode::ActiveList)
+        .inject(FaultPlan::new().stall_at(2, 3))
+        .run()
+        .unwrap_err();
+    assert!(err.contains("lost wakeup"), "{err}");
+    assert!(err.contains("3 ("), "{err}: should name unit 3");
+}
+
+#[test]
+fn watchdog_names_the_parked_unit_ladder() {
+    let c = cfg(&[("stages", "4"), ("messages", "2"), ("cycles", "5000")]);
+    let err = Sim::scenario("pipeline", &c)
+        .unwrap()
+        .workers(2)
+        .engine(Engine::Ladder)
+        .sched(SchedMode::ActiveList)
+        .inject(FaultPlan::new().stall_at(2, 3))
+        .run()
+        .unwrap_err();
+    assert!(err.contains("lost wakeup"), "{err}");
+    assert!(err.contains("3 ("), "{err}: should name unit 3");
+}
+
+#[test]
+fn watchdog_epoch_budget_trips_on_injected_delay() {
+    let c = cfg(PIPELINE_CFG);
+    let err = Sim::scenario("pipeline", &c)
+        .unwrap()
+        .workers(2)
+        .engine(Engine::Ladder)
+        .inject(FaultPlan::new().delay_at(10, 0, 100))
+        .watchdog(Watchdog {
+            epoch_budget_ms: Some(10),
+            ..Watchdog::default()
+        })
+        .run()
+        .unwrap_err();
+    assert!(err.contains("budget"), "{err}");
+}
+
+#[test]
+fn fault_plan_parse_roundtrip() {
+    let plan = FaultPlan::parse("panic@120:3, stall@40:1, delay@50:0:200").unwrap();
+    assert!(!plan.is_empty());
+    assert!(FaultPlan::parse("panic@120").is_err());
+    assert!(FaultPlan::parse("explode@1:2").is_err());
+    assert!(FaultPlan::parse("delay@1:2").is_err());
+}
