@@ -102,6 +102,9 @@ pub struct Sim {
     scratch: Option<Scratch>,
     scenario: Option<String>,
     workers: usize,
+    /// Ceiling on resolved ladder workers (`None` = uncapped). Set by
+    /// batch drivers (`sweep`) so concurrent sessions share the cores.
+    worker_cap: Option<usize>,
     engine: Engine,
     sync: SyncMethod,
     spin: SpinMode,
@@ -141,6 +144,7 @@ impl Sim {
             scratch: None,
             scenario: None,
             workers: 1,
+            worker_cap: None,
             engine: Engine::Auto,
             sync: SyncMethod::CommonAtomic,
             spin: SpinMode::Yield,
@@ -206,6 +210,27 @@ impl Sim {
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = n;
         self
+    }
+
+    /// Cap the resolved ladder worker count (0 = uncapped). Batch
+    /// drivers running many sessions concurrently (`scalesim sweep`)
+    /// use this to budget nested parallelism: `cells × cap <= cores`.
+    /// The cap changes engine topology only — a capped run still
+    /// simulates the identical execution (same fingerprint), it just
+    /// resolves to fewer clusters (possibly the serial engine).
+    pub fn worker_cap(mut self, cap: usize) -> Self {
+        self.worker_cap = if cap == 0 { None } else { Some(cap) };
+        self
+    }
+
+    /// The cluster count a `workers` request resolves to: clamped to
+    /// the unit count and to [`Sim::worker_cap`].
+    fn effective_workers(&self, units: usize) -> usize {
+        let w = self.workers.max(1).min(units.max(1));
+        match self.worker_cap {
+            Some(cap) => w.min(cap.max(1)),
+            None => w,
+        }
     }
 
     /// Engine selection; defaults to [`Engine::Auto`].
@@ -395,7 +420,7 @@ impl Sim {
             validate_partition(p, units)?;
             return Ok(p.clone());
         }
-        let w = self.workers.max(1).min(units.max(1));
+        let w = self.effective_workers(units);
         if matches!(
             self.strategy,
             PartitionStrategy::CostBalanced | PartitionStrategy::CostLocality
@@ -472,7 +497,7 @@ impl Sim {
             // but keeping it avoids a cold repartition ramp.
             if self.explicit_partition.is_none()
                 && !partition.is_empty()
-                && partition.len() == self.workers.max(1).min(units.max(1))
+                && partition.len() == self.effective_workers(units)
             {
                 self.explicit_partition = Some(partition.clone());
             }
@@ -533,7 +558,7 @@ impl Sim {
                     .explicit_partition
                     .as_ref()
                     .map(|p| p.len())
-                    .unwrap_or_else(|| self.workers.max(1).min(units.max(1)));
+                    .unwrap_or_else(|| self.effective_workers(units));
                 if clusters <= 1 {
                     Engine::Serial
                 } else {
@@ -846,6 +871,42 @@ mod tests {
             ladder.stats.counters.get("sim.delivered"),
             serial.stats.counters.get("sim.delivered")
         );
+    }
+
+    #[test]
+    fn worker_cap_clamps_resolution_without_changing_the_simulation() {
+        let uncapped = Sim::from_model(pair(50))
+            .workers(2)
+            .cycles(200)
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(uncapped.engine, "ladder");
+
+        // Cap 1: the same request resolves to one cluster (serial).
+        let capped = Sim::from_model(pair(50))
+            .workers(2)
+            .worker_cap(1)
+            .cycles(200)
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(capped.engine, "serial");
+        assert_eq!(capped.workers(), 1);
+        assert_eq!(capped.fingerprint(), uncapped.fingerprint());
+
+        // A cap above the request — and cap 0 (uncapped) — are no-ops.
+        for cap in [8, 0] {
+            let r = Sim::from_model(pair(50))
+                .workers(2)
+                .worker_cap(cap)
+                .cycles(200)
+                .fingerprinted()
+                .run()
+                .unwrap();
+            assert_eq!(r.workers(), 2, "cap {cap}");
+            assert_eq!(r.fingerprint(), uncapped.fingerprint());
+        }
     }
 
     #[test]

@@ -50,6 +50,13 @@ pub struct BenchRow {
 }
 
 impl BenchRow {
+    /// Build a row from a finished [`crate::engine::RunReport`] — the
+    /// reuse path for drivers (e.g. `scalesim sweep`) that already hold
+    /// the unified report.
+    pub fn from_report(r: &crate::engine::RunReport) -> Self {
+        BenchRow::from_stats(r.engine, r.sched, r.workers(), r.units, &r.stats)
+    }
+
     fn from_stats(
         engine: &'static str,
         sched: SchedMode,
@@ -82,10 +89,10 @@ impl BenchRow {
 pub struct LadderBench {
     pub model: &'static str,
     /// Registry name of the scenario the matrix ran on (`crate::scenario`).
-    pub scenario: &'static str,
+    pub scenario: String,
     pub cores: usize,
     pub units: usize,
-    pub strategy: &'static str,
+    pub strategy: String,
     /// Repartitioning policy applied to the ladder rows
     /// ([`RepartitionPolicy::summary`]; None = off).
     pub repartition_policy: Option<String>,
@@ -248,14 +255,37 @@ pub fn run_oltp_light(
 
     LadderBench {
         model: "oltp_light",
-        scenario: "cpu-light",
+        scenario: "cpu-light".to_string(),
         cores,
         units,
         strategy: match strategy {
             None => "paper",
             Some(s) => s.name(),
-        },
+        }
+        .to_string(),
         repartition_policy: repart.map(|p| p.summary()),
+        rows,
+    }
+}
+
+/// Assemble a [`LadderBench`] from rows a `scalesim sweep` produced —
+/// `strategy`/`repartition_policy` may be `|`-joined unions when the
+/// sweep varied those axes.
+pub fn from_sweep(
+    scenario: String,
+    cores: usize,
+    units: usize,
+    strategy: String,
+    repartition_policy: Option<String>,
+    rows: Vec<BenchRow>,
+) -> LadderBench {
+    LadderBench {
+        model: "sweep",
+        scenario,
+        cores,
+        units,
+        strategy,
+        repartition_policy,
         rows,
     }
 }
@@ -344,6 +374,25 @@ mod tests {
             "{json}"
         );
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn bench_row_from_report_reflects_the_run() {
+        let mut cfg = crate::util::config::Config::new();
+        cfg.set("stages", 3);
+        cfg.set("messages", 10);
+        let r = crate::engine::Sim::scenario("pipeline", &cfg)
+            .unwrap()
+            .timed()
+            .fingerprinted()
+            .run()
+            .unwrap();
+        let row = BenchRow::from_report(&r);
+        assert_eq!(row.engine, r.engine);
+        assert_eq!(row.sched, r.sched.name());
+        assert_eq!(row.workers, 1);
+        assert_eq!(row.cycles, r.stats.cycles);
+        assert_eq!(row.fingerprint, r.fingerprint());
     }
 
     #[test]

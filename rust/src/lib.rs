@@ -30,6 +30,10 @@
 //!   cycle-accurate simulator.
 //! - [`systems`] — ready-made model assemblies for the paper's evaluated
 //!   configurations.
+//! - [`sweep`] — the parallel design-space exploration driver behind
+//!   `scalesim sweep`: grid expansion, deterministic cell planning, a
+//!   thread-pool runner over independent sessions with resumable JSONL
+//!   results, and online frontier pruning.
 //! - [`harness`] — regenerates every figure/table of the paper's
 //!   evaluation section (see EXPERIMENTS.md).
 
@@ -49,6 +53,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod sched;
 pub mod stats;
+pub mod sweep;
 pub mod sync;
 pub mod systems;
 pub mod util;

@@ -6,6 +6,7 @@
 //!
 //! ```text
 //! scalesim run             any registered scenario through the Sim facade
+//! scalesim sweep           parallel design-space exploration over a grid
 //! scalesim barrier-bench   Figs 9-11: sync methods + barrier scaling
 //! scalesim oltp-light      Figs 12-13: OLTP on light cores
 //! scalesim ooo             Fig 14: OLTP/SPEC on OOO cores
@@ -23,6 +24,7 @@ use scalesim::engine::{Engine, FaultPlan, RepartitionPolicy, SchedMode, Sim, Wat
 use scalesim::harness::{ablation, bench_json, fig09, fig10_11, fig12_13, fig14, fig15_16};
 use scalesim::scenario;
 use scalesim::sched::PartitionStrategy;
+use scalesim::sweep;
 use scalesim::sync::{SpinMode, SyncMethod};
 use scalesim::util::cli::Cmd;
 use scalesim::workload::SpecKind;
@@ -31,7 +33,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: scalesim <command> [options]\n\
          commands:\n\
-         \x20 run            --scenario NAME [--list-scenarios] [--workers N]\n\
+         \x20 run            --scenario NAME [--list-scenarios [--verbose]] [--workers N]\n\
          \x20                [--engine auto|serial|partitioned|ladder]\n\
          \x20                [--sync common-atomic|atomic|spinlock|mutex]\n\
          \x20                [--strategy round-robin|random|locality|contiguous|\n\
@@ -46,6 +48,14 @@ fn usage() -> ! {
          \x20                [--inject KIND@CYCLE:ARG,...] (panic@C:U stall@C:U\n\
          \x20                 delay@C:W:MS — deterministic fault injection)\n\
          \x20                [--epoch-budget-ms N] (stall watchdog wall budget)\n\
+         \x20 sweep          --scenario NAME[,NAME] [--set \"k=1,2,4;j=1..64:*2\"]\n\
+         \x20                [--workers 1,2,4] [--strategy S,S] [--sched full,active]\n\
+         \x20                [--sync M,M] [--repartition \"off;64;adaptive\"]\n\
+         \x20                [--out results.jsonl] [--jobs N] [--cores N]\n\
+         \x20                [--frontier] [--dry-run] [--inject SPEC]\n\
+         \x20                (resume: rerun the same spec with the same --out)\n\
+         \x20                --summarize FILE [--bench-out BENCH.json\n\
+         \x20                 [--bench-scenario NAME]]\n\
          \x20 barrier-bench  [--workers 1,2,4] [--cycles N] [--spin yield|pure]\n\
          \x20 oltp-light     [--cores N] [--workers 1,2,4,8,16] [--strategy S]\n\
          \x20                [--sched full|active]\n\
@@ -70,24 +80,28 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
             "seed", "set", "json", "repartition", "checkpoint", "checkpoint-every", "restore",
             "inject", "epoch-budget-ms",
         ],
-        &["list-scenarios", "timed", "fingerprint", "counters"],
+        &["list-scenarios", "verbose", "timed", "fingerprint", "counters"],
     )?;
     if c.flag("list-scenarios")? {
         println!("registered scenarios:");
-        for line in scenario::list_lines() {
+        for line in scenario::list_lines(c.flag("verbose")?) {
             println!("  {line}");
         }
         return Ok(());
     }
     // Scenario keys come from the config file plus inline `--set k=v,...`
-    // pairs (CLI wins).
+    // pairs (CLI wins). Inline keys are validated against the scenario's
+    // declared keys below; file keys are not — one config file may drive
+    // several scenarios.
     let mut cfg = c.file_config().clone();
+    let mut set_keys: Vec<String> = Vec::new();
     if let Some(pairs) = c.get("set") {
         for pair in pairs.split(',') {
             let (k, v) = pair
                 .split_once('=')
                 .ok_or_else(|| format!("--set: expected k=v, got {pair:?}"))?;
             cfg.set(k.trim(), v.trim());
+            set_keys.push(k.trim().to_string());
         }
     }
     // `--seed` doubles as the scenario's workload seed and the partition
@@ -114,6 +128,8 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
             let name = c
                 .get("scenario")
                 .ok_or("missing --scenario NAME (or --list-scenarios / --restore FILE)")?;
+            let keys: Vec<&str> = set_keys.iter().map(String::as_str).collect();
+            scenario::validate_set_keys(&[name], &keys)?;
             Sim::scenario(name, &cfg)?
         }
     };
@@ -180,6 +196,78 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         std::fs::write(path, report.to_json()).map_err(|e| format!("write {path}: {e}"))?;
         println!("# wrote {path}");
     }
+    Ok(())
+}
+
+/// `scalesim sweep`: scenarios × a parameter grid, fanned across a
+/// thread pool of independent sessions with resumable JSONL results.
+fn cmd_sweep(argv: &[String]) -> Result<(), String> {
+    let c = Cmd::parse(
+        argv,
+        &[
+            "scenario", "set", "workers", "strategy", "sched", "sync", "repartition", "out",
+            "jobs", "cores", "inject", "summarize", "bench-out", "bench-scenario",
+        ],
+        &["frontier", "dry-run"],
+    )?;
+
+    // Report mode: read a results file instead of running cells.
+    if let Some(path) = c.get("summarize") {
+        let path = std::path::Path::new(path);
+        let sum = sweep::summarize(path)?;
+        sweep::print_summary(&sum, path);
+        if let Some(out) = c.get("bench-out") {
+            let bench = sweep::bench_from_results(path, c.get("bench-scenario"))?;
+            bench_json::print(&bench);
+            bench
+                .write_file(std::path::Path::new(out))
+                .map_err(|e| format!("write {out}: {e}"))?;
+            println!("# wrote {out}");
+        }
+        return Ok(());
+    }
+
+    let names = c
+        .get("scenario")
+        .ok_or("missing --scenario NAME[,NAME...] (or --summarize FILE)")?;
+    let scenarios: Vec<&str> = names
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    let mut spec = sweep::SweepSpec::new(&scenarios)?;
+    // The config file is the per-cell underlay; grid params overlay it.
+    spec.base = c.file_config().clone();
+    if let Some(g) = c.get("set") {
+        spec.grid_from(g)?;
+    }
+    if let Some(w) = c.get("workers") {
+        spec.workers_from(w)?;
+    }
+    if let Some(s) = c.get("strategy") {
+        spec.strategies_from(s)?;
+    }
+    if let Some(s) = c.get("sched") {
+        spec.scheds_from(s)?;
+    }
+    if let Some(s) = c.get("sync") {
+        spec.syncs_from(s)?;
+    }
+    if let Some(r) = c.get("repartition") {
+        spec.repartitions_from(r)?;
+    }
+
+    let opts = sweep::SweepOpts {
+        out: std::path::PathBuf::from(c.get_or("out", "sweep_results.jsonl")),
+        jobs: c.get_usize("jobs", 0)?,
+        cores: c.get_usize("cores", 0)?,
+        frontier: c.flag("frontier")?,
+        inject: c.get("inject").map(str::to_string),
+        dry_run: c.flag("dry-run")?,
+        score: None,
+    };
+    let outcome = sweep::run_sweep(&spec, &opts)?;
+    println!("{}", outcome.summary_line(&opts.out));
     Ok(())
 }
 
@@ -367,6 +455,7 @@ fn main() {
     let rest = &argv[1..];
     let result = match cmd.as_str() {
         "run" => cmd_run(rest),
+        "sweep" => cmd_sweep(rest),
         "barrier-bench" => cmd_barrier_bench(rest),
         "oltp-light" => cmd_oltp_light(rest),
         "ooo" => cmd_ooo(rest),

@@ -91,8 +91,9 @@ pub fn find(name: &str) -> Result<Box<dyn Scenario>, String> {
         })
 }
 
-/// Human-readable registry listing (one scenario per line, plus keys).
-pub fn list_lines() -> Vec<String> {
+/// Human-readable registry listing: one scenario per line; `verbose`
+/// adds every declared `--set` key with its doc line.
+pub fn list_lines(verbose: bool) -> Vec<String> {
     let mut lines = Vec::new();
     for s in all() {
         let alias = if s.aliases().is_empty() {
@@ -101,9 +102,15 @@ pub fn list_lines() -> Vec<String> {
             format!(" (aliases: {})", s.aliases().join(", "))
         };
         lines.push(format!("{:<10} {}{}", s.name(), s.summary(), alias));
-        for (k, v) in s.keys() {
-            lines.push(format!("             {k:<14} {v}"));
+        if verbose {
+            for (k, v) in s.keys() {
+                lines.push(format!("             {k:<14} {v}"));
+            }
         }
+    }
+    if !verbose {
+        lines.push("(--verbose lists each scenario's --set keys)".to_string());
+        return lines;
     }
     // Session-level keys the facade reads from every scenario config
     // (`Sim::scenario`), in addition to the per-scenario keys above.
@@ -121,6 +128,88 @@ pub fn list_lines() -> Vec<String> {
         "             repartition-hysteresis / repartition-max-moves   overrides".to_string(),
     );
     lines
+}
+
+/// Session-level config keys [`crate::engine::Sim::scenario`] reads from
+/// every scenario config, on top of the scenario's own [`Scenario::keys`].
+pub const SESSION_KEYS: &[&str] = &[
+    "repartition",
+    "repartition-hysteresis",
+    "repartition-max-moves",
+];
+
+/// Every `--set` key `s` accepts: its declared keys (composite doc
+/// entries like `"cycles / max-cycles"` split into their parts) plus the
+/// session-level keys.
+pub fn settable_keys(s: &dyn Scenario) -> Vec<&'static str> {
+    let mut keys: Vec<&'static str> = Vec::new();
+    for (k, _) in s.keys() {
+        for part in k.split('/') {
+            let part = part.trim();
+            if !part.is_empty() && !keys.contains(&part) {
+                keys.push(part);
+            }
+        }
+    }
+    for k in SESSION_KEYS {
+        if !keys.contains(k) {
+            keys.push(k);
+        }
+    }
+    keys
+}
+
+/// Reject `--set` keys no listed scenario understands — and, for a
+/// multi-scenario sweep, keys that only *some* of them understand (those
+/// cells would silently run on defaults). Errors carry a "did you mean"
+/// suggestion when a declared key is within edit distance 2.
+pub fn validate_set_keys(scenarios: &[&str], keys: &[&str]) -> Result<(), String> {
+    for name in scenarios {
+        let sc = find(name)?;
+        let known = settable_keys(sc.as_ref());
+        for key in keys {
+            if known.contains(key) {
+                continue;
+            }
+            let hint = match closest(&known, key) {
+                Some(s) => format!("; did you mean {s:?}?"),
+                None => String::new(),
+            };
+            return Err(format!(
+                "unknown --set key {key:?} for scenario {:?}{hint} (known keys: {})",
+                sc.name(),
+                known.join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The known key nearest to `key`, if within edit distance 2.
+fn closest<'a>(known: &[&'a str], key: &str) -> Option<&'a str> {
+    known
+        .iter()
+        .map(|k| (levenshtein(k, key), *k))
+        .filter(|(d, _)| *d <= 2)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, k)| k)
+}
+
+/// Classic single-row dynamic-programming edit distance.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut row: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut prev = row[0]; // row[i][0]
+        row[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let cost = if ca == cb { prev } else { prev + 1 };
+            prev = row[j + 1];
+            row[j + 1] = cost.min(prev + 1).min(row[j] + 1);
+        }
+    }
+    row[b.len()]
 }
 
 /// Shared stop-condition plumbing: an explicit `cycles = N` key wins;
@@ -373,6 +462,10 @@ impl Scenario for CpuLight {
             ("txns", "transactions per core (default 300)"),
             ("rows", "shared table rows (default 1024)"),
             ("theta", "Zipf skew (default 0.6)"),
+            ("write-frac", "transaction write fraction (default 0.5)"),
+            ("index-depth", "index lookups per access (default 2)"),
+            ("row-words", "words touched per row (default 2)"),
+            ("spec-n", "SPEC-workload problem size (default 500)"),
             ("max-instrs", "instruction budget per core (default 300k)"),
             ("seed", "workload seed (default 0xF12)"),
             ("cycles / max-cycles", "stop overrides (default: all cores done, cap 5M)"),
@@ -415,6 +508,12 @@ impl Scenario for CpuOoo {
             ("cores", "simulated cores (default 8)"),
             ("workload", "oltp | stream | chase | compute | branchy"),
             ("txns", "transactions per core (default 16)"),
+            ("rows", "shared table rows (default 1024)"),
+            ("theta", "Zipf skew (default 0.6)"),
+            ("write-frac", "transaction write fraction (default 0.5)"),
+            ("index-depth", "index lookups per access (default 2)"),
+            ("row-words", "words touched per row (default 2)"),
+            ("spec-n", "SPEC-workload problem size (default 500)"),
             ("max-instrs", "instruction budget per core (default 60k)"),
             ("seed", "workload seed (default 0xF14)"),
             ("cycles / max-cycles", "stop overrides (default: all cores done, cap 10M)"),
@@ -458,6 +557,8 @@ impl Scenario for FatTree {
             ("packets", "total packets (default 20k)"),
             ("window", "inject window in cycles (default packets/8)"),
             ("buffer", "switch port buffer depth (default 8)"),
+            ("link-delay", "per-link latency in cycles (default 1)"),
+            ("pipeline", "switch pipeline depth (default 1)"),
             ("seed", "traffic seed (default 0xDC)"),
             ("cycles / max-cycles", "stop overrides (default: all delivered, cap 50M)"),
         ]
@@ -1357,7 +1458,38 @@ mod tests {
         assert_eq!(find("cpu-system").unwrap().name(), "cpu-light");
         assert_eq!(find("datacenter").unwrap().name(), "fat-tree");
         assert!(find("bogus").is_err());
-        assert!(!list_lines().is_empty());
+        assert!(!list_lines(false).is_empty());
+        // Verbose adds the per-scenario key lines.
+        assert!(list_lines(true).len() > list_lines(false).len());
+    }
+
+    #[test]
+    fn settable_keys_split_composites_and_add_session_keys() {
+        let keys = settable_keys(find("ring").unwrap().as_ref());
+        assert!(keys.contains(&"nodes"));
+        assert!(keys.contains(&"packets"));
+        // The "cycles / max-cycles" doc entry splits into both parts.
+        assert!(keys.contains(&"cycles"));
+        assert!(keys.contains(&"max-cycles"));
+        assert!(keys.contains(&"repartition"), "session keys included");
+        assert!(!keys.contains(&"cycles / max-cycles"));
+    }
+
+    #[test]
+    fn validate_set_keys_rejects_unknown_with_suggestion() {
+        assert!(validate_set_keys(&["ring"], &["packets", "seed"]).is_ok());
+        let err = validate_set_keys(&["ring"], &["packet"]).unwrap_err();
+        assert!(err.contains("did you mean \"packets\"?"), "{err}");
+        // No suggestion when nothing is close.
+        let err = validate_set_keys(&["ring"], &["zzzzzz"]).unwrap_err();
+        assert!(!err.contains("did you mean"), "{err}");
+        assert!(err.contains("known keys:"), "{err}");
+        // Multi-scenario: the key must be known to every scenario.
+        assert!(validate_set_keys(&["ring", "torus"], &["packets"]).is_ok());
+        let err = validate_set_keys(&["ring", "torus"], &["nodes"]).unwrap_err();
+        assert!(err.contains("torus"), "{err}");
+        // Aliases resolve before checking.
+        assert!(validate_set_keys(&["oltp-light"], &["write-frac"]).is_ok());
     }
 
     #[test]

@@ -1,0 +1,36 @@
+//! Parallel design-space exploration: `scalesim sweep`.
+//!
+//! The paper's point is *architectural exploration* — comparing large
+//! numbers of design points — so this subsystem turns one box into a
+//! batch machine: a [`spec::SweepSpec`] names scenarios and a parameter
+//! grid, the planner ([`plan::plan`]) expands it into deterministic,
+//! stably-keyed cells, and the runner ([`runner::run_sweep`]) fans the
+//! cells across a thread pool of independent [`crate::engine::Sim`]
+//! sessions, streaming one self-describing JSONL row per cell through a
+//! single writer thread ([`writer`]).
+//!
+//! Two properties carry the production story:
+//!
+//! - **Resumability** — cell keys are pure functions of the spec, so a
+//!   killed sweep rerun with the same spec skips exactly the cells whose
+//!   keys are already in the results file (the fleet-level analogue of
+//!   the per-run checkpoint/restore from the crash-resilience work).
+//! - **Containment** — each cell is its own session; a `SimError` or
+//!   panic becomes an `"error"` row and the sweep keeps going.
+//!
+//! `--frontier` adds online pruning: within one *family* (same scenario
+//! and `--set` params — the accuracy knobs), an engine *lane*
+//! (strategy/sched/sync/repartition) whose throughput is strictly
+//! beaten by another lane at every completed worker count is dominated,
+//! and its remaining cells are recorded as `skipped:dominated` instead
+//! of run ([`plan::Frontier`]).
+
+pub mod plan;
+pub mod runner;
+pub mod spec;
+pub mod writer;
+
+pub use plan::{plan, Cell, Frontier};
+pub use runner::{run_sweep, SweepOpts, SweepOutcome};
+pub use spec::{expand_values, GridAxis, SweepSpec};
+pub use writer::{bench_from_results, print_summary, summarize, Summary};

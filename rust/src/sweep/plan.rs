@@ -1,0 +1,311 @@
+//! Sweep planner: expand a [`SweepSpec`] into stably-keyed cells, and
+//! the online dominance frontier used by `--frontier`.
+//!
+//! Cell keys are the resume contract: the same spec must produce the
+//! same keys on every run, regardless of axis ordering, so a killed
+//! sweep can skip exactly the cells already present in its results
+//! file. Keys therefore sort the `--set` params by key name; only the
+//! axis *ordering* of the planned cell list follows the command line.
+
+use std::collections::BTreeMap;
+
+use crate::engine::{RepartitionPolicy, SchedMode};
+use crate::sweep::spec::SweepSpec;
+use crate::sync::SyncMethod;
+use crate::util::config::Config;
+
+/// Hard cap on planned cells per sweep — a grid past this is almost
+/// certainly a typo'd range, and the results file would be unusable.
+pub const MAX_CELLS: usize = 65_536;
+
+/// One design point: a scenario, its `--set` params, and one value per
+/// engine axis.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// Position in the planned order (deterministic; informational).
+    pub index: usize,
+    /// Stable identity used for resume — see [`plan`].
+    pub key: String,
+    /// Canonical scenario name.
+    pub scenario: String,
+    /// Grid params in `--set` axis order (the key sorts them).
+    pub params: Vec<(String, String)>,
+    pub workers: usize,
+    pub strategy: String,
+    pub sched: SchedMode,
+    pub sync: SyncMethod,
+    /// Normalized policy spec; `"off"` disables.
+    pub repartition: String,
+}
+
+impl Cell {
+    /// The cell's scenario config: the sweep-wide base overlaid with
+    /// this cell's grid params.
+    pub fn config(&self, base: &Config) -> Config {
+        let mut cfg = base.clone();
+        for (k, v) in &self.params {
+            cfg.set(k, v);
+        }
+        cfg
+    }
+
+    /// Parse this cell's repartition axis back into a policy.
+    pub fn policy(&self) -> Result<RepartitionPolicy, String> {
+        if self.repartition == "off" {
+            Ok(RepartitionPolicy::Off)
+        } else {
+            RepartitionPolicy::parse(&self.repartition)
+        }
+    }
+
+    /// The accuracy-knob identity: scenario plus sorted grid params.
+    /// Cells in one family model the *same* design point and differ
+    /// only in how the engine runs it — the unit of frontier pruning.
+    pub fn family(&self) -> String {
+        family_of(&self.scenario, &self.params)
+    }
+
+    /// The engine-knob identity within a family, minus `workers` (the
+    /// frontier compares lanes coordinate-wise across worker counts).
+    pub fn lane(&self) -> String {
+        format!(
+            "strategy={};sched={};sync={};repartition={}",
+            self.strategy,
+            self.sched.name(),
+            self.sync.name(),
+            self.repartition
+        )
+    }
+}
+
+fn family_of(scenario: &str, params: &[(String, String)]) -> String {
+    let mut sorted: Vec<&(String, String)> = params.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut s = format!("scenario={scenario}");
+    for (k, v) in sorted {
+        s.push_str(&format!(";{k}={v}"));
+    }
+    s
+}
+
+/// Expand the spec into the full cell list.
+///
+/// Ordering is the command line's: scenarios, then each `--set` axis
+/// outer-to-inner, then workers, strategy, sched, sync, repartition
+/// innermost. Keys are `family;workers=N;lane` with params sorted, so
+/// reordering axes changes cell order but never their keys.
+pub fn plan(spec: &SweepSpec) -> Result<Vec<Cell>, String> {
+    let n = spec.cell_count();
+    if n == 0 {
+        return Err("sweep grid is empty (an axis has no values)".to_string());
+    }
+    if n > MAX_CELLS {
+        return Err(format!("sweep grid has {n} cells; the cap is {MAX_CELLS}"));
+    }
+
+    // Cartesian product of the --set axes, in axis order.
+    let mut param_sets: Vec<Vec<(String, String)>> = vec![Vec::new()];
+    for axis in &spec.grid {
+        let mut next = Vec::with_capacity(param_sets.len() * axis.values.len());
+        for base in &param_sets {
+            for v in &axis.values {
+                let mut set = base.clone();
+                set.push((axis.key.clone(), v.clone()));
+                next.push(set);
+            }
+        }
+        param_sets = next;
+    }
+
+    let mut cells = Vec::with_capacity(n);
+    for scenario in &spec.scenarios {
+        for params in &param_sets {
+            let family = family_of(scenario, params);
+            for &workers in &spec.workers {
+                for strategy in &spec.strategies {
+                    for &sched in &spec.scheds {
+                        for &sync in &spec.syncs {
+                            for repartition in &spec.repartitions {
+                                let mut cell = Cell {
+                                    index: cells.len(),
+                                    key: String::new(),
+                                    scenario: scenario.clone(),
+                                    params: params.clone(),
+                                    workers,
+                                    strategy: strategy.clone(),
+                                    sched,
+                                    sync,
+                                    repartition: repartition.clone(),
+                                };
+                                cell.key =
+                                    format!("{family};workers={workers};{}", cell.lane());
+                                cells.push(cell);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Online dominance tracker for `--frontier`.
+///
+/// Scores are throughput (simulated cycles per second — higher is
+/// better), recorded per `(family, lane, workers)`. A lane is
+/// *dominated* when some other lane in the same family has completed
+/// every worker coordinate this lane has, and strictly beats it at each
+/// one: same modelled design point, uniformly faster engine config.
+/// Dominated lanes' remaining cells are skipped, not run.
+///
+/// All state lives in `BTreeMap`s so iteration — and therefore which
+/// dominating lane gets reported — is deterministic.
+#[derive(Debug, Default)]
+pub struct Frontier {
+    // family -> lane -> workers -> best score seen.
+    scores: BTreeMap<String, BTreeMap<String, BTreeMap<usize, f64>>>,
+}
+
+impl Frontier {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed cell's score. Non-finite scores count as 0
+    /// (an errored or degenerate cell must be dominatable, not NaN-
+    /// poison the comparisons).
+    pub fn record(&mut self, family: &str, lane: &str, workers: usize, score: f64) {
+        let score = if score.is_finite() { score } else { 0.0 };
+        let slot = self
+            .scores
+            .entry(family.to_string())
+            .or_default()
+            .entry(lane.to_string())
+            .or_default()
+            .entry(workers)
+            .or_insert(f64::NEG_INFINITY);
+        if score > *slot {
+            *slot = score;
+        }
+    }
+
+    /// If `lane` is dominated within `family`, return the dominating
+    /// lane's name.
+    pub fn dominated_by(&self, family: &str, lane: &str) -> Option<&str> {
+        let lanes = self.scores.get(family)?;
+        let mine = lanes.get(lane)?;
+        if mine.is_empty() {
+            return None;
+        }
+        'lanes: for (other_name, other) in lanes {
+            if other_name == lane {
+                continue;
+            }
+            for (workers, score) in mine {
+                match other.get(workers) {
+                    Some(their) if their > score => {}
+                    _ => continue 'lanes,
+                }
+            }
+            return Some(other_name);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(scenarios: &[&str]) -> SweepSpec {
+        SweepSpec::new(scenarios).unwrap()
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_counts_match() {
+        let mut s = spec(&["ring", "torus"]);
+        s.grid_from("packets=2,4").unwrap();
+        s.workers_from("1,2").unwrap();
+        let a = plan(&s).unwrap();
+        let b = plan(&s).unwrap();
+        assert_eq!(a.len(), 8);
+        assert_eq!(s.cell_count(), 8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.index, y.index);
+        }
+        // Keys are unique.
+        let mut keys: Vec<&str> = a.iter().map(|c| c.key.as_str()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 8);
+    }
+
+    #[test]
+    fn keys_are_order_independent_but_ordering_follows_axes() {
+        let mut s1 = spec(&["ring"]);
+        s1.grid_from("packets=2,4;link-capacity=1,2").unwrap();
+        let mut s2 = spec(&["ring"]);
+        s2.grid_from("link-capacity=1,2;packets=2,4").unwrap();
+        let k1: std::collections::BTreeSet<String> =
+            plan(&s1).unwrap().into_iter().map(|c| c.key).collect();
+        let k2: std::collections::BTreeSet<String> =
+            plan(&s2).unwrap().into_iter().map(|c| c.key).collect();
+        assert_eq!(k1, k2, "axis order must not change cell identity");
+        // But the planned *ordering* differs: s1 varies link-capacity
+        // fastest, s2 varies packets fastest.
+        let o1 = plan(&s1).unwrap();
+        let o2 = plan(&s2).unwrap();
+        assert_ne!(o1[1].key, o2[1].key);
+    }
+
+    #[test]
+    fn key_format_states_the_full_engine_config() {
+        let mut s = spec(&["ring"]);
+        s.grid_from("packets=8").unwrap();
+        let cells = plan(&s).unwrap();
+        assert_eq!(
+            cells[0].key,
+            "scenario=ring;packets=8;workers=1;strategy=contiguous;\
+             sched=full-scan;sync=common-atomic;repartition=off"
+        );
+    }
+
+    #[test]
+    fn empty_and_oversized_grids_are_rejected() {
+        let mut s = spec(&["ring"]);
+        s.workers = Vec::new();
+        assert!(plan(&s).is_err());
+        let mut s = spec(&["ring"]);
+        s.workers = (1..=MAX_CELLS + 1).collect();
+        assert!(plan(&s).is_err());
+    }
+
+    #[test]
+    fn frontier_dominates_only_on_strict_uniform_beat() {
+        let fam = "scenario=ring;packets=8";
+        let mut f = Frontier::new();
+        // Lane A beats lane B at every shared coordinate.
+        f.record(fam, "lane-a", 1, 100.0);
+        f.record(fam, "lane-a", 2, 190.0);
+        f.record(fam, "lane-b", 1, 50.0);
+        assert_eq!(f.dominated_by(fam, "lane-b"), Some("lane-a"));
+        // ... but B is not dominated once it wins somewhere.
+        f.record(fam, "lane-b", 2, 400.0);
+        assert_eq!(f.dominated_by(fam, "lane-b"), None);
+        // Ties do not dominate (strict beat required).
+        f.record(fam, "lane-c", 1, 100.0);
+        assert_eq!(f.dominated_by(fam, "lane-c"), None);
+        // A lane with no scores yet is never dominated.
+        assert_eq!(f.dominated_by(fam, "lane-d"), None);
+        // Coordinates the other lane has not run block dominance.
+        f.record(fam, "lane-e", 4, 1.0);
+        assert_eq!(f.dominated_by(fam, "lane-e"), None);
+        // Different family: no cross-talk.
+        assert_eq!(f.dominated_by("scenario=torus", "lane-b"), None);
+        // Non-finite scores clamp to 0 and stay dominatable.
+        f.record(fam, "lane-f", 1, f64::NAN);
+        assert_eq!(f.dominated_by(fam, "lane-f"), Some("lane-a"));
+    }
+}

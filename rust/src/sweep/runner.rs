@@ -1,0 +1,288 @@
+//! Sweep runner: fan planned cells across a thread pool of independent
+//! [`Sim`] sessions, streaming one JSONL row per cell.
+//!
+//! Shape: `jobs` worker threads claim cells from a shared atomic index;
+//! a single writer thread owns the results file and appends one line
+//! per finished cell (flushed per line, so a kill loses at most the
+//! in-flight row). Each cell is its own `Sim` session — failures are
+//! contained per cell: a `SimError` or an in-cell panic becomes an
+//! `"error"` row and the sweep continues.
+//!
+//! Nested parallelism is budgeted, not multiplied: with `jobs` cells in
+//! flight, every cell's ladder is capped at `cores / jobs` workers
+//! ([`Sim::worker_cap`]) so cells × workers never oversubscribes the
+//! box. The cap changes engine topology only, never simulation
+//! semantics — fingerprints are cap-invariant.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::{FaultPlan, RunReport, Sim};
+use crate::sched::PartitionStrategy;
+use crate::sweep::plan::{plan, Cell, Frontier};
+use crate::sweep::spec::SweepSpec;
+use crate::sweep::writer;
+
+/// Runner options (the `scalesim sweep` flags).
+#[derive(Debug)]
+pub struct SweepOpts {
+    /// Results file (JSONL, append-only).
+    pub out: PathBuf,
+    /// Concurrent cells; 0 = auto (`cores / max(workers axis)`).
+    pub jobs: usize,
+    /// Core budget; 0 = detect via `std::thread::available_parallelism`.
+    pub cores: usize,
+    /// Prune dominated lanes online.
+    pub frontier: bool,
+    /// Fault-injection spec forwarded to every cell (test/CI knob).
+    pub inject: Option<String>,
+    /// Plan and print cell keys without running anything.
+    pub dry_run: bool,
+    /// Frontier score override (tests pin pruning on a fixed cost
+    /// table); `None` scores by simulated cycles per second.
+    pub score: Option<fn(&Cell, &RunReport) -> f64>,
+}
+
+impl Default for SweepOpts {
+    fn default() -> Self {
+        SweepOpts {
+            out: PathBuf::from("sweep_results.jsonl"),
+            jobs: 0,
+            cores: 0,
+            frontier: false,
+            inject: None,
+            dry_run: false,
+            score: None,
+        }
+    }
+}
+
+/// What a sweep did — the counts behind the summary line CI greps.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// Cells the spec expands to.
+    pub planned: usize,
+    /// Cells executed this invocation (ok + error rows written).
+    pub ran: usize,
+    /// Cells skipped because their key was already in the results file.
+    pub resumed: usize,
+    /// Error rows written this invocation.
+    pub errors: usize,
+    /// Cells pruned as dominated this invocation.
+    pub dominated: usize,
+    /// Thread-pool width used.
+    pub jobs: usize,
+    /// Per-cell ladder worker cap.
+    pub worker_cap: usize,
+    pub wall: Duration,
+}
+
+impl SweepOutcome {
+    /// One greppable line: `# sweep: planned=.. ran=.. resumed=.. ...`.
+    pub fn summary_line(&self, out: &std::path::Path) -> String {
+        format!(
+            "# sweep: planned={} ran={} resumed={} errors={} dominated={} \
+             jobs={} worker_cap={} wall_ms={} out={}",
+            self.planned,
+            self.ran,
+            self.resumed,
+            self.errors,
+            self.dominated,
+            self.jobs,
+            self.worker_cap,
+            self.wall.as_millis(),
+            out.display(),
+        )
+    }
+}
+
+/// Run (or resume) a sweep. See the module docs for the execution
+/// shape; returns the outcome counts, with per-cell failures contained
+/// as `"error"` rows rather than surfaced here.
+pub fn run_sweep(spec: &SweepSpec, opts: &SweepOpts) -> Result<SweepOutcome, String> {
+    let started = Instant::now();
+    let cells = plan(spec)?;
+    let planned = cells.len();
+
+    if opts.dry_run {
+        for c in &cells {
+            println!("{}", c.key);
+        }
+        return Ok(SweepOutcome {
+            planned,
+            ran: 0,
+            resumed: 0,
+            errors: 0,
+            dominated: 0,
+            jobs: 0,
+            worker_cap: 0,
+            wall: started.elapsed(),
+        });
+    }
+
+    // Fail on a bad --inject spec before any cell runs, not inside all
+    // of them.
+    if let Some(inj) = &opts.inject {
+        FaultPlan::parse(inj)?;
+    }
+
+    // Resume: every key already in the file is done. A kill may have
+    // left a newline-less truncated tail — terminate it first so new
+    // rows never glue onto it (the partial line's cell simply reruns).
+    writer::repair_tail(&opts.out)?;
+    let done = writer::completed_keys(&opts.out)?;
+    let pending: Vec<&Cell> = cells.iter().filter(|c| !done.contains(&c.key)).collect();
+    let resumed = planned - pending.len();
+
+    // Core budget: `jobs` concurrent cells, each capped to its share of
+    // the cores so cells × ladder workers <= cores.
+    let cores = if opts.cores > 0 {
+        opts.cores
+    } else {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    };
+    let max_workers = spec.workers.iter().copied().max().unwrap_or(1);
+    let jobs = if opts.jobs > 0 {
+        opts.jobs
+    } else {
+        (cores / max_workers).max(1)
+    }
+    .min(pending.len().max(1));
+    let worker_cap = (cores / jobs).max(1);
+
+    let file = writer::open_append(&opts.out)?;
+    let next = AtomicUsize::new(0);
+    let errors = AtomicUsize::new(0);
+    let dominated = AtomicUsize::new(0);
+    let frontier = Mutex::new(Frontier::new());
+    let write_err: Mutex<Option<String>> = Mutex::new(None);
+    let (tx, rx) = mpsc::channel::<String>();
+
+    std::thread::scope(|scope| {
+        // Single writer: owns the file, appends whole lines, flushes
+        // each so a kill loses at most the in-flight row.
+        scope.spawn(|| {
+            use std::io::Write;
+            let mut file = file;
+            for line in rx {
+                if let Err(e) = file.write_all(line.as_bytes()).and_then(|()| file.flush())
+                {
+                    *write_err.lock().unwrap() = Some(format!(
+                        "sweep: write {}: {e}",
+                        opts.out.display()
+                    ));
+                    break;
+                }
+            }
+        });
+
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            scope.spawn(|| {
+                let tx = tx; // move the clone, borrow everything else
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(cell) = pending.get(i) else { break };
+
+                    if opts.frontier {
+                        let f = frontier.lock().unwrap();
+                        if let Some(by) = f.dominated_by(&cell.family(), &cell.lane()) {
+                            let row = writer::dominated_row(cell, by);
+                            drop(f);
+                            dominated.fetch_add(1, Ordering::Relaxed);
+                            if tx.send(row + "\n").is_err() {
+                                break;
+                            }
+                            continue;
+                        }
+                    }
+
+                    let cell_start = Instant::now();
+                    let result = catch_unwind(AssertUnwindSafe(|| {
+                        run_cell(spec, cell, worker_cap, opts)
+                    }));
+                    let wall = cell_start.elapsed();
+                    let row = match result {
+                        Ok(Ok(report)) => {
+                            if opts.frontier {
+                                let score = match opts.score {
+                                    Some(f) => f(cell, &report),
+                                    None => report.stats.sim_khz() * 1e3,
+                                };
+                                frontier.lock().unwrap().record(
+                                    &cell.family(),
+                                    &cell.lane(),
+                                    cell.workers,
+                                    score,
+                                );
+                            }
+                            writer::ok_row(cell, &report, wall)
+                        }
+                        Ok(Err(e)) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            writer::error_row(cell, &e, wall)
+                        }
+                        Err(payload) => {
+                            let msg = payload
+                                .downcast_ref::<String>()
+                                .map(String::as_str)
+                                .or_else(|| payload.downcast_ref::<&str>().copied())
+                                .unwrap_or("panic (non-string payload)");
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            writer::error_row(cell, &format!("panic: {msg}"), wall)
+                        }
+                    };
+                    if tx.send(row + "\n").is_err() {
+                        break; // writer died; its error is recorded
+                    }
+                }
+            });
+        }
+        drop(tx); // the writer's loop ends when the last job hangs up
+    });
+
+    if let Some(e) = write_err.lock().unwrap().take() {
+        return Err(e);
+    }
+
+    let dominated = dominated.load(Ordering::Relaxed);
+    Ok(SweepOutcome {
+        planned,
+        ran: pending.len() - dominated,
+        resumed,
+        errors: errors.load(Ordering::Relaxed),
+        dominated,
+        jobs,
+        worker_cap,
+        wall: started.elapsed(),
+    })
+}
+
+/// Execute one cell as a self-contained [`Sim`] session.
+fn run_cell(
+    spec: &SweepSpec,
+    cell: &Cell,
+    worker_cap: usize,
+    opts: &SweepOpts,
+) -> Result<RunReport, String> {
+    let cfg = cell.config(&spec.base);
+    let seed = cfg.get_u64("seed", 42)?;
+    let mut sim = Sim::scenario(&cell.scenario, &cfg)?
+        .workers(cell.workers)
+        .worker_cap(worker_cap)
+        .strategy(PartitionStrategy::parse(&cell.strategy, seed)?)
+        .sched(cell.sched)
+        .sync(cell.sync)
+        // The axis always wins over a `repartition` key in the base
+        // config: a cell's engine configuration is exactly its key.
+        .repartition(cell.policy()?)
+        .timed()
+        .fingerprinted();
+    if let Some(inj) = &opts.inject {
+        sim = sim.inject(FaultPlan::parse(inj)?);
+    }
+    sim.run()
+}

@@ -1,0 +1,404 @@
+//! Sweep specification: which scenarios to run and the parameter grid.
+//!
+//! A [`SweepSpec`] is the parsed form of the `scalesim sweep` command
+//! line: a list of scenarios, scenario-config axes from `--set`
+//! (`"packets=2,4,8;link-capacity=2"` — pairs separated by `;`, each
+//! value list by `,` or a range like `1..64:*2`), and the engine axes
+//! (`--workers`, `--strategy`, `--sched`, `--sync`, `--repartition`).
+//!
+//! Everything is validated up front — scenario names resolve against the
+//! registry, grid keys against each scenario's declared `--set` keys
+//! (with a "did you mean" suggestion), and every engine-axis value
+//! against its parser — so a bad spec fails before any cell runs.
+
+use crate::engine::{RepartitionPolicy, SchedMode};
+use crate::scenario;
+use crate::sched::PartitionStrategy;
+use crate::sync::SyncMethod;
+use crate::util::cli::parse_u64;
+use crate::util::config::Config;
+
+/// Cap on the values a single axis may expand to — catches runaway
+/// ranges (`1..1g`) before they become a planning problem.
+pub const MAX_AXIS_VALUES: usize = 4096;
+
+/// One `--set` grid axis: a scenario-config key and its value list.
+#[derive(Debug, Clone)]
+pub struct GridAxis {
+    pub key: String,
+    pub values: Vec<String>,
+}
+
+/// A validated sweep: scenarios × grid axes × engine axes.
+///
+/// Engine axes default to a single neutral value (1 worker, contiguous
+/// partitioning, full-scan scheduling, common-atomic sync, repartition
+/// off), so a spec with only `--set` axes sweeps the model space alone.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Canonical scenario names, in the order given.
+    pub scenarios: Vec<String>,
+    /// Scenario-config axes, in `--set` order.
+    pub grid: Vec<GridAxis>,
+    pub workers: Vec<usize>,
+    /// Canonical [`PartitionStrategy`] names.
+    pub strategies: Vec<String>,
+    pub scheds: Vec<SchedMode>,
+    pub syncs: Vec<SyncMethod>,
+    /// Normalized [`RepartitionPolicy`] specs; `"off"` disables. The
+    /// axis always wins over a `repartition` key in the base config so
+    /// every cell's key states its full engine configuration.
+    pub repartitions: Vec<String>,
+    /// Config-file underlay applied to every cell before its grid
+    /// params.
+    pub base: Config,
+}
+
+impl SweepSpec {
+    /// Start a spec from scenario names (or aliases); engine axes get
+    /// their neutral defaults.
+    pub fn new(scenarios: &[&str]) -> Result<Self, String> {
+        if scenarios.is_empty() {
+            return Err("sweep needs at least one scenario".to_string());
+        }
+        let mut canonical: Vec<String> = Vec::new();
+        for name in scenarios {
+            let sc = scenario::find(name.trim())?;
+            if canonical.iter().any(|c| c == sc.name()) {
+                return Err(format!("scenario {:?} listed twice", sc.name()));
+            }
+            canonical.push(sc.name().to_string());
+        }
+        Ok(SweepSpec {
+            scenarios: canonical,
+            grid: Vec::new(),
+            workers: vec![1],
+            strategies: vec!["contiguous".to_string()],
+            scheds: vec![SchedMode::FullScan],
+            syncs: vec![SyncMethod::CommonAtomic],
+            repartitions: vec!["off".to_string()],
+            base: Config::new(),
+        })
+    }
+
+    /// Parse a `--set` grid spec: `key=VALUES` pairs separated by `;`
+    /// (the value lists themselves use `,`, so the pair separator
+    /// differs from `scalesim run`'s `--set k=v,k=v`).
+    pub fn grid_from(&mut self, spec: &str) -> Result<(), String> {
+        for pair in spec.split(';') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("--set: expected key=VALUES, got {pair:?}"))?;
+            self.push_axis(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Add one grid axis, validating the key against every swept
+    /// scenario's declared `--set` keys.
+    pub fn push_axis(&mut self, key: &str, values_spec: &str) -> Result<(), String> {
+        if self.grid.iter().any(|a| a.key == key) {
+            return Err(format!("--set key {key:?} given twice"));
+        }
+        // The engine axes have their own flags; catch the common mix-up
+        // before the registry rejects the key less helpfully.
+        for (axis, flag) in [
+            ("workers", "--workers"),
+            ("strategy", "--strategy"),
+            ("sched", "--sched"),
+            ("sync", "--sync"),
+            ("repartition", "--repartition"),
+        ] {
+            if key == axis {
+                return Err(format!(
+                    "{key:?} is an engine axis; sweep it with `{flag} VALUES`, not --set"
+                ));
+            }
+        }
+        let names: Vec<&str> = self.scenarios.iter().map(|s| s.as_str()).collect();
+        scenario::validate_set_keys(&names, &[key])?;
+        self.grid.push(GridAxis {
+            key: key.to_string(),
+            values: expand_values(values_spec)?,
+        });
+        Ok(())
+    }
+
+    /// `--workers 1,2,4` or a range (`1..16:*2`).
+    pub fn workers_from(&mut self, spec: &str) -> Result<(), String> {
+        let mut out = Vec::new();
+        for v in expand_values(spec)? {
+            let n = parse_u64(&v).map_err(|e| format!("--workers: {e}"))? as usize;
+            if n == 0 {
+                return Err("--workers: 0 is not a worker count".to_string());
+            }
+            out.push(n);
+        }
+        self.workers = out;
+        Ok(())
+    }
+
+    /// `--strategy contiguous,cost-locality` (canonicalized, so `rr`
+    /// and `round-robin` collide as duplicates).
+    pub fn strategies_from(&mut self, spec: &str) -> Result<(), String> {
+        let mut out: Vec<String> = Vec::new();
+        for s in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let name = PartitionStrategy::parse(s, 42)?.name().to_string();
+            if out.contains(&name) {
+                return Err(format!("--strategy repeats {name:?}"));
+            }
+            out.push(name);
+        }
+        if out.is_empty() {
+            return Err("--strategy: empty list".to_string());
+        }
+        self.strategies = out;
+        Ok(())
+    }
+
+    /// `--sched full,active`.
+    pub fn scheds_from(&mut self, spec: &str) -> Result<(), String> {
+        let mut out: Vec<SchedMode> = Vec::new();
+        for s in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let m = SchedMode::parse(s)?;
+            if out.contains(&m) {
+                return Err(format!("--sched repeats {:?}", m.name()));
+            }
+            out.push(m);
+        }
+        if out.is_empty() {
+            return Err("--sched: empty list".to_string());
+        }
+        self.scheds = out;
+        Ok(())
+    }
+
+    /// `--sync common-atomic,atomic,spinlock,mutex`.
+    pub fn syncs_from(&mut self, spec: &str) -> Result<(), String> {
+        let mut out: Vec<SyncMethod> = Vec::new();
+        for s in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let m = SyncMethod::parse(s)?;
+            if out.contains(&m) {
+                return Err(format!("--sync repeats {:?}", m.name()));
+            }
+            out.push(m);
+        }
+        if out.is_empty() {
+            return Err("--sync: empty list".to_string());
+        }
+        self.syncs = out;
+        Ok(())
+    }
+
+    /// `--repartition "off;64;256,0.1;adaptive"` — policy specs contain
+    /// commas, so this axis separates its values with `;`.
+    pub fn repartitions_from(&mut self, spec: &str) -> Result<(), String> {
+        let mut out: Vec<String> = Vec::new();
+        for s in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let norm = if s == "off" {
+                "off".to_string()
+            } else {
+                let policy = RepartitionPolicy::parse(s)?;
+                if policy.enabled() {
+                    s.to_string()
+                } else {
+                    "off".to_string()
+                }
+            };
+            if out.contains(&norm) {
+                return Err(format!("--repartition repeats {norm:?}"));
+            }
+            out.push(norm);
+        }
+        if out.is_empty() {
+            return Err("--repartition: empty list".to_string());
+        }
+        self.repartitions = out;
+        Ok(())
+    }
+
+    /// Planned cell count (saturating; [`super::plan::plan`] enforces
+    /// the hard cap).
+    pub fn cell_count(&self) -> usize {
+        let mut n = self
+            .scenarios
+            .len()
+            .saturating_mul(self.workers.len())
+            .saturating_mul(self.strategies.len())
+            .saturating_mul(self.scheds.len())
+            .saturating_mul(self.syncs.len())
+            .saturating_mul(self.repartitions.len());
+        for a in &self.grid {
+            n = n.saturating_mul(a.values.len());
+        }
+        n
+    }
+}
+
+/// Expand an axis value spec: comma-separated atoms, where a numeric
+/// atom of the form `A..B`, `A..B:+S`, or `A..B:*S` expands to the
+/// inclusive range (additive or multiplicative step; `A..B` steps by 1).
+/// Non-range atoms pass through as literals. Duplicate values are an
+/// error — they would collide on the cell key.
+pub fn expand_values(spec: &str) -> Result<Vec<String>, String> {
+    let mut out: Vec<String> = Vec::new();
+    for atom in spec.split(',') {
+        let atom = atom.trim();
+        if atom.is_empty() {
+            return Err(format!("empty value in axis spec {spec:?}"));
+        }
+        if !expand_range(atom, &mut out)? {
+            out.push(atom.to_string());
+        }
+        if out.len() > MAX_AXIS_VALUES {
+            return Err(format!(
+                "axis {spec:?} expands to more than {MAX_AXIS_VALUES} values"
+            ));
+        }
+    }
+    for i in 0..out.len() {
+        if out[i + 1..].contains(&out[i]) {
+            return Err(format!("axis {spec:?} repeats value {:?}", out[i]));
+        }
+    }
+    Ok(out)
+}
+
+enum StepOp {
+    Add(u64),
+    Mul(u64),
+}
+
+/// Try to expand `atom` as a range; `Ok(false)` means "not a range,
+/// treat as a literal" (only when the part before `..` is not a
+/// number — a malformed end or step is an error, not a literal).
+fn expand_range(atom: &str, out: &mut Vec<String>) -> Result<bool, String> {
+    let Some((start_s, rest)) = atom.split_once("..") else {
+        return Ok(false);
+    };
+    let Ok(start) = parse_u64(start_s.trim()) else {
+        return Ok(false);
+    };
+    let (end_s, step_s) = match rest.split_once(':') {
+        Some((e, s)) => (e, Some(s.trim())),
+        None => (rest, None),
+    };
+    let end = parse_u64(end_s.trim()).map_err(|e| format!("range {atom:?}: bad end: {e}"))?;
+    if start > end {
+        return Err(format!("range {atom:?}: start {start} > end {end}"));
+    }
+    let step = match step_s {
+        None | Some("") => StepOp::Add(1),
+        Some(s) if s.starts_with('*') => {
+            let m = parse_u64(s[1..].trim()).map_err(|e| format!("range {atom:?}: bad step: {e}"))?;
+            if m < 2 {
+                return Err(format!("range {atom:?}: multiplicative step must be >= 2"));
+            }
+            if start == 0 {
+                return Err(format!("range {atom:?}: multiplicative range cannot start at 0"));
+            }
+            StepOp::Mul(m)
+        }
+        Some(s) => {
+            let body = s.strip_prefix('+').unwrap_or(s);
+            let d = parse_u64(body.trim()).map_err(|e| format!("range {atom:?}: bad step: {e}"))?;
+            if d == 0 {
+                return Err(format!("range {atom:?}: step must be >= 1"));
+            }
+            StepOp::Add(d)
+        }
+    };
+    let mut v = start;
+    loop {
+        out.push(v.to_string());
+        if out.len() > MAX_AXIS_VALUES {
+            return Err(format!(
+                "range {atom:?} expands to more than {MAX_AXIS_VALUES} values"
+            ));
+        }
+        let next = match step {
+            StepOp::Add(d) => v.checked_add(d),
+            StepOp::Mul(m) => v.checked_mul(m),
+        };
+        match next {
+            Some(n) if n <= end => v = n,
+            _ => break,
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_lists_pass_through() {
+        assert_eq!(expand_values("1,2,4").unwrap(), vec!["1", "2", "4"]);
+        assert_eq!(expand_values("oltp, stream").unwrap(), vec!["oltp", "stream"]);
+    }
+
+    #[test]
+    fn additive_and_multiplicative_ranges_expand() {
+        assert_eq!(expand_values("1..4").unwrap(), vec!["1", "2", "3", "4"]);
+        assert_eq!(expand_values("1..8:+3").unwrap(), vec!["1", "4", "7"]);
+        assert_eq!(
+            expand_values("1..64:*2").unwrap(),
+            vec!["1", "2", "4", "8", "16", "32", "64"]
+        );
+        // Suffix liberties from parse_u64 carry over.
+        assert_eq!(expand_values("1k..3k:1k").unwrap(), vec!["1000", "2000", "3000"]);
+        // Ranges mix with plain atoms.
+        assert_eq!(expand_values("9,1..2").unwrap(), vec!["9", "1", "2"]);
+    }
+
+    #[test]
+    fn bad_ranges_are_errors_not_literals() {
+        assert!(expand_values("4..1").is_err(), "reversed");
+        assert!(expand_values("1..8:*1").is_err(), "mul step < 2");
+        assert!(expand_values("1..8:+0").is_err(), "zero step");
+        assert!(expand_values("0..8:*2").is_err(), "mul from 0");
+        assert!(expand_values("1..x").is_err(), "bad end");
+        assert!(expand_values("1,1").is_err(), "duplicate value");
+        assert!(expand_values("1,,2").is_err(), "empty atom");
+        assert!(expand_values("1..1m").is_err(), "expansion cap");
+    }
+
+    #[test]
+    fn spec_validates_everything_up_front() {
+        assert!(SweepSpec::new(&[]).is_err());
+        assert!(SweepSpec::new(&["nope"]).is_err());
+        // Aliases canonicalize, so listing both forms is a duplicate.
+        assert!(SweepSpec::new(&["ring", "ring"]).is_err());
+        assert!(SweepSpec::new(&["oltp-light", "cpu-light"]).is_err());
+
+        let mut s = SweepSpec::new(&["ring", "torus"]).unwrap();
+        assert_eq!(s.scenarios, vec!["ring", "torus"]);
+        s.grid_from("packets=2,4; link-capacity=2").unwrap();
+        assert_eq!(s.grid.len(), 2);
+        // `nodes` is a ring key but not a torus key: rejected for a
+        // multi-scenario sweep (some cells would silently use defaults).
+        let err = s.push_axis("nodes", "4,8").unwrap_err();
+        assert!(err.contains("torus"), "{err}");
+        // Engine axes are redirected to their flags.
+        let err = s.push_axis("workers", "1,2").unwrap_err();
+        assert!(err.contains("--workers"), "{err}");
+
+        s.workers_from("1..4:*2").unwrap();
+        assert_eq!(s.workers, vec![1, 2, 4]);
+        assert!(s.workers_from("0,1").is_err());
+        s.strategies_from("contiguous,cost-locality").unwrap();
+        assert!(s.strategies_from("rr,round-robin").is_err(), "canonical dup");
+        s.scheds_from("full,active").unwrap();
+        s.syncs_from("common-atomic,atomic").unwrap();
+        s.repartitions_from("off; 64; adaptive").unwrap();
+        assert!(s.repartitions_from("0;off").is_err(), "0 normalizes to off");
+        // 2 scenarios x (2 packets x 1 link-capacity) x 3 workers
+        // x 2 strategies x 2 scheds x 2 syncs x 3 repartition policies.
+        assert_eq!(s.cell_count(), 2 * (2 * 1) * 3 * 2 * 2 * 2 * 3);
+    }
+}

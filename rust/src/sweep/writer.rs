@@ -1,0 +1,432 @@
+//! Sweep results: JSONL row formatting, the resume reader, the
+//! `--summarize` report, and the bridge back into `BENCH_ladder.json`.
+//!
+//! The results file is append-only JSONL — one self-describing object
+//! per line, written by a single writer thread (see
+//! [`super::runner::run_sweep`]) so rows are never interleaved. Every
+//! row leads with its `"cell"` key and echoes the cell's full
+//! configuration, then carries a `"status"` and status-specific fields:
+//!
+//! - `"ok"` — wall time, fingerprint, and the embedded
+//!   [`RunReport::to_json`] under `"report"`;
+//! - `"error"` — the contained failure's message (the sweep continues);
+//! - `"skipped:dominated"` — the `--frontier` lane that beat it.
+//!
+//! Resume ([`completed_keys`]) re-reads the file and collects the keys
+//! of *complete* lines; a half-written tail line from a killed sweep is
+//! ignored, so its cell reruns. The readers here are deliberately
+//! tolerant field-extractors, not a JSON parser — the crate is
+//! dependency-free, and the rows are machine-written with known shape.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+use std::time::Duration;
+
+use crate::engine::{Engine, RunReport, SchedMode};
+use crate::harness::bench_json::{BenchRow, LadderBench};
+use crate::sweep::plan::Cell;
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The shared row prefix: cell key first (the resume contract), then
+/// the full configuration echo.
+fn row_head(cell: &Cell) -> String {
+    let mut params = String::from("{");
+    for (i, (k, v)) in cell.params.iter().enumerate() {
+        if i > 0 {
+            params.push_str(", ");
+        }
+        params.push_str(&format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)));
+    }
+    params.push('}');
+    format!(
+        "\"cell\": \"{}\", \"scenario\": \"{}\", \"params\": {}, \
+         \"workers\": {}, \"strategy\": \"{}\", \"sched\": \"{}\", \
+         \"sync\": \"{}\", \"repartition\": \"{}\"",
+        json_escape(&cell.key),
+        json_escape(&cell.scenario),
+        params,
+        cell.workers,
+        json_escape(&cell.strategy),
+        cell.sched.name(),
+        cell.sync.name(),
+        json_escape(&cell.repartition),
+    )
+}
+
+/// A completed cell's row; embeds the full report.
+pub fn ok_row(cell: &Cell, report: &RunReport, wall: Duration) -> String {
+    format!(
+        "{{{}, \"status\": \"ok\", \"wall_ms\": {}, \"fingerprint\": \"{:#018x}\", \
+         \"report\": {}}}",
+        row_head(cell),
+        wall.as_millis(),
+        report.fingerprint(),
+        report.to_json(),
+    )
+}
+
+/// A contained failure (SimError or in-cell panic).
+pub fn error_row(cell: &Cell, err: &str, wall: Duration) -> String {
+    format!(
+        "{{{}, \"status\": \"error\", \"wall_ms\": {}, \"error\": \"{}\"}}",
+        row_head(cell),
+        wall.as_millis(),
+        json_escape(err),
+    )
+}
+
+/// A cell pruned by `--frontier` before running.
+pub fn dominated_row(cell: &Cell, by: &str) -> String {
+    format!(
+        "{{{}, \"status\": \"skipped:dominated\", \"dominated_by\": \"{}\"}}",
+        row_head(cell),
+        json_escape(by),
+    )
+}
+
+/// Open the results file for appending, creating parent directories.
+pub fn open_append(path: &Path) -> Result<File, String> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("sweep: create {}: {e}", dir.display()))?;
+        }
+    }
+    OpenOptions::new()
+        .append(true)
+        .create(true)
+        .open(path)
+        .map_err(|e| format!("sweep: open {}: {e}", path.display()))
+}
+
+/// If `path` exists, is non-empty, and does not end in a newline (a
+/// killed writer died mid-line), append one so the next row starts on
+/// a fresh line instead of gluing onto the truncated tail.
+pub fn repair_tail(path: &Path) -> Result<(), String> {
+    use std::io::{Read, Seek, SeekFrom, Write};
+    let ctx = |e: std::io::Error| format!("sweep: repair {}: {e}", path.display());
+    let mut f = match OpenOptions::new().read(true).append(true).open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(ctx(e)),
+    };
+    if f.seek(SeekFrom::End(0)).map_err(ctx)? == 0 {
+        return Ok(());
+    }
+    f.seek(SeekFrom::End(-1)).map_err(ctx)?;
+    let mut last = [0u8; 1];
+    f.read_exact(&mut last).map_err(ctx)?;
+    if last[0] != b'\n' {
+        f.write_all(b"\n").map_err(ctx)?;
+    }
+    Ok(())
+}
+
+/// Cell keys already present in `path` — the resume set. A missing file
+/// is an empty set; an incomplete tail line (killed mid-write) is
+/// skipped so its cell reruns. Every complete row counts, whatever its
+/// status: reruns must not repeat known-dominated or known-failing
+/// cells either.
+pub fn completed_keys(path: &Path) -> Result<BTreeSet<String>, String> {
+    let file = match File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(BTreeSet::new()),
+        Err(e) => return Err(format!("sweep: read {}: {e}", path.display())),
+    };
+    let mut keys = BTreeSet::new();
+    for line in BufReader::new(file).lines() {
+        let line = line.map_err(|e| format!("sweep: read {}: {e}", path.display()))?;
+        let t = line.trim();
+        if !t.starts_with('{') || !t.ends_with('}') {
+            continue; // blank, comment, or truncated tail line
+        }
+        if let Some(key) = str_field(t, "cell") {
+            keys.insert(key.to_string());
+        }
+    }
+    Ok(keys)
+}
+
+/// Extract a string field's raw value from a machine-written row.
+/// Finds the first `"name": "` and reads to the next quote — fine for
+/// the fields we read back (keys, names, hex fingerprints), which never
+/// contain escapes.
+pub(crate) fn str_field<'a>(row: &'a str, name: &str) -> Option<&'a str> {
+    let pat = format!("\"{name}\": \"");
+    let start = row.find(&pat)? + pat.len();
+    let end = row[start..].find('"')?;
+    Some(&row[start..start + end])
+}
+
+/// Extract a numeric field's value (first occurrence of `"name": N`).
+pub(crate) fn num_field(row: &str, name: &str) -> Option<f64> {
+    let pat = format!("\"{name}\": ");
+    let start = row.find(&pat)? + pat.len();
+    let rest = &row[start..];
+    let end = rest
+        .find(|c: char| !c.is_ascii_digit() && c != '.' && c != '-' && c != 'e' && c != '+')
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// The best completed cell of one scenario.
+#[derive(Debug, Clone)]
+pub struct BestCell {
+    pub key: String,
+    pub cycles_per_sec: f64,
+    pub workers: usize,
+    pub fingerprint: String,
+}
+
+/// Per-scenario roll-up.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioSummary {
+    pub ok: usize,
+    pub errors: usize,
+    pub dominated: usize,
+    pub best: Option<BestCell>,
+}
+
+/// Whole-file roll-up for `--summarize`.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub rows: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub dominated: usize,
+    /// Lines that were not complete JSON rows (e.g. a killed writer's
+    /// truncated tail).
+    pub malformed: usize,
+    pub scenarios: BTreeMap<String, ScenarioSummary>,
+}
+
+/// Read a results file into a [`Summary`].
+pub fn summarize(path: &Path) -> Result<Summary, String> {
+    let file = File::open(path).map_err(|e| format!("sweep: read {}: {e}", path.display()))?;
+    let mut sum = Summary::default();
+    for line in BufReader::new(file).lines() {
+        let line = line.map_err(|e| format!("sweep: read {}: {e}", path.display()))?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if !t.starts_with('{') || !t.ends_with('}') || str_field(t, "cell").is_none() {
+            sum.malformed += 1;
+            continue;
+        }
+        sum.rows += 1;
+        let scenario = str_field(t, "scenario").unwrap_or("?").to_string();
+        let sc = sum.scenarios.entry(scenario).or_default();
+        match str_field(t, "status") {
+            Some("ok") => {
+                sum.ok += 1;
+                sc.ok += 1;
+                // cycles_per_sec lives in the embedded report; the row's
+                // only other occurrence of the name is that one.
+                let cps = num_field(t, "cycles_per_sec").unwrap_or(0.0);
+                if sc.best.as_ref().map_or(true, |b| cps > b.cycles_per_sec) {
+                    sc.best = Some(BestCell {
+                        key: str_field(t, "cell").unwrap_or("?").to_string(),
+                        cycles_per_sec: cps,
+                        workers: num_field(t, "workers").unwrap_or(0.0) as usize,
+                        fingerprint: str_field(t, "fingerprint").unwrap_or("?").to_string(),
+                    });
+                }
+            }
+            Some("error") => {
+                sum.errors += 1;
+                sc.errors += 1;
+            }
+            Some(s) if s.starts_with("skipped") => {
+                sum.dominated += 1;
+                sc.dominated += 1;
+            }
+            _ => sum.malformed += 1,
+        }
+    }
+    Ok(sum)
+}
+
+/// Print the `--summarize` report: a best-per-scenario table and a
+/// greppable totals line.
+pub fn print_summary(sum: &Summary, path: &Path) {
+    println!("sweep results: {}", path.display());
+    for (name, sc) in &sum.scenarios {
+        match &sc.best {
+            Some(b) => println!(
+                "  {name}: {} ok, {} error, {} dominated; best {:.1} cyc/s \
+                 at {}w ({} | {})",
+                sc.ok, sc.errors, sc.dominated, b.cycles_per_sec, b.workers,
+                b.fingerprint, b.key
+            ),
+            None => println!(
+                "  {name}: {} ok, {} error, {} dominated; no completed cells",
+                sc.ok, sc.errors, sc.dominated
+            ),
+        }
+    }
+    println!(
+        "# summarize: rows={} ok={} errors={} dominated={} malformed={}",
+        sum.rows, sum.ok, sum.errors, sum.dominated, sum.malformed
+    );
+}
+
+/// Rebuild a [`LadderBench`] from a sweep's ok rows — the bridge from
+/// `scalesim sweep` to the committed `BENCH_ladder.json` trajectory.
+/// `scenario` narrows a multi-scenario file to one scenario's rows.
+pub fn bench_from_results(path: &Path, scenario: Option<&str>) -> Result<LadderBench, String> {
+    let file = File::open(path).map_err(|e| format!("sweep: read {}: {e}", path.display()))?;
+    let mut rows: Vec<BenchRow> = Vec::new();
+    let mut scenarios: BTreeSet<String> = BTreeSet::new();
+    let mut strategies: BTreeSet<String> = BTreeSet::new();
+    let mut policies: BTreeSet<String> = BTreeSet::new();
+    let mut units = 0usize;
+    let mut cores = 0usize;
+    for line in BufReader::new(file).lines() {
+        let line = line.map_err(|e| format!("sweep: read {}: {e}", path.display()))?;
+        let t = line.trim();
+        if !t.starts_with('{') || !t.ends_with('}') || str_field(t, "status") != Some("ok") {
+            continue;
+        }
+        let sc = str_field(t, "scenario").unwrap_or("?");
+        if let Some(want) = scenario {
+            if sc != want {
+                continue;
+            }
+        }
+        scenarios.insert(sc.to_string());
+        if let Some(s) = str_field(t, "strategy") {
+            strategies.insert(s.to_string());
+        }
+        if let Some(p) = str_field(t, "repartition") {
+            policies.insert(p.to_string());
+        }
+        // The embedded report is the row's last field; extract from its
+        // opening brace so report fields shadow same-named row fields.
+        let rep_at = t.find("\"report\": {").map(|i| i + "\"report\": ".len());
+        let Some(rep) = rep_at.map(|i| &t[i..]) else {
+            continue;
+        };
+        let row = parse_report_row(rep)
+            .ok_or_else(|| format!("sweep: unparseable report row: {t}"))?;
+        units = units.max(num_field(rep, "units").unwrap_or(0.0) as usize);
+        cores = cores.max(
+            str_field(t, "cores")
+                .and_then(|c| c.parse::<usize>().ok())
+                .unwrap_or(0),
+        );
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        return Err(match scenario {
+            Some(s) => format!("sweep: no ok rows for scenario {s:?} in {}", path.display()),
+            None => format!("sweep: no ok rows in {}", path.display()),
+        });
+    }
+    if scenario.is_none() && scenarios.len() > 1 {
+        return Err(format!(
+            "sweep: results span scenarios {:?}; pick one with --bench-scenario",
+            scenarios.iter().collect::<Vec<_>>()
+        ));
+    }
+    let policies: Vec<String> = policies.into_iter().filter(|p| p != "off").collect();
+    Ok(crate::harness::bench_json::from_sweep(
+        scenarios.into_iter().next().unwrap_or_default(),
+        cores,
+        units,
+        strategies.into_iter().collect::<Vec<_>>().join("|"),
+        if policies.is_empty() {
+            None
+        } else {
+            Some(policies.join("|"))
+        },
+        rows,
+    ))
+}
+
+/// Parse one embedded `RunReport::to_json` object back into a
+/// [`BenchRow`]. Returns `None` on any missing/unknown field — callers
+/// treat that as a malformed row.
+fn parse_report_row(rep: &str) -> Option<BenchRow> {
+    let engine = Engine::parse(str_field(rep, "engine")?).ok()?.name();
+    let sched = SchedMode::parse(str_field(rep, "sched")?).ok()?.name();
+    let fp = str_field(rep, "fingerprint")?;
+    let fingerprint = u64::from_str_radix(fp.strip_prefix("0x")?, 16).ok()?;
+    Some(BenchRow {
+        engine,
+        sched,
+        workers: num_field(rep, "workers")? as usize,
+        cycles: num_field(rep, "cycles")? as u64,
+        wall_ns: num_field(rep, "wall_ns")? as u64,
+        cycles_per_sec: num_field(rep, "cycles_per_sec")?,
+        sync_ops: num_field(rep, "sync_ops")? as u64,
+        work_ns: num_field(rep, "work_ns")? as u64,
+        transfer_ns: num_field(rep, "transfer_ns")? as u64,
+        barrier_ns: num_field(rep, "barrier_ns")? as u64,
+        active_ratio: num_field(rep, "active_ratio")?,
+        repartition_events: num_field(rep, "repartition_events")? as u64,
+        cross_cluster_ports: num_field(rep, "cross_cluster_ports")? as u64,
+        fingerprint,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_covers_quotes_backslashes_and_controls() {
+        assert_eq!(json_escape(r#"a"b\c"#), r#"a\"b\\c"#);
+        assert_eq!(json_escape("x\ny\t\u{1}"), "x\\ny\\t\\u0001");
+    }
+
+    #[test]
+    fn field_extractors_read_machine_rows() {
+        let row = r#"{"cell": "scenario=ring;workers=2", "workers": 2, "cycles_per_sec": 123.5, "fingerprint": "0x00deadbeef000000"}"#;
+        assert_eq!(str_field(row, "cell"), Some("scenario=ring;workers=2"));
+        assert_eq!(num_field(row, "workers"), Some(2.0));
+        assert_eq!(num_field(row, "cycles_per_sec"), Some(123.5));
+        assert_eq!(str_field(row, "fingerprint"), Some("0x00deadbeef000000"));
+        assert_eq!(str_field(row, "missing"), None);
+        assert_eq!(num_field(row, "missing"), None);
+    }
+
+    #[test]
+    fn parse_report_row_round_trips_the_to_json_shape() {
+        let rep = "{\"scenario\": \"ring\", \"engine\": \"ladder\", \
+                   \"sched\": \"active-list\", \"sync\": \"common-atomic\", \
+                   \"workers\": 2, \"units\": 16, \"cycles\": 1000, \
+                   \"wall_ns\": 5000, \"cycles_per_sec\": 200000.0, \
+                   \"sync_ops\": 42, \"work_ns\": 3000, \"transfer_ns\": 1000, \
+                   \"barrier_ns\": 1000, \"active_ratio\": 0.5000, \
+                   \"cross_cluster_ports\": 4, \
+                   \"fingerprint\": \"0x00000000000000ff\", \
+                   \"repartition_events\": 1, \"repartition_checks\": 2}";
+        let row = parse_report_row(rep).expect("parses");
+        assert_eq!(row.engine, "ladder");
+        assert_eq!(row.sched, "active-list");
+        assert_eq!(row.workers, 2);
+        assert_eq!(row.cycles, 1000);
+        assert_eq!(row.fingerprint, 0xff);
+        assert_eq!(row.repartition_events, 1);
+        assert!(parse_report_row("{\"engine\": \"ladder\"}").is_none());
+    }
+}

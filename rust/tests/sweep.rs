@@ -1,0 +1,425 @@
+//! Sweep subsystem: end-to-end coverage of the DSE driver.
+//!
+//! Pins the acceptance properties: a multi-scenario grid runs in
+//! parallel and writes exactly one JSONL row per cell; a killed sweep
+//! resumed with the same spec reruns only the missing cells; frontier
+//! pruning is deterministic on a fixed cost table and provably prunes a
+//! dominated cell; a failing cell is contained as an `"error"` row.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use scalesim::sweep::{plan, run_sweep, summarize, Cell, SweepOpts, SweepSpec};
+
+/// Unique-per-test results path (the suite runs tests concurrently).
+fn out_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("scalesim_sweep_{}_{}.jsonl", tag, std::process::id()))
+}
+
+/// The acceptance grid: 2 scenarios × 2 packet counts × 2 worker counts
+/// × 2 sched modes = 16 cells, small enough to run everywhere.
+fn acceptance_spec() -> SweepSpec {
+    let mut spec = SweepSpec::new(&["ring", "torus"]).unwrap();
+    spec.grid_from("packets=2,4").unwrap();
+    spec.workers_from("1,2").unwrap();
+    spec.scheds_from("full,active").unwrap();
+    spec
+}
+
+fn read_rows(path: &std::path::Path) -> Vec<String> {
+    std::fs::read_to_string(path)
+        .unwrap_or_default()
+        .lines()
+        .map(str::to_string)
+        .collect()
+}
+
+fn cell_keys(rows: &[String]) -> BTreeSet<String> {
+    rows.iter()
+        .filter_map(|r| {
+            let at = r.find("\"cell\": \"")? + "\"cell\": \"".len();
+            Some(r[at..at + r[at..].find('"')?].to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn sweep_writes_one_row_per_cell_and_resumes() {
+    let out = out_path("resume");
+    let _ = std::fs::remove_file(&out);
+    let spec = acceptance_spec();
+    let opts = SweepOpts {
+        out: out.clone(),
+        jobs: 2,
+        cores: 2,
+        ..SweepOpts::default()
+    };
+
+    let outcome = run_sweep(&spec, &opts).unwrap();
+    assert_eq!(outcome.planned, 16);
+    assert_eq!(outcome.ran, 16);
+    assert_eq!(outcome.resumed, 0);
+    assert_eq!(outcome.errors, 0);
+    let rows = read_rows(&out);
+    assert_eq!(rows.len(), 16, "one JSONL row per cell");
+    let planned: BTreeSet<String> = plan(&spec).unwrap().into_iter().map(|c| c.key).collect();
+    assert_eq!(cell_keys(&rows), planned, "rows carry exactly the planned keys");
+    for row in &rows {
+        assert!(row.contains("\"status\": \"ok\""), "{row}");
+        assert!(row.contains("\"fingerprint\": \"0x"), "{row}");
+        assert!(row.contains("\"report\": {"), "{row}");
+    }
+
+    // Kill-mid-sweep model: truncate to half the rows, plus one garbage
+    // tail line (a row the "kill" cut mid-write) that must be ignored.
+    let half: String = rows[..8].join("\n") + "\n" + &rows[8][..rows[8].len() / 2];
+    std::fs::write(&out, half).unwrap();
+    let outcome = run_sweep(&spec, &opts).unwrap();
+    assert_eq!(outcome.resumed, 8, "completed cells are skipped");
+    assert_eq!(outcome.ran, 8, "only the missing cells rerun");
+    let rows = read_rows(&out);
+    // 8 intact + 1 truncated + 8 rerun lines; the key set is complete
+    // again, with the truncated cell's key present via its rerun row.
+    assert_eq!(rows.len(), 17);
+    assert_eq!(cell_keys(&rows), planned);
+
+    // A third run with everything present reruns nothing.
+    let outcome = run_sweep(&spec, &opts).unwrap();
+    assert_eq!(outcome.resumed, 16);
+    assert_eq!(outcome.ran, 0);
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn sweep_results_summarize_and_feed_bench() {
+    let out = out_path("summarize");
+    let _ = std::fs::remove_file(&out);
+    let mut spec = SweepSpec::new(&["ring"]).unwrap();
+    spec.grid_from("packets=2;nodes=4").unwrap();
+    spec.workers_from("1,2").unwrap();
+    let opts = SweepOpts {
+        out: out.clone(),
+        jobs: 1,
+        cores: 2,
+        ..SweepOpts::default()
+    };
+    run_sweep(&spec, &opts).unwrap();
+
+    let sum = summarize(&out).unwrap();
+    assert_eq!(sum.rows, 2);
+    assert_eq!(sum.ok, 2);
+    assert_eq!(sum.errors + sum.dominated + sum.malformed, 0);
+    let ring = &sum.scenarios["ring"];
+    assert_eq!(ring.ok, 2);
+    let best = ring.best.as_ref().expect("a best cell");
+    assert!(best.cycles_per_sec > 0.0);
+    assert!(best.fingerprint.starts_with("0x"));
+
+    // The bench bridge rebuilds BenchRows from the embedded reports.
+    let bench = scalesim::sweep::bench_from_results(&out, None).unwrap();
+    assert_eq!(bench.model, "sweep");
+    assert_eq!(bench.scenario, "ring");
+    assert_eq!(bench.rows.len(), 2);
+    assert!(bench.fingerprints_agree(), "serial and ladder rows agree");
+    let json = bench.to_json();
+    assert!(json.contains("\"model\": \"sweep\""), "{json}");
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn frontier_prunes_a_dominated_lane_deterministically() {
+    let out = out_path("frontier");
+    let _ = std::fs::remove_file(&out);
+    // One family (ring, packets=2), two lanes (sched full vs active),
+    // two worker coordinates each.
+    let mut spec = SweepSpec::new(&["ring"]).unwrap();
+    spec.grid_from("packets=2").unwrap();
+    spec.workers_from("1,2").unwrap();
+    spec.scheds_from("full,active").unwrap();
+
+    // Fixed cost table: active-list always scores 10x full-scan. With
+    // --jobs 1 the claim order is the planner order — (w=1,full),
+    // (w=1,active), (w=2,full), (w=2,active). When (w=2,full) is
+    // claimed, the full-scan lane's only completed coordinate (w=1) is
+    // strictly beaten by active-list, so it is dominated and pruned.
+    // Deterministic because jobs=1 fixes the order and the score is a
+    // pure function of the cell.
+    fn fixed_score(cell: &Cell, _r: &scalesim::engine::RunReport) -> f64 {
+        match cell.sched.name() {
+            "active-list" => 1000.0,
+            _ => 100.0,
+        }
+    }
+    let opts = SweepOpts {
+        out: out.clone(),
+        jobs: 1,
+        cores: 1,
+        frontier: true,
+        score: Some(fixed_score),
+        ..SweepOpts::default()
+    };
+    let outcome = run_sweep(&spec, &opts).unwrap();
+    assert_eq!(outcome.planned, 4);
+    assert!(
+        outcome.dominated >= 1,
+        "the losing lane's later cell must be pruned: {outcome:?}"
+    );
+    let rows = read_rows(&out);
+    let pruned: Vec<&String> = rows
+        .iter()
+        .filter(|r| r.contains("\"status\": \"skipped:dominated\""))
+        .collect();
+    assert_eq!(pruned.len(), outcome.dominated);
+    for row in &pruned {
+        assert!(row.contains("sched=full-scan"), "only the slow lane: {row}");
+        assert!(row.contains("\"dominated_by\": \""), "{row}");
+    }
+    // Determinism: a fresh run of the same spec prunes the same cells.
+    let out2 = out_path("frontier2");
+    let _ = std::fs::remove_file(&out2);
+    let opts2 = SweepOpts {
+        out: out2.clone(),
+        ..opts
+    };
+    run_sweep(&spec, &opts2).unwrap();
+    let again: Vec<String> = read_rows(&out2)
+        .into_iter()
+        .filter(|r| r.contains("skipped:dominated"))
+        .collect();
+    assert_eq!(
+        cell_keys(&again),
+        cell_keys(&pruned.into_iter().cloned().collect::<Vec<_>>()),
+        "pruning is deterministic"
+    );
+    let _ = std::fs::remove_file(&out);
+    let _ = std::fs::remove_file(&out2);
+}
+
+#[test]
+fn failing_cells_are_contained_as_error_rows() {
+    let out = out_path("errors");
+    let _ = std::fs::remove_file(&out);
+    // Grid over run length: the cycles=3 cells finish before the
+    // injected cycle-5 panic arms; the cycles=50 cells hit it.
+    let mut spec = SweepSpec::new(&["pipeline"]).unwrap();
+    spec.grid_from("stages=4;messages=50;cycles=3,50").unwrap();
+    spec.workers_from("2").unwrap();
+    let opts = SweepOpts {
+        out: out.clone(),
+        jobs: 1,
+        cores: 2,
+        inject: Some("panic@5:1".to_string()),
+        ..SweepOpts::default()
+    };
+    let outcome = run_sweep(&spec, &opts).unwrap();
+    assert_eq!(outcome.planned, 2);
+    assert_eq!(outcome.ran, 2, "the sweep finishes despite the failure");
+    assert_eq!(outcome.errors, 1);
+    let rows = read_rows(&out);
+    let errors: Vec<&String> = rows
+        .iter()
+        .filter(|r| r.contains("\"status\": \"error\""))
+        .collect();
+    assert_eq!(errors.len(), 1);
+    assert!(errors[0].contains("cycles=50"), "{}", errors[0]);
+    assert!(errors[0].contains("SimError"), "structured error: {}", errors[0]);
+    assert!(
+        rows.iter().any(|r| r.contains("\"status\": \"ok\"") && r.contains("cycles=3")),
+        "the short cells still complete"
+    );
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn worker_cap_keeps_fingerprints_and_budgets_nested_parallelism() {
+    // Two cells on 2 cores with a workers=2 axis: at --jobs 2 each cell
+    // is capped to one ladder worker (2 jobs × 1 worker = 2 cores); at
+    // --jobs 1 the same cells run uncapped at 2 workers. Per-cell
+    // fingerprints must be identical — the cap changes engine topology,
+    // never simulation semantics.
+    let out_capped = out_path("cap");
+    let out_free = out_path("capfree");
+    let _ = std::fs::remove_file(&out_capped);
+    let _ = std::fs::remove_file(&out_free);
+    let mut spec = SweepSpec::new(&["ring"]).unwrap();
+    spec.grid_from("packets=2,4").unwrap();
+    spec.workers_from("2").unwrap();
+    let capped = run_sweep(
+        &spec,
+        &SweepOpts {
+            out: out_capped.clone(),
+            jobs: 2,
+            cores: 2,
+            ..SweepOpts::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(capped.jobs, 2);
+    assert_eq!(capped.worker_cap, 1);
+    let free = run_sweep(
+        &spec,
+        &SweepOpts {
+            out: out_free.clone(),
+            jobs: 1,
+            cores: 2,
+            ..SweepOpts::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(free.worker_cap, 2);
+    // Row order differs under parallel appends; compare key -> fp maps.
+    let fps = |p: &std::path::Path| {
+        read_rows(p)
+            .into_iter()
+            .map(|r| {
+                let key = {
+                    let at = r.find("\"cell\": \"").unwrap() + "\"cell\": \"".len();
+                    r[at..at + r[at..].find('"').unwrap()].to_string()
+                };
+                let at = r.find("\"fingerprint\": \"").unwrap() + "\"fingerprint\": \"".len();
+                (key, r[at..at + 18].to_string())
+            })
+            .collect::<std::collections::BTreeMap<_, _>>()
+    };
+    assert_eq!(fps(&out_capped), fps(&out_free), "the cap never changes semantics");
+    let _ = std::fs::remove_file(&out_capped);
+    let _ = std::fs::remove_file(&out_free);
+}
+
+// ---------------------------------------------------------------------
+// CLI surface
+// ---------------------------------------------------------------------
+
+fn scalesim() -> std::process::Command {
+    std::process::Command::new(env!("CARGO_BIN_EXE_scalesim"))
+}
+
+#[test]
+fn sweep_cli_dry_run_lists_stable_keys() {
+    let out = scalesim()
+        .args([
+            "sweep",
+            "--scenario",
+            "ring,torus",
+            "--set",
+            "packets=2,4",
+            "--workers",
+            "1,2",
+            "--dry-run",
+        ])
+        .output()
+        .expect("spawn scalesim");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let keys: Vec<&str> = stdout.lines().filter(|l| l.starts_with("scenario=")).collect();
+    assert_eq!(keys.len(), 8, "{stdout}");
+    assert!(
+        keys[0].contains("scenario=ring") && keys[0].contains("workers=1"),
+        "{stdout}"
+    );
+    assert!(stdout.contains("# sweep: planned=8"), "{stdout}");
+}
+
+#[test]
+fn sweep_cli_runs_resumes_and_summarizes() {
+    let out_file = out_path("cli");
+    let _ = std::fs::remove_file(&out_file);
+    let run = || {
+        scalesim()
+            .args([
+                "sweep",
+                "--scenario",
+                "ring",
+                "--set",
+                "packets=2;nodes=4",
+                "--workers",
+                "1,2",
+                "--jobs",
+                "1",
+                "--out",
+            ])
+            .arg(&out_file)
+            .output()
+            .expect("spawn scalesim")
+    };
+    let first = run();
+    assert!(
+        first.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&first.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&first.stdout);
+    assert!(
+        stdout.contains("ran=2 resumed=0"),
+        "summary line: {stdout}"
+    );
+    // Rerun with the same spec: everything resumes.
+    let second = run();
+    let stdout = String::from_utf8_lossy(&second.stdout);
+    assert!(
+        stdout.contains("ran=0 resumed=2"),
+        "summary line: {stdout}"
+    );
+    // Summarize mode prints the greppable totals line.
+    let sum = scalesim()
+        .args(["sweep", "--summarize", out_file.to_str().unwrap()])
+        .output()
+        .expect("spawn scalesim");
+    assert!(
+        sum.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&sum.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&sum.stdout);
+    assert!(stdout.contains("# summarize: rows=2 ok=2"), "{stdout}");
+    let _ = std::fs::remove_file(&out_file);
+}
+
+#[test]
+fn unknown_set_keys_fail_fast_with_a_suggestion() {
+    // `run` rejects a typo'd key before building anything.
+    let out = scalesim()
+        .args(["run", "--scenario", "ring", "--set", "packet=2"])
+        .output()
+        .expect("spawn scalesim");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("did you mean \"packets\"?"), "{stderr}");
+
+    // `sweep` does the same, and names the scenario that lacks the key
+    // on a multi-scenario grid.
+    let out = scalesim()
+        .args(["sweep", "--scenario", "ring,torus", "--set", "nodes=4,8", "--dry-run"])
+        .output()
+        .expect("spawn scalesim");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("torus"), "{stderr}");
+}
+
+#[test]
+fn list_scenarios_verbose_documents_the_keys() {
+    let terse = scalesim()
+        .args(["run", "--list-scenarios"])
+        .output()
+        .expect("spawn scalesim");
+    assert!(terse.status.success());
+    let terse = String::from_utf8_lossy(&terse.stdout).to_string();
+    let verbose = scalesim()
+        .args(["run", "--list-scenarios", "--verbose"])
+        .output()
+        .expect("spawn scalesim");
+    assert!(verbose.status.success());
+    let verbose = String::from_utf8_lossy(&verbose.stdout).to_string();
+    // "link-capacity" only ever appears as a declared key, never in a
+    // scenario summary line.
+    assert!(!terse.contains("link-capacity"), "terse mode omits keys:\n{terse}");
+    assert!(terse.contains("--verbose"), "terse mode hints at --verbose:\n{terse}");
+    assert!(verbose.contains("link-capacity"), "verbose lists keys:\n{verbose}");
+    assert!(verbose.contains("repartition"), "session keys too:\n{verbose}");
+    assert!(verbose.lines().count() > terse.lines().count());
+}
