@@ -242,6 +242,19 @@ impl ActiveState {
         }
     }
 
+    /// Are all unit-wake *and* vacancy boxes empty? The fast-forward gate
+    /// uses this under active-list scheduling: a pending wake means some
+    /// unit or port becomes runnable next cycle, so nothing may be
+    /// skipped.
+    ///
+    /// # Safety
+    /// Caller must be the scheduler with every worker parked at the
+    /// cycle barrier (or hold exclusivity).
+    pub(crate) unsafe fn boxes_empty(&self) -> bool {
+        self.boxes.iter().all(|b| (*b.get()).is_empty())
+            && self.port_boxes.iter().all(|b| (*b.get()).is_empty())
+    }
+
     // ---- checkpoint/restore ----
 
     /// Snapshot the unit sleep flags. Call after `apply_pending_wakes`

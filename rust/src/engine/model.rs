@@ -323,6 +323,13 @@ pub struct RunOpts {
     /// absolute cycles, so a restored run ends at the same cycle as an
     /// uninterrupted one.
     pub start_cycle: u64,
+    /// Idle-cycle fast-forward: when a cycle is provably empty — every
+    /// unit quiescent, every queued message still in its delay window —
+    /// jump the clock to the next event horizon instead of ticking
+    /// through the dead window (DESIGN.md §2f). Cycle numbers are
+    /// preserved and only empty cycles are elided, so fingerprints are
+    /// bit-identical to a full run. Default on.
+    pub ff: bool,
 }
 
 impl RunOpts {
@@ -333,6 +340,7 @@ impl RunOpts {
             fingerprint: false,
             sched: SchedMode::FullScan,
             start_cycle: 0,
+            ff: true,
         }
     }
 
@@ -363,6 +371,12 @@ impl RunOpts {
         self
     }
 
+    /// Enable or disable idle-cycle fast-forward (default on).
+    pub fn ff(mut self, on: bool) -> Self {
+        self.ff = on;
+        self
+    }
+
     pub fn with_stop(stop: Stop) -> Self {
         RunOpts {
             stop,
@@ -370,8 +384,61 @@ impl RunOpts {
             fingerprint: false,
             sched: SchedMode::FullScan,
             start_cycle: 0,
+            ff: true,
         }
     }
+}
+
+/// Outcome of a fast-forward scan over units and ports at the top of a
+/// cycle (DESIGN.md §2f).
+pub(crate) enum FfScan {
+    /// Something can act this cycle, or a busy unit made no skip claim —
+    /// tick normally.
+    Busy,
+    /// The cycle is provably empty. `next_event` is the earliest cycle at
+    /// which anything becomes runnable (`None`: nothing is pending at
+    /// all); `dead` reports that every unit is idle *and* no message is
+    /// in flight, i.e. `Stop::AllIdle` will fire at its next check
+    /// boundary inside the skipped window.
+    Idle { next_event: Option<u64>, dead: bool },
+}
+
+/// Clamp a fast-forward deadline to every cadence that must observe its
+/// exact virtual cycle: the stop condition's cycle cap, the next
+/// `Stop::AllIdle` check boundary (only when the model is `dead` — the
+/// idle check inside a frozen-but-live window can never fire, so
+/// clamping there would degenerate the jump into one-cycle hops), the
+/// next checkpoint boundary, the next injected fault, and the next
+/// repartition check. The result always advances the clock by at least
+/// one cycle: even a one-cycle elision saves a no-op tick (serial) or a
+/// barrier round (ladder).
+pub(crate) fn ff_jump_target(
+    cycle: u64,
+    next_event: Option<u64>,
+    dead: bool,
+    stop: &Stop,
+    checkpoint_every: Option<u64>,
+    next_fault: Option<u64>,
+    next_repart: Option<u64>,
+) -> u64 {
+    let mut t = next_event.unwrap_or(u64::MAX).min(stop.max_cycles());
+    if dead {
+        if let Stop::AllIdle { check_every, .. } = stop {
+            let ce = (*check_every).max(1);
+            t = t.min((cycle / ce + 1) * ce);
+        }
+    }
+    if let Some(every) = checkpoint_every {
+        let e = every.max(1);
+        t = t.min((cycle / e + 1) * e);
+    }
+    if let Some(f) = next_fault {
+        t = t.min(f);
+    }
+    if let Some(r) = next_repart {
+        t = t.min(r);
+    }
+    t.max(cycle + 1)
 }
 
 /// A fully-wired model ready to run.
@@ -923,6 +990,70 @@ impl Model {
         ))
     }
 
+    /// Fast-forward scan: can the current cycle be proven empty, and if
+    /// so, when does the next event land? Returns [`FfScan::Busy`] the
+    /// moment anything could act at `cycle` — a busy or `always_active`
+    /// unit without a [`Unit::next_event`] hint, a queued message whose
+    /// front entry is already ready, or (with `state`) queued input at a
+    /// parked receiver, which is lost-wakeup territory the stall watchdog
+    /// must still observe. Callers gate on empty dirty lists (and drained
+    /// wake boxes) before scanning, so a staged out-half behind an empty
+    /// receiver queue cannot occur here; it is treated as `Busy` anyway.
+    ///
+    /// # Safety
+    /// Caller must hold logical exclusivity over the model (serial loop
+    /// top, or all workers parked at the barrier).
+    pub(crate) unsafe fn ff_scan(&self, cycle: u64, state: Option<&ActiveState>) -> FfScan {
+        let merge = |next: &mut Option<u64>, t: u64| {
+            *next = Some(next.map_or(t, |d| d.min(t)));
+        };
+        let mut next: Option<u64> = None;
+        let mut all_units_idle = true;
+        for (u, cell) in self.units.iter().enumerate() {
+            if let Some(st) = state {
+                if st.is_asleep(u as u32) {
+                    continue; // parked units are idle with empty inputs
+                }
+            }
+            let unit = &*cell.get();
+            let idle = unit.is_idle();
+            if !idle {
+                all_units_idle = false;
+            }
+            if unit.always_active() || !idle {
+                match unit.next_event(cycle) {
+                    Some(t) if t > cycle => merge(&mut next, t),
+                    _ => return FfScan::Busy,
+                }
+            }
+        }
+        let mut ports_empty = true;
+        for p in 0..self.arena.len() as u32 {
+            if self.arena.in_len_hint(p) == 0 {
+                if self.arena.out_len_hint(p) > 0 {
+                    return FfScan::Busy;
+                }
+                continue;
+            }
+            ports_empty = false;
+            if let Some(st) = state {
+                if st.is_asleep(self.arena.dst_unit[p as usize]) {
+                    return FfScan::Busy;
+                }
+            }
+            // FIFO queue + constant per-port delay: the front entry
+            // carries the minimum ready cycle.
+            match self.arena.in_front_ready(p) {
+                Some(r) if r > cycle => merge(&mut next, r),
+                _ => return FfScan::Busy,
+            }
+        }
+        FfScan::Idle {
+            next_event: next,
+            dead: all_units_idle && ports_empty,
+        }
+    }
+
     /// The serial reference engine: work all units, transfer all ports,
     /// advance the clock — exactly the semantics the parallel engine must
     /// reproduce. With `SchedMode::ActiveList` the work phase runs the
@@ -962,6 +1093,8 @@ impl Model {
         let mut timers = PhaseTimers::new();
         let mut cycle = opts.start_cycle;
         let mut epoch_t0 = Instant::now();
+        let mut skipped = 0u64;
+        let mut jumps = 0u64;
         let result = loop {
             // Barrier-side supervision (checkpoint before the stop check,
             // so a run configured to stop on a checkpoint cycle still
@@ -1008,6 +1141,29 @@ impl Model {
                 }
                 epoch_t0 = Instant::now();
             }
+            // Idle-cycle fast-forward: with nothing staged and every unit
+            // quiescent, jump straight to the next event horizon. The
+            // supervision hooks above re-run at the landing cycle, and the
+            // jump target is clamped to every cadence point, so nothing
+            // inside the window is overshot.
+            if opts.ff && dirty.is_empty() {
+                // SAFETY: single thread — trivially exclusive.
+                if let FfScan::Idle { next_event, dead } = unsafe { self.ff_scan(cycle, None) } {
+                    let target = ff_jump_target(
+                        cycle,
+                        next_event,
+                        dead,
+                        &opts.stop,
+                        sup.checkpoint.as_ref().map(|ck| ck.every),
+                        sup.faults.next_fault_cycle_after(cycle),
+                        None,
+                    );
+                    skipped += target - cycle;
+                    jumps += 1;
+                    cycle = target;
+                    continue;
+                }
+            }
             if opts.timed {
                 let tw = Instant::now();
                 for u in 0..n_units {
@@ -1048,6 +1204,8 @@ impl Model {
             fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
             repart: Default::default(),
             cross_cluster_ports: 0,
+            skipped_cycles: skipped,
+            ff_jumps: jumps,
         })
     }
 
@@ -1085,6 +1243,8 @@ impl Model {
         let mut cycle = opts.start_cycle;
         let mut epoch_t0 = Instant::now();
         let mut stall_streak: u32 = 0;
+        let mut skipped = 0u64;
+        let mut jumps = 0u64;
         let result = loop {
             // SAFETY (throughout): single thread — trivially exclusive for
             // every phase of the sleep/wake ownership schedule.
@@ -1141,6 +1301,32 @@ impl Model {
                     }
                     epoch_t0 = Instant::now();
                 }
+                // Idle-cycle fast-forward. Wake boxes were drained at the
+                // top of this iteration and vacancy boxes only live inside
+                // the work/transfer span below, so the sleep flags are
+                // canonical here; queued input at a parked receiver makes
+                // the scan report `Busy`, keeping lost wakeups visible to
+                // the stall watchdog rather than skipping over them.
+                if opts.ff && dirty.is_empty() {
+                    if let FfScan::Idle { next_event, dead } =
+                        self.ff_scan(cycle, Some(&state))
+                    {
+                        let target = ff_jump_target(
+                            cycle,
+                            next_event,
+                            dead,
+                            &opts.stop,
+                            sup.checkpoint.as_ref().map(|ck| ck.every),
+                            sup.faults.next_fault_cycle_after(cycle),
+                            None,
+                        );
+                        skipped += target - cycle;
+                        jumps += 1;
+                        stall_streak = 0;
+                        cycle = target;
+                        continue;
+                    }
+                }
                 let ticks;
                 if opts.timed {
                     let tw = Instant::now();
@@ -1194,6 +1380,8 @@ impl Model {
             fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
             repart: Default::default(),
             cross_cluster_ports: 0,
+            skipped_cycles: skipped,
+            ff_jumps: jumps,
         })
     }
 
@@ -1312,6 +1500,10 @@ impl Model {
                 fingerprint: if opts.fingerprint { self.fingerprint() } else { 0 },
                 repart: Default::default(),
                 cross_cluster_ports: 0,
+                // The instrumented engine measures per-cluster cost and
+                // never skips: elided cycles would corrupt the timings.
+                skipped_cycles: 0,
+                ff_jumps: 0,
             },
             per_cluster,
         )
@@ -1507,10 +1699,12 @@ mod tests {
 
     #[test]
     fn active_list_matches_full_scan() {
+        // Fast-forward off: this test pins exact tick counts, and ff
+        // would elide the drained tail for both engines.
         let (mut m1, _) = pipeline_model(100);
-        let s1 = m1.run_serial(RunOpts::cycles(300).fingerprinted());
+        let s1 = m1.run_serial(RunOpts::cycles(300).fingerprinted().ff(false));
         let (mut m2, _) = pipeline_model(100);
-        let s2 = m2.run_serial(RunOpts::cycles(300).fingerprinted().active_list());
+        let s2 = m2.run_serial(RunOpts::cycles(300).fingerprinted().active_list().ff(false));
         assert_eq!(s1.fingerprint, s2.fingerprint, "sleep/wake must be invisible");
         assert_eq!(s1.counters.get("delivered"), s2.counters.get("delivered"));
         // Full scan ticks every unit every cycle; the producer drains

@@ -256,6 +256,19 @@ impl PortArena {
         moved
     }
 
+    /// Ready cycle of the oldest message queued on port `i`'s in-half
+    /// (FIFO plus a constant per-port delay make the front the minimum),
+    /// or `None` when the queue is empty. The fast-forward scan uses this
+    /// as the port's wake deadline.
+    ///
+    /// # Safety
+    /// Caller must hold logical exclusivity (e.g. the scheduler between
+    /// ticks, when all workers are parked at a barrier).
+    #[inline]
+    pub(crate) unsafe fn in_front_ready(&self, i: u32) -> Option<u64> {
+        (*self.ins[i as usize].get()).q.front().map(|&(r, _)| r)
+    }
+
     /// `in_flight` through a shared reference.
     ///
     /// # Safety

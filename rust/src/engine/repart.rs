@@ -482,6 +482,17 @@ impl Repartitioner {
         }
     }
 
+    /// The next cycle this repartitioner wants a barrier-side decision
+    /// (`None` when the policy is disabled). Fast-forward clamps its jump
+    /// target here so cadence points fire at the right virtual cycles.
+    pub(crate) fn next_check_cycle(&self) -> Option<u64> {
+        if self.policy.enabled() {
+            Some(self.next_check)
+        } else {
+            None
+        }
+    }
+
     /// Snapshot the EWMA/back-off position for a barrier checkpoint.
     pub(crate) fn resume_state(&self) -> super::supervise::RepartResume {
         super::supervise::RepartResume {

@@ -113,6 +113,8 @@ pub struct Sim {
     stop: Option<Stop>,
     timed: bool,
     fingerprint: bool,
+    /// Idle-cycle fast-forward (DESIGN.md §2f); on by default.
+    ff: bool,
     explicit_partition: Option<Vec<Vec<u32>>>,
     unit_costs: Option<Vec<u64>>,
     profile_cycles: u64,
@@ -153,6 +155,7 @@ impl Sim {
             stop: None,
             timed: false,
             fingerprint: false,
+            ff: true,
             explicit_partition: None,
             unit_costs: None,
             profile_cycles: DEFAULT_PROFILE_CYCLES,
@@ -463,6 +466,16 @@ impl Sim {
         Ok(partition(&self.model, w, self.strategy))
     }
 
+    /// Enable or disable idle-cycle fast-forward (default on). Skipping
+    /// is semantically invisible — cycle numbers are preserved, only
+    /// provably empty cycles are elided — so this knob exists for parity
+    /// checks (`--ff off` must reproduce the same fingerprint) and for
+    /// measuring the skip's own speedup.
+    pub fn ff(mut self, on: bool) -> Self {
+        self.ff = on;
+        self
+    }
+
     /// Execute the session and return the unified report.
     pub fn run(mut self) -> Result<RunReport, String> {
         let stop = self
@@ -514,6 +527,7 @@ impl Sim {
             fingerprint: self.fingerprint,
             sched: self.sched,
             start_cycle,
+            ff: self.ff,
         };
 
         // ---- checkpoint meta: scenario name + config pairs ----
@@ -748,6 +762,7 @@ impl RunReport {
              \"sync_ops\": {}, \"work_ns\": {}, \"transfer_ns\": {}, \
              \"barrier_ns\": {}, \"active_ratio\": {:.4}, \
              \"cross_cluster_ports\": {}, \
+             \"skipped_cycles\": {}, \"ff_jumps\": {}, \
              \"fingerprint\": \"{:#018x}\", {}}}",
             match &self.scenario {
                 Some(s) => format!("\"{s}\""),
@@ -767,6 +782,8 @@ impl RunReport {
             barrier_ns,
             self.active_ratio(),
             self.stats.cross_cluster_ports,
+            self.stats.skipped_cycles,
+            self.stats.ff_jumps,
             self.stats.fingerprint,
             self.stats.repart.to_json_fields(),
         )

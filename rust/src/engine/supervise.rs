@@ -236,6 +236,23 @@ impl FaultPlan {
         })
     }
 
+    /// Earliest fault cycle strictly after `cycle`, if any — a
+    /// fast-forward clamp so injected faults land on their exact virtual
+    /// cycle instead of being jumped over. A `Stall`'s start cycle counts
+    /// (its force-park must begin on time); its tail needs no clamp
+    /// because `stalled_units` keeps applying at every later barrier.
+    pub(crate) fn next_fault_cycle_after(&self, cycle: u64) -> Option<u64> {
+        self.faults
+            .iter()
+            .map(|f| match f {
+                Fault::Panic { cycle: c, .. } => *c,
+                Fault::Stall { cycle: c, .. } => *c,
+                Fault::Delay { cycle: c, .. } => *c,
+            })
+            .filter(|&c| c > cycle)
+            .min()
+    }
+
     /// Milliseconds `cluster` must sleep in its work phase at `cycle`.
     pub(crate) fn delay_for(&self, cycle: u64, cluster: usize) -> Option<u64> {
         self.faults.iter().find_map(|f| match f {

@@ -40,6 +40,11 @@ pub trait Unit: Send {
     /// obligation `AllIdle` already imposes (stopping the run while a
     /// unit still wanted to act would be wrong for the same reason).
     /// Units that cannot honour it override [`Unit::always_active`].
+    ///
+    /// Idle-cycle fast-forward extends the same obligation one step: an
+    /// idle unit whose queued input is not yet *ready* must also be a
+    /// strict no-op when ticked — the engine uses that to prove a cycle
+    /// empty before eliding it (see `Model::ff_scan`).
     fn is_idle(&self) -> bool {
         true
     }
@@ -47,9 +52,26 @@ pub trait Unit: Send {
     /// Units that must tick every cycle regardless of message activity —
     /// free-running traffic sources, refresh engines, benchmark spinners —
     /// return `true` to opt out of sleep/wake parking. Default: `false`
-    /// (eligible to sleep when quiescent).
+    /// (eligible to sleep when quiescent). An `always_active` unit also
+    /// blocks idle-cycle fast-forward, unless it opts back in through
+    /// [`Unit::next_event`].
     fn always_active(&self) -> bool {
         false
+    }
+
+    /// Fast-forward hint: the next cycle at which this unit has internal
+    /// work to do, given no further input arrives. Returning `Some(t)`
+    /// with `t > now` promises that `work` is a strict no-op at every
+    /// cycle in `(now, t)` absent a ready input message — the engine may
+    /// then elide those cycles wholesale. Timer-driven units (DRAM
+    /// service queues, refresh engines, think-time generators) implement
+    /// this so they stop pinning the clock. The default, `None`, means
+    /// "no claim": a busy or `always_active` unit without a hint blocks
+    /// fast-forward entirely. Only consulted when the unit is busy
+    /// (`!is_idle()`) or `always_active`; idle parked units are covered
+    /// by the port-queue deadlines instead.
+    fn next_event(&self, _now: u64) -> Option<u64> {
+        None
     }
 
     /// Whether this unit participates in checkpoint/restore. Units that

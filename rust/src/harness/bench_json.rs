@@ -46,6 +46,11 @@ pub struct BenchRow {
     /// Ports cut by the final partition (0 for serial rows) — the
     /// locality objective's observable.
     pub cross_cluster_ports: u64,
+    /// Simulated cycles elided by idle-cycle fast-forward (0 with
+    /// `--ff off`); part of the speedup story on sparse workloads.
+    pub skipped_cycles: u64,
+    /// Fast-forward jumps taken.
+    pub ff_jumps: u64,
     pub fingerprint: u64,
 }
 
@@ -79,6 +84,8 @@ impl BenchRow {
             active_ratio: s.active_ratio(units),
             repartition_events: s.repart.events,
             cross_cluster_ports: s.cross_cluster_ports,
+            skipped_cycles: s.skipped_cycles,
+            ff_jumps: s.ff_jumps,
             fingerprint: s.fingerprint,
         }
     }
@@ -158,6 +165,7 @@ impl LadderBench {
                  \"sync_ops\": {}, \"work_ns\": {}, \"transfer_ns\": {}, \
                  \"barrier_ns\": {}, \"active_ratio\": {:.4}, \
                  \"repartition_events\": {}, \"cross_cluster_ports\": {}, \
+                 \"skipped_cycles\": {}, \"ff_jumps\": {}, \
                  \"fingerprint\": \"{:#018x}\"}}{}\n",
                 r.engine,
                 r.sched,
@@ -172,6 +180,8 @@ impl LadderBench {
                 r.active_ratio,
                 r.repartition_events,
                 r.cross_cluster_ports,
+                r.skipped_cycles,
+                r.ff_jumps,
                 r.fingerprint,
                 if i + 1 < self.rows.len() { "," } else { "" },
             ));
@@ -359,6 +369,8 @@ mod tests {
         assert!(json.contains("\"repartition_policy\": \"every 256\""));
         assert!(json.contains("\"repartition_events\": "));
         assert!(json.contains("\"cross_cluster_ports\": "));
+        assert!(json.contains("\"skipped_cycles\": "));
+        assert!(json.contains("\"ff_jumps\": "));
         let ladder_cut = b
             .rows
             .iter()

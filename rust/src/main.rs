@@ -40,6 +40,7 @@ fn usage() -> ! {
          \x20                 cost-balanced|cost-locality]\n\
          \x20                [--sched full|active] [--spin yield|pure]\n\
          \x20                [--repartition N[,HYST[,MOVES]] | adaptive[,DRIFT[,CHECK]]]\n\
+         \x20                [--ff on|off] (idle-cycle fast-forward; default on)\n\
          \x20                [--cycles N] [--timed] [--fingerprint] [--counters]\n\
          \x20                [--json out.json] [--set k=v,k=v] (scenario keys)\n\
          \x20                [--checkpoint FILE --checkpoint-every N]\n\
@@ -51,6 +52,7 @@ fn usage() -> ! {
          \x20 sweep          --scenario NAME[,NAME] [--set \"k=1,2,4;j=1..64:*2\"]\n\
          \x20                [--workers 1,2,4] [--strategy S,S] [--sched full,active]\n\
          \x20                [--sync M,M] [--repartition \"off;64;adaptive\"]\n\
+         \x20                [--ff on;off] (fast-forward axis; default on)\n\
          \x20                [--out results.jsonl] [--jobs N] [--cores N]\n\
          \x20                [--frontier] [--dry-run] [--inject SPEC]\n\
          \x20                (resume: rerun the same spec with the same --out)\n\
@@ -78,7 +80,7 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         &[
             "scenario", "workers", "engine", "sync", "spin", "strategy", "sched", "cycles",
             "seed", "set", "json", "repartition", "checkpoint", "checkpoint-every", "restore",
-            "inject", "epoch-budget-ms",
+            "inject", "epoch-budget-ms", "ff",
         ],
         &["list-scenarios", "verbose", "timed", "fingerprint", "counters"],
     )?;
@@ -139,6 +141,11 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         .sync(SyncMethod::parse(c.get_or("sync", "common-atomic"))?)
         .spin(SpinMode::parse(c.get_or("spin", "yield"))?)
         .sched(SchedMode::parse(c.get_or("sched", "full"))?);
+    sim = match c.get_or("ff", "on") {
+        "on" => sim.ff(true),
+        "off" => sim.ff(false),
+        other => return Err(format!("--ff: expected on or off, got {other:?}")),
+    };
     if let Some(s) = c.get("strategy") {
         sim = sim.strategy(PartitionStrategy::parse(s, c.get_u64("seed", 42)?)?);
     }
@@ -205,8 +212,8 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     let c = Cmd::parse(
         argv,
         &[
-            "scenario", "set", "workers", "strategy", "sched", "sync", "repartition", "out",
-            "jobs", "cores", "inject", "summarize", "bench-out", "bench-scenario",
+            "scenario", "set", "workers", "strategy", "sched", "sync", "repartition", "ff",
+            "out", "jobs", "cores", "inject", "summarize", "bench-out", "bench-scenario",
         ],
         &["frontier", "dry-run"],
     )?;
@@ -255,6 +262,9 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     }
     if let Some(r) = c.get("repartition") {
         spec.repartitions_from(r)?;
+    }
+    if let Some(f) = c.get("ff") {
+        spec.ffs_from(f)?;
     }
 
     let opts = sweep::SweepOpts {

@@ -88,5 +88,13 @@ impl Unit for DramChannel {
         self.in_service.is_empty()
     }
 
+    /// Timer hint for idle-cycle fast-forward: with requests in service
+    /// but none ready, `work` is a strict no-op until the front entry's
+    /// ready cycle (FIFO + constant latency), so the clock may skip
+    /// straight to it.
+    fn next_event(&self, _now: u64) -> Option<u64> {
+        self.in_service.front().map(|&(ready, _)| ready)
+    }
+
     crate::persist_fields!(in_service, reads, writes);
 }

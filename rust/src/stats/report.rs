@@ -113,6 +113,14 @@ pub struct RunStats {
     /// single-cluster/serial runs). Filled in by the `Sim` facade from
     /// the final partition (post-migration when repartitioning ran).
     pub cross_cluster_ports: u64,
+    /// Simulated cycles elided by idle-cycle fast-forward (DESIGN.md §2f).
+    /// Counted inside `cycles` — the clock still reaches the same final
+    /// value — but never ticked or barriered, so wall-clock work scales
+    /// with `cycles - skipped_cycles`. Zero with `--ff off` and under the
+    /// instrumented partitioned engine.
+    pub skipped_cycles: u64,
+    /// Number of fast-forward jumps taken (each skips ≥ 1 cycle).
+    pub ff_jumps: u64,
 }
 
 impl RunStats {

@@ -36,6 +36,8 @@ pub struct Cell {
     pub sync: SyncMethod,
     /// Normalized policy spec; `"off"` disables.
     pub repartition: String,
+    /// Idle-cycle fast-forward setting.
+    pub ff: bool,
 }
 
 impl Cell {
@@ -69,11 +71,12 @@ impl Cell {
     /// frontier compares lanes coordinate-wise across worker counts).
     pub fn lane(&self) -> String {
         format!(
-            "strategy={};sched={};sync={};repartition={}",
+            "strategy={};sched={};sync={};repartition={};ff={}",
             self.strategy,
             self.sched.name(),
             self.sync.name(),
-            self.repartition
+            self.repartition,
+            if self.ff { "on" } else { "off" }
         )
     }
 }
@@ -91,9 +94,9 @@ fn family_of(scenario: &str, params: &[(String, String)]) -> String {
 /// Expand the spec into the full cell list.
 ///
 /// Ordering is the command line's: scenarios, then each `--set` axis
-/// outer-to-inner, then workers, strategy, sched, sync, repartition
-/// innermost. Keys are `family;workers=N;lane` with params sorted, so
-/// reordering axes changes cell order but never their keys.
+/// outer-to-inner, then workers, strategy, sched, sync, repartition,
+/// ff innermost. Keys are `family;workers=N;lane` with params sorted,
+/// so reordering axes changes cell order but never their keys.
 pub fn plan(spec: &SweepSpec) -> Result<Vec<Cell>, String> {
     let n = spec.cell_count();
     if n == 0 {
@@ -126,20 +129,23 @@ pub fn plan(spec: &SweepSpec) -> Result<Vec<Cell>, String> {
                     for &sched in &spec.scheds {
                         for &sync in &spec.syncs {
                             for repartition in &spec.repartitions {
-                                let mut cell = Cell {
-                                    index: cells.len(),
-                                    key: String::new(),
-                                    scenario: scenario.clone(),
-                                    params: params.clone(),
-                                    workers,
-                                    strategy: strategy.clone(),
-                                    sched,
-                                    sync,
-                                    repartition: repartition.clone(),
-                                };
-                                cell.key =
-                                    format!("{family};workers={workers};{}", cell.lane());
-                                cells.push(cell);
+                                for &ff in &spec.ffs {
+                                    let mut cell = Cell {
+                                        index: cells.len(),
+                                        key: String::new(),
+                                        scenario: scenario.clone(),
+                                        params: params.clone(),
+                                        workers,
+                                        strategy: strategy.clone(),
+                                        sched,
+                                        sync,
+                                        repartition: repartition.clone(),
+                                        ff,
+                                    };
+                                    cell.key =
+                                        format!("{family};workers={workers};{}", cell.lane());
+                                    cells.push(cell);
+                                }
                             }
                         }
                     }
@@ -268,7 +274,7 @@ mod tests {
         assert_eq!(
             cells[0].key,
             "scenario=ring;packets=8;workers=1;strategy=contiguous;\
-             sched=full-scan;sync=common-atomic;repartition=off"
+             sched=full-scan;sync=common-atomic;repartition=off;ff=on"
         );
     }
 

@@ -279,6 +279,7 @@ fn run_cell(
         // The axis always wins over a `repartition` key in the base
         // config: a cell's engine configuration is exactly its key.
         .repartition(cell.policy()?)
+        .ff(cell.ff)
         .timed()
         .fingerprinted();
     if let Some(inj) = &opts.inject {

@@ -4,7 +4,8 @@
 //! line: a list of scenarios, scenario-config axes from `--set`
 //! (`"packets=2,4,8;link-capacity=2"` — pairs separated by `;`, each
 //! value list by `,` or a range like `1..64:*2`), and the engine axes
-//! (`--workers`, `--strategy`, `--sched`, `--sync`, `--repartition`).
+//! (`--workers`, `--strategy`, `--sched`, `--sync`, `--repartition`,
+//! `--ff`).
 //!
 //! Everything is validated up front — scenario names resolve against the
 //! registry, grid keys against each scenario's declared `--set` keys
@@ -49,6 +50,9 @@ pub struct SweepSpec {
     /// axis always wins over a `repartition` key in the base config so
     /// every cell's key states its full engine configuration.
     pub repartitions: Vec<String>,
+    /// Idle-cycle fast-forward settings (`--ff on;off`); defaults to
+    /// `[true]`, matching the engine default.
+    pub ffs: Vec<bool>,
     /// Config-file underlay applied to every cell before its grid
     /// params.
     pub base: Config,
@@ -77,6 +81,7 @@ impl SweepSpec {
             scheds: vec![SchedMode::FullScan],
             syncs: vec![SyncMethod::CommonAtomic],
             repartitions: vec!["off".to_string()],
+            ffs: vec![true],
             base: Config::new(),
         })
     }
@@ -112,6 +117,7 @@ impl SweepSpec {
             ("sched", "--sched"),
             ("sync", "--sync"),
             ("repartition", "--repartition"),
+            ("ff", "--ff"),
         ] {
             if key == axis {
                 return Err(format!(
@@ -221,6 +227,34 @@ impl SweepSpec {
         Ok(())
     }
 
+    /// `--ff on;off` (also accepts `,` as the separator — the values
+    /// contain neither).
+    pub fn ffs_from(&mut self, spec: &str) -> Result<(), String> {
+        let mut out: Vec<bool> = Vec::new();
+        for s in spec
+            .split([';', ','])
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+        {
+            let v = match s {
+                "on" => true,
+                "off" => false,
+                other => {
+                    return Err(format!("--ff: expected on or off, got {other:?}"));
+                }
+            };
+            if out.contains(&v) {
+                return Err(format!("--ff repeats {s:?}"));
+            }
+            out.push(v);
+        }
+        if out.is_empty() {
+            return Err("--ff: empty list".to_string());
+        }
+        self.ffs = out;
+        Ok(())
+    }
+
     /// Planned cell count (saturating; [`super::plan::plan`] enforces
     /// the hard cap).
     pub fn cell_count(&self) -> usize {
@@ -231,7 +265,8 @@ impl SweepSpec {
             .saturating_mul(self.strategies.len())
             .saturating_mul(self.scheds.len())
             .saturating_mul(self.syncs.len())
-            .saturating_mul(self.repartitions.len());
+            .saturating_mul(self.repartitions.len())
+            .saturating_mul(self.ffs.len());
         for a in &self.grid {
             n = n.saturating_mul(a.values.len());
         }
@@ -397,8 +432,16 @@ mod tests {
         s.syncs_from("common-atomic,atomic").unwrap();
         s.repartitions_from("off; 64; adaptive").unwrap();
         assert!(s.repartitions_from("0;off").is_err(), "0 normalizes to off");
+        s.ffs_from("on;off").unwrap();
+        assert!(s.ffs_from("on,on").is_err(), "duplicate ff value");
+        assert!(s.ffs_from("maybe").is_err(), "bad ff value");
+        // The `ff` key is redirected to its flag like the other engine
+        // axes.
+        let err = s.push_axis("ff", "on,off").unwrap_err();
+        assert!(err.contains("--ff"), "{err}");
         // 2 scenarios x (2 packets x 1 link-capacity) x 3 workers
-        // x 2 strategies x 2 scheds x 2 syncs x 3 repartition policies.
-        assert_eq!(s.cell_count(), 2 * (2 * 1) * 3 * 2 * 2 * 2 * 3);
+        // x 2 strategies x 2 scheds x 2 syncs x 3 repartition policies
+        // x 2 ff settings.
+        assert_eq!(s.cell_count(), 2 * (2 * 1) * 3 * 2 * 2 * 2 * 3 * 2);
     }
 }

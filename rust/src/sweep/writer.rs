@@ -59,7 +59,7 @@ fn row_head(cell: &Cell) -> String {
     format!(
         "\"cell\": \"{}\", \"scenario\": \"{}\", \"params\": {}, \
          \"workers\": {}, \"strategy\": \"{}\", \"sched\": \"{}\", \
-         \"sync\": \"{}\", \"repartition\": \"{}\"",
+         \"sync\": \"{}\", \"repartition\": \"{}\", \"ff\": \"{}\"",
         json_escape(&cell.key),
         json_escape(&cell.scenario),
         params,
@@ -68,6 +68,7 @@ fn row_head(cell: &Cell) -> String {
         cell.sched.name(),
         cell.sync.name(),
         json_escape(&cell.repartition),
+        if cell.ff { "on" } else { "off" },
     )
 }
 
@@ -384,6 +385,10 @@ fn parse_report_row(rep: &str) -> Option<BenchRow> {
         active_ratio: num_field(rep, "active_ratio")?,
         repartition_events: num_field(rep, "repartition_events")? as u64,
         cross_cluster_ports: num_field(rep, "cross_cluster_ports")? as u64,
+        // Absent in result files written before fast-forward existed;
+        // default to 0 so old sweeps still bridge.
+        skipped_cycles: num_field(rep, "skipped_cycles").unwrap_or(0.0) as u64,
+        ff_jumps: num_field(rep, "ff_jumps").unwrap_or(0.0) as u64,
         fingerprint,
     })
 }
@@ -418,6 +423,7 @@ mod tests {
                    \"sync_ops\": 42, \"work_ns\": 3000, \"transfer_ns\": 1000, \
                    \"barrier_ns\": 1000, \"active_ratio\": 0.5000, \
                    \"cross_cluster_ports\": 4, \
+                   \"skipped_cycles\": 750, \"ff_jumps\": 3, \
                    \"fingerprint\": \"0x00000000000000ff\", \
                    \"repartition_events\": 1, \"repartition_checks\": 2}";
         let row = parse_report_row(rep).expect("parses");
@@ -427,6 +433,13 @@ mod tests {
         assert_eq!(row.cycles, 1000);
         assert_eq!(row.fingerprint, 0xff);
         assert_eq!(row.repartition_events, 1);
+        assert_eq!(row.skipped_cycles, 750);
+        assert_eq!(row.ff_jumps, 3);
         assert!(parse_report_row("{\"engine\": \"ladder\"}").is_none());
+        // Pre-fast-forward result files lack the ff fields: still parse.
+        let old = rep.replace("\"skipped_cycles\": 750, \"ff_jumps\": 3, ", "");
+        let row = parse_report_row(&old).expect("old rows parse");
+        assert_eq!(row.skipped_cycles, 0);
+        assert_eq!(row.ff_jumps, 0);
     }
 }

@@ -33,7 +33,7 @@
 
 use super::syncpoint::{AtomicGate, Gate, MutexGate, SpinGate, SpinMode, SyncMethod};
 use crate::engine::active::{ActiveState, SchedMode};
-use crate::engine::model::{Model, RunOpts};
+use crate::engine::model::{ff_jump_target, FfScan, Model, RunOpts};
 use crate::engine::repart::{ClusterState, CostSamples, RepartitionPolicy, Repartitioner};
 use crate::engine::supervise::{panic_message, SimError, SimPhase, SuperviseOpts};
 use crate::stats::{PhaseTimers, RepartStats, RunStats};
@@ -415,10 +415,11 @@ pub(crate) fn run_ladder_supervised(
 
     let t0 = Instant::now();
     let timed = opts.run.timed;
+    let ff_on = opts.run.ff;
     let model_ref: &Model = model;
     let clusters: &ClusterState = &cluster_state;
     let samples_ref = samples.as_ref();
-    let per_worker: Vec<PhaseTimers> = std::thread::scope(|scope| {
+    let (per_worker, ff_skipped, ff_jumps) = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let gates = &gates;
@@ -426,6 +427,7 @@ pub(crate) fn run_ladder_supervised(
             let active_state = &active_state;
             let failure = &failure;
             let tick_cells = &tick_cells;
+            let sched_cycles = &sched_cycles;
             handles.push(scope.spawn(move || {
                 let mut t = PhaseTimers::new();
                 let mut cycle: u64 = start_cycle;
@@ -484,6 +486,12 @@ pub(crate) fn run_ladder_supervised(
                 };
                 // Paper Fig 7: wait(WORK); unlock(PHASE1).
                 gates.worker_wait_work(w, start_cycle);
+                // Re-read the published cycle after *every* WORK wait: a
+                // fast-forward jump advances the scheduler's clock while
+                // all workers are parked here, and the gates' release/
+                // acquire edge makes the plain store visible. This is the
+                // paper's iteration-number validation doing double duty.
+                cycle = sched_cycles.load(Ordering::Relaxed);
                 gates.worker_open_phase1(w);
                 loop {
                     if stop_flag.load(Ordering::Acquire) {
@@ -571,6 +579,7 @@ pub(crate) fn run_ladder_supervised(
                     } else {
                         gates.worker_wait_work(w, cycle);
                     }
+                    cycle = sched_cycles.load(Ordering::Relaxed);
                 }
                 gates.worker_open_phase0(w);
                 t.cycles = cycle;
@@ -583,6 +592,12 @@ pub(crate) fn run_ladder_supervised(
         let mut last_ticks: u64 = 0;
         let mut stall_streak: u32 = 0;
         let mut epoch_t0 = Instant::now();
+        let mut ff_skipped: u64 = 0;
+        let mut ff_jumps: u64 = 0;
+        // Set by a fast-forward jump, consumed by the stall watchdog: the
+        // zero-tick "epoch" it would observe at the landing cycle is the
+        // skip itself, not a lost wakeup.
+        let mut jumped = false;
         loop {
             // Between ticks all workers are parked at wait(WORK): the
             // scheduler has exclusive model access for the supervision
@@ -605,25 +620,33 @@ pub(crate) fn run_ladder_supervised(
             // zero-tick epoch with its wake still in the boxes, and a
             // healthy run always ticks on the epoch after.
             if sup.watchdog.check_stall && cycle > start_cycle {
-                let total: u64 = tick_cells.iter().map(|c| c.0.load(Ordering::Relaxed)).sum();
-                let delta = total.wrapping_sub(last_ticks);
-                last_ticks = total;
-                let stalled = if delta == 0 {
-                    unsafe { model_ref.stall_check(cycle) }
+                if jumped {
+                    // No tick ran between the jump and this landing cycle
+                    // by construction — the zero delta is not a stall.
+                    // (`last_ticks` is already current: nothing ticked.)
+                    jumped = false;
                 } else {
-                    None
-                };
-                match stalled {
-                    Some(e) => {
-                        stall_streak += 1;
-                        if stall_streak >= 2 {
-                            record_first(&failure, e);
-                            stop_flag.store(true, Ordering::Release);
-                            gates.sched_open_work(cycle);
-                            break;
+                    let total: u64 =
+                        tick_cells.iter().map(|c| c.0.load(Ordering::Relaxed)).sum();
+                    let delta = total.wrapping_sub(last_ticks);
+                    last_ticks = total;
+                    let stalled = if delta == 0 {
+                        unsafe { model_ref.stall_check(cycle) }
+                    } else {
+                        None
+                    };
+                    match stalled {
+                        Some(e) => {
+                            stall_streak += 1;
+                            if stall_streak >= 2 {
+                                record_first(&failure, e);
+                                stop_flag.store(true, Ordering::Release);
+                                gates.sched_open_work(cycle);
+                                break;
+                            }
                         }
+                        None => stall_streak = 0,
                     }
-                    None => stall_streak = 0,
                 }
             }
             // Wall-time watchdog: one epoch over budget trips the run.
@@ -720,6 +743,52 @@ pub(crate) fn run_ladder_supervised(
                     );
                 }
             }
+            // Idle-cycle fast-forward (DESIGN.md §2f): with every dirty
+            // list empty and no wake pending in a box, the barrier window
+            // can prove the cycle empty and jump the global clock to the
+            // next event horizon. Workers stay parked at wait(WORK)
+            // through any number of chained jumps and re-read the
+            // published cycle when the work phase finally opens, so every
+            // thread lands on the same iteration number. The target is
+            // clamped to every barrier-side cadence (stop cap, AllIdle
+            // check, checkpoint, fault, repartition check), all of which
+            // re-run above at the landing cycle.
+            if ff_on {
+                // SAFETY: exclusive barrier window, as for the hooks above.
+                let quiet = unsafe {
+                    (0..workers).all(|c| clusters.dirty(c).is_empty())
+                        && active_state.boxes_empty()
+                };
+                if quiet {
+                    let scan = unsafe {
+                        model_ref.ff_scan(
+                            cycle,
+                            match sched {
+                                SchedMode::ActiveList => Some(&active_state),
+                                SchedMode::FullScan => None,
+                            },
+                        )
+                    };
+                    if let FfScan::Idle { next_event, dead } = scan {
+                        let target = ff_jump_target(
+                            cycle,
+                            next_event,
+                            dead,
+                            &opts.run.stop,
+                            sup.checkpoint.as_ref().map(|ck| ck.every),
+                            sup.faults.next_fault_cycle_after(cycle),
+                            repartitioner.as_ref().and_then(|rp| rp.next_check_cycle()),
+                        );
+                        ff_skipped += target - cycle;
+                        ff_jumps += 1;
+                        stall_streak = 0;
+                        jumped = true;
+                        cycle = target;
+                        sched_cycles.store(cycle, Ordering::Relaxed);
+                        continue;
+                    }
+                }
+            }
             // tick():
             gates.sched_close_transfer();
             gates.sched_open_work(cycle);
@@ -754,7 +823,7 @@ pub(crate) fn run_ladder_supervised(
                 }
             }
         }
-        timers
+        (timers, ff_skipped, ff_jumps)
     });
     let wall = t0.elapsed();
 
@@ -842,6 +911,8 @@ pub(crate) fn run_ladder_supervised(
         },
         repart,
         cross_cluster_ports: 0,
+        skipped_cycles: ff_skipped,
+        ff_jumps,
     })
 }
 
@@ -998,13 +1069,16 @@ mod tests {
     #[test]
     fn lock_economy_is_o_workers_not_o_units() {
         // Same worker count, 10x the units: sync op count must not grow.
+        // Fast-forward off: the two pipelines drain at different cycles,
+        // so skipping would elide a different number of barrier rounds
+        // from each and break the equality this test pins.
         let cycles = 50;
         let ops_small = {
             let mut m = pipeline(4, 10);
             run_ladder(
                 &mut m,
                 &chunk_partition(4, 2),
-                &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::cycles(cycles)),
+                &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::cycles(cycles).ff(false)),
             )
             .sync_ops
         };
@@ -1013,7 +1087,7 @@ mod tests {
             run_ladder(
                 &mut m,
                 &chunk_partition(40, 2),
-                &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::cycles(cycles)),
+                &ParallelOpts::new(SyncMethod::CommonAtomic, RunOpts::cycles(cycles).ff(false)),
             )
             .sync_ops
         };
@@ -1025,13 +1099,15 @@ mod tests {
 
     #[test]
     fn common_atomic_uses_fewer_sched_ops_than_per_worker() {
+        // Fast-forward off, as in `lock_economy_is_o_workers_not_o_units`:
+        // op counts are only comparable over a fixed number of rounds.
         let cycles = 50;
         let run = |method| {
             let mut m = pipeline(8, 10);
             run_ladder(
                 &mut m,
                 &chunk_partition(8, 4),
-                &ParallelOpts::new(method, RunOpts::cycles(cycles)),
+                &ParallelOpts::new(method, RunOpts::cycles(cycles).ff(false)),
             )
             .sync_ops
         };

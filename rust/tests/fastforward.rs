@@ -1,0 +1,232 @@
+//! Idle-cycle fast-forward (DESIGN.md §2f), end to end:
+//!
+//! 1. Bit-identity: `--ff on` and `--ff off` must produce the same
+//!    fingerprint and the same final cycle count on every scenario ×
+//!    engine × scheduling × repartition cell — the skip elides empty
+//!    cycles, it never renumbers them.
+//! 2. Checkpoints land on schedule even when their boundary falls inside
+//!    a skipped region, and a restore from such a snapshot finishes
+//!    bit-identical to an uninterrupted run.
+//! 3. Effectiveness: on a sparse workload (a tree fabric that drains
+//!    early under a long fixed-cycle stop) the skip must actually elide
+//!    most of the clock, in both the serial and ladder engines.
+//!
+//! The active-list cells here also regression-test the stall watchdog's
+//! jump debounce: a fast-forward jump produces a zero-tick epoch by
+//! design, and a false "lost wakeup" would fail these runs.
+
+use scalesim::engine::{Engine, SchedMode, Sim};
+use scalesim::util::config::Config;
+
+fn cfg(pairs: &[(&str, &str)]) -> Config {
+    let mut c = Config::new();
+    for (k, v) in pairs {
+        c.set(k, v);
+    }
+    c
+}
+
+/// Apply one engine-topology cell to a session.
+fn topo(sim: Sim, workers: usize, sched: SchedMode) -> Sim {
+    let engine = if workers <= 1 {
+        Engine::Serial
+    } else {
+        Engine::Ladder
+    };
+    sim.workers(workers).engine(engine).sched(sched).fingerprinted()
+}
+
+/// Every (workers, sched, ff) cell of one scenario config must match the
+/// ff-off serial reference in fingerprint and final cycle count.
+fn assert_ff_parity_matrix(scenario: &str, pairs: &[(&str, &str)]) {
+    let c = cfg(pairs);
+    let reference = topo(Sim::scenario(scenario, &c).unwrap(), 1, SchedMode::FullScan)
+        .ff(false)
+        .run()
+        .unwrap_or_else(|e| panic!("{scenario}: reference run: {e}"));
+    assert_ne!(reference.fingerprint(), 0, "{scenario}: no fingerprint");
+
+    for workers in [1usize, 2, 4] {
+        for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
+            for ff in [true, false] {
+                let r = topo(Sim::scenario(scenario, &c).unwrap(), workers, sched)
+                    .ff(ff)
+                    .run()
+                    .unwrap_or_else(|e| {
+                        panic!("{scenario} workers={workers} ff={ff}: {e}")
+                    });
+                let cell = format!(
+                    "{scenario}: workers={workers} sched={} ff={ff}",
+                    sched.name()
+                );
+                assert_eq!(r.fingerprint(), reference.fingerprint(), "{cell}");
+                assert_eq!(r.stats.cycles, reference.stats.cycles, "{cell}: cycles");
+                if !ff {
+                    assert_eq!(r.stats.skipped_cycles, 0, "{cell}: off must not skip");
+                    assert_eq!(r.stats.ff_jumps, 0, "{cell}: off must not jump");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_parity() {
+    assert_ff_parity_matrix(
+        "pipeline",
+        &[("stages", "6"), ("messages", "40"), ("cycles", "300")],
+    );
+}
+
+#[test]
+fn cpu_light_parity() {
+    assert_ff_parity_matrix(
+        "cpu-light",
+        &[("cores", "4"), ("txns", "20"), ("rows", "128"), ("cycles", "400")],
+    );
+}
+
+#[test]
+fn ring_parity() {
+    assert_ff_parity_matrix(
+        "ring",
+        &[("nodes", "8"), ("packets", "8"), ("cycles", "400")],
+    );
+}
+
+#[test]
+fn torus_parity() {
+    assert_ff_parity_matrix("torus", &[("dim", "3"), ("packets", "8"), ("cycles", "300")]);
+}
+
+#[test]
+fn tree_parity() {
+    // Sparse: 21 nodes × 2 packets drain long before cycle 600, so the
+    // ff-on cells really do jump (the effectiveness test asserts it).
+    assert_ff_parity_matrix(
+        "tree",
+        &[("fanout", "4"), ("depth", "3"), ("packets", "2"), ("cycles", "600")],
+    );
+}
+
+#[test]
+fn parity_holds_under_repartitioning() {
+    // Fixed and adaptive repartitioning clamp the jump at their next
+    // cadence point, so probes still fire on schedule; the execution
+    // must stay bit-identical either way.
+    for scenario_pairs in [
+        ("pipeline", vec![("stages", "6"), ("messages", "40"), ("cycles", "300")]),
+        ("tree", vec![("fanout", "4"), ("depth", "3"), ("packets", "2"), ("cycles", "600")]),
+    ] {
+        let (scenario, base) = scenario_pairs;
+        let c = cfg(&base);
+        let reference = topo(Sim::scenario(scenario, &c).unwrap(), 1, SchedMode::FullScan)
+            .ff(false)
+            .run()
+            .unwrap();
+        for repart in ["50", "adaptive"] {
+            let mut pairs = base.clone();
+            pairs.push(("repartition", repart));
+            let c = cfg(&pairs);
+            for ff in [true, false] {
+                let r = topo(Sim::scenario(scenario, &c).unwrap(), 2, SchedMode::ActiveList)
+                    .ff(ff)
+                    .run()
+                    .unwrap_or_else(|e| panic!("{scenario} repart={repart} ff={ff}: {e}"));
+                assert_eq!(
+                    r.fingerprint(),
+                    reference.fingerprint(),
+                    "{scenario}: repart={repart} ff={ff}"
+                );
+                assert_eq!(r.stats.cycles, reference.stats.cycles);
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_inside_a_skipped_region_restores_bit_identical() {
+    // The tree drains within ~100 cycles; the cycle-200 and cycle-400
+    // snapshot boundaries both fall in the idle tail, so the jump must
+    // clamp at them, write the snapshot, and keep going.
+    let pairs = [
+        ("fanout", "4"),
+        ("depth", "3"),
+        ("packets", "2"),
+        ("cycles", "600"),
+    ];
+    let c = cfg(&pairs);
+    let full = topo(Sim::scenario("tree", &c).unwrap(), 2, SchedMode::ActiveList)
+        .run()
+        .unwrap();
+    assert!(full.stats.skipped_cycles > 0, "the tail must be skipped");
+
+    let path = std::env::temp_dir()
+        .join(format!("scalesim_ff_ckpt_{}.snap", std::process::id()));
+    let interrupted = topo(Sim::scenario("tree", &c).unwrap(), 2, SchedMode::ActiveList)
+        .cycles(400)
+        .checkpoint_every(200, &path)
+        .run()
+        .unwrap();
+    assert_eq!(interrupted.stats.cycles, 400, "truncated stop");
+    assert!(
+        interrupted.stats.skipped_cycles > 0,
+        "the snapshot boundaries sit inside skipped regions: {:?}",
+        interrupted.stats.skipped_cycles
+    );
+    assert!(path.exists(), "no snapshot written");
+
+    let restored = topo(Sim::restore(&path).unwrap(), 2, SchedMode::ActiveList)
+        .run()
+        .unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(restored.fingerprint(), full.fingerprint());
+    assert_eq!(restored.stats.cycles, full.stats.cycles);
+}
+
+#[test]
+fn sparse_tree_skips_most_of_the_clock() {
+    let pairs = [
+        ("fanout", "4"),
+        ("depth", "3"),
+        ("packets", "2"),
+        ("cycles", "2000"),
+    ];
+    let c = cfg(&pairs);
+    for (workers, sched) in [
+        (1, SchedMode::FullScan),
+        (1, SchedMode::ActiveList),
+        (2, SchedMode::ActiveList),
+    ] {
+        let r = topo(Sim::scenario("tree", &c).unwrap(), workers, sched)
+            .run()
+            .unwrap_or_else(|e| panic!("workers={workers}: {e}"));
+        let cell = format!("workers={workers} sched={}", sched.name());
+        assert_eq!(r.stats.cycles, 2000, "{cell}: the clock still reaches the stop");
+        assert!(r.stats.ff_jumps >= 1, "{cell}: no jump taken");
+        assert!(
+            r.stats.skipped_cycles > 1000,
+            "{cell}: the ~1900-cycle idle tail must be elided, \
+             skipped only {}",
+            r.stats.skipped_cycles
+        );
+        // The work actually performed is bounded by the busy prefix, not
+        // the simulated span: ticks ≪ cycles × units.
+        let ceiling = 2000 * r.units as u64;
+        assert!(
+            r.stats.unit_ticks() < ceiling / 4,
+            "{cell}: {} ticks is not sparse against {ceiling}",
+            r.stats.unit_ticks()
+        );
+    }
+
+    // And with the knob off, nothing is skipped — the measurement
+    // baseline the speedup claim divides by.
+    let off = topo(Sim::scenario("tree", &c).unwrap(), 1, SchedMode::FullScan)
+        .ff(false)
+        .run()
+        .unwrap();
+    assert_eq!(off.stats.skipped_cycles, 0);
+    assert_eq!(off.stats.ff_jumps, 0);
+    assert_eq!(off.stats.cycles, 2000);
+}
