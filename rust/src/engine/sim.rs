@@ -763,6 +763,7 @@ impl RunReport {
              \"barrier_ns\": {}, \"active_ratio\": {:.4}, \
              \"cross_cluster_ports\": {}, \
              \"skipped_cycles\": {}, \"ff_jumps\": {}, \
+             \"credits_stalled\": {}, \"arb_grants\": {}, \
              \"fingerprint\": \"{:#018x}\", {}}}",
             match &self.scenario {
                 Some(s) => format!("\"{s}\""),
@@ -784,6 +785,8 @@ impl RunReport {
             self.stats.cross_cluster_ports,
             self.stats.skipped_cycles,
             self.stats.ff_jumps,
+            self.stats.counters.get("flow.credits_stalled"),
+            self.stats.counters.get("flow.arb_grants"),
             self.stats.fingerprint,
             self.stats.repart.to_json_fields(),
         )

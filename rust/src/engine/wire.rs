@@ -514,6 +514,59 @@ impl Wire {
         }
     }
 
+    /// Place `comp` in the middle of an edge: `from.out_iface ->
+    /// comp.comp_in` and `comp.comp_out -> to.in_iface`. Sugar for
+    /// dropping a pass-through stage (delay line, token bucket, credit
+    /// limiter) onto an existing link without re-plumbing the endpoints.
+    /// Returns the interposed component's node.
+    #[allow(clippy::too_many_arguments)]
+    pub fn join_via(
+        &mut self,
+        from: Node,
+        out_iface: &str,
+        comp: impl Component + 'static,
+        comp_in: &str,
+        comp_out: &str,
+        to: Node,
+        in_iface: &str,
+    ) -> Node {
+        let mid = self.add(comp);
+        self.join(from, out_iface, mid, comp_in);
+        self.join(mid, comp_out, to, in_iface);
+        mid
+    }
+
+    /// Funnel many sources into one receiver through an N-into-1
+    /// component (an [`Arbiter`](crate::flow::Arbiter), a switch):
+    /// `froms[k].1 -> comp.comp_ins[k]` for every source, then
+    /// `comp.comp_out -> to.in_iface`. The component must declare exactly
+    /// as many listed input interfaces as there are sources. Returns the
+    /// fan-in component's node.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fan_in(
+        &mut self,
+        froms: &[(Node, &str)],
+        comp: impl Component + 'static,
+        comp_ins: &[&str],
+        comp_out: &str,
+        to: Node,
+        in_iface: &str,
+    ) -> Node {
+        assert_eq!(
+            froms.len(),
+            comp_ins.len(),
+            "fan_in: {} sources vs {} component inputs",
+            froms.len(),
+            comp_ins.len()
+        );
+        let hub = self.add(comp);
+        for ((from, out_iface), comp_in) in froms.iter().zip(comp_ins) {
+            self.join(*from, out_iface, hub, comp_in);
+        }
+        self.join(hub, comp_out, to, in_iface);
+        hub
+    }
+
     /// Place `n` components from a factory.
     pub fn replicate<C: Component + 'static>(
         &mut self,
@@ -798,6 +851,136 @@ mod tests {
         assert_eq!(topo.cross_weight(&[0, 0]), 0);
         let stats = model.run_serial(RunOpts::cycles(40));
         assert_eq!(stats.counters.get("snk.sum"), 45, "0+..+9");
+    }
+
+    /// Raw pass-through used by the interposer-helper tests.
+    struct RelayComp;
+
+    impl Component for RelayComp {
+        fn name(&self) -> String {
+            "relay".into()
+        }
+
+        fn inputs(&self) -> Vec<IfaceSpec> {
+            vec![IfaceSpec::new("in", PortCfg::new(2, 1)).of::<Tok>()]
+        }
+
+        fn outputs(&self) -> Vec<IfaceSpec> {
+            vec![IfaceSpec::new("out", PortCfg::new(2, 1)).of::<Tok>()]
+        }
+
+        fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+            struct Relay {
+                i: In<Transit>,
+                o: Out<Transit>,
+            }
+            impl Unit for Relay {
+                fn work(&mut self, ctx: &mut Ctx<'_>) {
+                    while self.i.ready(ctx) > 0 && self.o.vacant(ctx) {
+                        let m = self.i.recv_msg(ctx).unwrap();
+                        self.o.send_msg(ctx, m).unwrap();
+                    }
+                }
+            }
+            Box::new(Relay {
+                i: ports.input::<Transit>("in"),
+                o: ports.output::<Transit>("out"),
+            })
+        }
+    }
+
+    #[test]
+    fn join_via_interposes_a_stage_on_an_edge() {
+        let mut w = Wire::new();
+        let s = w.add(SrcComp { limit: 10 });
+        let k = w.add(SnkComp);
+        let mid = w.join_via(s, "tx", RelayComp, "in", "out", k, "rx");
+        assert_eq!(mid.unit, 2, "interposer placed after both endpoints");
+        let mut model = w.build().unwrap();
+        assert_eq!(model.topology().edges.len(), 2, "one edge became two");
+        let stats = model.run_serial(RunOpts::cycles(60));
+        assert_eq!(stats.counters.get("snk.sum"), 45, "order and sum survive");
+    }
+
+    #[test]
+    fn fan_in_funnels_many_sources_through_one_hub() {
+        struct Merge2;
+        impl Component for Merge2 {
+            fn name(&self) -> String {
+                "merge".into()
+            }
+            fn inputs(&self) -> Vec<IfaceSpec> {
+                vec![
+                    IfaceSpec::new("in0", PortCfg::new(2, 1)).of::<Tok>(),
+                    IfaceSpec::new("in1", PortCfg::new(2, 1)).of::<Tok>(),
+                ]
+            }
+            fn outputs(&self) -> Vec<IfaceSpec> {
+                vec![IfaceSpec::new("out", PortCfg::new(4, 1)).of::<Tok>()]
+            }
+            fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+                struct Merge {
+                    ins: Vec<In<Transit>>,
+                    o: Out<Transit>,
+                }
+                impl Unit for Merge {
+                    fn work(&mut self, ctx: &mut Ctx<'_>) {
+                        for k in 0..self.ins.len() {
+                            while self.ins[k].ready(ctx) > 0 && self.o.vacant(ctx) {
+                                let m = self.ins[k].recv_msg(ctx).unwrap();
+                                self.o.send_msg(ctx, m).unwrap();
+                            }
+                        }
+                    }
+                }
+                Box::new(Merge {
+                    ins: vec![ports.input::<Transit>("in0"), ports.input::<Transit>("in1")],
+                    o: ports.output::<Transit>("out"),
+                })
+            }
+        }
+
+        struct SumSnk;
+        impl Component for SumSnk {
+            fn name(&self) -> String {
+                "sumsnk".into()
+            }
+            fn inputs(&self) -> Vec<IfaceSpec> {
+                vec![IfaceSpec::new("rx", PortCfg::new(4, 1)).of::<Tok>()]
+            }
+            fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+                struct S {
+                    inp: In<Tok>,
+                    sum: u64,
+                }
+                impl Unit for S {
+                    fn work(&mut self, ctx: &mut Ctx<'_>) {
+                        while let Some(t) = self.inp.recv(ctx) {
+                            self.sum += t.v;
+                        }
+                    }
+                    fn stats(&self, out: &mut crate::stats::StatsMap) {
+                        out.set("merged.sum", self.sum);
+                    }
+                }
+                Box::new(S {
+                    inp: ports.input("rx"),
+                    sum: 0,
+                })
+            }
+        }
+
+        let mut w = Wire::new();
+        let s1 = w.add(SrcComp { limit: 5 });
+        let s2 = w.add(SrcComp { limit: 10 });
+        let k = w.add(SumSnk);
+        w.fan_in(&[(s1, "tx"), (s2, "tx")], Merge2, &["in0", "in1"], "out", k, "rx");
+        let mut model = w.build().unwrap();
+        let stats = model.run_serial(RunOpts::cycles(80));
+        assert_eq!(
+            stats.counters.get("merged.sum"),
+            (0..5).sum::<u64>() + (0..10).sum::<u64>()
+        );
     }
 
     /// A second payload type for the witness-mismatch tests.

@@ -1,0 +1,402 @@
+//! End-to-end credit-based flow control: a [`CreditLimiter`] /
+//! [`CreditIssuer`] pair exchanging a typed [`Credit`] payload.
+//!
+//! The loop bounds the in-flight occupancy of the path between the two
+//! endpoints to the limiter's initial credit pool `K`: the limiter spends
+//! one credit per message it releases downstream, and the issuer returns
+//! credits (aggregated, one [`Credit`] message per cycle at most) as it
+//! forwards messages out the far end. The conservation invariant —
+//!
+//! ```text
+//! limiter.credits + issuer.pending + data in flight (limiter → issuer)
+//!   + credits in flight (issuer → limiter)  ==  K
+//! ```
+//!
+//! — holds at every cycle barrier and therefore across checkpoint/restore
+//! (both units persist their state, and the port queues between them are
+//! serialized by the engine). `tests/flow.rs` pins it.
+//!
+//! Determinism of the stall count: a credit-starved limiter holds queued
+//! messages, so it reports busy (`!is_idle`) and has no `next_event`
+//! hint — every engine, scheduler, and fast-forward mode ticks it on
+//! every cycle, and the per-cycle `flow.credits_stalled` count is
+//! bit-identical serial vs. ladder.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+
+use crate::engine::{
+    Component, Ctx, Fnv, IfaceSpec, In, Msg, Out, Payload, PortCfg, Ports, Transit, Unit, Wire,
+};
+use crate::engine::wire::Node;
+use crate::stats::counters::CounterId;
+
+/// Message kind of credit returns (see [`Credit`]).
+pub const CREDIT: u32 = 24;
+
+/// A batched credit return: "I forwarded `n` of your messages". Encoding:
+/// `kind` = [`CREDIT`], `a` = n.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Credit {
+    pub n: u64,
+}
+
+impl Payload for Credit {
+    fn encode(self) -> Msg {
+        Msg::with(CREDIT, self.n, 0, 0)
+    }
+
+    fn decode(m: &Msg) -> Self {
+        assert_eq!(m.kind, CREDIT, "foreign kind on a credit port");
+        Credit { n: m.a }
+    }
+}
+
+/// The upstream half of a credit loop: releases messages downstream only
+/// while it holds credits (one credit per message), counting every
+/// credit-starved cycle into the `flow.credits_stalled` counter.
+///
+/// Interfaces: `in` (data, payload `T`), `credit` ([`Credit`] returns)
+/// → `out` (data, payload `T`). Arriving data is absorbed into an
+/// elastic internal queue (bounded in practice by the upstream source),
+/// so the loop can never deadlock on cyclic back pressure — the same
+/// discipline the ring/torus/tree transit queues use.
+pub struct CreditLimiter<T: 'static> {
+    name: String,
+    credits: u64,
+    cfg: PortCfg,
+    stalled: CounterId,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<T: 'static> CreditLimiter<T> {
+    /// `credits` is the loop's occupancy bound K (must be >= 1, or
+    /// nothing would ever flow); `stalled` is the shared
+    /// [`crate::flow::CREDITS_STALLED`] counter.
+    pub fn new(name: impl Into<String>, credits: u64, cfg: PortCfg, stalled: CounterId) -> Self {
+        assert!(credits >= 1, "a credit loop needs at least one credit");
+        CreditLimiter {
+            name: name.into(),
+            credits,
+            cfg,
+            stalled,
+            _t: PhantomData,
+        }
+    }
+}
+
+impl<T: 'static> Component for CreditLimiter<T> {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        vec![
+            IfaceSpec::new("in", self.cfg).of::<T>(),
+            IfaceSpec::new("credit", self.cfg).of::<Credit>(),
+        ]
+    }
+
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        vec![IfaceSpec::new("out", self.cfg).of::<T>()]
+    }
+
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+        Box::new(LimiterUnit {
+            inp: ports.input::<Transit>("in"),
+            credit_in: ports.input::<Credit>("credit"),
+            out: ports.output::<Transit>("out"),
+            credits: self.credits,
+            q: VecDeque::new(),
+            forwarded: 0,
+            stall_cycles: 0,
+            stalled: self.stalled,
+        })
+    }
+}
+
+struct LimiterUnit {
+    inp: In<Transit>,
+    credit_in: In<Credit>,
+    out: Out<Transit>,
+    credits: u64,
+    q: VecDeque<Msg>,
+    forwarded: u64,
+    stall_cycles: u64,
+    stalled: CounterId,
+}
+
+impl Unit for LimiterUnit {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(c) = self.credit_in.recv(ctx) {
+            self.credits += c.n;
+        }
+        while let Some(m) = self.inp.recv_msg(ctx) {
+            self.q.push_back(m);
+        }
+        while !self.q.is_empty() && self.credits > 0 && self.out.vacant(ctx) {
+            let m = self.q.pop_front().unwrap();
+            self.out.send_msg(ctx, m).unwrap();
+            self.credits -= 1;
+            self.forwarded += 1;
+        }
+        if !self.q.is_empty() && self.credits == 0 {
+            self.stall_cycles += 1;
+            ctx.counters.add(self.stalled, 1);
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.credits);
+        h.write_u64(self.q.len() as u64);
+        h.write_u64(self.forwarded);
+        h.write_u64(self.stall_cycles);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    fn stats(&self, out: &mut crate::stats::StatsMap) {
+        out.add("flow.credits", self.credits);
+        out.add("flow.limiter_forwarded", self.forwarded);
+        out.add("flow.limiter_stall_cycles", self.stall_cycles);
+    }
+
+    crate::persist_fields!(credits, q, forwarded, stall_cycles);
+}
+
+/// The downstream half of a credit loop: forwards messages out and
+/// returns credits to the limiter, batching all credits earned in a cycle
+/// into one [`Credit`] message (so the return path needs only capacity 1).
+///
+/// Interfaces: `in` (data, payload `T`) → `out` (data, payload `T`),
+/// `credit` ([`Credit`] returns, to be joined back to the limiter's
+/// `credit` input — see [`credit_link`]).
+pub struct CreditIssuer<T: 'static> {
+    name: String,
+    cfg: PortCfg,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<T: 'static> CreditIssuer<T> {
+    pub fn new(name: impl Into<String>, cfg: PortCfg) -> Self {
+        CreditIssuer {
+            name: name.into(),
+            cfg,
+            _t: PhantomData,
+        }
+    }
+}
+
+impl<T: 'static> Component for CreditIssuer<T> {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        vec![IfaceSpec::new("in", self.cfg).of::<T>()]
+    }
+
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        vec![
+            IfaceSpec::new("out", self.cfg).of::<T>(),
+            IfaceSpec::new("credit", self.cfg).of::<Credit>(),
+        ]
+    }
+
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+        Box::new(IssuerUnit {
+            inp: ports.input::<Transit>("in"),
+            out: ports.output::<Transit>("out"),
+            credit_out: ports.output::<Credit>("credit"),
+            q: VecDeque::new(),
+            pending: 0,
+            forwarded: 0,
+        })
+    }
+}
+
+struct IssuerUnit {
+    inp: In<Transit>,
+    out: Out<Transit>,
+    credit_out: Out<Credit>,
+    q: VecDeque<Msg>,
+    pending: u64,
+    forwarded: u64,
+}
+
+impl Unit for IssuerUnit {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(m) = self.inp.recv_msg(ctx) {
+            self.q.push_back(m);
+        }
+        while !self.q.is_empty() && self.out.vacant(ctx) {
+            let m = self.q.pop_front().unwrap();
+            self.out.send_msg(ctx, m).unwrap();
+            self.pending += 1;
+            self.forwarded += 1;
+        }
+        if self.pending > 0 && self.credit_out.vacant(ctx) {
+            self.credit_out.send(ctx, Credit { n: self.pending }).unwrap();
+            self.pending = 0;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.q.len() as u64);
+        h.write_u64(self.pending);
+        h.write_u64(self.forwarded);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.q.is_empty() && self.pending == 0
+    }
+
+    fn stats(&self, out: &mut crate::stats::StatsMap) {
+        out.add("flow.credits_pending", self.pending);
+        out.add("flow.issuer_forwarded", self.forwarded);
+    }
+
+    crate::persist_fields!(q, pending, forwarded);
+}
+
+/// Close a credit loop: join `issuer`'s `credit` output back to
+/// `limiter`'s `credit` input. (Data still flows limiter `out` → ... →
+/// issuer `in` through whatever path the model wires between them.)
+pub fn credit_link(w: &mut Wire, issuer: Node, limiter: Node) {
+    w.join(issuer, "credit", limiter, "credit");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{RunOpts, Stop};
+    use crate::noc::Flit;
+
+    /// Open-loop source: pushes `limit` flits as fast as the port allows.
+    struct Pusher {
+        out: Out<Flit>,
+        n: u64,
+        limit: u64,
+    }
+
+    impl Unit for Pusher {
+        fn work(&mut self, ctx: &mut Ctx<'_>) {
+            while self.n < self.limit && self.out.vacant(ctx) {
+                self.out
+                    .send(ctx, Flit::new(self.n, 0, 1, ctx.cycle))
+                    .unwrap();
+                self.n += 1;
+            }
+        }
+
+        fn state_hash(&self, h: &mut Fnv) {
+            h.write_u64(self.n);
+        }
+
+        fn is_idle(&self) -> bool {
+            self.n >= self.limit
+        }
+
+        crate::persist_fields!(n);
+    }
+
+    /// Sink that consumes at most `rate` flits per cycle.
+    struct SlowSink {
+        inp: In<Flit>,
+        rate: u64,
+        got: u64,
+        done: CounterId,
+    }
+
+    impl Unit for SlowSink {
+        fn work(&mut self, ctx: &mut Ctx<'_>) {
+            for _ in 0..self.rate {
+                let Some(f) = self.inp.recv(ctx) else { break };
+                assert_eq!(f.seq, self.got, "credit loop reordered traffic");
+                self.got += 1;
+                ctx.counters.add(self.done, 1);
+            }
+        }
+
+        fn state_hash(&self, h: &mut Fnv) {
+            h.write_u64(self.got);
+        }
+
+        crate::persist_fields!(got);
+    }
+
+    fn loop_model(packets: u64, credits: u64, sink_rate: u64) -> (crate::engine::Model, CounterId) {
+        let mut w = Wire::new();
+        let stalled = w.counter(crate::flow::CREDITS_STALLED);
+        let done = w.counter("test.done");
+        let cfg = PortCfg::new(2, 1);
+        let src = w.add_fn(
+            "src",
+            vec![],
+            vec![IfaceSpec::new("out", cfg).of::<Flit>()],
+            move |p| {
+                Box::new(Pusher {
+                    out: p.output("out"),
+                    n: 0,
+                    limit: packets,
+                })
+            },
+        );
+        let lim = w.add(CreditLimiter::<Flit>::new("lim", credits, cfg, stalled));
+        let iss = w.add(CreditIssuer::<Flit>::new("iss", cfg));
+        let snk = w.add_fn(
+            "snk",
+            vec![IfaceSpec::new("in", cfg).of::<Flit>()],
+            vec![],
+            move |p| {
+                Box::new(SlowSink {
+                    inp: p.input("in"),
+                    rate: sink_rate,
+                    got: 0,
+                    done,
+                })
+            },
+        );
+        w.join(src, "out", lim, "in");
+        w.join(lim, "out", iss, "in");
+        w.join(iss, "out", snk, "in");
+        credit_link(&mut w, iss, lim);
+        (w.build().unwrap(), done)
+    }
+
+    #[test]
+    fn under_provisioned_loop_delivers_in_order_and_stalls() {
+        let (mut model, done) = loop_model(40, 2, 1);
+        let stats = model.run_serial(RunOpts::with_stop(Stop::AllIdle {
+            check_every: 1,
+            max_cycles: 10_000,
+        }));
+        assert_eq!(stats.counters.get("test.done"), 40, "all delivered");
+        assert!(
+            stats.counters.get(crate::flow::CREDITS_STALLED) > 0,
+            "2 credits against a rate-1 sink must starve"
+        );
+        // Drained loop: every credit is back home.
+        assert_eq!(stats.counters.get("flow.credits"), 2);
+        assert_eq!(stats.counters.get("flow.credits_pending"), 0);
+        let _ = done;
+    }
+
+    #[test]
+    fn over_provisioned_loop_never_stalls() {
+        let (mut model, _) = loop_model(40, 64, 4);
+        let stats = model.run_serial(RunOpts::with_stop(Stop::AllIdle {
+            check_every: 1,
+            max_cycles: 10_000,
+        }));
+        assert_eq!(stats.counters.get("test.done"), 40);
+        assert_eq!(
+            stats.counters.get(crate::flow::CREDITS_STALLED),
+            0,
+            "64 credits for 40 packets can never run dry"
+        );
+        assert_eq!(stats.counters.get("flow.credits"), 64);
+    }
+}

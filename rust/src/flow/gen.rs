@@ -1,0 +1,373 @@
+//! Seeded open-loop traffic generation.
+//!
+//! [`OpenLoopGen`] injects [`Flit`]s at a configured rate regardless of
+//! downstream back-pressure absorption — the *open-loop* regime that
+//! creates real congestion (closed-loop sources self-throttle and never
+//! expose arbitration or credit behavior). Destinations follow a
+//! [`DestPattern`] (fixed / uniform-random / strided) and injection is
+//! gated by a bursty on/off [`BurstCfg`] envelope, so the offered load —
+//! and with it the hot set the adaptive repartitioner chases — moves
+//! over time.
+//!
+//! Randomness is deterministic: each generator owns a
+//! [`Rng::from_seed_stream`](crate::util::rng::Rng::from_seed_stream) stream
+//! keyed by its node id, advanced only on committed injections, and
+//! checkpointed with the unit, so fingerprints are identical across
+//! engines, worker counts, and checkpoint/restore.
+
+use std::marker::PhantomData;
+
+use crate::engine::{Component, Ctx, Fnv, IfaceSpec, In, Out, PortCfg, Ports, Unit};
+use crate::noc::Flit;
+use crate::stats::counters::CounterId;
+use crate::util::rng::Rng;
+
+/// How an open-loop source picks destination node ids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DestPattern {
+    /// Every flit goes to the same node (fan-in / incast traffic).
+    Fixed(u32),
+    /// Uniform over `nodes` ids, excluding the source itself
+    /// (`nodes >= 2`). Consumes one RNG draw per committed injection.
+    Uniform { nodes: u32 },
+    /// Deterministic `(src + stride) % nodes` neighbor traffic; no RNG.
+    Strided { nodes: u32, stride: u32 },
+}
+
+impl DestPattern {
+    /// Destination for the next flit from `src`. Only called when the
+    /// injection is committed (output vacant, budget left), so the RNG
+    /// advances exactly once per sent flit.
+    pub fn pick(&self, src: u32, rng: &mut Rng) -> u32 {
+        match *self {
+            DestPattern::Fixed(d) => d,
+            DestPattern::Uniform { nodes } => {
+                debug_assert!(nodes >= 2, "uniform pattern needs >= 2 nodes");
+                let r = rng.gen_range(nodes as u64 - 1) as u32;
+                if r >= src {
+                    r + 1
+                } else {
+                    r
+                }
+            }
+            DestPattern::Strided { nodes, stride } => (src + stride) % nodes,
+        }
+    }
+}
+
+/// On/off burst envelope: `on` active cycles, then `off` silent cycles,
+/// repeating, shifted by `phase`. `off == 0` means always on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BurstCfg {
+    pub on: u64,
+    pub off: u64,
+    pub phase: u64,
+}
+
+impl BurstCfg {
+    pub fn new(on: u64, off: u64, phase: u64) -> Self {
+        assert!(on >= 1, "burst envelope needs on >= 1");
+        BurstCfg { on, off, phase }
+    }
+
+    /// Continuous injection (no off periods).
+    pub fn always_on() -> Self {
+        BurstCfg {
+            on: 1,
+            off: 0,
+            phase: 0,
+        }
+    }
+
+    /// Whether injection is enabled at `cycle`.
+    pub fn active(&self, cycle: u64) -> bool {
+        self.off == 0 || (cycle.wrapping_add(self.phase)) % (self.on + self.off) < self.on
+    }
+
+    /// First cycle strictly after an inactive `now` where the envelope
+    /// turns on again; `None` when already active (the caller must tick).
+    /// This is the generator's `next_event` hint: off periods fast-forward.
+    pub fn next_active(&self, now: u64) -> Option<u64> {
+        if self.active(now) {
+            return None;
+        }
+        let period = self.on + self.off;
+        let pos = now.wrapping_add(self.phase) % period;
+        Some(now + (period - pos))
+    }
+}
+
+/// Open-loop [`Flit`] source: up to `rate` injections per active cycle,
+/// `to_send` total, destinations from a [`DestPattern`] under a
+/// [`BurstCfg`] envelope.
+///
+/// Interfaces: one output `out` of [`Flit`].
+pub struct OpenLoopGen {
+    name: String,
+    node: u32,
+    to_send: u64,
+    rate: u64,
+    pattern: DestPattern,
+    burst: BurstCfg,
+    seed: u64,
+    cfg: PortCfg,
+}
+
+impl OpenLoopGen {
+    /// `node` doubles as the flit `src` id and the RNG stream id.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        node: u32,
+        to_send: u64,
+        rate: u64,
+        pattern: DestPattern,
+        burst: BurstCfg,
+        seed: u64,
+        cfg: PortCfg,
+    ) -> Self {
+        assert!(rate >= 1, "generator rate must be >= 1");
+        OpenLoopGen {
+            name: name.into(),
+            node,
+            to_send,
+            rate,
+            pattern,
+            burst,
+            seed,
+            cfg,
+        }
+    }
+}
+
+impl Component for OpenLoopGen {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        vec![]
+    }
+
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        vec![IfaceSpec::new("out", self.cfg).of::<Flit>()]
+    }
+
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+        Box::new(GenUnit {
+            out: ports.output::<Flit>("out"),
+            node: self.node,
+            to_send: self.to_send,
+            rate: self.rate,
+            pattern: self.pattern,
+            burst: self.burst,
+            rng: Rng::from_seed_stream(self.seed, self.node as u64),
+            sent: 0,
+        })
+    }
+}
+
+struct GenUnit {
+    out: Out<Flit>,
+    node: u32,
+    to_send: u64,
+    rate: u64,
+    pattern: DestPattern,
+    burst: BurstCfg,
+    rng: Rng,
+    sent: u64,
+}
+
+impl Unit for GenUnit {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        if self.sent >= self.to_send || !self.burst.active(ctx.cycle) {
+            return;
+        }
+        let mut budget = self.rate;
+        while budget > 0 && self.sent < self.to_send && self.out.vacant(ctx) {
+            // Vacancy already checked: the injection commits, so the RNG
+            // draw inside pick() is consumed exactly once per flit.
+            let dst = self.pattern.pick(self.node, &mut self.rng);
+            self.out
+                .send(ctx, Flit::new(self.sent, self.node, dst, ctx.cycle))
+                .unwrap();
+            self.sent += 1;
+            budget -= 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.sent);
+        for w in self.rng.state() {
+            h.write_u64(w);
+        }
+    }
+
+    fn is_idle(&self) -> bool {
+        self.sent >= self.to_send
+    }
+
+    /// Mid-stream but outside a burst, the generator is provably inert
+    /// until the envelope turns back on — off periods fast-forward.
+    fn next_event(&self, now: u64) -> Option<u64> {
+        if self.sent >= self.to_send {
+            return None;
+        }
+        self.burst.next_active(now)
+    }
+
+    fn stats(&self, out: &mut crate::stats::StatsMap) {
+        out.add("flow.gen_sent", self.sent);
+    }
+
+    crate::persist_fields!(sent, rng);
+}
+
+/// Terminal [`Flit`] consumer: counts deliveries (bumping a global
+/// counter usable as a [`Stop::CounterAtLeast`](crate::engine::Stop)
+/// target) and accumulates injection-to-delivery latency.
+///
+/// Interfaces: one input `in` of [`Flit`].
+pub struct CountingSink {
+    name: String,
+    cfg: PortCfg,
+    delivered: CounterId,
+}
+
+impl CountingSink {
+    pub fn new(name: impl Into<String>, cfg: PortCfg, delivered: CounterId) -> Self {
+        CountingSink {
+            name: name.into(),
+            cfg,
+            delivered,
+        }
+    }
+}
+
+impl Component for CountingSink {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        vec![IfaceSpec::new("in", self.cfg).of::<Flit>()]
+    }
+
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        vec![]
+    }
+
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+        Box::new(SinkUnit {
+            inp: ports.input::<Flit>("in"),
+            delivered: self.delivered,
+            received: 0,
+            latency_sum: 0,
+        })
+    }
+}
+
+struct SinkUnit {
+    inp: In<Flit>,
+    delivered: CounterId,
+    received: u64,
+    latency_sum: u64,
+}
+
+impl Unit for SinkUnit {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(f) = self.inp.recv(ctx) {
+            self.received += 1;
+            self.latency_sum += ctx.cycle - f.inject;
+            ctx.counters.add(self.delivered, 1);
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.received);
+        h.write_u64(self.latency_sum);
+    }
+
+    fn stats(&self, out: &mut crate::stats::StatsMap) {
+        out.add("flow.sink_received", self.received);
+        out.add("flow.sink_latency_sum", self.latency_sum);
+    }
+
+    crate::persist_fields!(received, latency_sum);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{RunOpts, Stop, Wire};
+
+    #[test]
+    fn burst_envelope_geometry() {
+        let b = BurstCfg::new(3, 5, 0);
+        // Period 8: cycles 0..3 on, 3..8 off.
+        assert!(b.active(0) && b.active(2));
+        assert!(!b.active(3) && !b.active(7));
+        assert!(b.active(8));
+        assert_eq!(b.next_active(0), None);
+        assert_eq!(b.next_active(3), Some(8));
+        assert_eq!(b.next_active(7), Some(8));
+        // Phase shifts the window; off == 0 is always on.
+        let p = BurstCfg::new(3, 5, 6);
+        assert!(p.active(2) && !p.active(0));
+        assert!(BurstCfg::always_on().active(u64::MAX));
+    }
+
+    #[test]
+    fn patterns_are_deterministic_and_self_excluding() {
+        let mut rng = Rng::from_seed_stream(7, 1);
+        for _ in 0..200 {
+            let d = DestPattern::Uniform { nodes: 8 }.pick(3, &mut rng);
+            assert!(d < 8 && d != 3);
+        }
+        assert_eq!(DestPattern::Strided { nodes: 8, stride: 3 }.pick(6, &mut rng), 1);
+        assert_eq!(DestPattern::Fixed(5).pick(2, &mut rng), 5);
+        // Same seed/stream → same draw sequence.
+        let a: Vec<u64> = {
+            let mut r = Rng::from_seed_stream(9, 4);
+            (0..16).map(|_| r.gen_range(100)).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng::from_seed_stream(9, 4);
+            (0..16).map(|_| r.gen_range(100)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn open_loop_gen_delivers_everything_and_skips_off_periods() {
+        let cfg = PortCfg::new(8, 1);
+        let mut w = Wire::new();
+        let delivered = w.counter("flow.delivered");
+        let g = w.add(OpenLoopGen::new(
+            "gen0",
+            0,
+            24,
+            2,
+            DestPattern::Fixed(1),
+            BurstCfg::new(2, 30, 0),
+            0xFEED,
+            cfg,
+        ));
+        let s = w.add(CountingSink::new("snk", cfg, delivered));
+        w.join(g, "out", s, "in");
+        let mut model = w.build().unwrap();
+        let stats = model.run_serial(RunOpts::with_stop(Stop::CounterAtLeast {
+            counter: delivered,
+            target: 24,
+            max_cycles: 100_000,
+        }));
+        assert_eq!(stats.counters.get("flow.sink_received"), 24);
+        assert_eq!(stats.counters.get("flow.delivered"), 24);
+        // 24 flits at 2/cycle over 2-on/30-off bursts: ~6 periods of 32.
+        assert!(stats.cycles >= 5 * 32, "bursty pacing, got {}", stats.cycles);
+        assert!(
+            stats.skipped_cycles > 0,
+            "off periods must fast-forward via next_event"
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! Flow-control and arbitration component kit (DESIGN.md §1c).
+//!
+//! Reusable [`Component`](crate::engine::Component)s on top of the typed
+//! wiring layer (`engine::wire`) that give scenarios real contention
+//! behavior — the regime the paper's "complex architectures (e.g., ...
+//! network)" claim lives in, and the first workloads whose hot set moves
+//! enough for `--repartition adaptive` to visibly win:
+//!
+//! - [`credit`] — end-to-end credit loops: a [`CreditLimiter`] /
+//!   [`CreditIssuer`] pair exchanging a typed [`Credit`] payload bounds
+//!   the in-flight occupancy of the path between them and counts
+//!   `flow.credits_stalled` cycles while the sender is starved.
+//! - [`arbiter`] — an N-into-1 [`Arbiter`] with round-robin, weighted,
+//!   and fixed-priority policies, counting `flow.arb_grants`.
+//! - [`shaper`] — a [`TokenBucket`] rate limiter and a configurable
+//!   [`DelayLine`], both fast-forward-aware through
+//!   [`Unit::next_event`](crate::engine::Unit::next_event).
+//! - [`gen`] — seeded open-loop traffic sources ([`OpenLoopGen`]:
+//!   fixed / uniform-random / strided destinations under a bursty
+//!   on/off [`BurstCfg`] envelope) and a latency-tracking
+//!   [`CountingSink`].
+//!
+//! Every unit here implements `Unit::{save,load}` (checkpoint/restore
+//! composes) and honours the sleep contract: pass-through pieces are
+//! purely reactive, and the only units that tick without input traffic
+//! (a starved limiter, a mid-burst generator) are exactly the ones whose
+//! per-cycle behavior is observable (stall counters, injections).
+//!
+//! All pass-through components are generic over the link's
+//! [`Payload`](crate::engine::Payload): the type parameter exists purely
+//! at wiring time (interfaces declare it via
+//! [`IfaceSpec::of`](crate::engine::IfaceSpec::of)), while the runtime
+//! units move raw `Msg`s — the paper's §3.2.2 move-pointers-not-bodies
+//! property is untouched.
+
+pub mod arbiter;
+pub mod credit;
+pub mod gen;
+pub mod shaper;
+
+pub use arbiter::{ArbPolicy, Arbiter, ARB_IN_NAMES};
+pub use credit::{credit_link, Credit, CreditIssuer, CreditLimiter, CREDIT};
+pub use gen::{BurstCfg, CountingSink, DestPattern, OpenLoopGen};
+pub use shaper::{DelayLine, TokenBucket};
+
+/// Global counter name for cycles a credit-starved sender spent blocked
+/// (see [`CreditLimiter`]); surfaced in `RunReport::to_json` and BENCH
+/// rows as `credits_stalled`.
+pub const CREDITS_STALLED: &str = "flow.credits_stalled";
+
+/// Global counter name for arbiter grants (see [`Arbiter`]); surfaced in
+/// `RunReport::to_json` and BENCH rows as `arb_grants`.
+pub const ARB_GRANTS: &str = "flow.arb_grants";

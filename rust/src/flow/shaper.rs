@@ -1,0 +1,387 @@
+//! Traffic shaping: a token-bucket rate limiter and a configurable delay
+//! line.
+//!
+//! Both are single-in/single-out pass-through [`Component`]s, generic
+//! over the link payload, and both cooperate with idle-cycle
+//! fast-forward:
+//!
+//! - [`TokenBucket`] refills *lazily* (tokens owed since the last refill
+//!   are credited from the cycle arithmetic, not from per-cycle ticks),
+//!   so it never has to tick while its input is silent — an empty bucket
+//!   with queued input pins the clock only while there is actually a
+//!   message waiting, which is also exactly when the throttle count must
+//!   advance cycle-by-cycle.
+//! - [`DelayLine`] holds every message for a fixed number of cycles and
+//!   implements [`Unit::next_event`] with its head-of-queue release time,
+//!   so a long quiet delay is skipped in one jump (`tests/flow.rs` pins
+//!   ff-on/ff-off parity over it).
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+
+use crate::engine::{Component, Ctx, Fnv, IfaceSpec, In, Msg, Out, PortCfg, Ports, Transit, Unit};
+
+/// Token-bucket rate limiter: forwards at most `rate` messages per
+/// `period` cycles (sustained), with bursts up to `cap` tokens.
+///
+/// Interfaces: `in` → `out`, payload `T`.
+pub struct TokenBucket<T: 'static> {
+    name: String,
+    rate: u64,
+    period: u64,
+    cap: u64,
+    cfg: PortCfg,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<T: 'static> TokenBucket<T> {
+    /// `rate` tokens are added every `period` cycles (both >= 1), capped
+    /// at `cap` (>= 1); the bucket starts full.
+    pub fn new(name: impl Into<String>, rate: u64, period: u64, cap: u64, cfg: PortCfg) -> Self {
+        assert!(rate >= 1 && period >= 1 && cap >= 1, "degenerate bucket");
+        TokenBucket {
+            name: name.into(),
+            rate,
+            period,
+            cap,
+            cfg,
+            _t: PhantomData,
+        }
+    }
+}
+
+impl<T: 'static> Component for TokenBucket<T> {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        vec![IfaceSpec::new("in", self.cfg).of::<T>()]
+    }
+
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        vec![IfaceSpec::new("out", self.cfg).of::<T>()]
+    }
+
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+        Box::new(BucketUnit {
+            inp: ports.input::<Transit>("in"),
+            out: ports.output::<Transit>("out"),
+            rate: self.rate,
+            period: self.period,
+            cap: self.cap,
+            tokens: self.cap,
+            last_refill: 0,
+            forwarded: 0,
+            throttle_cycles: 0,
+        })
+    }
+}
+
+struct BucketUnit {
+    inp: In<Transit>,
+    out: Out<Transit>,
+    rate: u64,
+    period: u64,
+    cap: u64,
+    tokens: u64,
+    /// Cycle up to which refills have been credited.
+    last_refill: u64,
+    forwarded: u64,
+    throttle_cycles: u64,
+}
+
+impl Unit for BucketUnit {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        // Strict no-op without a ready message: the bucket is reactive
+        // (default `is_idle`), so this early-out is what makes it
+        // parkable and fast-forwardable while the upstream is silent.
+        if self.inp.ready(ctx) == 0 {
+            return;
+        }
+        // Lazy refill: credit every whole period elapsed since the last
+        // credit point. Pure cycle arithmetic — independent of how many
+        // times work() actually ran in between.
+        let refills = (ctx.cycle - self.last_refill) / self.period;
+        self.tokens = (self.tokens + refills * self.rate).min(self.cap);
+        self.last_refill += refills * self.period;
+        while self.tokens > 0 && self.inp.ready(ctx) > 0 && self.out.vacant(ctx) {
+            let m = self.inp.recv_msg(ctx).unwrap();
+            self.out.send_msg(ctx, m).unwrap();
+            self.tokens -= 1;
+            self.forwarded += 1;
+        }
+        if self.tokens == 0 && self.inp.ready(ctx) > 0 {
+            self.throttle_cycles += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.tokens);
+        h.write_u64(self.last_refill);
+        h.write_u64(self.forwarded);
+        h.write_u64(self.throttle_cycles);
+    }
+
+    fn next_event(&self, now: u64) -> Option<u64> {
+        // Only reachable if a model marks the bucket always_active via a
+        // wrapper; the reactive default never consults it. Honest answer
+        // anyway: the next refill boundary.
+        let next = self.last_refill + self.period;
+        (next > now).then_some(next)
+    }
+
+    fn stats(&self, out: &mut crate::stats::StatsMap) {
+        out.add("flow.bucket_forwarded", self.forwarded);
+        out.add("flow.bucket_throttle_cycles", self.throttle_cycles);
+    }
+
+    crate::persist_fields!(tokens, last_refill, forwarded, throttle_cycles);
+}
+
+/// Fixed delay line: every message is released exactly `delay` cycles
+/// after it arrived (FIFO, link-rate limited on release). Models wire
+/// latency beyond what a port's own `delay` expresses — and, unlike a
+/// port delay, it is a unit, so it can be checkpointed, composed behind
+/// arbiters, and observed in stats.
+///
+/// Interfaces: `in` → `out`, payload `T`.
+pub struct DelayLine<T: 'static> {
+    name: String,
+    delay: u64,
+    cfg: PortCfg,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<T: 'static> DelayLine<T> {
+    pub fn new(name: impl Into<String>, delay: u64, cfg: PortCfg) -> Self {
+        DelayLine {
+            name: name.into(),
+            delay,
+            cfg,
+            _t: PhantomData,
+        }
+    }
+}
+
+impl<T: 'static> Component for DelayLine<T> {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn inputs(&self) -> Vec<IfaceSpec> {
+        vec![IfaceSpec::new("in", self.cfg).of::<T>()]
+    }
+
+    fn outputs(&self) -> Vec<IfaceSpec> {
+        vec![IfaceSpec::new("out", self.cfg).of::<T>()]
+    }
+
+    fn build(self: Box<Self>, ports: &Ports) -> Box<dyn Unit> {
+        Box::new(DelayUnit {
+            inp: ports.input::<Transit>("in"),
+            out: ports.output::<Transit>("out"),
+            delay: self.delay,
+            q: VecDeque::new(),
+            forwarded: 0,
+        })
+    }
+}
+
+struct DelayUnit {
+    inp: In<Transit>,
+    out: Out<Transit>,
+    delay: u64,
+    /// `(release_cycle, message)`, FIFO — release times are monotone
+    /// because arrivals are.
+    q: VecDeque<(u64, Msg)>,
+    forwarded: u64,
+}
+
+impl Unit for DelayUnit {
+    fn work(&mut self, ctx: &mut Ctx<'_>) {
+        while let Some(m) = self.inp.recv_msg(ctx) {
+            self.q.push_back((ctx.cycle + self.delay, m));
+        }
+        while let Some(&(release, _)) = self.q.front() {
+            if release > ctx.cycle || !self.out.vacant(ctx) {
+                break;
+            }
+            let (_, m) = self.q.pop_front().unwrap();
+            self.out.send_msg(ctx, m).unwrap();
+            self.forwarded += 1;
+        }
+    }
+
+    fn state_hash(&self, h: &mut Fnv) {
+        h.write_u64(self.q.len() as u64);
+        h.write_u64(self.forwarded);
+    }
+
+    fn is_idle(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// The fast-forward hint this component exists to demonstrate: while
+    /// holding messages whose release is in the future, the line is busy
+    /// (`!is_idle`) but provably inert until the head release cycle — so
+    /// the engine may jump straight there.
+    fn next_event(&self, now: u64) -> Option<u64> {
+        match self.q.front() {
+            Some(&(release, _)) if release > now => Some(release),
+            _ => None,
+        }
+    }
+
+    fn stats(&self, out: &mut crate::stats::StatsMap) {
+        out.add("flow.delay_forwarded", self.forwarded);
+    }
+
+    crate::persist_fields!(q, forwarded);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{RunOpts, Stop, Wire};
+    use crate::noc::Flit;
+
+    struct Burst {
+        out: Out<Flit>,
+        n: u64,
+        limit: u64,
+    }
+
+    impl Unit for Burst {
+        fn work(&mut self, ctx: &mut Ctx<'_>) {
+            while self.n < self.limit && self.out.vacant(ctx) {
+                self.out
+                    .send(ctx, Flit::new(self.n, 0, 1, ctx.cycle))
+                    .unwrap();
+                self.n += 1;
+            }
+        }
+
+        fn state_hash(&self, h: &mut Fnv) {
+            h.write_u64(self.n);
+        }
+
+        fn is_idle(&self) -> bool {
+            self.n >= self.limit
+        }
+
+        crate::persist_fields!(n);
+    }
+
+    struct Arrivals {
+        inp: In<Flit>,
+        times: Vec<u64>,
+    }
+
+    impl Unit for Arrivals {
+        fn work(&mut self, ctx: &mut Ctx<'_>) {
+            while self.inp.recv(ctx).is_some() {
+                self.times.push(ctx.cycle);
+            }
+        }
+
+        fn state_hash(&self, h: &mut Fnv) {
+            for &t in &self.times {
+                h.write_u64(t);
+            }
+        }
+
+        fn stats(&self, out: &mut crate::stats::StatsMap) {
+            out.set("arrivals", self.times.len() as u64);
+            out.set("arrivals.last", self.times.last().copied().unwrap_or(0));
+        }
+
+        crate::persist_fields!(times);
+    }
+
+    fn chain_model(mid: impl Component + 'static, limit: u64) -> crate::engine::Model {
+        let cfg = PortCfg::new(4, 1);
+        let mut w = Wire::new();
+        let src = w.add_fn(
+            "src",
+            vec![],
+            vec![IfaceSpec::new("out", cfg).of::<Flit>()],
+            move |p| {
+                Box::new(Burst {
+                    out: p.output("out"),
+                    n: 0,
+                    limit,
+                })
+            },
+        );
+        let m = w.add(mid);
+        let snk = w.add_fn(
+            "snk",
+            vec![IfaceSpec::new("in", cfg).of::<Flit>()],
+            vec![],
+            |p| {
+                Box::new(Arrivals {
+                    inp: p.input("in"),
+                    times: Vec::new(),
+                })
+            },
+        );
+        w.join(src, "out", m, "in");
+        w.join(m, "out", snk, "in");
+        w.build().unwrap()
+    }
+
+    #[test]
+    fn token_bucket_throttles_to_its_sustained_rate() {
+        // 1 token / 4 cycles, burst cap 2, 10 packets: after the initial
+        // burst of 2 the stream is paced at ~1 per 4 cycles, so draining
+        // takes at least (10 - 2) * 4 cycles.
+        let mut model = chain_model(
+            TokenBucket::<Flit>::new("tb", 1, 4, 2, PortCfg::new(4, 1)),
+            10,
+        );
+        let stats = model.run_serial(RunOpts::with_stop(Stop::AllIdle {
+            check_every: 1,
+            max_cycles: 10_000,
+        }));
+        assert_eq!(stats.counters.get("arrivals"), 10);
+        assert!(
+            stats.counters.get("arrivals.last") >= (10 - 2) * 4,
+            "paced drain must take >= 32 cycles, took {}",
+            stats.counters.get("arrivals.last")
+        );
+        assert!(stats.counters.get("flow.bucket_throttle_cycles") > 0);
+    }
+
+    #[test]
+    fn delay_line_shifts_arrivals_and_hints_fast_forward() {
+        let delay = 50;
+        let mk = || chain_model(DelayLine::<Flit>::new("dl", delay, PortCfg::new(4, 1)), 3);
+        let mut model = mk();
+        let stats = model.run_serial(
+            RunOpts::with_stop(Stop::AllIdle {
+                check_every: 1,
+                max_cycles: 10_000,
+            })
+            .fingerprinted(),
+        );
+        assert_eq!(stats.counters.get("arrivals"), 3);
+        // src sends at cycle 0; port delay 1 in, 50 in the line, 1 out.
+        assert!(stats.counters.get("arrivals.last") >= delay);
+        assert!(stats.skipped_cycles > 0, "the 50-cycle hold must be skipped");
+
+        // ff off: same fingerprint, same cycle count, nothing skipped.
+        let mut model = mk();
+        let stats_off = model.run_serial(
+            RunOpts::with_stop(Stop::AllIdle {
+                check_every: 1,
+                max_cycles: 10_000,
+            })
+            .fingerprinted()
+            .ff(false),
+        );
+        assert_eq!(stats_off.skipped_cycles, 0);
+        assert_eq!(stats_off.fingerprint, stats.fingerprint);
+        assert_eq!(stats_off.cycles, stats.cycles);
+    }
+}

@@ -51,6 +51,11 @@ pub struct BenchRow {
     pub skipped_cycles: u64,
     /// Fast-forward jumps taken.
     pub ff_jumps: u64,
+    /// Cycles senders spent blocked on an empty credit pool
+    /// (`flow.credits_stalled`; 0 for uncredited scenarios).
+    pub credits_stalled: u64,
+    /// Arbiter grants issued (`flow.arb_grants`; 0 without arbiters).
+    pub arb_grants: u64,
     pub fingerprint: u64,
 }
 
@@ -86,6 +91,8 @@ impl BenchRow {
             cross_cluster_ports: s.cross_cluster_ports,
             skipped_cycles: s.skipped_cycles,
             ff_jumps: s.ff_jumps,
+            credits_stalled: s.counters.get("flow.credits_stalled"),
+            arb_grants: s.counters.get("flow.arb_grants"),
             fingerprint: s.fingerprint,
         }
     }
@@ -166,6 +173,7 @@ impl LadderBench {
                  \"barrier_ns\": {}, \"active_ratio\": {:.4}, \
                  \"repartition_events\": {}, \"cross_cluster_ports\": {}, \
                  \"skipped_cycles\": {}, \"ff_jumps\": {}, \
+                 \"credits_stalled\": {}, \"arb_grants\": {}, \
                  \"fingerprint\": \"{:#018x}\"}}{}\n",
                 r.engine,
                 r.sched,
@@ -182,6 +190,8 @@ impl LadderBench {
                 r.cross_cluster_ports,
                 r.skipped_cycles,
                 r.ff_jumps,
+                r.credits_stalled,
+                r.arb_grants,
                 r.fingerprint,
                 if i + 1 < self.rows.len() { "," } else { "" },
             ));

@@ -22,6 +22,10 @@
 //!   mesh NoC (§5.2–§5.3).
 //! - [`dc`] — the data-center model: multi-port switches, fat-tree
 //!   topologies, packet workloads (§5.4).
+//! - [`flow`] — reusable flow-control and arbitration components (credit
+//!   loops, token buckets, delay lines, arbiters, open-loop traffic
+//!   generators) behind the congestion scenarios (`incast`, credit-looped
+//!   ring/torus/tree).
 //! - [`workload`] — synthetic OLTP and SPEC-like workload generators.
 //! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas analytic
 //!   models (`artifacts/*.hlo.txt`).
@@ -45,6 +49,7 @@ pub mod engine;
 /// is std-only; enable `--features pjrt` where those crates are vendored.
 #[cfg(feature = "pjrt")]
 pub mod explore;
+pub mod flow;
 pub mod harness;
 pub mod mem;
 pub mod noc;

@@ -10,4 +10,4 @@ pub mod mesh;
 pub mod router;
 
 pub use mesh::{Mesh, MeshCfg};
-pub use router::{net_b, net_dst, net_src, FLIT, Flit, Router};
+pub use router::{net_b, net_dst, net_src, CREDIT_SEQ_BIT, FLIT, Flit, Router};

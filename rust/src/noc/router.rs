@@ -27,6 +27,10 @@ pub struct Flit {
     pub inject: u64,
 }
 
+/// High bit of [`Flit::seq`] marking an in-band credit-return flit (see
+/// [`Flit::credit_return`]). Data sequence numbers stay below it.
+pub const CREDIT_SEQ_BIT: u64 = 1 << 63;
+
 impl Flit {
     pub fn new(seq: u64, src: u32, dst: u32, inject: u64) -> Self {
         Flit {
@@ -35,6 +39,25 @@ impl Flit {
             dst,
             inject,
         }
+    }
+
+    /// The in-band credit flit a destination sends back for a delivered
+    /// data flit: same seq tagged with [`CREDIT_SEQ_BIT`], addressed to
+    /// the original sender, routed over the ordinary fabric (`from` is
+    /// the returning node). Keeps credit loops topology-agnostic — any
+    /// fabric that routes flits routes credits.
+    pub fn credit_return(&self, from: u32) -> Flit {
+        Flit {
+            seq: self.seq | CREDIT_SEQ_BIT,
+            src: from,
+            dst: self.src,
+            inject: self.inject,
+        }
+    }
+
+    /// Whether this flit is a credit return rather than data.
+    pub fn is_credit(&self) -> bool {
+        self.seq & CREDIT_SEQ_BIT != 0
     }
 }
 

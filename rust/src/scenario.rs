@@ -20,6 +20,14 @@
 //! | `ring`      | unidirectional ring NoC (typed `Wire::ring`)        |
 //! | `torus`     | 2-D torus NoC (typed `Wire::torus_of`)              |
 //! | `tree`      | fan-out tree fabric (typed `Wire::tree_of`)         |
+//! | `incast`    | N-hosts-into-one-switch fan-in storm (`flow` kit)   |
+//!
+//! `ring`, `torus`, and `tree` also accept `credits=K` / `burst=ON[:OFF]`
+//! keys that turn their open uniform traffic into credit-looped bursty
+//! injection (see [`crate::flow`]): each node holds a returnable pool of
+//! `K` injection credits, destinations send in-band credit-return flits
+//! over the ordinary fabric, and `flow.credits_stalled` counts the cycles
+//! a node spent ready-but-starved.
 //!
 //! Config keys are scenario-specific and documented per scenario
 //! (`keys()`); unknown keys are ignored, so one config file can drive a
@@ -34,6 +42,10 @@ use crate::dc::{build_fattree, FatTreeCfg, TrafficCfg};
 use crate::engine::{
     Component, Ctx, Fnv, IfaceSpec, In, Model, ModelBuilder, Msg, Out, Payload, PortCfg, Ports,
     Stop, Unit, Wire,
+};
+use crate::flow::{
+    credit_link, ArbPolicy, Arbiter, BurstCfg, CountingSink, CreditIssuer, CreditLimiter,
+    DestPattern, OpenLoopGen, ARB_GRANTS, ARB_IN_NAMES, CREDITS_STALLED,
 };
 use crate::noc::{Flit, Mesh, MeshCfg};
 use crate::systems::{build_cpu_system, CoreKind, CpuSystemCfg};
@@ -70,6 +82,7 @@ pub fn all() -> Vec<Box<dyn Scenario>> {
         Box::new(RingNoc),
         Box::new(TorusNoc),
         Box::new(TreeFabric),
+        Box::new(Incast),
     ]
 }
 
@@ -219,6 +232,43 @@ fn stop_from(cfg: &Config, default_stop: Stop) -> Result<Stop, String> {
     match cfg.get("cycles") {
         Some(_) => Ok(Stop::Cycles(cfg.get_u64("cycles", 0)?)),
         None => Ok(default_stop),
+    }
+}
+
+/// Parse a `burst=ON[:OFF]` envelope spec into `(on, off)` cycles.
+/// A bare `ON` (or `OFF` = 0) means always-on.
+fn parse_burst(spec: &str) -> Result<(u64, u64), String> {
+    let (on_s, off_s) = match spec.split_once(':') {
+        Some((a, b)) => (a.trim(), b.trim()),
+        None => (spec.trim(), ""),
+    };
+    let on: u64 = on_s
+        .parse()
+        .map_err(|_| format!("bad burst on-window {on_s:?} (want ON[:OFF])"))?;
+    let off: u64 = if off_s.is_empty() {
+        0
+    } else {
+        off_s
+            .parse()
+            .map_err(|_| format!("bad burst off-window {off_s:?} (want ON[:OFF])"))?
+    };
+    if on == 0 {
+        return Err("burst on-window must be >= 1".to_string());
+    }
+    Ok((on, off))
+}
+
+/// The per-node burst envelope for the credit-looped NoC variants:
+/// `burst=ON[:OFF]` from the config (default always-on), staggered per
+/// node by `node * on` so the fleet doesn't fire in lockstep — which is
+/// exactly what moves the hot set for the adaptive repartitioner.
+fn node_burst(cfg: &Config, node: u64) -> Result<BurstCfg, String> {
+    match cfg.get("burst") {
+        None => Ok(BurstCfg::always_on()),
+        Some(spec) => {
+            let (on, off) = parse_burst(spec)?;
+            Ok(BurstCfg::new(on, off, (node * on) % (on + off)))
+        }
     }
 }
 
@@ -746,20 +796,35 @@ struct RingNode {
     forwarded: u64,
     transit: std::collections::VecDeque<Flit>,
     latency_sum: u64,
+    /// Injection credit pool size; 0 disables the credit loop entirely
+    /// (classic open injection).
+    credit_cap: u64,
+    credits: u64,
+    burst: BurstCfg,
+    stalls: u64,
     delivered: crate::stats::counters::CounterId,
+    stalled: crate::stats::counters::CounterId,
     rng: Rng,
 }
 
 impl Unit for RingNode {
     fn work(&mut self, ctx: &mut Ctx<'_>) {
         // Drain arrivals: consume ours, queue the rest for the next hop.
+        // A consumed data flit (credit loop on) answers with an in-band
+        // credit-return flit over the same fabric; a returning credit
+        // refills our injection pool without counting as traffic.
         while let Some(f) = self.inp.recv(ctx) {
-            if f.dst == self.node {
+            if f.dst != self.node {
+                self.transit.push_back(f);
+            } else if f.is_credit() {
+                self.credits += 1;
+            } else {
                 self.received += 1;
                 self.latency_sum += ctx.cycle - f.inject;
                 ctx.counters.add(self.delivered, 1);
-            } else {
-                self.transit.push_back(f);
+                if self.credit_cap > 0 {
+                    self.transit.push_back(f.credit_return(self.node));
+                }
             }
         }
         // Forward transit traffic first (link rate applies), then inject.
@@ -768,7 +833,13 @@ impl Unit for RingNode {
             self.out.send(ctx, f).unwrap();
             self.forwarded += 1;
         }
-        while self.sent < self.to_send && self.out.vacant(ctx) {
+        let gated = self.credit_cap > 0;
+        let active = self.burst.active(ctx.cycle);
+        while self.sent < self.to_send
+            && active
+            && (!gated || self.credits > 0)
+            && self.out.vacant(ctx)
+        {
             // Uniform destination, self excluded; rng advances only on an
             // actual send, so the stream is engine-order independent.
             let mut dst = self.rng.gen_range((self.nodes - 1) as u64) as u32;
@@ -779,6 +850,17 @@ impl Unit for RingNode {
                 .send(ctx, Flit::new(self.sent, self.node, dst, ctx.cycle))
                 .unwrap();
             self.sent += 1;
+            if gated {
+                self.credits -= 1;
+            }
+        }
+        // Credit starvation: ready to inject inside the burst window but
+        // out of credits. Deterministic per-cycle count — a busy node
+        // ticks every cycle in every engine (no next_event hint while the
+        // burst is on).
+        if gated && active && self.sent < self.to_send && self.credits == 0 {
+            self.stalls += 1;
+            ctx.counters.add(self.stalled, 1);
         }
     }
 
@@ -788,19 +870,44 @@ impl Unit for RingNode {
         h.write_u64(self.forwarded);
         h.write_u64(self.latency_sum);
         h.write_u64(self.transit.len() as u64);
+        h.write_u64(self.credits);
+        h.write_u64(self.stalls);
     }
 
     fn is_idle(&self) -> bool {
         self.sent >= self.to_send && self.transit.is_empty()
     }
 
+    /// Mid-stream but outside the burst window with nothing in transit,
+    /// the node is provably inert until the envelope turns back on — the
+    /// off periods of a bursty ring fast-forward.
+    fn next_event(&self, now: u64) -> Option<u64> {
+        if !self.transit.is_empty() || self.sent >= self.to_send {
+            return None;
+        }
+        self.burst.next_active(now)
+    }
+
     fn stats(&self, out: &mut crate::stats::StatsMap) {
         out.add("ring.sent", self.sent);
         out.add("ring.forwarded", self.forwarded);
         out.add("ring.latency_sum", self.latency_sum);
+        if self.credit_cap > 0 {
+            out.add("flow.credits", self.credits);
+            out.add("flow.stall_cycles", self.stalls);
+        }
     }
 
-    crate::persist_fields!(sent, received, forwarded, transit, latency_sum, rng);
+    crate::persist_fields!(
+        sent,
+        received,
+        forwarded,
+        transit,
+        latency_sum,
+        credits,
+        stalls,
+        rng
+    );
 }
 
 struct RingNodeComp {
@@ -809,7 +916,10 @@ struct RingNodeComp {
     packets: u64,
     seed: u64,
     capacity: usize,
+    credits: u64,
+    burst: BurstCfg,
     delivered: crate::stats::counters::CounterId,
+    stalled: crate::stats::counters::CounterId,
 }
 
 impl Component for RingNodeComp {
@@ -837,7 +947,12 @@ impl Component for RingNodeComp {
             forwarded: 0,
             transit: std::collections::VecDeque::new(),
             latency_sum: 0,
+            credit_cap: self.credits,
+            credits: self.credits,
+            burst: self.burst,
+            stalls: 0,
             delivered: self.delivered,
+            stalled: self.stalled,
             rng: Rng::from_seed_stream(self.seed, self.node as u64),
         })
     }
@@ -859,6 +974,8 @@ impl Scenario for RingNoc {
             ("nodes", "ring length (default 16, min 2)"),
             ("packets", "packets injected per node (default 64)"),
             ("link-capacity", "per-hop link queue depth (default 4)"),
+            ("credits", "per-node injection credit pool, 0 = uncredited (default 0)"),
+            ("burst", "injection envelope ON[:OFF] cycles, staggered per node (default: always on)"),
             ("seed", "destination-stream seed (default 0x816)"),
             ("cycles / max-cycles", "stop overrides (default: all delivered, cap 500k)"),
         ]
@@ -868,16 +985,25 @@ impl Scenario for RingNoc {
         let nodes = cfg.get_usize("nodes", 16)?.max(2) as u32;
         let packets = cfg.get_u64("packets", 64)?;
         let capacity = cfg.get_usize("link-capacity", 4)?.max(1);
+        let credits = cfg.get_u64("credits", 0)?;
         let seed = cfg.get_u64("seed", 0x816)?;
+        let mut bursts = Vec::with_capacity(nodes as usize);
+        for node in 0..nodes {
+            bursts.push(node_burst(cfg, node as u64)?);
+        }
         let mut wire = Wire::new();
         let delivered = wire.counter("ring.delivered");
+        let stalled = wire.counter(CREDITS_STALLED);
         let ids = wire.replicate(nodes as usize, |node| RingNodeComp {
             node: node as u32,
             nodes,
             packets,
             seed,
             capacity,
+            credits,
+            burst: bursts[node],
             delivered,
+            stalled,
         });
         wire.ring(&ids, "next", "prev");
         let model = wire.build()?;
@@ -915,7 +1041,12 @@ struct TorusNode {
     forwarded: u64,
     transit: std::collections::VecDeque<Flit>,
     latency_sum: u64,
+    credit_cap: u64,
+    credits: u64,
+    burst: BurstCfg,
+    stalls: u64,
     delivered: crate::stats::counters::CounterId,
+    stalled: crate::stats::counters::CounterId,
     rng: Rng,
 }
 
@@ -967,12 +1098,17 @@ impl Unit for TorusNode {
         // ours, queue the rest.
         for inp in self.ins {
             while let Some(f) = inp.recv(ctx) {
-                if f.dst == self.node {
+                if f.dst != self.node {
+                    self.transit.push_back(f);
+                } else if f.is_credit() {
+                    self.credits += 1;
+                } else {
                     self.received += 1;
                     self.latency_sum += ctx.cycle - f.inject;
                     ctx.counters.add(self.delivered, 1);
-                } else {
-                    self.transit.push_back(f);
+                    if self.credit_cap > 0 {
+                        self.transit.push_back(f.credit_return(self.node));
+                    }
                 }
             }
         }
@@ -985,7 +1121,9 @@ impl Unit for TorusNode {
             self.transit.pop_front();
             self.forwarded += 1;
         }
-        while self.sent < self.to_send {
+        let gated = self.credit_cap > 0;
+        let active = self.burst.active(ctx.cycle);
+        while self.sent < self.to_send && active && (!gated || self.credits > 0) {
             let mut dst = self.rng.clone().gen_range((self.width * self.height - 1) as u64)
                 as u32;
             if dst >= self.node {
@@ -998,6 +1136,14 @@ impl Unit for TorusNode {
             // Committed: advance the real rng the same way.
             self.rng.gen_range((self.width * self.height - 1) as u64);
             self.sent += 1;
+            if gated {
+                self.credits -= 1;
+            }
+        }
+        // Credit starvation inside the burst window (see RingNode).
+        if gated && active && self.sent < self.to_send && self.credits == 0 {
+            self.stalls += 1;
+            ctx.counters.add(self.stalled, 1);
         }
     }
 
@@ -1007,19 +1153,43 @@ impl Unit for TorusNode {
         h.write_u64(self.forwarded);
         h.write_u64(self.latency_sum);
         h.write_u64(self.transit.len() as u64);
+        h.write_u64(self.credits);
+        h.write_u64(self.stalls);
     }
 
     fn is_idle(&self) -> bool {
         self.sent >= self.to_send && self.transit.is_empty()
     }
 
+    /// Outside the burst window with an empty transit queue the node is
+    /// inert until the envelope turns back on (see RingNode).
+    fn next_event(&self, now: u64) -> Option<u64> {
+        if !self.transit.is_empty() || self.sent >= self.to_send {
+            return None;
+        }
+        self.burst.next_active(now)
+    }
+
     fn stats(&self, out: &mut crate::stats::StatsMap) {
         out.add("torus.sent", self.sent);
         out.add("torus.forwarded", self.forwarded);
         out.add("torus.latency_sum", self.latency_sum);
+        if self.credit_cap > 0 {
+            out.add("flow.credits", self.credits);
+            out.add("flow.stall_cycles", self.stalls);
+        }
     }
 
-    crate::persist_fields!(sent, received, forwarded, transit, latency_sum, rng);
+    crate::persist_fields!(
+        sent,
+        received,
+        forwarded,
+        transit,
+        latency_sum,
+        credits,
+        stalls,
+        rng
+    );
 }
 
 struct TorusNodeComp {
@@ -1030,7 +1200,10 @@ struct TorusNodeComp {
     packets: u64,
     seed: u64,
     capacity: usize,
+    credits: u64,
+    burst: BurstCfg,
     delivered: crate::stats::counters::CounterId,
+    stalled: crate::stats::counters::CounterId,
 }
 
 impl Component for TorusNodeComp {
@@ -1078,7 +1251,12 @@ impl Component for TorusNodeComp {
             forwarded: 0,
             transit: std::collections::VecDeque::new(),
             latency_sum: 0,
+            credit_cap: self.credits,
+            credits: self.credits,
+            burst: self.burst,
+            stalls: 0,
             delivered: self.delivered,
+            stalled: self.stalled,
             rng: Rng::from_seed_stream(self.seed, node as u64),
         })
     }
@@ -1101,6 +1279,8 @@ impl Scenario for TorusNoc {
             ("width / height", "explicit dimensions (default dim x dim)"),
             ("packets", "packets injected per node (default 32)"),
             ("link-capacity", "per-hop link queue depth (default 4)"),
+            ("credits", "per-node injection credit pool, 0 = uncredited (default 0)"),
+            ("burst", "injection envelope ON[:OFF] cycles, staggered per node (default: always on)"),
             ("seed", "destination-stream seed (default 0x707)"),
             ("cycles / max-cycles", "stop overrides (default: all delivered, cap 500k)"),
         ]
@@ -1117,9 +1297,15 @@ impl Scenario for TorusNoc {
         }
         let packets = cfg.get_u64("packets", 32)?;
         let capacity = cfg.get_usize("link-capacity", 4)?.max(1);
+        let credits = cfg.get_u64("credits", 0)?;
         let seed = cfg.get_u64("seed", 0x707)?;
+        let mut bursts = Vec::with_capacity((width * height) as usize);
+        for node in 0..width * height {
+            bursts.push(node_burst(cfg, node as u64)?);
+        }
         let mut wire = Wire::new();
         let delivered = wire.counter("torus.delivered");
+        let stalled = wire.counter(CREDITS_STALLED);
         wire.torus_of(width, height, |x, y| TorusNodeComp {
             x,
             y,
@@ -1128,7 +1314,10 @@ impl Scenario for TorusNoc {
             packets,
             seed,
             capacity,
+            credits,
+            burst: bursts[(y * width + x) as usize],
             delivered,
+            stalled,
         });
         let model = wire.build()?;
         let stop = stop_from(
@@ -1167,7 +1356,12 @@ struct TreeFabricNode {
     forwarded: u64,
     transit: std::collections::VecDeque<Flit>,
     latency_sum: u64,
+    credit_cap: u64,
+    credits: u64,
+    burst: BurstCfg,
+    stalls: u64,
     delivered: crate::stats::counters::CounterId,
+    stalled: crate::stats::counters::CounterId,
     rng: Rng,
 }
 
@@ -1215,12 +1409,17 @@ impl Unit for TreeFabricNode {
                 _ => self.down[i - up_slot].0,
             };
             while let Some(f) = inp.recv(ctx) {
-                if f.dst == self.node {
+                if f.dst != self.node {
+                    self.transit.push_back(f);
+                } else if f.is_credit() {
+                    self.credits += 1;
+                } else {
                     self.received += 1;
                     self.latency_sum += ctx.cycle - f.inject;
                     ctx.counters.add(self.delivered, 1);
-                } else {
-                    self.transit.push_back(f);
+                    if self.credit_cap > 0 {
+                        self.transit.push_back(f.credit_return(self.node));
+                    }
                 }
             }
         }
@@ -1233,7 +1432,9 @@ impl Unit for TreeFabricNode {
             self.transit.pop_front();
             self.forwarded += 1;
         }
-        while self.sent < self.to_send {
+        let gated = self.credit_cap > 0;
+        let active = self.burst.active(ctx.cycle);
+        while self.sent < self.to_send && active && (!gated || self.credits > 0) {
             let mut dst = self.rng.clone().gen_range((self.nodes - 1) as u64) as u32;
             if dst >= self.node {
                 dst += 1;
@@ -1245,6 +1446,14 @@ impl Unit for TreeFabricNode {
             // Committed: advance the real rng the same way.
             self.rng.gen_range((self.nodes - 1) as u64);
             self.sent += 1;
+            if gated {
+                self.credits -= 1;
+            }
+        }
+        // Credit starvation inside the burst window (see RingNode).
+        if gated && active && self.sent < self.to_send && self.credits == 0 {
+            self.stalls += 1;
+            ctx.counters.add(self.stalled, 1);
         }
     }
 
@@ -1254,19 +1463,43 @@ impl Unit for TreeFabricNode {
         h.write_u64(self.forwarded);
         h.write_u64(self.latency_sum);
         h.write_u64(self.transit.len() as u64);
+        h.write_u64(self.credits);
+        h.write_u64(self.stalls);
     }
 
     fn is_idle(&self) -> bool {
         self.sent >= self.to_send && self.transit.is_empty()
     }
 
+    /// Outside the burst window with an empty transit queue the node is
+    /// inert until the envelope turns back on (see RingNode).
+    fn next_event(&self, now: u64) -> Option<u64> {
+        if !self.transit.is_empty() || self.sent >= self.to_send {
+            return None;
+        }
+        self.burst.next_active(now)
+    }
+
     fn stats(&self, out: &mut crate::stats::StatsMap) {
         out.add("tree.sent", self.sent);
         out.add("tree.forwarded", self.forwarded);
         out.add("tree.latency_sum", self.latency_sum);
+        if self.credit_cap > 0 {
+            out.add("flow.credits", self.credits);
+            out.add("flow.stall_cycles", self.stalls);
+        }
     }
 
-    crate::persist_fields!(sent, received, forwarded, transit, latency_sum, rng);
+    crate::persist_fields!(
+        sent,
+        received,
+        forwarded,
+        transit,
+        latency_sum,
+        credits,
+        stalls,
+        rng
+    );
 }
 
 struct TreeFabricComp {
@@ -1278,7 +1511,10 @@ struct TreeFabricComp {
     packets: u64,
     seed: u64,
     capacity: usize,
+    credits: u64,
+    burst: BurstCfg,
     delivered: crate::stats::counters::CounterId,
+    stalled: crate::stats::counters::CounterId,
 }
 
 impl TreeFabricComp {
@@ -1351,7 +1587,12 @@ impl Component for TreeFabricComp {
             forwarded: 0,
             transit: std::collections::VecDeque::new(),
             latency_sum: 0,
+            credit_cap: self.credits,
+            credits: self.credits,
+            burst: self.burst,
+            stalls: 0,
             delivered: self.delivered,
+            stalled: self.stalled,
             rng: Rng::from_seed_stream(self.seed, node as u64),
         })
     }
@@ -1374,6 +1615,8 @@ impl Scenario for TreeFabric {
             ("depth", "tree levels incl. the root (default 3)"),
             ("packets", "packets injected per node (default 32)"),
             ("link-capacity", "per-hop link queue depth (default 4)"),
+            ("credits", "per-node injection credit pool, 0 = uncredited (default 0)"),
+            ("burst", "injection envelope ON[:OFF] cycles, staggered per node (default: always on)"),
             ("seed", "destination-stream seed (default 0x7EE)"),
             ("cycles / max-cycles", "stop overrides (default: all delivered, cap 500k)"),
         ]
@@ -1415,19 +1658,33 @@ impl Scenario for TreeFabric {
         }
         let packets = cfg.get_u64("packets", 32)?;
         let capacity = cfg.get_usize("link-capacity", 4)?.max(1);
+        let credits = cfg.get_u64("credits", 0)?;
         let seed = cfg.get_u64("seed", 0x7EE)?;
+        let mut bursts = Vec::with_capacity(nodes as usize);
+        for node in 0..nodes {
+            bursts.push(node_burst(cfg, node as u64)?);
+        }
         let mut wire = Wire::new();
         let delivered = wire.counter("tree.delivered");
-        wire.tree_of(fanout, depth, |level, index| TreeFabricComp {
-            level,
-            index,
-            fanout,
-            depth,
-            nodes,
-            packets,
-            seed,
-            capacity,
-            delivered,
+        let stalled = wire.counter(CREDITS_STALLED);
+        wire.tree_of(fanout, depth, |level, index| {
+            let comp = TreeFabricComp {
+                level,
+                index,
+                fanout,
+                depth,
+                nodes,
+                packets,
+                seed,
+                capacity,
+                credits,
+                // Placeholder; replaced right below from the heap id.
+                burst: BurstCfg::always_on(),
+                delivered,
+                stalled,
+            };
+            let burst = bursts[comp.node_id() as usize];
+            TreeFabricComp { burst, ..comp }
         });
         let model = wire.build()?;
         let stop = stop_from(
@@ -1436,6 +1693,120 @@ impl Scenario for TreeFabric {
                 counter: delivered,
                 target: nodes as u64 * packets,
                 max_cycles: cfg.get_u64("max-cycles", 500_000)?,
+            },
+        )?;
+        Ok((model, stop))
+    }
+}
+
+// ---------------------------------------------------------------------
+// incast
+// ---------------------------------------------------------------------
+
+/// N-hosts-into-one-switch fan-in storm, built entirely from the
+/// [`crate::flow`] kit: per host an open-loop bursty generator feeds a
+/// credit limiter, the limiter feeds a credit issuer, and all issuers
+/// funnel through one round-robin arbiter (the "switch") into a single
+/// counting sink. Each host's credit loop (issuer → limiter) bounds its
+/// in-flight occupancy of the switch input: when the arbiter falls
+/// behind the aggregate offered load, issuers stop forwarding, credits
+/// stop returning, and `flow.credits_stalled` counts the storm.
+struct Incast;
+
+impl Scenario for Incast {
+    fn name(&self) -> &'static str {
+        "incast"
+    }
+
+    fn summary(&self) -> &'static str {
+        "N-hosts-into-one-switch fan-in storm (credit loops + RR arbiter)"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["fan-in"]
+    }
+
+    fn keys(&self) -> &'static [(&'static str, &'static str)] {
+        &[
+            ("hosts", "fan-in sources (default 16, 2..=64)"),
+            ("packets", "flits injected per host (default 64)"),
+            ("credits", "per-host credit-loop depth (default 4, min 1)"),
+            ("burst", "per-host injection envelope ON[:OFF] (default 8:24)"),
+            ("rate", "switch arbiter drain rate, flits/cycle (default 1)"),
+            ("buffer", "port queue depth (default 4)"),
+            ("link-delay", "per-link latency in cycles (default 1)"),
+            ("seed", "per-host burst-phase seed (default 0x1CA)"),
+            ("cycles / max-cycles", "stop overrides (default: all delivered, cap 1M)"),
+        ]
+    }
+
+    fn build(&self, cfg: &Config) -> Result<(Model, Stop), String> {
+        let hosts = cfg.get_usize("hosts", 16)?;
+        if !(2..=ARB_IN_NAMES.len()).contains(&hosts) {
+            return Err(format!(
+                "incast hosts must be 2..={}, got {hosts}",
+                ARB_IN_NAMES.len()
+            ));
+        }
+        let packets = cfg.get_u64("packets", 64)?;
+        let credits = cfg.get_u64("credits", 4)?;
+        if credits < 1 {
+            return Err("incast credits must be >= 1".to_string());
+        }
+        let rate = cfg.get_u64("rate", 1)?.max(1);
+        let buffer = cfg.get_usize("buffer", 4)?.max(1);
+        let link_delay = cfg.get_u64("link-delay", 1)?;
+        let seed = cfg.get_u64("seed", 0x1CA)?;
+        let (on, off) = parse_burst(cfg.get("burst").unwrap_or("8:24"))?;
+        let port = PortCfg::new(buffer, link_delay);
+
+        let mut w = Wire::new();
+        let delivered = w.counter("flow.delivered");
+        let stalled = w.counter(CREDITS_STALLED);
+        let grants = w.counter(ARB_GRANTS);
+        let sink = w.add(CountingSink::new("sink", port, delivered));
+        let mut issuers = Vec::with_capacity(hosts);
+        for i in 0..hosts {
+            // Seeded per-host phase jitter: hosts burst out of lockstep,
+            // so the arbiter sees a moving fan-in front.
+            let jitter = Rng::from_seed_stream(seed, 1_000 + i as u64).gen_range(on + off);
+            let g = w.add(OpenLoopGen::new(
+                format!("gen{i}"),
+                i as u32,
+                packets,
+                1,
+                DestPattern::Fixed(hosts as u32),
+                BurstCfg::new(on, off, jitter),
+                seed,
+                port,
+            ));
+            let lim = w.add(CreditLimiter::<Flit>::new(
+                format!("lim{i}"),
+                credits,
+                port,
+                stalled,
+            ));
+            let iss = w.add(CreditIssuer::<Flit>::new(format!("iss{i}"), port));
+            w.join(g, "out", lim, "in");
+            w.join(lim, "out", iss, "in");
+            credit_link(&mut w, iss, lim);
+            issuers.push((iss, "out"));
+        }
+        w.fan_in(
+            &issuers,
+            Arbiter::<Flit>::new("switch", hosts, ArbPolicy::RoundRobin, rate, port, grants),
+            &ARB_IN_NAMES[..hosts],
+            "out",
+            sink,
+            "in",
+        );
+        let model = w.build()?;
+        let stop = stop_from(
+            cfg,
+            Stop::CounterAtLeast {
+                counter: delivered,
+                target: hosts as u64 * packets,
+                max_cycles: cfg.get_u64("max-cycles", 1_000_000)?,
             },
         )?;
         Ok((model, stop))
@@ -1452,11 +1823,13 @@ mod tests {
         assert_eq!(
             names(),
             vec![
-                "pipeline", "cpu-light", "cpu-ooo", "fat-tree", "mesh", "ring", "torus", "tree"
+                "pipeline", "cpu-light", "cpu-ooo", "fat-tree", "mesh", "ring", "torus", "tree",
+                "incast"
             ]
         );
         assert_eq!(find("cpu-system").unwrap().name(), "cpu-light");
         assert_eq!(find("datacenter").unwrap().name(), "fat-tree");
+        assert_eq!(find("fan-in").unwrap().name(), "incast");
         assert!(find("bogus").is_err());
         assert!(!list_lines(false).is_empty());
         // Verbose adds the per-scenario key lines.
@@ -1473,6 +1846,16 @@ mod tests {
         assert!(keys.contains(&"max-cycles"));
         assert!(keys.contains(&"repartition"), "session keys included");
         assert!(!keys.contains(&"cycles / max-cycles"));
+        // The congestion keys are declared, on the retrofitted fabrics
+        // and on incast alike — `--set credits=...` must validate.
+        assert!(keys.contains(&"credits"));
+        assert!(keys.contains(&"burst"));
+        let incast = settable_keys(find("incast").unwrap().as_ref());
+        for k in ["hosts", "packets", "credits", "burst", "rate", "buffer", "link-delay"] {
+            assert!(incast.contains(&k), "incast must declare {k:?}");
+        }
+        assert!(validate_set_keys(&["incast"], &["hosts", "credits", "burst"]).is_ok());
+        assert!(validate_set_keys(&["ring", "torus", "tree"], &["credits", "burst"]).is_ok());
     }
 
     #[test]
@@ -1657,5 +2040,163 @@ mod tests {
             .unwrap();
         assert_eq!(r.fingerprint(), reference.fingerprint());
         assert_eq!(r.scenario.as_deref(), Some("pipeline"));
+    }
+
+    #[test]
+    fn burst_spec_parses_and_rejects_garbage() {
+        assert_eq!(parse_burst("8:24").unwrap(), (8, 24));
+        assert_eq!(parse_burst("5").unwrap(), (5, 0));
+        assert_eq!(parse_burst(" 4 : 4 ").unwrap(), (4, 4));
+        assert!(parse_burst("0:4").is_err(), "zero on-window");
+        assert!(parse_burst("x:4").is_err());
+        assert!(parse_burst("4:y").is_err());
+        // Absent key = always-on envelope, phase-independent.
+        let cfg = Config::new();
+        assert_eq!(node_burst(&cfg, 7).unwrap(), BurstCfg::always_on());
+        let mut cfg = Config::new();
+        cfg.set("burst", "6:2");
+        // Phase staggered by node * on, mod period.
+        assert_eq!(node_burst(&cfg, 2).unwrap(), BurstCfg::new(6, 2, 4));
+    }
+
+    #[test]
+    fn incast_congests_under_provisioned_and_matches_parallel() {
+        let mut cfg = Config::new();
+        cfg.set("hosts", 8);
+        cfg.set("packets", 12);
+        cfg.set("credits", 2);
+        let serial = Sim::scenario("incast", &cfg)
+            .unwrap()
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(serial.stats.counters.get("flow.delivered"), 96);
+        assert!(
+            serial.stats.counters.get(super::CREDITS_STALLED) > 0,
+            "2 credits against a rate-1 8-way fan-in must starve"
+        );
+        assert_eq!(
+            serial.stats.counters.get(super::ARB_GRANTS),
+            96,
+            "every delivered flit passed the switch arbiter once"
+        );
+        for workers in [2, 4] {
+            let ladder = Sim::scenario("incast", &cfg)
+                .unwrap()
+                .workers(workers)
+                .fingerprinted()
+                .engine(Engine::Ladder)
+                .run()
+                .unwrap();
+            assert_eq!(ladder.fingerprint(), serial.fingerprint(), "{workers}w");
+            assert_eq!(ladder.stats.cycles, serial.stats.cycles, "{workers}w");
+        }
+    }
+
+    #[test]
+    fn incast_over_provisioned_never_stalls() {
+        let mut cfg = Config::new();
+        cfg.set("hosts", 4);
+        cfg.set("packets", 8);
+        cfg.set("credits", 32);
+        let r = Sim::scenario("incast", &cfg).unwrap().run().unwrap();
+        assert_eq!(r.stats.counters.get("flow.delivered"), 32);
+        assert_eq!(
+            r.stats.counters.get(super::CREDITS_STALLED),
+            0,
+            "more credits than packets: the loop can never bind"
+        );
+    }
+
+    #[test]
+    fn incast_rejects_degenerate_shapes() {
+        for (k, v) in [("hosts", "1"), ("hosts", "65"), ("credits", "0")] {
+            let mut cfg = Config::new();
+            cfg.set(k, v);
+            assert!(
+                find("incast").unwrap().build(&cfg).is_err(),
+                "{k}={v} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn credit_looped_bursty_ring_delivers_stalls_and_matches_parallel() {
+        let mut cfg = Config::new();
+        cfg.set("nodes", 6);
+        cfg.set("packets", 8);
+        cfg.set("credits", 1);
+        cfg.set("burst", "6:2");
+        let serial = Sim::scenario("ring", &cfg)
+            .unwrap()
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(serial.stats.counters.get("ring.delivered"), 48);
+        assert!(
+            serial.stats.counters.get(super::CREDITS_STALLED) > 0,
+            "1 credit per node with multi-hop returns must stall"
+        );
+        assert!(serial.stats.cycles < 500_000, "credit loop must not deadlock");
+        let ladder = Sim::scenario("ring", &cfg)
+            .unwrap()
+            .workers(3)
+            .fingerprinted()
+            .engine(Engine::Ladder)
+            .run()
+            .unwrap();
+        assert_eq!(ladder.fingerprint(), serial.fingerprint());
+        assert_eq!(ladder.stats.cycles, serial.stats.cycles);
+        // Uncredited runs are untouched by the retrofit: same keys minus
+        // credits/burst must report zero stall cycles.
+        let mut plain = Config::new();
+        plain.set("nodes", 6);
+        plain.set("packets", 8);
+        let p = Sim::scenario("ring", &plain).unwrap().run().unwrap();
+        assert_eq!(p.stats.counters.get(super::CREDITS_STALLED), 0);
+    }
+
+    #[test]
+    fn credit_looped_torus_and_tree_deliver_and_match_parallel() {
+        let mut cfg = Config::new();
+        cfg.set("dim", 3);
+        cfg.set("packets", 6);
+        cfg.set("credits", 2);
+        cfg.set("burst", "4:4");
+        let serial = Sim::scenario("torus", &cfg)
+            .unwrap()
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(serial.stats.counters.get("torus.delivered"), 54);
+        let ladder = Sim::scenario("torus", &cfg)
+            .unwrap()
+            .workers(2)
+            .fingerprinted()
+            .engine(Engine::Ladder)
+            .run()
+            .unwrap();
+        assert_eq!(ladder.fingerprint(), serial.fingerprint());
+
+        let mut cfg = Config::new();
+        cfg.set("fanout", 2);
+        cfg.set("depth", 3);
+        cfg.set("packets", 8);
+        cfg.set("credits", 2);
+        cfg.set("burst", "4:4");
+        let serial = Sim::scenario("tree", &cfg)
+            .unwrap()
+            .fingerprinted()
+            .run()
+            .unwrap();
+        assert_eq!(serial.stats.counters.get("tree.delivered"), 56);
+        let ladder = Sim::scenario("tree", &cfg)
+            .unwrap()
+            .workers(2)
+            .fingerprinted()
+            .engine(Engine::Ladder)
+            .run()
+            .unwrap();
+        assert_eq!(ladder.fingerprint(), serial.fingerprint());
     }
 }

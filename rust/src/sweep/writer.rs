@@ -389,6 +389,8 @@ fn parse_report_row(rep: &str) -> Option<BenchRow> {
         // default to 0 so old sweeps still bridge.
         skipped_cycles: num_field(rep, "skipped_cycles").unwrap_or(0.0) as u64,
         ff_jumps: num_field(rep, "ff_jumps").unwrap_or(0.0) as u64,
+        credits_stalled: num_field(rep, "credits_stalled").unwrap_or(0.0) as u64,
+        arb_grants: num_field(rep, "arb_grants").unwrap_or(0.0) as u64,
         fingerprint,
     })
 }

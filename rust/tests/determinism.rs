@@ -484,6 +484,27 @@ fn ring_torus_and_tree_scenarios_full_matrix() {
             c.set("packets", 6);
             c
         }),
+        // Credit-looped bursty variant: gated injection + credit returns
+        // riding the data network must stay order-agnostic too.
+        ("ring", {
+            let mut c = Config::new();
+            c.set("nodes", 6);
+            c.set("packets", 8);
+            c.set("credits", 1);
+            c.set("burst", "6:6");
+            c
+        }),
+        // Fan-in storm through the flow kit (generators → credit loops →
+        // round-robin arbiter): the stall/grant counters ride the
+        // fingerprinted state, so every cell must agree bit-for-bit.
+        ("incast", {
+            let mut c = Config::new();
+            c.set("hosts", 6);
+            c.set("packets", 8);
+            c.set("credits", 2);
+            c.set("burst", "4:8");
+            c
+        }),
     ];
     for (name, cfg) in &configs {
         let build = || scalesim::scenario::find(name).unwrap().build(cfg).unwrap();

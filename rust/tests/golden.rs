@@ -81,6 +81,12 @@ fn pinned_config(name: &str) -> Config {
             c.set("depth", 3);
             c.set("packets", 8);
         }
+        "incast" => {
+            c.set("hosts", 4);
+            c.set("packets", 6);
+            c.set("credits", 2);
+            c.set("burst", "4:4");
+        }
         other => panic!(
             "scenario {other:?} has no pinned golden config — add an arm to \
              pinned_config() and regenerate with UPDATE_GOLDEN=1"
@@ -254,7 +260,9 @@ fn golden_fingerprints_pin_every_scenario() {
 /// `cpu-ooo` and `fat-tree` opt out (`snapshot_supported()` is false)
 /// and are rejected by `checkpoint_every` up front, so they are excluded
 /// here rather than silently skipped.
-const SNAPSHOT_SCENARIOS: [&str; 6] = ["pipeline", "cpu-light", "mesh", "ring", "torus", "tree"];
+const SNAPSHOT_SCENARIOS: [&str; 7] = [
+    "pipeline", "cpu-light", "mesh", "ring", "torus", "tree", "incast",
+];
 
 /// Checkpoint/restore is held to the same bar as the ladder policies:
 /// interrupting a pinned run halfway through and resuming from the
