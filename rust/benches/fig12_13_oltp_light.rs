@@ -44,6 +44,7 @@ fn main() {
         &workers,
         None,
         Some(scalesim::engine::RepartitionPolicy::every(256)),
+        None,
     );
     bench_json::print(&bench);
     assert!(

@@ -13,6 +13,8 @@ pub mod repart;
 pub mod sim;
 pub mod snapshot;
 pub mod supervise;
+pub mod trace;
+pub mod trace_export;
 pub mod unit;
 pub mod wire;
 
@@ -24,5 +26,6 @@ pub use repart::RepartitionPolicy;
 pub use sim::{Engine, RunReport, Sim};
 pub use snapshot::{Persist, SnapshotReader, SnapshotWriter};
 pub use supervise::{Fault, FaultPlan, SimError, SimPhase, Watchdog};
+pub use trace::{TraceBuf, TraceEvent, TraceKind, Tracer, DEFAULT_TRACE_BUF};
 pub use unit::{Ctx, Unit};
 pub use wire::{Component, IfaceSpec, In, Node, Out, Payload, Ports, Transit, Wire};

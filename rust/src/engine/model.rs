@@ -43,6 +43,7 @@ use super::port::{InPort, OutPort, PortArena, PortCfg};
 use super::repart::{ClusterState, CostSamples};
 use super::snapshot::{save_slice, write_snapshot_file, Persist, SnapshotReader, SnapshotWriter};
 use super::supervise::{CheckpointCfg, RepartResume, SimError, SimPhase, SuperviseOpts};
+use super::trace::{TraceEvent, TraceKind, Tracer};
 use super::unit::{Ctx, Unit};
 use crate::stats::counters::CounterId;
 use crate::stats::timers::UnitProfile;
@@ -1064,7 +1065,7 @@ impl Model {
     /// supervision, preserving the original panicking signature for tests
     /// and internal callers.
     pub fn run_serial(&mut self, opts: RunOpts) -> RunStats {
-        self.run_serial_supervised(opts, &SuperviseOpts::none())
+        self.run_serial_supervised(opts, &SuperviseOpts::none(), None)
             .unwrap_or_else(|e| panic!("{e}"))
     }
 
@@ -1077,14 +1078,20 @@ impl Model {
         &mut self,
         opts: RunOpts,
         sup: &SuperviseOpts,
+        tracer: Option<&Tracer>,
     ) -> Result<RunStats, SimError> {
         match opts.sched {
-            SchedMode::FullScan => self.run_serial_full(opts, sup),
-            SchedMode::ActiveList => self.run_serial_active(opts, sup),
+            SchedMode::FullScan => self.run_serial_full(opts, sup, tracer),
+            SchedMode::ActiveList => self.run_serial_active(opts, sup, tracer),
         }
     }
 
-    fn run_serial_full(&mut self, opts: RunOpts, sup: &SuperviseOpts) -> Result<RunStats, SimError> {
+    fn run_serial_full(
+        &mut self,
+        opts: RunOpts,
+        sup: &SuperviseOpts,
+        tracer: Option<&Tracer>,
+    ) -> Result<RunStats, SimError> {
         let n_units = self.num_units() as u32;
         let serial_partition: Vec<Vec<u32>> = vec![(0..n_units).collect()];
         let mut dirty = self.take_scratch_buf();
@@ -1101,6 +1108,7 @@ impl Model {
             // writes its file).
             if let Some(ck) = &sup.checkpoint {
                 if Self::checkpoint_due(ck, cycle, opts.start_cycle) {
+                    let tr_ck = tracer.filter(|t| t.on()).map(|t| (t, t.now_ns()));
                     // SAFETY: single thread — trivially exclusive.
                     let res = unsafe {
                         self.write_checkpoint(
@@ -1112,6 +1120,15 @@ impl Model {
                             None,
                         )
                     };
+                    if let Some((t, ck0)) = tr_ck {
+                        // SAFETY: serial engine — this thread owns track 0.
+                        unsafe {
+                            t.rec(
+                                0,
+                                TraceEvent::span(TraceKind::Checkpoint, ck0, t.now_ns(), cycle, 0),
+                            )
+                        };
+                    }
                     if let Err(msg) = res {
                         break Err(SimError::new(cycle, SimPhase::Barrier, msg));
                     }
@@ -1160,10 +1177,26 @@ impl Model {
                     );
                     skipped += target - cycle;
                     jumps += 1;
+                    if let Some(t) = tracer.filter(|t| t.on()) {
+                        // SAFETY: serial engine — this thread owns track 0.
+                        unsafe {
+                            t.rec(
+                                0,
+                                TraceEvent::instant(
+                                    TraceKind::FfJump,
+                                    t.now_ns(),
+                                    cycle,
+                                    target - cycle,
+                                ),
+                            )
+                        };
+                    }
                     cycle = target;
                     continue;
                 }
             }
+            let tr = tracer.filter(|t| t.on());
+            let tr_w0 = tr.map(|t| t.now_ns());
             if opts.timed {
                 let tw = Instant::now();
                 for u in 0..n_units {
@@ -1171,19 +1204,37 @@ impl Model {
                     unsafe { self.work_one(u, cycle, &mut dirty) };
                 }
                 timers.work_ns += tw.elapsed().as_nanos() as u64;
-                let tt = Instant::now();
-                timers.port_walks += dirty.len() as u64;
-                // SAFETY: single thread.
-                unsafe { self.transfer_dirty(&mut dirty, cycle) };
-                timers.transfer_ns += tt.elapsed().as_nanos() as u64;
             } else {
                 for u in 0..n_units {
                     // SAFETY: single thread.
                     unsafe { self.work_one(u, cycle, &mut dirty) };
                 }
-                timers.port_walks += dirty.len() as u64;
+            }
+            if let (Some(t), Some(w0)) = (tr, tr_w0) {
+                // SAFETY: serial engine — this thread owns track 0.
+                unsafe {
+                    t.rec(
+                        0,
+                        TraceEvent::span(TraceKind::Work, w0, t.now_ns(), cycle, n_units as u64),
+                    )
+                };
+            }
+            let tr_t0 = tr.map(|t| t.now_ns());
+            timers.port_walks += dirty.len() as u64;
+            if opts.timed {
+                let tt = Instant::now();
                 // SAFETY: single thread.
                 unsafe { self.transfer_dirty(&mut dirty, cycle) };
+                timers.transfer_ns += tt.elapsed().as_nanos() as u64;
+            } else {
+                // SAFETY: single thread.
+                unsafe { self.transfer_dirty(&mut dirty, cycle) };
+            }
+            if let (Some(t), Some(x0)) = (tr, tr_t0) {
+                // SAFETY: serial engine — this thread owns track 0.
+                unsafe {
+                    t.rec(0, TraceEvent::span(TraceKind::Transfer, x0, t.now_ns(), cycle, 0))
+                };
             }
             timers.unit_ticks += n_units as u64;
             cycle += 1;
@@ -1213,6 +1264,7 @@ impl Model {
         &mut self,
         opts: RunOpts,
         sup: &SuperviseOpts,
+        tracer: Option<&Tracer>,
     ) -> Result<RunStats, SimError> {
         let n_units = self.num_units();
         let all: Vec<u32> = (0..n_units as u32).collect();
@@ -1249,12 +1301,23 @@ impl Model {
             // SAFETY (throughout): single thread — trivially exclusive for
             // every phase of the sleep/wake ownership schedule.
             unsafe {
+                let tr = tracer.filter(|t| t.on());
                 // Drain last cycle's wake boxes *before* the supervision
                 // hooks so a checkpoint observes canonical flags (no wake
                 // may be pending in a box when the flags are snapshotted).
+                let before_wakes = active.len();
                 state.drain_wakes(0, &mut active);
+                if let Some(t) = tr {
+                    let woke = (active.len() - before_wakes) as u64;
+                    if woke > 0 {
+                        // SAFETY (trace, throughout): serial engine — this
+                        // thread owns track 0.
+                        t.rec(0, TraceEvent::instant(TraceKind::Wake, t.now_ns(), cycle, woke));
+                    }
+                }
                 if let Some(ck) = &sup.checkpoint {
                     if Self::checkpoint_due(ck, cycle, opts.start_cycle) {
+                        let tr_ck = tr.map(|t| (t, t.now_ns()));
                         let res = self.write_checkpoint(
                             ck,
                             cycle,
@@ -1263,6 +1326,12 @@ impl Model {
                             &serial_partition,
                             None,
                         );
+                        if let Some((t, ck0)) = tr_ck {
+                            t.rec(
+                                0,
+                                TraceEvent::span(TraceKind::Checkpoint, ck0, t.now_ns(), cycle, 0),
+                            );
+                        }
                         if let Err(msg) = res {
                             break Err(SimError::new(cycle, SimPhase::Barrier, msg));
                         }
@@ -1323,25 +1392,52 @@ impl Model {
                         skipped += target - cycle;
                         jumps += 1;
                         stall_streak = 0;
+                        if let Some(t) = tr {
+                            t.rec(
+                                0,
+                                TraceEvent::instant(
+                                    TraceKind::FfJump,
+                                    t.now_ns(),
+                                    cycle,
+                                    target - cycle,
+                                ),
+                            );
+                        }
                         cycle = target;
                         continue;
                     }
                 }
                 let ticks;
+                let before_work = active.len();
+                let tr_w0 = tr.map(|t| t.now_ns());
                 if opts.timed {
                     let tw = Instant::now();
                     ticks = self.work_active(&mut active, cycle, &mut dirty, &state, 0, None);
                     timers.work_ns += tw.elapsed().as_nanos() as u64;
+                } else {
+                    ticks = self.work_active(&mut active, cycle, &mut dirty, &state, 0, None);
+                }
+                if let (Some(t), Some(w0)) = (tr, tr_w0) {
+                    t.rec(0, TraceEvent::span(TraceKind::Work, w0, t.now_ns(), cycle, ticks));
+                    let parked = (before_work - active.len()) as u64;
+                    if parked > 0 {
+                        t.rec(0, TraceEvent::instant(TraceKind::Park, t.now_ns(), cycle, parked));
+                    }
+                }
+                let tr_t0 = tr.map(|t| t.now_ns());
+                if opts.timed {
                     let tt = Instant::now();
                     state.drain_port_wakes(0, &mut dirty);
                     timers.port_walks += dirty.len() as u64;
                     self.transfer_dirty_wake(&mut dirty, cycle, &state, 0);
                     timers.transfer_ns += tt.elapsed().as_nanos() as u64;
                 } else {
-                    ticks = self.work_active(&mut active, cycle, &mut dirty, &state, 0, None);
                     state.drain_port_wakes(0, &mut dirty);
                     timers.port_walks += dirty.len() as u64;
                     self.transfer_dirty_wake(&mut dirty, cycle, &state, 0);
+                }
+                if let (Some(t), Some(x0)) = (tr, tr_t0) {
+                    t.rec(0, TraceEvent::span(TraceKind::Transfer, x0, t.now_ns(), cycle, 0));
                 }
                 timers.unit_ticks += ticks;
                 // Debounced: a delivery across a multi-cycle-delay port can

@@ -40,6 +40,8 @@ use super::model::{Model, RunOpts, Stop};
 use super::repart::RepartitionPolicy;
 use super::snapshot::{read_snapshot_file, Persist, SnapshotReader, SnapshotWriter};
 use super::supervise::{CheckpointCfg, FaultPlan, ResumeState, SuperviseOpts, Watchdog};
+use super::trace::{Tracer, DEFAULT_TRACE_BUF};
+use super::trace_export;
 use crate::sched::{
     cross_cluster_ports, partition, partition_cost_locality, partition_with_costs,
     PartitionStrategy,
@@ -47,6 +49,7 @@ use crate::sched::{
 use crate::stats::{PhaseTimers, RunStats};
 use crate::sync::{run_ladder_supervised, ParallelOpts, SpinMode, SyncMethod};
 use crate::util::config::Config;
+use crate::util::json::{finite, json_str};
 
 /// Default profiling-prologue length (cycles) for cost-balanced
 /// partitioning: long enough to reach steady state, short against the
@@ -127,6 +130,11 @@ pub struct Sim {
     checkpoint: Option<(u64, PathBuf)>,
     faults: FaultPlan,
     watchdog: Watchdog,
+    /// Chrome-trace output path; `None` = tracing off (the engines see
+    /// no tracer and pay nothing).
+    trace: Option<PathBuf>,
+    /// Per-track trace ring capacity in events.
+    trace_buf: usize,
     /// Snapshot body + offset of the state section (set by
     /// [`Sim::restore`]; consumed by `run()`).
     restore: Option<RestoreData>,
@@ -164,6 +172,8 @@ impl Sim {
             checkpoint: None,
             faults: FaultPlan::default(),
             watchdog: Watchdog::default(),
+            trace: None,
+            trace_buf: DEFAULT_TRACE_BUF,
             restore: None,
         }
     }
@@ -346,6 +356,26 @@ impl Sim {
     /// default; the per-epoch wall-time budget is opt-in).
     pub fn watchdog(mut self, wd: Watchdog) -> Self {
         self.watchdog = wd;
+        self
+    }
+
+    /// Record a wall-time event trace of the run and write it to `path`
+    /// as Chrome `trace_event` JSON (opens in Perfetto). Each engine
+    /// thread records into a private bounded ring buffer
+    /// (`engine::trace`); tracing is an observer — fingerprints are
+    /// bit-identical with it on or off. Supported by the serial and
+    /// ladder engines.
+    pub fn trace(mut self, path: impl Into<PathBuf>) -> Self {
+        self.trace = Some(path.into());
+        self
+    }
+
+    /// Per-track trace ring capacity in events (default
+    /// [`DEFAULT_TRACE_BUF`]). When a ring fills, further events on
+    /// that track are dropped and counted in `trace.dropped` — the hot
+    /// loop never blocks on tracing.
+    pub fn trace_buf(mut self, events: usize) -> Self {
+        self.trace_buf = events;
         self
     }
 
@@ -581,7 +611,7 @@ impl Sim {
             }
             e => e,
         };
-        let (part, stats, per_cluster) = match engine {
+        let (part, stats, per_cluster, tracer) = match engine {
             Engine::Serial => {
                 // The reference engine scans all units as one cluster;
                 // report it that way so partition/workers()/per_cluster
@@ -590,13 +620,15 @@ impl Sim {
                 if let Some(p) = &self.explicit_partition {
                     validate_partition(p, units)?;
                 }
-                let part = vec![(0..units as u32).collect()];
+                let part: Vec<Vec<u32>> = vec![(0..units as u32).collect()];
+                // One track: the serial loop is both engine and worker.
+                let tr = self.trace.as_ref().map(|_| Tracer::new(1, self.trace_buf));
                 let stats = self
                     .model
-                    .run_serial_supervised(opts, &sup)
+                    .run_serial_supervised(opts, &sup, tr.as_ref())
                     .map_err(|e| e.to_string())?;
                 let per_cluster = stats.per_worker.clone();
-                (part, stats, per_cluster)
+                (part, stats, per_cluster, tr)
             }
             Engine::Partitioned => {
                 if sup.checkpoint.is_some() || sup.resume.is_some() || !sup.faults.is_empty() {
@@ -607,9 +639,16 @@ impl Sim {
                             .to_string(),
                     );
                 }
+                if self.trace.is_some() {
+                    return Err(
+                        "the partitioned serial engine does not support tracing; \
+                         use the serial or ladder engine"
+                            .to_string(),
+                    );
+                }
                 let part = self.resolve_partition()?;
                 let (stats, per_cluster) = self.model.run_serial_partitioned(&part, opts);
-                (part, stats, per_cluster)
+                (part, stats, per_cluster, None)
             }
             Engine::Ladder => {
                 let part = self.resolve_partition()?;
@@ -620,10 +659,16 @@ impl Sim {
                     repart: self.repart,
                     repart_locality: self.strategy == PartitionStrategy::CostLocality,
                 };
-                let stats = run_ladder_supervised(&mut self.model, &part, &popts, &sup)
-                    .map_err(|e| e.to_string())?;
+                // Track 0 = scheduler/engine, track 1 + w = worker w.
+                let tr = self
+                    .trace
+                    .as_ref()
+                    .map(|_| Tracer::new(part.len() + 1, self.trace_buf));
+                let stats =
+                    run_ladder_supervised(&mut self.model, &part, &popts, &sup, tr.as_ref())
+                        .map_err(|e| e.to_string())?;
                 let per_cluster = stats.per_worker.clone();
-                (part, stats, per_cluster)
+                (part, stats, per_cluster, tr)
             }
             Engine::Auto => unreachable!("Auto resolved above"),
         };
@@ -642,6 +687,23 @@ impl Sim {
             } else {
                 0
             };
+        }
+        // Post-run trace export: the hot loops only filled ring buffers;
+        // serialization happens here, after the clock stopped.
+        if let Some(mut tr) = tracer {
+            stats.counters.set("trace.events", tr.total_events());
+            stats.counters.set("trace.dropped", tr.total_dropped());
+            let path = self.trace.as_ref().expect("tracer implies trace path");
+            let meta: [(&str, String); 4] = [
+                (
+                    "scenario",
+                    self.scenario.clone().unwrap_or_else(|| "ad-hoc".into()),
+                ),
+                ("engine", engine.name().to_string()),
+                ("sched", self.sched.name().to_string()),
+                ("workers", part.len().to_string()),
+            ];
+            trace_export::write_chrome(path, &mut tr, &meta)?;
         }
         Ok(RunReport {
             stats,
@@ -764,9 +826,10 @@ impl RunReport {
              \"cross_cluster_ports\": {}, \
              \"skipped_cycles\": {}, \"ff_jumps\": {}, \
              \"credits_stalled\": {}, \"arb_grants\": {}, \
+             \"trace_events\": {}, \"trace_dropped\": {}, \
              \"fingerprint\": \"{:#018x}\", {}}}",
             match &self.scenario {
-                Some(s) => format!("\"{s}\""),
+                Some(s) => json_str(s),
                 None => "null".to_string(),
             },
             self.engine,
@@ -776,17 +839,19 @@ impl RunReport {
             self.units,
             self.stats.cycles,
             self.stats.wall.as_nanos(),
-            self.stats.sim_khz() * 1e3,
+            finite(self.stats.sim_khz() * 1e3),
             self.stats.sync_ops,
             work_ns,
             transfer_ns,
             barrier_ns,
-            self.active_ratio(),
+            finite(self.active_ratio()),
             self.stats.cross_cluster_ports,
             self.stats.skipped_cycles,
             self.stats.ff_jumps,
             self.stats.counters.get("flow.credits_stalled"),
             self.stats.counters.get("flow.arb_grants"),
+            self.stats.counters.get("trace.events"),
+            self.stats.counters.get("trace.dropped"),
             self.stats.fingerprint,
             self.stats.repart.to_json_fields(),
         )

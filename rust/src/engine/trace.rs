@@ -1,0 +1,296 @@
+//! Near-zero-overhead event tracing (DESIGN.md §2h).
+//!
+//! Each engine thread — every ladder worker plus the scheduler, or the
+//! single serial loop — records fixed-size [`TraceEvent`]s into a
+//! private bounded ring buffer ([`TraceBuf`]). The hot loop pays one
+//! relaxed atomic load ([`Tracer::on`]) when tracing is compiled in but
+//! disabled, and never blocks when it is enabled: a full buffer drops
+//! the event and bumps a per-track counter that the run report surfaces
+//! as `trace.dropped`.
+//!
+//! Determinism contract: tracing is an *observer*. It reads wall-clock
+//! timestamps and phase boundaries but never touches model state, so
+//! fingerprints are bit-identical with tracing on or off (pinned by
+//! `rust/tests/trace.rs`).
+//!
+//! Ownership discipline mirrors the engine's other per-worker state
+//! (tick cells, phase timers): track `1 + w` is written only by ladder
+//! worker `w`, track 0 only by the scheduler (or the serial loop), so
+//! the buffers need no locks. [`Tracer`] is `Sync` on that contract;
+//! [`Tracer::rec`] is `unsafe` to make the caller state it.
+//!
+//! The post-run exporter ([`super::trace_export`]) serializes the
+//! buffers to Chrome `trace_event` JSON, which opens directly in
+//! Perfetto (`ui.perfetto.dev`) with one track per worker/cluster plus
+//! an engine track for barriers, fast-forward jumps, checkpoint writes,
+//! and repartition epochs.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// Default per-track ring capacity (events). At 40 bytes per event this
+/// is ~2.6 MiB per track — big enough that short runs never drop.
+pub const DEFAULT_TRACE_BUF: usize = 1 << 16;
+
+/// What a trace event records. The discriminant doubles as the track
+/// legend in the exporter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TraceKind {
+    /// Work-phase span on a worker/serial track; `arg` = unit ticks.
+    Work,
+    /// Transfer-phase span on a worker/serial track.
+    Transfer,
+    /// One ladder tick on the engine track: close-transfer through
+    /// phase-1 drain — the barrier round the paper's §4 describes.
+    Barrier,
+    /// Wake edge: `arg` units drained off the wake list this cycle.
+    Wake,
+    /// Park edge: `arg` units went quiescent this cycle.
+    Park,
+    /// Fast-forward jump; `cycle` is the launch cycle, `arg` the
+    /// number of idle cycles elided.
+    FfJump,
+    /// Checkpoint write span on the engine track.
+    Checkpoint,
+    /// Repartition epoch: `arg` units migrated.
+    Repart,
+}
+
+impl TraceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Work => "work",
+            TraceKind::Transfer => "transfer",
+            TraceKind::Barrier => "barrier",
+            TraceKind::Wake => "wake",
+            TraceKind::Park => "park",
+            TraceKind::FfJump => "ff-jump",
+            TraceKind::Checkpoint => "checkpoint",
+            TraceKind::Repart => "repartition",
+        }
+    }
+
+    /// Spans get Chrome `ph: "X"` (complete event); the rest are
+    /// instants (`ph: "i"`).
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            TraceKind::Work | TraceKind::Transfer | TraceKind::Barrier | TraceKind::Checkpoint
+        )
+    }
+
+    /// Exporter key for `arg` in the event's `args` map.
+    pub fn arg_key(self) -> &'static str {
+        match self {
+            TraceKind::Work => "ticks",
+            TraceKind::Wake | TraceKind::Park => "units",
+            TraceKind::FfJump => "skipped",
+            TraceKind::Repart => "moves",
+            _ => "n",
+        }
+    }
+}
+
+/// One fixed-size trace record. Timestamps are wall-clock nanoseconds
+/// since the run's origin ([`Tracer::now_ns`]); `cycle` ties the event
+/// back to simulated time.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    /// Start (spans) or occurrence (instants), ns since run origin.
+    pub t_ns: u64,
+    /// Span duration in ns; 0 for instants.
+    pub dur_ns: u64,
+    /// Simulated cycle the event belongs to.
+    pub cycle: u64,
+    /// Kind-specific payload (see [`TraceKind::arg_key`]).
+    pub arg: u64,
+}
+
+impl TraceEvent {
+    pub fn span(kind: TraceKind, start_ns: u64, end_ns: u64, cycle: u64, arg: u64) -> Self {
+        TraceEvent {
+            kind,
+            t_ns: start_ns,
+            dur_ns: end_ns.saturating_sub(start_ns),
+            cycle,
+            arg,
+        }
+    }
+
+    pub fn instant(kind: TraceKind, t_ns: u64, cycle: u64, arg: u64) -> Self {
+        TraceEvent {
+            kind,
+            t_ns,
+            dur_ns: 0,
+            cycle,
+            arg,
+        }
+    }
+}
+
+/// A bounded single-writer ring: events append until the buffer is
+/// full, then drop (counted). Keeping the *head* of the run rather than
+/// a sliding tail makes small-buffer runs deterministic to test and
+/// never allocates after construction.
+#[derive(Debug)]
+pub struct TraceBuf {
+    events: Vec<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl TraceBuf {
+    fn new(cap: usize) -> Self {
+        TraceBuf {
+            events: Vec::with_capacity(cap),
+            cap,
+            dropped: 0,
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// The shared tracing handle: one enable flag, one clock origin, one
+/// ring per track. Track 0 is the engine/scheduler (the whole trace for
+/// serial engines); track `1 + w` belongs to ladder worker `w`.
+pub struct Tracer {
+    enabled: AtomicBool,
+    origin: Instant,
+    bufs: Vec<UnsafeCell<TraceBuf>>,
+}
+
+// SAFETY: each track's ring is written by exactly one thread (the
+// track's owner, per the module docs) and read only after the worker
+// scope has joined, via `&mut self` accessors. The only shared-write
+// state is the `enabled` atomic.
+unsafe impl Sync for Tracer {}
+
+impl Tracer {
+    /// `tracks` rings of `capacity` events each (both clamped to ≥ 1).
+    pub fn new(tracks: usize, capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        Tracer {
+            enabled: AtomicBool::new(true),
+            origin: Instant::now(),
+            bufs: (0..tracks.max(1))
+                .map(|_| UnsafeCell::new(TraceBuf::new(cap)))
+                .collect(),
+        }
+    }
+
+    /// The hot-loop gate: one relaxed load, one branch.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Wall-clock ns since the tracer was created.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    pub fn tracks(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Record an event on `track`.
+    ///
+    /// # Safety
+    /// The caller must be the sole thread recording into `track` (the
+    /// track's owning worker/scheduler thread), and `track` must be
+    /// `< self.tracks()`.
+    #[inline]
+    pub unsafe fn rec(&self, track: usize, ev: TraceEvent) {
+        (*self.bufs[track].get()).push(ev);
+    }
+
+    /// Post-run access to one track's ring (`&mut self` proves the
+    /// worker scope has joined).
+    pub fn buf(&mut self, track: usize) -> &TraceBuf {
+        self.bufs[track].get_mut()
+    }
+
+    /// Total events retained across all tracks.
+    pub fn total_events(&mut self) -> u64 {
+        self.bufs
+            .iter_mut()
+            .map(|b| b.get_mut().events.len() as u64)
+            .sum()
+    }
+
+    /// Total events dropped (rings full) across all tracks.
+    pub fn total_dropped(&mut self) -> u64 {
+        self.bufs.iter_mut().map(|b| b.get_mut().dropped).sum()
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("enabled", &self.on())
+            .field("tracks", &self.bufs.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_past_capacity_and_counts() {
+        let mut tr = Tracer::new(1, 2);
+        assert!(tr.on());
+        for i in 0..5 {
+            // SAFETY: single-threaded test; track 0 exists.
+            unsafe { tr.rec(0, TraceEvent::instant(TraceKind::Wake, i, i, 1)) };
+        }
+        assert_eq!(tr.buf(0).events().len(), 2, "bounded at capacity");
+        assert_eq!(tr.buf(0).dropped(), 3, "overflow counted");
+        assert_eq!(tr.total_events(), 2);
+        assert_eq!(tr.total_dropped(), 3);
+    }
+
+    #[test]
+    fn spans_have_saturating_duration() {
+        let ev = TraceEvent::span(TraceKind::Work, 100, 80, 7, 3);
+        assert_eq!(ev.dur_ns, 0, "clock went backwards -> clamp, not wrap");
+        let ev = TraceEvent::span(TraceKind::Work, 100, 250, 7, 3);
+        assert_eq!(ev.dur_ns, 150);
+        assert!(TraceKind::Work.is_span());
+        assert!(!TraceKind::FfJump.is_span());
+    }
+
+    #[test]
+    fn enable_flag_gates() {
+        let tr = Tracer::new(2, 4);
+        tr.set_enabled(false);
+        assert!(!tr.on());
+        tr.set_enabled(true);
+        assert!(tr.on());
+    }
+}

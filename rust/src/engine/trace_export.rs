@@ -1,0 +1,179 @@
+//! Post-run trace exporter: [`Tracer`] ring buffers → Chrome
+//! `trace_event` JSON (the format Perfetto and `chrome://tracing`
+//! open natively).
+//!
+//! Layout: one process (`pid` 0, named `scalesim`), one thread per
+//! track — `tid` 0 is the engine/scheduler track (the whole trace for
+//! the serial engines), `tid 1 + w` is ladder worker `w`'s cluster
+//! track. Spans emit complete events (`ph: "X"`), edges and jumps emit
+//! thread-scoped instants (`ph: "i"`). Timestamps are microseconds
+//! (the format's unit) at nanosecond precision; every event carries
+//! the simulated `cycle` in its `args` so wall time and simulated time
+//! can be cross-read on the timeline.
+//!
+//! The export runs strictly after the worker scope has joined (the
+//! `&mut Tracer` receiver enforces exclusive access), so it reads the
+//! rings without synchronization.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::engine::trace::{TraceBuf, Tracer};
+use crate::util::json::json_escape;
+
+/// Serialize all tracks to a Chrome `trace_event` JSON document.
+/// `meta` key/value pairs land in `otherData` (scenario, engine, …).
+pub fn chrome_json(tracer: &mut Tracer, meta: &[(&str, String)]) -> String {
+    let tracks = tracer.tracks();
+    let events = tracer.total_events();
+    let dropped = tracer.total_dropped();
+
+    let mut out = String::with_capacity(256 + events as usize * 140);
+    out.push_str("{\n\"displayTimeUnit\": \"ms\",\n\"otherData\": {");
+    for (k, v) in meta {
+        out.push_str(&format!("\"{}\": \"{}\", ", json_escape(k), json_escape(v)));
+    }
+    out.push_str(&format!(
+        "\"trace_events\": {events}, \"trace_dropped\": {dropped}}},\n\"traceEvents\": [\n"
+    ));
+
+    // Track metadata: process name plus one named thread per track.
+    out.push_str(
+        "{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": 0, \
+         \"args\": {\"name\": \"scalesim\"}}",
+    );
+    for t in 0..tracks {
+        let label = track_label(t, tracks);
+        out.push_str(&format!(
+            ",\n{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": 0, \"tid\": {t}, \
+             \"args\": {{\"name\": \"{label}\"}}}}"
+        ));
+    }
+
+    for t in 0..tracks {
+        let buf: &TraceBuf = tracer.buf(t);
+        for ev in buf.events() {
+            let ts = ev.t_ns as f64 / 1000.0;
+            let key = ev.kind.arg_key();
+            if ev.kind.is_span() {
+                let dur = ev.dur_ns as f64 / 1000.0;
+                out.push_str(&format!(
+                    ",\n{{\"name\": \"{}\", \"cat\": \"sim\", \"ph\": \"X\", \
+                     \"pid\": 0, \"tid\": {t}, \"ts\": {ts:.3}, \"dur\": {dur:.3}, \
+                     \"args\": {{\"cycle\": {}, \"{key}\": {}}}}}",
+                    ev.kind.name(),
+                    ev.cycle,
+                    ev.arg,
+                ));
+            } else {
+                out.push_str(&format!(
+                    ",\n{{\"name\": \"{}\", \"cat\": \"sim\", \"ph\": \"i\", \"s\": \"t\", \
+                     \"pid\": 0, \"tid\": {t}, \"ts\": {ts:.3}, \
+                     \"args\": {{\"cycle\": {}, \"{key}\": {}}}}}",
+                    ev.kind.name(),
+                    ev.cycle,
+                    ev.arg,
+                ));
+            }
+        }
+    }
+
+    out.push_str("\n]\n}\n");
+    out
+}
+
+/// Write the Chrome-trace document to `path`.
+pub fn write_chrome(
+    path: &Path,
+    tracer: &mut Tracer,
+    meta: &[(&str, String)],
+) -> Result<(), String> {
+    let doc = chrome_json(tracer, meta);
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| format!("trace: create {}: {e}", path.display()))?;
+    f.write_all(doc.as_bytes())
+        .and_then(|()| f.flush())
+        .map_err(|e| format!("trace: write {}: {e}", path.display()))
+}
+
+/// Derive a per-run trace filename from a base path and a tag:
+/// `trace.json` + `ladder_2w` → `trace_ladder_2w.json`. Tags are
+/// sanitized to `[A-Za-z0-9._-]` so sweep cell keys (which contain
+/// `=` and `,`) stay filesystem-safe.
+pub fn suffixed_path(path: &Path, tag: &str) -> std::path::PathBuf {
+    let clean: String = tag
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    let ext = path.extension().and_then(|s| s.to_str()).unwrap_or("json");
+    path.with_file_name(format!("{stem}_{clean}.{ext}"))
+}
+
+fn track_label(track: usize, tracks: usize) -> String {
+    match (track, tracks) {
+        (0, 1) => "serial".to_string(),
+        (0, _) => "engine".to_string(),
+        (t, _) => format!("cluster {}", t - 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::trace::{TraceEvent, TraceKind};
+
+    #[test]
+    fn exports_tracks_spans_and_instants() {
+        let mut tr = Tracer::new(3, 16);
+        // SAFETY: single-threaded test; tracks 0..3 exist.
+        unsafe {
+            tr.rec(0, TraceEvent::span(TraceKind::Barrier, 1000, 2500, 4, 0));
+            tr.rec(0, TraceEvent::instant(TraceKind::FfJump, 2600, 5, 120));
+            tr.rec(1, TraceEvent::span(TraceKind::Work, 1100, 1400, 4, 9));
+            tr.rec(2, TraceEvent::instant(TraceKind::Park, 1500, 4, 2));
+        }
+        let doc = chrome_json(&mut tr, &[("scenario", "tree".to_string())]);
+        assert!(doc.contains("\"thread_name\""));
+        assert!(doc.contains("\"name\": \"engine\""));
+        assert!(doc.contains("\"name\": \"cluster 0\""));
+        assert!(doc.contains("\"name\": \"cluster 1\""));
+        assert!(doc.contains("\"name\": \"barrier\""));
+        assert!(doc.contains("\"name\": \"ff-jump\""));
+        assert!(doc.contains("\"skipped\": 120"));
+        assert!(doc.contains("\"ticks\": 9"));
+        assert!(doc.contains("\"trace_events\": 4"));
+        assert!(doc.contains("\"ts\": 1.000")); // 1000 ns = 1.000 us
+        // Balanced delimiters as a cheap well-formedness check; the
+        // integration test parses the document properly.
+        let opens = doc.matches('{').count();
+        let closes = doc.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn suffixed_path_sanitizes_tags() {
+        let p = std::path::Path::new("out/trace.json");
+        let s = suffixed_path(p, "pipeline,w=2/full");
+        assert_eq!(s, std::path::Path::new("out/trace_pipeline_w_2_full.json"));
+        let bare = suffixed_path(std::path::Path::new("t.json"), "ladder_2w");
+        assert_eq!(bare, std::path::Path::new("t_ladder_2w.json"));
+    }
+
+    #[test]
+    fn serial_single_track_label() {
+        let mut tr = Tracer::new(1, 4);
+        unsafe {
+            tr.rec(0, TraceEvent::span(TraceKind::Work, 0, 10, 0, 1));
+        }
+        let doc = chrome_json(&mut tr, &[]);
+        assert!(doc.contains("\"name\": \"serial\""));
+        assert!(!doc.contains("cluster"));
+    }
+}

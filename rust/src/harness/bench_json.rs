@@ -17,7 +17,9 @@
 //! does not fit IEEE doubles losslessly).
 
 use super::fig12_13::{default_oltp, profile_costs, resolve_partition};
+use crate::engine::trace_export::suffixed_path;
 use crate::engine::{Engine, RepartitionPolicy, SchedMode, Sim, Stop};
+use crate::util::json::{finite, json_str};
 use crate::sched::PartitionStrategy;
 use crate::stats::RunStats;
 use crate::sync::SyncMethod;
@@ -56,6 +58,10 @@ pub struct BenchRow {
     pub credits_stalled: u64,
     /// Arbiter grants issued (`flow.arb_grants`; 0 without arbiters).
     pub arb_grants: u64,
+    /// Trace events captured (`trace.events`; 0 when tracing was off).
+    pub trace_events: u64,
+    /// Trace events dropped on full ring buffers (`trace.dropped`).
+    pub trace_dropped: u64,
     pub fingerprint: u64,
 }
 
@@ -93,6 +99,8 @@ impl BenchRow {
             ff_jumps: s.ff_jumps,
             credits_stalled: s.counters.get("flow.credits_stalled"),
             arb_grants: s.counters.get("flow.arb_grants"),
+            trace_events: s.counters.get("trace.events"),
+            trace_dropped: s.counters.get("trace.dropped"),
             fingerprint: s.fingerprint,
         }
     }
@@ -144,15 +152,15 @@ impl LadderBench {
     pub fn to_json(&self) -> String {
         let mut s = String::with_capacity(1024);
         s.push_str("{\n");
-        s.push_str(&format!("  \"model\": \"{}\",\n", self.model));
-        s.push_str(&format!("  \"scenario\": \"{}\",\n", self.scenario));
+        s.push_str(&format!("  \"model\": {},\n", json_str(self.model)));
+        s.push_str(&format!("  \"scenario\": {},\n", json_str(&self.scenario)));
         s.push_str(&format!("  \"cores\": {},\n", self.cores));
         s.push_str(&format!("  \"units\": {},\n", self.units));
-        s.push_str(&format!("  \"strategy\": \"{}\",\n", self.strategy));
+        s.push_str(&format!("  \"strategy\": {},\n", json_str(&self.strategy)));
         s.push_str(&format!(
             "  \"repartition_policy\": {},\n",
             match &self.repartition_policy {
-                Some(p) => format!("\"{p}\""),
+                Some(p) => json_str(p),
                 None => "null".to_string(),
             }
         ));
@@ -162,7 +170,7 @@ impl LadderBench {
         ));
         s.push_str(&format!(
             "  \"speedup_active_vs_full\": {:.4},\n",
-            self.speedup_active_vs_full()
+            finite(self.speedup_active_vs_full())
         ));
         s.push_str("  \"rows\": [\n");
         for (i, r) in self.rows.iter().enumerate() {
@@ -174,24 +182,27 @@ impl LadderBench {
                  \"repartition_events\": {}, \"cross_cluster_ports\": {}, \
                  \"skipped_cycles\": {}, \"ff_jumps\": {}, \
                  \"credits_stalled\": {}, \"arb_grants\": {}, \
+                 \"trace_events\": {}, \"trace_dropped\": {}, \
                  \"fingerprint\": \"{:#018x}\"}}{}\n",
                 r.engine,
                 r.sched,
                 r.workers,
                 r.cycles,
                 r.wall_ns,
-                r.cycles_per_sec,
+                finite(r.cycles_per_sec),
                 r.sync_ops,
                 r.work_ns,
                 r.transfer_ns,
                 r.barrier_ns,
-                r.active_ratio,
+                finite(r.active_ratio),
                 r.repartition_events,
                 r.cross_cluster_ports,
                 r.skipped_cycles,
                 r.ff_jumps,
                 r.credits_stalled,
                 r.arb_grants,
+                r.trace_events,
+                r.trace_dropped,
                 r.fingerprint,
                 if i + 1 < self.rows.len() { "," } else { "" },
             ));
@@ -208,11 +219,14 @@ impl LadderBench {
 /// Run the benchmark matrix on the OLTP light-CPU model. When `repart`
 /// is set, every ladder row runs with adaptive repartitioning (the
 /// serial rows are the fixed reference — fingerprints must still agree).
+/// `trace` is a `(base_path, ring_capacity)` pair (capacity 0 = engine
+/// default); each row writes `base_<engine>_<sched>_<N>w.json`.
 pub fn run_oltp_light(
     cores: usize,
     worker_counts: &[usize],
     strategy: Option<PartitionStrategy>,
     repart: Option<RepartitionPolicy>,
+    trace: Option<(&std::path::Path, usize)>,
 ) -> LadderBench {
     let cfg = CpuSystemCfg {
         kind: CoreKind::Light,
@@ -235,14 +249,19 @@ pub fn run_oltp_light(
             target: cores as u64,
             max_cycles: 5_000_000,
         };
-        let report = Sim::from_model(model)
+        let mut sim = Sim::from_model(model)
             .stop(stop)
             .sched(sched)
             .timed()
             .fingerprinted()
-            .engine(Engine::Serial)
-            .run()
-            .expect("serial bench row");
+            .engine(Engine::Serial);
+        if let Some((base, cap)) = trace {
+            sim = sim.trace(suffixed_path(base, &format!("serial_{}_1w", sched.name())));
+            if cap > 0 {
+                sim = sim.trace_buf(cap);
+            }
+        }
+        let report = sim.run().expect("serial bench row");
         rows.push(BenchRow::from_stats("serial", sched, 1, units, &report.stats));
     }
     let units = seen_units.expect("serial rows always run");
@@ -267,6 +286,12 @@ pub fn run_oltp_light(
                 .engine(Engine::Ladder);
             if let Some(p) = repart {
                 sim = sim.repartition(p);
+            }
+            if let Some((base, cap)) = trace {
+                sim = sim.trace(suffixed_path(base, &format!("ladder_{}_{w}w", sched.name())));
+                if cap > 0 {
+                    sim = sim.trace_buf(cap);
+                }
             }
             let report = sim.run().expect("ladder bench row");
             rows.push(BenchRow::from_stats("ladder", sched, w, units, &report.stats));
@@ -362,7 +387,7 @@ mod tests {
 
     #[test]
     fn bench_report_is_consistent_and_serializes() {
-        let b = run_oltp_light(2, &[2], None, Some(RepartitionPolicy::every(256)));
+        let b = run_oltp_light(2, &[2], None, Some(RepartitionPolicy::every(256)), None);
         assert_eq!(b.rows.len(), 4, "2 serial + 2 ladder rows");
         assert!(
             b.fingerprints_agree(),
@@ -419,7 +444,7 @@ mod tests {
 
     #[test]
     fn bench_report_carries_the_adaptive_policy() {
-        let b = run_oltp_light(2, &[2], None, Some(RepartitionPolicy::adaptive()));
+        let b = run_oltp_light(2, &[2], None, Some(RepartitionPolicy::adaptive()), None);
         assert!(b.fingerprints_agree(), "adaptive rows must not diverge");
         let json = b.to_json();
         assert!(

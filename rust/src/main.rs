@@ -49,12 +49,15 @@ fn usage() -> ! {
          \x20                [--inject KIND@CYCLE:ARG,...] (panic@C:U stall@C:U\n\
          \x20                 delay@C:W:MS — deterministic fault injection)\n\
          \x20                [--epoch-budget-ms N] (stall watchdog wall budget)\n\
+         \x20                [--trace FILE [--trace-buf N]] (Chrome trace_event\n\
+         \x20                 JSON, open in Perfetto; N events per track ring)\n\
          \x20 sweep          --scenario NAME[,NAME] [--set \"k=1,2,4;j=1..64:*2\"]\n\
          \x20                [--workers 1,2,4] [--strategy S,S] [--sched full,active]\n\
          \x20                [--sync M,M] [--repartition \"off;64;adaptive\"]\n\
          \x20                [--ff on;off] (fast-forward axis; default on)\n\
          \x20                [--out results.jsonl] [--jobs N] [--cores N]\n\
          \x20                [--frontier] [--dry-run] [--inject SPEC]\n\
+         \x20                [--trace FILE [--trace-buf N]] (per-cell suffixed files)\n\
          \x20                (resume: rerun the same spec with the same --out)\n\
          \x20                --summarize FILE [--bench-out BENCH.json\n\
          \x20                 [--bench-scenario NAME]]\n\
@@ -63,6 +66,8 @@ fn usage() -> ! {
          \x20                [--sched full|active]\n\
          \x20                [--repartition N[,HYST[,MOVES]] | adaptive[,DRIFT[,CHECK]]]\n\
          \x20                [--bench-json BENCH_ladder.json]\n\
+         \x20                [--trace FILE [--trace-buf N]] (per-row suffixed files;\n\
+         \x20                 needs --bench-json)\n\
          \x20 ooo            [--cores N] [--workers 1,2,4,8] [--workload oltp|stream|chase|compute|branchy]\n\
          \x20 datacenter     [--k N] [--packets N] [--window N] [--workers 1,2,...,24] [--paper-scale]\n\
          \x20 ablation       [--cores N]\n\
@@ -80,7 +85,7 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         &[
             "scenario", "workers", "engine", "sync", "spin", "strategy", "sched", "cycles",
             "seed", "set", "json", "repartition", "checkpoint", "checkpoint-every", "restore",
-            "inject", "epoch-budget-ms", "ff",
+            "inject", "epoch-budget-ms", "ff", "trace", "trace-buf",
         ],
         &["list-scenarios", "verbose", "timed", "fingerprint", "counters"],
     )?;
@@ -179,6 +184,16 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
             ..Watchdog::default()
         });
     }
+    match (c.get("trace"), c.get("trace-buf")) {
+        (Some(path), buf) => {
+            sim = sim.trace(path);
+            if buf.is_some() {
+                sim = sim.trace_buf(c.get_usize("trace-buf", 0)?.max(1));
+            }
+        }
+        (None, Some(_)) => return Err("--trace-buf needs --trace FILE".to_string()),
+        (None, None) => {}
+    }
     let report = sim.run()?;
     println!("{}", report.summary());
     if report.stats.fingerprint != 0 {
@@ -195,6 +210,13 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
                 e.cycle, e.imbalance_before, e.imbalance_after, e.moves
             );
         }
+    }
+    if let Some(path) = c.get("trace") {
+        println!(
+            "# trace: {} events, {} dropped -> {path}",
+            report.stats.counters.get("trace.events"),
+            report.stats.counters.get("trace.dropped")
+        );
     }
     if c.flag("counters")? {
         print!("{}", report.stats.counters);
@@ -214,6 +236,7 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         &[
             "scenario", "set", "workers", "strategy", "sched", "sync", "repartition", "ff",
             "out", "jobs", "cores", "inject", "summarize", "bench-out", "bench-scenario",
+            "trace", "trace-buf",
         ],
         &["frontier", "dry-run"],
     )?;
@@ -267,6 +290,9 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         spec.ffs_from(f)?;
     }
 
+    if c.get("trace").is_none() && c.get("trace-buf").is_some() {
+        return Err("--trace-buf needs --trace FILE".to_string());
+    }
     let opts = sweep::SweepOpts {
         out: std::path::PathBuf::from(c.get_or("out", "sweep_results.jsonl")),
         jobs: c.get_usize("jobs", 0)?,
@@ -275,6 +301,8 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         inject: c.get("inject").map(str::to_string),
         dry_run: c.flag("dry-run")?,
         score: None,
+        trace: c.get("trace").map(std::path::PathBuf::from),
+        trace_buf: c.get_usize("trace-buf", 0)?,
     };
     let outcome = sweep::run_sweep(&spec, &opts)?;
     println!("{}", outcome.summary_line(&opts.out));
@@ -300,6 +328,7 @@ fn cmd_oltp_light(argv: &[String]) -> Result<(), String> {
         argv,
         &[
             "cores", "workers", "strategy", "barrier", "sched", "repartition", "bench-json",
+            "trace", "trace-buf",
         ],
         &[],
     )?;
@@ -327,10 +356,24 @@ fn cmd_oltp_light(argv: &[String]) -> Result<(), String> {
     );
     let out = fig12_13::run_with(cores, &workers, &barrier, strategy, sched, repart);
     fig12_13::print(&out);
+    let trace = match (c.get("trace"), c.get("trace-buf")) {
+        (Some(p), _) => Some((std::path::PathBuf::from(p), c.get_usize("trace-buf", 0)?)),
+        (None, Some(_)) => return Err("--trace-buf needs --trace FILE".to_string()),
+        (None, None) => None,
+    };
+    if trace.is_some() && c.get("bench-json").is_none() {
+        return Err("oltp-light traces the bench matrix; --trace needs --bench-json".to_string());
+    }
     // Perf trajectory artifact: full engine/sched matrix with fingerprints.
     if let Some(path) = c.get("bench-json") {
         println!("# measuring active-vs-full matrix for {path} ...");
-        let bench = bench_json::run_oltp_light(cores, &workers, strategy, repart);
+        let bench = bench_json::run_oltp_light(
+            cores,
+            &workers,
+            strategy,
+            repart,
+            trace.as_ref().map(|(p, n)| (p.as_path(), *n)),
+        );
         bench_json::print(&bench);
         bench
             .write_file(std::path::Path::new(path))

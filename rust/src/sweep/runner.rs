@@ -20,6 +20,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::engine::trace_export;
 use crate::engine::{FaultPlan, RunReport, Sim};
 use crate::sched::PartitionStrategy;
 use crate::sweep::plan::{plan, Cell, Frontier};
@@ -44,6 +45,11 @@ pub struct SweepOpts {
     /// Frontier score override (tests pin pruning on a fixed cost
     /// table); `None` scores by simulated cycles per second.
     pub score: Option<fn(&Cell, &RunReport) -> f64>,
+    /// Trace-file base path: each cell writes a Chrome trace to
+    /// `base_<cellkey>.json` ([`trace_export::suffixed_path`]).
+    pub trace: Option<PathBuf>,
+    /// Per-track ring capacity for traced cells; 0 = engine default.
+    pub trace_buf: usize,
 }
 
 impl Default for SweepOpts {
@@ -56,6 +62,8 @@ impl Default for SweepOpts {
             inject: None,
             dry_run: false,
             score: None,
+            trace: None,
+            trace_buf: 0,
         }
     }
 }
@@ -284,6 +292,12 @@ fn run_cell(
         .fingerprinted();
     if let Some(inj) = &opts.inject {
         sim = sim.inject(FaultPlan::parse(inj)?);
+    }
+    if let Some(base) = &opts.trace {
+        sim = sim.trace(trace_export::suffixed_path(base, &cell.key));
+        if opts.trace_buf > 0 {
+            sim = sim.trace_buf(opts.trace_buf);
+        }
     }
     sim.run()
 }

@@ -28,22 +28,10 @@ use crate::engine::{Engine, RunReport, SchedMode};
 use crate::harness::bench_json::{BenchRow, LadderBench};
 use crate::sweep::plan::Cell;
 
-/// Escape a string for embedding in a JSON string literal.
-pub fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
+/// Escape a string for embedding in a JSON string literal. Re-exported
+/// from the shared implementation so all three emitters (this writer,
+/// `RunReport::to_json`, `harness::bench_json`) escape identically.
+pub use crate::util::json::json_escape;
 
 /// The shared row prefix: cell key first (the resume contract), then
 /// the full configuration echo.
@@ -391,6 +379,8 @@ fn parse_report_row(rep: &str) -> Option<BenchRow> {
         ff_jumps: num_field(rep, "ff_jumps").unwrap_or(0.0) as u64,
         credits_stalled: num_field(rep, "credits_stalled").unwrap_or(0.0) as u64,
         arb_grants: num_field(rep, "arb_grants").unwrap_or(0.0) as u64,
+        trace_events: num_field(rep, "trace_events").unwrap_or(0.0) as u64,
+        trace_dropped: num_field(rep, "trace_dropped").unwrap_or(0.0) as u64,
         fingerprint,
     })
 }

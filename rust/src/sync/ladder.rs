@@ -36,6 +36,7 @@ use crate::engine::active::{ActiveState, SchedMode};
 use crate::engine::model::{ff_jump_target, FfScan, Model, RunOpts};
 use crate::engine::repart::{ClusterState, CostSamples, RepartitionPolicy, Repartitioner};
 use crate::engine::supervise::{panic_message, SimError, SimPhase, SuperviseOpts};
+use crate::engine::trace::{TraceEvent, TraceKind, Tracer};
 use crate::stats::{PhaseTimers, RepartStats, RunStats};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -340,7 +341,7 @@ pub(crate) fn run_ladder(
     partition: &[Vec<u32>],
     opts: &ParallelOpts,
 ) -> RunStats {
-    run_ladder_supervised(model, partition, opts, &SuperviseOpts::none())
+    run_ladder_supervised(model, partition, opts, &SuperviseOpts::none(), None)
         .unwrap_or_else(|e| panic!("{e}"))
 }
 
@@ -366,6 +367,7 @@ pub(crate) fn run_ladder_supervised(
     partition: &[Vec<u32>],
     opts: &ParallelOpts,
     sup: &SuperviseOpts,
+    tracer: Option<&Tracer>,
 ) -> Result<RunStats, SimError> {
     let workers = partition.len();
     assert!(workers >= 1, "need at least one worker cluster");
@@ -443,11 +445,20 @@ pub(crate) fn run_ladder_supervised(
                 // because the scheduler may rewrite them between cycles
                 // (adaptive repartitioning) while this worker is parked.
                 let do_work = |cycle: u64, t: &mut PhaseTimers| unsafe {
+                    // SAFETY (trace, throughout this closure and
+                    // `do_transfer`): track `1 + w` is recorded only by
+                    // this worker thread.
+                    let trc = tracer.filter(|tr| tr.on());
+                    let tr_w0 = trc.map(|tr| tr.now_ns());
+                    let ticks0 = t.unit_ticks;
                     let dirty = clusters.dirty(w);
                     match sched {
                         SchedMode::ActiveList => {
                             let active = clusters.active(w);
+                            let before_wakes = active.len();
                             active_state.drain_wakes(w, active);
+                            let woke = (active.len() - before_wakes) as u64;
+                            let before_work = active.len();
                             t.unit_ticks += model_ref.work_active(
                                 active,
                                 cycle,
@@ -456,6 +467,31 @@ pub(crate) fn run_ladder_supervised(
                                 w,
                                 samples_ref,
                             );
+                            if let Some(tr) = trc {
+                                if woke > 0 {
+                                    tr.rec(
+                                        1 + w,
+                                        TraceEvent::instant(
+                                            TraceKind::Wake,
+                                            tr.now_ns(),
+                                            cycle,
+                                            woke,
+                                        ),
+                                    );
+                                }
+                                let parked = (before_work - active.len()) as u64;
+                                if parked > 0 {
+                                    tr.rec(
+                                        1 + w,
+                                        TraceEvent::instant(
+                                            TraceKind::Park,
+                                            tr.now_ns(),
+                                            cycle,
+                                            parked,
+                                        ),
+                                    );
+                                }
+                            }
                         }
                         SchedMode::FullScan => {
                             let units = clusters.units(w);
@@ -465,12 +501,26 @@ pub(crate) fn run_ladder_supervised(
                             t.unit_ticks += units.len() as u64;
                         }
                     }
+                    if let (Some(tr), Some(w0)) = (trc, tr_w0) {
+                        tr.rec(
+                            1 + w,
+                            TraceEvent::span(
+                                TraceKind::Work,
+                                w0,
+                                tr.now_ns(),
+                                cycle,
+                                t.unit_ticks - ticks0,
+                            ),
+                        );
+                    }
                 };
                 // One transfer phase over this cluster's dirty ports.
                 // SAFETY (both arms): the worklist holds only ports whose
                 // sender is in this cluster; wake posts go through this
                 // cluster's single-writer boxes.
                 let do_transfer = |cycle: u64, t: &mut PhaseTimers| unsafe {
+                    let trc = tracer.filter(|tr| tr.on());
+                    let tr_t0 = trc.map(|tr| tr.now_ns());
                     let dirty = clusters.dirty(w);
                     match sched {
                         SchedMode::ActiveList => {
@@ -482,6 +532,12 @@ pub(crate) fn run_ladder_supervised(
                             t.port_walks += dirty.len() as u64;
                             model_ref.transfer_dirty(dirty, cycle);
                         }
+                    }
+                    if let (Some(tr), Some(x0)) = (trc, tr_t0) {
+                        tr.rec(
+                            1 + w,
+                            TraceEvent::span(TraceKind::Transfer, x0, tr.now_ns(), cycle, 0),
+                        );
                     }
                 };
                 // Paper Fig 7: wait(WORK); unlock(PHASE1).
@@ -674,6 +730,7 @@ pub(crate) fn run_ladder_supervised(
             // snapshot.
             if let Some(ck) = sup.checkpoint.as_ref() {
                 if Model::checkpoint_due(ck, cycle, start_cycle) {
+                    let tr_ck = tracer.filter(|tr| tr.on()).map(|tr| (tr, tr.now_ns()));
                     // SAFETY: exclusive window; rebuild normalizes the
                     // pending wake boxes into flags first (fingerprint-
                     // invariant), so the snapshot observes canonical
@@ -692,6 +749,16 @@ pub(crate) fn run_ladder_supervised(
                             repart_resume,
                         )
                     };
+                    if let Some((tr, ck0)) = tr_ck {
+                        // SAFETY: track 0 is recorded only by this
+                        // scheduler thread.
+                        unsafe {
+                            tr.rec(
+                                0,
+                                TraceEvent::span(TraceKind::Checkpoint, ck0, tr.now_ns(), cycle, 0),
+                            )
+                        };
+                    }
                     if let Err(msg) = res {
                         record_first(
                             &failure,
@@ -732,6 +799,7 @@ pub(crate) fn run_ladder_supervised(
                 }
             }
             if let Some(rp) = repartitioner.as_mut() {
+                let events_before = rp.stats.events;
                 // SAFETY: same exclusive window as the stop check.
                 unsafe {
                     rp.maybe_repartition(
@@ -741,6 +809,19 @@ pub(crate) fn run_ladder_supervised(
                         &active_state,
                         cycle,
                     );
+                }
+                if rp.stats.events > events_before {
+                    if let Some(tr) = tracer.filter(|tr| tr.on()) {
+                        let moves = rp.stats.epochs.last().map_or(0, |ep| ep.moves as u64);
+                        // SAFETY: track 0 is recorded only by this
+                        // scheduler thread.
+                        unsafe {
+                            tr.rec(
+                                0,
+                                TraceEvent::instant(TraceKind::Repart, tr.now_ns(), cycle, moves),
+                            )
+                        };
+                    }
                 }
             }
             // Idle-cycle fast-forward (DESIGN.md §2f): with every dirty
@@ -783,6 +864,21 @@ pub(crate) fn run_ladder_supervised(
                         ff_jumps += 1;
                         stall_streak = 0;
                         jumped = true;
+                        if let Some(tr) = tracer.filter(|tr| tr.on()) {
+                            // SAFETY: track 0 is recorded only by this
+                            // scheduler thread.
+                            unsafe {
+                                tr.rec(
+                                    0,
+                                    TraceEvent::instant(
+                                        TraceKind::FfJump,
+                                        tr.now_ns(),
+                                        cycle,
+                                        target - cycle,
+                                    ),
+                                )
+                            };
+                        }
                         cycle = target;
                         sched_cycles.store(cycle, Ordering::Relaxed);
                         continue;
@@ -790,12 +886,22 @@ pub(crate) fn run_ladder_supervised(
                 }
             }
             // tick():
+            let tr_b0 = tracer.filter(|tr| tr.on()).map(|tr| (tr, tr.now_ns()));
             gates.sched_close_transfer();
             gates.sched_open_work(cycle);
             gates.sched_wait_phase0();
             gates.sched_close_work();
             gates.sched_open_transfer(cycle);
             gates.sched_wait_phase1();
+            if let Some((tr, b0)) = tr_b0 {
+                // One engine-track span per barrier round: the full
+                // close-transfer → phase-1-drain tick.
+                // SAFETY: track 0 is recorded only by this scheduler
+                // thread.
+                unsafe {
+                    tr.rec(0, TraceEvent::span(TraceKind::Barrier, b0, tr.now_ns(), cycle, 0))
+                };
+            }
             cycle += 1;
             sched_cycles.store(cycle, Ordering::Relaxed);
         }

@@ -1,0 +1,70 @@
+//! Shared helpers for the crate's hand-rolled JSON emitters.
+//!
+//! The crate is dependency-free, so every JSON record — `RunReport`,
+//! BENCH rows, sweep JSONL, trace export — is assembled with `format!`.
+//! That is fine for numbers but has two classic failure modes this
+//! module centralizes the fix for:
+//!
+//! - **Unescaped strings**: a scenario or strategy name containing `"`
+//!   or `\` corrupts the record. [`json_escape`] (hoisted from the sweep
+//!   writer, which always escaped) is now the single implementation all
+//!   emitters share.
+//! - **Non-finite floats**: `format!("{:.1}", f64::INFINITY)` prints
+//!   `inf`, which is not JSON. [`finite`] clamps `inf`/`NaN` rates to
+//!   0.0 at the emitter so degenerate runs (zero cycles, zero wall)
+//!   still produce parseable records.
+
+/// Escape a string for embedding inside a JSON string literal (quotes
+/// not included). Handles `"`, `\`, and control characters.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A complete JSON string literal: `json_str(r#"a"b"#)` → `"a\"b"`.
+pub fn json_str(s: &str) -> String {
+    format!("\"{}\"", json_escape(s))
+}
+
+/// Clamp a rate/ratio to a finite value for `format!`-based emitters:
+/// `inf` and `NaN` (zero-cycle or zero-wall runs) become 0.0, which is
+/// both valid JSON and the honest value for a run that measured nothing.
+pub fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_quotes_backslashes_and_controls() {
+        assert_eq!(json_escape(r#"a"b\c"#), r#"a\"b\\c"#);
+        assert_eq!(json_escape("x\ny\t\u{1}"), "x\\ny\\t\\u0001");
+        assert_eq!(json_str(r#"we"ird"#), r#""we\"ird""#);
+    }
+
+    #[test]
+    fn finite_clamps_only_non_finite() {
+        assert_eq!(finite(1.5), 1.5);
+        assert_eq!(finite(0.0), 0.0);
+        assert_eq!(finite(f64::INFINITY), 0.0);
+        assert_eq!(finite(f64::NEG_INFINITY), 0.0);
+        assert_eq!(finite(f64::NAN), 0.0);
+    }
+}

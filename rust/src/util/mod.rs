@@ -6,4 +6,5 @@
 
 pub mod cli;
 pub mod config;
+pub mod json;
 pub mod rng;

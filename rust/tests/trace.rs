@@ -1,0 +1,565 @@
+//! The compiled-in tracing layer (DESIGN.md §2h), end to end:
+//!
+//! 1. Observer contract: tracing must not perturb the simulation.
+//!    Every (scenario, workers, sched) cell must produce bit-identical
+//!    fingerprints and cycle counts with tracing on and off.
+//! 2. Export shape: a traced 2-worker ladder run on the tree fabric
+//!    writes Chrome `trace_event` JSON that parses back with one named
+//!    track per worker plus the engine track, and carries at least one
+//!    barrier span and one fast-forward jump instant (the acceptance
+//!    criterion).
+//! 3. Bounded buffers: a tiny per-track ring must finish (never block
+//!    the hot loop), report `trace.dropped > 0`, and still export a
+//!    valid document.
+//! 4. Emitter hygiene: JSON emitters escape `"`/`\` in names and never
+//!    print non-finite floats (degenerate zero-cycle runs included).
+//!
+//! The parser here is a deliberately small recursive-descent JSON
+//! reader — the crate is dependency-free, and the exporter's output is
+//! machine-written with known shape; the point is that a *real* parser
+//! accepts it, not just substring checks.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use scalesim::engine::{Engine, SchedMode, Sim};
+use scalesim::util::config::Config;
+
+// ---------------------------------------------------------------------
+// Minimal JSON value + parser (tests only)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn parse(text: &'a str) -> Result<Json, String> {
+        let mut p = Parser {
+            b: text.as_bytes(),
+            i: 0,
+        };
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing garbage at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, self.i))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.b.get(self.i).copied()
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek().ok_or("unexpected end of input")? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.eat(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = *self
+                .b
+                .get(self.i)
+                .ok_or("unterminated string")?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = *self.b.get(self.i).ok_or("bad escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or("bad \\u escape")?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+                                16,
+                            )
+                            .map_err(|e| e.to_string())?;
+                            self.i += 4;
+                            s.push(char::from_u32(code).ok_or("bad \\u code point")?);
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    }
+                }
+                c if c < 0x80 => s.push(c as char),
+                _ => {
+                    // Multi-byte UTF-8: re-decode from the byte stream.
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    let chunk = self
+                        .b
+                        .get(start..start + len)
+                        .ok_or("truncated UTF-8")?;
+                    s.push_str(std::str::from_utf8(chunk).map_err(|e| e.to_string())?);
+                    self.i = start + len;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------
+
+fn cfg(pairs: &[(&str, &str)]) -> Config {
+    let mut c = Config::new();
+    for (k, v) in pairs {
+        c.set(k, v);
+    }
+    c
+}
+
+fn trace_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("scalesim_trace_{}_{}.json", tag, std::process::id()))
+}
+
+/// Apply one engine-topology cell to a session.
+fn topo(sim: Sim, workers: usize, sched: SchedMode) -> Sim {
+    let engine = if workers <= 1 {
+        Engine::Serial
+    } else {
+        Engine::Ladder
+    };
+    sim.workers(workers).engine(engine).sched(sched).fingerprinted()
+}
+
+/// The sparse tree fabric that drains early: exercises ff jumps,
+/// sleep/wake edges, and barriers all at once.
+fn tree_pairs() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("fanout", "4"),
+        ("depth", "3"),
+        ("packets", "2"),
+        ("cycles", "600"),
+    ]
+}
+
+fn pipeline_pairs() -> Vec<(&'static str, &'static str)> {
+    vec![("stages", "6"), ("messages", "40"), ("cycles", "300")]
+}
+
+// ---------------------------------------------------------------------
+// 1. Observer contract: tracing never changes the simulation
+// ---------------------------------------------------------------------
+
+fn assert_trace_parity(scenario: &str, pairs: &[(&str, &str)]) {
+    let c = cfg(pairs);
+    for workers in [1usize, 2, 4] {
+        for sched in [SchedMode::FullScan, SchedMode::ActiveList] {
+            let cell = format!("{scenario}: workers={workers} sched={}", sched.name());
+            let plain = topo(Sim::scenario(scenario, &c).unwrap(), workers, sched)
+                .run()
+                .unwrap_or_else(|e| panic!("{cell} untraced: {e}"));
+            let path = trace_path(&format!("parity_{scenario}_{workers}_{}", sched.name()));
+            let traced = topo(Sim::scenario(scenario, &c).unwrap(), workers, sched)
+                .trace(&path)
+                .run()
+                .unwrap_or_else(|e| panic!("{cell} traced: {e}"));
+            assert_ne!(plain.fingerprint(), 0, "{cell}: no fingerprint");
+            assert_eq!(
+                traced.fingerprint(),
+                plain.fingerprint(),
+                "{cell}: tracing changed the fingerprint"
+            );
+            assert_eq!(
+                traced.stats.cycles, plain.stats.cycles,
+                "{cell}: tracing changed the cycle count"
+            );
+            assert_eq!(
+                plain.stats.counters.get("trace.events"),
+                0,
+                "{cell}: untraced run must not count trace events"
+            );
+            assert!(
+                traced.stats.counters.get("trace.events") > 0,
+                "{cell}: traced run recorded nothing"
+            );
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+#[test]
+fn tracing_on_off_parity_pipeline() {
+    assert_trace_parity("pipeline", &pipeline_pairs());
+}
+
+#[test]
+fn tracing_on_off_parity_tree() {
+    assert_trace_parity("tree", &tree_pairs());
+}
+
+// ---------------------------------------------------------------------
+// 2. Export shape (the acceptance run): 2-worker tree, parsed back
+// ---------------------------------------------------------------------
+
+#[test]
+fn ladder_trace_exports_parseable_chrome_json() {
+    let path = trace_path("ladder_tree");
+    let report = topo(
+        Sim::scenario("tree", &cfg(&tree_pairs())).unwrap(),
+        2,
+        SchedMode::ActiveList,
+    )
+    .trace(&path)
+    .run()
+    .expect("traced tree run");
+    assert!(report.stats.ff_jumps > 0, "tree run must fast-forward");
+    assert!(report.stats.counters.get("trace.events") > 0);
+
+    let text = std::fs::read_to_string(&path).expect("trace file exists");
+    let doc = Parser::parse(&text).expect("trace file is valid JSON");
+
+    // otherData carries the run identity and the counter totals.
+    let other = doc.get("otherData").expect("otherData");
+    assert_eq!(other.get("scenario").and_then(Json::as_str), Some("tree"));
+    assert_eq!(other.get("engine").and_then(Json::as_str), Some("ladder"));
+    assert_eq!(other.get("workers").and_then(Json::as_str), Some("2"));
+    assert_eq!(
+        other.get("trace_events").and_then(Json::as_num),
+        Some(report.stats.counters.get("trace.events") as f64)
+    );
+
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+
+    // One named track per worker plus the engine track.
+    let mut tracks: BTreeMap<u64, String> = BTreeMap::new();
+    for ev in events {
+        if ev.get("name").and_then(Json::as_str) == Some("thread_name") {
+            let tid = ev.get("tid").and_then(Json::as_num).expect("tid") as u64;
+            let label = ev
+                .get("args")
+                .and_then(|a| a.get("name"))
+                .and_then(Json::as_str)
+                .expect("thread label");
+            tracks.insert(tid, label.to_string());
+        }
+    }
+    assert_eq!(tracks.get(&0).map(String::as_str), Some("engine"));
+    assert_eq!(tracks.get(&1).map(String::as_str), Some("cluster 0"));
+    assert_eq!(tracks.get(&2).map(String::as_str), Some("cluster 1"));
+
+    // Every non-metadata event is well-formed and lands on a known track.
+    let mut barriers = 0u64;
+    let mut ff_jumps = 0u64;
+    let mut per_worker_spans = 0u64;
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).expect("ph");
+        if ph == "M" {
+            continue;
+        }
+        let tid = ev.get("tid").and_then(Json::as_num).expect("tid") as u64;
+        assert!(tracks.contains_key(&tid), "event on unnamed track {tid}");
+        assert!(ev.get("ts").and_then(Json::as_num).is_some(), "ts missing");
+        let name = ev.get("name").and_then(Json::as_str).expect("name");
+        let cycle = ev
+            .get("args")
+            .and_then(|a| a.get("cycle"))
+            .and_then(Json::as_num)
+            .expect("args.cycle");
+        assert!(cycle >= 0.0);
+        match ph {
+            "X" => {
+                assert!(ev.get("dur").and_then(Json::as_num).is_some(), "dur");
+                if name == "barrier" {
+                    assert_eq!(tid, 0, "barriers live on the engine track");
+                    barriers += 1;
+                }
+                if tid > 0 && (name == "work" || name == "transfer") {
+                    per_worker_spans += 1;
+                }
+            }
+            "i" => {
+                if name == "ff-jump" {
+                    assert_eq!(tid, 0, "ff jumps live on the engine track");
+                    ff_jumps += 1;
+                }
+            }
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert!(barriers >= 1, "expected at least one barrier span");
+    assert!(ff_jumps >= 1, "expected at least one ff-jump instant");
+    assert!(
+        per_worker_spans >= 2,
+        "expected work/transfer spans on worker tracks"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn serial_trace_exports_single_track() {
+    let path = trace_path("serial_pipeline");
+    let report = topo(
+        Sim::scenario("pipeline", &cfg(&pipeline_pairs())).unwrap(),
+        1,
+        SchedMode::FullScan,
+    )
+    .trace(&path)
+    .run()
+    .expect("traced serial run");
+    assert!(report.stats.counters.get("trace.events") > 0);
+    let doc = Parser::parse(&std::fs::read_to_string(&path).unwrap()).expect("valid JSON");
+    let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    let labels: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("name").and_then(Json::as_str) == Some("thread_name"))
+        .filter_map(|e| e.get("args")?.get("name")?.as_str())
+        .collect();
+    assert_eq!(labels, vec!["serial"], "one track, labeled serial");
+    assert!(events
+        .iter()
+        .any(|e| e.get("name").and_then(Json::as_str) == Some("work")));
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// 3. Bounded buffers: tiny rings drop, never hang, still export
+// ---------------------------------------------------------------------
+
+#[test]
+fn tiny_ring_drops_without_hanging() {
+    let path = trace_path("tiny_ring");
+    let report = topo(
+        Sim::scenario("tree", &cfg(&tree_pairs())).unwrap(),
+        2,
+        SchedMode::FullScan,
+    )
+    .trace(&path)
+    .trace_buf(8)
+    .run()
+    .expect("tiny-ring run finishes");
+    let dropped = report.stats.counters.get("trace.dropped");
+    assert!(dropped > 0, "8-event rings must overflow on this run");
+    assert!(report.to_json().contains("\"trace_dropped\": "));
+
+    // The export is still a valid document and reports the drops.
+    let doc = Parser::parse(&std::fs::read_to_string(&path).unwrap()).expect("valid JSON");
+    assert_eq!(
+        doc.get("otherData")
+            .and_then(|o| o.get("trace_dropped"))
+            .and_then(Json::as_num),
+        Some(dropped as f64)
+    );
+    // Kept events respect the per-track cap.
+    let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    let mut per_track: BTreeMap<u64, u64> = BTreeMap::new();
+    for ev in events {
+        if ev.get("ph").and_then(Json::as_str) == Some("M") {
+            continue;
+        }
+        let tid = ev.get("tid").and_then(Json::as_num).unwrap() as u64;
+        *per_track.entry(tid).or_insert(0) += 1;
+    }
+    for (tid, n) in per_track {
+        assert!(n <= 8, "track {tid} kept {n} events, cap is 8");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// 4. Emitter hygiene: escaping and finite floats
+// ---------------------------------------------------------------------
+
+#[test]
+fn report_json_escapes_weird_scenario_names() {
+    let mut report = topo(
+        Sim::scenario("pipeline", &cfg(&pipeline_pairs())).unwrap(),
+        1,
+        SchedMode::FullScan,
+    )
+    .run()
+    .expect("pipeline run");
+    // Scenario names are registry-controlled today, but the emitter must
+    // not rely on that: a quote or backslash in the echoed name has to
+    // round-trip through a real parser.
+    report.scenario = Some("we\"ird\\name".to_string());
+    let json = report.to_json();
+    let doc = Parser::parse(&json).expect("report row with escapes parses");
+    assert_eq!(
+        doc.get("scenario").and_then(Json::as_str),
+        Some("we\"ird\\name")
+    );
+}
+
+#[test]
+fn zero_cycle_run_emits_finite_parseable_json() {
+    let report = topo(
+        Sim::scenario("pipeline", &cfg(&pipeline_pairs())).unwrap(),
+        1,
+        SchedMode::FullScan,
+    )
+    .cycles(0)
+    .run()
+    .expect("zero-cycle run");
+    assert_eq!(report.stats.cycles, 0);
+    let json = report.to_json();
+    assert!(!json.contains("inf"), "non-finite rate leaked: {json}");
+    assert!(!json.contains("NaN"), "non-finite rate leaked: {json}");
+    let doc = Parser::parse(&json).expect("zero-cycle report parses");
+    assert!(doc
+        .get("cycles_per_sec")
+        .and_then(Json::as_num)
+        .is_some_and(f64::is_finite));
+    assert!(doc
+        .get("active_ratio")
+        .and_then(Json::as_num)
+        .is_some_and(f64::is_finite));
+}
